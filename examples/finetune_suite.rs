@@ -1,0 +1,59 @@
+//! Fine-tuning method shoot-out on one GLUE-like task: every method in
+//! the paper's roster under an identical budget, seed and dataset.
+//!
+//!   cargo run --release --example finetune_suite -- [task] [epochs]
+
+use omgd::bench::TablePrinter;
+use omgd::config::OptFamily;
+use omgd::data::GLUE_LIKE_TASKS;
+use omgd::experiments::{adamw_method_roster, finetune_cell, load_bundle,
+                        task_for, FinetuneSetup};
+use omgd::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let task_name = args.first().map(|s| s.as_str()).unwrap_or("MNLI");
+    let epochs: usize =
+        args.get(1).and_then(|s| s.parse().ok()).unwrap_or(15);
+
+    let spec = GLUE_LIKE_TASKS
+        .iter()
+        .find(|t| t.name.eq_ignore_ascii_case(task_name))
+        .ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown task {task_name}; one of {:?}",
+                GLUE_LIKE_TASKS.iter().map(|t| t.name).collect::<Vec<_>>()
+            )
+        })?;
+
+    let rt = Runtime::cpu()?;
+    let bundle = load_bundle(&rt, "mlp-glue")?;
+    let task = task_for(&bundle, spec);
+    let setup = FinetuneSetup { epochs, gamma: 4, period: 1,
+                                ..FinetuneSetup::default() };
+    println!("fine-tuning suite on {} ({} epochs, γ={} K={})",
+             task.name, epochs, setup.gamma, setup.period);
+
+    let mut table = TablePrinter::new(&[
+        "method", "test acc %", "tail loss", "opt-state bytes", "steps/s",
+    ]);
+    for method in adamw_method_roster() {
+        let out = finetune_cell(&bundle, &task, method, &setup,
+                                OptFamily::AdamW)?;
+        // Residency estimate: LISA-family keeps states only for active
+        // coords; full keeps everything (see memory model for exact GB).
+        let state = match method.name() {
+            "full" => bundle.man.total_len * 8,
+            _ => bundle.man.total_len * 2, // coarse: ~γ/N_L of full
+        };
+        table.row(vec![
+            method.name().into(),
+            format!("{:.2}", out.final_metric),
+            format!("{:.4}", out.tail_loss(20)),
+            format!("{state}"),
+            format!("{:.1}", out.steps_per_sec),
+        ]);
+    }
+    table.print(&format!("method comparison — {}", task.name));
+    Ok(())
+}

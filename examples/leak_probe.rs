@@ -1,0 +1,61 @@
+//! Memory-regression probe: RSS must stay flat across repeated HLO
+//! executions. Guards against the `xla` crate's literal-`execute` input
+//! leak we work around in `runtime` (rust-owned buffers + `execute_b`);
+//! before the fix this probe grew ~58 MB/update and long pre-training
+//! runs were OOM-killed.
+//!
+//!   cargo run --release --example leak_probe
+
+use omgd::experiments::*;
+use omgd::runtime::Runtime;
+
+fn rss_kb() -> usize {
+    let s = std::fs::read_to_string("/proc/self/status").unwrap_or_default();
+    s.lines()
+        .find(|l| l.starts_with("VmRSS"))
+        .and_then(|l| l.split_whitespace().nth(1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0)
+}
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::cpu()?;
+    let model = if artifacts_present("gpt-tiny") { "gpt-tiny" }
+                else { "gpt-nano" };
+    let bundle = load_bundle(&rt, model)?;
+    let n = bundle.padded_len();
+    let mut p = bundle.init_params()?;
+    let g = vec![0.01f32; n];
+    let mask = vec![1.0f32; n];
+    let (mut m, mut v) = (vec![0.0f32; n], vec![0.0f32; n]);
+    let hp = [1e-3f32, 0.9, 0.999, 1e-8, 0.01, 0.1, 0.001, 0.0];
+
+    println!("probe target {model} (P={n}); start RSS {} MB",
+             rss_kb() / 1024);
+    let base = rss_kb();
+    for i in 0..30 {
+        bundle.adamw_update(&mut p, &g, &mask, &mut m, &mut v, &hp)?;
+        if i % 10 == 9 {
+            println!("after update {:>2}: RSS {} MB", i + 1,
+                     rss_kb() / 1024);
+        }
+    }
+    let corpus = pretrain_corpus(&bundle, 16);
+    let idx: Vec<usize> = (0..bundle.man.data.batch).collect();
+    let (x, y) = corpus.pack(&idx, bundle.man.data.batch);
+    for i in 0..30 {
+        let _ = bundle.train_step_lm(&p, &x, &y)?;
+        if i % 10 == 9 {
+            println!("after train  {:>2}: RSS {} MB", i + 1,
+                     rss_kb() / 1024);
+        }
+    }
+    let grown = rss_kb().saturating_sub(base);
+    // Allow arena warmup, flag real leaks (>1 GB over 60 executions).
+    if grown > 1_000_000 {
+        anyhow::bail!("RSS grew {} MB across 60 executions — leak!",
+                      grown / 1024);
+    }
+    println!("leak probe OK (+{} MB over 60 executions)", grown / 1024);
+    Ok(())
+}

@@ -1,0 +1,58 @@
+//! Memory report: the paper's Table 8 / Fig. 6 analytic breakdown for
+//! LLaMA-7B and GPT-2-124M, plus the same residency model applied to the
+//! bundled AOT configs (so the numbers connect to what the trainer
+//! actually holds).
+//!
+//!   cargo run --release --example memory_report
+
+use omgd::bench::TablePrinter;
+use omgd::experiments::{artifacts_present, load_bundle};
+use omgd::memory::{breakdown, ArchSpec, MemBreakdown, MemPolicy};
+use omgd::runtime::Runtime;
+
+fn report(arch: &ArchSpec, rank: usize, gamma: usize) {
+    let mut table = TablePrinter::new(&[
+        "Method", "Model", "Grads", "Optimizer", "Others", "Total",
+        "vs full",
+    ]);
+    let full = breakdown(arch, MemPolicy::Full).total();
+    for (name, policy) in [
+        ("Full params", MemPolicy::Full),
+        ("GaLore/GoLore", MemPolicy::Galore(rank)),
+        ("LISA/LISA-wor", MemPolicy::Lisa(gamma)),
+    ] {
+        let b = breakdown(arch, policy);
+        table.row(vec![
+            name.into(),
+            format!("{:.2}", MemBreakdown::gb(b.model)),
+            format!("{:.2}", MemBreakdown::gb(b.gradients)),
+            format!("{:.2}", MemBreakdown::gb(b.optimizer)),
+            format!("{:.2}", MemBreakdown::gb(b.others)),
+            format!("{:.2}", MemBreakdown::gb(b.total())),
+            format!("-{:.0}%",
+                    100.0 * (1.0 - b.total() as f64 / full as f64)),
+        ]);
+    }
+    table.print(&format!(
+        "{} memory breakdown (GB; rank={rank}, γ={gamma})",
+        arch.name
+    ));
+}
+
+fn main() -> anyhow::Result<()> {
+    report(&ArchSpec::llama_7b(), 128, 2);
+    report(&ArchSpec::gpt2_124m(), 128, 3);
+
+    // Our own AOT configs through the identical model.
+    let rt = Runtime::cpu()?;
+    for model in ["gpt-tiny", "gpt-nano", "mlp-glue"] {
+        if !artifacts_present(model) {
+            continue;
+        }
+        let bundle = load_bundle(&rt, model)?;
+        let arch = ArchSpec::from_manifest(&bundle.man);
+        let gamma = 2.min(arch.n_middle.max(1));
+        report(&arch, 8, gamma);
+    }
+    Ok(())
+}

@@ -1,0 +1,5 @@
+"""Build-time compile path: L1 Pallas kernels + L2 JAX models + AOT driver.
+
+Nothing in this package is imported at runtime; ``make artifacts`` runs it
+once to produce ``artifacts/*.hlo.txt`` + manifests for the rust binary.
+"""

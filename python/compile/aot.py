@@ -1,0 +1,252 @@
+"""AOT driver: lower L2 models + L1 kernels to HLO *text* artifacts.
+
+Interchange format is HLO text, not serialized ``HloModuleProto``: jax
+≥ 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the published ``xla`` rust crate) rejects
+(``proto.id() <= INT_MAX``). The text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Per config this emits into ``artifacts/``:
+
+  <name>.train.hlo.txt    (flat, x, y)    -> (loss, grad)
+  <name>.eval.hlo.txt     (flat, x, y)    -> (loss[, n_correct])
+  <name>.init.f32bin      initial padded flat parameter vector (raw LE f32)
+  <P>.adamw.hlo.txt       (hp, p, g, mask, m, v) -> (p', m', v')   [Pallas]
+  <P>.sgdm.hlo.txt        (hp, p, g, mask, buf)  -> (p', buf')     [Pallas]
+  <name>.json             manifest: param layout, shapes, artifact files
+
+Update-kernel artifacts are keyed by padded flat length ``P`` and shared
+between configs with equal ``P``. Python runs once (`make artifacts`) and
+never on the rust request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import configs as C
+from . import model as M
+from .kernels import masked_adamw, masked_sgdm
+from .kernels import ref as kref
+
+
+def to_hlo_text(lowered) -> str:
+    """jax Lowered -> XLA HLO text via stablehlo (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _write(path: str, text: str) -> None:
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {path} ({len(text)} chars)")
+
+
+def _f32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def _i32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def lower_update_kernels(out_dir: str, padded: int, emitted: set) -> dict:
+    """Lower the L1 Pallas update kernels for flat length ``padded``.
+
+    CPU-artifact block choice (EXPERIMENTS.md §Perf): interpret-mode
+    Pallas costs ~11 ms of fixed overhead *per grid step* on the CPU PJRT
+    client (measured at P=2.9M: grid=706 → 7.9 s, grid=1 → 25 ms), so the
+    CPU artifacts are lowered with a single block covering the whole flat
+    vector. On a real TPU the same kernel would use 64 Ki blocks to fit
+    VMEM (DESIGN.md §Hardware-Adaptation); the kernel body is block-size
+    agnostic.
+    """
+    files = {}
+    for opt in C.UPDATE_OPTIMIZERS:
+        fname = f"{padded}.{opt}.hlo.txt"
+        files[opt] = fname
+        if (padded, opt) in emitted:
+            continue
+        emitted.add((padded, opt))
+        vec = _f32((padded,))
+        block = padded  # grid=1 for the CPU artifact (see docstring)
+        if opt == "adamw":
+            fn = lambda hp, p, g, mask, m, v: masked_adamw(
+                p, g, mask, m, v, hp, block=block, interpret=True
+            )
+            lowered = jax.jit(fn).lower(
+                _f32((kref.ADAMW_HP_LEN,)), vec, vec, vec, vec, vec
+            )
+        else:
+            fn = lambda hp, p, g, mask, buf: masked_sgdm(
+                p, g, mask, buf, hp, block=block, interpret=True
+            )
+            lowered = jax.jit(fn).lower(
+                _f32((kref.SGDM_HP_LEN,)), vec, vec, vec, vec
+            )
+        _write(os.path.join(out_dir, fname), to_hlo_text(lowered))
+    return files
+
+
+def _manifest(out_dir, name, kind, spec, padded, data_shapes, artifacts,
+              extra):
+    man = {
+        "name": name,
+        "kind": kind,
+        "block": C.BLOCK,
+        "total_len": spec.total,
+        "padded_len": padded,
+        "params": spec.manifest_params(),
+        "data": data_shapes,
+        "artifacts": artifacts,
+    }
+    man.update(extra)
+    path = os.path.join(out_dir, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(man, f, indent=1)
+    print(f"  wrote {path}")
+
+
+def _dump_init(out_dir: str, name: str, flat) -> str:
+    import numpy as np
+
+    fname = f"{name}.init.f32bin"
+    np.asarray(flat, dtype="<f4").tofile(os.path.join(out_dir, fname))
+    print(f"  wrote {out_dir}/{fname} ({flat.shape[0]} f32)")
+    return fname
+
+
+def build_gpt(out_dir: str, cfg: M.GptConfig, emitted: set) -> None:
+    print(f"[gpt] {cfg.name}: d={cfg.d_model} L={cfg.n_layer} "
+          f"V={cfg.vocab} S={cfg.seq} B={cfg.batch}")
+    spec = M.gpt_spec(cfg)
+    padded = spec.padded(C.BLOCK)
+    flat_t = _f32((padded,))
+    x_t, y_t = _i32((cfg.batch, cfg.seq)), _i32((cfg.batch, cfg.seq))
+
+    train = jax.jit(M.gpt_train_step(cfg, spec)).lower(flat_t, x_t, y_t)
+    _write(os.path.join(out_dir, f"{cfg.name}.train.hlo.txt"),
+           to_hlo_text(train))
+    evals = jax.jit(M.gpt_eval_step(cfg, spec)).lower(flat_t, x_t, y_t)
+    _write(os.path.join(out_dir, f"{cfg.name}.eval.hlo.txt"),
+           to_hlo_text(evals))
+
+    upd = lower_update_kernels(out_dir, padded, emitted)
+    init_file = _dump_init(
+        out_dir, cfg.name, M.gpt_init(cfg, spec, seed=0, block=C.BLOCK)
+    )
+    _manifest(
+        out_dir, cfg.name, "gpt", spec, padded,
+        {"batch": cfg.batch, "seq": cfg.seq, "vocab": cfg.vocab},
+        {
+            "train": f"{cfg.name}.train.hlo.txt",
+            "eval": f"{cfg.name}.eval.hlo.txt",
+            "init": init_file,
+            "update": upd,
+        },
+        {"n_layer": cfg.n_layer, "d_model": cfg.d_model,
+         "n_head": cfg.n_head},
+    )
+
+
+def build_mlp(out_dir: str, cfg: M.MlpConfig, emitted: set) -> None:
+    print(f"[mlp] {cfg.name}: d_in={cfg.d_in} h={cfg.d_hidden} "
+          f"mid={cfg.n_mid} C={cfg.n_class} B={cfg.batch}")
+    spec = M.mlp_spec(cfg)
+    padded = spec.padded(C.BLOCK)
+    flat_t = _f32((padded,))
+    x_t, y_t = _f32((cfg.batch, cfg.d_in)), _i32((cfg.batch,))
+
+    train = jax.jit(M.mlp_train_step(cfg, spec)).lower(flat_t, x_t, y_t)
+    _write(os.path.join(out_dir, f"{cfg.name}.train.hlo.txt"),
+           to_hlo_text(train))
+    evals = jax.jit(M.mlp_eval_step(cfg, spec)).lower(flat_t, x_t, y_t)
+    _write(os.path.join(out_dir, f"{cfg.name}.eval.hlo.txt"),
+           to_hlo_text(evals))
+
+    upd = lower_update_kernels(out_dir, padded, emitted)
+    init_file = _dump_init(
+        out_dir, cfg.name, M.mlp_init(cfg, spec, seed=0, block=C.BLOCK)
+    )
+    _manifest(
+        out_dir, cfg.name, "mlp", spec, padded,
+        {"batch": cfg.batch, "d_in": cfg.d_in, "n_class": cfg.n_class},
+        {
+            "train": f"{cfg.name}.train.hlo.txt",
+            "eval": f"{cfg.name}.eval.hlo.txt",
+            "init": init_file,
+            "update": upd,
+        },
+        {"n_mid": cfg.n_mid, "d_hidden": cfg.d_hidden},
+    )
+
+
+def build_linreg(out_dir: str, d: int = 10) -> None:
+    """§5.1 single-sample gradient artifact (runtime integration tests)."""
+    print(f"[linreg] d={d}")
+    lowered = jax.jit(
+        lambda th, x, y: (M.linreg_grad(th, x, y),)
+    ).lower(_f32((d,)), _f32((d,)), _f32(()))
+    _write(os.path.join(out_dir, "linreg.grad.hlo.txt"), to_hlo_text(lowered))
+    with open(os.path.join(out_dir, "linreg.json"), "w") as f:
+        json.dump(
+            {"name": "linreg", "kind": "linreg", "d": d,
+             "artifacts": {"grad": "linreg.grad.hlo.txt"}},
+            f, indent=1,
+        )
+
+
+def stamp(out_dir: str) -> None:
+    """Content stamp over compile/ inputs so `make artifacts` can skip."""
+    h = hashlib.sha256()
+    root = os.path.dirname(os.path.abspath(__file__))
+    for base, _, names in sorted(os.walk(root)):
+        for n in sorted(names):
+            if n.endswith(".py"):
+                with open(os.path.join(base, n), "rb") as f:
+                    h.update(f.read())
+    with open(os.path.join(out_dir, "STAMP"), "w") as f:
+        f.write(h.hexdigest() + "\n")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--configs", default="all",
+                    help="comma list of config names, or 'all'/'test'")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    if args.configs == "all":
+        gpt_names = list(C.GPT_CONFIGS)
+        mlp_names = list(C.MLP_CONFIGS)
+    elif args.configs == "test":
+        gpt_names, mlp_names = ["gpt-nano"], ["mlp-glue"]
+    else:
+        wanted = set(args.configs.split(","))
+        gpt_names = [n for n in C.GPT_CONFIGS if n in wanted]
+        mlp_names = [n for n in C.MLP_CONFIGS if n in wanted]
+
+    emitted: set = set()
+    for n in gpt_names:
+        build_gpt(args.out, C.GPT_CONFIGS[n], emitted)
+    for n in mlp_names:
+        build_mlp(args.out, C.MLP_CONFIGS[n], emitted)
+    build_linreg(args.out)
+    stamp(args.out)
+    print("AOT done.")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,57 @@
+"""Named AOT configurations.
+
+Each config names the set of artifacts ``aot.py`` emits for it. Rust
+selects a config by name via its manifest JSON (``artifacts/<name>.json``).
+
+Sizing notes (CPU testbed): the paper trains GPT-2-124M / ViT-base /
+RoBERTa-base on 4 GPUs; on the CPU PJRT client we scale the transformer to
+configs that keep a few-hundred-step run in minutes while preserving the
+layer structure LISA/OMGD act on. The 124M geometry is still described in
+``rust/src/memory`` for the analytic memory experiments.
+"""
+
+from __future__ import annotations
+
+from .model import GptConfig, MlpConfig
+
+# Block size for flat-vector padding / the Pallas update kernels.
+# 4096 keeps interpret-mode grids small for the tiny configs while the
+# kernel itself is block-size agnostic (DESIGN.md records the 64Ki TPU
+# choice).
+BLOCK = 4096
+
+GPT_CONFIGS = {
+    # Unit/integration-test scale: lowers in seconds, runs in milliseconds.
+    "gpt-nano": GptConfig(
+        name="gpt-nano", vocab=256, seq=64, d_model=64, n_layer=2,
+        n_head=2, batch=4,
+    ),
+    # End-to-end pre-training example scale (~3.3M params).
+    "gpt-tiny": GptConfig(
+        name="gpt-tiny", vocab=512, seq=128, d_model=192, n_layer=6,
+        n_head=6, batch=8,
+    ),
+    # Larger optional config for perf measurements (~19M params).
+    "gpt-small": GptConfig(
+        name="gpt-small", vocab=2048, seq=256, d_model=384, n_layer=10,
+        n_head=6, batch=4,
+    ),
+}
+
+MLP_CONFIGS = {
+    # GLUE-like synthetic fine-tuning tasks (Tables 3, 5, 6): N_L = 12
+    # middle blocks mirrors RoBERTa-base / ViT-base depth.
+    "mlp-glue": MlpConfig(
+        name="mlp-glue", d_in=64, d_hidden=128, n_mid=12, n_class=4,
+        batch=32,
+    ),
+    # Image-classification substitute (Table 4): wider, 10 classes.
+    "mlp-img": MlpConfig(
+        name="mlp-img", d_in=192, d_hidden=256, n_mid=6, n_class=10,
+        batch=64,
+    ),
+}
+
+# Configs for which optimizer-update artifacts are emitted (one per padded
+# flat length — the kernels are shape-specialized at AOT time).
+UPDATE_OPTIMIZERS = ("adamw", "sgdm")

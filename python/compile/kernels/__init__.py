@@ -1,0 +1,5 @@
+"""L1 Pallas kernels (build-time only; lowered into the L2 HLO)."""
+
+from . import ref  # noqa: F401
+from .masked_adamw import masked_adamw  # noqa: F401
+from .masked_sgdm import masked_sgdm  # noqa: F401

@@ -1,0 +1,59 @@
+"""Pallas kernel: fused masked SGD-with-momentum update (flat params).
+
+Same streaming structure as ``masked_adamw`` with one momentum buffer
+instead of two Adam moments: five input streams (hp, p, g, mask, buf) and
+two outputs (p', buf'). Supports Nesterov via a hyper-parameter flag so a
+single compiled artifact serves both variants.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+DEFAULT_BLOCK = 65536
+
+
+def _sgdm_kernel(hp_ref, p_ref, g_ref, mask_ref, buf_ref, p_out, buf_out):
+    """One block of the fused masked-SGDM update (all refs in VMEM)."""
+    lr = hp_ref[ref.SG_LR]
+    mu = hp_ref[ref.SG_MU]
+    wd = hp_ref[ref.SG_WD]
+    nesterov = hp_ref[ref.SG_NESTEROV]
+
+    p = p_ref[...]
+    mask = mask_ref[...]
+    buf = buf_ref[...]
+    active = mask != 0.0
+
+    gm = mask * g_ref[...] + wd * p
+    buf_new = jnp.where(active, mu * buf + gm, buf)
+    upd = jnp.where(nesterov != 0.0, gm + mu * buf_new, buf_new)
+
+    p_out[...] = jnp.where(active, p - lr * upd, p)
+    buf_out[...] = buf_new
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def masked_sgdm(p, g, mask, buf, hp, *, block=DEFAULT_BLOCK, interpret=True):
+    """Fused masked-SGDM over f32[P] flat states (P multiple of block)."""
+    (n,) = p.shape
+    if n % block != 0:
+        raise ValueError(f"flat length {n} not a multiple of block {block}")
+    grid = (n // block,)
+    vec = pl.BlockSpec((block,), lambda i: (i,))
+    hp_spec = pl.BlockSpec((ref.SGDM_HP_LEN,), lambda i: (0,))
+    out_shape = [jax.ShapeDtypeStruct(p.shape, p.dtype)] * 2
+    return pl.pallas_call(
+        _sgdm_kernel,
+        grid=grid,
+        in_specs=[hp_spec, vec, vec, vec, vec],
+        out_specs=[vec, vec],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(hp, p, g, mask, buf)

@@ -1,0 +1,73 @@
+"""Pure-jnp reference oracles for the Pallas update kernels.
+
+These are the correctness ground truth: the Pallas kernels in
+``masked_adamw.py`` / ``masked_sgdm.py`` must match these up to float
+tolerance, and the rust native optimizers mirror the same semantics.
+
+Semantics (shared by kernel, oracle, and rust ``optim::masked``):
+
+* ``mask`` is a dense f32 vector over the flat parameter space. A zero
+  entry *hard-freezes* the coordinate: parameter AND optimizer state are
+  left untouched (this models LISA's frozen layers, whose m/v do not
+  decay while frozen). A non-zero entry both selects the coordinate and
+  carries the OMGD rescaling factor (``M`` from eq. 3, or ``N_L/γ`` from
+  Algorithm 2) which multiplies the raw gradient.
+* Bias corrections for AdamW are precomputed by the caller
+  (``bc1 = 1 - β₁ᵗ``, ``bc2 = 1 - β₂ᵗ``) so the kernel stays free of
+  transcendental ops and the rust side controls the step counter.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Layout of the hyper-parameter vector passed to the AdamW kernel.
+ADAMW_HP_LEN = 8
+HP_LR, HP_B1, HP_B2, HP_EPS, HP_WD, HP_BC1, HP_BC2, HP_UNUSED = range(8)
+
+# Layout of the hyper-parameter vector passed to the SGDM kernel.
+SGDM_HP_LEN = 4
+SG_LR, SG_MU, SG_WD, SG_NESTEROV = range(4)
+
+
+def masked_adamw_ref(p, g, mask, m, v, hp):
+    """Reference masked-AdamW update.
+
+    Args:
+      p, g, mask, m, v: f32[P] flat parameter / gradient / mask / moments.
+      hp: f32[ADAMW_HP_LEN] hyper-parameters (see module docstring).
+    Returns:
+      (p_new, m_new, v_new) each f32[P].
+    """
+    lr, b1, b2, eps = hp[HP_LR], hp[HP_B1], hp[HP_B2], hp[HP_EPS]
+    wd, bc1, bc2 = hp[HP_WD], hp[HP_BC1], hp[HP_BC2]
+    active = mask != 0.0
+    gm = mask * g
+    m_new = jnp.where(active, b1 * m + (1.0 - b1) * gm, m)
+    v_new = jnp.where(active, b2 * v + (1.0 - b2) * gm * gm, v)
+    mhat = m_new / bc1
+    vhat = v_new / bc2
+    step = lr * (mhat / (jnp.sqrt(vhat) + eps) + wd * p)
+    p_new = jnp.where(active, p - step, p)
+    return p_new, m_new, v_new
+
+
+def masked_sgdm_ref(p, g, mask, buf, hp):
+    """Reference masked-SGD-with-momentum update (optional Nesterov).
+
+    Matches torch.optim.SGD semantics with weight decay folded into the
+    gradient, restricted to active coordinates.
+
+    Args:
+      p, g, mask, buf: f32[P].
+      hp: f32[SGDM_HP_LEN] = [lr, momentum, weight_decay, nesterov_flag].
+    Returns:
+      (p_new, buf_new) each f32[P].
+    """
+    lr, mu, wd, nesterov = hp[SG_LR], hp[SG_MU], hp[SG_WD], hp[SG_NESTEROV]
+    active = mask != 0.0
+    gm = mask * g + wd * p
+    buf_new = jnp.where(active, mu * buf + gm, buf)
+    upd = jnp.where(nesterov != 0.0, gm + mu * buf_new, buf_new)
+    p_new = jnp.where(active, p - lr * upd, p)
+    return p_new, buf_new

@@ -1,0 +1,347 @@
+"""L2: JAX models over a single *flat* f32 parameter vector.
+
+Every model exposes its parameters as one flat vector so the rust L3
+coordinator owns exactly one buffer per state tensor (params, grads, Adam
+m/v, momentum) and the L1 masked-update Pallas kernels can stream over
+them in a single pass. A :class:`ParamSpec` records the (name, shape,
+layer) layout; the same layout is serialized into the AOT manifest so
+rust can build tensorwise / layerwise (LISA) masks without ever parsing
+HLO.
+
+Models:
+  * decoder-only transformer LM (GPT-2 family shape) — pre-training
+    experiments (Fig. 5) and the end-to-end example;
+  * MLP classifier with a LISA-compatible embed/middle/head layer
+    structure — fine-tuning tables (3, 4, 5, 6);
+  * linear-regression gradient — the §5.1 illustrative example.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Flat parameter layout
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamEntry:
+    name: str
+    shape: tuple[int, ...]
+    layer: str  # "embed" | "block_<i>" | "final" | "head"
+
+    @property
+    def size(self) -> int:
+        return math.prod(self.shape)
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    entries: tuple[ParamEntry, ...]
+
+    @property
+    def total(self) -> int:
+        return sum(e.size for e in self.entries)
+
+    def padded(self, block: int) -> int:
+        return ((self.total + block - 1) // block) * block
+
+    def offsets(self) -> dict[str, tuple[int, int]]:
+        out, off = {}, 0
+        for e in self.entries:
+            out[e.name] = (off, e.size)
+            off += e.size
+        return out
+
+    def unflatten(self, flat: jax.Array) -> dict[str, jax.Array]:
+        """Slice the flat vector into named, shaped parameter arrays."""
+        params, off = {}, 0
+        for e in self.entries:
+            params[e.name] = jax.lax.dynamic_slice(
+                flat, (off,), (e.size,)
+            ).reshape(e.shape)
+            off += e.size
+        return params
+
+    def manifest_params(self) -> list[dict]:
+        out, off = [], 0
+        for e in self.entries:
+            out.append(
+                {
+                    "name": e.name,
+                    "shape": list(e.shape),
+                    "layer": e.layer,
+                    "offset": off,
+                    "len": e.size,
+                }
+            )
+            off += e.size
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Transformer LM
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class GptConfig:
+    name: str
+    vocab: int
+    seq: int
+    d_model: int
+    n_layer: int
+    n_head: int
+    batch: int
+
+    @property
+    def d_ff(self) -> int:
+        return 4 * self.d_model
+
+
+def gpt_spec(cfg: GptConfig) -> ParamSpec:
+    d, v, s, ff = cfg.d_model, cfg.vocab, cfg.seq, cfg.d_ff
+    entries: list[ParamEntry] = [
+        ParamEntry("wte", (v, d), "embed"),
+        ParamEntry("wpe", (s, d), "embed"),
+    ]
+    for i in range(cfg.n_layer):
+        blk = f"block_{i}"
+        entries += [
+            ParamEntry(f"{blk}.ln1_g", (d,), blk),
+            ParamEntry(f"{blk}.ln1_b", (d,), blk),
+            ParamEntry(f"{blk}.attn_qkv_w", (d, 3 * d), blk),
+            ParamEntry(f"{blk}.attn_qkv_b", (3 * d,), blk),
+            ParamEntry(f"{blk}.attn_proj_w", (d, d), blk),
+            ParamEntry(f"{blk}.attn_proj_b", (d,), blk),
+            ParamEntry(f"{blk}.ln2_g", (d,), blk),
+            ParamEntry(f"{blk}.ln2_b", (d,), blk),
+            ParamEntry(f"{blk}.mlp_fc_w", (d, ff), blk),
+            ParamEntry(f"{blk}.mlp_fc_b", (ff,), blk),
+            ParamEntry(f"{blk}.mlp_proj_w", (ff, d), blk),
+            ParamEntry(f"{blk}.mlp_proj_b", (d,), blk),
+        ]
+    entries += [
+        ParamEntry("lnf_g", (d,), "final"),
+        ParamEntry("lnf_b", (d,), "final"),
+        ParamEntry("head_w", (d, v), "head"),
+    ]
+    return ParamSpec(tuple(entries))
+
+
+def _layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def _attention(x, qkv_w, qkv_b, proj_w, proj_b, n_head):
+    b, s, d = x.shape
+    hd = d // n_head
+    qkv = x @ qkv_w + qkv_b  # [b, s, 3d]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def heads(t):  # [b, s, d] -> [b, h, s, hd]
+        return t.reshape(b, s, n_head, hd).transpose(0, 2, 1, 3)
+
+    q, k, v = heads(q), heads(k), heads(v)
+    att = (q @ k.transpose(0, 1, 3, 2)) / math.sqrt(hd)  # [b, h, s, s]
+    causal = jnp.tril(jnp.ones((s, s), jnp.bool_))
+    att = jnp.where(causal, att, -1e9)
+    att = jax.nn.softmax(att, axis=-1)
+    y = (att @ v).transpose(0, 2, 1, 3).reshape(b, s, d)
+    return y @ proj_w + proj_b
+
+
+def gpt_logits(cfg: GptConfig, spec: ParamSpec, flat, tokens):
+    """Forward pass: tokens i32[B,S] -> logits f32[B,S,V]."""
+    p = spec.unflatten(flat)
+    x = p["wte"][tokens] + p["wpe"][None, : tokens.shape[1], :]
+    for i in range(cfg.n_layer):
+        blk = f"block_{i}"
+        h = _layer_norm(x, p[f"{blk}.ln1_g"], p[f"{blk}.ln1_b"])
+        x = x + _attention(
+            h,
+            p[f"{blk}.attn_qkv_w"],
+            p[f"{blk}.attn_qkv_b"],
+            p[f"{blk}.attn_proj_w"],
+            p[f"{blk}.attn_proj_b"],
+            cfg.n_head,
+        )
+        h = _layer_norm(x, p[f"{blk}.ln2_g"], p[f"{blk}.ln2_b"])
+        h = jax.nn.gelu(h @ p[f"{blk}.mlp_fc_w"] + p[f"{blk}.mlp_fc_b"])
+        x = x + h @ p[f"{blk}.mlp_proj_w"] + p[f"{blk}.mlp_proj_b"]
+    x = _layer_norm(x, p["lnf_g"], p["lnf_b"])
+    return x @ p["head_w"]
+
+
+def _xent(logits, targets):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def gpt_loss(cfg: GptConfig, spec: ParamSpec, flat, tokens, targets):
+    return _xent(gpt_logits(cfg, spec, flat, tokens), targets)
+
+
+def gpt_train_step(cfg: GptConfig, spec: ParamSpec) -> Callable:
+    """(flat f32[Ppad], x i32[B,S], y i32[B,S]) -> (loss, grad f32[Ppad])."""
+
+    def step(flat, x, y):
+        loss, grad = jax.value_and_grad(
+            lambda f: gpt_loss(cfg, spec, f, x, y)
+        )(flat)
+        return loss, grad
+
+    return step
+
+
+def gpt_eval_step(cfg: GptConfig, spec: ParamSpec) -> Callable:
+    """(flat, x, y) -> (loss,) — held-out perplexity probe."""
+
+    def step(flat, x, y):
+        return (gpt_loss(cfg, spec, flat, x, y),)
+
+    return step
+
+
+def gpt_init(cfg: GptConfig, spec: ParamSpec, seed: int, block: int):
+    """GPT-2-style init of the padded flat parameter vector (numpy-free)."""
+    key = jax.random.PRNGKey(seed)
+    parts = []
+    resid_scale = 1.0 / math.sqrt(2 * cfg.n_layer)
+    for e in spec.entries:
+        key, sub = jax.random.split(key)
+        if e.name.endswith(("_b", "ln1_b", "ln2_b", "lnf_b")):
+            parts.append(jnp.zeros((e.size,), jnp.float32))
+        elif e.name.endswith(("ln1_g", "ln2_g", "lnf_g")):
+            parts.append(jnp.ones((e.size,), jnp.float32))
+        else:
+            std = 0.02
+            if e.name.endswith(("attn_proj_w", "mlp_proj_w")):
+                std *= resid_scale
+            parts.append(
+                std * jax.random.normal(sub, (e.size,), jnp.float32)
+            )
+    flat = jnp.concatenate(parts)
+    pad = spec.padded(block) - spec.total
+    return jnp.pad(flat, (0, pad))
+
+
+# ---------------------------------------------------------------------------
+# MLP classifier (LISA-compatible embed / middle blocks / head structure)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MlpConfig:
+    name: str
+    d_in: int
+    d_hidden: int
+    n_mid: int  # number of middle blocks (LISA's N_L)
+    n_class: int
+    batch: int
+
+
+def mlp_spec(cfg: MlpConfig) -> ParamSpec:
+    entries = [
+        ParamEntry("in_w", (cfg.d_in, cfg.d_hidden), "embed"),
+        ParamEntry("in_b", (cfg.d_hidden,), "embed"),
+    ]
+    for i in range(cfg.n_mid):
+        blk = f"block_{i}"
+        entries += [
+            ParamEntry(f"{blk}.w", (cfg.d_hidden, cfg.d_hidden), blk),
+            ParamEntry(f"{blk}.b", (cfg.d_hidden,), blk),
+        ]
+    entries += [
+        ParamEntry("out_w", (cfg.d_hidden, cfg.n_class), "head"),
+        ParamEntry("out_b", (cfg.n_class,), "head"),
+    ]
+    return ParamSpec(tuple(entries))
+
+
+def mlp_logits(cfg: MlpConfig, spec: ParamSpec, flat, x):
+    p = spec.unflatten(flat)
+    h = jnp.tanh(x @ p["in_w"] + p["in_b"])
+    for i in range(cfg.n_mid):
+        blk = f"block_{i}"
+        # Residual middle blocks so freezing a block is information-neutral
+        # (mirrors transformer blocks under LISA).
+        h = h + jnp.tanh(h @ p[f"{blk}.w"] + p[f"{blk}.b"])
+    return h @ p["out_w"] + p["out_b"]
+
+
+def mlp_loss(cfg: MlpConfig, spec: ParamSpec, flat, x, y):
+    return _xent(mlp_logits(cfg, spec, flat, x), y)
+
+
+def mlp_train_step(cfg: MlpConfig, spec: ParamSpec) -> Callable:
+    """(flat f32[Ppad], x f32[B,D], y i32[B]) -> (loss, grad f32[Ppad])."""
+
+    def step(flat, x, y):
+        loss, grad = jax.value_and_grad(
+            lambda f: mlp_loss(cfg, spec, f, x, y)
+        )(flat)
+        return loss, grad
+
+    return step
+
+
+def mlp_eval_step(cfg: MlpConfig, spec: ParamSpec) -> Callable:
+    """(flat, x, y) -> (loss, n_correct f32)."""
+
+    def step(flat, x, y):
+        logits = mlp_logits(cfg, spec, flat, x)
+        loss = _xent(logits, y)
+        correct = jnp.sum(
+            (jnp.argmax(logits, axis=-1) == y).astype(jnp.float32)
+        )
+        return loss, correct
+
+    return step
+
+
+def mlp_init(cfg: MlpConfig, spec: ParamSpec, seed: int, block: int):
+    key = jax.random.PRNGKey(seed)
+    parts = []
+    for e in spec.entries:
+        key, sub = jax.random.split(key)
+        if e.name.endswith("_b") or e.name.endswith(".b"):
+            parts.append(jnp.zeros((e.size,), jnp.float32))
+        else:
+            fan_in = e.shape[0]
+            std = 1.0 / math.sqrt(fan_in)
+            if e.layer.startswith("block_"):
+                # Scale residual branches down so depth doesn't blow up
+                # activations (mirrors the GPT-2 residual init).
+                std /= math.sqrt(max(cfg.n_mid, 1))
+            elif e.name == "out_w":
+                # Near-zero head ⇒ near-uniform logits at init.
+                std = 0.01
+            parts.append(std * jax.random.normal(sub, (e.size,), jnp.float32))
+    flat = jnp.concatenate(parts)
+    pad = spec.padded(block) - spec.total
+    return jnp.pad(flat, (0, pad))
+
+
+# ---------------------------------------------------------------------------
+# §5.1 linear regression
+# ---------------------------------------------------------------------------
+
+
+def linreg_grad(theta, x, y):
+    """∇f(θ; x, y) = 2 x (xᵀθ − y) for f = (xᵀθ − y)²; shapes d / d / ()."""
+    return (2.0 * (x @ theta - y)) * x
+
+
+def linreg_step(theta, x, y, eta):
+    """One SGD step of the §5.1 problem: θ' = θ − η ∇f(θ; x, y)."""
+    return theta - eta * linreg_grad(theta, x, y)

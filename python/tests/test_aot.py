@@ -1,0 +1,89 @@
+"""AOT pipeline: manifests are consistent and HLO text is well-formed."""
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT))
+
+from compile.configs import BLOCK  # noqa: E402
+
+
+@pytest.fixture(scope="module")
+def artifacts(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out", str(out),
+         "--configs", "test"],
+        cwd=ROOT, check=True, capture_output=True,
+    )
+    return out
+
+
+def _manifest(artifacts, name):
+    with open(artifacts / f"{name}.json") as f:
+        return json.load(f)
+
+
+@pytest.mark.parametrize("name", ["gpt-nano", "mlp-glue"])
+def test_manifest_layout(artifacts, name):
+    man = _manifest(artifacts, name)
+    off = 0
+    for p in man["params"]:
+        assert p["offset"] == off
+        shape_len = 1
+        for s in p["shape"]:
+            shape_len *= s
+        assert p["len"] == shape_len
+        off += p["len"]
+    assert off == man["total_len"]
+    assert man["padded_len"] % man["block"] == 0
+    assert man["block"] == BLOCK
+    assert man["padded_len"] >= man["total_len"]
+
+
+@pytest.mark.parametrize("name", ["gpt-nano", "mlp-glue"])
+def test_artifact_files_exist(artifacts, name):
+    man = _manifest(artifacts, name)
+    arts = man["artifacts"]
+    for key in ("train", "eval", "init"):
+        assert (artifacts / arts[key]).exists(), arts[key]
+    for opt in ("adamw", "sgdm"):
+        assert (artifacts / arts["update"][opt]).exists()
+
+
+@pytest.mark.parametrize("name", ["gpt-nano", "mlp-glue"])
+def test_hlo_text_well_formed(artifacts, name):
+    man = _manifest(artifacts, name)
+    for key in ("train", "eval"):
+        text = (artifacts / man["artifacts"][key]).read_text()
+        assert "HloModule" in text
+        assert "ENTRY" in text
+
+
+def test_init_binary_length(artifacts):
+    man = _manifest(artifacts, "gpt-nano")
+    raw = (artifacts / man["artifacts"]["init"]).read_bytes()
+    assert len(raw) == 4 * man["padded_len"]
+
+
+def test_update_kernel_shared_by_padded_len(artifacts):
+    """Update artifacts are keyed by padded length, not config name."""
+    man = _manifest(artifacts, "gpt-nano")
+    fname = man["artifacts"]["update"]["adamw"]
+    assert fname.startswith(str(man["padded_len"]))
+
+
+def test_stamp_written(artifacts):
+    assert (artifacts / "STAMP").exists()
+
+
+def test_linreg_artifact(artifacts):
+    man = _manifest(artifacts, "linreg")
+    assert man["d"] == 10
+    text = (artifacts / man["artifacts"]["grad"]).read_text()
+    assert "HloModule" in text

@@ -1,0 +1,222 @@
+"""L1 correctness: Pallas update kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps flat lengths, block sizes, mask sparsity/scale patterns
+and hyper-parameters; `assert_allclose` against ``kernels/ref.py`` is the
+core correctness signal for everything the rust hot path executes.
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import masked_adamw, masked_sgdm
+from compile.kernels import ref
+
+
+def _mk(rng, n):
+    return jnp.asarray(rng.normal(size=n).astype(np.float32))
+
+
+def _mk_mask(rng, n, keep, scale):
+    m = (rng.random(n) < keep).astype(np.float32) * scale
+    return jnp.asarray(m)
+
+
+def _adamw_hp(lr=1e-3, b1=0.9, b2=0.999, eps=1e-8, wd=0.01, step=10):
+    return jnp.asarray(
+        [lr, b1, b2, eps, wd, 1.0 - b1**step, 1.0 - b2**step, 0.0],
+        jnp.float32,
+    )
+
+
+def _sgdm_hp(lr=0.1, mu=0.9, wd=1e-4, nesterov=0.0):
+    return jnp.asarray([lr, mu, wd, nesterov], jnp.float32)
+
+
+blocks = st.sampled_from([64, 128, 256])
+nblocks = st.integers(min_value=1, max_value=4)
+keeps = st.sampled_from([0.0, 0.25, 0.5, 1.0])
+scales = st.sampled_from([1.0, 2.0, 4.0])
+seeds = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+class TestMaskedAdamW:
+    @settings(max_examples=25, deadline=None)
+    @given(block=blocks, nb=nblocks, keep=keeps, scale=scales, seed=seeds)
+    def test_matches_ref(self, block, nb, keep, scale, seed):
+        rng = np.random.default_rng(seed)
+        n = block * nb
+        p, g, m, v = (_mk(rng, n) for _ in range(4))
+        v = jnp.abs(v)  # v must be a running mean of squares
+        mask = _mk_mask(rng, n, keep, scale)
+        hp = _adamw_hp()
+        got = masked_adamw(p, g, mask, m, v, hp, block=block)
+        want = ref.masked_adamw_ref(p, g, mask, m, v, hp)
+        for a, b in zip(got, want):
+            np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        seed=seeds,
+        lr=st.floats(1e-5, 1e-1),
+        b1=st.floats(0.0, 0.99),
+        b2=st.floats(0.9, 0.9999),
+        wd=st.floats(0.0, 0.1),
+        step=st.integers(1, 10_000),
+    )
+    def test_hyperparameter_sweep(self, seed, lr, b1, b2, wd, step):
+        rng = np.random.default_rng(seed)
+        n = 256
+        p, g, m = (_mk(rng, n) for _ in range(3))
+        v = jnp.abs(_mk(rng, n))
+        mask = _mk_mask(rng, n, 0.5, 2.0)
+        hp = _adamw_hp(lr=lr, b1=b1, b2=b2, wd=wd, step=step)
+        got = masked_adamw(p, g, mask, m, v, hp, block=128)
+        want = ref.masked_adamw_ref(p, g, mask, m, v, hp)
+        for a, b in zip(got, want):
+            np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+    def test_zero_mask_freezes_everything(self):
+        rng = np.random.default_rng(0)
+        n = 512
+        p, g, m = (_mk(rng, n) for _ in range(3))
+        v = jnp.abs(_mk(rng, n))
+        mask = jnp.zeros(n, jnp.float32)
+        p2, m2, v2 = masked_adamw(p, g, mask, m, v, _adamw_hp(), block=128)
+        np.testing.assert_array_equal(p2, p)
+        np.testing.assert_array_equal(m2, m)
+        np.testing.assert_array_equal(v2, v)
+
+    def test_full_mask_equals_plain_adamw(self):
+        """mask == 1 everywhere reduces to textbook AdamW."""
+        rng = np.random.default_rng(1)
+        n = 256
+        p, g = _mk(rng, n), _mk(rng, n)
+        m, v = jnp.zeros(n), jnp.zeros(n)
+        hp = _adamw_hp(step=1)
+        p2, m2, v2 = masked_adamw(
+            p, g, jnp.ones(n), m, v, hp, block=128
+        )
+        lr, b1, b2, eps, wd = 1e-3, 0.9, 0.999, 1e-8, 0.01
+        m_t = (1 - b1) * np.asarray(g)
+        v_t = (1 - b2) * np.asarray(g) ** 2
+        mhat = m_t / (1 - b1)
+        vhat = v_t / (1 - b2)
+        want = np.asarray(p) - lr * (
+            mhat / (np.sqrt(vhat) + eps) + wd * np.asarray(p)
+        )
+        np.testing.assert_allclose(p2, want, rtol=1e-6, atol=1e-7)
+
+    def test_mask_scale_multiplies_gradient(self):
+        """mask value M must act exactly like g ← M·g on active coords."""
+        rng = np.random.default_rng(2)
+        n = 256
+        p, g = _mk(rng, n), _mk(rng, n)
+        m, v = jnp.zeros(n), jnp.zeros(n)
+        hp = _adamw_hp()
+        scaled = masked_adamw(
+            p, g, 4.0 * jnp.ones(n), m, v, hp, block=128
+        )
+        direct = masked_adamw(
+            p, 4.0 * g, jnp.ones(n), m, v, hp, block=128
+        )
+        for a, b in zip(scaled, direct):
+            np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-7)
+
+    def test_rejects_non_multiple_length(self):
+        n = 300
+        z = jnp.zeros(n)
+        with pytest.raises(ValueError):
+            masked_adamw(z, z, z, z, z, _adamw_hp(), block=128)
+
+
+class TestMaskedSgdm:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        block=blocks, nb=nblocks, keep=keeps, scale=scales, seed=seeds,
+        nesterov=st.sampled_from([0.0, 1.0]),
+    )
+    def test_matches_ref(self, block, nb, keep, scale, seed, nesterov):
+        rng = np.random.default_rng(seed)
+        n = block * nb
+        p, g, buf = (_mk(rng, n) for _ in range(3))
+        mask = _mk_mask(rng, n, keep, scale)
+        hp = _sgdm_hp(nesterov=nesterov)
+        got = masked_sgdm(p, g, mask, buf, hp, block=block)
+        want = ref.masked_sgdm_ref(p, g, mask, buf, hp)
+        for a, b in zip(got, want):
+            np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6)
+
+    def test_zero_mask_freezes_everything(self):
+        rng = np.random.default_rng(3)
+        n = 256
+        p, g, buf = (_mk(rng, n) for _ in range(3))
+        p2, b2 = masked_sgdm(
+            p, g, jnp.zeros(n), buf, _sgdm_hp(), block=128
+        )
+        np.testing.assert_array_equal(p2, p)
+        np.testing.assert_array_equal(b2, buf)
+
+    def test_plain_sgd_when_mu_zero(self):
+        """mu=0, wd=0 reduces to θ ← θ − lr·(mask ⊙ g)."""
+        rng = np.random.default_rng(4)
+        n = 256
+        p, g = _mk(rng, n), _mk(rng, n)
+        mask = _mk_mask(rng, n, 0.5, 2.0)
+        p2, _ = masked_sgdm(
+            p, g, mask, jnp.zeros(n), _sgdm_hp(lr=0.1, mu=0.0, wd=0.0),
+            block=128,
+        )
+        want = np.asarray(p) - 0.1 * np.asarray(mask) * np.asarray(g)
+        np.testing.assert_allclose(p2, want, rtol=1e-6, atol=1e-7)
+
+    def test_momentum_accumulates_across_steps(self):
+        """Two steps with mu=1, full mask: Δ₂ = 2·lr·g for constant g."""
+        n = 128
+        p = jnp.zeros(n)
+        g = jnp.ones(n)
+        hp = _sgdm_hp(lr=0.1, mu=1.0, wd=0.0)
+        one = jnp.ones(n)
+        p1, b1 = masked_sgdm(p, g, one, jnp.zeros(n), hp, block=128)
+        p2, _ = masked_sgdm(p1, g, one, b1, hp, block=128)
+        np.testing.assert_allclose(np.asarray(p1), -0.1 * np.ones(n),
+                                   rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(p2 - p1), -0.2 * np.ones(n),
+                                   rtol=1e-6)
+
+
+class TestMaskCancellation:
+    """Cycle-level property behind Lemma 4.4: with Σⱼ S⁽ʲ⁾ = M·1 and plain
+    SGD at fixed θ, the summed masked gradients over a cycle equal the
+    summed unmasked gradients (the masking error cancels exactly)."""
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=seeds, m_masks=st.sampled_from([2, 4]))
+    def test_cycle_cancellation(self, seed, m_masks):
+        rng = np.random.default_rng(seed)
+        n = 256
+        grads = [_mk(rng, n) for _ in range(8)]
+        # Disjoint partition masks with scale M (Remark 4.11 shape).
+        perm = rng.permutation(n)
+        masks = []
+        for j in range(m_masks):
+            sel = np.zeros(n, np.float32)
+            sel[perm[j::m_masks]] = float(m_masks)
+            masks.append(jnp.asarray(sel))
+        assert np.allclose(sum(np.asarray(s) for s in masks),
+                           m_masks * np.ones(n))
+        total_masked = np.zeros(n, np.float32)
+        total_plain = np.zeros(n, np.float32)
+        for j, s in enumerate(masks):
+            for g in grads:
+                total_masked += np.asarray(s) * np.asarray(g)
+                total_plain += m_masks * np.asarray(g) / m_masks * 1.0
+        # Σⱼ Σᵢ S⁽ʲ⁾⊙gᵢ = (Σⱼ S⁽ʲ⁾) ⊙ Σᵢ gᵢ = M·Σᵢ gᵢ
+        want = m_masks * sum(np.asarray(g) for g in grads)
+        np.testing.assert_allclose(total_masked, want, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,155 @@
+"""L2 correctness: flat-param models (shapes, init, gradients, loss)."""
+
+import math
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.configs import BLOCK, GPT_CONFIGS, MLP_CONFIGS
+
+GPT = GPT_CONFIGS["gpt-nano"]
+MLP = MLP_CONFIGS["mlp-glue"]
+
+
+class TestParamSpec:
+    def test_offsets_contiguous(self):
+        spec = M.gpt_spec(GPT)
+        off = 0
+        for e in spec.manifest_params():
+            assert e["offset"] == off
+            assert e["len"] == math.prod(e["shape"])
+            off += e["len"]
+        assert off == spec.total
+
+    def test_padded_multiple_of_block(self):
+        for spec in (M.gpt_spec(GPT), M.mlp_spec(MLP)):
+            p = spec.padded(BLOCK)
+            assert p % BLOCK == 0
+            assert 0 <= p - spec.total < BLOCK
+
+    def test_unflatten_round_trip(self):
+        spec = M.mlp_spec(MLP)
+        flat = jnp.arange(spec.total, dtype=jnp.float32)
+        parts = spec.unflatten(flat)
+        rebuilt = jnp.concatenate(
+            [parts[e.name].reshape(-1) for e in spec.entries]
+        )
+        np.testing.assert_array_equal(rebuilt, flat)
+
+    def test_layer_tags_cover_lisa_structure(self):
+        spec = M.gpt_spec(GPT)
+        layers = {e.layer for e in spec.entries}
+        assert "embed" in layers and "head" in layers
+        mids = sorted(l for l in layers if l.startswith("block_"))
+        assert mids == [f"block_{i}" for i in range(GPT.n_layer)]
+
+
+class TestGpt:
+    def setup_method(self):
+        self.spec = M.gpt_spec(GPT)
+        self.flat = M.gpt_init(GPT, self.spec, seed=0, block=BLOCK)
+        key = jax.random.PRNGKey(42)
+        self.x = jax.random.randint(
+            key, (GPT.batch, GPT.seq), 0, GPT.vocab
+        )
+        self.y = jnp.roll(self.x, -1, axis=1)
+
+    def test_init_loss_near_uniform(self):
+        """Fresh init ⇒ loss ≈ log(vocab) (uniform next-token)."""
+        loss = M.gpt_loss(GPT, self.spec, self.flat, self.x, self.y)
+        assert abs(float(loss) - math.log(GPT.vocab)) < 0.5
+
+    def test_logits_shape(self):
+        logits = M.gpt_logits(GPT, self.spec, self.flat, self.x)
+        assert logits.shape == (GPT.batch, GPT.seq, GPT.vocab)
+
+    def test_grad_padding_tail_is_zero(self):
+        step = M.gpt_train_step(GPT, self.spec)
+        _, grad = step(self.flat, self.x, self.y)
+        tail = np.asarray(grad[self.spec.total:])
+        np.testing.assert_array_equal(tail, 0.0)
+
+    def test_grad_descends(self):
+        step = jax.jit(M.gpt_train_step(GPT, self.spec))
+        loss0, grad = step(self.flat, self.x, self.y)
+        flat2 = self.flat - 0.5 * grad
+        loss1, _ = step(flat2, self.x, self.y)
+        assert float(loss1) < float(loss0)
+
+    def test_causality(self):
+        """Changing a future token must not change earlier logits."""
+        logits0 = M.gpt_logits(GPT, self.spec, self.flat, self.x)
+        x2 = self.x.at[:, -1].set((self.x[:, -1] + 1) % GPT.vocab)
+        logits1 = M.gpt_logits(GPT, self.spec, self.flat, x2)
+        np.testing.assert_allclose(
+            logits0[:, :-1], logits1[:, :-1], rtol=1e-5, atol=1e-5
+        )
+
+
+class TestMlp:
+    def setup_method(self):
+        self.spec = M.mlp_spec(MLP)
+        self.flat = M.mlp_init(MLP, self.spec, seed=0, block=BLOCK)
+        key = jax.random.PRNGKey(7)
+        self.x = jax.random.normal(key, (MLP.batch, MLP.d_in))
+        self.y = jax.random.randint(key, (MLP.batch,), 0, MLP.n_class)
+
+    def test_init_loss_near_uniform(self):
+        loss = M.mlp_loss(MLP, self.spec, self.flat, self.x, self.y)
+        assert abs(float(loss) - math.log(MLP.n_class)) < 0.5
+
+    def test_eval_step_counts(self):
+        loss, correct = M.mlp_eval_step(MLP, self.spec)(
+            self.flat, self.x, self.y
+        )
+        assert 0.0 <= float(correct) <= MLP.batch
+        assert float(loss) > 0.0
+
+    def test_few_steps_reduce_loss(self):
+        step = jax.jit(M.mlp_train_step(MLP, self.spec))
+        flat = self.flat
+        loss0, _ = step(flat, self.x, self.y)
+        for _ in range(20):
+            _, g = step(flat, self.x, self.y)
+            flat = flat - 0.1 * g
+        loss1, _ = step(flat, self.x, self.y)
+        assert float(loss1) < float(loss0)
+
+    def test_frozen_block_grad_is_local(self):
+        """Zeroing a middle block's slice of a masked update leaves those
+        coordinates untouched — layout sanity for LISA masks."""
+        step = M.mlp_train_step(MLP, self.spec)
+        _, grad = step(self.flat, self.x, self.y)
+        offs = self.spec.offsets()
+        o, l = offs["block_3.w"]
+        assert float(jnp.sum(jnp.abs(grad[o:o + l]))) > 0.0
+
+
+class TestLinreg:
+    def test_grad_formula(self):
+        rng = np.random.default_rng(0)
+        th = jnp.asarray(rng.normal(size=10).astype(np.float32))
+        x = jnp.asarray(rng.normal(size=10).astype(np.float32))
+        y = jnp.float32(rng.normal())
+        g = M.linreg_grad(th, x, y)
+        want = 2.0 * (np.asarray(x) @ np.asarray(th) - float(y)) * \
+            np.asarray(x)
+        np.testing.assert_allclose(g, want, rtol=1e-5)
+
+    def test_step_moves_toward_solution(self):
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.normal(size=10).astype(np.float32))
+        th_star = jnp.asarray(rng.normal(size=10).astype(np.float32))
+        y = x @ th_star
+        th = jnp.zeros(10)
+        for _ in range(200):
+            th = M.linreg_step(th, x, y, 0.01)
+        # residual on this sample must vanish
+        assert abs(float(x @ th - y)) < 1e-3

@@ -1,0 +1,94 @@
+//! §Perf hot-path benchmark: times the three request-path stages —
+//! train-step HLO execution, the fused masked-update kernel (L1 Pallas,
+//! AOT-compiled), and the native update mirror — plus coordinator
+//! overhead (mask refresh). Feeds EXPERIMENTS.md §Perf.
+
+use omgd::bench::{measure, TablePrinter};
+use omgd::config::{Method, RunConfig};
+use omgd::experiments::*;
+use omgd::rng::Rng;
+use omgd::runtime::Runtime;
+use omgd::train::MethodEngine;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::cpu()?;
+    let model = if artifacts_present("gpt-tiny") {
+        "gpt-tiny"
+    } else {
+        "gpt-nano"
+    };
+    let bundle = load_bundle(&rt, model)?;
+    let n = bundle.padded_len();
+    let corpus = pretrain_corpus(&bundle, 64);
+    println!("perf target: {model} (P = {n} params)");
+
+    let mut cfg = RunConfig::default();
+    cfg.method = Method::LisaWor;
+    cfg.mask.gamma = 2;
+    let mut rng = Rng::seed_from_u64(0);
+    let mut engine = MethodEngine::new(&bundle.man, &cfg, &mut rng)?;
+    engine.on_period(&mut rng);
+
+    let mut flat = bundle.init_params()?;
+    let idx: Vec<usize> = (0..bundle.man.data.batch).collect();
+    let (x, y) = corpus.pack(&idx, bundle.man.data.batch);
+    let (_, grad) = bundle.train_step_lm(&flat, &x, &y)?;
+
+    let mut table = TablePrinter::new(&[
+        "stage", "mean ms", "p95 ms", "GB/s (state streams)",
+    ]);
+
+    // 1. train-step HLO (fwd+bwd).
+    let r1 = measure("train_step_hlo", 2, 10, || {
+        let _ = bundle.train_step_lm(&flat, &x, &y).unwrap();
+    });
+
+    // 2. fused masked-AdamW update via HLO (9 × n × 4 bytes of traffic).
+    let mut m = vec![0.0f32; n];
+    let mut v = vec![0.0f32; n];
+    let hp = [1e-3f32, 0.9, 0.999, 1e-8, 0.01, 0.1, 0.001, 0.0];
+    let mask = engine.mask().values.clone();
+    let r2 = measure("masked_adamw_hlo", 2, 20, || {
+        bundle
+            .adamw_update(&mut flat, &grad, &mask, &mut m, &mut v, &hp)
+            .unwrap();
+    });
+
+    // 3. native mirror of the same update (no PJRT dispatch).
+    let r3 = measure("masked_adamw_native", 2, 20, || {
+        engine.apply_native(&mut flat, &grad, 1e-3);
+    });
+
+    // 4. coordinator overhead: period refresh (mask build).
+    let r4 = measure("mask_refresh", 5, 50, || {
+        engine.on_period(&mut rng);
+    });
+
+    let bytes = 9.0 * n as f64 * 4.0; // p,g,mask,m,v in + p,m,v out
+    for (r, traffic) in [(&r1, None), (&r2, Some(bytes)),
+                         (&r3, Some(bytes)), (&r4, None)] {
+        table.row(vec![
+            r.name.clone(),
+            format!("{:.3}", r.mean() * 1e3),
+            format!("{:.3}", r.secs.percentile(95.0) * 1e3),
+            traffic
+                .map(|b| format!("{:.2}", b / r.mean() / 1e9))
+                .unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    table.print("§Perf — hot-path stage timings");
+    println!(
+        "\nstep budget: train {:.1} ms + update {:.1} ms; update is {:.1}% \
+         of step",
+        r1.mean() * 1e3,
+        r2.mean() * 1e3,
+        100.0 * r2.mean() / (r1.mean() + r2.mean())
+    );
+    println!(
+        "coordinator (mask refresh every K steps) adds {:.3} ms/period — \
+         {:.4}% of a step",
+        r4.mean() * 1e3,
+        100.0 * r4.mean() / r1.mean()
+    );
+    Ok(())
+}

@@ -1,0 +1,71 @@
+//! Table 1 regenerator: empirical iteration-complexity comparison.
+//!
+//! On the §5.1 quadratic (a μ-PL / convex objective), the paper's Table 1
+//! rates translate to first-passage scaling of T(ε) = min{t : ‖θ_t−θ*‖ ≤ ε}:
+//!   with-replacement SGD:   ρ_t = Θ(t⁻¹) ⇒ T(ε) ~ ε⁻²
+//!   RR-SGD / OMGD:          ρ_t = O(t⁻²) ⇒ T(ε) ~ ε⁻¹
+//!   i.i.d. compressors:     ρ_t = Ω(t⁻¹) ⇒ T(ε) ~ ε⁻²  (GoLore-like)
+//!
+//! We fit log T against log(1/ε) and print the slope next to the paper's
+//! prediction.
+
+use omgd::bench::TablePrinter;
+use omgd::data::LinRegData;
+use omgd::experiments::scaled;
+use omgd::quadratic::{first_passage, GradForm, QuadParams};
+
+fn fit_slope(eps: &[f64], ts: &[Option<usize>]) -> Option<f64> {
+    let pts: Vec<(f64, f64)> = eps
+        .iter()
+        .zip(ts)
+        .filter_map(|(&e, t)| t.map(|t| ((1.0 / e).ln(), (t as f64).ln())))
+        .collect();
+    if pts.len() < 3 {
+        return None;
+    }
+    let n = pts.len() as f64;
+    let mx = pts.iter().map(|p| p.0).sum::<f64>() / n;
+    let my = pts.iter().map(|p| p.1).sum::<f64>() / n;
+    let num: f64 = pts.iter().map(|p| (p.0 - mx) * (p.1 - my)).sum();
+    let den: f64 = pts.iter().map(|p| (p.0 - mx) * (p.0 - mx)).sum();
+    Some(num / den)
+}
+
+fn main() {
+    let t_max = scaled(1_000_000, 50_000);
+    let data = LinRegData::generate(10, 1000, 31);
+    let params = QuadParams {
+        t_max,
+        points_per_decade: 24,
+        ..QuadParams::default()
+    };
+    // ε grid inside the resolvable range for t_max.
+    let eps: Vec<f64> =
+        (0..8).map(|i| 0.5 * 0.6f64.powi(i)).collect();
+    println!("Table 1 setup: T={t_max}, ε ∈ [{:.4}, {:.2}]",
+             eps.last().unwrap(), eps[0]);
+
+    let rows: Vec<(&str, GradForm, &str)> = vec![
+        ("SGD (iid sampling)", GradForm::Iid, "ε⁻² (slope 2)"),
+        ("RR-SGD", GradForm::Rr, "ε⁻¹ (slope 1)"),
+        ("GoLore-like (RR_proj)", GradForm::RrProj { r: 0.5 },
+         "ε⁻² (slope 2)"),
+        ("LISA-like (RR_mask_iid)", GradForm::RrMaskIid { r: 0.5 },
+         "ε⁻² (slope 2)"),
+        ("OMGD (RR_mask_wor)", GradForm::RrMaskWor { r: 0.5 },
+         "ε⁻¹ (slope 1)"),
+    ];
+
+    let mut table = TablePrinter::new(&[
+        "algorithm", "T(ε) slope", "paper rate (PL/convex)",
+    ]);
+    for (name, form, expect) in rows {
+        let ts = first_passage(&data, form, params, &eps, 5);
+        let slope = fit_slope(&eps, &ts)
+            .map(|s| format!("{s:.2}"))
+            .unwrap_or_else(|| "n/a".into());
+        table.row(vec![name.into(), slope, expect.into()]);
+    }
+    table.print("Table 1 — empirical iteration-complexity slopes");
+    println!("(slope of log T(ε) vs log 1/ε; smaller = better scaling)");
+}

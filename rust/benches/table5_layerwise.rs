@@ -1,0 +1,90 @@
+//! Table 5 regenerator: layerwise methods on image-classification
+//! fine-tuning (ViT-base substitute = `mlp-img` bundle, AdamW).
+//!
+//! Paper shape: LISA-WOR ≥ LISA ≈ full-params ceiling, with GoLore and
+//! SIFT close behind; the γ/K setting follows B.2 (γ=3, K=5 scaled).
+//! Emits Fig. 3-style test-loss curves to `results/fig3_test_loss.csv`.
+
+use omgd::bench::TablePrinter;
+use omgd::config::{OptFamily, RunConfig};
+use omgd::data::ClassTask;
+use omgd::experiments::*;
+use omgd::metrics::{CsvCell, CsvWriter};
+use omgd::runtime::Runtime;
+use omgd::train::train_classifier;
+
+fn main() -> anyhow::Result<()> {
+    if !artifacts_present("mlp-img") {
+        eprintln!("mlp-img artifacts missing — run `make artifacts`");
+        return Ok(());
+    }
+    let rt = Runtime::cpu()?;
+    let bundle = load_bundle(&rt, "mlp-img")?;
+    let epochs = scaled(15, 3);
+    let datasets = [
+        ("IMG-easy", 3.0, 6001u64),
+        ("IMG-mid", 4.0, 6002),
+        ("IMG-hard", 5.5, 6003),
+    ];
+    // Full roster minus tensorwise (those are Table 4's subject).
+    let methods = adamw_method_roster();
+    println!("Table 5: {} datasets × {} methods, {} epochs (AdamW, γ=3 K=5)",
+             datasets.len(), methods.len(), epochs);
+
+    let mut table = TablePrinter::new(&[
+        "Algorithm", "IMG-easy", "IMG-mid", "IMG-hard",
+    ]);
+    let csv_path = results_dir().join("table5.csv");
+    let mut csv =
+        CsvWriter::create(&csv_path, &["method", "dataset", "acc"])?;
+    let mut fig3 = CsvWriter::create(
+        results_dir().join("fig3_test_loss.csv"),
+        &["method", "step", "test_loss"],
+    )?;
+
+    for method in &methods {
+        let mut cells = vec![method.name().to_string()];
+        for (name, spread, seed) in &datasets {
+            let task = ClassTask::gaussian_blobs(
+                name, bundle.man.data.d_in, bundle.man.data.n_class,
+                1000, 400, *spread, *seed,
+            );
+            let steps_per_epoch =
+                task.n_train().div_ceil(bundle.man.data.batch);
+            let mut cfg = RunConfig::default();
+            cfg.method = *method;
+            cfg.opt.family = OptFamily::AdamW;
+            cfg.opt.lr = 1e-3;
+            cfg.mask.gamma = 3;
+            cfg.mask.period = 5.min(epochs);
+            cfg.mask.rank = 8;
+            cfg.steps = epochs * steps_per_epoch;
+            cfg.eval_every = steps_per_epoch; // per-epoch test loss
+            cfg.seed = 11;
+            let out = train_classifier(&bundle, &cfg, &task)?;
+            cells.push(format!("{:.2}", out.final_metric));
+            csv.row_mixed(&[
+                CsvCell::S(method.name().into()),
+                CsvCell::S((*name).into()),
+                CsvCell::F(out.final_metric),
+            ])?;
+            if *name == "IMG-mid" {
+                for &(s, l, _) in &out.eval_series {
+                    fig3.row_mixed(&[
+                        CsvCell::S(method.name().into()),
+                        CsvCell::I(s as i64),
+                        CsvCell::F(l),
+                    ])?;
+                }
+            }
+        }
+        table.row(cells);
+        println!("  finished {}", method.name());
+    }
+    csv.flush()?;
+    fig3.flush()?;
+    table.print("Table 5 — fine-tuning accuracy (%), layerwise methods");
+    println!("rows written to {}", csv_path.display());
+    println!("test-loss curves (Fig. 3) in results/fig3_test_loss.csv");
+    Ok(())
+}

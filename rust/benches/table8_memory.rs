@@ -1,0 +1,81 @@
+//! Table 8 / Figure 6 regenerator: analytic memory breakdown for
+//! pre-training LLaMA-7B (batch 512 setting of §5.4).
+//!
+//! Paper rows (GB): Full 12.55/12.55/25.10/14.66 → 64.86;
+//! GaLore/GoLore 12.55/12.55/1.73/4.40 → 31.23 (−52%);
+//! LISA/LISA-wor 12.55/1.24/2.48/3.29 → 19.56 (−70%).
+
+use omgd::bench::TablePrinter;
+use omgd::experiments::results_dir;
+use omgd::memory::{breakdown, ArchSpec, MemBreakdown, MemPolicy};
+use omgd::metrics::{CsvCell, CsvWriter};
+
+fn main() -> anyhow::Result<()> {
+    let arch = ArchSpec::llama_7b();
+    println!("LLaMA-7B inventory: {:.3}B params, {} tensors",
+             arch.total_params() as f64 / 1e9, arch.tensors.len());
+
+    let rows = [
+        ("Full params", MemPolicy::Full,
+         [12.55, 12.55, 25.10, 14.66, 64.86]),
+        ("GaLore/GoLore", MemPolicy::Galore(128),
+         [12.55, 12.55, 1.73, 4.40, 31.23]),
+        ("LISA/LISA-wor", MemPolicy::Lisa(2),
+         [12.55, 1.24, 2.48, 3.29, 19.56]),
+    ];
+
+    let mut table = TablePrinter::new(&[
+        "Method", "Model", "Gradients", "Optimizer", "Others", "Total",
+        "paper Total", "reduction",
+    ]);
+    let csv_path = results_dir().join("table8.csv");
+    let mut csv = CsvWriter::create(
+        &csv_path,
+        &["method", "model_gb", "grad_gb", "opt_gb", "others_gb",
+          "total_gb", "paper_total_gb"],
+    )?;
+
+    let full_total =
+        breakdown(&arch, MemPolicy::Full).total();
+    for (name, policy, paper) in rows {
+        let b = breakdown(&arch, policy);
+        let total = b.total();
+        let red = 100.0 * (1.0 - total as f64 / full_total as f64);
+        table.row(vec![
+            name.into(),
+            format!("{:.2}", MemBreakdown::gb(b.model)),
+            format!("{:.2}", MemBreakdown::gb(b.gradients)),
+            format!("{:.2}", MemBreakdown::gb(b.optimizer)),
+            format!("{:.2}", MemBreakdown::gb(b.others)),
+            format!("{:.2}", MemBreakdown::gb(total)),
+            format!("{:.2}", paper[4]),
+            format!("{red:.0}%"),
+        ]);
+        csv.row_mixed(&[
+            CsvCell::S(name.into()),
+            CsvCell::F(MemBreakdown::gb(b.model)),
+            CsvCell::F(MemBreakdown::gb(b.gradients)),
+            CsvCell::F(MemBreakdown::gb(b.optimizer)),
+            CsvCell::F(MemBreakdown::gb(b.others)),
+            CsvCell::F(MemBreakdown::gb(total)),
+            CsvCell::F(paper[4]),
+        ])?;
+    }
+    csv.flush()?;
+    table.print("Table 8 / Fig. 6 — LLaMA-7B memory breakdown (GB)");
+    println!("rows written to {}", csv_path.display());
+
+    // Fig. 6 sanity: the 24 GB consumer-GPU line.
+    let lisa = breakdown(&arch, MemPolicy::Lisa(2));
+    println!(
+        "\nLISA-wor total {:.2} GB {} 24 GB (RTX-4090 class) — {}",
+        MemBreakdown::gb(lisa.total()),
+        if MemBreakdown::gb(lisa.total()) < 24.0 { "<" } else { "≥" },
+        if MemBreakdown::gb(lisa.total()) < 24.0 {
+            "fits on consumer GPUs, as the paper claims"
+        } else {
+            "does NOT fit — regression vs paper claim"
+        }
+    );
+    Ok(())
+}

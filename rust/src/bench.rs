@@ -1,0 +1,139 @@
+//! Bench harness (criterion replacement, `harness = false` benches).
+//!
+//! Provides timed measurement with warmup + repetitions, summary
+//! percentiles, and a uniform way to print the paper-table rows each
+//! bench regenerates. Benches write their CSV next to stdout output under
+//! `results/`.
+
+use crate::metrics::{format_g, Summary, Timer};
+
+/// Measure a closure: `warmup` unrecorded runs, then `iters` recorded.
+pub fn measure<F: FnMut()>(name: &str, warmup: usize, iters: usize,
+                           mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut s = Summary::new();
+    for _ in 0..iters.max(1) {
+        let t = Timer::start();
+        f();
+        s.add(t.total());
+    }
+    BenchResult { name: name.to_string(), secs: s }
+}
+
+/// Result of one measurement.
+pub struct BenchResult {
+    pub name: String,
+    pub secs: Summary,
+}
+
+impl BenchResult {
+    pub fn mean(&self) -> f64 {
+        self.secs.mean()
+    }
+
+    pub fn report(&self) {
+        println!(
+            "bench {:40} mean {:>10}s  p50 {:>10}s  p95 {:>10}s  (n={})",
+            self.name,
+            format_g(self.secs.mean()),
+            format_g(self.secs.percentile(50.0)),
+            format_g(self.secs.percentile(95.0)),
+            self.secs.n,
+        );
+    }
+
+    /// Throughput helper: items/sec given items per call.
+    pub fn per_sec(&self, items: f64) -> f64 {
+        items / self.secs.mean()
+    }
+}
+
+/// Pretty-print a paper-style table to stdout.
+pub struct TablePrinter {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl TablePrinter {
+    pub fn new(headers: &[&str]) -> Self {
+        Self {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "table row width");
+        self.rows.push(cells);
+    }
+
+    pub fn row_f(&mut self, label: &str, values: &[f64]) {
+        let mut cells = vec![label.to_string()];
+        cells.extend(values.iter().map(|v| format!("{v:.2}")));
+        self.row(cells);
+    }
+
+    pub fn print(&self, title: &str) {
+        println!("\n=== {title} ===");
+        let widths: Vec<usize> = self
+            .headers
+            .iter()
+            .enumerate()
+            .map(|(i, h)| {
+                self.rows
+                    .iter()
+                    .map(|r| r[i].len())
+                    .chain(std::iter::once(h.len()))
+                    .max()
+                    .unwrap_or(0)
+            })
+            .collect();
+        let fmt_row = |cells: &[String]| {
+            cells
+                .iter()
+                .zip(&widths)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        println!("{}", fmt_row(&self.headers));
+        println!("{}", "-".repeat(widths.iter().sum::<usize>()
+                                  + 2 * (widths.len() - 1)));
+        for r in &self.rows {
+            println!("{}", fmt_row(r));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_counts_iters() {
+        let mut calls = 0usize;
+        let r = measure("noop", 2, 5, || calls += 1);
+        assert_eq!(calls, 7);
+        assert_eq!(r.secs.n, 5);
+        assert!(r.mean() >= 0.0);
+        assert!(r.per_sec(10.0) > 0.0);
+    }
+
+    #[test]
+    fn table_printer_widths() {
+        let mut t = TablePrinter::new(&["method", "acc"]);
+        t.row(vec!["full".into(), "92.15".into()]);
+        t.row_f("wor", &[91.41]);
+        t.print("demo"); // should not panic
+        assert_eq!(t.rows.len(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn table_row_width_checked() {
+        let mut t = TablePrinter::new(&["a", "b"]);
+        t.row(vec!["x".into()]);
+    }
+}

@@ -1,0 +1,140 @@
+//! Tiny CLI argument parser (clap replacement).
+//!
+//! Grammar: `omgd <subcommand> [--flag value]... [--switch]... [pos]...`
+//! Flags may also be written `--flag=value`. Unknown flags are collected
+//! and reported by the subcommand that consumes them.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub cmd: String,
+    pub flags: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv`[0]`).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut it = argv.into_iter().peekable();
+        let cmd = it.next().unwrap_or_default();
+        let mut flags = BTreeMap::new();
+        let mut positional = Vec::new();
+        while let Some(arg) = it.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    flags.insert(name.to_string(), v);
+                } else {
+                    // boolean switch
+                    flags.insert(name.to_string(), "true".to_string());
+                }
+            } else {
+                positional.push(arg);
+            }
+        }
+        Ok(Args { cmd, flags, positional })
+    }
+
+    pub fn parse_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => match v.parse() {
+                Ok(x) => Ok(x),
+                Err(_) => bail!("--{name} expects an integer, got {v:?}"),
+            },
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => match v.parse() {
+                Ok(x) => Ok(x),
+                Err(_) => bail!("--{name} expects a number, got {v:?}"),
+            },
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        Ok(self.usize_or(name, default as usize)? as u64)
+    }
+
+    pub fn bool(&self, name: &str) -> bool {
+        matches!(self.get(name), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        let a = args("train --model gpt-tiny --steps 100 --verbose");
+        assert_eq!(a.cmd, "train");
+        assert_eq!(a.get("model"), Some("gpt-tiny"));
+        assert_eq!(a.usize_or("steps", 0).unwrap(), 100);
+        assert!(a.bool("verbose"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = args("bench --method=lisa-wor --lr=0.01");
+        assert_eq!(a.get("method"), Some("lisa-wor"));
+        assert_eq!(a.f64_or("lr", 0.0).unwrap(), 0.01);
+    }
+
+    #[test]
+    fn positional_args() {
+        // NOTE: a bare `--switch` followed by a non-flag token consumes
+        // it as a value (documented grammar), so switches go last.
+        let a = args("run config.toml second --fast");
+        assert_eq!(a.positional, vec!["config.toml", "second"]);
+        assert!(a.bool("fast"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = args("x");
+        assert_eq!(a.str_or("missing", "d"), "d");
+        assert_eq!(a.usize_or("missing", 7).unwrap(), 7);
+        assert!(!a.bool("missing"));
+    }
+
+    #[test]
+    fn bad_numbers_error() {
+        let a = args("x --steps abc");
+        assert!(a.usize_or("steps", 0).is_err());
+        assert!(a.f64_or("steps", 0.0).is_err());
+    }
+
+    #[test]
+    fn trailing_switch() {
+        let a = args("x --flag");
+        assert!(a.bool("flag"));
+    }
+}

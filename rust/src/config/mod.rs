@@ -1,0 +1,463 @@
+//! Typed run configuration (parsed from the TOML-subset) + presets.
+//!
+//! One [`RunConfig`] fully describes a training/fine-tuning run: which AOT
+//! model artifact to load, which optimizer family, which *method* (the
+//! masking/compression strategy under study), the mask hyper-parameters
+//! (`r`, `γ`, `K`), the LR schedule, data generation, and bookkeeping.
+
+pub mod toml;
+
+use self::toml::TomlDoc;
+use anyhow::{bail, Context, Result};
+
+/// The memory-efficient training method under study. Mirrors §5's method
+/// roster: the paper's OMGD instantiations plus every baseline it
+/// compares against.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Method {
+    /// Full-parameter training (upper baseline).
+    Full,
+    /// Tensorwise i.i.d. mask, resampled every epoch (§5.2 naïve).
+    IidMask,
+    /// Tensorwise without-replacement mask — OMGD (§5.2, SGDM-wor).
+    WorMask,
+    /// LISA: i.i.d. layerwise sampling (Pan et al., 2024), Algorithm 2
+    /// without the red lines.
+    Lisa,
+    /// LISA + gradient scaling only (ablation "LISA-scale").
+    LisaScale,
+    /// LISA + WOR layer traversal, no scaling (ablation).
+    LisaWorNoScale,
+    /// LISA-WOR: the paper's full method (WOR traversal + N_L/γ scaling).
+    LisaWor,
+    /// GaLore-style low-rank projection (top-r subspace via power iter).
+    Galore,
+    /// GoLore-style low-rank random projection (uniform Stiefel factor).
+    Golore,
+    /// SIFT-style top-k magnitude gradient masking.
+    Sift,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Result<Method> {
+        Ok(match s {
+            "full" => Method::Full,
+            "iid-mask" => Method::IidMask,
+            "wor-mask" => Method::WorMask,
+            "lisa" => Method::Lisa,
+            "lisa-scale" => Method::LisaScale,
+            "lisa-wor-no-scale" => Method::LisaWorNoScale,
+            "lisa-wor" => Method::LisaWor,
+            "galore" => Method::Galore,
+            "golore" => Method::Golore,
+            "sift" => Method::Sift,
+            _ => bail!("unknown method {s:?}"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Full => "full",
+            Method::IidMask => "iid-mask",
+            Method::WorMask => "wor-mask",
+            Method::Lisa => "lisa",
+            Method::LisaScale => "lisa-scale",
+            Method::LisaWorNoScale => "lisa-wor-no-scale",
+            Method::LisaWor => "lisa-wor",
+            Method::Galore => "galore",
+            Method::Golore => "golore",
+            Method::Sift => "sift",
+        }
+    }
+
+    /// Does this method use the WOR (without-replacement) traversal that
+    /// defines OMGD?
+    pub fn is_wor(&self) -> bool {
+        matches!(
+            self,
+            Method::WorMask | Method::LisaWor | Method::LisaWorNoScale
+        )
+    }
+
+    pub fn all() -> &'static [Method] {
+        &[
+            Method::Full,
+            Method::IidMask,
+            Method::WorMask,
+            Method::Lisa,
+            Method::LisaScale,
+            Method::LisaWorNoScale,
+            Method::LisaWor,
+            Method::Galore,
+            Method::Golore,
+            Method::Sift,
+        ]
+    }
+}
+
+/// Optimizer family (the paper integrates OMGD into both).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OptFamily {
+    AdamW,
+    Sgdm,
+}
+
+impl OptFamily {
+    pub fn parse(s: &str) -> Result<OptFamily> {
+        Ok(match s {
+            "adamw" => OptFamily::AdamW,
+            "sgdm" | "sgd" => OptFamily::Sgdm,
+            _ => bail!("unknown optimizer {s:?}"),
+        })
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            OptFamily::AdamW => "adamw",
+            OptFamily::Sgdm => "sgdm",
+        }
+    }
+}
+
+/// Learning-rate schedule.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Schedule {
+    Constant,
+    /// Multiply by `gamma` at each milestone step.
+    MultiStep { milestones: Vec<usize>, gamma: f64 },
+    /// Linear warmup to peak then cosine decay to `min_lr`.
+    CosineWarmup { warmup: usize, total: usize, min_lr: f64 },
+    /// Diminishing `η_t = c0 / max(t, 1)` (§5.1 / Theorem A.1 regime).
+    InvT { c0: f64 },
+}
+
+impl Schedule {
+    /// LR multiplier/value at step `t` given the configured base LR.
+    pub fn lr_at(&self, base: f64, t: usize) -> f64 {
+        match self {
+            Schedule::Constant => base,
+            Schedule::MultiStep { milestones, gamma } => {
+                let k = milestones.iter().filter(|&&m| t >= m).count();
+                base * gamma.powi(k as i32)
+            }
+            Schedule::CosineWarmup { warmup, total, min_lr } => {
+                if t < *warmup {
+                    base * (t + 1) as f64 / (*warmup).max(1) as f64
+                } else {
+                    let progress = (t - warmup) as f64
+                        / ((total.saturating_sub(*warmup)).max(1)) as f64;
+                    let progress = progress.min(1.0);
+                    min_lr
+                        + 0.5
+                            * (base - min_lr)
+                            * (1.0 + (std::f64::consts::PI * progress).cos())
+                }
+            }
+            Schedule::InvT { c0 } => c0 / (t.max(1) as f64),
+        }
+    }
+}
+
+/// Mask / method hyper-parameters (paper notation).
+#[derive(Clone, Debug)]
+pub struct MaskConfig {
+    /// Keep ratio `r` — the fraction of coordinates updated per step.
+    pub keep_ratio: f64,
+    /// LISA: number of middle layers sampled per period (γ).
+    pub gamma: usize,
+    /// LISA: sampling period in *epochs or steps* (K); the trainer decides
+    /// the unit based on the workload.
+    pub period: usize,
+    /// GaLore/GoLore rank.
+    pub rank: usize,
+    /// SIFT top-k fraction.
+    pub topk: f64,
+}
+
+impl Default for MaskConfig {
+    fn default() -> Self {
+        Self { keep_ratio: 0.5, gamma: 2, period: 5, rank: 8, topk: 0.1 }
+    }
+}
+
+/// Optimizer hyper-parameters.
+#[derive(Clone, Debug)]
+pub struct OptConfig {
+    pub family: OptFamily,
+    pub lr: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    pub weight_decay: f64,
+    pub momentum: f64,
+    pub nesterov: bool,
+}
+
+impl Default for OptConfig {
+    fn default() -> Self {
+        Self {
+            family: OptFamily::AdamW,
+            lr: 1e-3,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            weight_decay: 0.01,
+            momentum: 0.9,
+            nesterov: true,
+        }
+    }
+}
+
+/// Complete description of one run.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// AOT config name (`gpt-tiny`, `mlp-glue`, ...).
+    pub model: String,
+    /// Directory holding `*.hlo.txt` + manifests.
+    pub artifacts_dir: String,
+    pub method: Method,
+    pub opt: OptConfig,
+    pub mask: MaskConfig,
+    pub schedule: Schedule,
+    pub steps: usize,
+    pub eval_every: usize,
+    pub seed: u64,
+    /// Dataset size (N distinct samples for the reshuffling sampler).
+    pub dataset_size: usize,
+    /// Dataset generator seed (kept distinct from `seed` so method
+    /// comparisons share data).
+    pub data_seed: u64,
+    /// Output directory for metric CSVs.
+    pub out_dir: String,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            model: "mlp-glue".into(),
+            artifacts_dir: "artifacts".into(),
+            method: Method::Full,
+            opt: OptConfig::default(),
+            mask: MaskConfig::default(),
+            schedule: Schedule::Constant,
+            steps: 200,
+            eval_every: 50,
+            seed: 0,
+            dataset_size: 512,
+            data_seed: 1234,
+            out_dir: "results".into(),
+        }
+    }
+}
+
+impl RunConfig {
+    /// Parse from TOML text; unknown keys are ignored, missing keys take
+    /// defaults (recorded above).
+    pub fn from_toml(src: &str) -> Result<RunConfig> {
+        let doc = TomlDoc::parse(src).context("parsing run config")?;
+        Self::from_doc(&doc)
+    }
+
+    pub fn from_doc(doc: &TomlDoc) -> Result<RunConfig> {
+        let d = RunConfig::default();
+        let schedule = match doc.str_or("schedule.kind", "constant") {
+            "constant" => Schedule::Constant,
+            "multistep" => {
+                let milestones = match doc.get("schedule.milestones") {
+                    Some(toml::TomlValue::Arr(v)) => v
+                        .iter()
+                        .filter_map(|x| x.as_i64())
+                        .map(|x| x as usize)
+                        .collect(),
+                    _ => vec![],
+                };
+                Schedule::MultiStep {
+                    milestones,
+                    gamma: doc.f64_or("schedule.gamma", 0.1),
+                }
+            }
+            "cosine" => Schedule::CosineWarmup {
+                warmup: doc.i64_or("schedule.warmup", 100) as usize,
+                total: doc.i64_or(
+                    "schedule.total",
+                    doc.i64_or("train.steps", d.steps as i64),
+                ) as usize,
+                min_lr: doc.f64_or("schedule.min_lr", 0.0),
+            },
+            "inv_t" => Schedule::InvT { c0: doc.f64_or("schedule.c0", 1.0) },
+            other => bail!("unknown schedule {other:?}"),
+        };
+        Ok(RunConfig {
+            model: doc.str_or("model", &d.model).to_string(),
+            artifacts_dir: doc
+                .str_or("artifacts_dir", &d.artifacts_dir)
+                .to_string(),
+            method: Method::parse(doc.str_or("method", "full"))?,
+            opt: OptConfig {
+                family: OptFamily::parse(doc.str_or("opt.family", "adamw"))?,
+                lr: doc.f64_or("opt.lr", d.opt.lr),
+                beta1: doc.f64_or("opt.beta1", d.opt.beta1),
+                beta2: doc.f64_or("opt.beta2", d.opt.beta2),
+                eps: doc.f64_or("opt.eps", d.opt.eps),
+                weight_decay: doc.f64_or("opt.weight_decay",
+                                          d.opt.weight_decay),
+                momentum: doc.f64_or("opt.momentum", d.opt.momentum),
+                nesterov: doc.bool_or("opt.nesterov", d.opt.nesterov),
+            },
+            mask: MaskConfig {
+                keep_ratio: doc.f64_or("mask.keep_ratio",
+                                        d.mask.keep_ratio),
+                gamma: doc.i64_or("mask.gamma", d.mask.gamma as i64)
+                    as usize,
+                period: doc.i64_or("mask.period", d.mask.period as i64)
+                    as usize,
+                rank: doc.i64_or("mask.rank", d.mask.rank as i64) as usize,
+                topk: doc.f64_or("mask.topk", d.mask.topk),
+            },
+            schedule,
+            steps: doc.i64_or("train.steps", d.steps as i64) as usize,
+            eval_every: doc.i64_or("train.eval_every",
+                                    d.eval_every as i64) as usize,
+            seed: doc.i64_or("train.seed", d.seed as i64) as u64,
+            dataset_size: doc.i64_or("data.size", d.dataset_size as i64)
+                as usize,
+            data_seed: doc.i64_or("data.seed", d.data_seed as i64) as u64,
+            out_dir: doc.str_or("out_dir", &d.out_dir).to_string(),
+        })
+    }
+
+    /// Validate cross-field invariants before a run starts.
+    pub fn validate(&self) -> Result<()> {
+        if !(0.0 < self.mask.keep_ratio && self.mask.keep_ratio <= 1.0) {
+            bail!("mask.keep_ratio must be in (0,1], got {}",
+                  self.mask.keep_ratio);
+        }
+        if self.mask.gamma == 0 {
+            bail!("mask.gamma must be >= 1");
+        }
+        if self.mask.period == 0 {
+            bail!("mask.period must be >= 1");
+        }
+        if self.steps == 0 {
+            bail!("train.steps must be >= 1");
+        }
+        if self.opt.lr <= 0.0 {
+            bail!("opt.lr must be positive");
+        }
+        if self.dataset_size == 0 {
+            bail!("data.size must be >= 1");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_round_trip() {
+        let cfg = RunConfig::from_toml("").unwrap();
+        assert_eq!(cfg.method, Method::Full);
+        assert_eq!(cfg.opt.family, OptFamily::AdamW);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn full_config_parses() {
+        let cfg = RunConfig::from_toml(
+            r#"
+model = "gpt-tiny"
+method = "lisa-wor"
+out_dir = "results/x"
+
+[opt]
+family = "sgdm"
+lr = 0.1
+momentum = 0.95
+nesterov = false
+
+[mask]
+keep_ratio = 0.25
+gamma = 3
+period = 10
+
+[schedule]
+kind = "multistep"
+milestones = [100, 150]
+gamma = 0.2
+
+[train]
+steps = 500
+seed = 7
+
+[data]
+size = 2048
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.model, "gpt-tiny");
+        assert_eq!(cfg.method, Method::LisaWor);
+        assert_eq!(cfg.opt.family, OptFamily::Sgdm);
+        assert_eq!(cfg.opt.momentum, 0.95);
+        assert!(!cfg.opt.nesterov);
+        assert_eq!(cfg.mask.gamma, 3);
+        assert_eq!(cfg.steps, 500);
+        assert_eq!(cfg.dataset_size, 2048);
+        match cfg.schedule {
+            Schedule::MultiStep { ref milestones, gamma } => {
+                assert_eq!(milestones, &[100, 150]);
+                assert_eq!(gamma, 0.2);
+            }
+            _ => panic!("wrong schedule"),
+        }
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn method_parse_all_names() {
+        for m in Method::all() {
+            assert_eq!(Method::parse(m.name()).unwrap(), *m);
+        }
+        assert!(Method::parse("nope").is_err());
+    }
+
+    #[test]
+    fn wor_flag() {
+        assert!(Method::WorMask.is_wor());
+        assert!(Method::LisaWor.is_wor());
+        assert!(!Method::Lisa.is_wor());
+        assert!(!Method::Full.is_wor());
+    }
+
+    #[test]
+    fn validation_catches_bad_values() {
+        let mut cfg = RunConfig::default();
+        cfg.mask.keep_ratio = 0.0;
+        assert!(cfg.validate().is_err());
+        cfg.mask.keep_ratio = 0.5;
+        cfg.steps = 0;
+        assert!(cfg.validate().is_err());
+        cfg.steps = 1;
+        cfg.opt.lr = -1.0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn schedules() {
+        let ms = Schedule::MultiStep { milestones: vec![10, 20], gamma: 0.1 };
+        assert_eq!(ms.lr_at(1.0, 5), 1.0);
+        assert!((ms.lr_at(1.0, 15) - 0.1).abs() < 1e-12);
+        assert!((ms.lr_at(1.0, 25) - 0.01).abs() < 1e-12);
+
+        let cos = Schedule::CosineWarmup { warmup: 10, total: 110,
+                                           min_lr: 0.1 };
+        assert!(cos.lr_at(1.0, 0) < 0.2); // warming up
+        assert!((cos.lr_at(1.0, 9) - 1.0).abs() < 1e-9);
+        assert!((cos.lr_at(1.0, 110) - 0.1).abs() < 1e-9);
+        assert!((cos.lr_at(1.0, 10_000) - 0.1).abs() < 1e-9); // clamped
+
+        let inv = Schedule::InvT { c0: 2.0 };
+        assert_eq!(inv.lr_at(123.0, 4), 0.5);
+        assert_eq!(inv.lr_at(123.0, 0), 2.0); // t clamped to 1
+    }
+}

@@ -1,0 +1,316 @@
+//! Minimal TOML-subset parser (replaces `toml` + `serde`).
+//!
+//! Supported: `[table]` / `[table.sub]` headers, `key = value` with
+//! strings, integers, floats, booleans, and homogeneous inline arrays,
+//! plus `#` comments. This covers every config file the launcher accepts;
+//! unsupported TOML (multiline strings, dates, array-of-tables) is a
+//! parse error, not silent misbehaviour.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed document: dotted-path key → value
+/// (`[train]` + `lr = 0.1` ⇒ `"train.lr"`).
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    pub entries: BTreeMap<String, TomlValue>,
+}
+
+#[derive(Debug)]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "toml error on line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+impl TomlDoc {
+    pub fn parse(src: &str) -> Result<TomlDoc, TomlError> {
+        let mut doc = TomlDoc::default();
+        let mut prefix = String::new();
+        for (ln, raw) in src.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest.strip_suffix(']').ok_or_else(|| TomlError {
+                    line: ln + 1,
+                    msg: "unterminated table header".into(),
+                })?;
+                let name = name.trim();
+                if name.is_empty()
+                    || !name.chars().all(|c| {
+                        c.is_ascii_alphanumeric() || matches!(c, '_' | '-' | '.')
+                    })
+                {
+                    return Err(TomlError {
+                        line: ln + 1,
+                        msg: format!("bad table name {name:?}"),
+                    });
+                }
+                prefix = name.to_string();
+                continue;
+            }
+            let eq = line.find('=').ok_or_else(|| TomlError {
+                line: ln + 1,
+                msg: "expected key = value".into(),
+            })?;
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                return Err(TomlError { line: ln + 1, msg: "empty key".into() });
+            }
+            let val = parse_value(line[eq + 1..].trim()).map_err(|msg| {
+                TomlError { line: ln + 1, msg }
+            })?;
+            let full = if prefix.is_empty() {
+                key.to_string()
+            } else {
+                format!("{prefix}.{key}")
+            };
+            doc.entries.insert(full, val);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&TomlValue> {
+        self.entries.get(key)
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).and_then(|v| v.as_str()).unwrap_or(default)
+    }
+
+    pub fn i64_or(&self, key: &str, default: i64) -> i64 {
+        self.get(key).and_then(|v| v.as_i64()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+
+    /// All keys under a dotted prefix (for e.g. enumerating `[tasks.*]`).
+    pub fn keys_under(&self, prefix: &str) -> Vec<&str> {
+        let pfx = format!("{prefix}.");
+        self.entries
+            .keys()
+            .filter(|k| k.starts_with(&pfx))
+            .map(|k| k.as_str())
+            .collect()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' inside a quoted string does not start a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| "unterminated string".to_string())?;
+        if inner.contains('"') {
+            return Err("unsupported embedded quote".into());
+        }
+        return Ok(TomlValue::Str(
+            inner.replace("\\n", "\n").replace("\\t", "\t"),
+        ));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest
+            .strip_suffix(']')
+            .ok_or_else(|| "unterminated array".to_string())?;
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Arr(vec![]));
+        }
+        let items: Result<Vec<_>, _> =
+            split_top(inner).iter().map(|p| parse_value(p.trim())).collect();
+        return Ok(TomlValue::Arr(items?));
+    }
+    match s {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.replace('_', "").parse::<i64>() {
+        // distinguish ints from floats like "1e3"
+        if !s.contains('.') && !s.contains('e') && !s.contains('E') {
+            return Ok(TomlValue::Int(i));
+        }
+    }
+    if let Ok(f) = s.replace('_', "").parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("cannot parse value {s:?}"))
+}
+
+/// Split on commas not nested in brackets/quotes.
+fn split_top(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let (mut depth, mut in_str, mut start) = (0usize, false, 0usize);
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_basic() {
+        let doc = TomlDoc::parse(
+            "a = 1\nb = 2.5\nc = \"hi\"\nd = true\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get("a").unwrap().as_i64(), Some(1));
+        assert_eq!(doc.get("b").unwrap().as_f64(), Some(2.5));
+        assert_eq!(doc.get("c").unwrap().as_str(), Some("hi"));
+        assert_eq!(doc.get("d").unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
+    fn tables_become_dotted_keys() {
+        let doc = TomlDoc::parse(
+            "[train]\nlr = 0.1\n[train.mask]\nkeep = 0.5\n",
+        )
+        .unwrap();
+        assert_eq!(doc.f64_or("train.lr", 0.0), 0.1);
+        assert_eq!(doc.f64_or("train.mask.keep", 0.0), 0.5);
+    }
+
+    #[test]
+    fn comments_and_blank_lines() {
+        let doc = TomlDoc::parse(
+            "# header\na = 1 # trailing\n\nb = \"x # not comment\"\n",
+        )
+        .unwrap();
+        assert_eq!(doc.i64_or("a", 0), 1);
+        assert_eq!(doc.str_or("b", ""), "x # not comment");
+    }
+
+    #[test]
+    fn arrays() {
+        let doc =
+            TomlDoc::parse("xs = [1, 2, 3]\nys = [\"a\", \"b\"]\nzs = []\n")
+                .unwrap();
+        let xs = match doc.get("xs").unwrap() {
+            TomlValue::Arr(v) => v.clone(),
+            _ => panic!(),
+        };
+        assert_eq!(xs.len(), 3);
+        assert_eq!(xs[2].as_i64(), Some(3));
+        assert_eq!(
+            doc.get("ys").unwrap(),
+            &TomlValue::Arr(vec![
+                TomlValue::Str("a".into()),
+                TomlValue::Str("b".into())
+            ])
+        );
+        assert_eq!(doc.get("zs").unwrap(), &TomlValue::Arr(vec![]));
+    }
+
+    #[test]
+    fn int_vs_float() {
+        let doc = TomlDoc::parse("a = 3\nb = 3.0\nc = 1e3\n").unwrap();
+        assert!(matches!(doc.get("a").unwrap(), TomlValue::Int(3)));
+        assert!(matches!(doc.get("b").unwrap(), TomlValue::Float(_)));
+        assert_eq!(doc.get("c").unwrap().as_f64(), Some(1000.0));
+    }
+
+    #[test]
+    fn errors_have_line_numbers() {
+        let err = TomlDoc::parse("good = 1\nbad line\n").unwrap_err();
+        assert_eq!(err.line, 2);
+        assert!(TomlDoc::parse("[unterminated\n").is_err());
+        assert!(TomlDoc::parse("k = @nope\n").is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let doc = TomlDoc::parse("").unwrap();
+        assert_eq!(doc.i64_or("missing", 7), 7);
+        assert_eq!(doc.str_or("missing", "d"), "d");
+        assert!(doc.bool_or("missing", true));
+    }
+
+    #[test]
+    fn keys_under_prefix() {
+        let doc =
+            TomlDoc::parse("[a.x]\nk = 1\n[a.y]\nk = 2\n[b]\nk = 3\n")
+                .unwrap();
+        let ks = doc.keys_under("a");
+        assert_eq!(ks, vec!["a.x.k", "a.y.k"]);
+    }
+}

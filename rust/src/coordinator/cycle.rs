@@ -1,0 +1,247 @@
+//! Algorithm 1's traversal engines.
+//!
+//! [`OmgdCycle`] is the literal Algorithm 1: at the start of each cycle,
+//! draw `R_k ← RandomPermutation([M] × [N])` and walk it; every
+//! `(mask, sample)` pair is visited exactly once per cycle.
+//!
+//! [`EpochwiseCycle`] is the Figure 1 implementation used in the deep
+//! learning experiments: the outer loop walks the M masks sequentially
+//! (one mask per epoch), the inner loop does a reshuffled full pass over
+//! the N samples — a restricted but hardware-friendlier member of the
+//! same family (each pair still visited exactly once per cycle).
+
+use crate::rng::Rng;
+
+/// One scheduled step: which mask and which sample to use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Pair {
+    pub mask: usize,
+    pub sample: usize,
+}
+
+/// Fully-random joint traversal of `[M] × [N]` (Algorithm 1 line 5).
+#[derive(Clone, Debug)]
+pub struct OmgdCycle {
+    m: usize,
+    n: usize,
+    order: Vec<Pair>,
+    pos: usize,
+    /// Completed cycles (k in Algorithm 1).
+    pub cycles: usize,
+}
+
+impl OmgdCycle {
+    pub fn new(m: usize, n: usize) -> Self {
+        assert!(m > 0 && n > 0);
+        Self { m, n, order: Vec::new(), pos: 0, cycles: 0 }
+    }
+
+    pub fn cycle_len(&self) -> usize {
+        self.m * self.n
+    }
+
+    /// Advance one step. Returns the pair and whether a *new cycle began*
+    /// (so the caller regenerates the mask set, Algorithm 1 line 4).
+    pub fn next(&mut self, rng: &mut Rng) -> (Pair, bool) {
+        let mut fresh = false;
+        if self.pos == self.order.len() {
+            self.reshuffle(rng);
+            fresh = true;
+        }
+        let p = self.order[self.pos];
+        self.pos += 1;
+        if self.pos == self.order.len() {
+            self.cycles += 1;
+        }
+        (p, fresh)
+    }
+
+    fn reshuffle(&mut self, rng: &mut Rng) {
+        self.order.clear();
+        for j in 0..self.m {
+            for i in 0..self.n {
+                self.order.push(Pair { mask: j, sample: i });
+            }
+        }
+        rng.shuffle(&mut self.order);
+        self.pos = 0;
+    }
+}
+
+/// Epochwise variant (Figure 1): mask j is applied for the whole j-th
+/// epoch of the cycle; data is reshuffled every epoch.
+#[derive(Clone, Debug)]
+pub struct EpochwiseCycle {
+    m: usize,
+    n: usize,
+    mask_order: Vec<usize>,
+    data_order: Vec<usize>,
+    epoch_in_cycle: usize,
+    pos_in_epoch: usize,
+    started: bool,
+    pub cycles: usize,
+}
+
+impl EpochwiseCycle {
+    pub fn new(m: usize, n: usize) -> Self {
+        assert!(m > 0 && n > 0);
+        Self {
+            m,
+            n,
+            mask_order: Vec::new(),
+            data_order: Vec::new(),
+            epoch_in_cycle: 0,
+            pos_in_epoch: 0,
+            started: false,
+            cycles: 0,
+        }
+    }
+
+    pub fn cycle_len(&self) -> usize {
+        self.m * self.n
+    }
+
+    /// Advance one step; returns `(pair, new_cycle, new_epoch)`.
+    pub fn next(&mut self, rng: &mut Rng) -> (Pair, bool, bool) {
+        let mut new_cycle = false;
+        let mut new_epoch = false;
+        if !self.started {
+            self.start_cycle(rng);
+            self.start_epoch(rng);
+            self.started = true;
+            new_cycle = true;
+            new_epoch = true;
+        } else if self.pos_in_epoch == self.n {
+            self.epoch_in_cycle += 1;
+            if self.epoch_in_cycle == self.m {
+                self.cycles += 1;
+                self.start_cycle(rng);
+                new_cycle = true;
+            }
+            self.start_epoch(rng);
+            new_epoch = true;
+        }
+        let p = Pair {
+            mask: self.mask_order[self.epoch_in_cycle],
+            sample: self.data_order[self.pos_in_epoch],
+        };
+        self.pos_in_epoch += 1;
+        (p, new_cycle, new_epoch)
+    }
+
+    fn start_cycle(&mut self, rng: &mut Rng) {
+        self.mask_order = rng.permutation(self.m);
+        self.epoch_in_cycle = 0;
+    }
+
+    fn start_epoch(&mut self, rng: &mut Rng) {
+        self.data_order = rng.permutation(self.n);
+        self.pos_in_epoch = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn omgd_cycle_visits_every_pair_exactly_once() {
+        let mut rng = Rng::seed_from_u64(1);
+        let (m, n) = (4, 6);
+        let mut cyc = OmgdCycle::new(m, n);
+        for _cycle in 0..3 {
+            let mut seen = HashSet::new();
+            for _ in 0..m * n {
+                let (p, _) = cyc.next(&mut rng);
+                assert!(seen.insert((p.mask, p.sample)),
+                        "duplicate pair {p:?}");
+            }
+            assert_eq!(seen.len(), m * n);
+        }
+        assert_eq!(cyc.cycles, 3);
+    }
+
+    #[test]
+    fn omgd_cycle_signals_fresh_cycle() {
+        let mut rng = Rng::seed_from_u64(2);
+        let mut cyc = OmgdCycle::new(2, 3);
+        let (_, fresh0) = cyc.next(&mut rng);
+        assert!(fresh0);
+        for _ in 1..6 {
+            let (_, fresh) = cyc.next(&mut rng);
+            assert!(!fresh);
+        }
+        let (_, fresh6) = cyc.next(&mut rng);
+        assert!(fresh6, "cycle boundary must signal mask-set refresh");
+    }
+
+    #[test]
+    fn omgd_cycle_orders_differ_across_cycles() {
+        let mut rng = Rng::seed_from_u64(3);
+        let mut cyc = OmgdCycle::new(3, 5);
+        let c1: Vec<Pair> = (0..15).map(|_| cyc.next(&mut rng).0).collect();
+        let c2: Vec<Pair> = (0..15).map(|_| cyc.next(&mut rng).0).collect();
+        assert_ne!(c1, c2, "permutation must be re-drawn per cycle");
+    }
+
+    #[test]
+    fn epochwise_uses_one_mask_per_epoch() {
+        let mut rng = Rng::seed_from_u64(4);
+        let (m, n) = (3, 4);
+        let mut cyc = EpochwiseCycle::new(m, n);
+        for _ in 0..m {
+            let mut epoch_masks = HashSet::new();
+            for _ in 0..n {
+                let (p, _, _) = cyc.next(&mut rng);
+                epoch_masks.insert(p.mask);
+            }
+            assert_eq!(epoch_masks.len(), 1, "mask changed mid-epoch");
+        }
+    }
+
+    #[test]
+    fn epochwise_cycle_covers_all_pairs() {
+        let mut rng = Rng::seed_from_u64(5);
+        let (m, n) = (4, 5);
+        let mut cyc = EpochwiseCycle::new(m, n);
+        let mut seen = HashSet::new();
+        for _ in 0..m * n {
+            let (p, _, _) = cyc.next(&mut rng);
+            assert!(seen.insert((p.mask, p.sample)));
+        }
+        assert_eq!(seen.len(), m * n);
+    }
+
+    #[test]
+    fn epochwise_reshuffles_data_every_epoch() {
+        let mut rng = Rng::seed_from_u64(6);
+        let n = 32;
+        let mut cyc = EpochwiseCycle::new(2, n);
+        let e1: Vec<usize> =
+            (0..n).map(|_| cyc.next(&mut rng).0.sample).collect();
+        let e2: Vec<usize> =
+            (0..n).map(|_| cyc.next(&mut rng).0.sample).collect();
+        assert_ne!(e1, e2);
+        let s1: HashSet<_> = e1.iter().collect();
+        assert_eq!(s1.len(), n, "epoch must be a permutation");
+    }
+
+    #[test]
+    fn epochwise_flags() {
+        let mut rng = Rng::seed_from_u64(7);
+        let mut cyc = EpochwiseCycle::new(2, 3);
+        let (_, nc, ne) = cyc.next(&mut rng);
+        assert!(nc && ne);
+        let (_, nc, ne) = cyc.next(&mut rng);
+        assert!(!nc && !ne);
+        cyc.next(&mut rng);
+        let (_, nc, ne) = cyc.next(&mut rng); // step 4 = epoch 2 start
+        assert!(!nc && ne);
+        cyc.next(&mut rng);
+        cyc.next(&mut rng);
+        let (_, nc, ne) = cyc.next(&mut rng); // step 7 = cycle 2 start
+        assert!(nc && ne);
+        assert_eq!(cyc.cycles, 1);
+    }
+}

@@ -1,0 +1,246 @@
+//! Algorithm 2: LISA and LISA-WOR layer schedulers.
+//!
+//! LISA (Pan et al., 2024) periodically unfreezes γ randomly chosen
+//! middle layers (plus embed/head, always active). LISA-WOR adds the two
+//! red lines of Algorithm 2: (1) layers are drawn from a
+//! without-replacement pool that reshuffles only when exhausted, so a
+//! cycle of ⌈N_L/γ⌉ periods covers every middle layer exactly once; and
+//! (2) selected middle layers' gradients are rescaled by `N_L/γ`, which
+//! is what makes the traversal satisfy eq. (3) and inherit Theorem 4.6.
+
+use crate::rng::Rng;
+
+/// Which of Algorithm 2's four variants (paper Table 3 ablation roster).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LisaVariant {
+    /// i.i.d. sampling, no scaling (original LISA).
+    Lisa,
+    /// i.i.d. sampling + N_L/γ scaling ("LISA-scale").
+    LisaScale,
+    /// WOR sampling, no scaling ("LISA-wor-no-scale").
+    LisaWorNoScale,
+    /// WOR sampling + scaling (the paper's LISA-WOR).
+    LisaWor,
+}
+
+impl LisaVariant {
+    pub fn uses_wor(&self) -> bool {
+        matches!(self, LisaVariant::LisaWorNoScale | LisaVariant::LisaWor)
+    }
+
+    pub fn uses_scale(&self) -> bool {
+        matches!(self, LisaVariant::LisaScale | LisaVariant::LisaWor)
+    }
+}
+
+/// The active set for one sampling period.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ActiveSet {
+    /// Names of the unfrozen middle layers.
+    pub layers: Vec<String>,
+    /// Gradient scale to apply to those layers (1.0 when no scaling).
+    pub scale: f32,
+    /// True if this period began a fresh WOR pool (cycle boundary).
+    pub new_cycle: bool,
+}
+
+/// Stateful scheduler; call [`LisaScheduler::next_period`] every K steps.
+#[derive(Clone, Debug)]
+pub struct LisaScheduler {
+    variant: LisaVariant,
+    middle: Vec<String>,
+    gamma: usize,
+    /// Algorithm 2's UNSELECTED_LAYERS pool (indices into `middle`).
+    pool: Vec<usize>,
+    /// Completed full traversals of the pool.
+    pub cycles: usize,
+}
+
+impl LisaScheduler {
+    pub fn new(variant: LisaVariant, middle_layers: Vec<String>,
+               gamma: usize) -> Self {
+        assert!(gamma >= 1, "γ must be >= 1");
+        assert!(!middle_layers.is_empty(), "no middle layers");
+        let gamma = gamma.min(middle_layers.len());
+        let pool = (0..middle_layers.len()).collect();
+        Self { variant, middle: middle_layers, gamma, pool, cycles: 0 }
+    }
+
+    pub fn n_middle(&self) -> usize {
+        self.middle.len()
+    }
+
+    /// The `N_L/γ` rescale factor used by the scaling variants.
+    pub fn scale_factor(&self) -> f32 {
+        self.middle.len() as f32 / self.gamma as f32
+    }
+
+    /// Draw the next period's active set (Algorithm 2 lines 4–9).
+    pub fn next_period(&mut self, rng: &mut Rng) -> ActiveSet {
+        let scale = if self.variant.uses_scale() {
+            self.scale_factor()
+        } else {
+            1.0
+        };
+        if self.variant.uses_wor() {
+            let mut new_cycle = false;
+            // Line 4–6: reset the pool if it cannot supply γ layers.
+            if self.pool.len() < self.gamma {
+                if self.pool.len() < self.middle.len() {
+                    self.cycles += 1;
+                    new_cycle = true;
+                }
+                self.pool = (0..self.middle.len()).collect();
+            }
+            // Line 7–8: draw γ WITHOUT replacement from the pool.
+            let mut chosen = Vec::with_capacity(self.gamma);
+            for _ in 0..self.gamma {
+                let k = rng.index(self.pool.len());
+                chosen.push(self.pool.swap_remove(k));
+            }
+            chosen.sort_unstable();
+            ActiveSet {
+                layers: chosen.iter()
+                    .map(|&i| self.middle[i].clone()).collect(),
+                scale,
+                new_cycle,
+            }
+        } else {
+            // Original LISA: fresh i.i.d. γ-subset each period.
+            let mut chosen = rng.choose_k(self.middle.len(), self.gamma);
+            chosen.sort_unstable();
+            ActiveSet {
+                layers: chosen.iter()
+                    .map(|&i| self.middle[i].clone()).collect(),
+                scale,
+                new_cycle: false,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    fn layers(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("block_{i}")).collect()
+    }
+
+    #[test]
+    fn wor_covers_all_layers_per_cycle() {
+        let mut rng = Rng::seed_from_u64(1);
+        let mut sched =
+            LisaScheduler::new(LisaVariant::LisaWor, layers(12), 3);
+        for _cycle in 0..5 {
+            let mut seen = HashSet::new();
+            for _ in 0..4 {
+                // 12/3 = 4 periods per cycle
+                let act = sched.next_period(&mut rng);
+                assert_eq!(act.layers.len(), 3);
+                for l in &act.layers {
+                    assert!(seen.insert(l.clone()),
+                            "layer {l} repeated within cycle");
+                }
+            }
+            assert_eq!(seen.len(), 12);
+        }
+    }
+
+    #[test]
+    fn wor_scale_is_nl_over_gamma() {
+        let mut rng = Rng::seed_from_u64(2);
+        let mut sched =
+            LisaScheduler::new(LisaVariant::LisaWor, layers(12), 3);
+        let act = sched.next_period(&mut rng);
+        assert!((act.scale - 4.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn no_scale_variants_scale_one() {
+        let mut rng = Rng::seed_from_u64(3);
+        for v in [LisaVariant::Lisa, LisaVariant::LisaWorNoScale] {
+            let mut sched = LisaScheduler::new(v, layers(8), 2);
+            let act = sched.next_period(&mut rng);
+            assert_eq!(act.scale, 1.0);
+        }
+    }
+
+    #[test]
+    fn iid_lisa_can_repeat_layers_across_periods() {
+        // Statistical: over many periods, i.i.d. sampling must produce at
+        // least one immediate repeat that WOR provably cannot (γ=N_L/2).
+        let mut rng = Rng::seed_from_u64(4);
+        let mut sched = LisaScheduler::new(LisaVariant::Lisa, layers(4), 2);
+        let mut repeat = false;
+        let mut prev: HashSet<String> = HashSet::new();
+        for _ in 0..50 {
+            let act = sched.next_period(&mut rng);
+            let cur: HashSet<String> = act.layers.iter().cloned().collect();
+            if !prev.is_disjoint(&cur) {
+                repeat = true;
+            }
+            prev = cur;
+        }
+        assert!(repeat, "i.i.d. LISA never repeated in 50 periods?");
+    }
+
+    #[test]
+    fn wor_never_repeats_within_cycle_even_with_remainder() {
+        // N_L = 5, γ = 2: periods get {2,2,1}-sized fresh draws; pool
+        // resets mid-stream. Every cycle still covers all 5 exactly once.
+        let mut rng = Rng::seed_from_u64(5);
+        let mut sched =
+            LisaScheduler::new(LisaVariant::LisaWor, layers(5), 2);
+        let mut seen: HashSet<String> = HashSet::new();
+        let mut count = 0usize;
+        // run until the second cycle starts
+        loop {
+            let act = sched.next_period(&mut rng);
+            if act.new_cycle {
+                break;
+            }
+            for l in &act.layers {
+                assert!(seen.insert(l.clone()));
+                count += 1;
+            }
+        }
+        // first cycle covered 4 (2+2); the 5th layer rolls into the
+        // period that triggered the reset
+        assert!(count == 4, "covered {count}");
+    }
+
+    #[test]
+    fn gamma_clamped_to_pool() {
+        let mut rng = Rng::seed_from_u64(6);
+        let mut sched =
+            LisaScheduler::new(LisaVariant::LisaWor, layers(3), 10);
+        let act = sched.next_period(&mut rng);
+        assert_eq!(act.layers.len(), 3);
+    }
+
+    #[test]
+    fn cycles_counted() {
+        let mut rng = Rng::seed_from_u64(7);
+        let mut sched =
+            LisaScheduler::new(LisaVariant::LisaWor, layers(6), 2);
+        for _ in 0..9 {
+            sched.next_period(&mut rng);
+        }
+        // 3 periods per cycle → after 9 periods, 2 completed resets
+        assert_eq!(sched.cycles, 2);
+    }
+
+    #[test]
+    fn variant_flags() {
+        assert!(LisaVariant::LisaWor.uses_wor()
+            && LisaVariant::LisaWor.uses_scale());
+        assert!(!LisaVariant::Lisa.uses_wor()
+            && !LisaVariant::Lisa.uses_scale());
+        assert!(LisaVariant::LisaScale.uses_scale()
+            && !LisaVariant::LisaScale.uses_wor());
+        assert!(LisaVariant::LisaWorNoScale.uses_wor()
+            && !LisaVariant::LisaWorNoScale.uses_scale());
+    }
+}

@@ -1,0 +1,355 @@
+//! Masks and mask sets.
+//!
+//! A [`Mask`] is a dense `f32` vector over the flat parameter space whose
+//! non-zero entries both *select* coordinates and carry the OMGD rescale
+//! factor. A [`MaskSet`] is the per-cycle collection `{S⁽ʲ⁾}` required to
+//! satisfy eq. (3): `Σⱼ S⁽ʲ⁾ = M·1_d` over the *maskable* region (the
+//! paper's LISA instantiation keeps embed/head always active with scale 1
+//! and splits only middle layers — the §5.2 worked example shows exactly
+//! this shape: `S⁽¹⁾ = (1, 4, 0, 0, 0, 1)ᵀ`, ...).
+
+use crate::manifest::Manifest;
+use crate::rng::Rng;
+
+/// Dense coordinate mask with scale values.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mask {
+    pub values: Vec<f32>,
+}
+
+impl Mask {
+    pub fn zeros(n: usize) -> Self {
+        Self { values: vec![0.0; n] }
+    }
+
+    pub fn ones(n: usize) -> Self {
+        Self { values: vec![1.0; n] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    /// Number of active (non-zero) coordinates.
+    pub fn active_count(&self) -> usize {
+        self.values.iter().filter(|&&v| v != 0.0).count()
+    }
+
+    /// Keep ratio = active / total.
+    pub fn keep_ratio(&self) -> f64 {
+        self.active_count() as f64 / self.len().max(1) as f64
+    }
+
+    /// Set a contiguous segment to `scale`.
+    pub fn set_segment(&mut self, offset: usize, len: usize, scale: f32) {
+        for v in &mut self.values[offset..offset + len] {
+            *v = scale;
+        }
+    }
+
+    /// Apply in place to a gradient: `g ← mask ⊙ g`.
+    pub fn apply(&self, grad: &mut [f32]) {
+        assert_eq!(grad.len(), self.values.len());
+        for (g, &m) in grad.iter_mut().zip(&self.values) {
+            *g *= m;
+        }
+    }
+}
+
+/// A cycle's worth of masks satisfying the eq. (3) coverage condition.
+#[derive(Clone, Debug)]
+pub struct MaskSet {
+    pub masks: Vec<Mask>,
+}
+
+impl MaskSet {
+    pub fn m(&self) -> usize {
+        self.masks.len()
+    }
+
+    /// Verify `Σⱼ S⁽ʲ⁾ = c·1` over `0..total` (padding excluded) for a
+    /// *single* scalar c; returns c or None if violated.
+    pub fn coverage_scalar(&self, total: usize) -> Option<f32> {
+        if self.masks.is_empty() || total == 0 {
+            return None;
+        }
+        let mut c = None;
+        for i in 0..total {
+            let s: f32 = self.masks.iter().map(|m| m.values[i]).sum();
+            match c {
+                None => c = Some(s),
+                Some(prev) if (prev - s).abs() > 1e-4 => return None,
+                _ => {}
+            }
+        }
+        c
+    }
+
+    /// Remark 4.11 construction over raw coordinates: `M = ⌈1/r⌉` masks;
+    /// masks 1..M−1 each own `⌊r·d⌋` random coordinates (scale M), the
+    /// last mask owns the remainder. Coordinates in `total..n` (padding)
+    /// stay zero in every mask.
+    pub fn coordinate_partition(
+        n: usize,
+        total: usize,
+        keep_ratio: f64,
+        rng: &mut Rng,
+    ) -> MaskSet {
+        assert!(total <= n);
+        let m = (1.0 / keep_ratio).ceil().max(1.0) as usize;
+        let chunk = ((total as f64) * keep_ratio).floor() as usize;
+        let perm = rng.permutation(total);
+        let scale = m as f32;
+        let mut masks = vec![Mask::zeros(n); m];
+        for (rank, &coord) in perm.iter().enumerate() {
+            let j = (rank / chunk.max(1)).min(m - 1);
+            masks[j].values[coord] = scale;
+        }
+        MaskSet { masks }
+    }
+
+    /// Tensorwise partition (§5.2 SGDM-wor): randomly split the
+    /// manifest's tensors into `M` groups of approximately equal
+    /// parameter count; mask `j` activates group `j` with scale `M`.
+    pub fn tensor_partition(
+        man: &Manifest,
+        keep_ratio: f64,
+        rng: &mut Rng,
+    ) -> MaskSet {
+        let m = (1.0 / keep_ratio).ceil().max(1.0) as usize;
+        let n = man.padded_len;
+        let mut order: Vec<usize> = (0..man.params.len()).collect();
+        rng.shuffle(&mut order);
+        // Greedy balance: assign each tensor (in random order) to the
+        // currently lightest group.
+        let mut group_load = vec![0usize; m];
+        let mut masks = vec![Mask::zeros(n); m];
+        let scale = m as f32;
+        for &pi in &order {
+            let p = &man.params[pi];
+            let j = (0..m).min_by_key(|&j| group_load[j]).unwrap();
+            group_load[j] += p.len;
+            masks[j].set_segment(p.offset, p.len, scale);
+        }
+        MaskSet { masks }
+    }
+
+    /// I.i.d. tensorwise baseline (§5.2 SGDM-iid): each tensor kept
+    /// independently with probability `keep_ratio`, scale 1 (the naïve
+    /// freeze scheme — no rescale, matching the paper's baseline).
+    pub fn tensor_iid(man: &Manifest, keep_ratio: f64, rng: &mut Rng)
+                      -> Mask {
+        let mut mask = Mask::zeros(man.padded_len);
+        for p in &man.params {
+            if rng.f64() < keep_ratio {
+                mask.set_segment(p.offset, p.len, 1.0);
+            }
+        }
+        mask
+    }
+
+    /// I.i.d. coordinate mask (Remark 4.10): each coordinate kept with
+    /// probability `r`, active entries scaled by `1/r` (unbiased).
+    pub fn coordinate_iid(n: usize, total: usize, r: f64, rng: &mut Rng)
+                          -> Mask {
+        let mut mask = Mask::zeros(n);
+        let scale = (1.0 / r) as f32;
+        for v in &mut mask.values[..total] {
+            if rng.f64() < r {
+                *v = scale;
+            }
+        }
+        mask
+    }
+
+    /// Layerwise mask (LISA family): embed/head/final always active at
+    /// scale 1; the given middle layers active at `mid_scale`; everything
+    /// else frozen.
+    pub fn layerwise(
+        man: &Manifest,
+        active_middle: &[String],
+        mid_scale: f32,
+    ) -> Mask {
+        let mut mask = Mask::zeros(man.padded_len);
+        for p in &man.params {
+            let scale = if p.layer == "embed"
+                || p.layer == "head"
+                || p.layer == "final"
+            {
+                1.0
+            } else if active_middle.iter().any(|l| *l == p.layer) {
+                mid_scale
+            } else {
+                continue;
+            };
+            mask.set_segment(p.offset, p.len, scale);
+        }
+        mask
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+    use std::path::Path;
+
+    fn toy_manifest() -> Manifest {
+        let j = Json::parse(
+            r#"{
+ "name": "toy", "kind": "mlp", "block": 4,
+ "total_len": 20, "padded_len": 24,
+ "params": [
+  {"name": "in_w", "shape": [4], "layer": "embed", "offset": 0, "len": 4},
+  {"name": "block_0.w", "shape": [4], "layer": "block_0", "offset": 4, "len": 4},
+  {"name": "block_1.w", "shape": [4], "layer": "block_1", "offset": 8, "len": 4},
+  {"name": "block_2.w", "shape": [4], "layer": "block_2", "offset": 12, "len": 4},
+  {"name": "out_w", "shape": [4], "layer": "head", "offset": 16, "len": 4}
+ ],
+ "data": {"batch": 2},
+ "artifacts": {"train": "t", "eval": "e", "init": "i",
+               "update": {"adamw": "a", "sgdm": "s"}}
+}"#,
+        )
+        .unwrap();
+        Manifest::from_json(&j, Path::new("/tmp")).unwrap()
+    }
+
+    #[test]
+    fn coordinate_partition_satisfies_eq3() {
+        let mut rng = Rng::seed_from_u64(1);
+        for r in [0.5, 0.25, 0.34] {
+            let set = MaskSet::coordinate_partition(128, 100, r, &mut rng);
+            let m = (1.0f64 / r).ceil() as usize;
+            assert_eq!(set.m(), m);
+            let c = set.coverage_scalar(100).expect("coverage violated");
+            assert!((c - m as f32).abs() < 1e-5, "c={c} m={m}");
+            // padding untouched
+            for mask in &set.masks {
+                assert!(mask.values[100..].iter().all(|&v| v == 0.0));
+            }
+        }
+    }
+
+    #[test]
+    fn coordinate_partition_disjoint() {
+        let mut rng = Rng::seed_from_u64(2);
+        let set = MaskSet::coordinate_partition(64, 64, 0.25, &mut rng);
+        for i in 0..64 {
+            let active =
+                set.masks.iter().filter(|m| m.values[i] != 0.0).count();
+            assert_eq!(active, 1, "coord {i} owned by {active} masks");
+        }
+    }
+
+    #[test]
+    fn coordinate_partition_keep_ratio() {
+        let mut rng = Rng::seed_from_u64(3);
+        let set = MaskSet::coordinate_partition(1024, 1000, 0.5, &mut rng);
+        // first M-1 masks hold exactly floor(r d); last holds remainder
+        assert_eq!(set.masks[0].active_count(), 500);
+        assert_eq!(set.masks[1].active_count(), 500);
+    }
+
+    #[test]
+    fn tensor_partition_satisfies_eq3() {
+        let man = toy_manifest();
+        let mut rng = Rng::seed_from_u64(4);
+        let set = MaskSet::tensor_partition(&man, 0.5, &mut rng);
+        assert_eq!(set.m(), 2);
+        let c = set.coverage_scalar(man.total_len).unwrap();
+        assert!((c - 2.0).abs() < 1e-6);
+        // groups are tensor-aligned: a tensor is fully in or fully out
+        for mask in &set.masks {
+            for p in &man.params {
+                let seg = &mask.values[p.offset..p.offset + p.len];
+                let first = seg[0];
+                assert!(seg.iter().all(|&v| v == first), "{} split", p.name);
+            }
+        }
+    }
+
+    #[test]
+    fn tensor_partition_balances_load() {
+        let man = toy_manifest();
+        let mut rng = Rng::seed_from_u64(5);
+        let set = MaskSet::tensor_partition(&man, 0.5, &mut rng);
+        let loads: Vec<usize> =
+            set.masks.iter().map(|m| m.active_count()).collect();
+        // 5 tensors of 4 params in 2 groups → 12 vs 8
+        assert_eq!(loads.iter().sum::<usize>(), 20);
+        assert!(loads.iter().all(|&l| l >= 8), "{loads:?}");
+    }
+
+    #[test]
+    fn tensor_iid_keeps_whole_tensors() {
+        let man = toy_manifest();
+        let mut rng = Rng::seed_from_u64(6);
+        let mask = MaskSet::tensor_iid(&man, 0.5, &mut rng);
+        for p in &man.params {
+            let seg = &mask.values[p.offset..p.offset + p.len];
+            assert!(seg.iter().all(|&v| v == seg[0]));
+        }
+    }
+
+    #[test]
+    fn coordinate_iid_scale_unbiased() {
+        let mut rng = Rng::seed_from_u64(7);
+        let mask = MaskSet::coordinate_iid(4096, 4000, 0.25, &mut rng);
+        let active = mask.values[..4000].iter()
+            .filter(|&&v| v != 0.0).count();
+        // ~1000 expected
+        assert!((active as f64 - 1000.0).abs() < 150.0, "active {active}");
+        assert!(mask.values.iter().all(|&v| v == 0.0 || v == 4.0));
+        assert!(mask.values[4000..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn layerwise_mask_shape() {
+        let man = toy_manifest();
+        let mask = MaskSet::layerwise(&man, &["block_1".into()], 3.0);
+        // embed active at 1
+        assert!(mask.values[0..4].iter().all(|&v| v == 1.0));
+        // block_0 frozen
+        assert!(mask.values[4..8].iter().all(|&v| v == 0.0));
+        // block_1 active at 3 (= N_L/γ with N_L=3, γ=1)
+        assert!(mask.values[8..12].iter().all(|&v| v == 3.0));
+        // block_2 frozen
+        assert!(mask.values[12..16].iter().all(|&v| v == 0.0));
+        // head active at 1
+        assert!(mask.values[16..20].iter().all(|&v| v == 1.0));
+        // padding zero
+        assert!(mask.values[20..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn lisa_wor_cycle_satisfies_eq3_on_middle_layers() {
+        // Across a full WOR traversal (γ=1 over 3 middle layers) with
+        // scale N_L/γ = 3, middle coordinates sum to 3 = M while
+        // embed/head sum to 3·1 — i.e. Σ S⁽ʲ⁾ = M·1 exactly as in the
+        // §5.2 worked example.
+        let man = toy_manifest();
+        let masks: Vec<Mask> = ["block_0", "block_1", "block_2"]
+            .iter()
+            .map(|l| MaskSet::layerwise(&man, &[l.to_string()], 3.0))
+            .collect();
+        let set = MaskSet { masks };
+        let c = set.coverage_scalar(man.total_len).unwrap();
+        assert!((c - 3.0).abs() < 1e-6, "c={c}");
+    }
+
+    #[test]
+    fn apply_masks_gradient() {
+        let mut mask = Mask::zeros(4);
+        mask.set_segment(1, 2, 2.0);
+        let mut g = vec![1.0f32, 1.0, 1.0, 1.0];
+        mask.apply(&mut g);
+        assert_eq!(g, vec![0.0, 2.0, 2.0, 0.0]);
+        assert_eq!(mask.active_count(), 2);
+        assert!((mask.keep_ratio() - 0.5).abs() < 1e-12);
+    }
+}

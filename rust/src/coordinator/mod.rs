@@ -1,0 +1,22 @@
+//! The OMGD coordinator — the paper's algorithmic contribution at L3.
+//!
+//! * [`mask`] — mask representations and mask-*set* generation satisfying
+//!   eq. (3): `Σⱼ S⁽ʲ⁾ = M·1_d` (coordinate, tensorwise and layerwise
+//!   constructions, plus the i.i.d. baselines they are compared against).
+//! * [`cycle`] — Algorithm 1's traversal engine: per cycle, a fresh
+//!   random permutation of `[M] × [N]` visited exactly once, plus the
+//!   epochwise variant of Figure 1.
+//! * [`lisa`] — Algorithm 2: LISA (i.i.d. layer sampling) and LISA-WOR
+//!   (without-replacement pool + `N_L/γ` gradient scaling) and both
+//!   ablations.
+//! * [`sampler`] — data-order strategies (random reshuffling vs i.i.d.).
+
+pub mod cycle;
+pub mod lisa;
+pub mod mask;
+pub mod sampler;
+
+pub use cycle::{EpochwiseCycle, OmgdCycle};
+pub use lisa::{LisaScheduler, LisaVariant};
+pub use mask::{Mask, MaskSet};
+pub use sampler::DataSampler;

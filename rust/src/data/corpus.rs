@@ -1,0 +1,221 @@
+//! Synthetic text corpus for LM pre-training (OpenWebText substitute).
+//!
+//! Token stream from a sparse first-order Markov chain with Zipfian
+//! marginals: each token's successor distribution concentrates on a small
+//! random set, giving the corpus learnable bigram structure (so the LM
+//! loss curve has signal well below the unigram entropy) while the
+//! Zipf marginal mimics natural-language token statistics.
+
+use crate::rng::Rng;
+
+#[derive(Clone, Copy, Debug)]
+pub struct CorpusConfig {
+    pub vocab: usize,
+    /// Total tokens generated.
+    pub tokens: usize,
+    /// Successors per token in the Markov chain.
+    pub branching: usize,
+    /// Zipf exponent for the stationary-ish marginal.
+    pub zipf_s: f64,
+    pub seed: u64,
+}
+
+impl Default for CorpusConfig {
+    fn default() -> Self {
+        Self { vocab: 512, tokens: 1 << 18, branching: 8, zipf_s: 1.1,
+               seed: 0 }
+    }
+}
+
+/// Generated corpus + windowed (x, y) sample view for next-token training.
+#[derive(Clone, Debug)]
+pub struct Corpus {
+    pub cfg: CorpusConfig,
+    pub tokens: Vec<u32>,
+    /// Window length (= model seq len); windows are the ERM samples z⁽ⁱ⁾.
+    pub seq: usize,
+}
+
+impl Corpus {
+    pub fn generate(cfg: CorpusConfig, seq: usize) -> Self {
+        assert!(cfg.vocab >= 2 && cfg.branching >= 1);
+        let mut rng = Rng::seed_from_u64(cfg.seed);
+
+        // Zipfian weights over candidate successors.
+        let zipf: Vec<f64> = (1..=cfg.vocab)
+            .map(|k| 1.0 / (k as f64).powf(cfg.zipf_s))
+            .collect();
+        let zsum: f64 = zipf.iter().sum();
+
+        // Per-token successor table: `branching` successors sampled from
+        // the Zipf marginal, with uniform mixing weights.
+        let successors: Vec<Vec<u32>> = (0..cfg.vocab)
+            .map(|_| {
+                (0..cfg.branching)
+                    .map(|_| sample_zipf(&zipf, zsum, &mut rng) as u32)
+                    .collect()
+            })
+            .collect();
+
+        let mut tokens = Vec::with_capacity(cfg.tokens);
+        let mut cur = rng.index(cfg.vocab) as u32;
+        for _ in 0..cfg.tokens {
+            tokens.push(cur);
+            let succ = &successors[cur as usize];
+            // 10% chance of a "topic jump" to keep the chain mixing.
+            cur = if rng.f64() < 0.1 {
+                sample_zipf(&zipf, zsum, &mut rng) as u32
+            } else {
+                succ[rng.index(succ.len())]
+            };
+        }
+        Self { cfg, tokens, seq }
+    }
+
+    /// Number of ERM samples: non-overlapping windows of `seq + 1` tokens
+    /// (x = first seq, y = shifted by one).
+    pub fn n_samples(&self) -> usize {
+        self.tokens.len() / (self.seq + 1)
+    }
+
+    /// Materialize window `i` as (x, y) i32 pairs of length `seq`.
+    pub fn window(&self, i: usize) -> (Vec<i32>, Vec<i32>) {
+        let start = i * (self.seq + 1);
+        let w = &self.tokens[start..start + self.seq + 1];
+        let x = w[..self.seq].iter().map(|&t| t as i32).collect();
+        let y = w[1..].iter().map(|&t| t as i32).collect();
+        (x, y)
+    }
+
+    /// Pack a batch of window indices into contiguous `[B, S]` buffers.
+    pub fn pack(&self, idx: &[usize], batch: usize)
+                -> (Vec<i32>, Vec<i32>) {
+        let mut xs = Vec::with_capacity(batch * self.seq);
+        let mut ys = Vec::with_capacity(batch * self.seq);
+        for b in 0..batch {
+            let (x, y) = self.window(idx[b % idx.len()]);
+            xs.extend_from_slice(&x);
+            ys.extend_from_slice(&y);
+        }
+        (xs, ys)
+    }
+
+    /// Empirical unigram entropy in nats — the loss floor a
+    /// context-ignoring model can reach; the LM should go below it.
+    pub fn unigram_entropy(&self) -> f64 {
+        let mut counts = vec![0usize; self.cfg.vocab];
+        for &t in &self.tokens {
+            counts[t as usize] += 1;
+        }
+        let n = self.tokens.len() as f64;
+        counts
+            .iter()
+            .filter(|&&c| c > 0)
+            .map(|&c| {
+                let p = c as f64 / n;
+                -p * p.ln()
+            })
+            .sum()
+    }
+
+    /// Empirical bigram conditional entropy in nats — the floor for a
+    /// one-step-context model; a healthy chain has bigram ≪ unigram.
+    pub fn bigram_entropy(&self) -> f64 {
+        let v = self.cfg.vocab;
+        let mut pair = vec![0u32; v * v];
+        let mut marg = vec![0u32; v];
+        for w in self.tokens.windows(2) {
+            pair[w[0] as usize * v + w[1] as usize] += 1;
+            marg[w[0] as usize] += 1;
+        }
+        let n = (self.tokens.len() - 1) as f64;
+        let mut h = 0.0;
+        for a in 0..v {
+            if marg[a] == 0 {
+                continue;
+            }
+            for b in 0..v {
+                let c = pair[a * v + b];
+                if c > 0 {
+                    let p_ab = c as f64 / n;
+                    let p_cond = c as f64 / marg[a] as f64;
+                    h -= p_ab * p_cond.ln();
+                }
+            }
+        }
+        h
+    }
+}
+
+fn sample_zipf(weights: &[f64], sum: f64, rng: &mut Rng) -> usize {
+    let mut u = rng.f64() * sum;
+    for (i, &w) in weights.iter().enumerate() {
+        u -= w;
+        if u <= 0.0 {
+            return i;
+        }
+    }
+    weights.len() - 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> Corpus {
+        Corpus::generate(
+            CorpusConfig { vocab: 64, tokens: 1 << 14, branching: 4,
+                           zipf_s: 1.1, seed: 3 },
+            16,
+        )
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = small();
+        let b = small();
+        assert_eq!(a.tokens, b.tokens);
+    }
+
+    #[test]
+    fn tokens_in_vocab() {
+        let c = small();
+        assert!(c.tokens.iter().all(|&t| (t as usize) < c.cfg.vocab));
+        assert_eq!(c.tokens.len(), 1 << 14);
+    }
+
+    #[test]
+    fn windows_shift_by_one() {
+        let c = small();
+        let (x, y) = c.window(3);
+        assert_eq!(x.len(), 16);
+        assert_eq!(y.len(), 16);
+        assert_eq!(&x[1..], &y[..15]);
+    }
+
+    #[test]
+    fn pack_batches() {
+        let c = small();
+        let (x, y) = c.pack(&[0, 1, 2, 3], 4);
+        assert_eq!(x.len(), 4 * 16);
+        assert_eq!(y.len(), 4 * 16);
+    }
+
+    #[test]
+    fn bigram_structure_exists() {
+        let c = small();
+        let uni = c.unigram_entropy();
+        let bi = c.bigram_entropy();
+        assert!(uni > 0.0);
+        // The Markov chain must give a next-token model real signal.
+        assert!(bi < uni - 0.3, "bigram {bi} vs unigram {uni}");
+    }
+
+    #[test]
+    fn n_samples_counts_windows() {
+        let c = small();
+        assert_eq!(c.n_samples(), (1 << 14) / 17);
+        // last window must be in range
+        let _ = c.window(c.n_samples() - 1);
+    }
+}

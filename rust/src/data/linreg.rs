@@ -1,0 +1,148 @@
+//! §5.1 illustrative-example dataset (Appendix B.1).
+//!
+//! `n` samples of dimension `d`: features `x⁽ⁱ⁾ ~ N(0, I_d)`, responses
+//! `y⁽ⁱ⁾ | x⁽ⁱ⁾ ~ N((x⁽ⁱ⁾)ᵀ w_gen, 1)` with `w_gen ~ Uniform([0,1]^d)`.
+//! Exposes the quadratic form `F(θ) = ½θᵀAθ − bᵀθ + c`, the optimum
+//! `θ* = A⁻¹b`, and A's extreme eigenvalues (used to choose `c₀` so that
+//! `c₀λ_min > 2`, the Theorem 5.3 regime).
+
+use crate::linalg::{dot, Mat};
+use crate::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct LinRegData {
+    pub d: usize,
+    pub n: usize,
+    pub xs: Vec<Vec<f64>>,
+    pub ys: Vec<f64>,
+    /// A = (2/n) Σ x xᵀ
+    pub a: Mat,
+    /// b = (2/n) Σ x y
+    pub b: Vec<f64>,
+    /// θ* = A⁻¹ b
+    pub theta_star: Vec<f64>,
+    pub lambda_min: f64,
+    pub lambda_max: f64,
+}
+
+impl LinRegData {
+    pub fn generate(d: usize, n: usize, seed: u64) -> Self {
+        let mut rng = Rng::seed_from_u64(seed);
+        let w_gen: Vec<f64> = (0..d).map(|_| rng.f64()).collect();
+        let mut xs = Vec::with_capacity(n);
+        let mut ys = Vec::with_capacity(n);
+        for _ in 0..n {
+            let x: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+            let y = dot(&x, &w_gen) + rng.normal();
+            xs.push(x);
+            ys.push(y);
+        }
+        let mut a = Mat::zeros(d, d);
+        let mut b = vec![0.0; d];
+        let scale = 2.0 / n as f64;
+        for (x, &y) in xs.iter().zip(&ys) {
+            a.add_outer(scale, x, x);
+            for (bi, &xi) in b.iter_mut().zip(x) {
+                *bi += scale * xi * y;
+            }
+        }
+        // θ* via eigen-decomposition (A is SPD for n >> d).
+        let (vals, vecs) = a.sym_eig();
+        let vt_b = vecs.transpose().matvec(&b);
+        let scaled: Vec<f64> =
+            vt_b.iter().zip(&vals).map(|(x, &l)| x / l).collect();
+        let theta_star = vecs.matvec(&scaled);
+        let lambda_min = *vals.last().unwrap();
+        let lambda_max = vals[0];
+        Self { d, n, xs, ys, a, b, theta_star, lambda_min, lambda_max }
+    }
+
+    /// Per-sample gradient `∇f(θ; xᵢ, yᵢ) = 2 xᵢ (xᵢᵀθ − yᵢ)`.
+    pub fn grad_sample(&self, theta: &[f64], i: usize) -> Vec<f64> {
+        let x = &self.xs[i];
+        let r = 2.0 * (dot(x, theta) - self.ys[i]);
+        x.iter().map(|&xi| r * xi).collect()
+    }
+
+    /// Full gradient `∇F(θ) = Aθ − b`.
+    pub fn grad_full(&self, theta: &[f64]) -> Vec<f64> {
+        let at = self.a.matvec(theta);
+        at.iter().zip(&self.b).map(|(a, b)| a - b).collect()
+    }
+
+    /// `F(θ) − F(θ*)` (suboptimality; always ≥ 0 up to float error).
+    pub fn subopt(&self, theta: &[f64]) -> f64 {
+        let diff: Vec<f64> = theta
+            .iter()
+            .zip(&self.theta_star)
+            .map(|(t, s)| t - s)
+            .collect();
+        0.5 * dot(&diff, &self.a.matvec(&diff))
+    }
+
+    /// ‖θ − θ*‖².
+    pub fn err_sq(&self, theta: &[f64]) -> f64 {
+        theta
+            .iter()
+            .zip(&self.theta_star)
+            .map(|(t, s)| (t - s) * (t - s))
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::norm;
+
+    #[test]
+    fn generator_is_deterministic() {
+        let a = LinRegData::generate(5, 50, 42);
+        let b = LinRegData::generate(5, 50, 42);
+        assert_eq!(a.ys, b.ys);
+        assert_eq!(a.theta_star, b.theta_star);
+    }
+
+    #[test]
+    fn full_gradient_vanishes_at_optimum() {
+        let d = LinRegData::generate(8, 500, 1);
+        let g = d.grad_full(&d.theta_star);
+        assert!(norm(&g) < 1e-8, "grad norm {}", norm(&g));
+    }
+
+    #[test]
+    fn sample_gradients_average_to_full() {
+        let d = LinRegData::generate(6, 200, 2);
+        let theta: Vec<f64> = (0..6).map(|i| 0.1 * i as f64).collect();
+        let mut avg = vec![0.0; 6];
+        for i in 0..d.n {
+            let g = d.grad_sample(&theta, i);
+            for (a, &gi) in avg.iter_mut().zip(&g) {
+                *a += gi / d.n as f64;
+            }
+        }
+        let full = d.grad_full(&theta);
+        for (a, f) in avg.iter().zip(&full) {
+            assert!((a - f).abs() < 1e-10, "{a} vs {f}");
+        }
+    }
+
+    #[test]
+    fn spd_spectrum() {
+        let d = LinRegData::generate(10, 1000, 3);
+        assert!(d.lambda_min > 0.0);
+        assert!(d.lambda_max >= d.lambda_min);
+        // For n=1000 standard normal features, A ≈ 2I.
+        assert!((d.lambda_min - 2.0).abs() < 1.0);
+        assert!((d.lambda_max - 2.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn suboptimality_nonnegative_and_zero_at_star() {
+        let d = LinRegData::generate(5, 100, 4);
+        assert!(d.subopt(&d.theta_star).abs() < 1e-10);
+        let theta = vec![0.0; 5];
+        assert!(d.subopt(&theta) >= 0.0);
+        assert!(d.err_sq(&d.theta_star) < 1e-18);
+    }
+}

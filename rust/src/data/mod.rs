@@ -1,0 +1,16 @@
+//! Synthetic dataset generators.
+//!
+//! The paper's experiments run on CIFAR/ImageNet/GLUE/OpenWebText; on this
+//! testbed we substitute parameterized synthetic equivalents (see
+//! DESIGN.md §Substitutions). The theory under test only requires the ERM
+//! structure `F(θ) = 1/N Σᵢ f(θ; zᵢ)` over a *fixed finite* sample set —
+//! these generators produce exactly that, with enough task diversity to
+//! exercise the method roster the way GLUE does.
+
+pub mod corpus;
+pub mod linreg;
+pub mod tasks;
+
+pub use corpus::{Corpus, CorpusConfig};
+pub use linreg::LinRegData;
+pub use tasks::{ClassTask, TaskSpec, GLUE_LIKE_TASKS};

@@ -1,0 +1,236 @@
+//! Experiment drivers shared by `benches/` and `examples/`.
+//!
+//! Each paper table/figure maps to one driver here (see DESIGN.md's
+//! experiment index); the bench binaries are thin wrappers that call
+//! these and print/persist the rows. Keeping the logic in the library
+//! means integration tests can assert on the *shape* of each result
+//! (who wins, slopes, reduction factors) without duplicating setup.
+
+use crate::config::{Method, OptFamily, RunConfig, Schedule};
+use crate::data::{ClassTask, Corpus, CorpusConfig, TaskSpec};
+use crate::runtime::bundle::UpdateKind;
+use crate::runtime::{artifacts_dir, ModelBundle, Runtime};
+use crate::train::{train_classifier, train_lm, TrainOutcome};
+use anyhow::Result;
+use std::path::Path;
+
+/// Scale knob for bench runtimes: `OMGD_BENCH_SCALE` ∈ (0, 1] shrinks
+/// epochs/steps for smoke runs (default 1.0 = paper-shaped runs).
+pub fn bench_scale() -> f64 {
+    std::env::var("OMGD_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .filter(|&x| x > 0.0 && x <= 1.0)
+        .unwrap_or(1.0)
+}
+
+/// Scaled count, at least `min`.
+pub fn scaled(base: usize, min: usize) -> usize {
+    ((base as f64 * bench_scale()).round() as usize).max(min)
+}
+
+/// Common fine-tuning configuration for the Tables 3/5/6 experiments.
+#[derive(Clone, Debug)]
+pub struct FinetuneSetup {
+    pub model: String,
+    pub epochs: usize,
+    pub lr: f64,
+    pub gamma: usize,
+    pub period: usize,
+    pub keep_ratio: f64,
+    pub rank: usize,
+    pub seed: u64,
+}
+
+impl Default for FinetuneSetup {
+    fn default() -> Self {
+        Self {
+            model: "mlp-glue".into(),
+            epochs: 12,
+            lr: 2e-3,
+            gamma: 4,
+            period: 1,
+            keep_ratio: 0.5,
+            rank: 8,
+            seed: 0,
+        }
+    }
+}
+
+/// Load a bundle for a config (AdamW update artifact).
+pub fn load_bundle(rt: &Runtime, model: &str) -> Result<ModelBundle> {
+    let dir = artifacts_dir(None);
+    ModelBundle::load(rt, &dir, model, UpdateKind::AdamW)
+}
+
+/// Load a bundle with the SGDM update artifact (Table 4).
+pub fn load_bundle_sgdm(rt: &Runtime, model: &str) -> Result<ModelBundle> {
+    let dir = artifacts_dir(None);
+    ModelBundle::load(rt, &dir, model, UpdateKind::Sgdm)
+}
+
+/// Fine-tune one (method, task) cell.
+pub fn finetune_cell(
+    bundle: &ModelBundle,
+    task: &ClassTask,
+    method: Method,
+    setup: &FinetuneSetup,
+    opt_family: OptFamily,
+) -> Result<TrainOutcome> {
+    let steps_per_epoch =
+        task.n_train().div_ceil(bundle.man.data.batch);
+    let mut cfg = RunConfig::default();
+    cfg.model = setup.model.clone();
+    cfg.method = method;
+    cfg.opt.family = opt_family;
+    cfg.opt.lr = setup.lr;
+    cfg.mask.gamma = setup.gamma;
+    cfg.mask.period = setup.period;
+    cfg.mask.keep_ratio = setup.keep_ratio;
+    cfg.mask.rank = setup.rank;
+    cfg.steps = setup.epochs * steps_per_epoch;
+    cfg.eval_every = 0;
+    cfg.seed = setup.seed;
+    train_classifier(bundle, &cfg, task)
+}
+
+/// Build the task for a spec sized to the bundle.
+pub fn task_for(bundle: &ModelBundle, spec: &TaskSpec) -> ClassTask {
+    ClassTask::from_spec(spec, bundle.man.data.d_in,
+                         bundle.man.data.n_class)
+}
+
+/// Table 3/5-style method roster.
+pub fn adamw_method_roster() -> Vec<Method> {
+    vec![
+        Method::Full,
+        Method::Golore,
+        Method::Sift,
+        Method::Lisa,
+        Method::LisaScale,
+        Method::LisaWorNoScale,
+        Method::LisaWor,
+    ]
+}
+
+/// Table 4 roster (SGDM tensorwise masks).
+pub fn sgdm_method_roster() -> Vec<Method> {
+    vec![Method::Full, Method::IidMask, Method::WorMask]
+}
+
+/// Pre-training setup for Fig. 5 (LISA vs LISA-WOR on the LM).
+pub struct PretrainSetup {
+    pub model: String,
+    pub steps: usize,
+    pub lr: f64,
+    pub gamma: usize,
+    pub period: usize,
+    pub seed: u64,
+    pub eval_every: usize,
+}
+
+impl Default for PretrainSetup {
+    fn default() -> Self {
+        Self {
+            model: "gpt-tiny".into(),
+            steps: 300,
+            lr: 6e-4,
+            gamma: 2,
+            period: 20,
+            seed: 0,
+            eval_every: 25,
+        }
+    }
+}
+
+/// Run one pre-training leg; the corpus is derived from the bundle
+/// geometry so all methods share data.
+pub fn pretrain_cell(
+    bundle: &ModelBundle,
+    method: Method,
+    setup: &PretrainSetup,
+) -> Result<TrainOutcome> {
+    let corpus = pretrain_corpus(bundle, setup.steps);
+    let mut cfg = RunConfig::default();
+    cfg.model = setup.model.clone();
+    cfg.method = method;
+    cfg.opt.lr = setup.lr;
+    cfg.mask.gamma = setup.gamma;
+    cfg.mask.period = setup.period;
+    cfg.steps = setup.steps;
+    cfg.eval_every = setup.eval_every;
+    cfg.seed = setup.seed;
+    cfg.schedule = Schedule::CosineWarmup {
+        warmup: setup.steps / 10,
+        total: setup.steps,
+        min_lr: setup.lr * 0.1,
+    };
+    train_lm(bundle, &cfg, &corpus)
+}
+
+/// Corpus sized so an experiment sees a few epochs of distinct windows.
+pub fn pretrain_corpus(bundle: &ModelBundle, steps: usize) -> Corpus {
+    let windows = (bundle.man.data.batch * steps / 4).clamp(64, 4096);
+    Corpus::generate(
+        CorpusConfig {
+            vocab: bundle.man.data.vocab,
+            tokens: windows * (bundle.man.data.seq + 1),
+            branching: 8,
+            zipf_s: 1.1,
+            seed: 7,
+        },
+        bundle.man.data.seq,
+    )
+}
+
+/// True if the artifacts for `model` exist (benches skip gracefully
+/// when `make artifacts` hasn't been run for larger configs).
+pub fn artifacts_present(model: &str) -> bool {
+    artifacts_dir(None).join(format!("{model}.json")).exists()
+}
+
+/// Results directory for bench CSV outputs.
+pub fn results_dir() -> std::path::PathBuf {
+    let p = Path::new("results");
+    std::fs::create_dir_all(p).ok();
+    p.to_path_buf()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Method;
+
+    #[test]
+    fn scaled_respects_minimum() {
+        // With no env override the scale is 1.0.
+        assert_eq!(scaled(100, 5), (100.0 * bench_scale()) as usize);
+        assert!(scaled(1, 5) >= 5);
+        assert!(scaled(0, 3) >= 3);
+    }
+
+    #[test]
+    fn rosters_cover_the_paper_tables() {
+        let adamw = adamw_method_roster();
+        // Table 3/5 roster: full + 2 compressors + 4 LISA variants.
+        assert_eq!(adamw.len(), 7);
+        assert!(adamw.contains(&Method::Full));
+        assert!(adamw.contains(&Method::LisaWor));
+        assert!(adamw.contains(&Method::Golore));
+        assert!(adamw.contains(&Method::Sift));
+        // exactly two wor methods (lisa-wor and its no-scale ablation)
+        assert_eq!(adamw.iter().filter(|m| m.is_wor()).count(), 2);
+        let sgdm = sgdm_method_roster();
+        assert_eq!(sgdm,
+                   vec![Method::Full, Method::IidMask, Method::WorMask]);
+    }
+
+    #[test]
+    fn setups_have_sane_defaults() {
+        let f = FinetuneSetup::default();
+        assert!(f.epochs > 0 && f.gamma > 0 && f.period > 0);
+        assert!(f.lr > 0.0 && f.keep_ratio > 0.0);
+        let p = PretrainSetup::default();
+        assert!(p.steps > 0 && p.period > 0 && p.lr > 0.0);
+    }
+}

@@ -1,0 +1,37 @@
+//! # OMGD — Omni-Masked Gradient Descent (reproduction)
+//!
+//! Production-shaped reproduction of *"Omni-Masked Gradient Descent:
+//! Memory-Efficient Optimization via Mask Traversal with Improved
+//! Convergence"* as a three-layer rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the training coordinator: Algorithm 1's
+//!   `[M]×[N]` without-replacement traversal ([`coordinator`]), the
+//!   LISA/LISA-WOR layer scheduler (Algorithm 2), native baseline
+//!   optimizers ([`optim`]), the analytic memory model ([`memory`]), the
+//!   §5.1 quadratic testbed ([`quadratic`]), data pipelines ([`data`]),
+//!   and the PJRT runtime ([`runtime`]) that executes AOT-compiled HLO.
+//! * **L2 (python/compile, build-time)** — JAX models over a flat
+//!   parameter vector, lowered once to HLO text.
+//! * **L1 (python/compile/kernels, build-time)** — Pallas masked-update
+//!   kernels fused into the L2 HLO.
+//!
+//! Python never runs on the request path: after `make artifacts` the
+//! `omgd` binary is self-contained.
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod linalg;
+pub mod manifest;
+pub mod memory;
+pub mod metrics;
+pub mod optim;
+pub mod prop;
+pub mod quadratic;
+pub mod rng;
+pub mod runtime;
+pub mod train;
+pub mod util;

@@ -1,0 +1,406 @@
+//! Small dense linear algebra, built in-repo (no external crates).
+//!
+//! Used by the §5.1 quadratic testbed (eigenvalues of `A`, product-matrix
+//! recursions), the GaLore/GoLore baselines (QR → Stiefel factors,
+//! power-iteration top-r subspace), and tests.
+
+use crate::rng::Rng;
+
+/// Row-major dense matrix of `f64`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[Vec<f64>]) -> Self {
+        let r = rows.len();
+        let c = if r == 0 { 0 } else { rows[0].len() };
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        Self { rows: r, cols: c, data }
+    }
+
+    /// Gaussian random matrix.
+    pub fn randn(rows: usize, cols: usize, rng: &mut Rng) -> Self {
+        let data = (0..rows * cols).map(|_| rng.normal()).collect();
+        Self { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    /// `self * other` — naive triple loop with the inner loop over
+    /// contiguous memory (ikj order).
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let mut out = Mat::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self[(i, k)];
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = other.row(k);
+                let out_row =
+                    &mut out.data[i * other.cols..(i + 1) * other.cols];
+                for (o, &b) in out_row.iter_mut().zip(orow) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// Matrix–vector product.
+    pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, v.len(), "matvec shape mismatch");
+        (0..self.rows)
+            .map(|i| dot(self.row(i), v))
+            .collect()
+    }
+
+    pub fn scale(&self, s: f64) -> Mat {
+        let data = self.data.iter().map(|x| x * s).collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    pub fn add(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| a + b)
+            .collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    pub fn sub(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| a - b)
+            .collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Frobenius norm.
+    pub fn fro(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Outer product accumulate: `self += s * u vᵀ`.
+    pub fn add_outer(&mut self, s: f64, u: &[f64], v: &[f64]) {
+        assert_eq!(u.len(), self.rows);
+        assert_eq!(v.len(), self.cols);
+        for i in 0..self.rows {
+            let su = s * u[i];
+            let row = &mut self.data[i * self.cols..(i + 1) * self.cols];
+            for (r, &x) in row.iter_mut().zip(v) {
+                *r += su * x;
+            }
+        }
+    }
+
+    /// Thin QR via modified Gram–Schmidt (columns of Q orthonormal).
+    /// Returns `(Q: rows×cols, R: cols×cols)`; requires `rows >= cols`.
+    pub fn qr(&self) -> (Mat, Mat) {
+        let (m, n) = (self.rows, self.cols);
+        assert!(m >= n, "thin QR needs rows >= cols");
+        // Work in column-major scratch for cache-friendly column ops.
+        let mut cols: Vec<Vec<f64>> = (0..n)
+            .map(|j| (0..m).map(|i| self[(i, j)]).collect())
+            .collect();
+        let mut r = Mat::zeros(n, n);
+        for j in 0..n {
+            for k in 0..j {
+                let (head, tail) = cols.split_at_mut(j);
+                let rkj = dot(&head[k], &tail[0]);
+                r[(k, j)] = rkj;
+                for (x, &qk) in tail[0].iter_mut().zip(&head[k]) {
+                    *x -= rkj * qk;
+                }
+            }
+            let nrm = dot(&cols[j], &cols[j]).sqrt();
+            r[(j, j)] = nrm;
+            if nrm > 1e-300 {
+                for x in cols[j].iter_mut() {
+                    *x /= nrm;
+                }
+            }
+        }
+        let mut q = Mat::zeros(m, n);
+        for j in 0..n {
+            for i in 0..m {
+                q[(i, j)] = cols[j][i];
+            }
+        }
+        (q, r)
+    }
+
+    /// Eigen-decomposition of a symmetric matrix via cyclic Jacobi.
+    /// Returns `(eigenvalues desc, eigenvectors as columns)`.
+    pub fn sym_eig(&self) -> (Vec<f64>, Mat) {
+        assert_eq!(self.rows, self.cols, "sym_eig needs square");
+        let n = self.rows;
+        let mut a = self.clone();
+        let mut v = Mat::eye(n);
+        for _sweep in 0..100 {
+            let mut off = 0.0;
+            for i in 0..n {
+                for j in (i + 1)..n {
+                    off += a[(i, j)] * a[(i, j)];
+                }
+            }
+            if off.sqrt() < 1e-12 * (1.0 + a.fro()) {
+                break;
+            }
+            for p in 0..n {
+                for q in (p + 1)..n {
+                    let apq = a[(p, q)];
+                    if apq.abs() < 1e-300 {
+                        continue;
+                    }
+                    let theta = (a[(q, q)] - a[(p, p)]) / (2.0 * apq);
+                    let t = theta.signum()
+                        / (theta.abs() + (theta * theta + 1.0).sqrt());
+                    let c = 1.0 / (t * t + 1.0).sqrt();
+                    let s = t * c;
+                    for k in 0..n {
+                        let akp = a[(k, p)];
+                        let akq = a[(k, q)];
+                        a[(k, p)] = c * akp - s * akq;
+                        a[(k, q)] = s * akp + c * akq;
+                    }
+                    for k in 0..n {
+                        let apk = a[(p, k)];
+                        let aqk = a[(q, k)];
+                        a[(p, k)] = c * apk - s * aqk;
+                        a[(q, k)] = s * apk + c * aqk;
+                        let vkp = v[(k, p)];
+                        let vkq = v[(k, q)];
+                        v[(k, p)] = c * vkp - s * vkq;
+                        v[(k, q)] = s * vkp + c * vkq;
+                    }
+                }
+            }
+        }
+        let mut idx: Vec<usize> = (0..n).collect();
+        let diag: Vec<f64> = (0..n).map(|i| a[(i, i)]).collect();
+        idx.sort_by(|&i, &j| diag[j].partial_cmp(&diag[i]).unwrap());
+        let vals: Vec<f64> = idx.iter().map(|&i| diag[i]).collect();
+        let mut vecs = Mat::zeros(n, n);
+        for (newj, &oldj) in idx.iter().enumerate() {
+            for i in 0..n {
+                vecs[(i, newj)] = v[(i, oldj)];
+            }
+        }
+        (vals, vecs)
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+/// Dot product.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// Euclidean norm.
+#[inline]
+pub fn norm(a: &[f64]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+/// `y += s * x` (axpy).
+#[inline]
+pub fn axpy(s: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi += s * xi;
+    }
+}
+
+/// Sample a uniformly distributed element of the Stiefel manifold
+/// `St(m, k)` = {P ∈ R^{m×k} : PᵀP = I} via QR of a Gaussian matrix
+/// (Chikuse 2012 / Remark 5.2 of the paper), with the sign fix that makes
+/// the distribution exactly Haar (R's diagonal forced positive).
+pub fn stiefel(m: usize, k: usize, rng: &mut Rng) -> Mat {
+    assert!(m >= k, "St(m,k) needs m >= k");
+    let z = Mat::randn(m, k, rng);
+    let (mut q, r) = z.qr();
+    for j in 0..k {
+        if r[(j, j)] < 0.0 {
+            for i in 0..m {
+                q[(i, j)] = -q[(i, j)];
+            }
+        }
+    }
+    q
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng() -> Rng {
+        Rng::seed_from_u64(1234)
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut r = rng();
+        let a = Mat::randn(5, 7, &mut r);
+        let i7 = Mat::eye(7);
+        assert!(a.matmul(&i7).sub(&a).fro() < 1e-12);
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        let a = Mat::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let b = Mat::from_rows(&[vec![5.0, 6.0], vec![7.0, 8.0]]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let mut r = rng();
+        let a = Mat::randn(6, 4, &mut r);
+        let v: Vec<f64> = (0..4).map(|_| r.normal()).collect();
+        let mv = a.matvec(&v);
+        let vm = Mat { rows: 4, cols: 1, data: v.clone() };
+        let want = a.matmul(&vm);
+        for i in 0..6 {
+            assert!((mv[i] - want[(i, 0)]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut r = rng();
+        let a = Mat::randn(3, 8, &mut r);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn qr_reconstructs_and_orthonormal() {
+        let mut r = rng();
+        let a = Mat::randn(10, 4, &mut r);
+        let (q, rr) = a.qr();
+        assert!(q.matmul(&rr).sub(&a).fro() < 1e-10);
+        let qtq = q.transpose().matmul(&q);
+        assert!(qtq.sub(&Mat::eye(4)).fro() < 1e-10);
+    }
+
+    #[test]
+    fn sym_eig_reconstructs() {
+        let mut r = rng();
+        let b = Mat::randn(6, 6, &mut r);
+        let a = b.matmul(&b.transpose()); // SPD
+        let (vals, vecs) = a.sym_eig();
+        // A = V Λ Vᵀ
+        let mut lam = Mat::zeros(6, 6);
+        for i in 0..6 {
+            lam[(i, i)] = vals[i];
+        }
+        let rec = vecs.matmul(&lam).matmul(&vecs.transpose());
+        assert!(rec.sub(&a).fro() < 1e-8, "fro {}", rec.sub(&a).fro());
+        // eigenvalues of BBᵀ are nonnegative and sorted desc
+        for w in vals.windows(2) {
+            assert!(w[0] >= w[1] - 1e-12);
+        }
+        assert!(vals.iter().all(|&v| v > -1e-10));
+    }
+
+    #[test]
+    fn sym_eig_known_2x2() {
+        let a = Mat::from_rows(&[vec![2.0, 1.0], vec![1.0, 2.0]]);
+        let (vals, _) = a.sym_eig();
+        assert!((vals[0] - 3.0).abs() < 1e-10);
+        assert!((vals[1] - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn stiefel_is_orthonormal() {
+        let mut r = rng();
+        for _ in 0..5 {
+            let p = stiefel(10, 5, &mut r);
+            let ptp = p.transpose().matmul(&p);
+            assert!(ptp.sub(&Mat::eye(5)).fro() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn stiefel_projection_is_idempotent_scaled() {
+        // PPᵀ is a rank-k orthogonal projection: (PPᵀ)² = PPᵀ.
+        let mut r = rng();
+        let p = stiefel(8, 4, &mut r);
+        let proj = p.matmul(&p.transpose());
+        assert!(proj.matmul(&proj).sub(&proj).fro() < 1e-10);
+    }
+
+    #[test]
+    fn axpy_and_dot() {
+        let x = vec![1.0, 2.0, 3.0];
+        let mut y = vec![1.0, 1.0, 1.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, vec![3.0, 5.0, 7.0]);
+        assert_eq!(dot(&x, &x), 14.0);
+        assert!((norm(&x) - 14.0f64.sqrt()).abs() < 1e-15);
+    }
+
+    #[test]
+    fn add_outer() {
+        let mut m = Mat::zeros(2, 3);
+        m.add_outer(2.0, &[1.0, 2.0], &[1.0, 0.0, 1.0]);
+        assert_eq!(m.data, vec![2.0, 0.0, 2.0, 4.0, 0.0, 4.0]);
+    }
+}

@@ -1,0 +1,263 @@
+//! AOT manifest: the contract between the python compile path and rust.
+//!
+//! `python/compile/aot.py` writes one JSON manifest per model config; it
+//! describes the flat parameter layout (name/shape/layer/offset/len per
+//! tensor), the data shapes the train/eval artifacts were lowered for,
+//! and which HLO files implement each entry point. Everything the
+//! coordinator needs to build tensorwise/layerwise masks lives here — the
+//! rust side never inspects HLO.
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One parameter tensor in the flat layout.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// Layer tag: `"embed"`, `"block_<i>"`, `"final"`, `"head"`.
+    pub layer: String,
+    pub offset: usize,
+    pub len: usize,
+}
+
+/// Data shapes the artifacts were lowered for.
+#[derive(Clone, Debug, Default)]
+pub struct DataShapes {
+    pub batch: usize,
+    /// GPT: sequence length; MLP: 0.
+    pub seq: usize,
+    /// GPT: vocab size; MLP: 0.
+    pub vocab: usize,
+    /// MLP: input features; GPT: 0.
+    pub d_in: usize,
+    /// MLP: classes; GPT: 0.
+    pub n_class: usize,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub name: String,
+    /// `"gpt"` or `"mlp"`.
+    pub kind: String,
+    pub block: usize,
+    pub total_len: usize,
+    pub padded_len: usize,
+    pub params: Vec<ParamInfo>,
+    pub data: DataShapes,
+    /// Artifact file names (relative to the artifacts dir).
+    pub train_hlo: String,
+    pub eval_hlo: String,
+    pub init_bin: String,
+    pub update_adamw_hlo: String,
+    pub update_sgdm_hlo: String,
+    /// Directory the manifest was loaded from.
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: &Path, name: &str) -> Result<Manifest> {
+        let path = artifacts_dir.join(format!("{name}.json"));
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading manifest {path:?}"))?;
+        let j = Json::parse(&text)
+            .with_context(|| format!("parsing manifest {path:?}"))?;
+        Self::from_json(&j, artifacts_dir)
+    }
+
+    pub fn from_json(j: &Json, dir: &Path) -> Result<Manifest> {
+        let params = j
+            .at("params")
+            .as_arr()
+            .context("params not an array")?
+            .iter()
+            .map(|p| {
+                Ok(ParamInfo {
+                    name: p.at("name").as_str().context("name")?.to_string(),
+                    shape: p
+                        .at("shape")
+                        .as_arr()
+                        .context("shape")?
+                        .iter()
+                        .map(|s| s.as_usize().context("dim"))
+                        .collect::<Result<_>>()?,
+                    layer: p.at("layer").as_str().context("layer")?
+                        .to_string(),
+                    offset: p.at("offset").as_usize().context("offset")?,
+                    len: p.at("len").as_usize().context("len")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let data = j.at("data");
+        let g = |k: &str| data.get(k).and_then(|v| v.as_usize()).unwrap_or(0);
+        let upd = j.at("artifacts").at("update");
+        let man = Manifest {
+            name: j.at("name").as_str().context("name")?.to_string(),
+            kind: j.at("kind").as_str().context("kind")?.to_string(),
+            block: j.at("block").as_usize().context("block")?,
+            total_len: j.at("total_len").as_usize().context("total_len")?,
+            padded_len: j.at("padded_len").as_usize()
+                .context("padded_len")?,
+            params,
+            data: DataShapes {
+                batch: g("batch"),
+                seq: g("seq"),
+                vocab: g("vocab"),
+                d_in: g("d_in"),
+                n_class: g("n_class"),
+            },
+            train_hlo: j.at("artifacts").at("train").as_str()
+                .context("train")?.to_string(),
+            eval_hlo: j.at("artifacts").at("eval").as_str()
+                .context("eval")?.to_string(),
+            init_bin: j.at("artifacts").at("init").as_str()
+                .context("init")?.to_string(),
+            update_adamw_hlo: upd.at("adamw").as_str().context("adamw")?
+                .to_string(),
+            update_sgdm_hlo: upd.at("sgdm").as_str().context("sgdm")?
+                .to_string(),
+            dir: dir.to_path_buf(),
+        };
+        man.check()?;
+        Ok(man)
+    }
+
+    /// Structural invariants: contiguous offsets, shapes match lengths,
+    /// padding consistent.
+    pub fn check(&self) -> Result<()> {
+        let mut off = 0usize;
+        for p in &self.params {
+            if p.offset != off {
+                bail!("param {} offset {} != expected {}", p.name, p.offset,
+                      off);
+            }
+            let shape_len: usize = p.shape.iter().product();
+            if shape_len != p.len {
+                bail!("param {} shape/len mismatch", p.name);
+            }
+            off += p.len;
+        }
+        if off != self.total_len {
+            bail!("total_len {} != sum of params {}", self.total_len, off);
+        }
+        if self.padded_len < self.total_len
+            || self.padded_len % self.block != 0
+        {
+            bail!("bad padded_len {}", self.padded_len);
+        }
+        Ok(())
+    }
+
+    /// Names of the middle layers in order (`block_0`, `block_1`, ...).
+    pub fn middle_layers(&self) -> Vec<String> {
+        let mut seen = Vec::new();
+        for p in &self.params {
+            if p.layer.starts_with("block_")
+                && seen.last() != Some(&p.layer)
+            {
+                seen.push(p.layer.clone());
+            }
+        }
+        seen
+    }
+
+    /// Params belonging to a given layer tag.
+    pub fn layer_params(&self, layer: &str) -> Vec<&ParamInfo> {
+        self.params.iter().filter(|p| p.layer == layer).collect()
+    }
+
+    /// Load the initial flat parameter vector (raw little-endian f32).
+    pub fn load_init(&self) -> Result<Vec<f32>> {
+        let path = self.dir.join(&self.init_bin);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading init {path:?}"))?;
+        if bytes.len() != 4 * self.padded_len {
+            bail!("init file {} has {} bytes, want {}", self.init_bin,
+                  bytes.len(), 4 * self.padded_len);
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn hlo_path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_json() -> Json {
+        Json::parse(
+            r#"{
+ "name": "toy", "kind": "mlp", "block": 8,
+ "total_len": 14, "padded_len": 16,
+ "params": [
+   {"name": "in_w", "shape": [2, 3], "layer": "embed", "offset": 0, "len": 6},
+   {"name": "block_0.w", "shape": [2, 2], "layer": "block_0", "offset": 6, "len": 4},
+   {"name": "block_1.w", "shape": [2, 1], "layer": "block_1", "offset": 10, "len": 2},
+   {"name": "out_w", "shape": [2], "layer": "head", "offset": 12, "len": 2}
+ ],
+ "data": {"batch": 4, "d_in": 2, "n_class": 2},
+ "artifacts": {"train": "t.hlo.txt", "eval": "e.hlo.txt",
+               "init": "i.bin",
+               "update": {"adamw": "a.hlo.txt", "sgdm": "s.hlo.txt"}}
+}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_and_checks() {
+        let m = Manifest::from_json(&sample_json(), Path::new("/tmp"))
+            .unwrap();
+        assert_eq!(m.name, "toy");
+        assert_eq!(m.params.len(), 4);
+        assert_eq!(m.data.batch, 4);
+        assert_eq!(m.middle_layers(), vec!["block_0", "block_1"]);
+        assert_eq!(m.layer_params("embed").len(), 1);
+        assert_eq!(m.update_adamw_hlo, "a.hlo.txt");
+    }
+
+    #[test]
+    fn rejects_gap_in_offsets() {
+        let mut j = sample_json();
+        if let Json::Obj(ref mut o) = j {
+            if let Some(Json::Arr(ref mut ps)) = o.get_mut("params") {
+                if let Json::Obj(ref mut p1) = ps[1] {
+                    p1.insert("offset".into(), Json::Num(7.0));
+                }
+            }
+        }
+        assert!(Manifest::from_json(&j, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_padding() {
+        let mut j = sample_json();
+        if let Json::Obj(ref mut o) = j {
+            o.insert("padded_len".into(), Json::Num(15.0));
+        }
+        assert!(Manifest::from_json(&j, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn loads_real_artifact_manifest_if_present() {
+        // Integration-ish: validate the checked-in AOT output when built.
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("gpt-nano.json").exists() {
+            let m = Manifest::load(&dir, "gpt-nano").unwrap();
+            assert_eq!(m.kind, "gpt");
+            assert!(m.padded_len % m.block == 0);
+            assert_eq!(m.middle_layers().len(), 2);
+            let init = m.load_init().unwrap();
+            assert_eq!(init.len(), m.padded_len);
+        }
+    }
+}

@@ -1,0 +1,359 @@
+//! Analytic GPU-memory model (Fig. 6 / Table 8).
+//!
+//! Training-time memory decomposes into model weights, gradients,
+//! optimizer states, and "others" (activations, caches, allocator
+//! overhead). The first three are exact arithmetic over the
+//! architecture's tensor inventory and the method's residency policy —
+//! no training needed — which is how we reproduce the paper's LLaMA-7B
+//! breakdown on a CPU-only testbed. "Others" is modelled as
+//! activation-dominated and scaled by the fraction of layers requiring
+//! backward state, calibrated to the paper's full-parameter figure.
+//!
+//! Residency policies (paper §5.4):
+//! * Full: grads for all params; Adam m+v for all params.
+//! * GaLore/GoLore(rank r): **full gradients** (the paper stresses this
+//!   remains their bottleneck), moments in the projected space plus the
+//!   projection factors.
+//! * LISA/LISA-WOR(γ): grads and moments only for embed + head + the γ
+//!   active middle layers.
+
+use crate::manifest::Manifest;
+
+/// Bytes per parameter for weights/grads/states (bf16 training).
+pub const BYTES_PER_EL: usize = 2;
+
+/// One tensor in an architecture inventory.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// `"embed"`, `"block_<i>"`, `"final"`, `"head"`.
+    pub layer: String,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn is_matrix(&self) -> bool {
+        self.shape.len() == 2
+    }
+}
+
+/// Architecture = named tensor inventory.
+#[derive(Clone, Debug)]
+pub struct ArchSpec {
+    pub name: String,
+    pub tensors: Vec<TensorSpec>,
+    pub n_middle: usize,
+}
+
+impl ArchSpec {
+    pub fn total_params(&self) -> usize {
+        self.tensors.iter().map(|t| t.numel()).sum()
+    }
+
+    /// LLaMA-7B inventory (Touvron et al., 2023): 32 layers, d=4096,
+    /// ffn=11008, vocab=32000 → ≈ 6.74 B params.
+    pub fn llama_7b() -> Self {
+        let (d, ffn, vocab, layers) = (4096usize, 11008usize, 32000usize,
+                                       32usize);
+        let mut tensors = vec![TensorSpec {
+            name: "tok_embeddings".into(),
+            shape: vec![vocab, d],
+            layer: "embed".into(),
+        }];
+        for i in 0..layers {
+            let blk = format!("block_{i}");
+            for (n, shape) in [
+                ("attn_q", vec![d, d]),
+                ("attn_k", vec![d, d]),
+                ("attn_v", vec![d, d]),
+                ("attn_o", vec![d, d]),
+                ("ffn_gate", vec![d, ffn]),
+                ("ffn_up", vec![d, ffn]),
+                ("ffn_down", vec![ffn, d]),
+                ("attn_norm", vec![d]),
+                ("ffn_norm", vec![d]),
+            ] {
+                tensors.push(TensorSpec {
+                    name: format!("{blk}.{n}"),
+                    shape,
+                    layer: blk.clone(),
+                });
+            }
+        }
+        tensors.push(TensorSpec {
+            name: "norm".into(),
+            shape: vec![d],
+            layer: "final".into(),
+        });
+        tensors.push(TensorSpec {
+            name: "output".into(),
+            shape: vec![d, vocab],
+            layer: "head".into(),
+        });
+        Self { name: "llama-7b".into(), tensors, n_middle: layers }
+    }
+
+    /// GPT-2-124M inventory (12 layers, d=768, vocab 50257, seq 1024).
+    pub fn gpt2_124m() -> Self {
+        let (d, vocab, seq, layers) = (768usize, 50257usize, 1024usize,
+                                       12usize);
+        let mut tensors = vec![
+            TensorSpec { name: "wte".into(), shape: vec![vocab, d],
+                         layer: "embed".into() },
+            TensorSpec { name: "wpe".into(), shape: vec![seq, d],
+                         layer: "embed".into() },
+        ];
+        for i in 0..layers {
+            let blk = format!("block_{i}");
+            for (n, shape) in [
+                ("attn_qkv", vec![d, 3 * d]),
+                ("attn_proj", vec![d, d]),
+                ("mlp_fc", vec![d, 4 * d]),
+                ("mlp_proj", vec![4 * d, d]),
+                ("ln1", vec![2 * d]),
+                ("ln2", vec![2 * d]),
+            ] {
+                tensors.push(TensorSpec {
+                    name: format!("{blk}.{n}"),
+                    shape,
+                    layer: blk.clone(),
+                });
+            }
+        }
+        tensors.push(TensorSpec {
+            name: "lnf".into(), shape: vec![2 * d], layer: "final".into(),
+        });
+        // tied head (no extra tensor)
+        Self { name: "gpt2-124m".into(), tensors, n_middle: layers }
+    }
+
+    /// Build from an AOT manifest (so the memory report matches exactly
+    /// what the rust trainer holds for our own configs).
+    pub fn from_manifest(man: &Manifest) -> Self {
+        let tensors = man
+            .params
+            .iter()
+            .map(|p| TensorSpec {
+                name: p.name.clone(),
+                shape: p.shape.clone(),
+                layer: p.layer.clone(),
+            })
+            .collect();
+        Self {
+            name: man.name.clone(),
+            tensors,
+            n_middle: man.middle_layers().len(),
+        }
+    }
+}
+
+/// Method residency policy for the breakdown.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum MemPolicy {
+    Full,
+    /// rank
+    Galore(usize),
+    /// rank (same residency as GaLore)
+    Golore(usize),
+    /// γ active middle layers (LISA and LISA-WOR are identical here)
+    Lisa(usize),
+}
+
+/// Component breakdown in bytes.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct MemBreakdown {
+    pub model: usize,
+    pub gradients: usize,
+    pub optimizer: usize,
+    pub others: usize,
+}
+
+impl MemBreakdown {
+    pub fn total(&self) -> usize {
+        self.model + self.gradients + self.optimizer + self.others
+    }
+
+    pub fn gb(bytes: usize) -> f64 {
+        bytes as f64 / (1u64 << 30) as f64
+    }
+}
+
+/// "Others" (activations/caches) scales with model size; the paper's
+/// full-parameter LLaMA-7B run reports 14.66 GiB against a 12.55 GiB
+/// model — ratio ≈ 1.168 under their batch/checkpointing setting. We
+/// carry that ratio to other architectures (batch-proportional detail is
+/// out of scope for the residency comparison).
+const OTHERS_TO_MODEL_RATIO: f64 = 1.168;
+
+/// Compute the breakdown for an architecture and policy.
+pub fn breakdown(arch: &ArchSpec, policy: MemPolicy) -> MemBreakdown {
+    let total = arch.total_params();
+    let model = total * BYTES_PER_EL;
+
+    let (gradients, optimizer) = match policy {
+        MemPolicy::Full => {
+            (total * BYTES_PER_EL, 2 * total * BYTES_PER_EL)
+        }
+        MemPolicy::Galore(r) | MemPolicy::Golore(r) => {
+            // Full grads (their backward-time bottleneck); projected
+            // moments (2 ×) + one projection factor per matrix.
+            let mut proj_state = 0usize;
+            let mut proj_factors = 0usize;
+            let mut small = 0usize;
+            for t in &arch.tensors {
+                if t.is_matrix() && t.shape[0].min(t.shape[1]) > r {
+                    let (m, n) = (t.shape[0], t.shape[1]);
+                    let (pf, ps) = if m >= n {
+                        (m * r, r * n)
+                    } else {
+                        (n * r, m * r)
+                    };
+                    proj_factors += pf;
+                    proj_state += ps;
+                } else {
+                    small += t.numel();
+                }
+            }
+            let opt = (2 * proj_state + proj_factors + 2 * small)
+                * BYTES_PER_EL;
+            (total * BYTES_PER_EL, opt)
+        }
+        MemPolicy::Lisa(gamma) => {
+            // Active set: embed + head + final + γ middle layers.
+            let gamma = gamma.min(arch.n_middle);
+            let mut per_middle = 0usize;
+            let mut always = 0usize;
+            for t in &arch.tensors {
+                if t.layer.starts_with("block_") {
+                    // all middle layers are identical; count layer 0
+                    if t.layer == "block_0" {
+                        per_middle += t.numel();
+                    }
+                } else {
+                    always += t.numel();
+                }
+            }
+            let active = always + gamma * per_middle;
+            (active * BYTES_PER_EL, 2 * active * BYTES_PER_EL)
+        }
+    };
+
+    // Others: activation/workspace-dominated. All memory-efficient
+    // methods free backward buffers eagerly (GaLore projects per layer
+    // during backprop; LISA never materializes frozen-layer state), so
+    // "others" empirically tracks *optimizer residency*: base 15%
+    // (allocator, workspace) plus 85% scaled by the optimizer-state
+    // fraction relative to full Adam. Calibrated to the paper's
+    // full-parameter 14.66 GB.
+    let opt_frac = optimizer as f64 / (2 * total * BYTES_PER_EL) as f64;
+    let others_full = OTHERS_TO_MODEL_RATIO * model as f64;
+    let others =
+        (others_full * (0.15 + 0.85 * opt_frac.min(1.0))) as usize;
+
+    MemBreakdown { model, gradients, optimizer, others }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close_gb(got: f64, want: f64, tol: f64) -> bool {
+        (got - want).abs() <= tol
+    }
+
+    #[test]
+    fn llama7b_param_count() {
+        let arch = ArchSpec::llama_7b();
+        let p = arch.total_params();
+        // 6.74 B ± 1%
+        assert!((p as f64 - 6.74e9).abs() < 6.74e7, "params {p}");
+    }
+
+    #[test]
+    fn table8_full_row() {
+        let arch = ArchSpec::llama_7b();
+        let b = breakdown(&arch, MemPolicy::Full);
+        assert!(close_gb(MemBreakdown::gb(b.model), 12.55, 0.15),
+                "model {}", MemBreakdown::gb(b.model));
+        assert!(close_gb(MemBreakdown::gb(b.gradients), 12.55, 0.15));
+        assert!(close_gb(MemBreakdown::gb(b.optimizer), 25.10, 0.3));
+        assert!(close_gb(MemBreakdown::gb(b.others), 14.66, 0.5));
+        assert!(close_gb(MemBreakdown::gb(b.total()), 64.86, 1.0),
+                "total {}", MemBreakdown::gb(b.total()));
+    }
+
+    #[test]
+    fn table8_lisa_row() {
+        let arch = ArchSpec::llama_7b();
+        let b = breakdown(&arch, MemPolicy::Lisa(2));
+        assert!(close_gb(MemBreakdown::gb(b.gradients), 1.24, 0.2),
+                "grads {}", MemBreakdown::gb(b.gradients));
+        assert!(close_gb(MemBreakdown::gb(b.optimizer), 2.48, 0.4),
+                "opt {}", MemBreakdown::gb(b.optimizer));
+        // headline: ≈ 70% total reduction vs full
+        let full = breakdown(&arch, MemPolicy::Full);
+        let red = 1.0 - b.total() as f64 / full.total() as f64;
+        assert!(red > 0.6 && red < 0.8, "reduction {red}");
+    }
+
+    #[test]
+    fn table8_galore_row_shape() {
+        let arch = ArchSpec::llama_7b();
+        let b = breakdown(&arch, MemPolicy::Galore(128));
+        // grads stay full — the paper's point
+        assert!(close_gb(MemBreakdown::gb(b.gradients), 12.55, 0.15));
+        // optimizer collapses to ~1.7 GB
+        assert!(MemBreakdown::gb(b.optimizer) < 3.0,
+                "opt {}", MemBreakdown::gb(b.optimizer));
+        // ≈ 52% total reduction
+        let full = breakdown(&arch, MemPolicy::Full);
+        let red = 1.0 - b.total() as f64 / full.total() as f64;
+        assert!(red > 0.4 && red < 0.62, "reduction {red}");
+    }
+
+    #[test]
+    fn ordering_lisa_beats_galore_beats_full() {
+        let arch = ArchSpec::llama_7b();
+        let full = breakdown(&arch, MemPolicy::Full).total();
+        let gal = breakdown(&arch, MemPolicy::Galore(128)).total();
+        let lisa = breakdown(&arch, MemPolicy::Lisa(2)).total();
+        assert!(lisa < gal && gal < full, "{lisa} {gal} {full}");
+    }
+
+    #[test]
+    fn golore_equals_galore_residency() {
+        let arch = ArchSpec::llama_7b();
+        assert_eq!(
+            breakdown(&arch, MemPolicy::Galore(128)),
+            breakdown(&arch, MemPolicy::Golore(128))
+        );
+    }
+
+    #[test]
+    fn gpt2_param_count() {
+        let arch = ArchSpec::gpt2_124m();
+        let p = arch.total_params();
+        // 124M family (weights only, tied head): 124M ± 5%
+        assert!((p as f64 - 1.24e8).abs() < 6.2e6, "params {p}");
+    }
+
+    #[test]
+    fn lisa_gamma_monotone() {
+        let arch = ArchSpec::llama_7b();
+        let mut prev = 0usize;
+        for gamma in [1usize, 2, 4, 8, 16, 32] {
+            let t = breakdown(&arch, MemPolicy::Lisa(gamma)).total();
+            assert!(t > prev, "γ={gamma}");
+            prev = t;
+        }
+        // γ = 32 (all layers) grads+opt equal full
+        let full = breakdown(&arch, MemPolicy::Full);
+        let all = breakdown(&arch, MemPolicy::Lisa(32));
+        assert_eq!(all.gradients, full.gradients);
+        assert_eq!(all.optimizer, full.optimizer);
+    }
+}

@@ -1,0 +1,287 @@
+//! Metric sinks (CSV / JSONL), timers and summary statistics.
+//!
+//! Every experiment writes its series through these sinks so the bench
+//! harness and the paper-figure regenerators share one on-disk format:
+//! CSV with a header row, one row per logged step.
+
+use anyhow::{Context, Result};
+use std::fs::{self, File};
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::time::Instant;
+
+/// Append-oriented CSV writer with a fixed header.
+pub struct CsvWriter {
+    out: BufWriter<File>,
+    cols: usize,
+}
+
+impl CsvWriter {
+    pub fn create<P: AsRef<Path>>(path: P, header: &[&str]) -> Result<Self> {
+        if let Some(dir) = path.as_ref().parent() {
+            fs::create_dir_all(dir)?;
+        }
+        let file = File::create(&path)
+            .with_context(|| format!("creating {:?}", path.as_ref()))?;
+        let mut out = BufWriter::new(file);
+        writeln!(out, "{}", header.join(","))?;
+        Ok(Self { out, cols: header.len() })
+    }
+
+    pub fn row(&mut self, values: &[f64]) -> Result<()> {
+        assert_eq!(values.len(), self.cols, "csv row width mismatch");
+        let line = values
+            .iter()
+            .map(|v| format_g(*v))
+            .collect::<Vec<_>>()
+            .join(",");
+        writeln!(self.out, "{line}")?;
+        Ok(())
+    }
+
+    /// Mixed string/number row (first column often a label).
+    pub fn row_mixed(&mut self, values: &[CsvCell]) -> Result<()> {
+        assert_eq!(values.len(), self.cols, "csv row width mismatch");
+        let line = values
+            .iter()
+            .map(|v| match v {
+                CsvCell::S(s) => s.clone(),
+                CsvCell::F(x) => format_g(*x),
+                CsvCell::I(i) => i.to_string(),
+            })
+            .collect::<Vec<_>>()
+            .join(",");
+        writeln!(self.out, "{line}")?;
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+/// Cell for mixed-type CSV rows.
+pub enum CsvCell {
+    S(String),
+    F(f64),
+    I(i64),
+}
+
+/// Compact float formatting (`%g`-ish): trims trailing zeros, keeps
+/// enough digits to round-trip typical metric magnitudes.
+pub fn format_g(x: f64) -> String {
+    if x == x.trunc() && x.abs() < 1e15 {
+        format!("{}", x as i64)
+    } else if x.abs() >= 1e-4 && x.abs() < 1e6 {
+        let s = format!("{x:.6}");
+        s.trim_end_matches('0').trim_end_matches('.').to_string()
+    } else {
+        format!("{x:e}")
+    }
+}
+
+/// JSONL event log (one JSON object per line, flat string→number/string).
+pub struct JsonlWriter {
+    out: BufWriter<File>,
+}
+
+impl JsonlWriter {
+    pub fn create<P: AsRef<Path>>(path: P) -> Result<Self> {
+        if let Some(dir) = path.as_ref().parent() {
+            fs::create_dir_all(dir)?;
+        }
+        Ok(Self { out: BufWriter::new(File::create(path)?) })
+    }
+
+    pub fn event(&mut self, fields: &[(&str, CsvCell)]) -> Result<()> {
+        let body = fields
+            .iter()
+            .map(|(k, v)| match v {
+                CsvCell::S(s) => format!("\"{k}\":\"{}\"", escape(s)),
+                CsvCell::F(x) => format!("\"{k}\":{}", format_g(*x)),
+                CsvCell::I(i) => format!("\"{k}\":{i}"),
+            })
+            .collect::<Vec<_>>()
+            .join(",");
+        writeln!(self.out, "{{{body}}}")?;
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+fn escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// Wall-clock timer with named laps.
+pub struct Timer {
+    start: Instant,
+    last: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        let now = Instant::now();
+        Self { start: now, last: now }
+    }
+
+    /// Seconds since construction.
+    pub fn total(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Seconds since the previous `lap()` (or construction).
+    pub fn lap(&mut self) -> f64 {
+        let now = Instant::now();
+        let dt = now.duration_since(self.last).as_secs_f64();
+        self.last = now;
+        dt
+    }
+}
+
+/// Streaming summary statistics (Welford) + percentile snapshot support.
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    pub n: usize,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+    samples: Vec<f64>,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self { min: f64::INFINITY, max: f64::NEG_INFINITY, ..Self::default() }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+        self.samples.push(x);
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn std(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            (self.m2 / (self.n - 1) as f64).sqrt()
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Exact percentile over recorded samples (p in [0, 100]).
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
+        s[idx.min(s.len() - 1)]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_writes_header_and_rows() {
+        let dir = std::env::temp_dir().join("omgd_test_csv");
+        let path = dir.join("m.csv");
+        {
+            let mut w =
+                CsvWriter::create(&path, &["step", "loss"]).unwrap();
+            w.row(&[1.0, 0.5]).unwrap();
+            w.row(&[2.0, 0.25]).unwrap();
+            w.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "step,loss\n1,0.5\n2,0.25\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    #[should_panic(expected = "width mismatch")]
+    fn csv_row_width_checked() {
+        let dir = std::env::temp_dir().join("omgd_test_csv2");
+        let mut w =
+            CsvWriter::create(dir.join("m.csv"), &["a", "b"]).unwrap();
+        let _ = w.row(&[1.0]);
+    }
+
+    #[test]
+    fn jsonl_round_trips_through_parser() {
+        let dir = std::env::temp_dir().join("omgd_test_jsonl");
+        let path = dir.join("e.jsonl");
+        {
+            let mut w = JsonlWriter::create(&path).unwrap();
+            w.event(&[
+                ("kind", CsvCell::S("step".into())),
+                ("loss", CsvCell::F(1.25)),
+                ("n", CsvCell::I(3)),
+            ])
+            .unwrap();
+            w.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let parsed = crate::util::json::Json::parse(text.trim()).unwrap();
+        assert_eq!(parsed.at("kind").as_str(), Some("step"));
+        assert_eq!(parsed.at("loss").as_f64(), Some(1.25));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn format_g_cases() {
+        assert_eq!(format_g(1.0), "1");
+        assert_eq!(format_g(0.5), "0.5");
+        assert_eq!(format_g(0.000001), "1e-6");
+        assert_eq!(format_g(123456.75), "123456.75");
+    }
+
+    #[test]
+    fn summary_statistics() {
+        let mut s = Summary::new();
+        for x in [1.0, 2.0, 3.0, 4.0, 5.0] {
+            s.add(x);
+        }
+        assert_eq!(s.n, 5);
+        assert!((s.mean() - 3.0).abs() < 1e-12);
+        assert!((s.std() - (2.5f64).sqrt()).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 5.0);
+        assert_eq!(s.percentile(0.0), 1.0);
+        assert_eq!(s.percentile(50.0), 3.0);
+        assert_eq!(s.percentile(100.0), 5.0);
+    }
+
+    #[test]
+    fn timer_monotonic() {
+        let mut t = Timer::start();
+        let a = t.lap();
+        let b = t.lap();
+        assert!(a >= 0.0 && b >= 0.0);
+        assert!(t.total() >= a + b - 1e-6);
+    }
+}

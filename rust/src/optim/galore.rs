@@ -1,0 +1,77 @@
+//! GaLore baseline (Zhao et al., 2024) — thin constructor over the shared
+//! low-rank projection machinery in [`super::golore`] with the top-r
+//! singular-subspace projection (the deterministic, dominated-subspace
+//! variant whose persistent bias §1(i) and §5.1 analyze).
+
+use crate::manifest::ParamInfo;
+use crate::optim::golore::{GoloreOptimizer, ProjectionKind};
+
+/// GaLore = projection onto the gradient's top-r singular block.
+pub type GaloreOptimizer = GoloreOptimizer;
+
+/// Construct a GaLore optimizer (top-singular projection).
+pub fn galore(
+    params: &[ParamInfo],
+    n: usize,
+    rank: usize,
+    refresh: usize,
+    seed: u64,
+) -> GaloreOptimizer {
+    GoloreOptimizer::new(ProjectionKind::TopSingular, params, n, rank,
+                         refresh, seed)
+}
+
+/// Construct a GoLore optimizer (random Stiefel projection).
+pub fn golore(
+    params: &[ParamInfo],
+    n: usize,
+    rank: usize,
+    refresh: usize,
+    seed: u64,
+) -> GaloreOptimizer {
+    GoloreOptimizer::new(ProjectionKind::RandomStiefel, params, n, rank,
+                         refresh, seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Mask;
+    use crate::optim::Optimizer;
+    use crate::rng::Rng;
+
+    #[test]
+    fn constructors_pick_kind() {
+        let params = vec![ParamInfo {
+            name: "w".into(),
+            shape: vec![16, 16],
+            layer: "b".into(),
+            offset: 0,
+            len: 256,
+        }];
+        assert_eq!(galore(&params, 256, 4, 10, 0).name(), "galore");
+        assert_eq!(golore(&params, 256, 4, 10, 0).name(), "golore");
+    }
+
+    #[test]
+    fn galore_descends_quadratic() {
+        let params = vec![ParamInfo {
+            name: "w".into(),
+            shape: vec![16, 16],
+            layer: "b".into(),
+            offset: 0,
+            len: 256,
+        }];
+        let mut rng = Rng::seed_from_u64(3);
+        let mut p: Vec<f32> = (0..256).map(|_| rng.normal32()).collect();
+        let mut opt = galore(&params, 256, 4, 20, 0);
+        let mask = Mask::ones(256);
+        let n0: f32 = p.iter().map(|x| x * x).sum();
+        for _ in 0..200 {
+            let g = p.clone();
+            opt.step(&mut p, &g, &mask, 0.05);
+        }
+        let n1: f32 = p.iter().map(|x| x * x).sum();
+        assert!(n1 < n0, "galore failed to descend: {n1} vs {n0}");
+    }
+}

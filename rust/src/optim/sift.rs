@@ -1,0 +1,157 @@
+//! SIFT baseline (Song et al., 2023): gradient-magnitude-based sparse
+//! fine-tuning. Each period the optimizer re-selects the top-k fraction
+//! of coordinates by |g| and only updates (and keeps Adam state for)
+//! those — "sparse is enough" component sparsification.
+
+use crate::coordinator::Mask;
+use crate::optim::{MaskedAdamW, Optimizer};
+
+pub struct SiftOptimizer {
+    inner: MaskedAdamW,
+    /// Fraction of coordinates kept.
+    pub topk: f64,
+    /// Steps between re-selections.
+    pub refresh: usize,
+    /// Current selection mask (1.0 on kept coords).
+    sel: Mask,
+    t: u64,
+    /// Only the first `total` coords participate (padding excluded).
+    total: usize,
+}
+
+impl SiftOptimizer {
+    pub fn new(n: usize, total: usize, topk: f64, refresh: usize) -> Self {
+        assert!(topk > 0.0 && topk <= 1.0);
+        Self {
+            inner: MaskedAdamW::default_hp(n),
+            topk,
+            refresh: refresh.max(1),
+            sel: Mask::zeros(n),
+            t: 0,
+            total,
+        }
+    }
+
+    fn reselect(&mut self, g: &[f32]) {
+        let k = ((self.total as f64) * self.topk).ceil() as usize;
+        // Partial select: nth_element by |g|.
+        let mut idx: Vec<usize> = (0..self.total).collect();
+        let kk = k.min(self.total).max(1);
+        idx.select_nth_unstable_by(kk - 1, |&a, &b| {
+            g[b].abs().partial_cmp(&g[a].abs()).unwrap()
+        });
+        self.sel = Mask::zeros(self.sel.len());
+        for &i in &idx[..kk] {
+            self.sel.values[i] = 1.0;
+        }
+    }
+
+    pub fn selected(&self) -> usize {
+        self.sel.active_count()
+    }
+}
+
+impl Optimizer for SiftOptimizer {
+    fn step(&mut self, p: &mut [f32], g: &[f32], mask: &Mask, lr: f32) {
+        if self.t % self.refresh as u64 == 0 {
+            self.reselect(g);
+        }
+        self.t += 1;
+        // Intersect the caller's mask with the top-k selection, keeping
+        // the caller's scale.
+        let mut eff = mask.clone();
+        for (e, &s) in eff.values.iter_mut().zip(&self.sel.values) {
+            if s == 0.0 {
+                *e = 0.0;
+            }
+        }
+        self.inner.step(p, g, &eff, lr);
+    }
+
+    fn state_bytes(&self) -> usize {
+        // Residency model: only selected coordinates need moments.
+        self.sel.active_count() * 8
+    }
+
+    fn name(&self) -> &'static str {
+        "sift"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn selects_topk_by_magnitude() {
+        let n = 100;
+        let mut opt = SiftOptimizer::new(n, n, 0.1, 1000);
+        let mut g = vec![0.01f32; n];
+        for i in 0..10 {
+            g[i * 10] = 10.0 - i as f32; // 10 large coords
+        }
+        let mut p = vec![0.0f32; n];
+        opt.step(&mut p, &g, &Mask::ones(n), 0.1);
+        assert_eq!(opt.selected(), 10);
+        // only those ten moved
+        let moved: Vec<usize> =
+            (0..n).filter(|&i| p[i] != 0.0).collect();
+        assert_eq!(moved.len(), 10);
+        assert!(moved.iter().all(|&i| i % 10 == 0));
+    }
+
+    #[test]
+    fn refresh_reselects() {
+        let n = 32;
+        let mut opt = SiftOptimizer::new(n, n, 0.25, 1);
+        let mut p = vec![0.0f32; n];
+        let mut g1 = vec![0.0f32; n];
+        g1[0] = 1.0;
+        g1[1] = 1.0;
+        let mut g2 = vec![0.0f32; n];
+        g2[30] = 1.0;
+        g2[31] = 1.0;
+        opt.step(&mut p, &g1, &Mask::ones(n), 0.1);
+        assert!(p[0] != 0.0);
+        let p30_before = p[30];
+        opt.step(&mut p, &g2, &Mask::ones(n), 0.1);
+        assert!(p[30] != p30_before, "reselection failed");
+    }
+
+    #[test]
+    fn respects_outer_mask() {
+        let n = 16;
+        let mut opt = SiftOptimizer::new(n, n, 1.0, 1);
+        let mut p = vec![0.0f32; n];
+        let g = vec![1.0f32; n];
+        let mut outer = Mask::zeros(n);
+        outer.set_segment(0, 8, 1.0);
+        opt.step(&mut p, &g, &outer, 0.1);
+        assert!(p[..8].iter().all(|&x| x != 0.0));
+        assert!(p[8..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn padding_excluded_from_selection() {
+        let n = 64;
+        let total = 48;
+        let mut opt = SiftOptimizer::new(n, total, 1.0, 1);
+        let g = vec![1.0f32; n];
+        let mut p = vec![0.0f32; n];
+        opt.step(&mut p, &g, &Mask::ones(n), 0.1);
+        assert!(p[total..].iter().all(|&x| x == 0.0));
+        assert_eq!(opt.selected(), total);
+    }
+
+    #[test]
+    fn state_bytes_tracks_selection() {
+        let n = 1000;
+        let mut opt = SiftOptimizer::new(n, n, 0.1, 1);
+        let mut rng = Rng::seed_from_u64(0);
+        let g: Vec<f32> = (0..n).map(|_| rng.normal32()).collect();
+        let mut p = vec![0.0f32; n];
+        opt.step(&mut p, &g, &Mask::ones(n), 0.01);
+        assert_eq!(opt.state_bytes(), 100 * 8);
+    }
+}

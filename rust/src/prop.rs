@@ -1,0 +1,123 @@
+//! Property-testing mini-framework (proptest replacement).
+//!
+//! Deterministic, seed-driven random-case runner: a property is a closure
+//! over a [`Gen`] handle; `check` runs it across many derived seeds and
+//! reports the failing seed so a regression can be pinned as an explicit
+//! unit test. No shrinking — failing seeds are small, inspectable inputs
+//! by construction (generators take explicit bounds).
+
+use crate::rng::Rng;
+
+/// Generation handle passed to each property case.
+pub struct Gen {
+    pub rng: Rng,
+    pub case: usize,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + self.rng.index(hi - lo + 1)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.f64() * (hi - lo)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.f64() < 0.5
+    }
+
+    pub fn vec_f32(&mut self, len: usize, scale: f32) -> Vec<f32> {
+        (0..len).map(|_| scale * self.rng.normal32()).collect()
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.index(xs.len())]
+    }
+}
+
+/// Run `cases` random cases of `prop`; panic with the failing case/seed.
+pub fn check<F: FnMut(&mut Gen)>(name: &str, cases: usize, mut prop: F) {
+    let base = env_seed();
+    for case in 0..cases {
+        let seed = base ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut g = Gen { rng: Rng::seed_from_u64(seed), case };
+        let result = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| prop(&mut g)),
+        );
+        if let Err(err) = result {
+            let msg = err
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| {
+                    err.downcast_ref::<&str>().map(|s| s.to_string())
+                })
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property {name:?} failed at case {case} \
+                 (OMGD_PROP_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Replay a single failing case by seed.
+pub fn replay<F: FnMut(&mut Gen)>(seed: u64, mut prop: F) {
+    let mut g = Gen { rng: Rng::seed_from_u64(seed), case: 0 };
+    prop(&mut g);
+}
+
+fn env_seed() -> u64 {
+    std::env::var("OMGD_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xD1CE_5EED)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_runs_all_cases() {
+        let mut count = 0usize;
+        check("counting", 25, |_| count += 1);
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        check("bounds", 50, |g| {
+            let n = g.usize_in(3, 9);
+            assert!((3..=9).contains(&n));
+            let x = g.f64_in(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&x));
+            let v = g.vec_f32(n, 2.0);
+            assert_eq!(v.len(), n);
+            let item = *g.pick(&[1, 2, 3]);
+            assert!([1, 2, 3].contains(&item));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"fails\" failed")]
+    fn failing_property_reports_seed() {
+        check("fails", 10, |g| {
+            let n = g.usize_in(0, 100);
+            assert!(n < 101); // passes
+            if g.case == 7 {
+                panic!("boom");
+            }
+        });
+    }
+
+    #[test]
+    fn replay_is_deterministic() {
+        let mut a = Vec::new();
+        replay(42, |g| a.push(g.usize_in(0, 1000)));
+        let mut b = Vec::new();
+        replay(42, |g| b.push(g.usize_in(0, 1000)));
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,433 @@
+//! §5.1 illustrative-example testbed: SGD on a quadratic with the four
+//! gradient forms of the paper, plus the exact error decomposition.
+//!
+//! The SGD recursion `θ_{t+1} − θ* = (I − η_t A)(θ_t − θ*) + η_t(∇F − g_t)`
+//! splits `θ_t − θ*` into three exactly-tracked accumulators:
+//!
+//! * decay term       `D_{t+1} = (I − η_t A) D_t`,  `D_0 = θ_0 − θ*`
+//! * data-reshuffle   `R_{t+1} = (I − η_t A) R_t + η_t (∇F(θ_t) − ∇f(θ_t; z_t))`
+//! * compression-err  `C_{t+1} = (I − η_t A) C_t + η_t (∇f(θ_t; z_t) − g_t)`
+//!
+//! with `θ_t − θ* = D_t + R_t + C_t` as an identity — this regenerates all
+//! four panels of Figure 2 and verifies Theorems 5.3/5.4's rates
+//! (`O(t⁻²)` for RR / RR_mask_wor, `Ω(t⁻¹)` for RR_mask_iid / RR_proj).
+
+use crate::coordinator::{DataSampler, MaskSet, OmgdCycle};
+use crate::data::LinRegData;
+use crate::linalg::{axpy, stiefel, Mat};
+use crate::rng::Rng;
+
+/// Stochastic-gradient forms of §5.1 (+ appendix i.i.d.-sampling forms).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum GradForm {
+    /// Plain RR-SGD.
+    Rr,
+    /// OMGD: Algorithm 1 with coordinate-partition masks, keep ratio r.
+    RrMaskWor { r: f64 },
+    /// i.i.d. Bernoulli(r)/r mask over RR sampling (Remark 4.10).
+    RrMaskIid { r: f64 },
+    /// i.i.d. Stiefel low-rank projection (1/r)·P Pᵀ over RR (GoLore-like).
+    RrProj { r: f64 },
+    /// With-replacement sampling (appendix Theorem A.3 baselines).
+    Iid,
+    /// With-replacement sampling + i.i.d. mask.
+    IidMaskIid { r: f64 },
+}
+
+impl GradForm {
+    pub fn name(&self) -> &'static str {
+        match self {
+            GradForm::Rr => "RR",
+            GradForm::RrMaskWor { .. } => "RR_mask_wor",
+            GradForm::RrMaskIid { .. } => "RR_mask_iid",
+            GradForm::RrProj { .. } => "RR_proj",
+            GradForm::Iid => "IID",
+            GradForm::IidMaskIid { .. } => "IID_mask_iid",
+        }
+    }
+}
+
+/// Trace of squared norms at checkpoints (single run or mean over reps).
+#[derive(Clone, Debug)]
+pub struct Trace {
+    pub steps: Vec<usize>,
+    /// ‖θ_t − θ*‖²
+    pub overall: Vec<f64>,
+    /// ‖decay term‖²
+    pub decay: Vec<f64>,
+    /// ‖data-reshuffle term‖²
+    pub reshuffle: Vec<f64>,
+    /// ‖compression-error term‖²
+    pub compression: Vec<f64>,
+}
+
+/// Experiment parameters (Appendix B.1 defaults).
+#[derive(Clone, Copy, Debug)]
+pub struct QuadParams {
+    /// Step-size constant: η_t = c0 / max(t, t0).
+    pub c0: f64,
+    /// Iterations.
+    pub t_max: usize,
+    /// Compression activates after this many steps (paper: 100).
+    pub warmup: usize,
+    /// Log-spaced checkpoints per decade.
+    pub points_per_decade: usize,
+}
+
+impl Default for QuadParams {
+    fn default() -> Self {
+        Self { c0: 2.0, t_max: 100_000, warmup: 100,
+               points_per_decade: 8 }
+    }
+}
+
+/// Log-spaced checkpoint schedule in `[10, t_max]`.
+pub fn checkpoints(t_max: usize, per_decade: usize) -> Vec<usize> {
+    let mut pts = Vec::new();
+    let mut last = 0usize;
+    let decades = (t_max as f64).log10();
+    let n = (decades * per_decade as f64).ceil() as usize;
+    for i in 0..=n {
+        let t = (10f64.powf(1.0 + (decades - 1.0) * i as f64 / n as f64))
+            .round() as usize;
+        let t = t.min(t_max);
+        if t > last {
+            pts.push(t);
+            last = t;
+        }
+    }
+    pts
+}
+
+/// One full run of a gradient form; returns the four traces.
+pub fn run(data: &LinRegData, form: GradForm, params: QuadParams,
+           seed: u64) -> Trace {
+    let d = data.d;
+    let n = data.n;
+    let mut rng = Rng::seed_from_u64(seed);
+
+    // Stability: η_t λ_max < 1 requires t ≥ t0 > c0 λ_max.
+    let t0 = (params.c0 * data.lambda_max).ceil() as usize + 1;
+    let eta = |t: usize| params.c0 / (t.max(t0) as f64);
+
+    let mut theta = vec![0.0f64; d];
+    let mut decay: Vec<f64> =
+        theta.iter().zip(&data.theta_star).map(|(t, s)| t - s).collect();
+    let mut resh = vec![0.0f64; d];
+    let mut comp = vec![0.0f64; d];
+
+    let pts = checkpoints(params.t_max, params.points_per_decade);
+    let mut trace = Trace {
+        steps: Vec::new(),
+        overall: Vec::new(),
+        decay: Vec::new(),
+        reshuffle: Vec::new(),
+        compression: Vec::new(),
+    };
+
+    // Sampling state.
+    let mut rr = DataSampler::rr(n);
+    let use_rr = !matches!(form, GradForm::Iid | GradForm::IidMaskIid { .. });
+
+    // OMGD state (masks over [M]×[N] cycle).
+    let (mut omgd, mut mask_set) = match form {
+        GradForm::RrMaskWor { r } => {
+            let m = (1.0 / r).ceil() as usize;
+            (Some(OmgdCycle::new(m, n)), Some(MaskSet::coordinate_partition(
+                d, d, r, &mut rng)))
+        }
+        _ => (None, None),
+    };
+
+    let mut next_pt = 0usize;
+    for t in 0..params.t_max {
+        let et = eta(t);
+        let compress = t >= params.warmup;
+
+        // --- choose sample (and mask index for OMGD) ---
+        let (i, mask_j) = if let Some(cyc) = omgd.as_mut() {
+            if compress {
+                let (pair, fresh) = cyc.next(&mut rng);
+                if fresh {
+                    // Algorithm 1 line 4: fresh mask set per cycle.
+                    if let GradForm::RrMaskWor { r } = form {
+                        mask_set = Some(MaskSet::coordinate_partition(
+                            d, d, r, &mut rng));
+                    }
+                }
+                (pair.sample, Some(pair.mask))
+            } else {
+                (rr.next(&mut rng).0, None)
+            }
+        } else if use_rr {
+            (rr.next(&mut rng).0, None)
+        } else {
+            (rng.index(n), None)
+        };
+
+        // --- gradients ---
+        let gf = data.grad_sample(&theta, i); // ∇f(θ_t; z_t)
+        let gfull = data.grad_full(&theta); // ∇F(θ_t)
+        let g: Vec<f64> = if !compress {
+            gf.clone()
+        } else {
+            match form {
+                GradForm::Rr | GradForm::Iid => gf.clone(),
+                GradForm::RrMaskWor { .. } => {
+                    let set = mask_set.as_ref().unwrap();
+                    let mask = &set.masks[mask_j.unwrap()];
+                    gf.iter()
+                        .zip(&mask.values)
+                        .map(|(&x, &m)| x * m as f64)
+                        .collect()
+                }
+                GradForm::RrMaskIid { r }
+                | GradForm::IidMaskIid { r } => {
+                    // Remark 4.10: exactly r·d coords, scale 1/r.
+                    let k = ((d as f64) * r).round() as usize;
+                    let sel = rng.choose_k(d, k);
+                    let mut g = vec![0.0; d];
+                    for &c in &sel {
+                        g[c] = gf[c] / r;
+                    }
+                    g
+                }
+                GradForm::RrProj { r } => {
+                    let k = ((d as f64) * r).round() as usize;
+                    let p = stiefel(d, k, &mut rng);
+                    // (1/r) P Pᵀ g
+                    let pt_g = p.transpose().matvec(&gf);
+                    let proj = p.matvec(&pt_g);
+                    proj.iter().map(|x| x / r).collect()
+                }
+            }
+        };
+
+        // --- decomposition recursions: v ← (I − η A) v + η src ---
+        let step_lin = |v: &mut Vec<f64>, a: &Mat, et: f64| {
+            let av = a.matvec(v);
+            axpy(-et, &av, v);
+        };
+        step_lin(&mut decay, &data.a, et);
+        step_lin(&mut resh, &data.a, et);
+        let src_r: Vec<f64> =
+            gfull.iter().zip(&gf).map(|(f, s)| f - s).collect();
+        axpy_into(&mut resh, et, &src_r);
+        step_lin(&mut comp, &data.a, et);
+        let src_c: Vec<f64> =
+            gf.iter().zip(&g).map(|(s, gg)| s - gg).collect();
+        axpy_into(&mut comp, et, &src_c);
+
+        // --- parameter update ---
+        axpy(-et, &g, &mut theta);
+
+        // --- record ---
+        if next_pt < pts.len() && t + 1 == pts[next_pt] {
+            trace.steps.push(t + 1);
+            trace.overall.push(data.err_sq(&theta));
+            trace.decay.push(sq(&decay));
+            trace.reshuffle.push(sq(&resh));
+            trace.compression.push(sq(&comp));
+            next_pt += 1;
+        }
+    }
+    trace
+}
+
+/// Mean trace over `reps` independent runs (E‖·‖² estimates).
+pub fn run_mean(data: &LinRegData, form: GradForm, params: QuadParams,
+                reps: usize, seed: u64) -> Trace {
+    let mut acc: Option<Trace> = None;
+    for r in 0..reps {
+        let t = run(data, form, params, seed.wrapping_add(r as u64 * 7919));
+        acc = Some(match acc {
+            None => t,
+            Some(mut a) => {
+                for i in 0..a.overall.len() {
+                    a.overall[i] += t.overall[i];
+                    a.decay[i] += t.decay[i];
+                    a.reshuffle[i] += t.reshuffle[i];
+                    a.compression[i] += t.compression[i];
+                }
+                a
+            }
+        });
+    }
+    let mut a = acc.expect("reps >= 1");
+    let k = reps as f64;
+    for v in [&mut a.overall, &mut a.decay, &mut a.reshuffle,
+              &mut a.compression] {
+        for x in v.iter_mut() {
+            *x /= k;
+        }
+    }
+    a
+}
+
+/// Least-squares slope of `log y` vs `log t` over the tail fraction of a
+/// trace (rate estimator: slope ≈ −2 for O(t⁻²), −1 for Θ(t⁻¹)).
+pub fn loglog_slope(steps: &[usize], ys: &[f64], tail_frac: f64) -> f64 {
+    let n = steps.len();
+    let start = ((1.0 - tail_frac) * n as f64) as usize;
+    let xs: Vec<f64> = steps[start..]
+        .iter()
+        .map(|&t| (t as f64).ln())
+        .collect();
+    let ls: Vec<f64> = ys[start..]
+        .iter()
+        .map(|&y| y.max(1e-300).ln())
+        .collect();
+    let m = xs.len() as f64;
+    let mx = xs.iter().sum::<f64>() / m;
+    let my = ls.iter().sum::<f64>() / m;
+    let num: f64 = xs.iter().zip(&ls).map(|(x, y)| (x - mx) * (y - my))
+        .sum();
+    let den: f64 = xs.iter().map(|x| (x - mx) * (x - mx)).sum();
+    num / den
+}
+
+/// First-passage iteration counts: smallest t with ‖θ_t − θ*‖ ≤ ε for
+/// each ε (running min), for the Table 1 complexity experiment.
+pub fn first_passage(data: &LinRegData, form: GradForm,
+                     params: QuadParams, eps: &[f64], seed: u64)
+                     -> Vec<Option<usize>> {
+    let trace = run(data, form, params, seed);
+    let mut out = vec![None; eps.len()];
+    let mut best = f64::INFINITY;
+    for (idx, &t) in trace.steps.iter().enumerate() {
+        best = best.min(trace.overall[idx].sqrt());
+        for (e_i, &e) in eps.iter().enumerate() {
+            if out[e_i].is_none() && best <= e {
+                out[e_i] = Some(t);
+            }
+        }
+    }
+    out
+}
+
+fn sq(v: &[f64]) -> f64 {
+    v.iter().map(|x| x * x).sum()
+}
+
+fn axpy_into(y: &mut [f64], s: f64, x: &[f64]) {
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi += s * xi;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_data() -> LinRegData {
+        LinRegData::generate(6, 100, 42)
+    }
+
+    fn fast_params() -> QuadParams {
+        QuadParams { c0: 2.0, t_max: 20_000, warmup: 100,
+                     points_per_decade: 6 }
+    }
+
+    #[test]
+    fn decomposition_identity_holds() {
+        // θ_t − θ* = decay + reshuffle + compression, exactly.
+        let data = small_data();
+        let params = QuadParams { t_max: 2000, ..fast_params() };
+        for form in [GradForm::Rr, GradForm::RrMaskIid { r: 0.5 },
+                     GradForm::RrMaskWor { r: 0.5 }] {
+            let tr = run(&data, form, params, 7);
+            // ‖θ−θ*‖ ≤ ‖D‖+‖R‖+‖C‖ (triangle); and the sum of sq-norms
+            // must dominate overall/3 (parallelogram). Check the sharper
+            // statement numerically by re-deriving overall from terms is
+            // not possible from norms alone, so check consistency bound:
+            for i in 0..tr.steps.len() {
+                let bound = 3.0 * (tr.decay[i] + tr.reshuffle[i]
+                    + tr.compression[i]);
+                assert!(tr.overall[i] <= bound + 1e-9,
+                        "{} > {bound} at {}", tr.overall[i], tr.steps[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn rr_converges_fast() {
+        let data = small_data();
+        let tr = run_mean(&data, GradForm::Rr, fast_params(), 3, 1);
+        let last = *tr.overall.last().unwrap();
+        assert!(last < 1e-4, "RR final err {last}");
+        let slope = loglog_slope(&tr.steps, &tr.overall, 0.5);
+        assert!(slope < -1.4, "RR slope {slope} (want ≈ −2)");
+    }
+
+    #[test]
+    fn wor_mask_matches_rr_rate() {
+        let data = small_data();
+        let tr = run_mean(&data, GradForm::RrMaskWor { r: 0.5 },
+                          fast_params(), 3, 2);
+        let slope = loglog_slope(&tr.steps, &tr.overall, 0.5);
+        assert!(slope < -1.4, "OMGD slope {slope} (want ≈ −2)");
+    }
+
+    #[test]
+    fn iid_mask_is_slower() {
+        let data = small_data();
+        let tr = run_mean(&data, GradForm::RrMaskIid { r: 0.5 },
+                          fast_params(), 3, 3);
+        let slope = loglog_slope(&tr.steps, &tr.overall, 0.5);
+        assert!(slope > -1.5, "iid-mask slope {slope} (want ≈ −1)");
+        // and strictly worse than wor at the horizon
+        let wor = run_mean(&data, GradForm::RrMaskWor { r: 0.5 },
+                           fast_params(), 3, 3);
+        assert!(
+            *tr.overall.last().unwrap() > 3.0 * wor.overall.last().unwrap(),
+            "iid {} vs wor {}", tr.overall.last().unwrap(),
+            wor.overall.last().unwrap()
+        );
+    }
+
+    #[test]
+    fn compression_term_dominates_for_iid() {
+        let data = small_data();
+        let tr = run_mean(&data, GradForm::RrMaskIid { r: 0.5 },
+                          fast_params(), 3, 4);
+        let i = tr.steps.len() - 1;
+        assert!(tr.compression[i] > tr.decay[i]);
+        assert!(tr.compression[i] > tr.reshuffle[i]);
+    }
+
+    #[test]
+    fn compression_term_zero_for_rr() {
+        let data = small_data();
+        let tr = run(&data, GradForm::Rr, fast_params(), 5);
+        assert!(tr.compression.iter().all(|&c| c == 0.0));
+    }
+
+    #[test]
+    fn checkpoints_monotone_and_bounded() {
+        let pts = checkpoints(100_000, 8);
+        assert!(pts.windows(2).all(|w| w[0] < w[1]));
+        assert_eq!(*pts.last().unwrap(), 100_000);
+        assert!(pts[0] >= 10);
+    }
+
+    #[test]
+    fn loglog_slope_recovers_known_rate() {
+        let steps: Vec<usize> = (1..=50).map(|i| i * 100).collect();
+        let ys: Vec<f64> =
+            steps.iter().map(|&t| 3.0 / (t as f64).powi(2)).collect();
+        let s = loglog_slope(&steps, &ys, 1.0);
+        assert!((s + 2.0).abs() < 1e-9, "slope {s}");
+    }
+
+    #[test]
+    fn first_passage_monotone_in_eps() {
+        let data = small_data();
+        let eps = [0.3, 0.1, 0.03];
+        let fp = first_passage(&data, GradForm::Rr, fast_params(), &eps, 6);
+        let mut prev = 0usize;
+        for t in fp.iter().flatten() {
+            assert!(*t >= prev);
+            prev = *t;
+        }
+    }
+}

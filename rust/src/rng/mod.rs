@@ -1,0 +1,230 @@
+//! Deterministic pseudo-random numbers (no external crates).
+//!
+//! `splitmix64` seeds `Xoshiro256++`, the generator used for every
+//! stochastic choice in the library: data reshuffling, mask generation,
+//! the `[M]×[N]` cycle permutation, synthetic datasets and Stiefel
+//! sampling. Determinism given a seed is load-bearing — every experiment
+//! in EXPERIMENTS.md records its seed.
+
+mod xoshiro;
+
+pub use xoshiro::Xoshiro256pp;
+
+/// The library-wide RNG handle. Thin alias so call-sites stay agnostic of
+/// the concrete generator.
+pub type Rng = Xoshiro256pp;
+
+/// splitmix64 step — used to expand a single `u64` seed into generator
+/// state, and as a cheap standalone hash.
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    /// Uniform `f64` in `[0, 1)` with 53 bits of entropy.
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform `f32` in `[0, 1)`.
+    pub fn f32(&mut self) -> f32 {
+        self.f64() as f32
+    }
+
+    /// Uniform integer in `[0, n)` via Lemire's rejection method
+    /// (unbiased).
+    pub fn below(&mut self, n: u64) -> u64 {
+        assert!(n > 0, "below(0)");
+        loop {
+            let x = self.next_u64();
+            let (hi, lo) = mul_u64(x, n);
+            if lo >= n || lo >= x.wrapping_neg() % n {
+                return hi;
+            }
+        }
+    }
+
+    /// Uniform `usize` index in `[0, n)`.
+    pub fn index(&mut self, n: usize) -> usize {
+        self.below(n as u64) as usize
+    }
+
+    /// Standard normal via Box–Muller (uses both outputs is unnecessary —
+    /// simplicity beats a cached half here).
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.f64();
+            if u1 > 1e-300 {
+                let u2 = self.f64();
+                let r = (-2.0 * u1.ln()).sqrt();
+                return r * (2.0 * std::f64::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    /// Standard normal as f32.
+    pub fn normal32(&mut self) -> f32 {
+        self.normal() as f32
+    }
+
+    /// In-place Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.index(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Fresh random permutation of `0..n`.
+    pub fn permutation(&mut self, n: usize) -> Vec<usize> {
+        let mut v: Vec<usize> = (0..n).collect();
+        self.shuffle(&mut v);
+        v
+    }
+
+    /// Sample `k` distinct indices from `0..n` without replacement
+    /// (partial Fisher–Yates; O(n) memory, O(k) swaps).
+    pub fn choose_k(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "choose_k: k={k} > n={n}");
+        let mut v: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.index(n - i);
+            v.swap(i, j);
+        }
+        v.truncate(k);
+        v
+    }
+
+    /// Derive an independent child generator (stream split) — hash the
+    /// parent's next output with a stream tag through splitmix64.
+    pub fn split(&mut self, tag: u64) -> Rng {
+        let mut s = self.next_u64() ^ tag.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let _ = splitmix64(&mut s);
+        Rng::seed_from_u64(s)
+    }
+}
+
+#[inline]
+fn mul_u64(a: u64, b: u64) -> (u64, u64) {
+    let wide = (a as u128) * (b as u128);
+    ((wide >> 64) as u64, wide as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Rng::seed_from_u64(42);
+        let mut b = Rng::seed_from_u64(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::seed_from_u64(1);
+        let mut b = Rng::seed_from_u64(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::seed_from_u64(7);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_is_unbiased_enough() {
+        let mut r = Rng::seed_from_u64(3);
+        let mut counts = [0usize; 10];
+        let n = 100_000;
+        for _ in 0..n {
+            counts[r.below(10) as usize] += 1;
+        }
+        for c in counts {
+            // each bucket expected 10_000; allow 5% deviation
+            assert!((c as f64 - 10_000.0).abs() < 500.0, "count {c}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::seed_from_u64(5);
+        let n = 200_000;
+        let (mut sum, mut sq) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = r.normal();
+            sum += x;
+            sq += x * x;
+        }
+        let mean = sum / n as f64;
+        let var = sq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.01, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.02, "var {var}");
+    }
+
+    #[test]
+    fn permutation_is_bijection() {
+        let mut r = Rng::seed_from_u64(11);
+        let p = r.permutation(1000);
+        let mut seen = vec![false; 1000];
+        for &i in &p {
+            assert!(!seen[i]);
+            seen[i] = true;
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn choose_k_distinct_and_in_range() {
+        let mut r = Rng::seed_from_u64(13);
+        for _ in 0..50 {
+            let ks = r.choose_k(20, 7);
+            assert_eq!(ks.len(), 7);
+            let mut s = ks.clone();
+            s.sort_unstable();
+            s.dedup();
+            assert_eq!(s.len(), 7);
+            assert!(ks.iter().all(|&i| i < 20));
+        }
+    }
+
+    #[test]
+    fn choose_k_full_is_permutation() {
+        let mut r = Rng::seed_from_u64(17);
+        let mut ks = r.choose_k(8, 8);
+        ks.sort_unstable();
+        assert_eq!(ks, (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn split_streams_are_independent_ish() {
+        let mut root = Rng::seed_from_u64(99);
+        let mut a = root.split(0);
+        let mut b = root.split(1);
+        let xs: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let ys: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        assert_ne!(xs, ys);
+    }
+
+    #[test]
+    fn shuffle_preserves_multiset() {
+        let mut r = Rng::seed_from_u64(23);
+        let mut v: Vec<u32> = (0..100).map(|i| i % 10).collect();
+        let mut sorted_before = v.clone();
+        sorted_before.sort_unstable();
+        r.shuffle(&mut v);
+        v.sort_unstable();
+        assert_eq!(v, sorted_before);
+    }
+}

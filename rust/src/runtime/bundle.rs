@@ -1,0 +1,165 @@
+//! Model bundle: manifest + compiled executables for one AOT config.
+//!
+//! All hot-path calls go through [`Executable::run_args`] (host slices →
+//! rust-owned device buffers → `execute_b`), which avoids both the
+//! literal-intermediate copy and the input-buffer leak of the crate's
+//! literal `execute` (see runtime/mod.rs).
+
+use super::{to_scalar_f32, to_vec_f32, Arg, Executable, Runtime};
+use crate::manifest::Manifest;
+use anyhow::{ensure, Context, Result};
+use std::path::Path;
+
+/// Which optimizer-update artifact to load.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UpdateKind {
+    AdamW,
+    Sgdm,
+}
+
+/// A loaded model: train / eval / fused-update executables + layout.
+pub struct ModelBundle {
+    pub man: Manifest,
+    pub train: Executable,
+    pub eval: Executable,
+    pub update: Executable,
+    pub update_kind: UpdateKind,
+}
+
+impl ModelBundle {
+    pub fn load(
+        rt: &Runtime,
+        artifacts_dir: &Path,
+        config: &str,
+        update_kind: UpdateKind,
+    ) -> Result<Self> {
+        let man = Manifest::load(artifacts_dir, config)?;
+        let train = rt.load(&man.hlo_path(&man.train_hlo))?;
+        let eval = rt.load(&man.hlo_path(&man.eval_hlo))?;
+        let upd_file = match update_kind {
+            UpdateKind::AdamW => &man.update_adamw_hlo,
+            UpdateKind::Sgdm => &man.update_sgdm_hlo,
+        };
+        let update = rt.load(&man.hlo_path(upd_file))?;
+        Ok(Self { man, train, eval, update, update_kind })
+    }
+
+    pub fn padded_len(&self) -> usize {
+        self.man.padded_len
+    }
+
+    /// Initial flat parameters from the AOT init dump.
+    pub fn init_params(&self) -> Result<Vec<f32>> {
+        self.man.load_init()
+    }
+
+    /// One LM forward/backward step: `(loss, grad)`. `x`/`y` are packed
+    /// row-major `i32[B, S]`.
+    pub fn train_step_lm(&self, flat: &[f32], x: &[i32], y: &[i32])
+                         -> Result<(f32, Vec<f32>)> {
+        ensure!(self.man.kind == "gpt", "train_step_lm on {}", self.man.kind);
+        let (b, s) = (self.man.data.batch, self.man.data.seq);
+        ensure!(x.len() == b * s && y.len() == b * s, "bad batch shape");
+        let out = self.train.run_args(&[
+            Arg::F32(flat, &[flat.len()]),
+            Arg::I32(x, &[b, s]),
+            Arg::I32(y, &[b, s]),
+        ])?;
+        ensure!(out.len() == 2, "train returned {} outputs", out.len());
+        Ok((to_scalar_f32(&out[0])?, to_vec_f32(&out[1])?))
+    }
+
+    /// One classifier step: `(loss, grad)`. `x` is packed `f32[B, d_in]`.
+    pub fn train_step_clf(&self, flat: &[f32], x: &[f32], y: &[i32])
+                          -> Result<(f32, Vec<f32>)> {
+        ensure!(self.man.kind == "mlp", "train_step_clf on {}",
+                self.man.kind);
+        let (b, d) = (self.man.data.batch, self.man.data.d_in);
+        ensure!(x.len() == b * d && y.len() == b, "bad batch shape");
+        let out = self.train.run_args(&[
+            Arg::F32(flat, &[flat.len()]),
+            Arg::F32(x, &[b, d]),
+            Arg::I32(y, &[b]),
+        ])?;
+        ensure!(out.len() == 2, "train returned {} outputs", out.len());
+        Ok((to_scalar_f32(&out[0])?, to_vec_f32(&out[1])?))
+    }
+
+    /// Held-out LM eval loss.
+    pub fn eval_step_lm(&self, flat: &[f32], x: &[i32], y: &[i32])
+                        -> Result<f32> {
+        let (b, s) = (self.man.data.batch, self.man.data.seq);
+        let out = self.eval.run_args(&[
+            Arg::F32(flat, &[flat.len()]),
+            Arg::I32(x, &[b, s]),
+            Arg::I32(y, &[b, s]),
+        ])?;
+        to_scalar_f32(out.first().context("no eval output")?)
+    }
+
+    /// Classifier eval: `(loss, n_correct)`.
+    pub fn eval_step_clf(&self, flat: &[f32], x: &[f32], y: &[i32])
+                         -> Result<(f32, f32)> {
+        let (b, d) = (self.man.data.batch, self.man.data.d_in);
+        let out = self.eval.run_args(&[
+            Arg::F32(flat, &[flat.len()]),
+            Arg::F32(x, &[b, d]),
+            Arg::I32(y, &[b]),
+        ])?;
+        ensure!(out.len() == 2, "eval returned {} outputs", out.len());
+        Ok((to_scalar_f32(&out[0])?, to_scalar_f32(&out[1])?))
+    }
+
+    /// Fused masked-AdamW update (the L1 Pallas kernel, AOT-compiled):
+    /// `(p, m, v) ← kernel(hp, p, g, mask, m, v)`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn adamw_update(
+        &self,
+        p: &mut Vec<f32>,
+        g: &[f32],
+        mask: &[f32],
+        m: &mut Vec<f32>,
+        v: &mut Vec<f32>,
+        hp: &[f32; 8],
+    ) -> Result<()> {
+        ensure!(self.update_kind == UpdateKind::AdamW, "not an adamw bundle");
+        let n = p.len();
+        let out = self.update.run_args(&[
+            Arg::F32(hp, &[8]),
+            Arg::F32(p, &[n]),
+            Arg::F32(g, &[n]),
+            Arg::F32(mask, &[n]),
+            Arg::F32(m, &[n]),
+            Arg::F32(v, &[n]),
+        ])?;
+        ensure!(out.len() == 3, "update returned {} outputs", out.len());
+        *p = to_vec_f32(&out[0])?;
+        *m = to_vec_f32(&out[1])?;
+        *v = to_vec_f32(&out[2])?;
+        Ok(())
+    }
+
+    /// Fused masked-SGDM update: `(p, buf) ← kernel(hp, p, g, mask, buf)`.
+    pub fn sgdm_update(
+        &self,
+        p: &mut Vec<f32>,
+        g: &[f32],
+        mask: &[f32],
+        buf: &mut Vec<f32>,
+        hp: &[f32; 4],
+    ) -> Result<()> {
+        ensure!(self.update_kind == UpdateKind::Sgdm, "not an sgdm bundle");
+        let n = p.len();
+        let out = self.update.run_args(&[
+            Arg::F32(hp, &[4]),
+            Arg::F32(p, &[n]),
+            Arg::F32(g, &[n]),
+            Arg::F32(mask, &[n]),
+            Arg::F32(buf, &[n]),
+        ])?;
+        ensure!(out.len() == 2, "update returned {} outputs", out.len());
+        *p = to_vec_f32(&out[0])?;
+        *buf = to_vec_f32(&out[1])?;
+        Ok(())
+    }
+}

@@ -1,0 +1,227 @@
+//! PJRT runtime: load AOT-compiled HLO text and execute it from rust.
+//!
+//! Wraps the `xla` crate (xla_extension 0.5.1, CPU PJRT plugin):
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `client.compile` → `execute`. All artifacts were lowered with
+//! `return_tuple=True`, so every executable returns one tuple literal
+//! which [`Executable::run`] decomposes into its elements.
+//!
+//! [`ModelBundle`] packages the manifest plus the compiled train / eval /
+//! update executables for one AOT config — the unit the trainer works
+//! with.
+
+pub mod bundle;
+
+pub use bundle::ModelBundle;
+
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+use std::time::Instant;
+
+/// Handle to the PJRT CPU client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu: {e}"))?;
+        Ok(Self { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO-text artifact.
+    pub fn load(&self, path: &Path) -> Result<Executable> {
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parse {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {path:?}: {e}"))?;
+        Ok(Executable {
+            exe,
+            name: path
+                .file_name()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+            compile_secs: t0.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+/// A borrowed view of one executable argument (host data + dims).
+///
+/// Arguments are uploaded with `buffer_from_host_buffer` and executed via
+/// `execute_b` so the input device buffers are owned by rust and freed on
+/// drop. (The `xla` crate's literal-based `execute` leaks every input
+/// buffer — `buffer.release()` with no matching free in xla_rs.cc — which
+/// at ~58 MB/step OOM-killed long training runs; see EXPERIMENTS.md
+/// §Perf.)
+#[derive(Clone, Copy, Debug)]
+pub enum Arg<'a> {
+    F32(&'a [f32], &'a [usize]),
+    I32(&'a [i32], &'a [usize]),
+}
+
+/// A compiled entry point.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+    pub compile_secs: f64,
+}
+
+impl Executable {
+    /// Execute with host-slice inputs; returns the decomposed output
+    /// tuple as literals.
+    pub fn run_args(&self, args: &[Arg<'_>]) -> Result<Vec<xla::Literal>> {
+        let client = self.exe.client();
+        let mut bufs = Vec::with_capacity(args.len());
+        for (i, a) in args.iter().enumerate() {
+            let buf = match a {
+                Arg::F32(data, dims) => {
+                    client.buffer_from_host_buffer(data, dims, None)
+                }
+                Arg::I32(data, dims) => {
+                    client.buffer_from_host_buffer(data, dims, None)
+                }
+            }
+            .map_err(|e| anyhow!("{}: upload arg {i}: {e}", self.name))?;
+            bufs.push(buf);
+        }
+        let out = self
+            .exe
+            .execute_b(&bufs)
+            .map_err(|e| anyhow!("execute {}: {e}", self.name))?;
+        drop(bufs); // input device buffers freed here (rust-owned)
+        let buf = out
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| anyhow!("{}: no output buffer", self.name))?;
+        let mut lit = buf
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{}: to_literal: {e}", self.name))?;
+        match lit.shape().map_err(|e| anyhow!("shape: {e}"))? {
+            xla::Shape::Tuple(_) => lit
+                .decompose_tuple()
+                .map_err(|e| anyhow!("{}: decompose: {e}", self.name)),
+            _ => Ok(vec![lit]),
+        }
+    }
+
+    /// Execute with literal inputs (convenience for tests / small calls).
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let client = self.exe.client();
+        let device = client.devices().into_iter().next();
+        let mut bufs = Vec::with_capacity(inputs.len());
+        for (i, lit) in inputs.iter().enumerate() {
+            bufs.push(
+                client
+                    .buffer_from_host_literal(device.as_ref(), lit)
+                    .map_err(|e| {
+                        anyhow!("{}: upload literal {i}: {e}", self.name)
+                    })?,
+            );
+        }
+        let out = self
+            .exe
+            .execute_b(&bufs)
+            .map_err(|e| anyhow!("execute {}: {e}", self.name))?;
+        drop(bufs);
+        let buf = out
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| anyhow!("{}: no output buffer", self.name))?;
+        let mut lit = buf
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{}: to_literal: {e}", self.name))?;
+        match lit.shape().map_err(|e| anyhow!("shape: {e}"))? {
+            xla::Shape::Tuple(_) => lit
+                .decompose_tuple()
+                .map_err(|e| anyhow!("{}: decompose: {e}", self.name)),
+            _ => Ok(vec![lit]),
+        }
+    }
+}
+
+/// Build an `f32` literal with the given dimensions.
+pub fn lit_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let numel: i64 = dims.iter().product();
+    anyhow::ensure!(numel as usize == data.len(),
+                    "lit_f32: {} elements for dims {dims:?}", data.len());
+    let v = xla::Literal::vec1(data);
+    if dims.len() == 1 {
+        return Ok(v);
+    }
+    v.reshape(dims).map_err(|e| anyhow!("reshape: {e}"))
+}
+
+/// Build an `i32` literal with the given dimensions.
+pub fn lit_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let numel: i64 = dims.iter().product();
+    anyhow::ensure!(numel as usize == data.len(),
+                    "lit_i32: {} elements for dims {dims:?}", data.len());
+    let v = xla::Literal::vec1(data);
+    if dims.len() == 1 {
+        return Ok(v);
+    }
+    v.reshape(dims).map_err(|e| anyhow!("reshape: {e}"))
+}
+
+/// Build an `f32` scalar literal.
+pub fn lit_scalar_f32(x: f32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+/// Extract a `Vec<f32>` from a literal.
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e}"))
+}
+
+/// Extract the single `f32` value of a scalar literal.
+pub fn to_scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    lit.get_first_element::<f32>()
+        .map_err(|e| anyhow!("scalar f32: {e}"))
+}
+
+/// Locate the artifacts directory: explicit argument, `OMGD_ARTIFACTS`
+/// env var, or `./artifacts` (in that order).
+pub fn artifacts_dir(explicit: Option<&str>) -> std::path::PathBuf {
+    if let Some(p) = explicit {
+        return p.into();
+    }
+    if let Ok(p) = std::env::var("OMGD_ARTIFACTS") {
+        return p.into();
+    }
+    // Try CWD, then the crate root (useful under `cargo test`).
+    let cwd = Path::new("artifacts");
+    if cwd.exists() {
+        return cwd.into();
+    }
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+impl Runtime {
+    /// Helper used by integration tests: load the §5.1 linreg gradient
+    /// artifact and evaluate it.
+    pub fn linreg_grad(
+        &self,
+        exe: &Executable,
+        theta: &[f32],
+        x: &[f32],
+        y: f32,
+    ) -> Result<Vec<f32>> {
+        let d = theta.len() as i64;
+        let out = exe.run(&[
+            lit_f32(theta, &[d])?,
+            lit_f32(x, &[d])?,
+            lit_scalar_f32(y),
+        ])?;
+        to_vec_f32(out.first().context("no grad output")?)
+    }
+}

@@ -1,0 +1,204 @@
+//! Checkpointing: resumable training state on disk.
+//!
+//! Binary format (little-endian), version-tagged:
+//!
+//! ```text
+//! magic "OMGDCKPT" | u32 version | u64 step | u64 rng_seed_state
+//! u32 n_sections | per section: u32 name_len | name bytes |
+//!                                u64 elem_count | f32 data...
+//! ```
+//!
+//! Sections are named flat vectors (`params`, `adam_m`, `adam_v`,
+//! `sgdm_buf`, ...) so the format is optimizer-agnostic and
+//! forward-compatible: readers ignore unknown sections.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"OMGDCKPT";
+const VERSION: u32 = 1;
+
+/// In-memory checkpoint contents.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Checkpoint {
+    /// Global step at save time.
+    pub step: u64,
+    /// Opaque RNG replay tag (callers reseed with it).
+    pub rng_state: u64,
+    /// Named flat f32 sections.
+    pub sections: BTreeMap<String, Vec<f32>>,
+}
+
+impl Checkpoint {
+    pub fn new(step: u64, rng_state: u64) -> Self {
+        Self { step, rng_state, sections: BTreeMap::new() }
+    }
+
+    pub fn insert(&mut self, name: &str, data: Vec<f32>) {
+        self.sections.insert(name.to_string(), data);
+    }
+
+    pub fn get(&self, name: &str) -> Option<&[f32]> {
+        self.sections.get(name).map(|v| v.as_slice())
+    }
+
+    /// Required section or error (resume paths).
+    pub fn require(&self, name: &str) -> Result<&[f32]> {
+        self.get(name)
+            .with_context(|| format!("checkpoint missing section {name:?}"))
+    }
+
+    pub fn save<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        // Write via temp + rename so a crash never leaves a torn file.
+        let tmp = path.as_ref().with_extension("tmp");
+        {
+            let mut w = std::io::BufWriter::new(
+                std::fs::File::create(&tmp)
+                    .with_context(|| format!("creating {tmp:?}"))?,
+            );
+            w.write_all(MAGIC)?;
+            w.write_all(&VERSION.to_le_bytes())?;
+            w.write_all(&self.step.to_le_bytes())?;
+            w.write_all(&self.rng_state.to_le_bytes())?;
+            w.write_all(&(self.sections.len() as u32).to_le_bytes())?;
+            for (name, data) in &self.sections {
+                w.write_all(&(name.len() as u32).to_le_bytes())?;
+                w.write_all(name.as_bytes())?;
+                w.write_all(&(data.len() as u64).to_le_bytes())?;
+                for x in data {
+                    w.write_all(&x.to_le_bytes())?;
+                }
+            }
+            w.flush()?;
+        }
+        std::fs::rename(&tmp, path.as_ref())?;
+        Ok(())
+    }
+
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<Checkpoint> {
+        let mut r = std::io::BufReader::new(
+            std::fs::File::open(path.as_ref())
+                .with_context(|| format!("opening {:?}", path.as_ref()))?,
+        );
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("not an OMGD checkpoint (bad magic)");
+        }
+        let version = read_u32(&mut r)?;
+        if version != VERSION {
+            bail!("unsupported checkpoint version {version}");
+        }
+        let step = read_u64(&mut r)?;
+        let rng_state = read_u64(&mut r)?;
+        let n = read_u32(&mut r)? as usize;
+        let mut sections = BTreeMap::new();
+        for _ in 0..n {
+            let name_len = read_u32(&mut r)? as usize;
+            if name_len > 4096 {
+                bail!("corrupt checkpoint: section name {name_len} bytes");
+            }
+            let mut name = vec![0u8; name_len];
+            r.read_exact(&mut name)?;
+            let name = String::from_utf8(name)
+                .context("section name not utf8")?;
+            let count = read_u64(&mut r)? as usize;
+            let mut bytes = vec![0u8; count * 4];
+            r.read_exact(&mut bytes)?;
+            let data = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            sections.insert(name, data);
+        }
+        Ok(Checkpoint { step, rng_state, sections })
+    }
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64<R: Read>(r: &mut R) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("omgd_ckpt_{name}"))
+    }
+
+    #[test]
+    fn round_trip() {
+        let mut c = Checkpoint::new(1234, 0xDEAD_BEEF);
+        c.insert("params", vec![1.0, -2.5, 3.25]);
+        c.insert("adam_m", vec![0.0; 100]);
+        let path = tmp("rt.ckpt");
+        c.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back, c);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn require_missing_section_errors() {
+        let c = Checkpoint::new(0, 0);
+        assert!(c.require("params").is_err());
+    }
+
+    #[test]
+    fn rejects_garbage_file() {
+        let path = tmp("garbage.ckpt");
+        std::fs::write(&path, b"definitely not a checkpoint").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_truncated_file() {
+        let mut c = Checkpoint::new(7, 8);
+        c.insert("params", vec![1.0; 64]);
+        let path = tmp("trunc.ckpt");
+        c.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn empty_sections_ok() {
+        let c = Checkpoint::new(5, 6);
+        let path = tmp("empty.ckpt");
+        c.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.step, 5);
+        assert_eq!(back.rng_state, 6);
+        assert!(back.sections.is_empty());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn large_section_round_trip() {
+        let mut c = Checkpoint::new(1, 2);
+        let data: Vec<f32> = (0..100_000).map(|i| i as f32 * 0.5).collect();
+        c.insert("params", data.clone());
+        let path = tmp("large.ckpt");
+        c.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.get("params").unwrap(), data.as_slice());
+        std::fs::remove_file(&path).ok();
+    }
+}

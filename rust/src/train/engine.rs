@@ -1,0 +1,440 @@
+//! Method engine: one interface over the paper's method roster.
+//!
+//! Owns the current mask, the period-boundary refresh logic (the OMGD
+//! traversal state), and the optimizer backend:
+//!
+//! * HLO backend — the fused masked-update Pallas kernel via PJRT, used
+//!   by Full / mask / LISA methods (the paper's "plug-and-play into
+//!   mainstream optimizers" path — this IS the request-path hot loop);
+//! * native backend — GaLore/GoLore/SIFT baselines, whose projections
+//!   don't fit the fused elementwise kernel.
+
+use crate::config::{Method, OptFamily, RunConfig};
+use crate::coordinator::{LisaScheduler, LisaVariant, Mask, MaskSet};
+use crate::manifest::Manifest;
+use crate::optim::{galore, Optimizer, SiftOptimizer};
+use crate::rng::Rng;
+use crate::runtime::bundle::UpdateKind;
+use crate::runtime::ModelBundle;
+use anyhow::{ensure, Result};
+
+/// Which update path executes the step.
+enum Backend {
+    /// Fused HLO kernel; optimizer state lives in rust-owned flat vecs.
+    HloAdamW { m: Vec<f32>, v: Vec<f32>, t: u64 },
+    HloSgdm { buf: Vec<f32> },
+    /// Native baseline optimizer.
+    Native(Box<dyn Optimizer>),
+}
+
+/// Mask-refresh strategy at period boundaries.
+enum MaskPlan {
+    /// Fixed full mask.
+    Full,
+    /// Tensorwise i.i.d. resample (scale 1, the §5.2 naïve baseline).
+    TensorIid { r: f64 },
+    /// Tensorwise WOR: walk an eq.-(3) partition; fresh set per cycle.
+    TensorWor { r: f64, set: MaskSet, order: Vec<usize>, pos: usize },
+    /// LISA family via the Algorithm 2 scheduler.
+    Lisa { sched: LisaScheduler },
+    /// Mask fixed to full; the method lives in the native backend.
+    Passthrough,
+}
+
+/// The per-run method engine.
+pub struct MethodEngine {
+    pub method: Method,
+    man: Manifest,
+    mask: Mask,
+    plan: MaskPlan,
+    backend: Backend,
+    opt: crate::config::OptConfig,
+    /// Period boundaries seen (diagnostics).
+    pub periods: usize,
+}
+
+impl MethodEngine {
+    pub fn new(man: &Manifest, cfg: &RunConfig, rng: &mut Rng)
+               -> Result<Self> {
+        let n = man.padded_len;
+        let r = cfg.mask.keep_ratio;
+        let plan = match cfg.method {
+            Method::Full => MaskPlan::Full,
+            Method::IidMask => MaskPlan::TensorIid { r },
+            Method::WorMask => {
+                let set = MaskSet::tensor_partition(man, r, rng);
+                let order = rng.permutation(set.m());
+                MaskPlan::TensorWor { r, set, order, pos: 0 }
+            }
+            Method::Lisa | Method::LisaScale | Method::LisaWorNoScale
+            | Method::LisaWor => {
+                let variant = match cfg.method {
+                    Method::Lisa => LisaVariant::Lisa,
+                    Method::LisaScale => LisaVariant::LisaScale,
+                    Method::LisaWorNoScale => LisaVariant::LisaWorNoScale,
+                    _ => LisaVariant::LisaWor,
+                };
+                let middle = man.middle_layers();
+                ensure!(!middle.is_empty(),
+                        "{} has no middle layers for LISA", man.name);
+                MaskPlan::Lisa {
+                    sched: LisaScheduler::new(variant, middle,
+                                              cfg.mask.gamma),
+                }
+            }
+            Method::Galore | Method::Golore | Method::Sift => {
+                MaskPlan::Passthrough
+            }
+        };
+
+        let backend = match cfg.method {
+            Method::Galore => Backend::Native(Box::new(galore::galore(
+                &man.params, n, cfg.mask.rank, refresh_steps(cfg),
+                cfg.seed,
+            ))),
+            Method::Golore => Backend::Native(Box::new(galore::golore(
+                &man.params, n, cfg.mask.rank, refresh_steps(cfg),
+                cfg.seed,
+            ))),
+            Method::Sift => Backend::Native(Box::new(SiftOptimizer::new(
+                n, man.total_len, cfg.mask.topk, refresh_steps(cfg),
+            ))),
+            _ => match cfg.opt.family {
+                OptFamily::AdamW => Backend::HloAdamW {
+                    m: vec![0.0; n],
+                    v: vec![0.0; n],
+                    t: 0,
+                },
+                OptFamily::Sgdm => Backend::HloSgdm { buf: vec![0.0; n] },
+            },
+        };
+
+        // Mask starts full-over-real-params (padding frozen).
+        let mut mask = Mask::zeros(n);
+        mask.set_segment(0, man.total_len, 1.0);
+        Ok(Self {
+            method: cfg.method,
+            man: man.clone(),
+            mask,
+            plan,
+            backend,
+            opt: cfg.opt.clone(),
+            periods: 0,
+        })
+    }
+
+    /// Refresh the mask at a period boundary (K epochs / K steps).
+    pub fn on_period(&mut self, rng: &mut Rng) {
+        self.periods += 1;
+        let total = self.man.total_len;
+        match &mut self.plan {
+            MaskPlan::Full | MaskPlan::Passthrough => {}
+            MaskPlan::TensorIid { r } => {
+                let mut mask = MaskSet::tensor_iid(&self.man, *r, rng);
+                clamp_to_total(&mut mask, total);
+                self.mask = mask;
+            }
+            MaskPlan::TensorWor { r, set, order, pos } => {
+                if *pos >= order.len() {
+                    // Cycle exhausted: fresh partition + fresh order
+                    // (Algorithm 1 line 4, epochwise instantiation).
+                    *set = MaskSet::tensor_partition(&self.man, *r, rng);
+                    *order = rng.permutation(set.m());
+                    *pos = 0;
+                }
+                let j = order[*pos];
+                *pos += 1;
+                let mut mask = set.masks[j].clone();
+                clamp_to_total(&mut mask, total);
+                self.mask = mask;
+            }
+            MaskPlan::Lisa { sched } => {
+                let act = sched.next_period(rng);
+                let mut mask =
+                    MaskSet::layerwise(&self.man, &act.layers, act.scale);
+                clamp_to_total(&mut mask, total);
+                self.mask = mask;
+            }
+        }
+    }
+
+    /// Apply one optimizer step (dispatches HLO kernel or native).
+    pub fn apply(&mut self, bundle: &ModelBundle, p: &mut Vec<f32>,
+                 g: &[f32], lr: f32) -> Result<()> {
+        match &mut self.backend {
+            Backend::HloAdamW { m, v, t } => {
+                ensure!(bundle.update_kind == UpdateKind::AdamW,
+                        "bundle update kind mismatch");
+                *t += 1;
+                let bc1 = 1.0 - (self.opt.beta1 as f32).powi(*t as i32);
+                let bc2 = 1.0 - (self.opt.beta2 as f32).powi(*t as i32);
+                let hp = [
+                    lr,
+                    self.opt.beta1 as f32,
+                    self.opt.beta2 as f32,
+                    self.opt.eps as f32,
+                    self.opt.weight_decay as f32,
+                    bc1,
+                    bc2,
+                    0.0,
+                ];
+                bundle.adamw_update(p, g, &self.mask.values, m, v, &hp)
+            }
+            Backend::HloSgdm { buf } => {
+                ensure!(bundle.update_kind == UpdateKind::Sgdm,
+                        "bundle update kind mismatch");
+                let hp = [
+                    lr,
+                    self.opt.momentum as f32,
+                    self.opt.weight_decay as f32,
+                    if self.opt.nesterov { 1.0 } else { 0.0 },
+                ];
+                bundle.sgdm_update(p, g, &self.mask.values, buf, &hp)
+            }
+            Backend::Native(opt) => {
+                opt.step(p, g, &self.mask, lr);
+                Ok(())
+            }
+        }
+    }
+
+    /// Apply a step with a *native* optimizer mirroring the HLO kernel —
+    /// used by tests and the pure-rust fast path (no PJRT dispatch).
+    pub fn apply_native(&mut self, p: &mut [f32], g: &[f32], lr: f32) {
+        match &mut self.backend {
+            Backend::HloAdamW { m, v, t } => {
+                *t += 1;
+                let bc1 = 1.0 - (self.opt.beta1 as f32).powi(*t as i32);
+                let bc2 = 1.0 - (self.opt.beta2 as f32).powi(*t as i32);
+                let (b1, b2) = (self.opt.beta1 as f32, self.opt.beta2 as f32);
+                let (eps, wd) =
+                    (self.opt.eps as f32, self.opt.weight_decay as f32);
+                for i in 0..p.len() {
+                    let mk = self.mask.values[i];
+                    if mk == 0.0 {
+                        continue;
+                    }
+                    let gm = mk * g[i];
+                    let mi = b1 * m[i] + (1.0 - b1) * gm;
+                    let vi = b2 * v[i] + (1.0 - b2) * gm * gm;
+                    m[i] = mi;
+                    v[i] = vi;
+                    p[i] -= lr
+                        * ((mi / bc1) / ((vi / bc2).sqrt() + eps)
+                            + wd * p[i]);
+                }
+            }
+            Backend::HloSgdm { buf } => {
+                let mu = self.opt.momentum as f32;
+                let wd = self.opt.weight_decay as f32;
+                let nesterov = self.opt.nesterov;
+                for i in 0..p.len() {
+                    let mk = self.mask.values[i];
+                    if mk == 0.0 {
+                        continue;
+                    }
+                    let gm = mk * g[i] + wd * p[i];
+                    let b = mu * buf[i] + gm;
+                    buf[i] = b;
+                    let upd = if nesterov { gm + mu * b } else { b };
+                    p[i] -= lr * upd;
+                }
+            }
+            Backend::Native(opt) => opt.step(p, g, &self.mask, lr),
+        }
+    }
+
+    /// Current mask (read-only view).
+    pub fn mask(&self) -> &Mask {
+        &self.mask
+    }
+
+    /// Current mask keep-ratio (diagnostics / memory accounting).
+    pub fn keep_ratio(&self) -> f64 {
+        self.mask.keep_ratio()
+    }
+
+    /// Bytes of optimizer state under the paper's residency model
+    /// (frozen coordinates hold no state).
+    pub fn state_bytes(&self) -> usize {
+        match &self.backend {
+            Backend::HloAdamW { .. } => self.mask.active_count() * 8,
+            Backend::HloSgdm { .. } => self.mask.active_count() * 4,
+            Backend::Native(opt) => opt.state_bytes(),
+        }
+    }
+}
+
+fn refresh_steps(cfg: &RunConfig) -> usize {
+    cfg.mask.period.max(1)
+}
+
+fn clamp_to_total(mask: &mut Mask, total: usize) {
+    for v in &mut mask.values[total..] {
+        *v = 0.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+    use std::path::Path;
+
+    fn toy_manifest() -> Manifest {
+        let j = Json::parse(
+            r#"{
+ "name": "toy", "kind": "mlp", "block": 4,
+ "total_len": 20, "padded_len": 24,
+ "params": [
+  {"name": "in_w", "shape": [4], "layer": "embed", "offset": 0, "len": 4},
+  {"name": "block_0.w", "shape": [4], "layer": "block_0", "offset": 4, "len": 4},
+  {"name": "block_1.w", "shape": [4], "layer": "block_1", "offset": 8, "len": 4},
+  {"name": "block_2.w", "shape": [4], "layer": "block_2", "offset": 12, "len": 4},
+  {"name": "out_w", "shape": [4], "layer": "head", "offset": 16, "len": 4}
+ ],
+ "data": {"batch": 2},
+ "artifacts": {"train": "t", "eval": "e", "init": "i",
+               "update": {"adamw": "a", "sgdm": "s"}}
+}"#,
+        )
+        .unwrap();
+        Manifest::from_json(&j, Path::new("/tmp")).unwrap()
+    }
+
+    fn cfg_with(method: Method) -> RunConfig {
+        let mut cfg = RunConfig::default();
+        cfg.method = method;
+        cfg.mask.gamma = 1;
+        cfg.mask.keep_ratio = 0.5;
+        cfg
+    }
+
+    #[test]
+    fn full_mask_covers_real_params_only() {
+        let man = toy_manifest();
+        let mut rng = Rng::seed_from_u64(0);
+        let eng =
+            MethodEngine::new(&man, &cfg_with(Method::Full), &mut rng)
+                .unwrap();
+        assert_eq!(eng.mask().active_count(), 20);
+        assert!(eng.mask().values[20..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn lisa_wor_traverses_all_middle_layers() {
+        let man = toy_manifest();
+        let mut rng = Rng::seed_from_u64(1);
+        let mut eng =
+            MethodEngine::new(&man, &cfg_with(Method::LisaWor), &mut rng)
+                .unwrap();
+        let mut active_union = vec![false; 24];
+        for _ in 0..3 {
+            eng.on_period(&mut rng);
+            for (i, &v) in eng.mask().values.iter().enumerate() {
+                if v != 0.0 {
+                    active_union[i] = true;
+                }
+            }
+            // exactly embed + head + 1 middle layer active
+            assert_eq!(eng.mask().active_count(), 12);
+            // middle scale = N_L/γ = 3
+            let mid_scales: Vec<f32> = eng.mask().values[4..16]
+                .iter()
+                .cloned()
+                .filter(|&v| v != 0.0)
+                .collect();
+            assert!(mid_scales.iter().all(|&v| (v - 3.0).abs() < 1e-6));
+        }
+        // after 3 periods every middle layer was visited
+        assert!(active_union[..20].iter().all(|&b| b));
+    }
+
+    #[test]
+    fn lisa_no_scale_uses_unit_scale() {
+        let man = toy_manifest();
+        let mut rng = Rng::seed_from_u64(2);
+        let mut eng = MethodEngine::new(
+            &man, &cfg_with(Method::LisaWorNoScale), &mut rng,
+        )
+        .unwrap();
+        eng.on_period(&mut rng);
+        assert!(eng.mask().values.iter().all(|&v| v == 0.0 || v == 1.0));
+    }
+
+    #[test]
+    fn wor_mask_cycles_cover_everything_with_scale_m() {
+        let man = toy_manifest();
+        let mut rng = Rng::seed_from_u64(3);
+        let mut eng =
+            MethodEngine::new(&man, &cfg_with(Method::WorMask), &mut rng)
+                .unwrap();
+        let mut sum = vec![0.0f32; 24];
+        for _ in 0..2 {
+            // one cycle = M = 2 periods
+            eng.on_period(&mut rng);
+            for (s, &v) in sum.iter_mut().zip(&eng.mask().values) {
+                *s += v;
+            }
+        }
+        // eq. (3): over a cycle, Σ masks = M·1 on real params
+        assert!(sum[..20].iter().all(|&s| (s - 2.0).abs() < 1e-6),
+                "{sum:?}");
+        assert!(sum[20..].iter().all(|&s| s == 0.0));
+    }
+
+    #[test]
+    fn iid_mask_varies_across_periods() {
+        let man = toy_manifest();
+        let mut rng = Rng::seed_from_u64(4);
+        let mut eng =
+            MethodEngine::new(&man, &cfg_with(Method::IidMask), &mut rng)
+                .unwrap();
+        let mut distinct = std::collections::HashSet::new();
+        for _ in 0..12 {
+            eng.on_period(&mut rng);
+            distinct.insert(
+                eng.mask()
+                    .values
+                    .iter()
+                    .map(|&v| v != 0.0)
+                    .collect::<Vec<bool>>(),
+            );
+        }
+        assert!(distinct.len() > 1, "iid mask never changed");
+    }
+
+    #[test]
+    fn native_backends_step_without_bundle() {
+        let man = toy_manifest();
+        let mut rng = Rng::seed_from_u64(5);
+        for method in [Method::Galore, Method::Golore, Method::Sift,
+                       Method::Full] {
+            let mut eng =
+                MethodEngine::new(&man, &cfg_with(method), &mut rng)
+                    .unwrap();
+            eng.on_period(&mut rng);
+            let mut p = vec![0.5f32; 24];
+            let g = vec![0.1f32; 24];
+            eng.apply_native(&mut p, &g, 0.01);
+            // some coordinate moved (SIFT may pick a non-head subset)
+            assert!(p.iter().any(|&x| (x - 0.5).abs() > 0.0),
+                    "{method:?} did not update");
+        }
+    }
+
+    #[test]
+    fn state_bytes_reflect_masking() {
+        let man = toy_manifest();
+        let mut rng = Rng::seed_from_u64(6);
+        let mut full =
+            MethodEngine::new(&man, &cfg_with(Method::Full), &mut rng)
+                .unwrap();
+        full.on_period(&mut rng);
+        let mut lisa =
+            MethodEngine::new(&man, &cfg_with(Method::LisaWor), &mut rng)
+                .unwrap();
+        lisa.on_period(&mut rng);
+        assert!(lisa.state_bytes() < full.state_bytes());
+    }
+}

@@ -1,0 +1,202 @@
+//! Trainer: drives (sampler × coordinator × runtime × optimizer).
+//!
+//! The hot loop is pure rust + PJRT: pack batch → execute the AOT `train`
+//! HLO (loss, grad) → refresh the method's mask on period boundaries →
+//! apply the fused masked-update HLO (the L1 Pallas kernel) or a native
+//! baseline optimizer. Python is never invoked.
+//!
+//! [`MethodEngine`] encapsulates the paper's method roster behind one
+//! interface, so every experiment (Tables 3–6, Fig. 3–5, 7) is a loop
+//! over `Method` values with shared data and seeds.
+
+pub mod checkpoint;
+pub mod engine;
+
+pub use checkpoint::Checkpoint;
+pub use engine::MethodEngine;
+
+use crate::config::RunConfig;
+use crate::coordinator::DataSampler;
+use crate::data::{ClassTask, Corpus};
+use crate::metrics::Timer;
+use crate::rng::Rng;
+use crate::runtime::ModelBundle;
+use anyhow::{ensure, Result};
+
+/// Outcome of one training run.
+#[derive(Clone, Debug, Default)]
+pub struct TrainOutcome {
+    /// (step, train loss) at every step.
+    pub loss_series: Vec<(usize, f64)>,
+    /// (step, eval loss, eval accuracy%) at eval points (acc 0 for LM).
+    pub eval_series: Vec<(usize, f64, f64)>,
+    /// Final test accuracy % (classifier) or final eval loss (LM).
+    pub final_metric: f64,
+    /// Wall-clock seconds in the train loop.
+    pub train_secs: f64,
+    /// Steps per second.
+    pub steps_per_sec: f64,
+    /// Final flat parameter vector (checkpointing / further eval).
+    pub final_params: Vec<f32>,
+}
+
+impl TrainOutcome {
+    /// Mean train loss over the last `k` logged steps (smoothing for
+    /// table comparisons).
+    pub fn tail_loss(&self, k: usize) -> f64 {
+        let n = self.loss_series.len();
+        let k = k.min(n).max(1);
+        self.loss_series[n - k..]
+            .iter()
+            .map(|&(_, l)| l)
+            .sum::<f64>()
+            / k as f64
+    }
+}
+
+/// Fine-tune the MLP classifier bundle on a [`ClassTask`].
+///
+/// Period unit = *epochs* (the paper's fine-tuning setting: LISA switches
+/// layers every K epochs).
+pub fn train_classifier(
+    bundle: &ModelBundle,
+    cfg: &RunConfig,
+    task: &ClassTask,
+) -> Result<TrainOutcome> {
+    cfg.validate()?;
+    ensure!(bundle.man.kind == "mlp", "classifier needs an mlp bundle");
+    ensure!(task.d_in == bundle.man.data.d_in, "task d_in mismatch");
+
+    let mut rng = Rng::seed_from_u64(cfg.seed);
+    let mut engine = MethodEngine::new(&bundle.man, cfg, &mut rng)?;
+    let mut flat = bundle.init_params()?;
+    let mut sampler = DataSampler::rr(task.n_train());
+    let batch = bundle.man.data.batch;
+
+    let mut out = TrainOutcome::default();
+    let timer = Timer::start();
+    let mut epoch = 0usize;
+    let mut epochs_since_period = 0usize;
+    engine.on_period(&mut rng); // initial mask
+
+    for step in 0..cfg.steps {
+        // Epoch bookkeeping: an epoch is ⌈N/B⌉ batches.
+        let steps_per_epoch = task.n_train().div_ceil(batch);
+        if step > 0 && step % steps_per_epoch == 0 {
+            epoch += 1;
+            epochs_since_period += 1;
+            if epochs_since_period >= cfg.mask.period {
+                epochs_since_period = 0;
+                engine.on_period(&mut rng);
+            }
+        }
+        let idx = sampler.next_batch(batch, &mut rng);
+        let (x, y) = task.pack_train(&idx, batch);
+        let (loss, grad) = bundle.train_step_clf(&flat, &x, &y)?;
+        let lr = cfg.schedule.lr_at(cfg.opt.lr, step) as f32;
+        engine.apply(bundle, &mut flat, &grad, lr)?;
+        out.loss_series.push((step, loss as f64));
+
+        if cfg.eval_every > 0 && (step + 1) % cfg.eval_every == 0 {
+            let (el, acc) = eval_classifier(bundle, &flat, task)?;
+            out.eval_series.push((step, el, acc));
+        }
+    }
+    let _ = epoch;
+    out.train_secs = timer.total();
+    out.steps_per_sec = cfg.steps as f64 / out.train_secs.max(1e-9);
+    let (_, acc) = eval_classifier(bundle, &flat, task)?;
+    out.final_metric = acc;
+    out.final_params = flat;
+    Ok(out)
+}
+
+/// Evaluate classifier accuracy (%) and mean loss over the test split.
+pub fn eval_classifier(
+    bundle: &ModelBundle,
+    flat: &[f32],
+    task: &ClassTask,
+) -> Result<(f64, f64)> {
+    let batch = bundle.man.data.batch;
+    let n = task.test_x.len();
+    let mut correct = 0.0f64;
+    let mut loss_sum = 0.0f64;
+    let mut batches = 0usize;
+    let mut start = 0usize;
+    while start < n {
+        let (x, y) = task.pack_test(start, batch);
+        let take = batch.min(n - start);
+        let (loss, c) = bundle.eval_step_clf(flat, &x, &y)?;
+        // pack_test wraps; only credit the non-wrapped prefix on the
+        // final partial batch by rescaling.
+        correct += c as f64 * take as f64 / batch as f64;
+        loss_sum += loss as f64;
+        batches += 1;
+        start += batch;
+    }
+    Ok((loss_sum / batches as f64, 100.0 * correct / n as f64))
+}
+
+/// Pre-train the GPT bundle on a synthetic [`Corpus`].
+///
+/// Period unit = *steps* (the paper's pre-training setting: switch active
+/// layers every K iterations).
+pub fn train_lm(
+    bundle: &ModelBundle,
+    cfg: &RunConfig,
+    corpus: &Corpus,
+) -> Result<TrainOutcome> {
+    cfg.validate()?;
+    ensure!(bundle.man.kind == "gpt", "LM training needs a gpt bundle");
+    ensure!(corpus.seq == bundle.man.data.seq, "corpus seq mismatch");
+
+    let mut rng = Rng::seed_from_u64(cfg.seed);
+    let mut engine = MethodEngine::new(&bundle.man, cfg, &mut rng)?;
+    let mut flat = bundle.init_params()?;
+    let n_train = corpus.n_samples().saturating_sub(8).max(1);
+    let mut sampler = DataSampler::rr(n_train);
+    let batch = bundle.man.data.batch;
+
+    let mut out = TrainOutcome::default();
+    let timer = Timer::start();
+    engine.on_period(&mut rng);
+
+    for step in 0..cfg.steps {
+        if step > 0 && step % cfg.mask.period == 0 {
+            engine.on_period(&mut rng);
+        }
+        let idx = sampler.next_batch(batch, &mut rng);
+        let (x, y) = corpus.pack(&idx, batch);
+        let (loss, grad) = bundle.train_step_lm(&flat, &x, &y)?;
+        let lr = cfg.schedule.lr_at(cfg.opt.lr, step) as f32;
+        engine.apply(bundle, &mut flat, &grad, lr)?;
+        out.loss_series.push((step, loss as f64));
+
+        if cfg.eval_every > 0 && (step + 1) % cfg.eval_every == 0 {
+            let el = eval_lm(bundle, &flat, corpus, n_train)?;
+            out.eval_series.push((step, el, 0.0));
+        }
+    }
+    out.train_secs = timer.total();
+    out.steps_per_sec = cfg.steps as f64 / out.train_secs.max(1e-9);
+    out.final_metric = eval_lm(bundle, &flat, corpus, n_train)?;
+    out.final_params = flat;
+    Ok(out)
+}
+
+/// Held-out LM loss over the last 8 windows (disjoint from training).
+pub fn eval_lm(
+    bundle: &ModelBundle,
+    flat: &[f32],
+    corpus: &Corpus,
+    train_n: usize,
+) -> Result<f64> {
+    let batch = bundle.man.data.batch;
+    let held: Vec<usize> =
+        (train_n..corpus.n_samples()).take(batch.max(1)).collect();
+    if held.is_empty() {
+        return Ok(f64::NAN);
+    }
+    let (x, y) = corpus.pack(&held, batch);
+    Ok(bundle.eval_step_lm(flat, &x, &y)? as f64)
+}

@@ -1,0 +1,3 @@
+//! Small shared utilities (JSON parsing for manifests).
+
+pub mod json;

@@ -1,0 +1,309 @@
+//! Integration tests over the real AOT artifacts + PJRT runtime.
+//!
+//! These exercise the full request path the production binary uses:
+//! manifest → compile HLO → execute train/eval/update → trainer loops.
+//! They require `make artifacts` (the `gpt-nano` / `mlp-glue` / `linreg`
+//! test configs); each test skips with a message if artifacts are absent
+//! so `cargo test` stays green on a fresh checkout.
+
+use omgd::config::{Method, OptFamily, RunConfig};
+use omgd::coordinator::Mask;
+use omgd::data::{ClassTask, GLUE_LIKE_TASKS};
+use omgd::experiments::{load_bundle, load_bundle_sgdm, pretrain_corpus};
+use omgd::manifest::Manifest;
+use omgd::optim::{MaskedAdamW, MaskedSgdm, Optimizer};
+use omgd::rng::Rng;
+use omgd::runtime::{artifacts_dir, Runtime};
+use omgd::train::{train_classifier, train_lm, MethodEngine};
+
+fn have(model: &str) -> bool {
+    let ok = artifacts_dir(None).join(format!("{model}.json")).exists();
+    if !ok {
+        eprintln!("SKIP: artifacts for {model} missing (run make artifacts)");
+    }
+    ok
+}
+
+fn rt() -> Runtime {
+    Runtime::cpu().expect("pjrt cpu client")
+}
+
+// -------------------------------------------------------------------------
+// Runtime plumbing
+// -------------------------------------------------------------------------
+
+#[test]
+fn linreg_artifact_matches_closed_form() {
+    if !have("linreg") {
+        return;
+    }
+    let rt = rt();
+    let dir = artifacts_dir(None);
+    let exe = rt.load(&dir.join("linreg.grad.hlo.txt")).unwrap();
+    let mut rng = Rng::seed_from_u64(0);
+    for _ in 0..10 {
+        let theta: Vec<f32> = (0..10).map(|_| rng.normal32()).collect();
+        let x: Vec<f32> = (0..10).map(|_| rng.normal32()).collect();
+        let y = rng.normal32();
+        let g = rt.linreg_grad(&exe, &theta, &x, y).unwrap();
+        let resid: f32 =
+            x.iter().zip(&theta).map(|(a, b)| a * b).sum::<f32>() - y;
+        for i in 0..10 {
+            let want = 2.0 * resid * x[i];
+            assert!((g[i] - want).abs() < 1e-4 * (1.0 + want.abs()),
+                    "coord {i}: {} vs {want}", g[i]);
+        }
+    }
+}
+
+#[test]
+fn manifest_matches_artifacts_on_disk() {
+    if !have("gpt-nano") {
+        return;
+    }
+    let dir = artifacts_dir(None);
+    let man = Manifest::load(&dir, "gpt-nano").unwrap();
+    assert_eq!(man.kind, "gpt");
+    man.check().unwrap();
+    let init = man.load_init().unwrap();
+    assert_eq!(init.len(), man.padded_len);
+    // padding tail of init is zero
+    assert!(init[man.total_len..].iter().all(|&x| x == 0.0));
+}
+
+// -------------------------------------------------------------------------
+// HLO kernel ⇄ native optimizer cross-checks (the core numeric contract)
+// -------------------------------------------------------------------------
+
+#[test]
+fn hlo_adamw_update_matches_native_mirror() {
+    if !have("mlp-glue") {
+        return;
+    }
+    let rt = rt();
+    let bundle = load_bundle(&rt, "mlp-glue").unwrap();
+    let n = bundle.padded_len();
+    let mut rng = Rng::seed_from_u64(1);
+
+    let p0: Vec<f32> = (0..n).map(|_| rng.normal32() * 0.1).collect();
+    let g: Vec<f32> = (0..n).map(|_| rng.normal32()).collect();
+    let mut mask = Mask::zeros(n);
+    for i in 0..bundle.man.total_len {
+        if rng.f64() < 0.5 {
+            mask.values[i] = 2.0;
+        }
+    }
+
+    // HLO path (three steps to exercise state accumulation).
+    let (mut ph, mut mh, mut vh) =
+        (p0.clone(), vec![0.0f32; n], vec![0.0f32; n]);
+    // Native path.
+    let mut pn = p0.clone();
+    let mut nat = MaskedAdamW::new(n, 0.9, 0.999, 1e-8, 0.01);
+
+    for step in 1..=3u64 {
+        let bc1 = 1.0 - 0.9f32.powi(step as i32);
+        let bc2 = 1.0 - 0.999f32.powi(step as i32);
+        let hp = [1e-3, 0.9, 0.999, 1e-8, 0.01, bc1, bc2, 0.0];
+        bundle
+            .adamw_update(&mut ph, &g, &mask.values, &mut mh, &mut vh, &hp)
+            .unwrap();
+        nat.step(&mut pn, &g, &mask, 1e-3);
+    }
+    let max_dp = ph
+        .iter()
+        .zip(&pn)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_dp < 1e-5, "HLO vs native AdamW diverged: {max_dp}");
+    // moments must match too
+    let max_dm = mh
+        .iter()
+        .zip(&nat.m)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_dm < 1e-5, "moment mismatch {max_dm}");
+}
+
+#[test]
+fn hlo_sgdm_update_matches_native_mirror() {
+    if !have("mlp-glue") {
+        return;
+    }
+    let rt = rt();
+    let bundle = load_bundle_sgdm(&rt, "mlp-glue").unwrap();
+    let n = bundle.padded_len();
+    let mut rng = Rng::seed_from_u64(2);
+
+    let p0: Vec<f32> = (0..n).map(|_| rng.normal32() * 0.1).collect();
+    let g: Vec<f32> = (0..n).map(|_| rng.normal32()).collect();
+    let mut mask = Mask::zeros(n);
+    mask.set_segment(0, bundle.man.total_len, 1.0);
+
+    let (mut ph, mut bh) = (p0.clone(), vec![0.0f32; n]);
+    let mut pn = p0.clone();
+    let mut nat = MaskedSgdm::new(n, 0.9, 1e-4, true);
+    let hp = [0.05f32, 0.9, 1e-4, 1.0];
+    for _ in 0..3 {
+        bundle
+            .sgdm_update(&mut ph, &g, &mask.values, &mut bh, &hp)
+            .unwrap();
+        nat.step(&mut pn, &g, &mask, 0.05);
+    }
+    let max_dp = ph
+        .iter()
+        .zip(&pn)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_dp < 1e-5, "HLO vs native SGDM diverged: {max_dp}");
+}
+
+#[test]
+fn frozen_coordinates_are_bit_identical_through_hlo() {
+    if !have("mlp-glue") {
+        return;
+    }
+    let rt = rt();
+    let bundle = load_bundle(&rt, "mlp-glue").unwrap();
+    let n = bundle.padded_len();
+    let mut rng = Rng::seed_from_u64(3);
+    let p0: Vec<f32> = (0..n).map(|_| rng.normal32()).collect();
+    let g: Vec<f32> = (0..n).map(|_| rng.normal32()).collect();
+    let mut mask = Mask::zeros(n);
+    mask.set_segment(0, n / 2, 4.0);
+    let (mut p, mut m, mut v) =
+        (p0.clone(), vec![0.0f32; n], vec![0.0f32; n]);
+    let hp = [1e-2f32, 0.9, 0.999, 1e-8, 0.01, 0.1, 0.001, 0.0];
+    bundle
+        .adamw_update(&mut p, &g, &mask.values, &mut m, &mut v, &hp)
+        .unwrap();
+    // frozen half: bit-identical params, zero moments
+    assert_eq!(&p[n / 2..], &p0[n / 2..]);
+    assert!(m[n / 2..].iter().all(|&x| x == 0.0));
+    // active half: every coordinate moved
+    assert!(p[..n / 2].iter().zip(&p0[..n / 2]).all(|(a, b)| a != b));
+}
+
+// -------------------------------------------------------------------------
+// Trainer end-to-end (short runs)
+// -------------------------------------------------------------------------
+
+fn quick_cfg(method: Method, steps: usize) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.method = method;
+    cfg.steps = steps;
+    cfg.eval_every = 0;
+    cfg.opt.lr = 2e-3;
+    cfg.mask.gamma = 4;
+    cfg.mask.period = 1;
+    cfg.seed = 9;
+    cfg
+}
+
+#[test]
+fn classifier_training_reduces_loss_all_methods() {
+    if !have("mlp-glue") {
+        return;
+    }
+    let rt = rt();
+    let bundle = load_bundle(&rt, "mlp-glue").unwrap();
+    let task = ClassTask::from_spec(&GLUE_LIKE_TASKS[4], // SST2-like, easy
+                                    bundle.man.data.d_in,
+                                    bundle.man.data.n_class);
+    for method in [Method::Full, Method::LisaWor, Method::IidMask,
+                   Method::WorMask, Method::Sift] {
+        let cfg = quick_cfg(method, 60);
+        let out = train_classifier(&bundle, &cfg, &task).unwrap();
+        let head: f64 = out.loss_series[..10].iter()
+            .map(|&(_, l)| l).sum::<f64>() / 10.0;
+        let tail = out.tail_loss(10);
+        assert!(
+            tail < head,
+            "{}: loss did not fall ({head:.4} → {tail:.4})",
+            method.name()
+        );
+        assert!(out.final_metric > 20.0,
+                "{}: degenerate accuracy {}", method.name(),
+                out.final_metric);
+    }
+}
+
+#[test]
+fn lm_training_reduces_loss() {
+    if !have("gpt-nano") {
+        return;
+    }
+    let rt = rt();
+    let bundle = load_bundle(&rt, "gpt-nano").unwrap();
+    let corpus = pretrain_corpus(&bundle, 60);
+    let mut cfg = quick_cfg(Method::LisaWor, 60);
+    cfg.mask.gamma = 1;
+    cfg.mask.period = 10;
+    cfg.opt.lr = 3e-3;
+    let out = train_lm(&bundle, &cfg, &corpus).unwrap();
+    let first = out.loss_series[0].1;
+    let tail = out.tail_loss(10);
+    assert!(tail < first - 0.2,
+            "LM loss did not fall: {first:.3} → {tail:.3}");
+    // initial loss ≈ ln(vocab)
+    assert!((first - (bundle.man.data.vocab as f64).ln()).abs() < 1.0);
+}
+
+#[test]
+fn deterministic_given_seed() {
+    if !have("mlp-glue") {
+        return;
+    }
+    let rt = rt();
+    let bundle = load_bundle(&rt, "mlp-glue").unwrap();
+    let task = ClassTask::from_spec(&GLUE_LIKE_TASKS[2],
+                                    bundle.man.data.d_in,
+                                    bundle.man.data.n_class);
+    let cfg = quick_cfg(Method::LisaWor, 20);
+    let a = train_classifier(&bundle, &cfg, &task).unwrap();
+    let b = train_classifier(&bundle, &cfg, &task).unwrap();
+    assert_eq!(a.loss_series, b.loss_series, "training not deterministic");
+    assert_eq!(a.final_metric, b.final_metric);
+}
+
+#[test]
+fn sgdm_family_trains_through_hlo() {
+    if !have("mlp-img") {
+        return;
+    }
+    let rt = rt();
+    let bundle = load_bundle_sgdm(&rt, "mlp-img").unwrap();
+    let task = ClassTask::gaussian_blobs(
+        "img", bundle.man.data.d_in, bundle.man.data.n_class, 400, 100,
+        0.6, 12,
+    );
+    for method in [Method::Full, Method::IidMask, Method::WorMask] {
+        let mut cfg = quick_cfg(method, 40);
+        cfg.opt.family = OptFamily::Sgdm;
+        cfg.opt.lr = 0.05;
+        let out = train_classifier(&bundle, &cfg, &task).unwrap();
+        assert!(out.tail_loss(10) < out.loss_series[0].1,
+                "{} failed to descend", method.name());
+    }
+}
+
+#[test]
+fn engine_state_bytes_ordering_through_real_manifest() {
+    if !have("mlp-glue") {
+        return;
+    }
+    let rt = rt();
+    let bundle = load_bundle(&rt, "mlp-glue").unwrap();
+    let mut rng = Rng::seed_from_u64(0);
+    let mut mk = |method| {
+        let cfg = quick_cfg(method, 1);
+        let mut e = MethodEngine::new(&bundle.man, &cfg, &mut rng).unwrap();
+        e.on_period(&mut rng);
+        e.state_bytes()
+    };
+    let full = mk(Method::Full);
+    let lisa = mk(Method::LisaWor);
+    let golore = mk(Method::Golore);
+    assert!(lisa < full, "LISA {lisa} !< full {full}");
+    assert!(golore < full, "GoLore {golore} !< full {full}");
+}

@@ -1,0 +1,294 @@
+//! Property-based tests on coordinator / optimizer invariants, using the
+//! in-repo prop framework (rust/src/prop.rs). Each property runs across
+//! dozens of randomized cases; failures report a replayable seed.
+
+use omgd::coordinator::{DataSampler, LisaScheduler, LisaVariant, Mask,
+                        MaskSet, OmgdCycle};
+use omgd::linalg::{stiefel, Mat};
+use omgd::manifest::{Manifest, ParamInfo};
+use omgd::optim::{MaskedAdamW, MaskedSgdm, Optimizer};
+use omgd::prop::{check, Gen};
+
+use omgd::util::json::Json;
+use std::collections::HashSet;
+use std::path::Path;
+
+/// Random toy manifest: `k` middle layers of random sizes plus
+/// embed/head, padded to a block multiple.
+fn random_manifest(g: &mut Gen) -> Manifest {
+    let k = g.usize_in(2, 6);
+    let block = 8usize;
+    let mut params = Vec::new();
+    let mut off = 0usize;
+    let push = |params: &mut Vec<ParamInfo>, name: String,
+                    layer: String, len: usize, off: &mut usize| {
+        params.push(ParamInfo {
+            name,
+            shape: vec![len],
+            layer,
+            offset: *off,
+            len,
+        });
+        *off += len;
+    };
+    push(&mut params, "in_w".into(), "embed".into(), g.usize_in(2, 10),
+         &mut off);
+    for i in 0..k {
+        push(&mut params, format!("block_{i}.w"), format!("block_{i}"),
+             g.usize_in(2, 12), &mut off);
+    }
+    push(&mut params, "out_w".into(), "head".into(), g.usize_in(2, 10),
+         &mut off);
+    let total = off;
+    let padded = total.div_ceil(block) * block;
+    // Build through JSON so the same validation path is exercised.
+    let params_json: Vec<String> = params
+        .iter()
+        .map(|p| {
+            format!(
+                r#"{{"name":"{}","shape":[{}],"layer":"{}","offset":{},"len":{}}}"#,
+                p.name, p.len, p.layer, p.offset, p.len
+            )
+        })
+        .collect();
+    let text = format!(
+        r#"{{"name":"prop","kind":"mlp","block":{block},
+"total_len":{total},"padded_len":{padded},
+"params":[{}],
+"data":{{"batch":2}},
+"artifacts":{{"train":"t","eval":"e","init":"i",
+"update":{{"adamw":"a","sgdm":"s"}}}}}}"#,
+        params_json.join(",")
+    );
+    Manifest::from_json(&Json::parse(&text).unwrap(), Path::new("/tmp"))
+        .unwrap()
+}
+
+#[test]
+fn prop_coordinate_partition_always_satisfies_eq3() {
+    check("coordinate partition eq3", 40, |g| {
+        let total = g.usize_in(10, 200);
+        let n = total + g.usize_in(0, 32);
+        let r = *g.pick(&[0.2, 0.25, 1.0 / 3.0, 0.5, 0.7]);
+        let mut rng = g.rng.split(1);
+        let set = MaskSet::coordinate_partition(n, total, r, &mut rng);
+        let m = (1.0f64 / r).ceil() as usize;
+        assert_eq!(set.m(), m);
+        let c = set.coverage_scalar(total)
+            .expect("coverage must be a scalar multiple of 1");
+        assert!((c - m as f32).abs() < 1e-4, "c={c} m={m}");
+        // disjointness
+        for i in 0..total {
+            let owners =
+                set.masks.iter().filter(|mk| mk.values[i] != 0.0).count();
+            assert_eq!(owners, 1, "coord {i}");
+        }
+        // padding untouched
+        for mk in &set.masks {
+            assert!(mk.values[total..].iter().all(|&v| v == 0.0));
+        }
+    });
+}
+
+#[test]
+fn prop_tensor_partition_eq3_and_alignment() {
+    check("tensor partition eq3", 40, |g| {
+        let man = random_manifest(g);
+        let r = *g.pick(&[0.25, 0.5, 1.0 / 3.0]);
+        let mut rng = g.rng.split(2);
+        let set = MaskSet::tensor_partition(&man, r, &mut rng);
+        let c = set.coverage_scalar(man.total_len).expect("eq3 violated");
+        assert!((c - set.m() as f32).abs() < 1e-4);
+        // tensor alignment: each tensor wholly in exactly one mask
+        for p in &man.params {
+            let owners = set
+                .masks
+                .iter()
+                .filter(|mk| mk.values[p.offset] != 0.0)
+                .count();
+            assert_eq!(owners, 1, "{}", p.name);
+            for mk in &set.masks {
+                let seg = &mk.values[p.offset..p.offset + p.len];
+                assert!(seg.iter().all(|&v| v == seg[0]),
+                        "{} split across masks", p.name);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_omgd_cycle_is_exact_cover() {
+    check("omgd cycle exact cover", 30, |g| {
+        let m = g.usize_in(1, 6);
+        let n = g.usize_in(1, 20);
+        let mut rng = g.rng.split(3);
+        let mut cyc = OmgdCycle::new(m, n);
+        for _ in 0..2 {
+            let mut seen = HashSet::new();
+            for _ in 0..m * n {
+                let (p, _) = cyc.next(&mut rng);
+                assert!(p.mask < m && p.sample < n);
+                assert!(seen.insert((p.mask, p.sample)));
+            }
+            assert_eq!(seen.len(), m * n);
+        }
+    });
+}
+
+#[test]
+fn prop_lisa_wor_cycle_covers_pool_without_repeats() {
+    check("lisa wor coverage", 40, |g| {
+        let nl = g.usize_in(2, 16);
+        let gamma = g.usize_in(1, nl);
+        let mut rng = g.rng.split(4);
+        let mut sched = LisaScheduler::new(
+            LisaVariant::LisaWor,
+            (0..nl).map(|i| format!("block_{i}")).collect(),
+            gamma,
+        );
+        // Walk periods; within a pool traversal no layer repeats.
+        let mut seen: HashSet<String> = HashSet::new();
+        for _ in 0..(3 * nl.div_ceil(gamma)) {
+            let act = sched.next_period(&mut rng);
+            if act.new_cycle {
+                seen.clear();
+            }
+            for l in &act.layers {
+                assert!(seen.insert(l.clone()),
+                        "repeat {l} (nl={nl}, γ={gamma})");
+            }
+            if seen.len() == nl {
+                seen.clear();
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_rr_sampler_epochs_are_permutations() {
+    check("rr sampler permutations", 30, |g| {
+        let n = g.usize_in(1, 64);
+        let mut rng = g.rng.split(5);
+        let mut s = DataSampler::rr(n);
+        for _ in 0..3 {
+            let mut seen = HashSet::new();
+            for _ in 0..n {
+                let (i, _) = s.next(&mut rng);
+                assert!(seen.insert(i));
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_masked_adamw_only_touches_active() {
+    check("adamw hard freeze", 30, |g| {
+        let n = g.usize_in(4, 256);
+        let p0 = g.vec_f32(n, 1.0);
+        let grad = g.vec_f32(n, 1.0);
+        let mut mask = Mask::zeros(n);
+        for v in mask.values.iter_mut() {
+            if g.bool() {
+                *v = *g.pick(&[1.0f32, 2.0, 4.0]);
+            }
+        }
+        let mut p = p0.clone();
+        let mut opt = MaskedAdamW::default_hp(n);
+        opt.step(&mut p, &grad, &mask, 1e-2);
+        for i in 0..n {
+            if mask.values[i] == 0.0 {
+                assert_eq!(p[i], p0[i], "frozen coord {i} moved");
+                assert_eq!(opt.m[i], 0.0);
+                assert_eq!(opt.v[i], 0.0);
+            } else if grad[i] != 0.0 {
+                assert_ne!(p[i], p0[i], "active coord {i} frozen");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_masked_sgdm_momentum_norm_bounded() {
+    check("sgdm buffer bounded", 20, |g| {
+        let n = g.usize_in(4, 128);
+        let mut p = g.vec_f32(n, 0.5);
+        let mut opt = MaskedSgdm::new(n, 0.9, 0.0, false);
+        let mask = Mask::ones(n);
+        // constant unit gradient: buf → 1/(1−μ) = 10, never beyond
+        let grad = vec![1.0f32; n];
+        for _ in 0..200 {
+            opt.step(&mut p, &grad, &mask, 1e-4);
+        }
+        assert!(opt.buf.iter().all(|&b| b <= 10.0 + 1e-3),
+                "momentum exceeded geometric bound");
+    });
+}
+
+#[test]
+fn prop_stiefel_columns_orthonormal() {
+    check("stiefel orthonormal", 20, |g| {
+        let m = g.usize_in(2, 24);
+        let k = g.usize_in(1, m);
+        let mut rng = g.rng.split(6);
+        let p = stiefel(m, k, &mut rng);
+        let ptp = p.transpose().matmul(&p);
+        let err = ptp.sub(&Mat::eye(k)).fro();
+        assert!(err < 1e-9, "PᵀP−I fro {err} (m={m} k={k})");
+    });
+}
+
+#[test]
+fn prop_layerwise_mask_respects_always_active_set() {
+    check("layerwise mask", 30, |g| {
+        let man = random_manifest(g);
+        let middles = man.middle_layers();
+        let pick = g.usize_in(0, middles.len() - 1);
+        let active = vec![middles[pick].clone()];
+        let scale = middles.len() as f32;
+        let mask = MaskSet::layerwise(&man, &active, scale);
+        for p in &man.params {
+            let seg = &mask.values[p.offset..p.offset + p.len];
+            let want = if p.layer == "embed" || p.layer == "head" {
+                1.0
+            } else if p.layer == active[0] {
+                scale
+            } else {
+                0.0
+            };
+            assert!(seg.iter().all(|&v| v == want),
+                    "{}: got {:?} want {want}", p.name, seg[0]);
+        }
+    });
+}
+
+#[test]
+fn prop_cycle_masked_gradient_sums_match_scaled_full() {
+    // The cancellation behind Lemma 4.4 at fixed θ: summing the masked
+    // gradients over a full [M]×[N] cycle equals M × Σᵢ ∇f(θ; zᵢ).
+    check("lemma 4.4 cancellation", 20, |g| {
+        let d = g.usize_in(3, 12);
+        let n = g.usize_in(2, 10);
+        let r = *g.pick(&[0.25, 0.5]);
+        let mut rng = g.rng.split(7);
+        let grads: Vec<Vec<f32>> =
+            (0..n).map(|_| g.vec_f32(d, 1.0)).collect();
+        let set = MaskSet::coordinate_partition(d, d, r, &mut rng);
+        let m = set.m();
+        let mut cyc = OmgdCycle::new(m, n);
+        let mut acc = vec![0.0f64; d];
+        for _ in 0..m * n {
+            let (pair, _) = cyc.next(&mut rng);
+            let mask = &set.masks[pair.mask];
+            for i in 0..d {
+                acc[i] +=
+                    (mask.values[i] * grads[pair.sample][i]) as f64;
+            }
+        }
+        for i in 0..d {
+            let want: f64 = m as f64
+                * grads.iter().map(|gr| gr[i] as f64).sum::<f64>();
+            assert!((acc[i] - want).abs() < 1e-3 * (1.0 + want.abs()),
+                    "coord {i}: {} vs {want}", acc[i]);
+        }
+    });
+}
