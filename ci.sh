@@ -1,0 +1,25 @@
+#!/usr/bin/env bash
+# CI entry point: format, lint, and test the rust crate with bench
+# runtimes scaled down so grid smoke runs finish in CI time.
+#
+# Usage: ./ci.sh            # full gate
+#        OMGD_BENCH_SCALE=1 ./ci.sh   # paper-shaped runtimes
+set -euo pipefail
+cd "$(dirname "$0")/rust"
+
+# Shrink epochs/steps for smoke runs unless the caller pinned a scale
+# (see experiments::bench_scale; value must be finite and in (0, 1]).
+export OMGD_BENCH_SCALE="${OMGD_BENCH_SCALE:-0.05}"
+# Keep CI deterministic and small: single grid worker unless overridden.
+export OMGD_WORKERS="${OMGD_WORKERS:-1}"
+
+echo "== cargo fmt --check"
+cargo fmt --check
+
+echo "== cargo clippy -D warnings"
+cargo clippy --all-targets -- -D warnings
+
+echo "== cargo test (OMGD_BENCH_SCALE=$OMGD_BENCH_SCALE)"
+cargo test -q
+
+echo "CI gate passed."

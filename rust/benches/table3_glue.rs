@@ -6,35 +6,64 @@
 //! GoLore, SIFT} with Full params as the ceiling; the wor+scale combo
 //! beats either modification alone on average.
 //!
-//! Also emits Fig. 4/7-style training-loss curves for CoLA to
-//! `results/fig4_cola_loss.csv`.
+//! The sweep is submitted as a job grid (`experiments::table3_grid` →
+//! `jobs::run_grid`): cells shard across `OMGD_WORKERS` threads and
+//! completed cells replay from the result cache (`OMGD_FORCE=1`
+//! recomputes). Also emits Fig. 4/7-style training-loss curves for CoLA
+//! to `results/fig4_cola_loss.csv`.
 
 use omgd::bench::TablePrinter;
-use omgd::config::OptFamily;
 use omgd::data::GLUE_LIKE_TASKS;
 use omgd::experiments::*;
+use omgd::jobs::{default_workers, force_from_env, run_grid, GridOptions};
 use omgd::metrics::{CsvCell, CsvWriter};
-use omgd::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {
-    let rt = Runtime::cpu()?;
-    let bundle = load_bundle(&rt, "mlp-glue")?;
-    let setup = FinetuneSetup {
-        epochs: scaled(30, 4),
-        gamma: 4,
-        period: 1,
-        ..FinetuneSetup::default()
-    };
+    // Synthetic tasks carry more per-run noise than real GLUE, so each
+    // cell averages over independent training seeds (shared data).
+    let seeds: &[u64] = &[0, 1];
+    let specs = table3_grid(seeds);
     let methods = adamw_method_roster();
+    let opts = GridOptions {
+        workers: default_workers(),
+        force: force_from_env(),
+        cache_dir: None,
+    };
     println!(
-        "Table 3: {} tasks × {} methods, {} epochs each",
-        GLUE_LIKE_TASKS.len(), methods.len(), setup.epochs
+        "Table 3: {} grid cells ({} tasks × {} methods × {} seeds), \
+         {} workers",
+        specs.len(),
+        GLUE_LIKE_TASKS.len(),
+        methods.len(),
+        seeds.len(),
+        opts.workers
     );
+    let report = run_grid(specs, &opts)?;
+    println!(
+        "grid done: {} ok, {} failed, {} from cache ({:.0}% hit)",
+        report.n_ok(),
+        report.n_failed(),
+        report.n_cached(),
+        100.0 * report.cache_hit_rate()
+    );
+    if report.n_failed() > 0 {
+        // Bail before any aggregation: a partially-failed grid must not
+        // leave NaN-poisoned tables/CSVs on disk.
+        report.print_failures();
+        anyhow::bail!("{} grid cell(s) failed — no tables written",
+                      report.n_failed());
+    }
+
+    // Seed-averaged accuracy and tail loss per (method, task).
+    let cell_key = |r: &omgd::jobs::JobResult| {
+        (r.spec.cfg.method.name().to_string(),
+         r.spec.kind.dataset().to_string())
+    };
+    let acc = report.mean_metric_by(cell_key);
+    let tail = report.mean_by(cell_key, |o| o.tail_loss);
 
     let mut headers: Vec<&str> = vec!["Algorithm"];
-    let task_names: Vec<&str> =
-        GLUE_LIKE_TASKS.iter().map(|t| t.name).collect();
-    headers.extend(task_names.iter());
+    headers.extend(GLUE_LIKE_TASKS.iter().map(|t| t.name));
     headers.push("Avg");
     let mut table = TablePrinter::new(&headers);
 
@@ -42,52 +71,48 @@ fn main() -> anyhow::Result<()> {
     let mut csv = CsvWriter::create(
         &csv_path, &["method", "task", "acc", "tail_loss"],
     )?;
-    let mut cola_curves = CsvWriter::create(
-        results_dir().join("fig4_cola_loss.csv"),
-        &["method", "step", "loss"],
-    )?;
-
-    // Synthetic tasks carry more per-run noise than real GLUE, so each
-    // cell averages over independent training seeds (shared data).
-    let seeds: &[u64] = &[0, 1];
     for method in &methods {
         let mut cells = vec![method.name().to_string()];
         let mut sum = 0.0;
-        for spec in &GLUE_LIKE_TASKS {
-            let task = task_for(&bundle, spec);
-            let mut acc = 0.0;
-            let mut tail = 0.0;
-            for (si, &seed) in seeds.iter().enumerate() {
-                let s = FinetuneSetup { seed, ..setup.clone() };
-                let out = finetune_cell(&bundle, &task, *method, &s,
-                                        OptFamily::AdamW)?;
-                acc += out.final_metric / seeds.len() as f64;
-                tail += out.tail_loss(20) / seeds.len() as f64;
-                if spec.name == "CoLA" && si == 0 {
-                    for &(st, l) in &out.loss_series {
-                        cola_curves.row_mixed(&[
-                            CsvCell::S(method.name().into()),
-                            CsvCell::I(st as i64),
-                            CsvCell::F(l),
-                        ])?;
-                    }
-                }
-            }
-            cells.push(format!("{acc:.2}"));
-            sum += acc;
+        for spec_t in &GLUE_LIKE_TASKS {
+            let key = (method.name().to_string(), spec_t.name.to_string());
+            let a = acc.get(&key).copied().unwrap_or(f64::NAN);
+            let t = tail.get(&key).copied().unwrap_or(f64::NAN);
+            cells.push(format!("{a:.2}"));
+            sum += a;
             csv.row_mixed(&[
                 CsvCell::S(method.name().into()),
-                CsvCell::S(spec.name.into()),
-                CsvCell::F(acc),
-                CsvCell::F(tail),
+                CsvCell::S(spec_t.name.into()),
+                CsvCell::F(a),
+                CsvCell::F(t),
             ])?;
         }
         cells.push(format!("{:.2}", sum / GLUE_LIKE_TASKS.len() as f64));
         table.row(cells);
-        println!("  finished {}", method.name());
     }
-    csv.flush()?;
-    cola_curves.flush()?;
+    csv.finish()?;
+
+    // Fig. 4/7 loss curves: CoLA, first seed, every method (results are
+    // in submission order, i.e. roster order).
+    let mut cola_curves = CsvWriter::create(
+        results_dir().join("fig4_cola_loss.csv"),
+        &["method", "step", "loss"],
+    )?;
+    for r in &report.results {
+        if r.spec.kind.dataset() == "CoLA" && r.spec.cfg.seed == seeds[0] {
+            if let Some(o) = r.outcome() {
+                for &(st, l) in &o.loss_series {
+                    cola_curves.row_mixed(&[
+                        CsvCell::S(r.spec.cfg.method.name().into()),
+                        CsvCell::I(st as i64),
+                        CsvCell::F(l),
+                    ])?;
+                }
+            }
+        }
+    }
+    cola_curves.finish()?;
+
     table.print("Table 3 — fine-tuning accuracy (%) on GLUE-like tasks");
     println!("rows written to {}", csv_path.display());
     println!("CoLA loss curves (Fig. 4/7) in results/fig4_cola_loss.csv");

@@ -3,33 +3,58 @@
 //!
 //! Paper shape: LISA-WOR ≥ LISA ≈ full-params ceiling, with GoLore and
 //! SIFT close behind; the γ/K setting follows B.2 (γ=3, K=5 scaled).
-//! Emits Fig. 3-style test-loss curves to `results/fig3_test_loss.csv`.
+//!
+//! The sweep is submitted as a job grid (`experiments::table5_grid` →
+//! `jobs::run_grid`): cells shard across `OMGD_WORKERS` threads and
+//! completed cells replay from the result cache (`OMGD_FORCE=1`
+//! recomputes). Emits Fig. 3-style test-loss curves to
+//! `results/fig3_test_loss.csv`.
 
 use omgd::bench::TablePrinter;
-use omgd::config::{OptFamily, RunConfig};
-use omgd::data::ClassTask;
 use omgd::experiments::*;
+use omgd::jobs::{default_workers, force_from_env, run_grid, GridOptions};
 use omgd::metrics::{CsvCell, CsvWriter};
-use omgd::runtime::Runtime;
-use omgd::train::train_classifier;
 
 fn main() -> anyhow::Result<()> {
     if !artifacts_present("mlp-img") {
         eprintln!("mlp-img artifacts missing — run `make artifacts`");
         return Ok(());
     }
-    let rt = Runtime::cpu()?;
-    let bundle = load_bundle(&rt, "mlp-img")?;
-    let epochs = scaled(15, 3);
-    let datasets = [
-        ("IMG-easy", 3.0, 6001u64),
-        ("IMG-mid", 4.0, 6002),
-        ("IMG-hard", 5.5, 6003),
-    ];
-    // Full roster minus tensorwise (those are Table 4's subject).
+    let specs = table5_grid();
     let methods = adamw_method_roster();
-    println!("Table 5: {} datasets × {} methods, {} epochs (AdamW, γ=3 K=5)",
-             datasets.len(), methods.len(), epochs);
+    let opts = GridOptions {
+        workers: default_workers(),
+        force: force_from_env(),
+        cache_dir: None,
+    };
+    println!(
+        "Table 5: {} grid cells ({} datasets × {} methods, AdamW γ=3 \
+         K=5), {} workers",
+        specs.len(),
+        TABLE5_DATASETS.len(),
+        methods.len(),
+        opts.workers
+    );
+    let report = run_grid(specs, &opts)?;
+    println!(
+        "grid done: {} ok, {} failed, {} from cache ({:.0}% hit)",
+        report.n_ok(),
+        report.n_failed(),
+        report.n_cached(),
+        100.0 * report.cache_hit_rate()
+    );
+    if report.n_failed() > 0 {
+        // Bail before any aggregation: a partially-failed grid must not
+        // leave NaN-poisoned tables/CSVs on disk.
+        report.print_failures();
+        anyhow::bail!("{} grid cell(s) failed — no tables written",
+                      report.n_failed());
+    }
+
+    let acc = report.mean_metric_by(|r| {
+        (r.spec.cfg.method.name().to_string(),
+         r.spec.kind.dataset().to_string())
+    });
 
     let mut table = TablePrinter::new(&[
         "Algorithm", "IMG-easy", "IMG-mid", "IMG-hard",
@@ -37,52 +62,42 @@ fn main() -> anyhow::Result<()> {
     let csv_path = results_dir().join("table5.csv");
     let mut csv =
         CsvWriter::create(&csv_path, &["method", "dataset", "acc"])?;
+    for method in &methods {
+        let mut cells = vec![method.name().to_string()];
+        for (name, _, _) in TABLE5_DATASETS {
+            let key = (method.name().to_string(), name.to_string());
+            let a = acc.get(&key).copied().unwrap_or(f64::NAN);
+            cells.push(format!("{a:.2}"));
+            csv.row_mixed(&[
+                CsvCell::S(method.name().into()),
+                CsvCell::S(name.into()),
+                CsvCell::F(a),
+            ])?;
+        }
+        table.row(cells);
+    }
+    csv.finish()?;
+
+    // Fig. 3 test-loss curves on the middle-difficulty dataset.
     let mut fig3 = CsvWriter::create(
         results_dir().join("fig3_test_loss.csv"),
         &["method", "step", "test_loss"],
     )?;
-
-    for method in &methods {
-        let mut cells = vec![method.name().to_string()];
-        for (name, spread, seed) in &datasets {
-            let task = ClassTask::gaussian_blobs(
-                name, bundle.man.data.d_in, bundle.man.data.n_class,
-                1000, 400, *spread, *seed,
-            );
-            let steps_per_epoch =
-                task.n_train().div_ceil(bundle.man.data.batch);
-            let mut cfg = RunConfig::default();
-            cfg.method = *method;
-            cfg.opt.family = OptFamily::AdamW;
-            cfg.opt.lr = 1e-3;
-            cfg.mask.gamma = 3;
-            cfg.mask.period = 5.min(epochs);
-            cfg.mask.rank = 8;
-            cfg.steps = epochs * steps_per_epoch;
-            cfg.eval_every = steps_per_epoch; // per-epoch test loss
-            cfg.seed = 11;
-            let out = train_classifier(&bundle, &cfg, &task)?;
-            cells.push(format!("{:.2}", out.final_metric));
-            csv.row_mixed(&[
-                CsvCell::S(method.name().into()),
-                CsvCell::S((*name).into()),
-                CsvCell::F(out.final_metric),
-            ])?;
-            if *name == "IMG-mid" {
-                for &(s, l, _) in &out.eval_series {
+    for r in &report.results {
+        if r.spec.kind.dataset() == "IMG-mid" {
+            if let Some(o) = r.outcome() {
+                for &(s, l, _) in &o.eval_series {
                     fig3.row_mixed(&[
-                        CsvCell::S(method.name().into()),
+                        CsvCell::S(r.spec.cfg.method.name().into()),
                         CsvCell::I(s as i64),
                         CsvCell::F(l),
                     ])?;
                 }
             }
         }
-        table.row(cells);
-        println!("  finished {}", method.name());
     }
-    csv.flush()?;
-    fig3.flush()?;
+    fig3.finish()?;
+
     table.print("Table 5 — fine-tuning accuracy (%), layerwise methods");
     println!("rows written to {}", csv_path.display());
     println!("test-loss curves (Fig. 3) in results/fig3_test_loss.csv");

@@ -4,24 +4,49 @@
 //! Paper shape: accuracy improves with γ (more unfrozen capacity per
 //! period); K has a milder, non-monotone effect with very frequent
 //! switching (small K at small γ) slightly hurting.
+//!
+//! The sweep is submitted as a job grid (`experiments::table6_grid` →
+//! `jobs::run_grid`): cells shard across `OMGD_WORKERS` threads and
+//! completed cells replay from the result cache (`OMGD_FORCE=1`
+//! recomputes).
 
 use omgd::bench::TablePrinter;
-use omgd::config::{Method, OptFamily};
-use omgd::data::GLUE_LIKE_TASKS;
 use omgd::experiments::*;
+use omgd::jobs::{default_workers, force_from_env, run_grid, GridOptions};
 use omgd::metrics::{CsvCell, CsvWriter};
-use omgd::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {
-    let rt = Runtime::cpu()?;
-    let bundle = load_bundle(&rt, "mlp-glue")?;
-    let cola = &GLUE_LIKE_TASKS[0];
-    let task = task_for(&bundle, cola);
-    let epochs = scaled(20, 4);
     let gammas = [1usize, 2, 3, 4, 6];
     let periods = [1usize, 2, 3, 5, 6];
-    println!("Table 6: γ × K sweep on {} ({} epochs per cell, {} cells)",
-             task.name, epochs, gammas.len() * periods.len());
+    let specs = table6_grid();
+    let opts = GridOptions {
+        workers: default_workers(),
+        force: force_from_env(),
+        cache_dir: None,
+    };
+    println!(
+        "Table 6: γ × K sweep on CoLA-like ({} cells), {} workers",
+        specs.len(),
+        opts.workers
+    );
+    let report = run_grid(specs, &opts)?;
+    println!(
+        "grid done: {} ok, {} failed, {} from cache ({:.0}% hit)",
+        report.n_ok(),
+        report.n_failed(),
+        report.n_cached(),
+        100.0 * report.cache_hit_rate()
+    );
+    if report.n_failed() > 0 {
+        // Bail before any aggregation: a partially-failed grid must not
+        // leave NaN-poisoned tables/CSVs on disk.
+        report.print_failures();
+        anyhow::bail!("{} grid cell(s) failed — no tables written",
+                      report.n_failed());
+    }
+
+    let acc = report
+        .mean_metric_by(|r| (r.spec.cfg.mask.gamma, r.spec.cfg.mask.period));
 
     let mut headers: Vec<String> = vec!["γ \\ K".into()];
     headers.extend(periods.iter().map(|k| format!("K={k}")));
@@ -32,29 +57,20 @@ fn main() -> anyhow::Result<()> {
     let csv_path = results_dir().join("table6.csv");
     let mut csv =
         CsvWriter::create(&csv_path, &["gamma", "period", "acc"])?;
-
     for &gamma in &gammas {
         let mut cells = vec![format!("γ={gamma}")];
         for &period in &periods {
-            let setup = FinetuneSetup {
-                epochs,
-                gamma,
-                period,
-                ..FinetuneSetup::default()
-            };
-            let out = finetune_cell(&bundle, &task, Method::LisaWor,
-                                    &setup, OptFamily::AdamW)?;
-            cells.push(format!("{:.2}", out.final_metric));
+            let a = acc.get(&(gamma, period)).copied().unwrap_or(f64::NAN);
+            cells.push(format!("{a:.2}"));
             csv.row_mixed(&[
                 CsvCell::I(gamma as i64),
                 CsvCell::I(period as i64),
-                CsvCell::F(out.final_metric),
+                CsvCell::F(a),
             ])?;
         }
         table.row(cells);
-        println!("  finished γ={gamma}");
     }
-    csv.flush()?;
+    csv.finish()?;
     table.print("Table 6 — LISA-WOR ablation, accuracy (%) on CoLA-like");
     println!("rows written to {}", csv_path.display());
     Ok(())

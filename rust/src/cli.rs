@@ -82,6 +82,55 @@ impl Args {
     pub fn bool(&self, name: &str) -> bool {
         matches!(self.get(name), Some("true") | Some("1") | Some("yes"))
     }
+
+    /// Comma-separated list flag (`--tasks CoLA,SST-2`). Empty items are
+    /// dropped, whitespace around items is trimmed.
+    pub fn list_or(&self, name: &str, default: &str) -> Vec<String> {
+        self.str_or(name, default)
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect()
+    }
+
+    /// Comma-separated parsed list: empty items dropped, whitespace
+    /// trimmed, any unparseable item is an error naming the flag.
+    fn parsed_list_or<T>(
+        &self,
+        name: &str,
+        default: &[T],
+        what: &str,
+    ) -> Result<Vec<T>>
+    where
+        T: std::str::FromStr + Clone,
+    {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(raw) => raw
+                .split(',')
+                .map(str::trim)
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.parse().map_err(|_| {
+                        anyhow::anyhow!(
+                            "--{name} expects comma-separated {what}, \
+                             got {s:?}"
+                        )
+                    })
+                })
+                .collect(),
+        }
+    }
+
+    /// Comma-separated integer list (`--seeds 0,1,2`).
+    pub fn u64_list_or(&self, name: &str, default: &[u64]) -> Result<Vec<u64>> {
+        self.parsed_list_or(name, default, "integers")
+    }
+
+    /// Comma-separated float list (`--keep-ratios 0.25,0.5`).
+    pub fn f64_list_or(&self, name: &str, default: &[f64]) -> Result<Vec<f64>> {
+        self.parsed_list_or(name, default, "numbers")
+    }
 }
 
 #[cfg(test)]
@@ -136,5 +185,31 @@ mod tests {
     fn trailing_switch() {
         let a = args("x --flag");
         assert!(a.bool("flag"));
+    }
+
+    #[test]
+    fn list_flags() {
+        let a = args("grid --tasks CoLA,SST-2 --seeds 0,1,2 \
+                      --keep-ratios 0.25,0.5");
+        assert_eq!(a.list_or("tasks", "x"), vec!["CoLA", "SST-2"]);
+        assert_eq!(a.u64_list_or("seeds", &[9]).unwrap(), vec![0, 1, 2]);
+        assert_eq!(
+            a.f64_list_or("keep-ratios", &[1.0]).unwrap(),
+            vec![0.25, 0.5]
+        );
+        // Defaults when absent.
+        assert_eq!(a.list_or("methods", "full,lisa"),
+                   vec!["full", "lisa"]);
+        assert_eq!(a.u64_list_or("missing", &[7]).unwrap(), vec![7]);
+        assert_eq!(a.f64_list_or("missing", &[0.5]).unwrap(), vec![0.5]);
+    }
+
+    #[test]
+    fn list_flags_trim_and_reject_garbage() {
+        let a = args("grid --tasks=CoLA,,SST-2 --seeds 0,x --keep-ratios ,");
+        assert_eq!(a.list_or("tasks", ""), vec!["CoLA", "SST-2"]);
+        assert!(a.u64_list_or("seeds", &[]).is_err());
+        assert_eq!(a.f64_list_or("keep-ratios", &[1.0]).unwrap(),
+                   Vec::<f64>::new());
     }
 }

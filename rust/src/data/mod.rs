@@ -13,4 +13,4 @@ pub mod tasks;
 
 pub use corpus::{Corpus, CorpusConfig};
 pub use linreg::LinRegData;
-pub use tasks::{ClassTask, TaskSpec, GLUE_LIKE_TASKS};
+pub use tasks::{find_task, ClassTask, TaskSpec, GLUE_LIKE_TASKS};

@@ -26,7 +26,9 @@ pub struct TaskSpec {
 
 /// The eight GLUE-like tasks mirrored from Table 3 (names kept for the
 /// reproduced table; statistics are synthetic).
-pub const GLUE_LIKE_TASKS: [TaskSpec; 8] = [
+// `static`, not `const`: [`find_task`] hands out `&'static` borrows,
+// which a const would only support via fragile rvalue promotion.
+pub static GLUE_LIKE_TASKS: [TaskSpec; 8] = [
     TaskSpec { name: "CoLA", n_train: 512, n_test: 512, noise: 0.25,
                teacher_depth: 3, seed: 101 },
     TaskSpec { name: "STS-B", n_train: 512, n_test: 512, noise: 0.10,
@@ -44,6 +46,22 @@ pub const GLUE_LIKE_TASKS: [TaskSpec; 8] = [
     TaskSpec { name: "QQP", n_train: 1024, n_test: 512, noise: 0.15,
                teacher_depth: 2, seed: 108 },
 ];
+
+/// Look up a GLUE-like task by name, tolerating case and `-`/`_`
+/// differences (`"sst-2"` finds `SST2`, `"stsb"` finds `STS-B`) — the
+/// paper and users spell these inconsistently. Every resolution site
+/// (job specs, the CLI) must use this one helper so a name that hashes
+/// as resolved also runs as resolved.
+pub fn find_task(name: &str) -> Option<&'static TaskSpec> {
+    let norm = |s: &str| -> String {
+        s.chars()
+            .filter(|c| *c != '-' && *c != '_')
+            .map(|c| c.to_ascii_lowercase())
+            .collect()
+    };
+    let want = norm(name);
+    GLUE_LIKE_TASKS.iter().find(|t| norm(t.name) == want)
+}
 
 /// Materialized classification task.
 #[derive(Clone, Debug)]
@@ -229,6 +247,15 @@ fn sample_split(
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn find_task_tolerates_case_and_separators() {
+        assert_eq!(find_task("SST-2").unwrap().name, "SST2");
+        assert_eq!(find_task("sst2").unwrap().name, "SST2");
+        assert_eq!(find_task("stsb").unwrap().name, "STS-B");
+        assert_eq!(find_task("CoLA").unwrap().name, "CoLA");
+        assert!(find_task("nope").is_none());
+    }
 
     #[test]
     fn tasks_are_deterministic() {

@@ -7,7 +7,9 @@
 //! (who wins, slopes, reduction factors) without duplicating setup.
 
 use crate::config::{Method, OptFamily, RunConfig, Schedule};
-use crate::data::{ClassTask, Corpus, CorpusConfig, TaskSpec};
+use crate::data::{ClassTask, Corpus, CorpusConfig, TaskSpec,
+                  GLUE_LIKE_TASKS};
+use crate::jobs::{ExperimentKind, JobSpec};
 use crate::runtime::bundle::UpdateKind;
 use crate::runtime::{artifacts_dir, ModelBundle, Runtime};
 use crate::train::{train_classifier, train_lm, TrainOutcome};
@@ -17,10 +19,19 @@ use std::path::Path;
 /// Scale knob for bench runtimes: `OMGD_BENCH_SCALE` ∈ (0, 1] shrinks
 /// epochs/steps for smoke runs (default 1.0 = paper-shaped runs).
 pub fn bench_scale() -> f64 {
-    std::env::var("OMGD_BENCH_SCALE")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .filter(|&x| x > 0.0 && x <= 1.0)
+    parse_bench_scale(std::env::var("OMGD_BENCH_SCALE").ok().as_deref())
+}
+
+/// Pure parser behind [`bench_scale`], split out so the env-var edge
+/// cases are unit-testable without process-global state.
+///
+/// `f64::parse` accepts `"NaN"` and `"inf"`; NaN in particular is
+/// treacherous in a filter chain (every comparison is false, so which
+/// arm "wins" depends on how the predicate is phrased). Reject anything
+/// non-finite explicitly, then require (0, 1].
+pub fn parse_bench_scale(raw: Option<&str>) -> f64 {
+    raw.and_then(|s| s.trim().parse::<f64>().ok())
+        .filter(|x| x.is_finite() && *x > 0.0 && *x <= 1.0)
         .unwrap_or(1.0)
 }
 
@@ -69,6 +80,29 @@ pub fn load_bundle_sgdm(rt: &Runtime, model: &str) -> Result<ModelBundle> {
     ModelBundle::load(rt, &dir, model, UpdateKind::Sgdm)
 }
 
+/// The one place a [`FinetuneSetup`] becomes a [`RunConfig`] — shared
+/// by the direct driver ([`finetune_cell`]) and the grid/cache path
+/// ([`finetune_spec`]), so the two can never drift apart and hand a
+/// stale-but-valid cache key different semantics. `steps`/`eval_every`
+/// are left for the caller (step units here, epoch units in specs).
+pub fn finetune_config(
+    method: Method,
+    setup: &FinetuneSetup,
+    opt_family: OptFamily,
+) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.model = setup.model.clone();
+    cfg.method = method;
+    cfg.opt.family = opt_family;
+    cfg.opt.lr = setup.lr;
+    cfg.mask.gamma = setup.gamma;
+    cfg.mask.period = setup.period;
+    cfg.mask.keep_ratio = setup.keep_ratio;
+    cfg.mask.rank = setup.rank;
+    cfg.seed = setup.seed;
+    cfg
+}
+
 /// Fine-tune one (method, task) cell.
 pub fn finetune_cell(
     bundle: &ModelBundle,
@@ -79,18 +113,9 @@ pub fn finetune_cell(
 ) -> Result<TrainOutcome> {
     let steps_per_epoch =
         task.n_train().div_ceil(bundle.man.data.batch);
-    let mut cfg = RunConfig::default();
-    cfg.model = setup.model.clone();
-    cfg.method = method;
-    cfg.opt.family = opt_family;
-    cfg.opt.lr = setup.lr;
-    cfg.mask.gamma = setup.gamma;
-    cfg.mask.period = setup.period;
-    cfg.mask.keep_ratio = setup.keep_ratio;
-    cfg.mask.rank = setup.rank;
+    let mut cfg = finetune_config(method, setup, opt_family);
     cfg.steps = setup.epochs * steps_per_epoch;
     cfg.eval_every = 0;
-    cfg.seed = setup.seed;
     train_classifier(bundle, &cfg, task)
 }
 
@@ -119,6 +144,7 @@ pub fn sgdm_method_roster() -> Vec<Method> {
 }
 
 /// Pre-training setup for Fig. 5 (LISA vs LISA-WOR on the LM).
+#[derive(Clone, Debug)]
 pub struct PretrainSetup {
     pub model: String,
     pub steps: usize,
@@ -143,14 +169,11 @@ impl Default for PretrainSetup {
     }
 }
 
-/// Run one pre-training leg; the corpus is derived from the bundle
-/// geometry so all methods share data.
-pub fn pretrain_cell(
-    bundle: &ModelBundle,
-    method: Method,
-    setup: &PretrainSetup,
-) -> Result<TrainOutcome> {
-    let corpus = pretrain_corpus(bundle, setup.steps);
+/// The one place a [`PretrainSetup`] becomes a [`RunConfig`] — shared
+/// by the direct driver ([`pretrain_cell`]) and `omgd grid`'s pretrain
+/// kind, so the warmup+cosine schedule (and everything else) can't
+/// silently diverge between the two paths (cf. [`finetune_config`]).
+pub fn pretrain_config(method: Method, setup: &PretrainSetup) -> RunConfig {
     let mut cfg = RunConfig::default();
     cfg.model = setup.model.clone();
     cfg.method = method;
@@ -165,6 +188,18 @@ pub fn pretrain_cell(
         total: setup.steps,
         min_lr: setup.lr * 0.1,
     };
+    cfg
+}
+
+/// Run one pre-training leg; the corpus is derived from the bundle
+/// geometry so all methods share data.
+pub fn pretrain_cell(
+    bundle: &ModelBundle,
+    method: Method,
+    setup: &PretrainSetup,
+) -> Result<TrainOutcome> {
+    let corpus = pretrain_corpus(bundle, setup.steps);
+    let cfg = pretrain_config(method, setup);
     train_lm(bundle, &cfg, &corpus)
 }
 
@@ -181,6 +216,129 @@ pub fn pretrain_corpus(bundle: &ModelBundle, steps: usize) -> Corpus {
         },
         bundle.man.data.seq,
     )
+}
+
+// ---------------------------------------------------------------------
+// Grid builders: the Table 3/5/6 drivers expressed as job submissions.
+// The bench binaries (and `omgd grid`) hand these to `jobs::run_grid`
+// instead of hand-rolling nested loops, so cells shard across workers
+// and completed cells replay from the result cache.
+// ---------------------------------------------------------------------
+
+/// One fine-tuning grid cell as a job spec. Built from the same
+/// [`finetune_config`] as [`finetune_cell`]; here `cfg.steps` /
+/// `cfg.eval_every` are in epoch units, resolved against the bundle
+/// batch size by the job runner.
+pub fn finetune_spec(
+    task: &str,
+    method: Method,
+    setup: &FinetuneSetup,
+    opt_family: OptFamily,
+    eval_every_epochs: usize,
+) -> JobSpec {
+    let mut cfg = finetune_config(method, setup, opt_family);
+    cfg.steps = setup.epochs.max(1);
+    cfg.eval_every = eval_every_epochs;
+    JobSpec {
+        kind: ExperimentKind::Finetune {
+            task: task.to_string(),
+            epochs: setup.epochs,
+        },
+        cfg,
+    }
+}
+
+/// Table 3 grid: every GLUE-like task × the AdamW roster × `seeds`,
+/// method-major then task then seed (the aggregation order the table
+/// printer expects).
+pub fn table3_grid(seeds: &[u64]) -> Vec<JobSpec> {
+    let setup = FinetuneSetup {
+        epochs: scaled(30, 4),
+        gamma: 4,
+        period: 1,
+        ..FinetuneSetup::default()
+    };
+    let mut specs = Vec::new();
+    for method in adamw_method_roster() {
+        for spec_t in &GLUE_LIKE_TASKS {
+            for &seed in seeds {
+                let s = FinetuneSetup { seed, ..setup.clone() };
+                specs.push(finetune_spec(
+                    spec_t.name,
+                    method,
+                    &s,
+                    OptFamily::AdamW,
+                    0,
+                ));
+            }
+        }
+    }
+    specs
+}
+
+/// Table 5's three Gaussian-blob datasets: (name, spread, data seed).
+pub const TABLE5_DATASETS: [(&str, f64, u64); 3] = [
+    ("IMG-easy", 3.0, 6001),
+    ("IMG-mid", 4.0, 6002),
+    ("IMG-hard", 5.5, 6003),
+];
+
+/// Table 5 grid: blob datasets × the AdamW roster on the `mlp-img`
+/// bundle, with per-epoch eval (the Fig. 3 test-loss curves).
+pub fn table5_grid() -> Vec<JobSpec> {
+    let epochs = scaled(15, 3);
+    let mut specs = Vec::new();
+    for method in adamw_method_roster() {
+        for (name, spread, data_seed) in TABLE5_DATASETS {
+            let mut cfg = RunConfig::default();
+            cfg.model = "mlp-img".into();
+            cfg.method = method;
+            cfg.opt.family = OptFamily::AdamW;
+            cfg.opt.lr = 1e-3;
+            cfg.mask.gamma = 3;
+            cfg.mask.period = 5.min(epochs);
+            cfg.mask.rank = 8;
+            cfg.steps = epochs;
+            cfg.eval_every = 1; // per-epoch test loss
+            cfg.seed = 11;
+            specs.push(JobSpec {
+                kind: ExperimentKind::Blobs {
+                    dataset: name.to_string(),
+                    spread,
+                    data_seed,
+                    epochs,
+                },
+                cfg,
+            });
+        }
+    }
+    specs
+}
+
+/// Table 6 grid: LISA-WOR γ × K ablation on CoLA-like, γ-major then K.
+pub fn table6_grid() -> Vec<JobSpec> {
+    let epochs = scaled(20, 4);
+    let gammas = [1usize, 2, 3, 4, 6];
+    let periods = [1usize, 2, 3, 5, 6];
+    let mut specs = Vec::new();
+    for &gamma in &gammas {
+        for &period in &periods {
+            let setup = FinetuneSetup {
+                epochs,
+                gamma,
+                period,
+                ..FinetuneSetup::default()
+            };
+            specs.push(finetune_spec(
+                GLUE_LIKE_TASKS[0].name,
+                Method::LisaWor,
+                &setup,
+                OptFamily::AdamW,
+                0,
+            ));
+        }
+    }
+    specs
 }
 
 /// True if the artifacts for `model` exist (benches skip gracefully
@@ -223,6 +381,73 @@ mod tests {
         let sgdm = sgdm_method_roster();
         assert_eq!(sgdm,
                    vec![Method::Full, Method::IidMask, Method::WorMask]);
+    }
+
+    #[test]
+    fn bench_scale_parser_edge_cases() {
+        // Unset / empty / garbage → default 1.0.
+        assert_eq!(parse_bench_scale(None), 1.0);
+        assert_eq!(parse_bench_scale(Some("")), 1.0);
+        assert_eq!(parse_bench_scale(Some("abc")), 1.0);
+        // Non-finite values parse as f64 but must be rejected.
+        assert_eq!(parse_bench_scale(Some("NaN")), 1.0);
+        assert_eq!(parse_bench_scale(Some("nan")), 1.0);
+        assert_eq!(parse_bench_scale(Some("inf")), 1.0);
+        assert_eq!(parse_bench_scale(Some("-inf")), 1.0);
+        // Out of (0, 1] → default.
+        assert_eq!(parse_bench_scale(Some("0")), 1.0);
+        assert_eq!(parse_bench_scale(Some("-0.5")), 1.0);
+        assert_eq!(parse_bench_scale(Some("1.5")), 1.0);
+        // In range (with whitespace tolerance) → accepted.
+        assert_eq!(parse_bench_scale(Some("0.05")), 0.05);
+        assert_eq!(parse_bench_scale(Some(" 0.5 ")), 0.5);
+        assert_eq!(parse_bench_scale(Some("1")), 1.0);
+        assert_eq!(parse_bench_scale(Some("1e-3")), 1e-3);
+    }
+
+    #[test]
+    fn table_grids_have_the_paper_shapes() {
+        let seeds = [0u64, 1];
+        let t3 = table3_grid(&seeds);
+        // 7 methods × 8 tasks × 2 seeds
+        assert_eq!(t3.len(), 7 * 8 * 2);
+        let t5 = table5_grid();
+        assert_eq!(t5.len(), 7 * 3);
+        let t6 = table6_grid();
+        assert_eq!(t6.len(), 5 * 5);
+        // Within a grid every cell hashes distinctly (the cache key
+        // space is the grid). Cross-grid overlap is allowed — under
+        // OMGD_BENCH_SCALE clamping, Table 3's and Table 6's shared
+        // (lisa-wor, CoLA) cell can be the same computation, and cache
+        // sharing it is exactly the point.
+        for (name, grid) in
+            [("t3", &t3), ("t5", &t5), ("t6", &t6)]
+        {
+            let mut hashes: Vec<u64> =
+                grid.iter().map(|s| s.content_hash()).collect();
+            let n = hashes.len();
+            hashes.sort_unstable();
+            hashes.dedup();
+            assert_eq!(hashes.len(), n, "{name} cells must not collide");
+        }
+    }
+
+    #[test]
+    fn finetune_spec_mirrors_finetune_cell_layout() {
+        let setup = FinetuneSetup { seed: 3, epochs: 5,
+                                    ..FinetuneSetup::default() };
+        let s = finetune_spec("CoLA", Method::LisaWor, &setup,
+                              OptFamily::AdamW, 2);
+        assert_eq!(s.cfg.method, Method::LisaWor);
+        assert_eq!(s.cfg.seed, 3);
+        assert_eq!(s.cfg.eval_every, 2);
+        match &s.kind {
+            crate::jobs::ExperimentKind::Finetune { task, epochs } => {
+                assert_eq!(task, "CoLA");
+                assert_eq!(*epochs, 5);
+            }
+            other => panic!("wrong kind {other:?}"),
+        }
     }
 
     #[test]

@@ -1,0 +1,336 @@
+//! On-disk result cache keyed by [`JobSpec`] content hash.
+//!
+//! Layout: one JSON file per completed cell under `target/omgd-cache/`
+//! (override with `--cache-dir` / [`ResultCache::open`]). Writes are
+//! atomic (unique temp file + rename) so concurrent workers — or two
+//! grids racing on the same cell — can never leave a torn entry; a
+//! reader either sees a complete file or a miss.
+//!
+//! Entries store the spec's canonical string alongside the outcome and
+//! [`ResultCache::get`] verifies it, so a (vanishingly unlikely) 64-bit
+//! hash collision degrades to a cache miss, never a wrong result. An
+//! artifact fingerprint (`afp`, supplied by the runner from the model's
+//! on-disk artifact files) is stored and verified the same way, so
+//! regenerating artifacts — same model name, new weights/HLO — reads
+//! as a miss instead of replaying stale results. Unparseable or
+//! version-skewed entries also read as misses.
+
+use super::pool::JobOutcome;
+use super::spec::JobSpec;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Bump when the entry format or [`JobOutcome`] fields change.
+const SCHEMA_VERSION: u64 = 1;
+
+/// Default cache location, relative to the working directory.
+pub const DEFAULT_CACHE_DIR: &str = "target/omgd-cache";
+
+static TMP_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// Handle to one cache directory.
+pub struct ResultCache {
+    dir: PathBuf,
+}
+
+impl ResultCache {
+    /// Open (creating if needed) the cache at `dir`, or the default.
+    pub fn open(dir: Option<&str>) -> Result<Self> {
+        let dir = PathBuf::from(dir.unwrap_or(DEFAULT_CACHE_DIR));
+        fs::create_dir_all(&dir)
+            .with_context(|| format!("creating cache dir {dir:?}"))?;
+        Ok(Self { dir })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn entry_path(&self, hash: &str) -> PathBuf {
+        self.dir.join(format!("{hash}.json"))
+    }
+
+    /// Look up a completed outcome for `spec` computed against the
+    /// artifacts identified by `afp`. Any read/parse/version/canonical/
+    /// fingerprint mismatch is a miss.
+    pub fn get(&self, spec: &JobSpec, afp: &str) -> Option<JobOutcome> {
+        let text =
+            fs::read_to_string(self.entry_path(&spec.hash_hex())).ok()?;
+        let j = Json::parse(&text).ok()?;
+        if j.get("v").and_then(Json::as_f64) != Some(SCHEMA_VERSION as f64) {
+            return None;
+        }
+        if j.get("canon").and_then(Json::as_str)
+            != Some(spec.canonical().as_str())
+        {
+            return None;
+        }
+        if j.get("afp").and_then(Json::as_str) != Some(afp) {
+            return None;
+        }
+        parse_outcome(j.get("outcome")?)
+    }
+
+    /// Persist `outcome` for `spec` (atomic: temp file + rename).
+    pub fn put(
+        &self,
+        spec: &JobSpec,
+        afp: &str,
+        outcome: &JobOutcome,
+    ) -> Result<()> {
+        let path = self.entry_path(&spec.hash_hex());
+        let tmp = self.dir.join(format!(
+            ".tmp-{}-{}",
+            std::process::id(),
+            TMP_COUNTER.fetch_add(1, Ordering::Relaxed)
+        ));
+        fs::write(&tmp, serialize_entry(spec, afp, outcome))
+            .with_context(|| format!("writing cache temp {tmp:?}"))?;
+        fs::rename(&tmp, &path)
+            .with_context(|| format!("publishing cache entry {path:?}"))?;
+        Ok(())
+    }
+
+    /// Remove one entry; returns true if it existed.
+    pub fn invalidate(&self, spec: &JobSpec) -> bool {
+        fs::remove_file(self.entry_path(&spec.hash_hex())).is_ok()
+    }
+
+    /// Number of completed entries on disk.
+    pub fn len(&self) -> usize {
+        self.iter_entries().count()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Remove every entry; returns how many were deleted.
+    pub fn clear(&self) -> Result<usize> {
+        let mut n = 0;
+        for p in self.iter_entries().collect::<Vec<_>>() {
+            fs::remove_file(&p)?;
+            n += 1;
+        }
+        Ok(n)
+    }
+
+    fn iter_entries(&self) -> impl Iterator<Item = PathBuf> {
+        fs::read_dir(&self.dir)
+            .into_iter()
+            .flatten()
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| {
+                p.extension().map(|x| x == "json").unwrap_or(false)
+            })
+    }
+}
+
+/// Serialize one entry. Floats use Rust's shortest round-trip `Display`;
+/// non-finite values become `null` (JSON has no NaN) and read back as
+/// NaN.
+fn serialize_entry(spec: &JobSpec, afp: &str, o: &JobOutcome) -> String {
+    let loss: Vec<String> = o
+        .loss_series
+        .iter()
+        .map(|(s, l)| format!("[{s},{}]", ser_f(*l)))
+        .collect();
+    let eval: Vec<String> = o
+        .eval_series
+        .iter()
+        .map(|(s, l, a)| format!("[{s},{},{}]", ser_f(*l), ser_f(*a)))
+        .collect();
+    format!(
+        "{{\"v\":{SCHEMA_VERSION},\"hash\":\"{}\",\"label\":\"{}\",\
+         \"canon\":\"{}\",\"afp\":\"{}\",\"outcome\":{{\"final_metric\":{},\
+         \"tail_loss\":{},\"steps\":{},\"train_secs\":{},\
+         \"loss_series\":[{}],\"eval_series\":[{}]}}}}",
+        spec.hash_hex(),
+        esc(&spec.label()),
+        esc(&spec.canonical()),
+        esc(afp),
+        ser_f(o.final_metric),
+        ser_f(o.tail_loss),
+        o.steps,
+        ser_f(o.train_secs),
+        loss.join(","),
+        eval.join(","),
+    )
+}
+
+fn parse_outcome(j: &Json) -> Option<JobOutcome> {
+    let f = |k: &str| -> Option<f64> {
+        match j.get(k)? {
+            Json::Null => Some(f64::NAN),
+            v => v.as_f64(),
+        }
+    };
+    let mut out = JobOutcome {
+        final_metric: f("final_metric")?,
+        tail_loss: f("tail_loss")?,
+        steps: j.get("steps")?.as_usize()?,
+        train_secs: f("train_secs")?,
+        loss_series: Vec::new(),
+        eval_series: Vec::new(),
+    };
+    for row in j.get("loss_series")?.as_arr()? {
+        let row = row.as_arr()?;
+        if row.len() != 2 {
+            return None;
+        }
+        out.loss_series
+            .push((row[0].as_usize()?, null_to_nan(&row[1])?));
+    }
+    for row in j.get("eval_series")?.as_arr()? {
+        let row = row.as_arr()?;
+        if row.len() != 3 {
+            return None;
+        }
+        out.eval_series.push((
+            row[0].as_usize()?,
+            null_to_nan(&row[1])?,
+            null_to_nan(&row[2])?,
+        ));
+    }
+    Some(out)
+}
+
+fn null_to_nan(j: &Json) -> Option<f64> {
+    match j {
+        Json::Null => Some(f64::NAN),
+        v => v.as_f64(),
+    }
+}
+
+use crate::util::json::{escape_str as esc, ser_f64 as ser_f};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RunConfig;
+    use crate::jobs::spec::ExperimentKind;
+
+    fn tmp_cache(tag: &str) -> ResultCache {
+        let dir = std::env::temp_dir()
+            .join(format!("omgd-cache-test-{tag}-{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        ResultCache::open(Some(dir.to_str().unwrap())).unwrap()
+    }
+
+    fn spec(seed: u64) -> JobSpec {
+        let mut cfg = RunConfig::default();
+        cfg.seed = seed;
+        JobSpec {
+            kind: ExperimentKind::Finetune { task: "CoLA".into(), epochs: 2 },
+            cfg,
+        }
+    }
+
+    fn outcome() -> JobOutcome {
+        JobOutcome {
+            final_metric: 91.25,
+            tail_loss: 0.123456789012345,
+            steps: 3,
+            train_secs: 1.5,
+            loss_series: vec![(0, 2.5), (1, 1.25), (2, 0.625)],
+            eval_series: vec![(1, 1.0, 50.0), (2, 0.5, 75.0)],
+        }
+    }
+
+    #[test]
+    fn miss_then_hit_round_trips_exactly() {
+        let c = tmp_cache("roundtrip");
+        let s = spec(0);
+        assert!(c.get(&s, "afp-1").is_none());
+        c.put(&s, "afp-1", &outcome()).unwrap();
+        let got = c.get(&s, "afp-1").expect("hit after put");
+        let want = outcome();
+        assert_eq!(got.final_metric, want.final_metric);
+        assert_eq!(got.tail_loss, want.tail_loss);
+        assert_eq!(got.steps, want.steps);
+        assert_eq!(got.train_secs, want.train_secs);
+        assert_eq!(got.loss_series, want.loss_series);
+        assert_eq!(got.eval_series, want.eval_series);
+        assert_eq!(c.len(), 1);
+        std::fs::remove_dir_all(c.dir()).ok();
+    }
+
+    #[test]
+    fn entries_are_per_spec() {
+        let c = tmp_cache("perspec");
+        c.put(&spec(0), "afp-1", &outcome()).unwrap();
+        assert!(c.get(&spec(1), "afp-1").is_none(), "different seed, different cell");
+        assert_eq!(c.len(), 1);
+        std::fs::remove_dir_all(c.dir()).ok();
+    }
+
+    #[test]
+    fn invalidate_and_clear() {
+        let c = tmp_cache("inval");
+        c.put(&spec(0), "afp-1", &outcome()).unwrap();
+        c.put(&spec(1), "afp-1", &outcome()).unwrap();
+        assert!(c.invalidate(&spec(0)));
+        assert!(!c.invalidate(&spec(0)), "second invalidate is a no-op");
+        assert!(c.get(&spec(0), "afp-1").is_none());
+        assert!(c.get(&spec(1), "afp-1").is_some());
+        assert_eq!(c.clear().unwrap(), 1);
+        assert!(c.is_empty());
+        std::fs::remove_dir_all(c.dir()).ok();
+    }
+
+    #[test]
+    fn nan_survives_the_round_trip_as_nan() {
+        let c = tmp_cache("nan");
+        let s = spec(2);
+        let mut o = outcome();
+        o.final_metric = f64::NAN;
+        o.eval_series = vec![(0, f64::NAN, 0.0)];
+        c.put(&s, "afp-1", &o).unwrap();
+        let got = c.get(&s, "afp-1").unwrap();
+        assert!(got.final_metric.is_nan());
+        assert!(got.eval_series[0].1.is_nan());
+        std::fs::remove_dir_all(c.dir()).ok();
+    }
+
+    #[test]
+    fn corrupt_entry_reads_as_miss() {
+        let c = tmp_cache("corrupt");
+        let s = spec(3);
+        c.put(&s, "afp-1", &outcome()).unwrap();
+        std::fs::write(c.entry_path(&s.hash_hex()), "{not json").unwrap();
+        assert!(c.get(&s, "afp-1").is_none());
+        std::fs::remove_dir_all(c.dir()).ok();
+    }
+
+    #[test]
+    fn canonical_mismatch_reads_as_miss() {
+        let c = tmp_cache("canon");
+        let a = spec(4);
+        c.put(&a, "afp-1", &outcome()).unwrap();
+        // Simulate a hash collision: copy a's entry under b's hash.
+        let b = spec(5);
+        std::fs::copy(
+            c.entry_path(&a.hash_hex()),
+            c.entry_path(&b.hash_hex()),
+        )
+        .unwrap();
+        assert!(c.get(&b, "afp-1").is_none(), "foreign canon must not hit");
+        std::fs::remove_dir_all(c.dir()).ok();
+    }
+
+    #[test]
+    fn regenerated_artifacts_read_as_miss() {
+        let c = tmp_cache("afp");
+        let s = spec(6);
+        c.put(&s, "afp-old", &outcome()).unwrap();
+        assert!(c.get(&s, "afp-old").is_some());
+        // Same spec, regenerated artifacts → different fingerprint →
+        // miss, never a stale replay.
+        assert!(c.get(&s, "afp-new").is_none());
+        std::fs::remove_dir_all(c.dir()).ok();
+    }
+}

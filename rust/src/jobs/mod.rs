@@ -1,0 +1,378 @@
+//! Async job orchestration: grids of training runs as schedulable work.
+//!
+//! The paper's sweeps (Tables 3/5/6, Fig. 5) are embarrassingly parallel
+//! across methods × seeds × keep-ratios — every cell is one
+//! [`JobSpec`]. This subsystem turns the repo's one-run-per-process
+//! entry points into a schedulable system:
+//!
+//! * [`spec`] — [`JobSpec`] (experiment kind + `RunConfig` + seed) with
+//!   a stable content hash;
+//! * [`queue`] — bounded MPMC priority queue with cancellation;
+//! * [`pool`] — `std::thread` worker pool, one PJRT runtime per worker,
+//!   panic isolation per job;
+//! * [`cache`] — on-disk result cache keyed by spec hash (`--force`
+//!   invalidates);
+//! * [`report`] — aggregation into [`crate::bench::TablePrinter`] /
+//!   [`crate::metrics::CsvWriter`] sinks;
+//! * [`serve`] — long-lived JSONL request loop (the seed of a
+//!   request-serving path).
+//!
+//! Front-ends: `omgd grid` and `omgd serve` (see `main.rs`), plus the
+//! Table 3/5/6 bench binaries, which submit grids built by
+//! [`crate::experiments`].
+
+pub mod cache;
+pub mod pool;
+pub mod queue;
+pub mod report;
+pub mod serve;
+pub mod spec;
+
+pub use cache::{ResultCache, DEFAULT_CACHE_DIR};
+pub use pool::{run_pool, JobOutcome, JobResult, JobStatus};
+pub use queue::{Job, JobQueue};
+pub use report::GridReport;
+pub use spec::{ExperimentKind, JobSpec};
+
+use crate::config::{OptFamily, RunConfig};
+use crate::data::ClassTask;
+use crate::runtime::bundle::UpdateKind;
+use crate::runtime::{artifacts_dir, ModelBundle, Runtime};
+use crate::train::{train_classifier, train_lm};
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+/// Options shared by `omgd grid`, `omgd serve`, and the bench drivers.
+#[derive(Clone, Debug)]
+pub struct GridOptions {
+    /// Worker threads; each owns its own PJRT runtime + bundle cache.
+    pub workers: usize,
+    /// Invalidate and recompute cached cells.
+    pub force: bool,
+    /// Cache directory override (default [`DEFAULT_CACHE_DIR`]).
+    pub cache_dir: Option<String>,
+}
+
+impl Default for GridOptions {
+    fn default() -> Self {
+        Self { workers: 1, force: false, cache_dir: None }
+    }
+}
+
+/// `OMGD_FORCE` env override for the bench drivers: truthy values only
+/// (`1`/`true`/`yes`), matching [`crate::cli::Args::bool`] — a merely
+/// *present* `OMGD_FORCE=0` must not blow the cache away.
+pub fn force_from_env() -> bool {
+    matches!(
+        std::env::var("OMGD_FORCE").ok().as_deref(),
+        Some("1") | Some("true") | Some("yes")
+    )
+}
+
+/// Worker-count default: `OMGD_WORKERS` env override, else available
+/// parallelism clamped to 4 (each worker compiles its own executables,
+/// so memory — not cores — is the practical ceiling).
+pub fn default_workers() -> usize {
+    if let Some(n) = std::env::var("OMGD_WORKERS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+    {
+        return n;
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .clamp(1, 4)
+}
+
+/// Run a grid of specs to completion: enqueue all cells, shard them
+/// across `opts.workers` threads, reuse cached results unless
+/// `opts.force`, and return the (submission-ordered) report.
+pub fn run_grid(specs: Vec<JobSpec>, opts: &GridOptions) -> Result<GridReport> {
+    let cache = ResultCache::open(opts.cache_dir.as_deref())?;
+    let queue = JobQueue::bounded(specs.len().max(1));
+    for s in specs {
+        queue.push(s, 0)?;
+    }
+    queue.close();
+    // Per-cell progress to stderr as workers finish — a paper-shaped
+    // grid runs for hours, and silence is indistinguishable from a hung
+    // runtime. (Panicked cells get no line here; the report's failure
+    // summary covers them.)
+    let results = run_pool(&queue, opts.workers, |_wid| {
+        let mut inner = cached_runner(&cache, opts.force);
+        move |spec: &JobSpec| {
+            let r = inner(spec);
+            match &r {
+                Ok((_, true)) => eprintln!("  [cache] {}", spec.label()),
+                Ok((_, false)) => eprintln!("  [done ] {}", spec.label()),
+                Err(e) => {
+                    eprintln!("  [fail ] {}: {e:#}", spec.label())
+                }
+            }
+            r
+        }
+    });
+    Ok(GridReport::new(results))
+}
+
+/// The production worker function: consult the cache, else execute the
+/// spec with this worker's lazily-created runtime, then persist the
+/// fresh outcome. Returns `(outcome, from_cache)`.
+pub fn cached_runner(
+    cache: &ResultCache,
+    force: bool,
+) -> impl FnMut(&JobSpec) -> Result<(JobOutcome, bool)> + '_ {
+    let mut runner = SpecRunner::new();
+    move |spec| {
+        let afp = artifact_fingerprint(&spec.cfg);
+        if force {
+            cache.invalidate(spec);
+        } else if let Some(out) = cache.get(spec, &afp) {
+            return Ok((out, true));
+        }
+        let out = runner.run(spec)?;
+        // The cache is best-effort: a full disk or read-only cache dir
+        // must not discard an outcome that already cost a training run.
+        if let Err(e) = cache.put(spec, &afp, &out) {
+            eprintln!(
+                "warning: cache write failed for {} ({}): {e:#}",
+                spec.label(),
+                spec.hash_hex()
+            );
+        }
+        Ok((out, false))
+    }
+}
+
+/// Fingerprint of the on-disk artifact files backing `cfg.model`
+/// (`<model>.*`: manifest, HLO texts, init dump): FNV over sorted
+/// (name, size, mtime) triples. Part of the cache-entry identity, so
+/// regenerating artifacts under the same model name invalidates cached
+/// cells instead of silently replaying pre-regeneration results.
+/// mtime-based, so an identical regeneration also misses — conservative
+/// in the safe direction.
+pub fn artifact_fingerprint(cfg: &RunConfig) -> String {
+    let dir = resolve_artifacts(&cfg.artifacts_dir);
+    let prefix = format!("{}.", cfg.model);
+    let mut entries: Vec<String> = match std::fs::read_dir(&dir) {
+        Err(_) => return "absent".to_string(),
+        Ok(rd) => rd
+            .filter_map(|e| e.ok())
+            .filter(|e| {
+                e.file_name().to_string_lossy().starts_with(&prefix)
+            })
+            .filter_map(|e| {
+                let meta = e.metadata().ok()?;
+                let mtime = meta
+                    .modified()
+                    .ok()?
+                    .duration_since(std::time::UNIX_EPOCH)
+                    .ok()?;
+                Some(format!(
+                    "{}:{}:{}.{:09}",
+                    e.file_name().to_string_lossy(),
+                    meta.len(),
+                    mtime.as_secs(),
+                    mtime.subsec_nanos()
+                ))
+            })
+            .collect(),
+    };
+    if entries.is_empty() {
+        return "absent".to_string();
+    }
+    entries.sort();
+    format!("{:016x}", spec::fnv1a64(entries.join(";").as_bytes()))
+}
+
+/// Per-worker execution state: one PJRT runtime (created on the first
+/// non-cached job, so cache replays never touch XLA) plus compiled
+/// bundles keyed by `(model, optimizer family)`.
+pub struct SpecRunner {
+    rt: Option<Runtime>,
+    bundles: HashMap<String, ModelBundle>,
+}
+
+impl Default for SpecRunner {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SpecRunner {
+    pub fn new() -> Self {
+        Self { rt: None, bundles: HashMap::new() }
+    }
+
+    fn bundle(&mut self, cfg: &RunConfig) -> Result<&ModelBundle> {
+        let key = format!("{}:{}", cfg.model, cfg.opt.family.name());
+        if !self.bundles.contains_key(&key) {
+            let dir = resolve_artifacts(&cfg.artifacts_dir);
+            let man = dir.join(format!("{}.json", cfg.model));
+            // Cheap existence check before spinning up PJRT.
+            if !man.exists() {
+                bail!(
+                    "artifacts for {:?} missing at {} (run `make artifacts`)",
+                    cfg.model,
+                    man.display()
+                );
+            }
+            if self.rt.is_none() {
+                self.rt = Some(Runtime::cpu()?);
+            }
+            let update = match cfg.opt.family {
+                OptFamily::AdamW => UpdateKind::AdamW,
+                OptFamily::Sgdm => UpdateKind::Sgdm,
+            };
+            let bundle = ModelBundle::load(
+                self.rt.as_ref().unwrap(),
+                &dir,
+                &cfg.model,
+                update,
+            )?;
+            self.bundles.insert(key.clone(), bundle);
+        }
+        Ok(&self.bundles[&key])
+    }
+
+    /// Execute one spec to completion on this worker's runtime.
+    pub fn run(&mut self, spec: &JobSpec) -> Result<JobOutcome> {
+        spec.cfg.validate()?;
+        match &spec.kind {
+            ExperimentKind::Finetune { task, epochs } => {
+                let ts = crate::data::find_task(task)
+                    .ok_or_else(|| anyhow!("unknown task {task:?}"))?;
+                let bundle = self.bundle(&spec.cfg)?;
+                let t = ClassTask::from_spec(
+                    ts,
+                    bundle.man.data.d_in,
+                    bundle.man.data.n_class,
+                );
+                classifier_outcome(bundle, &spec.cfg, &t, *epochs)
+            }
+            ExperimentKind::Blobs { dataset, spread, data_seed, epochs } => {
+                let bundle = self.bundle(&spec.cfg)?;
+                let t = ClassTask::gaussian_blobs(
+                    dataset,
+                    bundle.man.data.d_in,
+                    bundle.man.data.n_class,
+                    spec::BLOBS_N_TRAIN,
+                    spec::BLOBS_N_TEST,
+                    *spread,
+                    *data_seed,
+                );
+                classifier_outcome(bundle, &spec.cfg, &t, *epochs)
+            }
+            ExperimentKind::Pretrain => {
+                let bundle = self.bundle(&spec.cfg)?;
+                let corpus =
+                    crate::experiments::pretrain_corpus(bundle, spec.cfg.steps);
+                let out = train_lm(bundle, &spec.cfg, &corpus)?;
+                Ok(JobOutcome::from_train(&out))
+            }
+        }
+    }
+}
+
+/// For classifier kinds the spec's `steps`/`eval_every` are in *epochs*
+/// (the bundle's batch size is unknown at spec-build time); resolve them
+/// to steps here.
+fn classifier_outcome(
+    bundle: &ModelBundle,
+    cfg: &RunConfig,
+    task: &ClassTask,
+    epochs: usize,
+) -> Result<JobOutcome> {
+    let steps_per_epoch = task.n_train().div_ceil(bundle.man.data.batch);
+    let mut cfg = cfg.clone();
+    cfg.steps = epochs.max(1) * steps_per_epoch;
+    cfg.eval_every = cfg.eval_every.saturating_mul(steps_per_epoch);
+    let out = train_classifier(bundle, &cfg, task)?;
+    Ok(JobOutcome::from_train(&out))
+}
+
+/// An explicitly-configured artifacts dir is honored verbatim (a typo'd
+/// path then fails loudly in [`SpecRunner::bundle`]'s existence check,
+/// naming that path). Only the unset/default value falls back to the
+/// usual env/CWD/manifest-dir resolution, so grids built from
+/// `RunConfig::default()` work under `cargo test` too.
+fn resolve_artifacts(configured: &str) -> PathBuf {
+    if configured.is_empty()
+        || configured == RunConfig::default().artifacts_dir
+    {
+        artifacts_dir(None)
+    } else {
+        PathBuf::from(configured)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn missing_model_spec(seed: u64) -> JobSpec {
+        let mut cfg = RunConfig::default();
+        cfg.seed = seed;
+        // A model name no artifacts dir can contain, so the runner fails
+        // fast without touching PJRT.
+        cfg.model = "no-such-model-xyz".into();
+        JobSpec {
+            kind: ExperimentKind::Finetune { task: "CoLA".into(), epochs: 1 },
+            cfg,
+        }
+    }
+
+    fn tmp_dir(tag: &str) -> String {
+        let d = std::env::temp_dir()
+            .join(format!("omgd-grid-test-{tag}-{}", std::process::id()));
+        std::fs::remove_dir_all(&d).ok();
+        d.to_string_lossy().into_owned()
+    }
+
+    #[test]
+    fn grid_reports_missing_artifacts_as_failed_cells() {
+        let dir = tmp_dir("missing");
+        let opts = GridOptions {
+            workers: 2,
+            force: false,
+            cache_dir: Some(dir.clone()),
+        };
+        let specs = vec![missing_model_spec(0), missing_model_spec(1)];
+        let report = run_grid(specs, &opts).unwrap();
+        assert_eq!(report.n_jobs(), 2);
+        assert_eq!(report.n_failed(), 2);
+        assert_eq!(report.n_cached(), 0);
+        match &report.results[0].status {
+            JobStatus::Failed(msg) => assert!(msg.contains("artifacts")),
+            other => panic!("expected Failed, got {other:?}"),
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn failed_cells_are_not_cached() {
+        let dir = tmp_dir("nocache");
+        let opts = GridOptions {
+            workers: 1,
+            force: false,
+            cache_dir: Some(dir.clone()),
+        };
+        let report =
+            run_grid(vec![missing_model_spec(0)], &opts).unwrap();
+        assert_eq!(report.n_failed(), 1);
+        // Re-running must fail again (no poisoned cache entry), not hit.
+        let report2 =
+            run_grid(vec![missing_model_spec(0)], &opts).unwrap();
+        assert_eq!(report2.n_failed(), 1);
+        assert_eq!(report2.n_cached(), 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn default_workers_is_positive() {
+        assert!(default_workers() >= 1);
+    }
+}

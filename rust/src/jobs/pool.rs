@@ -1,0 +1,282 @@
+//! Sharded worker pool: N `std::thread` workers drain a [`JobQueue`].
+//!
+//! Each worker owns its per-thread state (for real grids: a PJRT
+//! `Runtime` + compiled [`crate::runtime::ModelBundle`]s — XLA handles
+//! never cross threads), created by a factory closure the caller
+//! supplies. Workers are panic-isolated: a poisoned job is caught with
+//! `catch_unwind`, reported as [`JobStatus::Panicked`], and the worker
+//! keeps draining the queue.
+//!
+//! Results are streamed over an `mpsc` channel, then sorted by
+//! submission order so aggregation is deterministic regardless of how
+//! the OS interleaved the workers.
+
+use super::queue::{Job, JobQueue};
+use super::spec::JobSpec;
+use crate::metrics::Timer;
+use crate::train::TrainOutcome;
+use anyhow::Result;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc;
+
+/// The deterministic slice of a [`TrainOutcome`] a job reports (and the
+/// cache persists). Wall-clock fields are carried for display but are
+/// excluded from CSV aggregates, which must be run-to-run identical.
+#[derive(Clone, Debug, Default)]
+pub struct JobOutcome {
+    /// Final test accuracy % (classifier) or final eval loss (LM).
+    pub final_metric: f64,
+    /// Mean train loss over the last 20 logged steps.
+    pub tail_loss: f64,
+    /// Number of optimizer steps taken.
+    pub steps: usize,
+    /// Wall-clock seconds in the train loop (non-deterministic).
+    pub train_secs: f64,
+    /// (step, train loss) series — kept so curve CSVs replay from cache.
+    pub loss_series: Vec<(usize, f64)>,
+    /// (step, eval loss, eval acc%) series.
+    pub eval_series: Vec<(usize, f64, f64)>,
+}
+
+impl JobOutcome {
+    pub fn from_train(out: &TrainOutcome) -> Self {
+        Self {
+            final_metric: out.final_metric,
+            tail_loss: out.tail_loss(20),
+            steps: out.loss_series.len(),
+            train_secs: out.train_secs,
+            loss_series: out.loss_series.clone(),
+            eval_series: out.eval_series.clone(),
+        }
+    }
+}
+
+/// Terminal state of one job.
+#[derive(Clone, Debug)]
+pub enum JobStatus {
+    Done(JobOutcome),
+    /// The runner returned an error (missing artifacts, bad config, ...).
+    Failed(String),
+    /// The runner panicked; the pool survived and kept going.
+    Panicked(String),
+}
+
+impl JobStatus {
+    pub fn tag(&self) -> &'static str {
+        match self {
+            JobStatus::Done(_) => "done",
+            JobStatus::Failed(_) => "failed",
+            JobStatus::Panicked(_) => "panicked",
+        }
+    }
+}
+
+/// One job's result, tagged with its queue identity and provenance.
+#[derive(Clone, Debug)]
+pub struct JobResult {
+    pub seq: u64,
+    pub spec: JobSpec,
+    pub status: JobStatus,
+    /// True if the outcome came from the result cache, not a fresh run.
+    pub from_cache: bool,
+    /// Wall-clock seconds spent on this job inside the worker.
+    pub secs: f64,
+}
+
+impl JobResult {
+    pub fn outcome(&self) -> Option<&JobOutcome> {
+        match &self.status {
+            JobStatus::Done(o) => Some(o),
+            _ => None,
+        }
+    }
+
+    pub fn is_ok(&self) -> bool {
+        matches!(self.status, JobStatus::Done(_))
+    }
+}
+
+/// Drain `queue` with `workers` threads; `make_worker(worker_id)` builds
+/// each thread's worker function *on that thread* (so per-worker state
+/// like a PJRT client never crosses threads). Returns all results
+/// sorted by submission sequence.
+pub fn run_pool<M, W>(
+    queue: &JobQueue,
+    workers: usize,
+    make_worker: M,
+) -> Vec<JobResult>
+where
+    M: Fn(usize) -> W + Sync,
+    W: FnMut(&JobSpec) -> Result<(JobOutcome, bool)>,
+{
+    let (tx, rx) = mpsc::channel::<JobResult>();
+    let mut results = std::thread::scope(|s| {
+        let make = &make_worker;
+        for wid in 0..workers.max(1) {
+            let tx = tx.clone();
+            s.spawn(move || {
+                let mut work = make(wid);
+                worker_loop(queue, &mut work, &tx);
+            });
+        }
+        drop(tx);
+        // Collect on the scope's owning thread; ends when every worker
+        // has dropped its sender clone.
+        rx.iter().collect::<Vec<_>>()
+    });
+    results.sort_by_key(|r| r.seq);
+    results
+}
+
+/// One worker's drain loop, shared by [`run_pool`] and `omgd serve`.
+/// Every job is wrapped in `catch_unwind` so a panicking run is reported
+/// instead of tearing down the pool.
+pub fn worker_loop<W>(
+    queue: &JobQueue,
+    work: &mut W,
+    tx: &mpsc::Sender<JobResult>,
+) where
+    W: FnMut(&JobSpec) -> Result<(JobOutcome, bool)>,
+{
+    while let Some(job) = queue.pop() {
+        let t = Timer::start();
+        let run = catch_unwind(AssertUnwindSafe(|| work(&job.spec)));
+        let (status, from_cache) = match run {
+            Ok(Ok((outcome, cached))) => (JobStatus::Done(outcome), cached),
+            Ok(Err(e)) => (JobStatus::Failed(format!("{e:#}")), false),
+            Err(payload) => {
+                (JobStatus::Panicked(panic_message(payload.as_ref())), false)
+            }
+        };
+        let Job { seq, spec, .. } = job;
+        // Receiver gone (caller bailed) → stop draining.
+        if tx
+            .send(JobResult { seq, spec, status, from_cache, secs: t.total() })
+            .is_err()
+        {
+            return;
+        }
+    }
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "panic with non-string payload".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RunConfig;
+    use crate::jobs::spec::ExperimentKind;
+
+    fn spec(seed: u64) -> JobSpec {
+        let mut cfg = RunConfig::default();
+        cfg.seed = seed;
+        JobSpec { kind: ExperimentKind::Pretrain, cfg }
+    }
+
+    fn stub_outcome(spec: &JobSpec) -> JobOutcome {
+        // Deterministic function of the spec identity only.
+        let h = spec.content_hash();
+        JobOutcome {
+            final_metric: (h % 1000) as f64 / 10.0,
+            tail_loss: (h % 97) as f64 / 100.0,
+            steps: 10,
+            train_secs: 0.0,
+            loss_series: vec![(0, 1.0), (1, 0.5)],
+            eval_series: vec![],
+        }
+    }
+
+    fn filled_queue(n: u64) -> JobQueue {
+        let q = JobQueue::bounded(n as usize + 1);
+        for i in 0..n {
+            q.push(spec(i), 0).unwrap();
+        }
+        q.close();
+        q
+    }
+
+    fn ok_runner(
+    ) -> impl FnMut(&JobSpec) -> Result<(JobOutcome, bool)> {
+        |s: &JobSpec| Ok((stub_outcome(s), false))
+    }
+
+    #[test]
+    fn pool_runs_all_jobs_sorted_by_seq() {
+        let q = filled_queue(12);
+        let results = run_pool(&q, 3, |_| ok_runner());
+        assert_eq!(results.len(), 12);
+        for (i, r) in results.iter().enumerate() {
+            assert_eq!(r.seq, i as u64);
+            assert!(r.is_ok());
+            assert!(!r.from_cache);
+        }
+    }
+
+    #[test]
+    fn panicking_job_does_not_kill_the_pool() {
+        let q = filled_queue(10);
+        let results = run_pool(&q, 2, |_| {
+            |s: &JobSpec| -> Result<(JobOutcome, bool)> {
+                if s.cfg.seed == 3 {
+                    panic!("poisoned job");
+                }
+                if s.cfg.seed == 7 {
+                    anyhow::bail!("soft failure");
+                }
+                Ok((stub_outcome(s), false))
+            }
+        });
+        assert_eq!(results.len(), 10);
+        let panicked: Vec<u64> = results
+            .iter()
+            .filter(|r| matches!(r.status, JobStatus::Panicked(_)))
+            .map(|r| r.spec.cfg.seed)
+            .collect();
+        let failed: Vec<u64> = results
+            .iter()
+            .filter(|r| matches!(r.status, JobStatus::Failed(_)))
+            .map(|r| r.spec.cfg.seed)
+            .collect();
+        assert_eq!(panicked, vec![3]);
+        assert_eq!(failed, vec![7]);
+        assert_eq!(results.iter().filter(|r| r.is_ok()).count(), 8);
+        match &results[3].status {
+            JobStatus::Panicked(msg) => assert!(msg.contains("poisoned")),
+            other => panic!("expected panic status, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn worker_id_factory_runs_on_each_thread() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let made = AtomicUsize::new(0);
+        let q = filled_queue(4);
+        let results = run_pool(&q, 4, |_wid| {
+            made.fetch_add(1, Ordering::SeqCst);
+            ok_runner()
+        });
+        assert_eq!(results.len(), 4);
+        assert_eq!(made.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn single_worker_equals_multi_worker_results() {
+        let run = |workers: usize| {
+            let q = filled_queue(9);
+            run_pool(&q, workers, |_| ok_runner())
+                .into_iter()
+                .map(|r| (r.seq, r.outcome().unwrap().final_metric))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(1), run(2));
+        assert_eq!(run(1), run(4));
+    }
+}

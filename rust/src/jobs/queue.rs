@@ -1,0 +1,268 @@
+//! Bounded MPMC work queue with priorities and cancellation.
+//!
+//! `Mutex<BinaryHeap> + Condvar` — no external crates. Producers block
+//! when the queue is at capacity; consumers block when it is empty.
+//! Higher priority pops first; within one priority, FIFO by submission
+//! order (so a grid with uniform priority is a plain work queue whose
+//! drain order is deterministic up to worker interleaving).
+//!
+//! Lifecycle: [`JobQueue::close`] seals the producer side and lets
+//! workers drain what remains; [`JobQueue::cancel`] additionally drops
+//! all pending jobs so workers exit at the next pop.
+
+use super::spec::JobSpec;
+use anyhow::{bail, Result};
+use std::collections::BinaryHeap;
+use std::sync::{Condvar, Mutex};
+
+/// A queued job: the spec plus its queue identity.
+#[derive(Clone, Debug)]
+pub struct Job {
+    /// Submission sequence number (unique per queue, starts at 0).
+    pub seq: u64,
+    pub priority: i32,
+    pub spec: JobSpec,
+}
+
+struct Entry {
+    priority: i32,
+    seq: u64,
+    spec: JobSpec,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.priority == other.priority && self.seq == other.seq
+    }
+}
+impl Eq for Entry {}
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Max-heap: larger priority wins; ties broken by *smaller* seq.
+        self.priority
+            .cmp(&other.priority)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+struct State {
+    heap: BinaryHeap<Entry>,
+    next_seq: u64,
+    capacity: usize,
+    closed: bool,
+    cancelled: bool,
+}
+
+/// Bounded multi-producer multi-consumer priority queue of [`JobSpec`]s.
+pub struct JobQueue {
+    state: Mutex<State>,
+    not_empty: Condvar,
+    not_full: Condvar,
+}
+
+impl JobQueue {
+    /// Create a queue holding at most `capacity` pending jobs (min 1).
+    pub fn bounded(capacity: usize) -> Self {
+        Self {
+            state: Mutex::new(State {
+                heap: BinaryHeap::new(),
+                next_seq: 0,
+                capacity: capacity.max(1),
+                closed: false,
+                cancelled: false,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+        }
+    }
+
+    /// Submit a job; blocks while the queue is full. Returns the job's
+    /// sequence number, or an error if the queue is closed/cancelled.
+    pub fn push(&self, spec: JobSpec, priority: i32) -> Result<u64> {
+        let mut st = self.state.lock().unwrap();
+        while st.heap.len() >= st.capacity && !st.closed && !st.cancelled {
+            st = self.not_full.wait(st).unwrap();
+        }
+        if st.closed || st.cancelled {
+            bail!("job queue is closed");
+        }
+        let seq = st.next_seq;
+        st.next_seq += 1;
+        st.heap.push(Entry { priority, seq, spec });
+        drop(st);
+        self.not_empty.notify_one();
+        Ok(seq)
+    }
+
+    /// Take the highest-priority pending job; blocks while the queue is
+    /// empty and open. Returns `None` once the queue is closed and
+    /// drained, or immediately after cancellation.
+    pub fn pop(&self) -> Option<Job> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.cancelled {
+                return None;
+            }
+            if let Some(e) = st.heap.pop() {
+                drop(st);
+                self.not_full.notify_one();
+                return Some(Job {
+                    seq: e.seq,
+                    priority: e.priority,
+                    spec: e.spec,
+                });
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Seal the producer side: further pushes fail, consumers drain the
+    /// remaining jobs and then see `None`.
+    pub fn close(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        drop(st);
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    /// Drop all pending jobs and wake everyone; pops return `None` from
+    /// now on. Implies `close`.
+    pub fn cancel(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.cancelled = true;
+        st.closed = true;
+        st.heap.clear();
+        drop(st);
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    /// Number of pending (not yet popped) jobs.
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.state.lock().unwrap().cancelled
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RunConfig;
+    use crate::jobs::spec::ExperimentKind;
+
+    fn spec(seed: u64) -> JobSpec {
+        let mut cfg = RunConfig::default();
+        cfg.seed = seed;
+        JobSpec { kind: ExperimentKind::Pretrain, cfg }
+    }
+
+    #[test]
+    fn fifo_within_one_priority() {
+        let q = JobQueue::bounded(16);
+        for i in 0..5 {
+            q.push(spec(i), 0).unwrap();
+        }
+        q.close();
+        let order: Vec<u64> =
+            std::iter::from_fn(|| q.pop()).map(|j| j.spec.cfg.seed).collect();
+        assert_eq!(order, vec![0, 1, 2, 3, 4]);
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn higher_priority_pops_first() {
+        let q = JobQueue::bounded(16);
+        q.push(spec(0), 0).unwrap();
+        q.push(spec(1), 5).unwrap();
+        q.push(spec(2), 1).unwrap();
+        q.push(spec(3), 5).unwrap(); // same prio as seed 1 → after it
+        q.close();
+        let order: Vec<u64> =
+            std::iter::from_fn(|| q.pop()).map(|j| j.spec.cfg.seed).collect();
+        assert_eq!(order, vec![1, 3, 2, 0]);
+    }
+
+    #[test]
+    fn close_rejects_pushes_but_drains() {
+        let q = JobQueue::bounded(4);
+        q.push(spec(0), 0).unwrap();
+        q.close();
+        assert!(q.push(spec(1), 0).is_err());
+        assert!(q.pop().is_some());
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn cancel_drops_pending() {
+        let q = JobQueue::bounded(4);
+        q.push(spec(0), 0).unwrap();
+        q.push(spec(1), 0).unwrap();
+        q.cancel();
+        assert!(q.is_cancelled());
+        assert!(q.pop().is_none());
+        assert_eq!(q.len(), 0);
+        assert!(q.push(spec(2), 0).is_err());
+    }
+
+    #[test]
+    fn bounded_capacity_blocks_until_popped() {
+        use std::sync::Arc;
+        let q = Arc::new(JobQueue::bounded(1));
+        q.push(spec(0), 0).unwrap();
+        let q2 = Arc::clone(&q);
+        let producer = std::thread::spawn(move || {
+            // Blocks until the consumer below pops the first job.
+            q2.push(spec(1), 0).unwrap();
+        });
+        // Give the producer a moment to hit the full queue.
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert_eq!(q.pop().unwrap().spec.cfg.seed, 0);
+        producer.join().unwrap();
+        q.close();
+        assert_eq!(q.pop().unwrap().spec.cfg.seed, 1);
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn mpmc_drains_exactly_once() {
+        use std::sync::Arc;
+        let q = Arc::new(JobQueue::bounded(64));
+        for i in 0..40 {
+            q.push(spec(i), 0).unwrap();
+        }
+        q.close();
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let q = Arc::clone(&q);
+            handles.push(std::thread::spawn(move || {
+                let mut seen = Vec::new();
+                while let Some(j) = q.pop() {
+                    seen.push(j.seq);
+                }
+                seen
+            }));
+        }
+        let mut all: Vec<u64> = handles
+            .into_iter()
+            .flat_map(|h| h.join().unwrap())
+            .collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..40).collect::<Vec<u64>>());
+    }
+}

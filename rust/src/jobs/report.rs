@@ -1,0 +1,288 @@
+//! Aggregation of per-job results into the existing table/CSV sinks.
+//!
+//! The report owns presentation-side determinism: results are kept in
+//! submission order (the pool already sorts by `seq`), and the CSV
+//! aggregate contains only run-to-run-reproducible columns — no
+//! wall-clock, no cache provenance — so a 2-worker grid writes a
+//! byte-identical file to a 1-worker grid, and a cache replay writes a
+//! byte-identical file to the original run.
+
+use super::pool::{JobResult, JobStatus};
+use crate::bench::TablePrinter;
+use crate::metrics::{format_g, CsvCell, CsvWriter};
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Aggregated view over one grid's results.
+pub struct GridReport {
+    pub results: Vec<JobResult>,
+}
+
+impl GridReport {
+    pub fn new(mut results: Vec<JobResult>) -> Self {
+        results.sort_by_key(|r| r.seq);
+        Self { results }
+    }
+
+    pub fn n_jobs(&self) -> usize {
+        self.results.len()
+    }
+
+    pub fn n_ok(&self) -> usize {
+        self.results.iter().filter(|r| r.is_ok()).count()
+    }
+
+    pub fn n_failed(&self) -> usize {
+        self.n_jobs() - self.n_ok()
+    }
+
+    pub fn n_cached(&self) -> usize {
+        self.results.iter().filter(|r| r.from_cache).count()
+    }
+
+    /// Fraction of jobs served from the result cache, in [0, 1].
+    pub fn cache_hit_rate(&self) -> f64 {
+        if self.results.is_empty() {
+            0.0
+        } else {
+            self.n_cached() as f64 / self.n_jobs() as f64
+        }
+    }
+
+    /// Total wall-clock seconds spent across workers (not elapsed time).
+    pub fn worker_secs(&self) -> f64 {
+        self.results.iter().map(|r| r.secs).sum()
+    }
+
+    /// Per-cell table for stdout: label, status, metric, provenance.
+    pub fn table(&self) -> TablePrinter {
+        let mut t = TablePrinter::new(&[
+            "job", "dataset", "method", "seed", "status", "metric",
+            "tail loss", "src", "secs",
+        ]);
+        for r in &self.results {
+            let (metric, tail) = match r.outcome() {
+                Some(o) => {
+                    (format!("{:.4}", o.final_metric),
+                     format!("{:.4}", o.tail_loss))
+                }
+                None => ("-".to_string(), "-".to_string()),
+            };
+            t.row(vec![
+                r.seq.to_string(),
+                r.spec.kind.dataset().to_string(),
+                r.spec.cfg.method.name().to_string(),
+                r.spec.cfg.seed.to_string(),
+                r.status.tag().to_string(),
+                metric,
+                tail,
+                if r.from_cache { "cache" } else { "run" }.to_string(),
+                format!("{:.2}", r.secs),
+            ]);
+        }
+        t
+    }
+
+    /// Print the per-cell table plus a one-line summary (and, on
+    /// stderr, every failure's full diagnostic).
+    pub fn print(&self, title: &str) {
+        self.table().print(title);
+        println!(
+            "{} job(s): {} ok, {} failed, {} from cache ({:.0}% hit), \
+             {:.2}s worker time",
+            self.n_jobs(),
+            self.n_ok(),
+            self.n_failed(),
+            self.n_cached(),
+            100.0 * self.cache_hit_rate(),
+            self.worker_secs(),
+        );
+        self.print_failures();
+    }
+
+    /// Every failed/panicked cell's collected diagnostic, to stderr.
+    /// The status *tag* alone ("failed") is useless for triage; the
+    /// message carries the actual cause ("artifacts for ... missing").
+    pub fn print_failures(&self) {
+        for r in &self.results {
+            match &r.status {
+                JobStatus::Failed(msg) | JobStatus::Panicked(msg) => {
+                    eprintln!("  {} {}: {msg}",
+                              r.status.tag(), r.spec.label());
+                }
+                JobStatus::Done(_) => {}
+            }
+        }
+    }
+
+    /// Write the deterministic per-cell aggregate CSV.
+    ///
+    /// Columns are limited to result content (no timing/provenance):
+    /// `label,kind,model,method,seed,hash,status,final_metric,tail_loss,
+    /// steps`.
+    pub fn write_csv<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        let mut w = CsvWriter::create(
+            path,
+            &["label", "kind", "model", "method", "seed", "hash",
+              "status", "final_metric", "tail_loss", "steps"],
+        )?;
+        for r in &self.results {
+            let (metric, tail, steps) = match r.outcome() {
+                Some(o) => (
+                    format_g(o.final_metric),
+                    format_g(o.tail_loss),
+                    o.steps.to_string(),
+                ),
+                None => ("".into(), "".into(), "0".into()),
+            };
+            w.row_mixed(&[
+                CsvCell::S(r.spec.label()),
+                CsvCell::S(r.spec.kind.dataset().to_string()),
+                CsvCell::S(r.spec.cfg.model.clone()),
+                CsvCell::S(r.spec.cfg.method.name().to_string()),
+                CsvCell::I(r.spec.cfg.seed as i64),
+                CsvCell::S(r.spec.hash_hex()),
+                CsvCell::S(r.status.tag().to_string()),
+                CsvCell::S(metric),
+                CsvCell::S(tail),
+                CsvCell::S(steps),
+            ])?;
+        }
+        w.finish()
+    }
+
+    /// Write per-step training-loss curves for every successful cell
+    /// (`label,step,loss`) — the Fig. 4/7-style companion file.
+    pub fn write_curves_csv<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        let mut w =
+            CsvWriter::create(path, &["label", "step", "loss"])?;
+        for r in &self.results {
+            if let Some(o) = r.outcome() {
+                for &(s, l) in &o.loss_series {
+                    w.row_mixed(&[
+                        CsvCell::S(r.spec.label()),
+                        CsvCell::I(s as i64),
+                        CsvCell::F(l),
+                    ])?;
+                }
+            }
+        }
+        w.finish()
+    }
+
+    /// Mean of `value(outcome)` over successful cells, grouped by `key`
+    /// (e.g. `(method, task)` to average across seeds). Deterministic:
+    /// `BTreeMap` ordering, submission-ordered accumulation.
+    pub fn mean_by<K, F, V>(&self, key: F, value: V) -> BTreeMap<K, f64>
+    where
+        K: Ord,
+        F: Fn(&JobResult) -> K,
+        V: Fn(&super::pool::JobOutcome) -> f64,
+    {
+        let mut acc: BTreeMap<K, (f64, usize)> = BTreeMap::new();
+        for r in &self.results {
+            if let Some(o) = r.outcome() {
+                let e = acc.entry(key(r)).or_insert((0.0, 0));
+                e.0 += value(o);
+                e.1 += 1;
+            }
+        }
+        acc.into_iter()
+            .map(|(k, (sum, n))| (k, sum / n as f64))
+            .collect()
+    }
+
+    /// [`Self::mean_by`] over `final_metric` — the common table cell.
+    pub fn mean_metric_by<K, F>(&self, key: F) -> BTreeMap<K, f64>
+    where
+        K: Ord,
+        F: Fn(&JobResult) -> K,
+    {
+        self.mean_by(key, |o| o.final_metric)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Method, RunConfig};
+    use crate::jobs::pool::{JobOutcome, JobStatus};
+    use crate::jobs::spec::{ExperimentKind, JobSpec};
+
+    fn result(seq: u64, seed: u64, metric: f64, ok: bool) -> JobResult {
+        let mut cfg = RunConfig::default();
+        cfg.seed = seed;
+        cfg.method = Method::LisaWor;
+        let spec = JobSpec {
+            kind: ExperimentKind::Finetune { task: "CoLA".into(), epochs: 2 },
+            cfg,
+        };
+        let status = if ok {
+            JobStatus::Done(JobOutcome {
+                final_metric: metric,
+                tail_loss: 0.5,
+                steps: 4,
+                train_secs: 0.1,
+                loss_series: vec![(0, 1.0)],
+                eval_series: vec![],
+            })
+        } else {
+            JobStatus::Failed("boom".into())
+        };
+        JobResult { seq, spec, status, from_cache: false, secs: 0.01 }
+    }
+
+    #[test]
+    fn counts_and_hit_rate() {
+        let mut a = result(0, 0, 90.0, true);
+        a.from_cache = true;
+        let rep = GridReport::new(vec![result(1, 1, 92.0, true), a,
+                                       result(2, 2, 0.0, false)]);
+        assert_eq!(rep.n_jobs(), 3);
+        assert_eq!(rep.n_ok(), 2);
+        assert_eq!(rep.n_failed(), 1);
+        assert_eq!(rep.n_cached(), 1);
+        assert!((rep.cache_hit_rate() - 1.0 / 3.0).abs() < 1e-12);
+        // new() re-sorts by seq
+        assert_eq!(rep.results[0].seq, 0);
+    }
+
+    #[test]
+    fn csv_is_deterministic_and_excludes_timing() {
+        let dir = std::env::temp_dir()
+            .join(format!("omgd-report-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let make = |secs: f64| {
+            let mut r0 = result(0, 0, 91.5, true);
+            let mut r1 = result(1, 1, 0.0, false);
+            r0.secs = secs;
+            r1.secs = secs * 2.0;
+            GridReport::new(vec![r1, r0])
+        };
+        let p1 = dir.join("a.csv");
+        let p2 = dir.join("b.csv");
+        make(0.5).write_csv(&p1).unwrap();
+        make(123.0).write_csv(&p2).unwrap();
+        let a = std::fs::read(&p1).unwrap();
+        let b = std::fs::read(&p2).unwrap();
+        assert_eq!(a, b, "timing must not leak into the aggregate CSV");
+        let text = String::from_utf8(a).unwrap();
+        assert!(text.starts_with("label,kind,model,method,seed,hash,"));
+        assert!(text.contains("failed"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn mean_metric_groups_by_key() {
+        let rep = GridReport::new(vec![
+            result(0, 0, 90.0, true),
+            result(1, 1, 92.0, true),
+            result(2, 2, 0.0, false), // failed: excluded from means
+        ]);
+        let by_method =
+            rep.mean_metric_by(|r| r.spec.cfg.method.name().to_string());
+        assert_eq!(by_method.len(), 1);
+        assert!((by_method["lisa-wor"] - 91.0).abs() < 1e-12);
+    }
+}

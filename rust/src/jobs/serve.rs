@@ -1,0 +1,307 @@
+//! `omgd serve`: long-lived JSONL job loop — the seed of a
+//! request-serving path.
+//!
+//! Protocol (one JSON object per line):
+//!
+//! * request  → `{"kind":"finetune","task":"CoLA","method":"lisa-wor",
+//!   "seed":1,"epochs":4,"priority":5}` (see [`JobSpec::from_json`] for
+//!   the full field set; `priority` is optional, higher runs first)
+//! * control  → `{"cmd":"shutdown"}` stops accepting and drains
+//! * ack      → `{"accepted":<seq>,"hash":"<spec hash>","label":"..."}`
+//! * result   → `{"seq":N,"label":"...","hash":"...","status":"done",
+//!   "cached":false,"final_metric":X,"tail_loss":X,"steps":N,"secs":X}`
+//!   or `{"seq":N,...,"status":"failed","error":"..."}`
+//! * reject   → `{"error":"...","line":N}`
+//!
+//! Requests are sharded across the worker pool as they arrive; results
+//! stream back in *completion* order (match on `seq`). Acks and rejects
+//! are written from the reader, results from the collector, both behind
+//! one writer lock, each line flushed — a client can pipeline requests
+//! and consume results concurrently.
+
+use super::cache::ResultCache;
+use super::pool::{worker_loop, JobOutcome, JobResult, JobStatus};
+use super::queue::JobQueue;
+use super::spec::JobSpec;
+use super::{cached_runner, GridOptions};
+use crate::util::json::Json;
+use anyhow::Result;
+use std::io::{BufRead, Write};
+use std::sync::{mpsc, Mutex};
+
+/// Counters for one serve session.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ServeStats {
+    pub accepted: usize,
+    pub rejected: usize,
+    pub done: usize,
+    pub failed: usize,
+    pub cached: usize,
+}
+
+/// Serve with the production cache-aware runner.
+pub fn serve<R, W>(input: R, output: W, opts: &GridOptions) -> Result<ServeStats>
+where
+    R: BufRead,
+    W: Write + Send,
+{
+    let cache = ResultCache::open(opts.cache_dir.as_deref())?;
+    serve_with(input, output, opts.workers, |_wid| {
+        cached_runner(&cache, opts.force)
+    })
+}
+
+/// Serve with an arbitrary worker factory (tests inject stubs).
+///
+/// Deadlock discipline: nothing inside the thread scope early-returns —
+/// the queue is always closed before the scope joins, so workers can
+/// never be left blocked on `pop()`.
+pub fn serve_with<R, W, M, F>(
+    input: R,
+    output: W,
+    workers: usize,
+    make_worker: M,
+) -> Result<ServeStats>
+where
+    R: BufRead,
+    W: Write + Send,
+    M: Fn(usize) -> F + Sync,
+    F: FnMut(&JobSpec) -> Result<(JobOutcome, bool)>,
+{
+    let workers = workers.max(1);
+    let queue = JobQueue::bounded((2 * workers).max(8));
+    let out = Mutex::new(output);
+    let (tx, rx) = mpsc::channel::<JobResult>();
+
+    let stats = std::thread::scope(|s| {
+        let make = &make_worker;
+        let queue_ref = &queue;
+        for wid in 0..workers {
+            let tx = tx.clone();
+            s.spawn(move || {
+                let mut work = make(wid);
+                worker_loop(queue_ref, &mut work, &tx);
+            });
+        }
+        drop(tx);
+
+        let out_ref = &out;
+        let collector = s.spawn(move || {
+            let (mut done, mut failed, mut cached) = (0usize, 0usize, 0usize);
+            for r in rx {
+                if r.from_cache {
+                    cached += 1;
+                }
+                if r.is_ok() {
+                    done += 1;
+                } else {
+                    failed += 1;
+                }
+                write_line(out_ref, &result_line(&r));
+            }
+            (done, failed, cached)
+        });
+
+        let (mut accepted, mut rejected) = (0usize, 0usize);
+        let mut lineno = 0usize;
+        for line in input.lines() {
+            lineno += 1;
+            let line = match line {
+                Ok(l) => l,
+                Err(_) => break, // treat a broken pipe as EOF
+            };
+            let text = line.trim();
+            if text.is_empty() {
+                continue;
+            }
+            let j = match Json::parse(text) {
+                Ok(j) => j,
+                Err(e) => {
+                    rejected += 1;
+                    write_line(
+                        out_ref,
+                        &format!(
+                            "{{\"error\":\"{}\",\"line\":{lineno}}}",
+                            esc(&e.to_string())
+                        ),
+                    );
+                    continue;
+                }
+            };
+            if j.get("cmd").and_then(Json::as_str) == Some("shutdown") {
+                break;
+            }
+            let priority =
+                j.get("priority").and_then(Json::as_f64).unwrap_or(0.0) as i32;
+            match JobSpec::from_json(&j) {
+                Ok(spec) => {
+                    let (hash, label) = (spec.hash_hex(), spec.label());
+                    // Hold the writer lock across push + ack: a cached
+                    // job can complete in microseconds, and the
+                    // protocol promises the ack (seq ↔ request
+                    // mapping) reaches the client before its result
+                    // line. Workers drain the queue without this lock,
+                    // so a full-queue push still makes progress.
+                    let mut o = out_ref.lock().unwrap();
+                    match queue.push(spec, priority) {
+                        Ok(seq) => {
+                            accepted += 1;
+                            let _ = writeln!(
+                                o,
+                                "{{\"accepted\":{seq},\"hash\":\
+                                 \"{hash}\",\"label\":\"{}\"}}",
+                                esc(&label)
+                            );
+                            let _ = o.flush();
+                        }
+                        Err(_) => rejected += 1,
+                    }
+                }
+                Err(e) => {
+                    rejected += 1;
+                    write_line(
+                        out_ref,
+                        &format!(
+                            "{{\"error\":\"{}\",\"line\":{lineno}}}",
+                            esc(&format!("{e:#}"))
+                        ),
+                    );
+                }
+            }
+        }
+        queue.close();
+        let (done, failed, cached) = collector.join().unwrap();
+        ServeStats { accepted, rejected, done, failed, cached }
+    });
+    Ok(stats)
+}
+
+fn write_line<W: Write>(out: &Mutex<W>, line: &str) {
+    let mut o = out.lock().unwrap();
+    let _ = writeln!(o, "{line}");
+    let _ = o.flush(); // stream each line: clients read results live
+}
+
+fn result_line(r: &JobResult) -> String {
+    let head = format!(
+        "{{\"seq\":{},\"label\":\"{}\",\"hash\":\"{}\",\"status\":\"{}\",\
+         \"cached\":{}",
+        r.seq,
+        esc(&r.spec.label()),
+        r.spec.hash_hex(),
+        r.status.tag(),
+        r.from_cache,
+    );
+    match &r.status {
+        JobStatus::Done(o) => format!(
+            "{head},\"final_metric\":{},\"tail_loss\":{},\"steps\":{},\
+             \"secs\":{}}}",
+            ser_f(o.final_metric),
+            ser_f(o.tail_loss),
+            o.steps,
+            ser_f(r.secs),
+        ),
+        JobStatus::Failed(e) | JobStatus::Panicked(e) => {
+            format!("{head},\"error\":\"{}\"}}", esc(e))
+        }
+    }
+}
+
+use crate::util::json::{escape_str as esc, ser_f64 as ser_f};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stub_factory(
+        _wid: usize,
+    ) -> impl FnMut(&JobSpec) -> Result<(JobOutcome, bool)> {
+        |spec: &JobSpec| {
+            if spec.cfg.seed == 99 {
+                anyhow::bail!("rigged failure");
+            }
+            Ok((
+                JobOutcome {
+                    final_metric: spec.cfg.seed as f64 + 0.5,
+                    tail_loss: 0.25,
+                    steps: 2,
+                    train_secs: 0.0,
+                    loss_series: vec![(0, 1.0)],
+                    eval_series: vec![],
+                },
+                false,
+            ))
+        }
+    }
+
+    fn run_serve(input: &str, workers: usize) -> (ServeStats, Vec<Json>) {
+        let mut out: Vec<u8> = Vec::new();
+        let stats = serve_with(
+            input.as_bytes(),
+            &mut out,
+            workers,
+            stub_factory,
+        )
+        .unwrap();
+        let lines = String::from_utf8(out)
+            .unwrap()
+            .lines()
+            .map(|l| Json::parse(l).expect("every output line is JSON"))
+            .collect();
+        (stats, lines)
+    }
+
+    #[test]
+    fn serves_requests_and_streams_results() {
+        let input = "\
+{\"kind\":\"finetune\",\"task\":\"CoLA\",\"seed\":0,\"epochs\":1}\n\
+{\"kind\":\"finetune\",\"task\":\"SST-2\",\"seed\":1,\"epochs\":1}\n\
+{\"cmd\":\"shutdown\"}\n";
+        let (stats, lines) = run_serve(input, 2);
+        assert_eq!(stats.accepted, 2);
+        assert_eq!(stats.rejected, 0);
+        assert_eq!(stats.done, 2);
+        assert_eq!(stats.failed, 0);
+        let acks =
+            lines.iter().filter(|j| j.get("accepted").is_some()).count();
+        let results: Vec<&Json> =
+            lines.iter().filter(|j| j.get("status").is_some()).collect();
+        assert_eq!(acks, 2);
+        assert_eq!(results.len(), 2);
+        for r in &results {
+            assert_eq!(r.at("status").as_str(), Some("done"));
+            assert!(r.at("final_metric").as_f64().is_some());
+        }
+    }
+
+    #[test]
+    fn bad_lines_are_rejected_not_fatal() {
+        let input = "\
+this is not json\n\
+{\"kind\":\"nope\"}\n\
+{\"kind\":\"finetune\",\"task\":\"CoLA\",\"seed\":2,\"epochs\":1}\n";
+        // No shutdown line: EOF also drains cleanly.
+        let (stats, lines) = run_serve(input, 1);
+        assert_eq!(stats.accepted, 1);
+        assert_eq!(stats.rejected, 2);
+        assert_eq!(stats.done, 1);
+        let errors =
+            lines.iter().filter(|j| j.get("error").is_some()).count();
+        assert_eq!(errors, 2);
+    }
+
+    #[test]
+    fn failed_jobs_stream_an_error_result() {
+        let input =
+            "{\"kind\":\"finetune\",\"task\":\"CoLA\",\"seed\":99,\"epochs\":1}\n";
+        let (stats, lines) = run_serve(input, 1);
+        assert_eq!(stats.accepted, 1);
+        assert_eq!(stats.failed, 1);
+        let r = lines
+            .iter()
+            .find(|j| j.get("status").is_some())
+            .expect("one result line");
+        assert_eq!(r.at("status").as_str(), Some("failed"));
+        assert!(r.at("error").as_str().unwrap().contains("rigged"));
+    }
+}

@@ -1,0 +1,325 @@
+//! Job specification: one grid cell = one [`JobSpec`], identified by a
+//! stable content hash over every field that can change its result.
+//!
+//! The hash keys the on-disk result cache ([`super::cache`]), so it must
+//! be (a) stable across processes and platforms — no `DefaultHasher`,
+//! whose seed changes per process — and (b) derived only from
+//! result-relevant fields. Machine-local paths (`artifacts_dir`,
+//! `out_dir`) are deliberately excluded: two hosts with the same
+//! artifacts produce the same cells.
+
+use crate::config::{RunConfig, Schedule};
+use crate::util::json::Json;
+use anyhow::{bail, Result};
+
+/// Blob-dataset sizes used by the job runner. They live here — next to
+/// the hash — so the canonical string sees the same values the runner
+/// uses, and a change to either invalidates stale cache entries.
+pub const BLOBS_N_TRAIN: usize = 1000;
+pub const BLOBS_N_TEST: usize = 400;
+
+/// What kind of experiment a job runs (mirrors the paper tables).
+///
+/// For the classifier kinds, `cfg.steps` is a placeholder (the builders
+/// set it to `epochs`); the runner resolves the real step count as
+/// `epochs × ⌈N/B⌉` once the bundle's batch size is known, and
+/// `cfg.eval_every` is interpreted in *epochs* (0 = no mid-run eval).
+/// `Pretrain` uses `cfg.steps` / `cfg.eval_every` directly in steps.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ExperimentKind {
+    /// Fine-tune the classifier bundle on a named GLUE-like task from
+    /// [`crate::data::GLUE_LIKE_TASKS`] (Tables 3 and 6).
+    Finetune { task: String, epochs: usize },
+    /// Fine-tune on a synthetic Gaussian-blob dataset (Table 5 shape).
+    Blobs { dataset: String, spread: f64, data_seed: u64, epochs: usize },
+    /// LM pre-training on the synthetic corpus (Fig. 5 shape).
+    Pretrain,
+}
+
+impl ExperimentKind {
+    /// Short dataset/workload label for tables and log lines.
+    pub fn dataset(&self) -> &str {
+        match self {
+            ExperimentKind::Finetune { task, .. } => task,
+            ExperimentKind::Blobs { dataset, .. } => dataset,
+            ExperimentKind::Pretrain => "pretrain",
+        }
+    }
+
+    /// Dataset-generation parameters are part of the canonical string,
+    /// not just the dataset *name* — editing a task definition (or the
+    /// blob sizes above) must read as a different cell, never a stale
+    /// cache hit.
+    fn canonical(&self) -> String {
+        match self {
+            ExperimentKind::Finetune { task, epochs } => {
+                let def = crate::data::find_task(task)
+                    .map(|t| {
+                        format!(
+                            "{}:{}:{}:{}:{}",
+                            t.n_train, t.n_test, t.noise,
+                            t.teacher_depth, t.seed
+                        )
+                    })
+                    .unwrap_or_else(|| "unresolved".to_string());
+                format!("finetune:{task}:{epochs}:def={def}")
+            }
+            ExperimentKind::Blobs { dataset, spread, data_seed, epochs } => {
+                format!(
+                    "blobs:{dataset}:{spread}:{data_seed}:{epochs}:\
+                     n={BLOBS_N_TRAIN}+{BLOBS_N_TEST}"
+                )
+            }
+            ExperimentKind::Pretrain => "pretrain".to_string(),
+        }
+    }
+}
+
+/// One unit of schedulable work: an experiment kind plus the full run
+/// configuration (method, optimizer, mask hyper-parameters, seed).
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    pub kind: ExperimentKind,
+    pub cfg: RunConfig,
+}
+
+impl JobSpec {
+    /// Canonical serialization of every result-relevant field, in a fixed
+    /// order. Version-prefixed so a format change invalidates old caches
+    /// instead of mis-hitting them.
+    pub fn canonical(&self) -> String {
+        let c = &self.cfg;
+        format!(
+            "omgd-spec-v1;kind={};model={};method={};opt={};lr={};b1={};\
+             b2={};eps={};wd={};mom={};nesterov={};keep={};gamma={};\
+             period={};rank={};topk={};sched={};steps={};eval={};seed={};\
+             dsize={};dseed={}",
+            self.kind.canonical(),
+            c.model,
+            c.method.name(),
+            c.opt.family.name(),
+            c.opt.lr,
+            c.opt.beta1,
+            c.opt.beta2,
+            c.opt.eps,
+            c.opt.weight_decay,
+            c.opt.momentum,
+            c.opt.nesterov,
+            c.mask.keep_ratio,
+            c.mask.gamma,
+            c.mask.period,
+            c.mask.rank,
+            c.mask.topk,
+            canonical_schedule(&c.schedule),
+            c.steps,
+            c.eval_every,
+            c.seed,
+            c.dataset_size,
+            c.data_seed,
+        )
+    }
+
+    /// Stable 64-bit content hash (FNV-1a over [`Self::canonical`]).
+    pub fn content_hash(&self) -> u64 {
+        fnv1a64(self.canonical().as_bytes())
+    }
+
+    /// Hash as the fixed-width hex string used for cache file names.
+    pub fn hash_hex(&self) -> String {
+        format!("{:016x}", self.content_hash())
+    }
+
+    /// Human-readable cell label: `kind/dataset/method/s<seed>`.
+    pub fn label(&self) -> String {
+        format!(
+            "{}/{}/s{}",
+            self.kind.dataset(),
+            self.cfg.method.name(),
+            self.cfg.seed
+        )
+    }
+
+    /// Build a spec from a JSONL request object (the `omgd serve`
+    /// protocol). Unknown fields are ignored; everything has a default.
+    ///
+    /// ```json
+    /// {"kind":"finetune","task":"CoLA","method":"lisa-wor","seed":1,
+    ///  "epochs":4,"model":"mlp-glue","lr":2e-3,"gamma":4,"period":1}
+    /// ```
+    pub fn from_json(j: &Json) -> Result<JobSpec> {
+        let f_usize = |k: &str, d: usize| {
+            j.get(k).and_then(Json::as_usize).unwrap_or(d)
+        };
+        let f_f64 =
+            |k: &str, d: f64| j.get(k).and_then(Json::as_f64).unwrap_or(d);
+        let f_str = |k: &str| j.get(k).and_then(Json::as_str);
+
+        let mut cfg = RunConfig::default();
+        let kind_tag = f_str("kind").unwrap_or("finetune");
+        let kind = match kind_tag {
+            "finetune" => {
+                let epochs = f_usize("epochs", 4);
+                cfg.model = f_str("model").unwrap_or("mlp-glue").to_string();
+                cfg.steps = epochs.max(1);
+                // Epoch units for classifier kinds (0 = no mid-run eval).
+                cfg.eval_every = f_usize("eval_every", 0);
+                ExperimentKind::Finetune {
+                    task: f_str("task").unwrap_or("CoLA").to_string(),
+                    epochs,
+                }
+            }
+            "blobs" => {
+                let epochs = f_usize("epochs", 4);
+                cfg.model = f_str("model").unwrap_or("mlp-img").to_string();
+                cfg.steps = epochs.max(1);
+                cfg.eval_every = f_usize("eval_every", 0);
+                ExperimentKind::Blobs {
+                    dataset: f_str("dataset").unwrap_or("IMG-mid").to_string(),
+                    spread: f_f64("spread", 4.0),
+                    data_seed: f_usize("data_seed", 6002) as u64,
+                    epochs,
+                }
+            }
+            "pretrain" => {
+                cfg.model = f_str("model").unwrap_or("gpt-tiny").to_string();
+                cfg.steps = f_usize("steps", 100);
+                cfg.eval_every = f_usize("eval_every", 0);
+                ExperimentKind::Pretrain
+            }
+            other => bail!("unknown job kind {other:?}"),
+        };
+        if let Some(m) = f_str("method") {
+            cfg.method = crate::config::Method::parse(m)?;
+        }
+        if let Some(o) = f_str("opt") {
+            cfg.opt.family = crate::config::OptFamily::parse(o)?;
+        }
+        cfg.opt.lr = f_f64("lr", cfg.opt.lr);
+        cfg.opt.weight_decay = f_f64("wd", cfg.opt.weight_decay);
+        cfg.mask.keep_ratio = f_f64("keep_ratio", cfg.mask.keep_ratio);
+        cfg.mask.gamma = f_usize("gamma", cfg.mask.gamma);
+        cfg.mask.period = f_usize("period", cfg.mask.period);
+        cfg.mask.rank = f_usize("rank", cfg.mask.rank);
+        cfg.seed = f_usize("seed", cfg.seed as usize) as u64;
+        cfg.validate()?;
+        Ok(JobSpec { kind, cfg })
+    }
+}
+
+fn canonical_schedule(s: &Schedule) -> String {
+    match s {
+        Schedule::Constant => "constant".to_string(),
+        Schedule::MultiStep { milestones, gamma } => {
+            let ms = milestones
+                .iter()
+                .map(|m| m.to_string())
+                .collect::<Vec<_>>()
+                .join("+");
+            format!("multistep:{ms}:{gamma}")
+        }
+        Schedule::CosineWarmup { warmup, total, min_lr } => {
+            format!("cosine:{warmup}:{total}:{min_lr}")
+        }
+        Schedule::InvT { c0 } => format!("inv_t:{c0}"),
+    }
+}
+
+/// FNV-1a 64-bit: tiny, dependency-free, stable across platforms.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Method;
+
+    fn spec() -> JobSpec {
+        JobSpec {
+            kind: ExperimentKind::Finetune { task: "CoLA".into(), epochs: 4 },
+            cfg: RunConfig::default(),
+        }
+    }
+
+    #[test]
+    fn hash_is_stable_and_sensitive() {
+        let a = spec();
+        let b = spec();
+        assert_eq!(a.content_hash(), b.content_hash());
+        assert_eq!(a.hash_hex().len(), 16);
+
+        let mut c = spec();
+        c.cfg.seed = 1;
+        assert_ne!(a.content_hash(), c.content_hash());
+        let mut d = spec();
+        d.cfg.method = Method::LisaWor;
+        assert_ne!(a.content_hash(), d.content_hash());
+        let mut e = spec();
+        e.kind = ExperimentKind::Finetune { task: "SST-2".into(), epochs: 4 };
+        assert_ne!(a.content_hash(), e.content_hash());
+    }
+
+    #[test]
+    fn canonical_embeds_dataset_definitions() {
+        // Editing a task's generative params (or the blob sizes) must
+        // change the cell identity, not silently replay stale caches.
+        assert!(spec().canonical().contains("def="));
+        let b = JobSpec {
+            kind: ExperimentKind::Blobs {
+                dataset: "X".into(),
+                spread: 1.0,
+                data_seed: 1,
+                epochs: 1,
+            },
+            cfg: RunConfig::default(),
+        };
+        assert!(b
+            .canonical()
+            .contains(&format!("n={BLOBS_N_TRAIN}+{BLOBS_N_TEST}")));
+    }
+
+    #[test]
+    fn hash_ignores_local_paths() {
+        let a = spec();
+        let mut b = spec();
+        b.cfg.artifacts_dir = "/somewhere/else".into();
+        b.cfg.out_dir = "/tmp/out".into();
+        assert_eq!(a.content_hash(), b.content_hash());
+    }
+
+    #[test]
+    fn fnv_known_vector() {
+        // FNV-1a("a") per the reference implementation.
+        assert_eq!(fnv1a64(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a64(b""), 0xcbf29ce484222325);
+    }
+
+    #[test]
+    fn from_json_round_trip() {
+        let j = Json::parse(
+            r#"{"kind":"finetune","task":"SST-2","method":"lisa-wor",
+                "seed":3,"epochs":2,"gamma":4,"period":1,"lr":0.002}"#,
+        )
+        .unwrap();
+        let s = JobSpec::from_json(&j).unwrap();
+        assert_eq!(s.kind.dataset(), "SST-2");
+        assert_eq!(s.cfg.method, Method::LisaWor);
+        assert_eq!(s.cfg.seed, 3);
+        assert_eq!(s.cfg.mask.gamma, 4);
+        assert!((s.cfg.opt.lr - 0.002).abs() < 1e-12);
+        assert_eq!(s.label(), "SST-2/lisa-wor/s3");
+    }
+
+    #[test]
+    fn from_json_rejects_unknown_kind_and_method() {
+        let j = Json::parse(r#"{"kind":"nope"}"#).unwrap();
+        assert!(JobSpec::from_json(&j).is_err());
+        let j = Json::parse(r#"{"kind":"pretrain","method":"zzz"}"#).unwrap();
+        assert!(JobSpec::from_json(&j).is_err());
+    }
+}

@@ -9,7 +9,10 @@
 //!   LISA/LISA-WOR layer scheduler (Algorithm 2), native baseline
 //!   optimizers ([`optim`]), the analytic memory model ([`memory`]), the
 //!   §5.1 quadratic testbed ([`quadratic`]), data pipelines ([`data`]),
-//!   and the PJRT runtime ([`runtime`]) that executes AOT-compiled HLO.
+//!   the PJRT runtime ([`runtime`]) that executes AOT-compiled HLO, and
+//!   the job-orchestration subsystem ([`jobs`]): hashed [`jobs::JobSpec`]
+//!   grid cells sharded across a panic-isolated worker pool, with an
+//!   on-disk result cache and `omgd grid` / `omgd serve` front-ends.
 //! * **L2 (python/compile, build-time)** — JAX models over a flat
 //!   parameter vector, lowered once to HLO text.
 //! * **L1 (python/compile/kernels, build-time)** — Pallas masked-update
@@ -24,6 +27,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod experiments;
+pub mod jobs;
 pub mod linalg;
 pub mod manifest;
 pub mod memory;

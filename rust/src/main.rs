@@ -6,6 +6,24 @@
 //!   finetune   --task CoLA ...        classifier fine-tuning, any method
 //!   illustrative ...                  §5.1 quadratic study (Fig. 2 data)
 //!   memory     [--arch llama-7b]      analytic memory breakdown (Tab. 8)
+//!   grid                              declarative sweep over methods ×
+//!                                     seeds × keep-ratios on a sharded
+//!                                     worker pool with result caching
+//!     --kind finetune|pretrain        workload family (default finetune)
+//!     --tasks CoLA,SST-2              finetune: GLUE-like task list
+//!     --methods full,lisa,lisa-wor    method roster for the sweep
+//!     --seeds 0,1,2                   training seeds per cell
+//!     --keep-ratios 0.5               mask keep-ratio axis
+//!     --workers N                     worker threads (OMGD_WORKERS env)
+//!     --force                         recompute cached cells
+//!     --cache-dir DIR                 cache root (target/omgd-cache)
+//!     --out results/grid.csv          deterministic per-cell aggregate
+//!     --curves results/curves.csv     per-step loss curves per cell
+//!   serve                             long-lived loop: JSONL job
+//!                                     requests on stdin → JSONL results
+//!                                     on stdout (same worker pool +
+//!                                     cache; see jobs::serve docs)
+//!     --workers N --force --cache-dir DIR
 //!
 //! Every flag has a default; `omgd <cmd> --help` lists them.
 
@@ -13,8 +31,10 @@ use anyhow::{bail, Result};
 use omgd::bench::TablePrinter;
 use omgd::cli::Args;
 use omgd::config::{Method, OptFamily, RunConfig, Schedule};
-use omgd::data::{ClassTask, Corpus, CorpusConfig, LinRegData,
-                 GLUE_LIKE_TASKS};
+use omgd::data::{ClassTask, Corpus, CorpusConfig, LinRegData};
+use omgd::experiments::{finetune_spec, pretrain_config, FinetuneSetup,
+                        PretrainSetup};
+use omgd::jobs::{run_grid, ExperimentKind, GridOptions, JobSpec};
 use omgd::memory::{breakdown, ArchSpec, MemBreakdown, MemPolicy};
 use omgd::metrics::CsvWriter;
 use omgd::quadratic::{loglog_slope, run_mean, GradForm, QuadParams};
@@ -48,6 +68,8 @@ fn dispatch(args: &Args) -> Result<()> {
         "finetune" => cmd_finetune(args),
         "illustrative" => cmd_illustrative(args),
         "memory" => cmd_memory(args),
+        "grid" => cmd_grid(args),
+        "serve" => cmd_serve(args),
         "" | "help" | "--help" => {
             print!("{}", USAGE);
             Ok(())
@@ -73,6 +95,14 @@ USAGE: omgd <subcommand> [flags]
     --t-max 100000 --reps 5 --r 0.5 --out results/fig2.csv
   memory       analytic memory breakdown (Table 8 / Fig. 6)
     --arch llama-7b --rank 128 --gamma 2
+  grid         sweep methods × seeds × keep-ratios on a worker pool
+               (cells cached under target/omgd-cache by config hash)
+    --kind finetune --tasks CoLA --methods full,lisa,lisa-wor
+    --seeds 0,1,2 --keep-ratios 0.5 --epochs 4 --workers 4
+    [--force] [--cache-dir DIR] [--out results/grid.csv]
+  serve        accept JSONL job requests on stdin, stream JSONL
+               results on stdout (long-lived; {\"cmd\":\"shutdown\"} ends)
+    --workers 4 [--force] [--cache-dir DIR]
 ";
 
 fn cmd_info(args: &Args) -> Result<()> {
@@ -287,9 +317,7 @@ fn cmd_train(args: &Args) -> Result<()> {
 
 fn cmd_finetune(args: &Args) -> Result<()> {
     let task_name = args.str_or("task", "CoLA");
-    let spec = GLUE_LIKE_TASKS
-        .iter()
-        .find(|t| t.name.eq_ignore_ascii_case(&task_name))
+    let spec = omgd::data::find_task(&task_name)
         .ok_or_else(|| anyhow::anyhow!("unknown task {task_name}"))?;
     let model = args.str_or("model", "mlp-glue");
     let mut cfg = run_config_from_args(args, &model)?;
@@ -429,5 +457,160 @@ fn cmd_memory(args: &Args) -> Result<()> {
         "Table 8 — memory breakdown (GB), {} (rank={rank}, γ={gamma})",
         arch.name
     ));
+    Ok(())
+}
+
+fn grid_options_from_args(args: &Args) -> Result<GridOptions> {
+    Ok(GridOptions {
+        workers: args.usize_or("workers", omgd::jobs::default_workers())?,
+        force: args.bool("force"),
+        cache_dir: args.get("cache-dir").map(String::from),
+    })
+}
+
+/// `omgd grid`: declarative sweep over methods × seeds × keep-ratios,
+/// sharded across a worker pool with per-cell result caching.
+fn cmd_grid(args: &Args) -> Result<()> {
+    let kind = args.str_or("kind", "finetune");
+    let methods: Vec<Method> = args
+        .list_or("methods", "full,lisa,lisa-wor")
+        .iter()
+        .map(|s| Method::parse(s))
+        .collect::<Result<_>>()?;
+    let seeds = args.u64_list_or("seeds", &[0, 1, 2])?;
+    let keeps = args.f64_list_or("keep-ratios", &[0.5])?;
+    if methods.is_empty() || seeds.is_empty() || keeps.is_empty() {
+        bail!("--methods/--seeds/--keep-ratios must be non-empty");
+    }
+    let opt_family = OptFamily::parse(&args.str_or("opt", "adamw"))?;
+
+    let mut specs = Vec::new();
+    match kind.as_str() {
+        "finetune" => {
+            let tasks = args.list_or("tasks", "CoLA");
+            if tasks.is_empty() {
+                bail!("--tasks must be non-empty");
+            }
+            let base = FinetuneSetup::default();
+            let setup = FinetuneSetup {
+                model: args.str_or("model", &base.model),
+                epochs: args.usize_or("epochs", 4)?,
+                lr: args.f64_or("lr", base.lr)?,
+                gamma: args.usize_or("gamma", 4)?,
+                period: args.usize_or("period", 1)?,
+                rank: args.usize_or("rank", base.rank)?,
+                ..base
+            };
+            let eval_epochs = args.usize_or("eval-every", 0)?;
+            for method in &methods {
+                for task in &tasks {
+                    for &seed in &seeds {
+                        for &keep_ratio in &keeps {
+                            let s = FinetuneSetup {
+                                seed,
+                                keep_ratio,
+                                ..setup.clone()
+                            };
+                            specs.push(finetune_spec(
+                                task, *method, &s, opt_family, eval_epochs,
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        "pretrain" => {
+            // Shared builder (pretrain_config) so grid cells get the
+            // same warmup+cosine schedule as the Fig. 5 driver.
+            let setup = PretrainSetup {
+                model: args.str_or("model", "gpt-tiny"),
+                steps: args.usize_or("steps", 100)?,
+                lr: args.f64_or("lr", 6e-4)?,
+                gamma: args.usize_or("gamma", 2)?,
+                period: args.usize_or("period", 20)?,
+                seed: 0,
+                eval_every: args.usize_or("eval-every", 0)?,
+            };
+            let rank = args.usize_or("rank", 8)?;
+            for method in &methods {
+                for &seed in &seeds {
+                    for &keep_ratio in &keeps {
+                        let s = PretrainSetup { seed, ..setup.clone() };
+                        let mut cfg = pretrain_config(*method, &s);
+                        cfg.opt.family = opt_family;
+                        cfg.mask.keep_ratio = keep_ratio;
+                        cfg.mask.rank = rank;
+                        specs.push(JobSpec {
+                            kind: ExperimentKind::Pretrain,
+                            cfg,
+                        });
+                    }
+                }
+            }
+        }
+        other => bail!("unknown grid kind {other:?} (finetune | pretrain)"),
+    }
+    // Honor an explicit --artifacts for every cell (machine-local, so
+    // outside the spec hash). Absolutized so a relative path — even one
+    // spelled exactly like the config default — can't be mistaken for
+    // "unset" and fall back to env/CWD resolution in the runner.
+    if let Some(dir) = args.get("artifacts") {
+        let p = std::path::Path::new(dir);
+        let abs = if p.is_absolute() {
+            p.to_path_buf()
+        } else {
+            std::env::current_dir()?.join(p)
+        };
+        let abs = abs.to_string_lossy().into_owned();
+        for s in &mut specs {
+            s.cfg.artifacts_dir = abs.clone();
+        }
+    }
+
+    let opts = grid_options_from_args(args)?;
+    println!(
+        "grid: {} cells ({} methods × {} seeds × {} keep-ratios), \
+         {} workers{}",
+        specs.len(),
+        methods.len(),
+        seeds.len(),
+        keeps.len(),
+        opts.workers,
+        if opts.force { ", force" } else { "" },
+    );
+    let report = run_grid(specs, &opts)?;
+    report.print("omgd grid");
+    if let Some(p) = args.get("out") {
+        report.write_csv(p)?;
+        println!("wrote {p}");
+    }
+    if let Some(p) = args.get("curves") {
+        report.write_curves_csv(p)?;
+        println!("wrote {p}");
+    }
+    if report.n_failed() > 0 {
+        bail!("{} of {} grid job(s) failed", report.n_failed(),
+              report.n_jobs());
+    }
+    Ok(())
+}
+
+/// `omgd serve`: long-lived JSONL job loop on stdin/stdout.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let opts = grid_options_from_args(args)?;
+    eprintln!(
+        "omgd serve: {} worker(s); JSONL requests on stdin, results on \
+         stdout ({{\"cmd\":\"shutdown\"}} or EOF ends)",
+        opts.workers
+    );
+    let stdin = std::io::stdin();
+    let stats =
+        omgd::jobs::serve::serve(stdin.lock(), std::io::stdout(), &opts)?;
+    eprintln!(
+        "serve done: {} accepted, {} rejected, {} ok, {} failed, \
+         {} from cache",
+        stats.accepted, stats.rejected, stats.done, stats.failed,
+        stats.cached
+    );
     Ok(())
 }

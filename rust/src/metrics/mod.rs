@@ -59,6 +59,24 @@ impl CsvWriter {
         self.out.flush()?;
         Ok(())
     }
+
+    /// Flush and fsync, surfacing errors the implicit `Drop` path would
+    /// swallow. Call this at the end of a writer's life when losing the
+    /// final rows matters (pool workers writing per-job CSVs).
+    pub fn finish(mut self) -> Result<()> {
+        self.out.flush()?;
+        self.out.get_ref().sync_all()?;
+        Ok(())
+    }
+}
+
+/// Best-effort flush so a short-lived writer that is dropped without an
+/// explicit `flush()`/`finish()` never truncates its tail rows. Errors
+/// here are unreportable; use [`CsvWriter::finish`] to observe them.
+impl Drop for CsvWriter {
+    fn drop(&mut self) {
+        let _ = self.out.flush();
+    }
 }
 
 /// Cell for mixed-type CSV rows.
@@ -111,6 +129,21 @@ impl JsonlWriter {
     pub fn flush(&mut self) -> Result<()> {
         self.out.flush()?;
         Ok(())
+    }
+
+    /// Flush and fsync, surfacing errors the implicit `Drop` path would
+    /// swallow.
+    pub fn finish(mut self) -> Result<()> {
+        self.out.flush()?;
+        self.out.get_ref().sync_all()?;
+        Ok(())
+    }
+}
+
+/// Best-effort flush on drop (see [`CsvWriter`]'s `Drop`).
+impl Drop for JsonlWriter {
+    fn drop(&mut self) {
+        let _ = self.out.flush();
     }
 }
 
@@ -219,6 +252,47 @@ mod tests {
         }
         let text = std::fs::read_to_string(&path).unwrap();
         assert_eq!(text, "step,loss\n1,0.5\n2,0.25\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn csv_drop_without_flush_keeps_tail_rows() {
+        let dir = std::env::temp_dir().join("omgd_test_csv_drop");
+        let path = dir.join("d.csv");
+        {
+            let mut w =
+                CsvWriter::create(&path, &["step", "loss"]).unwrap();
+            w.row(&[1.0, 0.5]).unwrap();
+            w.row(&[2.0, 0.25]).unwrap();
+            // Dropped without flush(): the Drop impl must flush.
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "step,loss\n1,0.5\n2,0.25\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn csv_finish_flushes_and_syncs() {
+        let dir = std::env::temp_dir().join("omgd_test_csv_finish");
+        let path = dir.join("f.csv");
+        let mut w = CsvWriter::create(&path, &["a"]).unwrap();
+        w.row(&[7.0]).unwrap();
+        w.finish().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a\n7\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn jsonl_drop_without_flush_keeps_tail_rows() {
+        let dir = std::env::temp_dir().join("omgd_test_jsonl_drop");
+        let path = dir.join("d.jsonl");
+        {
+            let mut w = JsonlWriter::create(&path).unwrap();
+            w.event(&[("n", CsvCell::I(1))]).unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "{\"n\":1}\n");
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -76,6 +76,42 @@ impl Json {
     }
 }
 
+/// Escape a string for embedding in a JSON string literal: backslash,
+/// quote, and *every* control character (RFC 8259 §7 — strict readers
+/// like `jq` reject raw controls even though this parser tolerates
+/// them). One shared helper so every writer (cache entries, serve
+/// JSONL) agrees.
+pub fn escape_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            '\u{8}' => out.push_str("\\b"),
+            '\u{c}' => out.push_str("\\f"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Serialize an `f64` as a JSON number using Rust's shortest
+/// round-trip `Display`; non-finite values become `null` (JSON has no
+/// NaN/inf) and should be read back as NaN.
+pub fn ser_f64(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x}")
+    } else {
+        "null".to_string()
+    }
+}
+
 #[derive(Debug)]
 pub struct JsonError {
     pub msg: String,
@@ -330,5 +366,27 @@ mod tests {
     fn empty_containers() {
         assert_eq!(Json::parse("[]").unwrap(), Json::Arr(vec![]));
         assert_eq!(Json::parse("{}").unwrap(), Json::Obj(BTreeMap::new()));
+    }
+
+    #[test]
+    fn escape_round_trips_through_parser() {
+        let nasty = "a\tb\nc\r\"d\"\\e\u{8}f\u{c}g\u{1b}h";
+        let escaped = escape_str(nasty);
+        assert!(!escaped.chars().any(|c| (c as u32) < 0x20),
+                "no raw control chars may survive: {escaped:?}");
+        let doc = format!("{{\"k\":\"{escaped}\"}}");
+        let j = Json::parse(&doc).unwrap();
+        assert_eq!(j.at("k").as_str(), Some(nasty));
+    }
+
+    #[test]
+    fn ser_f64_round_trip_and_nonfinite() {
+        for x in [0.0, 1.5, -2.25, 0.123456789012345, 1e-12, 1e15] {
+            let j = Json::parse(&ser_f64(x)).unwrap();
+            assert_eq!(j.as_f64(), Some(x));
+        }
+        assert_eq!(ser_f64(f64::NAN), "null");
+        assert_eq!(ser_f64(f64::INFINITY), "null");
+        assert_eq!(ser_f64(f64::NEG_INFINITY), "null");
     }
 }

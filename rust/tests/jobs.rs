@@ -1,0 +1,214 @@
+//! Integration tests for the `jobs` subsystem — queue, pool, cache,
+//! report — using stub runners, so they execute on any machine with no
+//! AOT artifacts and no PJRT runtime.
+//!
+//! The hard requirement under test: grids are *deterministic in the
+//! worker count* and *deterministic under cache replay*. A 2-worker run
+//! must write byte-identical CSV aggregates to a 1-worker run, and a
+//! second invocation must serve from cache without changing the bytes.
+
+use omgd::config::{Method, RunConfig};
+use omgd::jobs::{
+    run_pool, ExperimentKind, GridReport, JobOutcome, JobQueue, JobSpec,
+    JobStatus, ResultCache,
+};
+use std::path::PathBuf;
+
+fn spec(method: Method, seed: u64) -> JobSpec {
+    let mut cfg = RunConfig::default();
+    cfg.method = method;
+    cfg.seed = seed;
+    JobSpec {
+        kind: ExperimentKind::Finetune { task: "CoLA".into(), epochs: 2 },
+        cfg,
+    }
+}
+
+/// Method × 3 seeds — the acceptance-criteria grid shape.
+fn method_x_seeds() -> Vec<JobSpec> {
+    let mut specs = Vec::new();
+    for method in [Method::Full, Method::Lisa, Method::LisaWor] {
+        for seed in 0..3u64 {
+            specs.push(spec(method, seed));
+        }
+    }
+    specs
+}
+
+/// Deterministic pseudo-outcome derived only from the spec hash.
+fn stub_outcome(s: &JobSpec) -> JobOutcome {
+    let h = s.content_hash();
+    JobOutcome {
+        final_metric: 50.0 + (h % 500) as f64 / 10.0,
+        tail_loss: (h % 97) as f64 / 100.0,
+        steps: 8,
+        train_secs: 0.0,
+        loss_series: (0..8)
+            .map(|i| (i, 2.0 / (1.0 + i as f64 + (h % 7) as f64)))
+            .collect(),
+        eval_series: vec![(7, 1.0, 60.0)],
+    }
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("omgd-jobs-it-{tag}-{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn run_stub_grid(specs: Vec<JobSpec>, workers: usize) -> GridReport {
+    let queue = JobQueue::bounded(specs.len().max(1));
+    for s in specs {
+        queue.push(s, 0).unwrap();
+    }
+    queue.close();
+    let results = run_pool(&queue, workers, |_wid| {
+        |s: &JobSpec| -> anyhow::Result<(JobOutcome, bool)> {
+            Ok((stub_outcome(s), false))
+        }
+    });
+    GridReport::new(results)
+}
+
+/// Like the production `cached_runner`, but over the stub executor.
+fn run_cached_stub_grid(
+    specs: Vec<JobSpec>,
+    workers: usize,
+    cache: &ResultCache,
+    force: bool,
+) -> GridReport {
+    let queue = JobQueue::bounded(specs.len().max(1));
+    for s in specs {
+        queue.push(s, 0).unwrap();
+    }
+    queue.close();
+    let results = run_pool(&queue, workers, |_wid| {
+        move |s: &JobSpec| -> anyhow::Result<(JobOutcome, bool)> {
+            if force {
+                cache.invalidate(s);
+            } else if let Some(out) = cache.get(s, "stub-afp") {
+                return Ok((out, true));
+            }
+            let out = stub_outcome(s);
+            cache.put(s, "stub-afp", &out)?;
+            Ok((out, false))
+        }
+    });
+    GridReport::new(results)
+}
+
+#[test]
+fn queue_orders_fifo_and_by_priority() {
+    let q = JobQueue::bounded(8);
+    q.push(spec(Method::Full, 0), 0).unwrap();
+    q.push(spec(Method::Full, 1), 2).unwrap();
+    q.push(spec(Method::Full, 2), 2).unwrap();
+    q.push(spec(Method::Full, 3), 1).unwrap();
+    q.close();
+    let seeds: Vec<u64> =
+        std::iter::from_fn(|| q.pop()).map(|j| j.spec.cfg.seed).collect();
+    // Priority 2 first (FIFO within), then 1, then 0.
+    assert_eq!(seeds, vec![1, 2, 3, 0]);
+}
+
+#[test]
+fn pool_isolates_panics_and_finishes_the_grid() {
+    let specs = method_x_seeds();
+    let n = specs.len();
+    let queue = JobQueue::bounded(n);
+    for s in specs {
+        queue.push(s, 0).unwrap();
+    }
+    queue.close();
+    let results = run_pool(&queue, 3, |_wid| {
+        |s: &JobSpec| -> anyhow::Result<(JobOutcome, bool)> {
+            if s.cfg.method == Method::Lisa && s.cfg.seed == 1 {
+                panic!("poisoned cell");
+            }
+            Ok((stub_outcome(s), false))
+        }
+    });
+    assert_eq!(results.len(), n, "pool must survive the poisoned job");
+    let panicked = results
+        .iter()
+        .filter(|r| matches!(r.status, JobStatus::Panicked(_)))
+        .count();
+    assert_eq!(panicked, 1);
+    assert_eq!(results.iter().filter(|r| r.is_ok()).count(), n - 1);
+}
+
+#[test]
+fn two_worker_grid_matches_one_worker_byte_for_byte() {
+    let dir = tmp_dir("determinism");
+    let rep1 = run_stub_grid(method_x_seeds(), 1);
+    let rep2 = run_stub_grid(method_x_seeds(), 2);
+    let rep4 = run_stub_grid(method_x_seeds(), 4);
+
+    let (p1, p2, p4) =
+        (dir.join("w1.csv"), dir.join("w2.csv"), dir.join("w4.csv"));
+    rep1.write_csv(&p1).unwrap();
+    rep2.write_csv(&p2).unwrap();
+    rep4.write_csv(&p4).unwrap();
+    let b1 = std::fs::read(&p1).unwrap();
+    assert_eq!(b1, std::fs::read(&p2).unwrap(),
+               "1-worker vs 2-worker aggregates must be byte-identical");
+    assert_eq!(b1, std::fs::read(&p4).unwrap());
+
+    // Curve files too (per-step series, not just finals).
+    let (c1, c2) = (dir.join("c1.csv"), dir.join("c2.csv"));
+    rep1.write_curves_csv(&c1).unwrap();
+    rep2.write_curves_csv(&c2).unwrap();
+    assert_eq!(std::fs::read(&c1).unwrap(), std::fs::read(&c2).unwrap());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn second_invocation_hits_cache_and_replays_identically() {
+    let dir = tmp_dir("cache-replay");
+    let cache_dir = dir.join("cache");
+    let cache =
+        ResultCache::open(Some(cache_dir.to_str().unwrap())).unwrap();
+
+    let fresh = run_cached_stub_grid(method_x_seeds(), 2, &cache, false);
+    assert_eq!(fresh.n_ok(), 9);
+    assert_eq!(fresh.n_cached(), 0);
+    assert_eq!(cache.len(), 9);
+
+    // Second invocation: ≥ 90% cache hits (here: all of them), no
+    // recomputation, byte-identical aggregate.
+    let replay = run_cached_stub_grid(method_x_seeds(), 2, &cache, false);
+    assert_eq!(replay.n_cached(), 9);
+    assert!(replay.cache_hit_rate() >= 0.9);
+
+    let (p1, p2) = (dir.join("fresh.csv"), dir.join("replay.csv"));
+    fresh.write_csv(&p1).unwrap();
+    replay.write_csv(&p2).unwrap();
+    assert_eq!(std::fs::read(&p1).unwrap(), std::fs::read(&p2).unwrap(),
+               "cache replay must not change the aggregate bytes");
+
+    // --force invalidates every cell and recomputes.
+    let forced = run_cached_stub_grid(method_x_seeds(), 2, &cache, true);
+    assert_eq!(forced.n_cached(), 0);
+    assert_eq!(cache.len(), 9, "forced run repopulates the cache");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn mixed_grids_share_overlapping_cells() {
+    let dir = tmp_dir("overlap");
+    let cache = ResultCache::open(Some(dir.to_str().unwrap())).unwrap();
+    run_cached_stub_grid(vec![spec(Method::Full, 0)], 1, &cache, false);
+    // A bigger grid containing the same cell: 1 hit, 2 fresh.
+    let rep = run_cached_stub_grid(
+        vec![spec(Method::Full, 0), spec(Method::Full, 1),
+             spec(Method::LisaWor, 0)],
+        2,
+        &cache,
+        false,
+    );
+    assert_eq!(rep.n_cached(), 1);
+    assert_eq!(cache.len(), 3);
+    std::fs::remove_dir_all(&dir).ok();
+}
