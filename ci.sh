@@ -19,6 +19,11 @@ cargo fmt --check
 echo "== cargo clippy -D warnings"
 cargo clippy --all-targets -- -D warnings
 
+# Rustdoc rot (broken intra-doc links, bad code fences) fails the
+# build: the docs/ handbook leans on `cargo doc` staying truthful.
+echo "== cargo doc --no-deps (rustdoc warnings denied)"
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
 echo "== cargo test (OMGD_BENCH_SCALE=$OMGD_BENCH_SCALE)"
 cargo test -q
 

@@ -27,7 +27,7 @@ fn main() -> anyhow::Result<()> {
     let opts = GridOptions {
         workers: default_workers(),
         force: force_from_env(),
-        cache_dir: None,
+        ..GridOptions::default()
     };
     println!(
         "Table 3: {} grid cells ({} tasks × {} methods × {} seeds), \

@@ -25,7 +25,7 @@ fn main() -> anyhow::Result<()> {
     let opts = GridOptions {
         workers: default_workers(),
         force: force_from_env(),
-        cache_dir: None,
+        ..GridOptions::default()
     };
     println!(
         "Table 5: {} grid cells ({} datasets × {} methods, AdamW γ=3 \

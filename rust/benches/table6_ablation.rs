@@ -22,7 +22,7 @@ fn main() -> anyhow::Result<()> {
     let opts = GridOptions {
         workers: default_workers(),
         force: force_from_env(),
-        cache_dir: None,
+        ..GridOptions::default()
     };
     println!(
         "Table 6: γ × K sweep on CoLA-like ({} cells), {} workers",

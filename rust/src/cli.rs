@@ -79,6 +79,19 @@ impl Args {
         Ok(self.usize_or(name, default as usize)? as u64)
     }
 
+    /// Optional integer flag: `None` when absent (no default exists —
+    /// e.g. the cache-GC caps, where "unset" means "no cap"), an error
+    /// when present but unparseable.
+    pub fn opt_u64(&self, name: &str) -> Result<Option<u64>> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => match v.parse() {
+                Ok(x) => Ok(Some(x)),
+                Err(_) => bail!("--{name} expects an integer, got {v:?}"),
+            },
+        }
+    }
+
     pub fn bool(&self, name: &str) -> bool {
         matches!(self.get(name), Some("true") | Some("1") | Some("yes"))
     }
@@ -179,6 +192,14 @@ mod tests {
         let a = args("x --steps abc");
         assert!(a.usize_or("steps", 0).is_err());
         assert!(a.f64_or("steps", 0.0).is_err());
+    }
+
+    #[test]
+    fn optional_integer_flags() {
+        let a = args("cache-gc --max-bytes 1048576 --max-age-secs oops");
+        assert_eq!(a.opt_u64("max-bytes").unwrap(), Some(1_048_576));
+        assert_eq!(a.opt_u64("absent").unwrap(), None);
+        assert!(a.opt_u64("max-age-secs").is_err());
     }
 
     #[test]

@@ -14,6 +14,16 @@
 //! regenerating artifacts — same model name, new weights/HLO — reads
 //! as a miss instead of replaying stale results. Unparseable or
 //! version-skewed entries also read as misses.
+//!
+//! Eviction: the cache grows without bound until a [`GcPolicy`] prunes
+//! it — an age cap (entries whose last write is older than
+//! `max_age_secs`) followed by a total-size cap that evicts
+//! oldest-write-first until the directory fits in `max_bytes`. GC runs
+//! at open for every grid/serve front-end (via
+//! [`ResultCache::open_with`]) and on demand as `omgd cache-gc`;
+//! entries written after a pass's reference instant are never
+//! candidates, so a worker publishing a result mid-GC cannot lose it.
+//! Knobs and sizing guidance: `docs/operations.md`.
 
 use super::pool::JobOutcome;
 use super::spec::JobSpec;
@@ -22,6 +32,7 @@ use anyhow::{Context, Result};
 use std::fs;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, SystemTime};
 
 /// Bump when the entry format or [`JobOutcome`] fields change.
 const SCHEMA_VERSION: u64 = 1;
@@ -30,6 +41,46 @@ const SCHEMA_VERSION: u64 = 1;
 pub const DEFAULT_CACHE_DIR: &str = "target/omgd-cache";
 
 static TMP_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// Eviction policy for [`ResultCache::gc`]. Both caps are optional and
+/// the default policy is a no-op, so opening a cache never surprises a
+/// grid by deleting entries unless the operator asked for it.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GcPolicy {
+    /// Evict entries whose last write is older than this many seconds.
+    pub max_age_secs: Option<u64>,
+    /// After the age pass, evict oldest-write-first until the cache
+    /// directory totals ≤ this many bytes. Approximate LRU: ordering is
+    /// by last *write* time — a cache read does not refresh an entry.
+    pub max_bytes: Option<u64>,
+    /// Report what would be evicted without deleting anything.
+    pub dry_run: bool,
+}
+
+impl GcPolicy {
+    /// True when neither cap is set — [`ResultCache::gc`] returns
+    /// zeroed stats without touching the disk.
+    pub fn is_noop(&self) -> bool {
+        self.max_age_secs.is_none() && self.max_bytes.is_none()
+    }
+}
+
+/// What one GC pass did (or, under `dry_run`, would have done).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct GcStats {
+    pub scanned: usize,
+    pub evicted: usize,
+    pub evicted_bytes: u64,
+    pub kept: usize,
+    pub kept_bytes: u64,
+}
+
+/// Entry count + total byte size (the `GET /cache` payload).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub entries: usize,
+    pub bytes: u64,
+}
 
 /// Handle to one cache directory.
 pub struct ResultCache {
@@ -43,6 +94,19 @@ impl ResultCache {
         fs::create_dir_all(&dir)
             .with_context(|| format!("creating cache dir {dir:?}"))?;
         Ok(Self { dir })
+    }
+
+    /// Open the cache and immediately run one `policy` GC pass over it
+    /// — the "GC at open" hook every grid/serve front-end goes through,
+    /// so a long-lived deployment's cache stays inside its caps without
+    /// a separate cron job.
+    pub fn open_with(
+        dir: Option<&str>,
+        policy: &GcPolicy,
+    ) -> Result<(Self, GcStats)> {
+        let cache = Self::open(dir)?;
+        let stats = cache.gc(policy)?;
+        Ok((cache, stats))
     }
 
     pub fn dir(&self) -> &Path {
@@ -106,6 +170,126 @@ impl ResultCache {
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Entry count and total byte size of the cache directory.
+    pub fn stats(&self) -> CacheStats {
+        let mut s = CacheStats::default();
+        for p in self.iter_entries() {
+            if let Ok(meta) = fs::metadata(&p) {
+                s.entries += 1;
+                s.bytes += meta.len();
+            }
+        }
+        s
+    }
+
+    /// Run one GC pass with `now` as the reference instant.
+    pub fn gc(&self, policy: &GcPolicy) -> Result<GcStats> {
+        self.gc_at(policy, SystemTime::now())
+    }
+
+    /// GC with an explicit reference instant (tests inject `now`).
+    ///
+    /// Entries whose mtime is later than `now` — i.e. written while
+    /// this pass runs — are never eviction candidates: a worker
+    /// publishing a fresh result mid-GC cannot lose it (their bytes
+    /// still count against the size cap, which the pass then satisfies
+    /// by evicting older entries, or not at all).
+    pub fn gc_at(
+        &self,
+        policy: &GcPolicy,
+        now: SystemTime,
+    ) -> Result<GcStats> {
+        // Sweep orphaned atomic-write temp files first (a crash between
+        // the temp write and the rename in `put` leaks them, invisible
+        // to the entry iterator). Live writes rename within
+        // milliseconds, so an hour of grace can never race one. Runs
+        // under every policy — including the no-op default — so plain
+        // opens self-heal.
+        const TMP_ORPHAN_GRACE_SECS: u64 = 3600;
+        if !policy.dry_run {
+            if let Some(cutoff) =
+                now.checked_sub(Duration::from_secs(TMP_ORPHAN_GRACE_SECS))
+            {
+                let tmps = fs::read_dir(&self.dir)
+                    .into_iter()
+                    .flatten()
+                    .filter_map(|e| e.ok())
+                    .filter(|e| {
+                        e.file_name().to_string_lossy().starts_with(".tmp-")
+                    });
+                for e in tmps {
+                    let stale = e
+                        .metadata()
+                        .and_then(|m| m.modified())
+                        .map(|mtime| mtime < cutoff)
+                        .unwrap_or(false);
+                    if stale {
+                        let _ = fs::remove_file(e.path());
+                    }
+                }
+            }
+        }
+        let mut stats = GcStats::default();
+        if policy.is_noop() {
+            return Ok(stats);
+        }
+        // Snapshot: (path, last write, size); unreadable entries are
+        // skipped (a concurrent invalidate is not an error).
+        let mut total_bytes = 0u64;
+        let mut protected_bytes = 0u64;
+        let mut candidates: Vec<(PathBuf, SystemTime, u64)> = Vec::new();
+        for p in self.iter_entries() {
+            let Ok(meta) = fs::metadata(&p) else { continue };
+            let Ok(mtime) = meta.modified() else { continue };
+            stats.scanned += 1;
+            total_bytes += meta.len();
+            if mtime > now {
+                protected_bytes += meta.len();
+            } else {
+                candidates.push((p, mtime, meta.len()));
+            }
+        }
+        // Oldest write first; path tiebreak keeps the pass
+        // deterministic when mtimes collide.
+        candidates
+            .sort_by(|a, b| a.1.cmp(&b.1).then_with(|| a.0.cmp(&b.0)));
+
+        let mut evict: Vec<(PathBuf, u64)> = Vec::new();
+        let cutoff = policy
+            .max_age_secs
+            .and_then(|s| now.checked_sub(Duration::from_secs(s)));
+        let mut live_bytes = protected_bytes;
+        let mut survivors: Vec<(PathBuf, u64)> = Vec::new();
+        for (p, mtime, len) in candidates {
+            if cutoff.map(|c| mtime < c).unwrap_or(false) {
+                evict.push((p, len));
+            } else {
+                live_bytes += len;
+                survivors.push((p, len));
+            }
+        }
+        if let Some(max) = policy.max_bytes {
+            for (p, len) in survivors {
+                if live_bytes <= max {
+                    break;
+                }
+                live_bytes -= len;
+                evict.push((p, len));
+            }
+        }
+        for (p, len) in evict {
+            if !policy.dry_run && fs::remove_file(&p).is_err() && p.exists()
+            {
+                continue; // undeletable (perms?) — count it as kept
+            }
+            stats.evicted += 1;
+            stats.evicted_bytes += len;
+        }
+        stats.kept = stats.scanned - stats.evicted;
+        stats.kept_bytes = total_bytes - stats.evicted_bytes;
+        Ok(stats)
     }
 
     /// Remove every entry; returns how many were deleted.
@@ -319,6 +503,127 @@ mod tests {
         )
         .unwrap();
         assert!(c.get(&b, "afp-1").is_none(), "foreign canon must not hit");
+        std::fs::remove_dir_all(c.dir()).ok();
+    }
+
+    #[test]
+    fn gc_age_cap_evicts_only_expired_entries() {
+        let c = tmp_cache("gc-age");
+        c.put(&spec(10), "afp-1", &outcome()).unwrap();
+        c.put(&spec(11), "afp-1", &outcome()).unwrap();
+        let now = SystemTime::now();
+        let policy =
+            GcPolicy { max_age_secs: Some(3600), ..GcPolicy::default() };
+        // Both entries were written seconds ago: nothing is older than
+        // an hour.
+        let st = c.gc_at(&policy, now).unwrap();
+        assert_eq!(st.evicted, 0);
+        assert_eq!(st.kept, 2);
+        assert_eq!(c.len(), 2);
+        // Two hours later both exceed the age cap.
+        let later = now + Duration::from_secs(7200);
+        let st = c.gc_at(&policy, later).unwrap();
+        assert_eq!(st.evicted, 2);
+        assert!(st.evicted_bytes > 0);
+        assert_eq!(c.len(), 0);
+        std::fs::remove_dir_all(c.dir()).ok();
+    }
+
+    #[test]
+    fn gc_size_cap_evicts_oldest_first() {
+        let c = tmp_cache("gc-size");
+        // Distinct mtimes: sleep past filesystem timestamp granularity.
+        c.put(&spec(20), "afp-1", &outcome()).unwrap();
+        std::thread::sleep(Duration::from_millis(20));
+        c.put(&spec(21), "afp-1", &outcome()).unwrap();
+        std::thread::sleep(Duration::from_millis(20));
+        c.put(&spec(22), "afp-1", &outcome()).unwrap();
+        let one = c.stats().bytes / 3;
+        // Room for roughly one entry: the two oldest go, newest stays.
+        let policy = GcPolicy {
+            max_bytes: Some(one + one / 2),
+            ..GcPolicy::default()
+        };
+        let st = c.gc(&policy).unwrap();
+        assert_eq!(st.evicted, 2);
+        assert_eq!(st.kept, 1);
+        assert!(c.get(&spec(22), "afp-1").is_some(), "newest survives");
+        assert!(c.get(&spec(20), "afp-1").is_none());
+        assert!(c.get(&spec(21), "afp-1").is_none());
+        assert!(c.stats().bytes <= one + one / 2);
+        std::fs::remove_dir_all(c.dir()).ok();
+    }
+
+    #[test]
+    fn gc_never_evicts_entries_written_during_the_run() {
+        let c = tmp_cache("gc-fresh");
+        // Reference instant an hour in the past: the entry's write time
+        // is later, i.e. it appeared "during" this GC pass.
+        let gc_start = SystemTime::now() - Duration::from_secs(3600);
+        c.put(&spec(30), "afp-1", &outcome()).unwrap();
+        let policy = GcPolicy {
+            max_age_secs: Some(1),
+            max_bytes: Some(0),
+            ..GcPolicy::default()
+        };
+        let st = c.gc_at(&policy, gc_start).unwrap();
+        assert_eq!(st.evicted, 0, "mid-run writes are protected");
+        assert!(c.get(&spec(30), "afp-1").is_some());
+        std::fs::remove_dir_all(c.dir()).ok();
+    }
+
+    #[test]
+    fn gc_dry_run_reports_without_deleting() {
+        let c = tmp_cache("gc-dry");
+        c.put(&spec(40), "afp-1", &outcome()).unwrap();
+        let policy = GcPolicy {
+            max_bytes: Some(0),
+            dry_run: true,
+            ..GcPolicy::default()
+        };
+        let st =
+            c.gc_at(&policy, SystemTime::now() + Duration::from_secs(60))
+                .unwrap();
+        assert_eq!(st.evicted, 1, "dry run reports the plan");
+        assert_eq!(c.len(), 1, "…but deletes nothing");
+        // Noop policy touches nothing and reports zeros.
+        let st = c.gc(&GcPolicy::default()).unwrap();
+        assert_eq!(st, GcStats::default());
+        std::fs::remove_dir_all(c.dir()).ok();
+    }
+
+    #[test]
+    fn gc_sweeps_orphaned_tmp_files() {
+        let c = tmp_cache("gc-tmp");
+        c.put(&spec(60), "afp-1", &outcome()).unwrap();
+        let orphan = c.dir().join(".tmp-99999-0");
+        std::fs::write(&orphan, "torn write").unwrap();
+        // Two hours in the future, the fresh orphan exceeds the grace
+        // period; the real entry is untouched even by a no-op policy.
+        let later = SystemTime::now() + Duration::from_secs(7200);
+        c.gc_at(&GcPolicy::default(), later).unwrap();
+        assert!(!orphan.exists(), "stale tmp file swept");
+        assert!(c.get(&spec(60), "afp-1").is_some());
+        // A *fresh* orphan (within grace) survives.
+        std::fs::write(&orphan, "in-flight write").unwrap();
+        c.gc_at(&GcPolicy::default(), SystemTime::now()).unwrap();
+        assert!(orphan.exists(), "live tmp file untouched");
+        std::fs::remove_dir_all(c.dir()).ok();
+    }
+
+    #[test]
+    fn open_with_runs_gc_at_open() {
+        let c = tmp_cache("gc-open");
+        c.put(&spec(50), "afp-1", &outcome()).unwrap();
+        let dir = c.dir().to_str().unwrap().to_string();
+        let policy = GcPolicy {
+            max_age_secs: Some(3600),
+            ..GcPolicy::default()
+        };
+        // Fresh entry: open_with keeps it.
+        let (c2, st) = ResultCache::open_with(Some(&dir), &policy).unwrap();
+        assert_eq!(st.evicted, 0);
+        assert_eq!(c2.len(), 1);
         std::fs::remove_dir_all(c.dir()).ok();
     }
 

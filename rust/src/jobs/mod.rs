@@ -11,27 +11,36 @@
 //! * [`pool`] — `std::thread` worker pool, one PJRT runtime per worker,
 //!   panic isolation per job;
 //! * [`cache`] — on-disk result cache keyed by spec hash (`--force`
-//!   invalidates);
+//!   invalidates; age/size GC via [`cache::GcPolicy`], run at open and
+//!   as `omgd cache-gc`);
 //! * [`report`] — aggregation into [`crate::bench::TablePrinter`] /
 //!   [`crate::metrics::CsvWriter`] sinks;
-//! * [`serve`] — long-lived JSONL request loop (the seed of a
-//!   request-serving path).
+//! * [`serve`] — transport-agnostic JSONL sessions multiplexed over a
+//!   shared [`serve::JobHub`] (queue + worker pool + result routing);
+//! * [`net`] — HTTP/1.1 gateway (`omgd serve --listen`): N concurrent
+//!   connections share one hub, with `429` backpressure and graceful
+//!   drain.
 //!
-//! Front-ends: `omgd grid` and `omgd serve` (see `main.rs`), plus the
-//! Table 3/5/6 bench binaries, which submit grids built by
-//! [`crate::experiments`].
+//! Front-ends: `omgd grid`, `omgd serve` (stdin or `--listen`), and
+//! `omgd cache-gc` (see `main.rs`), plus the Table 3/5/6 bench
+//! binaries, which submit grids built by [`crate::experiments`].
 
 pub mod cache;
+pub mod net;
 pub mod pool;
 pub mod queue;
 pub mod report;
 pub mod serve;
 pub mod spec;
 
-pub use cache::{ResultCache, DEFAULT_CACHE_DIR};
+pub use cache::{
+    CacheStats, GcPolicy, GcStats, ResultCache, DEFAULT_CACHE_DIR,
+};
+pub use net::{run_gateway, GatewayStats, ListenOptions};
 pub use pool::{run_pool, JobOutcome, JobResult, JobStatus};
-pub use queue::{Job, JobQueue};
+pub use queue::{Job, JobQueue, TryPush};
 pub use report::GridReport;
+pub use serve::{JobHub, ServeStats, SessionOptions};
 pub use spec::{ExperimentKind, JobSpec};
 
 use crate::config::{OptFamily, RunConfig};
@@ -52,11 +61,18 @@ pub struct GridOptions {
     pub force: bool,
     /// Cache directory override (default [`DEFAULT_CACHE_DIR`]).
     pub cache_dir: Option<String>,
+    /// Cache GC policy, run once at cache open (default: no-op).
+    pub gc: GcPolicy,
 }
 
 impl Default for GridOptions {
     fn default() -> Self {
-        Self { workers: 1, force: false, cache_dir: None }
+        Self {
+            workers: 1,
+            force: false,
+            cache_dir: None,
+            gc: GcPolicy::default(),
+        }
     }
 }
 
@@ -91,7 +107,7 @@ pub fn default_workers() -> usize {
 /// across `opts.workers` threads, reuse cached results unless
 /// `opts.force`, and return the (submission-ordered) report.
 pub fn run_grid(specs: Vec<JobSpec>, opts: &GridOptions) -> Result<GridReport> {
-    let cache = ResultCache::open(opts.cache_dir.as_deref())?;
+    let cache = open_cache(opts)?;
     let queue = JobQueue::bounded(specs.len().max(1));
     for s in specs {
         queue.push(s, 0)?;
@@ -116,6 +132,27 @@ pub fn run_grid(specs: Vec<JobSpec>, opts: &GridOptions) -> Result<GridReport> {
         }
     });
     Ok(GridReport::new(results))
+}
+
+/// Open the result cache, run the configured GC policy once, and
+/// report evictions to stderr — the shared open path for every
+/// front-end (grid, serve, gateway).
+pub(crate) fn open_cache(opts: &GridOptions) -> Result<ResultCache> {
+    let (cache, gc) =
+        ResultCache::open_with(opts.cache_dir.as_deref(), &opts.gc)?;
+    report_gc(&gc);
+    Ok(cache)
+}
+
+/// One shared eviction report, so the at-open and periodic GC paths
+/// cannot drift apart.
+pub(crate) fn report_gc(st: &GcStats) {
+    if st.evicted > 0 {
+        eprintln!(
+            "cache gc: evicted {} entries ({} bytes)",
+            st.evicted, st.evicted_bytes
+        );
+    }
 }
 
 /// The production worker function: consult the cache, else execute the
@@ -339,6 +376,7 @@ mod tests {
             workers: 2,
             force: false,
             cache_dir: Some(dir.clone()),
+            ..GridOptions::default()
         };
         let specs = vec![missing_model_spec(0), missing_model_spec(1)];
         let report = run_grid(specs, &opts).unwrap();
@@ -359,6 +397,7 @@ mod tests {
             workers: 1,
             force: false,
             cache_dir: Some(dir.clone()),
+            ..GridOptions::default()
         };
         let report =
             run_grid(vec![missing_model_spec(0)], &opts).unwrap();

@@ -1,0 +1,653 @@
+//! `omgd serve --listen`: HTTP/1.1 gateway over the shared [`JobHub`].
+//!
+//! A `TcpListener` accept loop hands each connection to its own thread;
+//! every connection multiplexes into ONE hub — one bounded queue, one
+//! worker pool, one result cache — so N clients share the same compute
+//! budget. The HTTP layer is a thin, dependency-free HTTP/1.1 framing
+//! helper (request line + headers + `Content-Length` body in, status +
+//! headers + body out), not a general web server: request bodies are
+//! read up front, responses use `Connection: close`.
+//!
+//! Endpoints (full spec with examples: `docs/serve-protocol.md`):
+//!
+//! * `POST /jobs` — body is JSONL job requests (the [`super::serve`]
+//!   protocol); the response streams acks/rejects/results as NDJSON in
+//!   completion order. When the shared queue is saturated the gateway
+//!   answers `429 Too Many Requests` + `Retry-After` instead of
+//!   queueing the connection.
+//! * `GET /healthz` — liveness, queue depth, drain state.
+//! * `GET /stats` — hub-lifetime job counters plus gateway counters
+//!   (connections, 429/503 responses).
+//! * `GET /cache` — result-cache directory, entry count, byte size.
+//! * `POST /shutdown` — stop accepting, drain in-flight connections
+//!   and queued jobs, then return.
+//!
+//! Backpressure is two-level: per connection (at most
+//! [`ListenOptions::max_in_flight`] unfinished jobs per session — the
+//! session reader throttles until results drain) and global (the
+//! bounded queue; saturated → `429` for new `POST /jobs`).
+
+use super::cache::ResultCache;
+use super::pool::JobOutcome;
+use super::serve::{
+    run_session, with_hub, JobHub, ServeStats, SessionOptions,
+};
+use super::spec::JobSpec;
+use super::{cached_runner, open_cache, GridOptions};
+use crate::util::json::escape_str as esc;
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::time::Duration;
+
+/// Largest accepted `POST /jobs` body (16 MiB ≈ 10⁵ job lines).
+const MAX_BODY_BYTES: usize = 16 << 20;
+/// Cap on the request head (request line + headers).
+const MAX_HEAD_BYTES: u64 = 16 << 10;
+/// Cap on the number of header lines.
+const MAX_HEADERS: usize = 100;
+/// How much of an over-limit or throttled request body gets drained
+/// before responding, so the error reaches the client instead of a
+/// connection reset (closing with unread bytes provokes an RST).
+const MAX_DRAIN_BYTES: u64 = 64 << 20;
+/// Interval between cache-GC passes in a long-lived gateway.
+const GC_INTERVAL: Duration = Duration::from_secs(15 * 60);
+
+/// Gateway knobs (`omgd serve --listen`).
+#[derive(Clone, Debug)]
+pub struct ListenOptions {
+    /// Concurrent-connection cap; beyond it the gateway answers `503`.
+    pub max_conns: usize,
+    /// Per-connection cap on unfinished jobs (see module docs).
+    pub max_in_flight: usize,
+    /// Shared queue capacity; `0` = auto (`(2·workers).max(8)`).
+    pub queue_capacity: usize,
+    /// Socket read *and* write timeout, so a stalled client — silent,
+    /// or refusing to read its result stream — cannot wedge graceful
+    /// drain forever.
+    pub io_timeout: Duration,
+}
+
+impl Default for ListenOptions {
+    fn default() -> Self {
+        Self {
+            max_conns: 64,
+            max_in_flight: 32,
+            queue_capacity: 0,
+            io_timeout: Duration::from_secs(300),
+        }
+    }
+}
+
+/// Gateway-lifetime counters, reported once the gateway drains.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GatewayStats {
+    /// Connections handled (excluding ones refused with `503`).
+    pub connections: usize,
+    /// Parsed HTTP requests across all connections.
+    pub requests: usize,
+    /// `429 Too Many Requests` responses (queue saturated).
+    pub throttled: usize,
+    /// `503 Service Unavailable` responses (connection cap).
+    pub refused: usize,
+    /// Job counters aggregated across all `POST /jobs` sessions.
+    pub jobs: ServeStats,
+}
+
+#[derive(Default)]
+struct Counters {
+    connections: AtomicUsize,
+    active: AtomicUsize,
+    requests: AtomicUsize,
+    throttled: AtomicUsize,
+    refused: AtomicUsize,
+}
+
+/// Bind `addr` and run the gateway with the production cache-aware
+/// runner until `POST /shutdown`. `--listen 127.0.0.1:0` binds a free
+/// port; the actual address is printed to stderr.
+pub fn serve_listen(
+    addr: &str,
+    opts: &GridOptions,
+    lopts: &ListenOptions,
+) -> Result<GatewayStats> {
+    let cache = open_cache(opts)?;
+    let listener =
+        TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+    eprintln!(
+        "omgd serve: listening on http://{} ({} workers; POST /jobs, \
+         GET /healthz /stats /cache, POST /shutdown)",
+        listener.local_addr()?,
+        opts.workers.max(1),
+    );
+    // A long-lived gateway re-enforces its GC caps periodically, not
+    // just at open; the thread owns its own cache handle (same dir)
+    // and stops when the gateway drains. Entries written during a pass
+    // are never candidates, so racing workers lose nothing.
+    let (gc_stop_tx, gc_stop_rx) = std::sync::mpsc::channel::<()>();
+    let gc_thread = (!opts.gc.is_noop()).then(|| {
+        let policy = opts.gc;
+        let dir = opts.cache_dir.clone();
+        std::thread::spawn(move || {
+            let Ok(cache) = ResultCache::open(dir.as_deref()) else {
+                return;
+            };
+            loop {
+                match gc_stop_rx.recv_timeout(GC_INTERVAL) {
+                    Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                        if let Ok(st) = cache.gc(&policy) {
+                            super::report_gc(&st);
+                        }
+                    }
+                    _ => return, // drained (or sender gone): stop
+                }
+            }
+        })
+    });
+    let out =
+        run_gateway(listener, opts.workers, lopts, Some(&cache), |_wid| {
+            cached_runner(&cache, opts.force)
+        });
+    let _ = gc_stop_tx.send(());
+    if let Some(h) = gc_thread {
+        let _ = h.join();
+    }
+    out
+}
+
+/// Run the accept loop + worker pool + router on `listener` until a
+/// `POST /shutdown` arrives, then drain: open connections finish their
+/// sessions, queued jobs complete, and the aggregate stats come back.
+/// Tests inject stub workers (and `None` for the cache) the same way
+/// [`super::pool::run_pool`] does.
+pub fn run_gateway<M, F>(
+    listener: TcpListener,
+    workers: usize,
+    lopts: &ListenOptions,
+    cache: Option<&ResultCache>,
+    make_worker: M,
+) -> Result<GatewayStats>
+where
+    M: Fn(usize) -> F + Sync,
+    F: FnMut(&JobSpec) -> Result<(JobOutcome, bool)>,
+{
+    let workers = workers.max(1);
+    let queue_capacity = if lopts.queue_capacity == 0 {
+        (2 * workers).max(8)
+    } else {
+        lopts.queue_capacity
+    };
+    let stop = AtomicBool::new(false);
+    let c = Counters::default();
+    let local = listener.local_addr().context("gateway local_addr")?;
+
+    // `with_hub` owns the worker pool + router + drain discipline; this
+    // body is only the accept loop. Connection threads live in their
+    // own scope and are joined before the body returns, so every open
+    // session finishes before the hub seals its queue.
+    let (accepted, rejected, done, failed, cached) =
+        with_hub(workers, queue_capacity, make_worker, |hub| {
+            std::thread::scope(|s| {
+                let mut handles = Vec::new();
+                loop {
+                    let stream = match listener.accept() {
+                        Ok((stream, _peer)) => stream,
+                        Err(_) => {
+                            if stop.load(Ordering::SeqCst) {
+                                break;
+                            }
+                            // Transient accept failure (fd exhaustion,
+                            // …): back off instead of spinning.
+                            std::thread::sleep(Duration::from_millis(10));
+                            continue;
+                        }
+                    };
+                    // The post-shutdown wake-up connection (or a
+                    // straggler that raced it) is dropped unanswered.
+                    if stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let full =
+                        c.active.load(Ordering::SeqCst) >= lopts.max_conns;
+                    if full {
+                        c.refused.fetch_add(1, Ordering::Relaxed);
+                        let _ = respond_json(
+                            &mut &stream,
+                            503,
+                            "Service Unavailable",
+                            &[("Retry-After", "1")],
+                            "{\"error\":\"connection limit reached\"}",
+                        );
+                        continue;
+                    }
+                    c.active.fetch_add(1, Ordering::SeqCst);
+                    c.connections.fetch_add(1, Ordering::Relaxed);
+                    let (cr, st) = (&c, &stop);
+                    let handle = s.spawn(move || {
+                        handle_conn(
+                            hub, cr, st, lopts, cache, local, stream,
+                        );
+                        cr.active.fetch_sub(1, Ordering::SeqCst);
+                    });
+                    handles.push(handle);
+                    // Bound the handle list over a long gateway
+                    // lifetime; the scope still joins any thread whose
+                    // handle is dropped.
+                    handles.retain(|h| !h.is_finished());
+                }
+                // Graceful drain: open connections finish before
+                // `with_hub` closes the queue behind this body.
+                for h in handles {
+                    let _ = h.join();
+                }
+            });
+            hub.counters()
+        });
+
+    Ok(GatewayStats {
+        connections: c.connections.load(Ordering::Relaxed),
+        requests: c.requests.load(Ordering::Relaxed),
+        throttled: c.throttled.load(Ordering::Relaxed),
+        refused: c.refused.load(Ordering::Relaxed),
+        jobs: ServeStats { accepted, rejected, done, failed, cached },
+    })
+}
+
+/// Serve one connection: parse the request head, dispatch the endpoint,
+/// respond, close. Never panics — every IO failure is a dropped client.
+fn handle_conn(
+    hub: &JobHub,
+    c: &Counters,
+    stop: &AtomicBool,
+    lopts: &ListenOptions,
+    cache: Option<&ResultCache>,
+    local: SocketAddr,
+    stream: TcpStream,
+) {
+    let _ = stream.set_read_timeout(Some(lopts.io_timeout));
+    let _ = stream.set_write_timeout(Some(lopts.io_timeout));
+    let mut reader = match stream.try_clone() {
+        Ok(s) => BufReader::new(s),
+        Err(_) => return,
+    };
+    let mut w = &stream;
+    let head = match read_head(&mut reader) {
+        Ok(Some(h)) => h,
+        Ok(None) => return, // connected, sent nothing, closed
+        Err(e) => {
+            let _ = respond_json(
+                &mut w,
+                400,
+                "Bad Request",
+                &[],
+                &err_body(&e.to_string()),
+            );
+            return;
+        }
+    };
+    c.requests.fetch_add(1, Ordering::Relaxed);
+    // Every endpoint except POST /jobs ignores its body; drain it
+    // (bounded) up front so responding + closing can't RST the reply
+    // away. Skipped under Expect: 100-continue — the client has not
+    // sent the body yet and is waiting on our verdict.
+    if !(head.method == "POST" && head.path == "/jobs")
+        && head.content_length > 0
+        && !head.expect_continue
+    {
+        drain_body(&mut reader, head.content_length);
+    }
+    match (head.method.as_str(), head.path.as_str()) {
+        ("GET", "/healthz") => {
+            let body = format!(
+                "{{\"ok\":true,\"queue_len\":{},\"queue_capacity\":{},\
+                 \"draining\":{}}}",
+                hub.queue.len(),
+                hub.queue.capacity(),
+                stop.load(Ordering::SeqCst),
+            );
+            let _ = respond_json(&mut w, 200, "OK", &[], &body);
+        }
+        ("GET", "/stats") => {
+            let (accepted, rejected, done, failed, cached) =
+                hub.counters();
+            let body = format!(
+                "{{\"connections\":{},\"active_connections\":{},\
+                 \"requests\":{},\"throttled_429\":{},\"refused_503\":{},\
+                 \"queue_len\":{},\"queue_capacity\":{},\
+                 \"jobs\":{{\"accepted\":{accepted},\
+                 \"rejected\":{rejected},\"done\":{done},\
+                 \"failed\":{failed},\"cached\":{cached}}}}}",
+                c.connections.load(Ordering::Relaxed),
+                c.active.load(Ordering::SeqCst),
+                c.requests.load(Ordering::Relaxed),
+                c.throttled.load(Ordering::Relaxed),
+                c.refused.load(Ordering::Relaxed),
+                hub.queue.len(),
+                hub.queue.capacity(),
+            );
+            let _ = respond_json(&mut w, 200, "OK", &[], &body);
+        }
+        ("GET", "/cache") => {
+            let body = match cache {
+                Some(cc) => {
+                    let st = cc.stats();
+                    format!(
+                        "{{\"enabled\":true,\"dir\":\"{}\",\
+                         \"entries\":{},\"bytes\":{}}}",
+                        esc(&cc.dir().display().to_string()),
+                        st.entries,
+                        st.bytes,
+                    )
+                }
+                None => "{\"enabled\":false}".to_string(),
+            };
+            let _ = respond_json(&mut w, 200, "OK", &[], &body);
+        }
+        ("POST", "/shutdown") => {
+            let _ = respond_json(
+                &mut w,
+                200,
+                "OK",
+                &[],
+                "{\"draining\":true}",
+            );
+            stop.store(true, Ordering::SeqCst);
+            // Wake the (blocking) accept loop so it observes the flag.
+            // A wildcard bind (0.0.0.0 / ::) is not connectable
+            // everywhere — aim the wake-up at loopback instead.
+            let mut wake = local;
+            if wake.ip().is_unspecified() {
+                wake.set_ip(match wake.ip() {
+                    std::net::IpAddr::V4(_) => {
+                        std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST)
+                    }
+                    std::net::IpAddr::V6(_) => {
+                        std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST)
+                    }
+                });
+            }
+            let _ = TcpStream::connect(wake);
+        }
+        ("POST", "/jobs") => {
+            if head.content_length > MAX_BODY_BYTES {
+                // Under Expect: 100-continue there is nothing to
+                // drain — the client is still waiting on our verdict.
+                if !head.expect_continue {
+                    drain_body(&mut reader, head.content_length);
+                }
+                let _ = respond_json(
+                    &mut w,
+                    413,
+                    "Payload Too Large",
+                    &[],
+                    &err_body(&format!(
+                        "body exceeds {MAX_BODY_BYTES} bytes"
+                    )),
+                );
+                return;
+            }
+            if head.expect_continue {
+                let _ = write!(w, "HTTP/1.1 100 Continue\r\n\r\n");
+                let _ = w.flush();
+            }
+            // Read the body even when about to throttle: closing a
+            // socket with unread request bytes can RST the response
+            // out from under the client.
+            let body = match read_body(&mut reader, head.content_length) {
+                Ok(b) => b,
+                Err(e) => {
+                    let _ = respond_json(
+                        &mut w,
+                        400,
+                        "Bad Request",
+                        &[],
+                        &err_body(&e.to_string()),
+                    );
+                    return;
+                }
+            };
+            if hub.is_saturated() {
+                c.throttled.fetch_add(1, Ordering::Relaxed);
+                let _ = respond_json(
+                    &mut w,
+                    429,
+                    "Too Many Requests",
+                    &[("Retry-After", "1")],
+                    "{\"error\":\"job queue is full; retry\"}",
+                );
+                return;
+            }
+            let _ = write!(
+                w,
+                "HTTP/1.1 200 OK\r\nContent-Type: application/x-ndjson\
+                 \r\nConnection: close\r\n\r\n"
+            );
+            let _ = w.flush();
+            // Session stats land in the hub's live counters.
+            run_session(
+                hub,
+                &body[..],
+                w,
+                &SessionOptions { max_in_flight: lopts.max_in_flight },
+            );
+        }
+        (_, "/healthz" | "/stats" | "/cache" | "/shutdown" | "/jobs") => {
+            let _ = respond_json(
+                &mut w,
+                405,
+                "Method Not Allowed",
+                &[],
+                &err_body(&format!(
+                    "{} not allowed on {}",
+                    head.method, head.path
+                )),
+            );
+        }
+        _ => {
+            let _ = respond_json(
+                &mut w,
+                404,
+                "Not Found",
+                &[],
+                &err_body(&format!("no such endpoint {}", head.path)),
+            );
+        }
+    }
+    let _ = (&stream).flush();
+}
+
+/// Parsed request head (the slice of HTTP/1.1 this gateway speaks).
+struct HttpHead {
+    method: String,
+    path: String,
+    content_length: usize,
+    expect_continue: bool,
+}
+
+/// Read one request head. `Ok(None)` = clean EOF before any bytes (the
+/// client opened and closed an idle connection). The head is capped at
+/// [`MAX_HEAD_BYTES`] / [`MAX_HEADERS`]; chunked request bodies are
+/// rejected (clients must send `Content-Length`).
+fn read_head<R: BufRead>(r: &mut R) -> Result<Option<HttpHead>> {
+    let mut head = r.take(MAX_HEAD_BYTES);
+    let mut line = String::new();
+    if head.read_line(&mut line)? == 0 {
+        return Ok(None);
+    }
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let Some(path) = parts.next() else {
+        bail!("malformed request line {:?}", line.trim_end())
+    };
+    let version = parts.next().unwrap_or("");
+    if !version.starts_with("HTTP/1.") {
+        bail!("unsupported protocol {version:?}");
+    }
+    // Query strings are accepted and ignored.
+    let path = match path.split_once('?') {
+        Some((p, _)) => p.to_string(),
+        None => path.to_string(),
+    };
+    let mut content_length = 0usize;
+    let mut expect_continue = false;
+    for _ in 0..MAX_HEADERS {
+        let mut h = String::new();
+        if head.read_line(&mut h)? == 0 {
+            bail!("eof inside headers");
+        }
+        let h = h.trim_end();
+        if h.is_empty() {
+            return Ok(Some(HttpHead {
+                method,
+                path,
+                content_length,
+                expect_continue,
+            }));
+        }
+        let Some((name, value)) = h.split_once(':') else {
+            bail!("malformed header {h:?}")
+        };
+        let value = value.trim();
+        match name.trim().to_ascii_lowercase().as_str() {
+            "content-length" => {
+                content_length = value
+                    .parse()
+                    .map_err(|_| {
+                        anyhow::anyhow!("bad content-length {value:?}")
+                    })?;
+            }
+            "expect" => {
+                expect_continue = value.eq_ignore_ascii_case("100-continue");
+            }
+            "transfer-encoding" => {
+                bail!("chunked request bodies are not supported");
+            }
+            _ => {}
+        }
+    }
+    bail!("too many headers")
+}
+
+fn read_body<R: BufRead>(r: &mut R, len: usize) -> Result<Vec<u8>> {
+    let mut buf = vec![0u8; len];
+    r.read_exact(&mut buf).context("reading request body")?;
+    Ok(buf)
+}
+
+/// Discard up to `len` request-body bytes (capped at
+/// [`MAX_DRAIN_BYTES`]) before an error response: closing a socket
+/// with unread bytes can RST the reply out from under the client.
+fn drain_body<R: BufRead>(r: &mut R, len: usize) {
+    let _ = std::io::copy(
+        &mut r.take((len as u64).min(MAX_DRAIN_BYTES)),
+        &mut std::io::sink(),
+    );
+}
+
+fn err_body(msg: &str) -> String {
+    format!("{{\"error\":\"{}\"}}", esc(msg))
+}
+
+/// One small self-delimited JSON response (everything except the
+/// streamed `POST /jobs` body).
+fn respond_json<W: Write>(
+    w: &mut W,
+    status: u16,
+    reason: &str,
+    extra: &[(&str, &str)],
+    body: &str,
+) -> std::io::Result<()> {
+    write!(
+        w,
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\
+         \r\nContent-Length: {}\r\nConnection: close\r\n",
+        body.len()
+    )?;
+    for (k, v) in extra {
+        write!(w, "{k}: {v}\r\n")?;
+    }
+    write!(w, "\r\n{body}")?;
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn head_of(req: &str) -> Result<Option<HttpHead>> {
+        read_head(&mut req.as_bytes())
+    }
+
+    #[test]
+    fn parses_a_minimal_request_head() {
+        let h = head_of(
+            "POST /jobs HTTP/1.1\r\nHost: x\r\nContent-Length: 42\r\n\r\n",
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(h.method, "POST");
+        assert_eq!(h.path, "/jobs");
+        assert_eq!(h.content_length, 42);
+        assert!(!h.expect_continue);
+    }
+
+    #[test]
+    fn header_names_are_case_insensitive_and_query_is_stripped() {
+        let h = head_of(
+            "GET /stats?verbose=1 HTTP/1.1\r\ncontent-LENGTH: 7\r\n\
+             Expect: 100-Continue\r\n\r\n",
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(h.path, "/stats");
+        assert_eq!(h.content_length, 7);
+        assert!(h.expect_continue);
+    }
+
+    #[test]
+    fn rejects_malformed_heads() {
+        assert!(head_of("").unwrap().is_none(), "clean EOF is None");
+        assert!(head_of("GARBAGE\r\n\r\n").is_err());
+        assert!(head_of("GET /x SPDY/3\r\n\r\n").is_err());
+        assert!(head_of("GET /x HTTP/1.1\r\nnocolon\r\n\r\n").is_err());
+        assert!(head_of(
+            "GET /x HTTP/1.1\r\nContent-Length: nan\r\n\r\n"
+        )
+        .is_err());
+        assert!(head_of(
+            "POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n"
+        )
+        .is_err());
+        assert!(
+            head_of("GET /x HTTP/1.1\r\nHost: y\r\n").is_err(),
+            "eof before the blank line"
+        );
+    }
+
+    #[test]
+    fn respond_json_frames_a_complete_response() {
+        let mut out: Vec<u8> = Vec::new();
+        respond_json(
+            &mut out,
+            429,
+            "Too Many Requests",
+            &[("Retry-After", "1")],
+            "{\"error\":\"full\"}",
+        )
+        .unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"));
+        assert!(text.contains("Retry-After: 1\r\n"));
+        assert!(text.contains("Content-Length: 16\r\n"));
+        assert!(text.ends_with("\r\n\r\n{\"error\":\"full\"}"));
+    }
+
+    #[test]
+    fn body_reader_honors_content_length() {
+        let mut input: &[u8] = b"hello worldTRAILING";
+        let body = read_body(&mut input, 11).unwrap();
+        assert_eq!(&body, b"hello world");
+        assert!(read_body(&mut input, 99).is_err(), "short body errors");
+    }
+}

@@ -58,6 +58,17 @@ struct State {
     cancelled: bool,
 }
 
+/// Outcome of a non-blocking [`JobQueue::try_push`].
+#[derive(Debug)]
+pub enum TryPush {
+    /// Enqueued with this sequence number.
+    Pushed(u64),
+    /// Queue at capacity; the spec is handed back for a retry.
+    Full(JobSpec),
+    /// Queue closed or cancelled; the spec is handed back.
+    Closed(JobSpec),
+}
+
 /// Bounded multi-producer multi-consumer priority queue of [`JobSpec`]s.
 pub struct JobQueue {
     state: Mutex<State>,
@@ -97,6 +108,34 @@ impl JobQueue {
         drop(st);
         self.not_empty.notify_one();
         Ok(seq)
+    }
+
+    /// Non-blocking push: never waits, hands the spec back when it
+    /// cannot be enqueued. Lets a caller keep its own critical section
+    /// short — retry with [`Self::wait_not_full`] between attempts.
+    pub fn try_push(&self, spec: JobSpec, priority: i32) -> TryPush {
+        let mut st = self.state.lock().unwrap();
+        if st.closed || st.cancelled {
+            return TryPush::Closed(spec);
+        }
+        if st.heap.len() >= st.capacity {
+            return TryPush::Full(spec);
+        }
+        let seq = st.next_seq;
+        st.next_seq += 1;
+        st.heap.push(Entry { priority, seq, spec });
+        drop(st);
+        self.not_empty.notify_one();
+        TryPush::Pushed(seq)
+    }
+
+    /// Block until the queue has room for a push — or is closed or
+    /// cancelled, after which push attempts fail fast.
+    pub fn wait_not_full(&self) {
+        let mut st = self.state.lock().unwrap();
+        while st.heap.len() >= st.capacity && !st.closed && !st.cancelled {
+            st = self.not_full.wait(st).unwrap();
+        }
     }
 
     /// Take the highest-priority pending job; blocks while the queue is
@@ -149,6 +188,13 @@ impl JobQueue {
     /// Number of pending (not yet popped) jobs.
     pub fn len(&self) -> usize {
         self.state.lock().unwrap().heap.len()
+    }
+
+    /// Maximum number of pending jobs (the bound given to
+    /// [`Self::bounded`], clamped to ≥ 1). `len() >= capacity()` is the
+    /// saturation signal the HTTP gateway turns into `429`.
+    pub fn capacity(&self) -> usize {
+        self.state.lock().unwrap().capacity
     }
 
     pub fn is_empty(&self) -> bool {
@@ -206,6 +252,34 @@ mod tests {
         assert!(q.push(spec(1), 0).is_err());
         assert!(q.pop().is_some());
         assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn capacity_is_reported_and_clamped() {
+        assert_eq!(JobQueue::bounded(4).capacity(), 4);
+        assert_eq!(JobQueue::bounded(0).capacity(), 1);
+    }
+
+    #[test]
+    fn try_push_never_blocks_and_hands_the_spec_back() {
+        let q = JobQueue::bounded(1);
+        let seq = match q.try_push(spec(0), 0) {
+            TryPush::Pushed(seq) => seq,
+            other => panic!("expected Pushed, got {other:?}"),
+        };
+        assert_eq!(seq, 0);
+        match q.try_push(spec(1), 0) {
+            TryPush::Full(s) => assert_eq!(s.cfg.seed, 1),
+            other => panic!("expected Full, got {other:?}"),
+        }
+        assert!(q.pop().is_some());
+        q.wait_not_full(); // room available: returns immediately
+        q.close();
+        match q.try_push(spec(2), 0) {
+            TryPush::Closed(s) => assert_eq!(s.cfg.seed, 2),
+            other => panic!("expected Closed, got {other:?}"),
+        }
+        q.wait_not_full(); // closed: returns immediately
     }
 
     #[test]

@@ -1,33 +1,40 @@
-//! `omgd serve`: long-lived JSONL job loop — the seed of a
-//! request-serving path.
+//! Transport-agnostic JSONL serve sessions over a shared [`JobHub`].
 //!
-//! Protocol (one JSON object per line):
+//! One [`JobHub`] owns the bounded [`JobQueue`], the result router, and
+//! the hub-lifetime counters; any number of concurrent sessions — the
+//! classic stdin/stdout loop of `omgd serve`, or one per HTTP
+//! connection in [`super::net`] — multiplex jobs into the same worker
+//! pool and result cache. Each session speaks the JSONL protocol (one
+//! JSON object per line):
 //!
 //! * request  → `{"kind":"finetune","task":"CoLA","method":"lisa-wor",
 //!   "seed":1,"epochs":4,"priority":5}` (see [`JobSpec::from_json`] for
 //!   the full field set; `priority` is optional, higher runs first)
-//! * control  → `{"cmd":"shutdown"}` stops accepting and drains
+//! * control  → `{"cmd":"shutdown"}` ends the session (input EOF too)
 //! * ack      → `{"accepted":<seq>,"hash":"<spec hash>","label":"..."}`
 //! * result   → `{"seq":N,"label":"...","hash":"...","status":"done",
 //!   "cached":false,"final_metric":X,"tail_loss":X,"steps":N,"secs":X}`
 //!   or `{"seq":N,...,"status":"failed","error":"..."}`
 //! * reject   → `{"error":"...","line":N}`
 //!
-//! Requests are sharded across the worker pool as they arrive; results
-//! stream back in *completion* order (match on `seq`). Acks and rejects
-//! are written from the reader, results from the collector, both behind
-//! one writer lock, each line flushed — a client can pipeline requests
-//! and consume results concurrently.
+//! Results stream back in *completion* order (match on `seq`); a
+//! request's ack always precedes its result line. The hub routes each
+//! result only to the session that submitted it, so concurrent clients
+//! sharing one hub never see each other's lines. Per-session
+//! backpressure is [`SessionOptions::max_in_flight`]: submission of the
+//! next request blocks until a result drains. Full protocol spec with
+//! examples: `docs/serve-protocol.md`.
 
-use super::cache::ResultCache;
 use super::pool::{worker_loop, JobOutcome, JobResult, JobStatus};
-use super::queue::JobQueue;
+use super::queue::{JobQueue, TryPush};
 use super::spec::JobSpec;
-use super::{cached_runner, GridOptions};
+use super::{cached_runner, open_cache, GridOptions};
 use crate::util::json::Json;
 use anyhow::Result;
+use std::collections::HashMap;
 use std::io::{BufRead, Write};
-use std::sync::{mpsc, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Condvar, Mutex};
 
 /// Counters for one serve session.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -39,56 +46,213 @@ pub struct ServeStats {
     pub cached: usize,
 }
 
-/// Serve with the production cache-aware runner.
-pub fn serve<R, W>(input: R, output: W, opts: &GridOptions) -> Result<ServeStats>
-where
-    R: BufRead,
-    W: Write + Send,
-{
-    let cache = ResultCache::open(opts.cache_dir.as_deref())?;
-    serve_with(input, output, opts.workers, |_wid| {
-        cached_runner(&cache, opts.force)
-    })
+/// Per-session knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct SessionOptions {
+    /// Cap on this session's unfinished jobs: submission of the next
+    /// request blocks until a result drains. `0` = unlimited (the stdin
+    /// loop's historical behavior — the bounded queue is then the only
+    /// backpressure).
+    pub max_in_flight: usize,
 }
 
-/// Serve with an arbitrary worker factory (tests inject stubs).
+impl Default for SessionOptions {
+    fn default() -> Self {
+        Self { max_in_flight: 0 }
+    }
+}
+
+/// Shared serving core: the bounded queue plus the seq → session result
+/// routing that lets N concurrent sessions share one worker pool.
 ///
-/// Deadlock discipline: nothing inside the thread scope early-returns —
-/// the queue is always closed before the scope joins, so workers can
-/// never be left blocked on `pop()`.
-pub fn serve_with<R, W, M, F>(
-    input: R,
-    output: W,
+/// Workers drain [`JobHub::queue`] via [`worker_loop`] and send
+/// [`JobResult`]s to a single router thread (one per hub), which
+/// dispatches each result to the reply channel registered by
+/// [`JobHub::submit`]. [`with_hub`] wires all of that up around a
+/// caller-supplied body; [`super::net`] builds the same shape with its
+/// own accept loop.
+pub struct JobHub {
+    pub queue: JobQueue,
+    routes: Mutex<HashMap<u64, mpsc::Sender<JobResult>>>,
+    accepted: AtomicUsize,
+    rejected: AtomicUsize,
+    done: AtomicUsize,
+    failed: AtomicUsize,
+    cached: AtomicUsize,
+}
+
+impl JobHub {
+    /// A hub whose queue holds at most `queue_capacity` pending jobs.
+    pub fn new(queue_capacity: usize) -> Self {
+        Self {
+            queue: JobQueue::bounded(queue_capacity),
+            routes: Mutex::new(HashMap::new()),
+            accepted: AtomicUsize::new(0),
+            rejected: AtomicUsize::new(0),
+            done: AtomicUsize::new(0),
+            failed: AtomicUsize::new(0),
+            cached: AtomicUsize::new(0),
+        }
+    }
+
+    /// True when the pending queue is at capacity — the signal the HTTP
+    /// gateway turns into `429` + `Retry-After`.
+    pub fn is_saturated(&self) -> bool {
+        self.queue.len() >= self.queue.capacity()
+    }
+
+    /// Submit one job; its eventual [`JobResult`] goes to `reply`.
+    /// Blocks while the queue is full; fails only once the hub drains
+    /// (queue closed).
+    ///
+    /// The push and the route registration happen together under the
+    /// routes lock, so a job that completes in microseconds still finds
+    /// its reply channel — results are never lost to that race. The
+    /// push itself is non-blocking ([`JobQueue::try_push`]); waiting
+    /// for queue space happens *outside* the lock, so one session
+    /// stuck on a full queue never stalls result dispatch for the
+    /// others.
+    pub fn submit(
+        &self,
+        mut spec: JobSpec,
+        priority: i32,
+        reply: &mpsc::Sender<JobResult>,
+    ) -> Result<u64> {
+        loop {
+            {
+                let mut routes = self.routes.lock().unwrap();
+                match self.queue.try_push(spec, priority) {
+                    TryPush::Pushed(seq) => {
+                        routes.insert(seq, reply.clone());
+                        self.accepted.fetch_add(1, Ordering::Relaxed);
+                        return Ok(seq);
+                    }
+                    TryPush::Closed(_) => {
+                        anyhow::bail!("job queue is closed")
+                    }
+                    TryPush::Full(s) => spec = s,
+                }
+            }
+            self.queue.wait_not_full();
+        }
+    }
+
+    /// Count one request that never became a job (parse/validation
+    /// reject) so `GET /stats` stays coherent with the live counters.
+    pub fn note_rejected(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Hub-lifetime job counters:
+    /// (accepted, rejected, done, failed, cached) — all updated live.
+    pub fn counters(&self) -> (usize, usize, usize, usize, usize) {
+        (
+            self.accepted.load(Ordering::Relaxed),
+            self.rejected.load(Ordering::Relaxed),
+            self.done.load(Ordering::Relaxed),
+            self.failed.load(Ordering::Relaxed),
+            self.cached.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Router loop: drain worker results, bump counters, hand each
+    /// result to its session's reply channel. A vanished session (send
+    /// fails) is fine — the job still ran and was cached.
+    pub(crate) fn route(&self, rx: mpsc::Receiver<JobResult>) {
+        for r in rx {
+            if r.from_cache {
+                self.cached.fetch_add(1, Ordering::Relaxed);
+            }
+            if r.is_ok() {
+                self.done.fetch_add(1, Ordering::Relaxed);
+            } else {
+                self.failed.fetch_add(1, Ordering::Relaxed);
+            }
+            let reply = self.routes.lock().unwrap().remove(&r.seq);
+            if let Some(tx) = reply {
+                let _ = tx.send(r);
+            }
+        }
+    }
+}
+
+/// Run `body` against a live hub: spawns `workers` worker threads (each
+/// with per-thread state from `make_worker`) plus the result router,
+/// then closes the queue and drains once `body` returns.
+///
+/// Deadlock discipline: nothing between the spawns and `queue.close()`
+/// early-returns, so workers can never be left blocked on `pop()`.
+pub fn with_hub<M, F, T>(
     workers: usize,
+    queue_capacity: usize,
     make_worker: M,
-) -> Result<ServeStats>
+    body: impl FnOnce(&JobHub) -> T,
+) -> T
 where
-    R: BufRead,
-    W: Write + Send,
     M: Fn(usize) -> F + Sync,
     F: FnMut(&JobSpec) -> Result<(JobOutcome, bool)>,
 {
-    let workers = workers.max(1);
-    let queue = JobQueue::bounded((2 * workers).max(8));
-    let out = Mutex::new(output);
-    let (tx, rx) = mpsc::channel::<JobResult>();
-
-    let stats = std::thread::scope(|s| {
+    let hub = JobHub::new(queue_capacity);
+    std::thread::scope(|s| {
+        let (tx, rx) = mpsc::channel::<JobResult>();
         let make = &make_worker;
-        let queue_ref = &queue;
-        for wid in 0..workers {
+        let hub_ref = &hub;
+        for wid in 0..workers.max(1) {
             let tx = tx.clone();
             s.spawn(move || {
                 let mut work = make(wid);
-                worker_loop(queue_ref, &mut work, &tx);
+                worker_loop(&hub_ref.queue, &mut work, &tx);
             });
         }
         drop(tx);
+        let router = s.spawn(move || hub_ref.route(rx));
+        // Catch a panicking body so the queue still gets closed —
+        // otherwise the scoped workers would block in `pop()` forever
+        // and the panic would wedge instead of propagate.
+        let out = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| body(&hub)),
+        );
+        hub.queue.close();
+        router.join().unwrap();
+        match out {
+            Ok(v) => v,
+            Err(payload) => std::panic::resume_unwind(payload),
+        }
+    })
+}
 
+/// Drive one JSONL session: read requests from `input`, submit into
+/// `hub`, write acks/rejects/results to `output`. Returns once input
+/// hits EOF or `{"cmd":"shutdown"}` *and* every job this session
+/// submitted has streamed its result (per-session drain).
+///
+/// A dead sink stops the session: once a write to `output` fails (the
+/// client hung up), no further input lines are read or submitted, so a
+/// vanished client cannot keep feeding the shared pool. Jobs already
+/// submitted still drain — and still populate the cache.
+pub fn run_session<R, W>(
+    hub: &JobHub,
+    input: R,
+    output: W,
+    opts: &SessionOptions,
+) -> ServeStats
+where
+    R: BufRead,
+    W: Write + Send,
+{
+    let out = Mutex::new(output);
+    let (reply_tx, reply_rx) = mpsc::channel::<JobResult>();
+    // (outstanding jobs, drained signal) — per-session backpressure.
+    let in_flight = (Mutex::new(0usize), Condvar::new());
+    let sink_dead = AtomicBool::new(false);
+
+    std::thread::scope(|s| {
         let out_ref = &out;
-        let collector = s.spawn(move || {
+        let infl = &in_flight;
+        let dead = &sink_dead;
+        let writer = s.spawn(move || {
             let (mut done, mut failed, mut cached) = (0usize, 0usize, 0usize);
-            for r in rx {
+            for r in reply_rx {
                 if r.from_cache {
                     cached += 1;
                 }
@@ -97,7 +261,12 @@ where
                 } else {
                     failed += 1;
                 }
-                write_line(out_ref, &result_line(&r));
+                if !write_line(out_ref, &result_line(&r)) {
+                    dead.store(true, Ordering::Relaxed);
+                }
+                let mut n = infl.0.lock().unwrap();
+                *n -= 1;
+                infl.1.notify_all();
             }
             (done, failed, cached)
         });
@@ -105,6 +274,9 @@ where
         let (mut accepted, mut rejected) = (0usize, 0usize);
         let mut lineno = 0usize;
         for line in input.lines() {
+            if dead.load(Ordering::Relaxed) {
+                break; // client hung up: stop consuming input
+            }
             lineno += 1;
             let line = match line {
                 Ok(l) => l,
@@ -118,13 +290,16 @@ where
                 Ok(j) => j,
                 Err(e) => {
                     rejected += 1;
-                    write_line(
+                    hub.note_rejected();
+                    if !write_line(
                         out_ref,
                         &format!(
                             "{{\"error\":\"{}\",\"line\":{lineno}}}",
                             esc(&e.to_string())
                         ),
-                    );
+                    ) {
+                        dead.store(true, Ordering::Relaxed);
+                    }
                     continue;
                 }
             };
@@ -133,53 +308,124 @@ where
             }
             let priority =
                 j.get("priority").and_then(Json::as_f64).unwrap_or(0.0) as i32;
-            match JobSpec::from_json(&j) {
-                Ok(spec) => {
-                    let (hash, label) = (spec.hash_hex(), spec.label());
-                    // Hold the writer lock across push + ack: a cached
-                    // job can complete in microseconds, and the
-                    // protocol promises the ack (seq ↔ request
-                    // mapping) reaches the client before its result
-                    // line. Workers drain the queue without this lock,
-                    // so a full-queue push still makes progress.
-                    let mut o = out_ref.lock().unwrap();
-                    match queue.push(spec, priority) {
-                        Ok(seq) => {
-                            accepted += 1;
-                            let _ = writeln!(
-                                o,
-                                "{{\"accepted\":{seq},\"hash\":\
-                                 \"{hash}\",\"label\":\"{}\"}}",
-                                esc(&label)
-                            );
-                            let _ = o.flush();
-                        }
-                        Err(_) => rejected += 1,
-                    }
-                }
+            let spec = match JobSpec::from_json(&j) {
+                Ok(spec) => spec,
                 Err(e) => {
                     rejected += 1;
-                    write_line(
+                    hub.note_rejected();
+                    if !write_line(
                         out_ref,
                         &format!(
                             "{{\"error\":\"{}\",\"line\":{lineno}}}",
                             esc(&format!("{e:#}"))
                         ),
-                    );
+                    ) {
+                        dead.store(true, Ordering::Relaxed);
+                    }
+                    continue;
+                }
+            };
+            let (hash, label) = (spec.hash_hex(), spec.label());
+            // Backpressure: cap this session's outstanding jobs,
+            // draining a result before submitting the next request.
+            {
+                let mut n = infl.0.lock().unwrap();
+                while opts.max_in_flight > 0 && *n >= opts.max_in_flight {
+                    n = infl.1.wait(n).unwrap();
+                }
+                *n += 1;
+            }
+            // Hold the writer lock across submit + ack: a cached job
+            // can complete in microseconds, and the protocol promises
+            // the ack (seq ↔ request mapping) reaches the client before
+            // its result line. The hub drains without this lock, so a
+            // full-queue submit still makes progress.
+            let mut o = out_ref.lock().unwrap();
+            match hub.submit(spec, priority, &reply_tx) {
+                Ok(seq) => {
+                    accepted += 1;
+                    let wrote = writeln!(
+                        o,
+                        "{{\"accepted\":{seq},\"hash\":\
+                         \"{hash}\",\"label\":\"{}\"}}",
+                        esc(&label)
+                    )
+                    .is_ok()
+                        && o.flush().is_ok();
+                    if !wrote {
+                        dead.store(true, Ordering::Relaxed);
+                    }
+                }
+                Err(_) => {
+                    // Hub is draining: undo the in-flight reservation
+                    // and keep the one-ack-or-reject-per-line promise.
+                    rejected += 1;
+                    hub.note_rejected();
+                    let wrote = writeln!(
+                        o,
+                        "{{\"error\":\"job queue is closed\",\
+                         \"line\":{lineno}}}"
+                    )
+                    .is_ok()
+                        && o.flush().is_ok();
+                    drop(o);
+                    if !wrote {
+                        dead.store(true, Ordering::Relaxed);
+                    }
+                    let mut n = infl.0.lock().unwrap();
+                    *n -= 1;
+                    infl.1.notify_all();
                 }
             }
         }
-        queue.close();
-        let (done, failed, cached) = collector.join().unwrap();
+        // The writer ends once the hub dispatches this session's last
+        // outstanding result (each routed sender clone drops as it is
+        // consumed) — the per-session drain.
+        drop(reply_tx);
+        let (done, failed, cached) = writer.join().unwrap();
         ServeStats { accepted, rejected, done, failed, cached }
-    });
-    Ok(stats)
+    })
 }
 
-fn write_line<W: Write>(out: &Mutex<W>, line: &str) {
+/// Serve one stdin/stdout-style session with the production cache-aware
+/// runner (runs the configured cache GC policy at open).
+pub fn serve<R, W>(input: R, output: W, opts: &GridOptions) -> Result<ServeStats>
+where
+    R: BufRead,
+    W: Write + Send,
+{
+    let cache = open_cache(opts)?;
+    serve_with(input, output, opts.workers, |_wid| {
+        cached_runner(&cache, opts.force)
+    })
+}
+
+/// Serve one session with an arbitrary worker factory (tests inject
+/// stubs): a hub with the historical `(2·workers).max(8)` queue bound
+/// and an unthrottled session.
+pub fn serve_with<R, W, M, F>(
+    input: R,
+    output: W,
+    workers: usize,
+    make_worker: M,
+) -> Result<ServeStats>
+where
+    R: BufRead,
+    W: Write + Send,
+    M: Fn(usize) -> F + Sync,
+    F: FnMut(&JobSpec) -> Result<(JobOutcome, bool)>,
+{
+    let workers = workers.max(1);
+    Ok(with_hub(workers, (2 * workers).max(8), make_worker, |hub| {
+        run_session(hub, input, output, &SessionOptions::default())
+    }))
+}
+
+/// Write one protocol line and flush (clients read results live).
+/// `false` = the sink is dead (client hung up).
+fn write_line<W: Write>(out: &Mutex<W>, line: &str) -> bool {
     let mut o = out.lock().unwrap();
-    let _ = writeln!(o, "{line}");
-    let _ = o.flush(); // stream each line: clients read results live
+    writeln!(o, "{line}").is_ok() && o.flush().is_ok()
 }
 
 fn result_line(r: &JobResult) -> String {
@@ -251,6 +497,13 @@ mod tests {
         (stats, lines)
     }
 
+    fn request(seed: u64) -> String {
+        format!(
+            "{{\"kind\":\"finetune\",\"task\":\"CoLA\",\"seed\":{seed},\
+             \"epochs\":1}}\n"
+        )
+    }
+
     #[test]
     fn serves_requests_and_streams_results() {
         let input = "\
@@ -303,5 +556,82 @@ this is not json\n\
             .expect("one result line");
         assert_eq!(r.at("status").as_str(), Some("failed"));
         assert!(r.at("error").as_str().unwrap().contains("rigged"));
+    }
+
+    #[test]
+    fn in_flight_cap_still_completes_every_job() {
+        let input: String = (0..6).map(request).collect();
+        let mut out: Vec<u8> = Vec::new();
+        let stats = with_hub(2, 8, stub_factory, |hub| {
+            run_session(
+                hub,
+                input.as_bytes(),
+                &mut out,
+                &SessionOptions { max_in_flight: 1 },
+            )
+        });
+        assert_eq!(stats.accepted, 6);
+        assert_eq!(stats.done, 6);
+        let text = String::from_utf8(out).unwrap();
+        assert_eq!(text.lines().count(), 12, "6 acks + 6 results");
+        // With one in-flight slot the session fully drains each job
+        // before submitting the next: ack/result strictly alternate.
+        for (i, l) in text.lines().enumerate() {
+            let j = Json::parse(l).unwrap();
+            if i % 2 == 0 {
+                assert!(j.get("accepted").is_some(), "line {i}: {l}");
+            } else {
+                assert!(j.get("status").is_some(), "line {i}: {l}");
+            }
+        }
+    }
+
+    #[test]
+    fn concurrent_sessions_share_a_hub_without_crosstalk() {
+        let input_a: String = (0..4).map(request).collect();
+        let input_b: String = (10..14).map(request).collect();
+        let ((st_a, out_a), (st_b, out_b)) =
+            with_hub(2, 4, stub_factory, |hub| {
+                std::thread::scope(|s| {
+                    let a = s.spawn(|| {
+                        let mut out = Vec::new();
+                        let st = run_session(
+                            hub,
+                            input_a.as_bytes(),
+                            &mut out,
+                            &SessionOptions { max_in_flight: 2 },
+                        );
+                        (st, out)
+                    });
+                    let b = s.spawn(|| {
+                        let mut out = Vec::new();
+                        let st = run_session(
+                            hub,
+                            input_b.as_bytes(),
+                            &mut out,
+                            &SessionOptions { max_in_flight: 2 },
+                        );
+                        (st, out)
+                    });
+                    (a.join().unwrap(), b.join().unwrap())
+                })
+            });
+        assert_eq!((st_a.accepted, st_a.done), (4, 4));
+        assert_eq!((st_b.accepted, st_b.done), (4, 4));
+        // Each session sees exactly its own results (metric = seed+0.5)
+        // even though both drained through one queue and worker pool.
+        let metrics = |out: Vec<u8>| -> Vec<f64> {
+            let mut m: Vec<f64> = String::from_utf8(out)
+                .unwrap()
+                .lines()
+                .map(|l| Json::parse(l).unwrap())
+                .filter(|j| j.get("status").is_some())
+                .map(|j| j.at("final_metric").as_f64().unwrap())
+                .collect();
+            m.sort_by(f64::total_cmp);
+            m
+        };
+        assert_eq!(metrics(out_a), vec![0.5, 1.5, 2.5, 3.5]);
+        assert_eq!(metrics(out_b), vec![10.5, 11.5, 12.5, 13.5]);
     }
 }

@@ -12,7 +12,10 @@
 //!   the PJRT runtime ([`runtime`]) that executes AOT-compiled HLO, and
 //!   the job-orchestration subsystem ([`jobs`]): hashed [`jobs::JobSpec`]
 //!   grid cells sharded across a panic-isolated worker pool, with an
-//!   on-disk result cache and `omgd grid` / `omgd serve` front-ends.
+//!   on-disk result cache (age/size GC), transport-agnostic serve
+//!   sessions over a shared [`jobs::JobHub`], and `omgd grid` /
+//!   `omgd serve` front-ends including the HTTP/1.1 gateway
+//!   ([`jobs::net`], `omgd serve --listen`).
 //! * **L2 (python/compile, build-time)** — JAX models over a flat
 //!   parameter vector, lowered once to HLO text.
 //! * **L1 (python/compile/kernels, build-time)** — Pallas masked-update

@@ -19,11 +19,19 @@
 //!     --cache-dir DIR                 cache root (target/omgd-cache)
 //!     --out results/grid.csv          deterministic per-cell aggregate
 //!     --curves results/curves.csv     per-step loss curves per cell
-//!   serve                             long-lived loop: JSONL job
-//!                                     requests on stdin → JSONL results
-//!                                     on stdout (same worker pool +
-//!                                     cache; see jobs::serve docs)
+//!   serve                             long-lived job service: JSONL on
+//!                                     stdin/stdout, or — with --listen
+//!                                     — an HTTP/1.1 gateway serving N
+//!                                     concurrent clients from one
+//!                                     worker pool + cache (docs/
+//!                                     serve-protocol.md)
+//!     --listen 127.0.0.1:8080         bind an HTTP gateway (:0 = any
+//!                                     free port, printed to stderr)
 //!     --workers N --force --cache-dir DIR
+//!     --max-conns N --max-in-flight N --queue-cap N   (HTTP mode only)
+//!   cache-gc                          prune the result cache by age
+//!                                     and/or total size
+//!     --max-age-secs N --max-bytes N [--dry-run] [--cache-dir DIR]
 //!
 //! Every flag has a default; `omgd <cmd> --help` lists them.
 
@@ -34,7 +42,10 @@ use omgd::config::{Method, OptFamily, RunConfig, Schedule};
 use omgd::data::{ClassTask, Corpus, CorpusConfig, LinRegData};
 use omgd::experiments::{finetune_spec, pretrain_config, FinetuneSetup,
                         PretrainSetup};
-use omgd::jobs::{run_grid, ExperimentKind, GridOptions, JobSpec};
+use omgd::jobs::{
+    run_grid, ExperimentKind, GcPolicy, GridOptions, JobSpec,
+    ListenOptions, ResultCache,
+};
 use omgd::memory::{breakdown, ArchSpec, MemBreakdown, MemPolicy};
 use omgd::metrics::CsvWriter;
 use omgd::quadratic::{loglog_slope, run_mean, GradForm, QuadParams};
@@ -70,6 +81,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "memory" => cmd_memory(args),
         "grid" => cmd_grid(args),
         "serve" => cmd_serve(args),
+        "cache-gc" => cmd_cache_gc(args),
         "" | "help" | "--help" => {
             print!("{}", USAGE);
             Ok(())
@@ -100,9 +112,19 @@ USAGE: omgd <subcommand> [flags]
     --kind finetune --tasks CoLA --methods full,lisa,lisa-wor
     --seeds 0,1,2 --keep-ratios 0.5 --epochs 4 --workers 4
     [--force] [--cache-dir DIR] [--out results/grid.csv]
-  serve        accept JSONL job requests on stdin, stream JSONL
-               results on stdout (long-lived; {\"cmd\":\"shutdown\"} ends)
+  serve        long-lived job service sharing one worker pool + cache
+               stdin mode: JSONL requests in, JSONL results out
+               ({\"cmd\":\"shutdown\"} or EOF ends)
+               HTTP mode (--listen): POST /jobs streams NDJSON results;
+               GET /healthz /stats /cache; POST /shutdown drains
+               (protocol: docs/serve-protocol.md)
     --workers 4 [--force] [--cache-dir DIR]
+    [--cache-max-age-secs N] [--cache-max-bytes N]
+    HTTP mode only: [--listen 127.0.0.1:8080] [--max-conns 64]
+    [--max-in-flight 32] [--queue-cap N]
+  cache-gc     prune the result cache (age cap, then size cap evicting
+               oldest-write-first); see docs/operations.md
+    --max-age-secs N --max-bytes N [--dry-run] [--cache-dir DIR]
 ";
 
 fn cmd_info(args: &Args) -> Result<()> {
@@ -465,6 +487,11 @@ fn grid_options_from_args(args: &Args) -> Result<GridOptions> {
         workers: args.usize_or("workers", omgd::jobs::default_workers())?,
         force: args.bool("force"),
         cache_dir: args.get("cache-dir").map(String::from),
+        gc: GcPolicy {
+            max_age_secs: args.opt_u64("cache-max-age-secs")?,
+            max_bytes: args.opt_u64("cache-max-bytes")?,
+            dry_run: false,
+        },
     })
 }
 
@@ -595,9 +622,28 @@ fn cmd_grid(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `omgd serve`: long-lived JSONL job loop on stdin/stdout.
+/// `omgd serve`: JSONL job loop on stdin/stdout, or — with `--listen`
+/// — the HTTP/1.1 gateway serving concurrent clients from one pool.
 fn cmd_serve(args: &Args) -> Result<()> {
     let opts = grid_options_from_args(args)?;
+    if let Some(addr) = args.get("listen") {
+        let lopts = ListenOptions {
+            max_conns: args.usize_or("max-conns", 64)?,
+            max_in_flight: args.usize_or("max-in-flight", 32)?,
+            queue_capacity: args.usize_or("queue-cap", 0)?,
+            ..ListenOptions::default()
+        };
+        let stats = omgd::jobs::net::serve_listen(addr, &opts, &lopts)?;
+        eprintln!(
+            "gateway drained: {} connection(s), {} request(s), \
+             {} throttled (429), {} refused (503); jobs: {} accepted, \
+             {} rejected, {} ok, {} failed, {} from cache",
+            stats.connections, stats.requests, stats.throttled,
+            stats.refused, stats.jobs.accepted, stats.jobs.rejected,
+            stats.jobs.done, stats.jobs.failed, stats.jobs.cached
+        );
+        return Ok(());
+    }
     eprintln!(
         "omgd serve: {} worker(s); JSONL requests on stdin, results on \
          stdout ({{\"cmd\":\"shutdown\"}} or EOF ends)",
@@ -611,6 +657,35 @@ fn cmd_serve(args: &Args) -> Result<()> {
          {} from cache",
         stats.accepted, stats.rejected, stats.done, stats.failed,
         stats.cached
+    );
+    Ok(())
+}
+
+/// `omgd cache-gc`: one explicit GC pass over the result cache.
+fn cmd_cache_gc(args: &Args) -> Result<()> {
+    let policy = GcPolicy {
+        max_age_secs: args.opt_u64("max-age-secs")?,
+        max_bytes: args.opt_u64("max-bytes")?,
+        dry_run: args.bool("dry-run"),
+    };
+    if policy.is_noop() {
+        bail!(
+            "nothing to do: pass --max-age-secs and/or --max-bytes \
+             (see docs/operations.md)"
+        );
+    }
+    let cache = ResultCache::open(args.get("cache-dir"))?;
+    let st = cache.gc(&policy)?;
+    println!(
+        "cache {}: scanned {} entries; {} {} ({} bytes); {} kept \
+         ({} bytes)",
+        cache.dir().display(),
+        st.scanned,
+        if policy.dry_run { "would evict" } else { "evicted" },
+        st.evicted,
+        st.evicted_bytes,
+        st.kept,
+        st.kept_bytes,
     );
     Ok(())
 }

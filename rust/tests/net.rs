@@ -1,0 +1,296 @@
+//! Integration tests for the HTTP gateway (`jobs::net`) over real
+//! loopback sockets, with stub workers — no artifacts, no PJRT.
+//!
+//! Under test: the acceptance criteria of the gateway — ≥2 concurrent
+//! clients share one worker pool with results routed back to the right
+//! connection (matched on `seq`), a saturated queue answers `429` +
+//! `Retry-After`, and `POST /shutdown` drains gracefully.
+
+use omgd::jobs::{
+    run_gateway, GatewayStats, JobOutcome, JobSpec, ListenOptions,
+};
+use omgd::util::json::Json;
+use std::collections::{BTreeMap, BTreeSet};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+fn stub_outcome(spec: &JobSpec) -> JobOutcome {
+    JobOutcome {
+        final_metric: spec.cfg.seed as f64 + 0.5,
+        tail_loss: 0.25,
+        steps: 2,
+        train_secs: 0.0,
+        loss_series: vec![(0, 1.0)],
+        eval_series: vec![],
+    }
+}
+
+fn request_line(seed: u64) -> String {
+    format!(
+        "{{\"kind\":\"finetune\",\"task\":\"CoLA\",\"seed\":{seed},\
+         \"epochs\":1}}\n"
+    )
+}
+
+/// Start a gateway on a free loopback port with `workers` stub workers
+/// that sleep ~10ms per job (so concurrent clients really overlap).
+fn start_gateway(
+    workers: usize,
+    lopts: ListenOptions,
+) -> (SocketAddr, std::thread::JoinHandle<GatewayStats>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let handle = std::thread::spawn(move || {
+        run_gateway(listener, workers, &lopts, None, |_wid| {
+            |spec: &JobSpec| {
+                std::thread::sleep(Duration::from_millis(10));
+                Ok((stub_outcome(spec), false))
+            }
+        })
+        .unwrap()
+    });
+    (addr, handle)
+}
+
+/// One HTTP/1.1 request; returns (status, headers, body). The body is
+/// read to EOF (every gateway response is `Connection: close`).
+fn http(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    body: &str,
+) -> (u16, BTreeMap<String, String>, String) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    write!(
+        stream,
+        "{method} {path} HTTP/1.1\r\nHost: omgd-test\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    stream.flush().unwrap();
+    let mut r = BufReader::new(stream);
+    let mut status_line = String::new();
+    r.read_line(&mut status_line).unwrap();
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .expect("status code")
+        .parse()
+        .unwrap();
+    let mut headers = BTreeMap::new();
+    loop {
+        let mut h = String::new();
+        r.read_line(&mut h).unwrap();
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            headers
+                .insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
+        }
+    }
+    let mut body = String::new();
+    r.read_to_string(&mut body).unwrap();
+    (status, headers, body)
+}
+
+/// Parse a streamed NDJSON `/jobs` response into (acks, results).
+fn split_stream(body: &str) -> (Vec<Json>, Vec<Json>) {
+    let lines: Vec<Json> = body
+        .lines()
+        .map(|l| Json::parse(l).expect("NDJSON line"))
+        .collect();
+    let acks = lines
+        .iter()
+        .filter(|j| j.get("accepted").is_some())
+        .cloned()
+        .collect();
+    let results = lines
+        .iter()
+        .filter(|j| j.get("status").is_some())
+        .cloned()
+        .collect();
+    (acks, results)
+}
+
+#[test]
+fn two_concurrent_clients_share_one_pool_without_crosstalk() {
+    let (addr, gateway) = start_gateway(2, ListenOptions::default());
+
+    let post = |seeds: std::ops::Range<u64>| {
+        let body: String = seeds.clone().map(request_line).collect();
+        let (status, headers, text) = http(addr, "POST", "/jobs", &body);
+        assert_eq!(status, 200);
+        assert_eq!(
+            headers.get("content-type").map(String::as_str),
+            Some("application/x-ndjson")
+        );
+        let (acks, results) = split_stream(&text);
+        assert_eq!(acks.len(), seeds.clone().count());
+        assert_eq!(results.len(), acks.len());
+        // Acks arrive in request order: ack i ↔ the i-th posted seed.
+        let seq_to_seed: BTreeMap<u64, u64> = acks
+            .iter()
+            .zip(seeds)
+            .map(|(a, seed)| {
+                (a.at("accepted").as_f64().unwrap() as u64, seed)
+            })
+            .collect();
+        // Every streamed result belongs to THIS client and carries the
+        // outcome of its own seed (metric = seed + 0.5).
+        for r in &results {
+            let seq = r.at("seq").as_f64().unwrap() as u64;
+            let seed = *seq_to_seed
+                .get(&seq)
+                .expect("result seq matches one of this client's acks");
+            assert_eq!(r.at("status").as_str(), Some("done"));
+            assert_eq!(
+                r.at("final_metric").as_f64().unwrap(),
+                seed as f64 + 0.5
+            );
+        }
+        seq_to_seed.keys().copied().collect::<BTreeSet<u64>>()
+    };
+
+    let (seqs_a, seqs_b) = std::thread::scope(|s| {
+        let a = s.spawn(|| post(0..4));
+        let b = s.spawn(|| post(10..14));
+        (a.join().unwrap(), b.join().unwrap())
+    });
+    // One shared queue: the global seq namespace never collides.
+    assert!(seqs_a.is_disjoint(&seqs_b));
+    assert_eq!(seqs_a.len() + seqs_b.len(), 8);
+
+    let (status, _, body) = http(addr, "POST", "/shutdown", "");
+    assert_eq!(status, 200);
+    assert!(body.contains("draining"));
+    let stats = gateway.join().unwrap();
+    assert_eq!(stats.jobs.accepted, 8);
+    assert_eq!(stats.jobs.done, 8);
+    assert_eq!(stats.jobs.failed, 0);
+    assert!(stats.connections >= 3, "2 × POST /jobs + shutdown");
+}
+
+#[test]
+fn saturated_queue_returns_429_with_retry_after() {
+    // 1 worker, queue of 1: park the worker, fill the queue, then a new
+    // POST /jobs must bounce with 429 instead of queueing.
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let (started_tx, started_rx) = mpsc::channel::<()>();
+    let (release_tx, release_rx) = mpsc::channel::<()>();
+    let started_tx = Arc::new(Mutex::new(started_tx));
+    let release_rx = Arc::new(Mutex::new(release_rx));
+    let lopts = ListenOptions {
+        queue_capacity: 1,
+        ..ListenOptions::default()
+    };
+    let gateway = std::thread::spawn(move || {
+        run_gateway(listener, 1, &lopts, None, |_wid| {
+            let started = Arc::clone(&started_tx);
+            let release = Arc::clone(&release_rx);
+            move |spec: &JobSpec| {
+                started.lock().unwrap().send(()).ok();
+                release.lock().unwrap().recv().ok();
+                Ok((stub_outcome(spec), false))
+            }
+        })
+        .unwrap()
+    });
+
+    // Client A: two jobs. The worker parks on job 1; job 2 fills the
+    // bounded queue.
+    let blocked_client = std::thread::spawn(move || {
+        let body: String = (0..2).map(request_line).collect();
+        http(addr, "POST", "/jobs", &body)
+    });
+    started_rx
+        .recv_timeout(Duration::from_secs(10))
+        .expect("worker picked up job 1");
+    // Wait until job 2 is actually queued (queue_len goes to 1).
+    let mut saturated = false;
+    for _ in 0..400 {
+        let (status, _, body) = http(addr, "GET", "/healthz", "");
+        assert_eq!(status, 200);
+        let j = Json::parse(&body).unwrap();
+        if j.at("queue_len").as_usize() == Some(1) {
+            saturated = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(saturated, "queue never filled");
+
+    let (status, headers, body) =
+        http(addr, "POST", "/jobs", &request_line(7));
+    assert_eq!(status, 429);
+    assert_eq!(headers.get("retry-after").map(String::as_str), Some("1"));
+    assert!(body.contains("queue is full"));
+
+    // Un-park the worker; client A's stream completes normally.
+    release_tx.send(()).unwrap();
+    release_tx.send(()).unwrap();
+    let (status, _, text) = blocked_client.join().unwrap();
+    assert_eq!(status, 200);
+    let (acks, results) = split_stream(&text);
+    assert_eq!((acks.len(), results.len()), (2, 2));
+
+    let (status, _, _) = http(addr, "POST", "/shutdown", "");
+    assert_eq!(status, 200);
+    let stats = gateway.join().unwrap();
+    assert_eq!(stats.throttled, 1);
+    assert_eq!(stats.jobs.done, 2);
+}
+
+#[test]
+fn control_endpoints_and_error_shapes() {
+    let (addr, gateway) = start_gateway(1, ListenOptions::default());
+
+    let (status, _, body) = http(addr, "GET", "/healthz", "");
+    assert_eq!(status, 200);
+    let j = Json::parse(&body).unwrap();
+    assert_eq!(j.at("ok").as_bool(), Some(true));
+    assert_eq!(j.at("draining").as_bool(), Some(false));
+
+    // No cache was wired into this test gateway.
+    let (status, _, body) = http(addr, "GET", "/cache", "");
+    assert_eq!(status, 200);
+    let j = Json::parse(&body).unwrap();
+    assert_eq!(j.at("enabled").as_bool(), Some(false));
+
+    let (status, _, body) = http(addr, "GET", "/stats", "");
+    assert_eq!(status, 200);
+    let j = Json::parse(&body).unwrap();
+    assert!(j.at("jobs").get("accepted").is_some());
+
+    let (status, _, body) = http(addr, "GET", "/nope", "");
+    assert_eq!(status, 404);
+    assert!(Json::parse(&body).unwrap().get("error").is_some());
+
+    let (status, _, _) = http(addr, "GET", "/jobs", "");
+    assert_eq!(status, 405, "wrong method on a known path");
+
+    // Bad job lines inside a stream are per-line rejects, not HTTP
+    // errors.
+    let body = format!("not json\n{}", request_line(3));
+    let (status, _, text) = http(addr, "POST", "/jobs", &body);
+    assert_eq!(status, 200);
+    let (acks, results) = split_stream(&text);
+    assert_eq!((acks.len(), results.len()), (1, 1));
+    assert!(text.lines().any(|l| l.contains("\"error\"")));
+
+    let (status, _, _) = http(addr, "POST", "/shutdown", "");
+    assert_eq!(status, 200);
+    let stats = gateway.join().unwrap();
+    assert_eq!(stats.jobs.rejected, 1);
+    assert_eq!(stats.jobs.done, 1);
+    assert_eq!(stats.refused, 0);
+}
