@@ -1,16 +1,26 @@
 #!/usr/bin/env bash
 # CI entry point: format, lint, and test the rust crate with bench
-# runtimes scaled down so grid smoke runs finish in CI time.
+# runtimes scaled down so grid smoke runs finish in CI time, then a
+# distributed smoke stage that drives serve --listen + worker +
+# grid --remote end to end over loopback.
 #
-# Usage: ./ci.sh            # full gate
+# Usage: ./ci.sh                      # full gate
 #        OMGD_BENCH_SCALE=1 ./ci.sh   # paper-shaped runtimes
+#        OMGD_CI_SKIP_SMOKE=1 ./ci.sh # skip the distributed smoke
 set -euo pipefail
 cd "$(dirname "$0")/rust"
+
+# Self-describing CI logs: the toolchain is pinned by
+# ../rust-toolchain.toml, so print what actually resolved.
+echo "== toolchain"
+rustc --version
+cargo --version
 
 # Shrink epochs/steps for smoke runs unless the caller pinned a scale
 # (see experiments::bench_scale; value must be finite and in (0, 1]).
 export OMGD_BENCH_SCALE="${OMGD_BENCH_SCALE:-0.05}"
-# Keep CI deterministic and small: single grid worker unless overridden.
+# Keep CI deterministic and small: single grid worker unless overridden
+# (the ci.yml matrix also runs OMGD_WORKERS=4).
 export OMGD_WORKERS="${OMGD_WORKERS:-1}"
 
 echo "== cargo fmt --check"
@@ -26,5 +36,88 @@ RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 
 echo "== cargo test (OMGD_BENCH_SCALE=$OMGD_BENCH_SCALE)"
 cargo test -q
+
+# ---------------------------------------------------------------------
+# Distributed smoke: boot a coordinator-only gateway, attach one
+# worker agent, run a tiny grid through `--remote`, and diff its CSV
+# against the same grid on the local pool. The cells fail fast in CI
+# (no artifacts are generated here) — which is exactly what we want:
+# the lease/report/aggregate path is exercised end to end, and failed
+# cells must aggregate byte-identically on both paths too.
+# ---------------------------------------------------------------------
+if [[ "${OMGD_CI_SKIP_SMOKE:-0}" == "1" ]]; then
+  echo "== distributed smoke: skipped (OMGD_CI_SKIP_SMOKE=1)"
+else
+  echo "== distributed smoke: serve --listen + worker + grid --remote"
+  cargo build -q --bin omgd
+  BIN=target/debug/omgd
+  SMOKE=$(mktemp -d)
+  SERVE_PID=""
+  WORKER_PID=""
+  cleanup() {
+    [[ -n "$WORKER_PID" ]] && kill "$WORKER_PID" 2>/dev/null || true
+    [[ -n "$SERVE_PID" ]] && kill "$SERVE_PID" 2>/dev/null || true
+    rm -rf "$SMOKE"
+  }
+  trap cleanup EXIT
+
+  GRID_ARGS=(--kind finetune --tasks CoLA --methods full,lisa-wor
+             --seeds 0,1 --epochs 1)
+
+  "$BIN" serve --listen 127.0.0.1:0 --workers 0 --poll-secs 2 \
+      --cache-dir "$SMOKE/gateway-cache" 2> "$SMOKE/serve.log" &
+  SERVE_PID=$!
+  ADDR=""
+  for _ in $(seq 1 100); do
+    ADDR=$(sed -n 's!.*listening on http://\([0-9.]*:[0-9]*\).*!\1!p' \
+        "$SMOKE/serve.log" | head -n1)
+    [[ -n "$ADDR" ]] && break
+    sleep 0.1
+  done
+  if [[ -z "$ADDR" ]]; then
+    echo "distributed smoke FAILED: gateway never bound" >&2
+    cat "$SMOKE/serve.log" >&2
+    exit 1
+  fi
+  echo "   gateway on $ADDR"
+
+  "$BIN" worker --connect "$ADDR" --workers 2 --id ci-smoke \
+      --cache-dir "$SMOKE/worker-cache" \
+      --artifact-store "$SMOKE/worker-store" 2> "$SMOKE/worker.log" &
+  WORKER_PID=$!
+
+  # Remote run (cells fail without artifacts → non-zero exit; the CSV
+  # aggregate is still written and is what the smoke checks).
+  "$BIN" grid --remote "$ADDR" "${GRID_ARGS[@]}" \
+      --out "$SMOKE/remote.csv" > "$SMOKE/remote-grid.log" 2>&1 || true
+  # Local-pool run of the identical grid, isolated cache.
+  "$BIN" grid "${GRID_ARGS[@]}" --workers 1 \
+      --cache-dir "$SMOKE/local-cache" \
+      --out "$SMOKE/local.csv" > "$SMOKE/local-grid.log" 2>&1 || true
+
+  if [[ ! -s "$SMOKE/remote.csv" || ! -s "$SMOKE/local.csv" ]]; then
+    echo "distributed smoke FAILED: a grid wrote no CSV" >&2
+    tail -n 40 "$SMOKE"/*.log >&2
+    exit 1
+  fi
+  if ! diff -u "$SMOKE/local.csv" "$SMOKE/remote.csv" >&2; then
+    echo "distributed smoke FAILED: remote aggregate differs" >&2
+    tail -n 40 "$SMOKE"/*.log >&2
+    exit 1
+  fi
+
+  # Drain the gateway (bash /dev/tcp: no curl dependency) and let the
+  # worker notice and exit on its own.
+  HOST="${ADDR%:*}"; PORT="${ADDR##*:}"
+  exec 3<>"/dev/tcp/$HOST/$PORT"
+  printf 'POST /shutdown HTTP/1.1\r\nHost: ci\r\nContent-Length: 0\r\nConnection: close\r\n\r\n' >&3
+  cat <&3 > /dev/null || true
+  exec 3>&- || true
+  wait "$SERVE_PID" || true
+  SERVE_PID=""
+  wait "$WORKER_PID" || true
+  WORKER_PID=""
+  echo "   distributed smoke passed (remote CSV byte-identical to local)"
+fi
 
 echo "CI gate passed."

@@ -55,6 +55,15 @@ impl Args {
         self.get(name).unwrap_or(default).to_string()
     }
 
+    /// A flag that has no sensible default (`omgd worker --connect`):
+    /// absent is an error naming the flag and what it expects.
+    pub fn require(&self, name: &str, what: &str) -> Result<String> {
+        match self.get(name) {
+            Some(v) if !v.is_empty() && v != "true" => Ok(v.to_string()),
+            _ => bail!("--{name} <{what}> is required"),
+        }
+    }
+
     pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
         match self.get(name) {
             None => Ok(default),
@@ -206,6 +215,20 @@ mod tests {
     fn trailing_switch() {
         let a = args("x --flag");
         assert!(a.bool("flag"));
+    }
+
+    #[test]
+    fn required_flags_error_when_absent_or_valueless() {
+        let a = args("worker --connect 127.0.0.1:8080");
+        assert_eq!(
+            a.require("connect", "host:port").unwrap(),
+            "127.0.0.1:8080"
+        );
+        assert!(a.require("missing", "host:port").is_err());
+        // A bare `--connect` (parsed as a boolean switch) is not a
+        // usable address either.
+        let b = args("worker --connect");
+        assert!(b.require("connect", "host:port").is_err());
     }
 
     #[test]

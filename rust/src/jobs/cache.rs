@@ -16,9 +16,11 @@
 //! version-skewed entries also read as misses.
 //!
 //! Eviction: the cache grows without bound until a [`GcPolicy`] prunes
-//! it — an age cap (entries whose last write is older than
+//! it — an age cap (entries whose last touch is older than
 //! `max_age_secs`) followed by a total-size cap that evicts
-//! oldest-write-first until the directory fits in `max_bytes`. GC runs
+//! least-recently-used-first until the directory fits in `max_bytes`.
+//! Recency is the entry's mtime, refreshed on every cache *hit* as well
+//! as on write, so eviction order is true LRU. GC runs
 //! at open for every grid/serve front-end (via
 //! [`ResultCache::open_with`]) and on demand as `omgd cache-gc`;
 //! entries written after a pass's reference instant are never
@@ -47,11 +49,12 @@ static TMP_COUNTER: AtomicU64 = AtomicU64::new(0);
 /// grid by deleting entries unless the operator asked for it.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct GcPolicy {
-    /// Evict entries whose last write is older than this many seconds.
+    /// Evict entries whose last touch (write *or* cache hit — see
+    /// [`ResultCache::get`]) is older than this many seconds.
     pub max_age_secs: Option<u64>,
-    /// After the age pass, evict oldest-write-first until the cache
-    /// directory totals ≤ this many bytes. Approximate LRU: ordering is
-    /// by last *write* time — a cache read does not refresh an entry.
+    /// After the age pass, evict least-recently-used-first until the
+    /// cache directory totals ≤ this many bytes. True LRU: a cache hit
+    /// refreshes the entry's mtime, so hot entries survive the cap.
     pub max_bytes: Option<u64>,
     /// Report what would be evicted without deleting anything.
     pub dry_run: bool,
@@ -120,9 +123,14 @@ impl ResultCache {
     /// Look up a completed outcome for `spec` computed against the
     /// artifacts identified by `afp`. Any read/parse/version/canonical/
     /// fingerprint mismatch is a miss.
+    ///
+    /// A hit refreshes the entry's mtime (best-effort), so GC's
+    /// oldest-first eviction order is true LRU — hot entries that are
+    /// read every run survive the size cap even if they were *written*
+    /// long ago.
     pub fn get(&self, spec: &JobSpec, afp: &str) -> Option<JobOutcome> {
-        let text =
-            fs::read_to_string(self.entry_path(&spec.hash_hex())).ok()?;
+        let path = self.entry_path(&spec.hash_hex());
+        let text = fs::read_to_string(&path).ok()?;
         let j = Json::parse(&text).ok()?;
         if j.get("v").and_then(Json::as_f64) != Some(SCHEMA_VERSION as f64) {
             return None;
@@ -135,7 +143,17 @@ impl ResultCache {
         if j.get("afp").and_then(Json::as_str) != Some(afp) {
             return None;
         }
-        parse_outcome(j.get("outcome")?)
+        let out = parse_outcome(j.get("outcome")?)?;
+        // Recency touch, only once the entry has actually hit. Opening
+        // for write without truncation leaves the bytes alone; failure
+        // (read-only cache dir) costs nothing but LRU precision. If a
+        // concurrent `put` republished the entry between our read and
+        // this touch, we merely freshen an already-fresh file.
+        let _ = fs::File::options()
+            .write(true)
+            .open(&path)
+            .and_then(|f| f.set_modified(SystemTime::now()));
+        Some(out)
     }
 
     /// Persist `outcome` for `spec` (atomic: temp file + rename).
@@ -235,7 +253,7 @@ impl ResultCache {
         if policy.is_noop() {
             return Ok(stats);
         }
-        // Snapshot: (path, last write, size); unreadable entries are
+        // Snapshot: (path, last touch, size); unreadable entries are
         // skipped (a concurrent invalidate is not an error).
         let mut total_bytes = 0u64;
         let mut protected_bytes = 0u64;
@@ -251,7 +269,7 @@ impl ResultCache {
                 candidates.push((p, mtime, meta.len()));
             }
         }
-        // Oldest write first; path tiebreak keeps the pass
+        // Least recently touched first; path tiebreak keeps the pass
         // deterministic when mtimes collide.
         candidates
             .sort_by(|a, b| a.1.cmp(&b.1).then_with(|| a.0.cmp(&b.0)));
@@ -318,6 +336,22 @@ impl ResultCache {
 /// non-finite values become `null` (JSON has no NaN) and read back as
 /// NaN.
 fn serialize_entry(spec: &JobSpec, afp: &str, o: &JobOutcome) -> String {
+    format!(
+        "{{\"v\":{SCHEMA_VERSION},\"hash\":\"{}\",\"label\":\"{}\",\
+         \"canon\":\"{}\",\"afp\":\"{}\",\"outcome\":{}}}",
+        spec.hash_hex(),
+        esc(&spec.label()),
+        esc(&spec.canonical()),
+        esc(afp),
+        ser_outcome(o),
+    )
+}
+
+/// Serialize a [`JobOutcome`] as a JSON object. Shared by the cache
+/// entry format above and the remote-worker result wire
+/// ([`super::remote`]), so a result computed remotely round-trips into
+/// the gateway's cache byte-for-byte like a local one.
+pub(crate) fn ser_outcome(o: &JobOutcome) -> String {
     let loss: Vec<String> = o
         .loss_series
         .iter()
@@ -329,14 +363,8 @@ fn serialize_entry(spec: &JobSpec, afp: &str, o: &JobOutcome) -> String {
         .map(|(s, l, a)| format!("[{s},{},{}]", ser_f(*l), ser_f(*a)))
         .collect();
     format!(
-        "{{\"v\":{SCHEMA_VERSION},\"hash\":\"{}\",\"label\":\"{}\",\
-         \"canon\":\"{}\",\"afp\":\"{}\",\"outcome\":{{\"final_metric\":{},\
-         \"tail_loss\":{},\"steps\":{},\"train_secs\":{},\
-         \"loss_series\":[{}],\"eval_series\":[{}]}}}}",
-        spec.hash_hex(),
-        esc(&spec.label()),
-        esc(&spec.canonical()),
-        esc(afp),
+        "{{\"final_metric\":{},\"tail_loss\":{},\"steps\":{},\
+         \"train_secs\":{},\"loss_series\":[{}],\"eval_series\":[{}]}}",
         ser_f(o.final_metric),
         ser_f(o.tail_loss),
         o.steps,
@@ -346,7 +374,8 @@ fn serialize_entry(spec: &JobSpec, afp: &str, o: &JobOutcome) -> String {
     )
 }
 
-fn parse_outcome(j: &Json) -> Option<JobOutcome> {
+/// Parse a [`ser_outcome`] object back; `None` on any shape mismatch.
+pub(crate) fn parse_outcome(j: &Json) -> Option<JobOutcome> {
     let f = |k: &str| -> Option<f64> {
         match j.get(k)? {
             Json::Null => Some(f64::NAN),
@@ -552,6 +581,48 @@ mod tests {
         assert!(c.get(&spec(21), "afp-1").is_none());
         assert!(c.stats().bytes <= one + one / 2);
         std::fs::remove_dir_all(c.dir()).ok();
+    }
+
+    #[test]
+    fn cache_hit_refreshes_recency_so_hot_entries_survive_gc() {
+        let c = tmp_cache("gc-lru");
+        // Oldest-written first; sleeps beat fs timestamp granularity.
+        c.put(&spec(70), "afp-1", &outcome()).unwrap();
+        std::thread::sleep(Duration::from_millis(20));
+        c.put(&spec(71), "afp-1", &outcome()).unwrap();
+        std::thread::sleep(Duration::from_millis(20));
+        c.put(&spec(72), "afp-1", &outcome()).unwrap();
+        std::thread::sleep(Duration::from_millis(20));
+        // A *hit* on the oldest entry must refresh its recency...
+        assert!(c.get(&spec(70), "afp-1").is_some());
+        // ...so a size cap with room for one entry evicts 71 and 72
+        // (least recently used), not the hot 70.
+        let one = c.stats().bytes / 3;
+        let policy = GcPolicy {
+            max_bytes: Some(one + one / 2),
+            ..GcPolicy::default()
+        };
+        let st = c.gc(&policy).unwrap();
+        assert_eq!(st.evicted, 2);
+        assert!(
+            c.get(&spec(70), "afp-1").is_some(),
+            "recently-read entry survives the size cap"
+        );
+        assert!(c.get(&spec(71), "afp-1").is_none());
+        assert!(c.get(&spec(72), "afp-1").is_none());
+        std::fs::remove_dir_all(c.dir()).ok();
+    }
+
+    #[test]
+    fn outcome_wire_round_trips_through_ser_and_parse() {
+        let o = outcome();
+        let j = Json::parse(&ser_outcome(&o)).unwrap();
+        let back = parse_outcome(&j).expect("outcome parses back");
+        assert_eq!(back.final_metric, o.final_metric);
+        assert_eq!(back.tail_loss, o.tail_loss);
+        assert_eq!(back.steps, o.steps);
+        assert_eq!(back.loss_series, o.loss_series);
+        assert_eq!(back.eval_series, o.eval_series);
     }
 
     #[test]

@@ -19,9 +19,16 @@
 //!   shared [`serve::JobHub`] (queue + worker pool + result routing);
 //! * [`net`] — HTTP/1.1 gateway (`omgd serve --listen`): N concurrent
 //!   connections share one hub, with `429` backpressure and graceful
-//!   drain.
+//!   drain;
+//! * [`remote`] — distributed execution over the gateway: the
+//!   `omgd worker --connect` pull agent (lease → sync → run → report)
+//!   and the `omgd grid --remote` submission client;
+//! * [`sync`] — content-addressed artifact sync (frame format +
+//!   worker-side [`sync::ArtifactStore`]), keyed by
+//!   [`artifact_fingerprint`].
 //!
-//! Front-ends: `omgd grid`, `omgd serve` (stdin or `--listen`), and
+//! Front-ends: `omgd grid` (local pool or `--remote` gateway),
+//! `omgd serve` (stdin or `--listen`), `omgd worker`, and
 //! `omgd cache-gc` (see `main.rs`), plus the Table 3/5/6 bench
 //! binaries, which submit grids built by [`crate::experiments`].
 
@@ -29,19 +36,29 @@ pub mod cache;
 pub mod net;
 pub mod pool;
 pub mod queue;
+pub mod remote;
 pub mod report;
 pub mod serve;
 pub mod spec;
+pub mod sync;
 
 pub use cache::{
     CacheStats, GcPolicy, GcStats, ResultCache, DEFAULT_CACHE_DIR,
 };
 pub use net::{run_gateway, GatewayStats, ListenOptions};
 pub use pool::{run_pool, JobOutcome, JobResult, JobStatus};
-pub use queue::{Job, JobQueue, TryPush};
+pub use queue::{Job, JobQueue, PopTimeout, TryPush};
+pub use remote::{
+    run_grid_remote, run_worker, run_worker_with, WorkerOptions,
+    WorkerStats,
+};
 pub use report::GridReport;
-pub use serve::{JobHub, ServeStats, SessionOptions};
+pub use serve::{
+    JobHub, LeaseInfo, LeaseReply, RemoteDone, RemoteStats, ServeStats,
+    SessionOptions,
+};
 pub use spec::{ExperimentKind, JobSpec};
+pub use sync::{ArtifactStore, DEFAULT_STORE_DIR};
 
 use crate::config::{OptFamily, RunConfig};
 use crate::data::ClassTask;
@@ -191,10 +208,24 @@ pub fn cached_runner(
 /// cells instead of silently replaying pre-regeneration results.
 /// mtime-based, so an identical regeneration also misses — conservative
 /// in the safe direction.
+///
+/// The fingerprint is also the content address of artifact sync
+/// ([`sync`] / `GET /artifacts/<fp>`): a remote worker caches synced
+/// artifact sets — and its results — under the *gateway's* fingerprint,
+/// so both ends key their caches identically.
 pub fn artifact_fingerprint(cfg: &RunConfig) -> String {
-    let dir = resolve_artifacts(&cfg.artifacts_dir);
-    let prefix = format!("{}.", cfg.model);
-    let mut entries: Vec<String> = match std::fs::read_dir(&dir) {
+    artifact_fingerprint_at(&resolve_artifacts(&cfg.artifacts_dir), &cfg.model)
+}
+
+/// [`artifact_fingerprint`] with the directory already resolved — the
+/// shape `GET /artifacts/<fp>` uses to re-verify a fingerprint against
+/// the current on-disk state before packing.
+pub(crate) fn artifact_fingerprint_at(
+    dir: &std::path::Path,
+    model: &str,
+) -> String {
+    let prefix = format!("{model}.");
+    let mut entries: Vec<String> = match std::fs::read_dir(dir) {
         Err(_) => return "absent".to_string(),
         Ok(rd) => rd
             .filter_map(|e| e.ok())
@@ -336,7 +367,7 @@ fn classifier_outcome(
 /// naming that path). Only the unset/default value falls back to the
 /// usual env/CWD/manifest-dir resolution, so grids built from
 /// `RunConfig::default()` work under `cargo test` too.
-fn resolve_artifacts(configured: &str) -> PathBuf {
+pub(crate) fn resolve_artifacts(configured: &str) -> PathBuf {
     if configured.is_empty()
         || configured == RunConfig::default().artifacts_dir
     {

@@ -17,29 +17,41 @@
 //!   queueing the connection.
 //! * `GET /healthz` — liveness, queue depth, drain state.
 //! * `GET /stats` — hub-lifetime job counters plus gateway counters
-//!   (connections, 429/503 responses).
+//!   (connections, 429/503 responses, remote leases).
 //! * `GET /cache` — result-cache directory, entry count, byte size.
-//! * `POST /shutdown` — stop accepting, drain in-flight connections
-//!   and queued jobs, then return.
+//! * `POST /work/lease` — remote-worker pull: long-poll for one queued
+//!   job, leased with a TTL ([`super::remote`] is the client).
+//! * `POST /work/<seq>/renew`, `POST /work/<seq>/result` — keep a
+//!   lease alive / report its outcome (`409` once the lease is lost).
+//! * `GET /artifacts/<fp>` — content-addressed artifact sync: the
+//!   framed artifact set for a fingerprint a lease referenced
+//!   ([`super::sync`] owns the frame format).
+//! * `POST /shutdown` — stop accepting new job sessions, keep serving
+//!   `/work/*` until every open session, queued job, and outstanding
+//!   lease drains, then return.
 //!
 //! Backpressure is two-level: per connection (at most
 //! [`ListenOptions::max_in_flight`] unfinished jobs per session — the
 //! session reader throttles until results drain) and global (the
 //! bounded queue; saturated → `429` for new `POST /jobs`).
 
-use super::cache::ResultCache;
-use super::pool::JobOutcome;
+use super::cache::{self, ResultCache};
+use super::pool::{JobOutcome, JobStatus};
 use super::serve::{
-    run_session, with_hub, JobHub, ServeStats, SessionOptions,
+    run_session, with_hub, JobHub, LeaseReply, RemoteDone, RemoteStats,
+    ServeStats, SessionOptions,
 };
 use super::spec::JobSpec;
-use super::{cached_runner, open_cache, GridOptions};
-use crate::util::json::escape_str as esc;
+use super::{cached_runner, open_cache, sync, GridOptions};
+use crate::util::json::{escape_str as esc, Json};
 use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::time::Duration;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
 
 /// Largest accepted `POST /jobs` body (16 MiB ≈ 10⁵ job lines).
 const MAX_BODY_BYTES: usize = 16 << 20;
@@ -67,6 +79,17 @@ pub struct ListenOptions {
     /// or refusing to read its result stream — cannot wedge graceful
     /// drain forever.
     pub io_timeout: Duration,
+    /// Worker-lease TTL: a leased job whose worker neither renews nor
+    /// reports within this window is requeued (crash/partition
+    /// re-dispatch). Workers renew at a fraction of this.
+    pub lease_secs: u64,
+    /// Long-poll budget of `POST /work/lease`: how long the gateway
+    /// holds an idle lease request open waiting for work before
+    /// answering `idle`.
+    pub poll_secs: u64,
+    /// Mirror of [`GridOptions::force`] for remotely-leased jobs: skip
+    /// (and invalidate) the gateway cache's fast-path when leasing.
+    pub force: bool,
 }
 
 impl Default for ListenOptions {
@@ -76,6 +99,9 @@ impl Default for ListenOptions {
             max_in_flight: 32,
             queue_capacity: 0,
             io_timeout: Duration::from_secs(300),
+            lease_secs: 60,
+            poll_secs: 20,
+            force: false,
         }
     }
 }
@@ -93,6 +119,9 @@ pub struct GatewayStats {
     pub refused: usize,
     /// Job counters aggregated across all `POST /jobs` sessions.
     pub jobs: ServeStats,
+    /// Remote-worker lease counters (leases granted, expiries
+    /// requeued, stale completions rejected).
+    pub remote: RemoteStats,
 }
 
 #[derive(Default)]
@@ -116,10 +145,11 @@ pub fn serve_listen(
     let listener =
         TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
     eprintln!(
-        "omgd serve: listening on http://{} ({} workers; POST /jobs, \
-         GET /healthz /stats /cache, POST /shutdown)",
+        "omgd serve: listening on http://{} ({} local worker(s); \
+         POST /jobs, GET /healthz /stats /cache, POST /work/lease \
+         (remote workers), POST /shutdown)",
         listener.local_addr()?,
-        opts.workers.max(1),
+        opts.workers,
     );
     // A long-lived gateway re-enforces its GC caps periodically, not
     // just at open; the thread owns its own cache handle (same dir)
@@ -145,8 +175,9 @@ pub fn serve_listen(
             }
         })
     });
+    let lopts = ListenOptions { force: opts.force, ..lopts.clone() };
     let out =
-        run_gateway(listener, opts.workers, lopts, Some(&cache), |_wid| {
+        run_gateway(listener, opts.workers, &lopts, Some(&cache), |_wid| {
             cached_runner(&cache, opts.force)
         });
     let _ = gc_stop_tx.send(());
@@ -156,11 +187,41 @@ pub fn serve_listen(
     out
 }
 
+/// Shared, read-mostly context every connection thread gets a
+/// reference to.
+#[derive(Clone, Copy)]
+struct GwCtx<'a> {
+    hub: &'a JobHub,
+    c: &'a Counters,
+    stop: &'a AtomicBool,
+    lopts: &'a ListenOptions,
+    cache: Option<&'a ResultCache>,
+    local: SocketAddr,
+    /// Artifact index: gateway fingerprint → (artifacts dir, model),
+    /// registered when a job is leased and served by
+    /// `GET /artifacts/<fp>`.
+    artifacts: &'a Mutex<HashMap<String, (PathBuf, String)>>,
+}
+
 /// Run the accept loop + worker pool + router on `listener` until a
-/// `POST /shutdown` arrives, then drain: open connections finish their
-/// sessions, queued jobs complete, and the aggregate stats come back.
-/// Tests inject stub workers (and `None` for the cache) the same way
-/// [`super::pool::run_pool`] does.
+/// `POST /shutdown` arrives, then drain. Tests inject stub workers
+/// (and `None` for the cache) the same way [`super::pool::run_pool`]
+/// does. `workers == 0` runs a coordinator-only gateway whose jobs are
+/// drained exclusively by remote `omgd worker` agents.
+///
+/// Drain is remote-worker-aware: after `POST /shutdown` the gateway
+/// stops taking new `POST /jobs` (they get `503`) but **keeps serving
+/// `/work/*` and `/artifacts/*`**, because open job sessions may be
+/// waiting on results that only a remote worker can deliver. The loop
+/// exits once no connection is open, the queue is empty, and no lease
+/// is outstanding — at which point `with_hub` seals the queue and the
+/// local pool drains.
+///
+/// Corollary: a coordinator-only gateway (`workers == 0`) whose last
+/// remote worker died with jobs still queued waits — deliberately —
+/// for a worker to (re)attach and drain them; the accept loop stays
+/// live through the whole drain, so attaching one resolves it. Kill
+/// the process to abandon the queued work instead.
 pub fn run_gateway<M, F>(
     listener: TcpListener,
     workers: usize,
@@ -172,42 +233,79 @@ where
     M: Fn(usize) -> F + Sync,
     F: FnMut(&JobSpec) -> Result<(JobOutcome, bool)>,
 {
-    let workers = workers.max(1);
     let queue_capacity = if lopts.queue_capacity == 0 {
         (2 * workers).max(8)
     } else {
         lopts.queue_capacity
     };
     let stop = AtomicBool::new(false);
+    let loop_done = AtomicBool::new(false);
     let c = Counters::default();
     let local = listener.local_addr().context("gateway local_addr")?;
+    let artifacts = Mutex::new(HashMap::new());
 
     // `with_hub` owns the worker pool + router + drain discipline; this
     // body is only the accept loop. Connection threads live in their
     // own scope and are joined before the body returns, so every open
     // session finishes before the hub seals its queue.
-    let (accepted, rejected, done, failed, cached) =
+    let ((accepted, rejected, done, failed, cached), remote) =
         with_hub(workers, queue_capacity, make_worker, |hub| {
+            let ctx = GwCtx {
+                hub,
+                c: &c,
+                stop: &stop,
+                lopts,
+                cache,
+                local,
+                artifacts: &artifacts,
+            };
             std::thread::scope(|s| {
-                let mut handles = Vec::new();
-                loop {
-                    let stream = match listener.accept() {
-                        Ok((stream, _peer)) => stream,
-                        Err(_) => {
-                            if stop.load(Ordering::SeqCst) {
-                                break;
-                            }
-                            // Transient accept failure (fd exhaustion,
-                            // …): back off instead of spinning.
-                            std::thread::sleep(Duration::from_millis(10));
-                            continue;
-                        }
-                    };
-                    // The post-shutdown wake-up connection (or a
-                    // straggler that raced it) is dropped unanswered.
-                    if stop.load(Ordering::SeqCst) {
-                        break;
+                // Lease-expiry sweeper: re-dispatch jobs whose worker
+                // went silent even when no one is polling `/work/lease`
+                // (every lease call also sweeps opportunistically).
+                let loop_done = &loop_done;
+                let sweeper = s.spawn(move || {
+                    while !loop_done.load(Ordering::SeqCst) {
+                        hub.requeue_expired();
+                        std::thread::sleep(Duration::from_millis(200));
                     }
+                });
+                let mut handles = Vec::new();
+                let mut draining = false;
+                loop {
+                    if !draining && stop.load(Ordering::SeqCst) {
+                        // Enter drain mode: from here on the accept
+                        // call must not block forever, because the exit
+                        // condition below needs re-checking even when
+                        // no one connects.
+                        draining = true;
+                        let _ = listener.set_nonblocking(true);
+                    }
+                    let stream = match listener.accept() {
+                        Ok((stream, _peer)) => {
+                            // A drain-mode accept delivered a
+                            // nonblocking socket; connection handling
+                            // assumes blocking IO.
+                            let _ = stream.set_nonblocking(false);
+                            Some(stream)
+                        }
+                        Err(_) => None,
+                    };
+                    if draining && stream.is_none() {
+                        let idle = c.active.load(Ordering::SeqCst) == 0
+                            && ctx.hub.queue.is_empty()
+                            && ctx.hub.n_leased() == 0;
+                        if idle {
+                            break;
+                        }
+                    }
+                    let Some(stream) = stream else {
+                        // Transient accept failure (fd exhaustion, …)
+                        // or drain-mode WouldBlock: back off instead of
+                        // spinning.
+                        std::thread::sleep(Duration::from_millis(10));
+                        continue;
+                    };
                     let full =
                         c.active.load(Ordering::SeqCst) >= lopts.max_conns;
                     if full {
@@ -223,12 +321,10 @@ where
                     }
                     c.active.fetch_add(1, Ordering::SeqCst);
                     c.connections.fetch_add(1, Ordering::Relaxed);
-                    let (cr, st) = (&c, &stop);
+                    let ctx_ref = &ctx;
                     let handle = s.spawn(move || {
-                        handle_conn(
-                            hub, cr, st, lopts, cache, local, stream,
-                        );
-                        cr.active.fetch_sub(1, Ordering::SeqCst);
+                        handle_conn(ctx_ref, stream);
+                        ctx_ref.c.active.fetch_sub(1, Ordering::SeqCst);
                     });
                     handles.push(handle);
                     // Bound the handle list over a long gateway
@@ -241,8 +337,10 @@ where
                 for h in handles {
                     let _ = h.join();
                 }
+                loop_done.store(true, Ordering::SeqCst);
+                let _ = sweeper.join();
             });
-            hub.counters()
+            (hub.counters(), hub.remote_counters())
         });
 
     Ok(GatewayStats {
@@ -251,20 +349,14 @@ where
         throttled: c.throttled.load(Ordering::Relaxed),
         refused: c.refused.load(Ordering::Relaxed),
         jobs: ServeStats { accepted, rejected, done, failed, cached },
+        remote,
     })
 }
 
 /// Serve one connection: parse the request head, dispatch the endpoint,
 /// respond, close. Never panics — every IO failure is a dropped client.
-fn handle_conn(
-    hub: &JobHub,
-    c: &Counters,
-    stop: &AtomicBool,
-    lopts: &ListenOptions,
-    cache: Option<&ResultCache>,
-    local: SocketAddr,
-    stream: TcpStream,
-) {
+fn handle_conn(ctx: &GwCtx<'_>, stream: TcpStream) {
+    let GwCtx { hub, c, stop, lopts, cache, local, .. } = *ctx;
     let _ = stream.set_read_timeout(Some(lopts.io_timeout));
     let _ = stream.set_write_timeout(Some(lopts.io_timeout));
     let mut reader = match stream.try_clone() {
@@ -287,14 +379,16 @@ fn handle_conn(
         }
     };
     c.requests.fetch_add(1, Ordering::Relaxed);
-    // Every endpoint except POST /jobs ignores its body; drain it
-    // (bounded) up front so responding + closing can't RST the reply
-    // away. Skipped under Expect: 100-continue — the client has not
-    // sent the body yet and is waiting on our verdict.
-    if !(head.method == "POST" && head.path == "/jobs")
-        && head.content_length > 0
-        && !head.expect_continue
-    {
+    // POST /jobs and the worker-protocol POSTs consume their bodies;
+    // every other endpoint ignores its body — drain it (bounded) up
+    // front so responding + closing can't RST the reply away. Skipped
+    // under Expect: 100-continue — the client has not sent the body
+    // yet and is waiting on our verdict.
+    let wants_body = head.method == "POST"
+        && (head.path == "/jobs"
+            || head.path == "/work/lease"
+            || parse_work_path(&head.path).is_some());
+    if !wants_body && head.content_length > 0 && !head.expect_continue {
         drain_body(&mut reader, head.content_length);
     }
     match (head.method.as_str(), head.path.as_str()) {
@@ -311,13 +405,16 @@ fn handle_conn(
         ("GET", "/stats") => {
             let (accepted, rejected, done, failed, cached) =
                 hub.counters();
+            let remote = hub.remote_counters();
             let body = format!(
                 "{{\"connections\":{},\"active_connections\":{},\
                  \"requests\":{},\"throttled_429\":{},\"refused_503\":{},\
                  \"queue_len\":{},\"queue_capacity\":{},\
                  \"jobs\":{{\"accepted\":{accepted},\
                  \"rejected\":{rejected},\"done\":{done},\
-                 \"failed\":{failed},\"cached\":{cached}}}}}",
+                 \"failed\":{failed},\"cached\":{cached}}},\
+                 \"remote\":{{\"leased\":{},\"in_flight\":{},\
+                 \"requeued\":{},\"conflicts\":{}}}}}",
                 c.connections.load(Ordering::Relaxed),
                 c.active.load(Ordering::SeqCst),
                 c.requests.load(Ordering::Relaxed),
@@ -325,6 +422,10 @@ fn handle_conn(
                 c.refused.load(Ordering::Relaxed),
                 hub.queue.len(),
                 hub.queue.capacity(),
+                remote.leased,
+                hub.n_leased(),
+                remote.requeued,
+                remote.conflicts,
             );
             let _ = respond_json(&mut w, 200, "OK", &[], &body);
         }
@@ -370,6 +471,22 @@ fn handle_conn(
             let _ = TcpStream::connect(wake);
         }
         ("POST", "/jobs") => {
+            if stop.load(Ordering::SeqCst) {
+                // Draining: no new sessions; the connection's body (if
+                // any) was not read, so answer-and-close is safe only
+                // after a bounded drain.
+                if !head.expect_continue {
+                    drain_body(&mut reader, head.content_length);
+                }
+                let _ = respond_json(
+                    &mut w,
+                    503,
+                    "Service Unavailable",
+                    &[],
+                    "{\"error\":\"gateway is draining\"}",
+                );
+                return;
+            }
             if head.content_length > MAX_BODY_BYTES {
                 // Under Expect: 100-continue there is nothing to
                 // drain — the client is still waiting on our verdict.
@@ -432,7 +549,37 @@ fn handle_conn(
                 &SessionOptions { max_in_flight: lopts.max_in_flight },
             );
         }
-        (_, "/healthz" | "/stats" | "/cache" | "/shutdown" | "/jobs") => {
+        ("POST", "/work/lease") => {
+            handle_lease(ctx, &mut reader, &mut w, &head);
+        }
+        ("POST", p) if parse_work_path(p).is_some() => {
+            let (seq, verb) = parse_work_path(p).unwrap();
+            handle_work_post(ctx, &mut reader, &mut w, &head, seq, verb);
+        }
+        ("GET", p) if p.starts_with("/artifacts/") => {
+            let fp = p.trim_start_matches("/artifacts/");
+            handle_artifact_get(ctx, &mut w, fp);
+        }
+        (
+            _,
+            "/healthz" | "/stats" | "/cache" | "/shutdown" | "/jobs"
+            | "/work/lease",
+        ) => {
+            let _ = respond_json(
+                &mut w,
+                405,
+                "Method Not Allowed",
+                &[],
+                &err_body(&format!(
+                    "{} not allowed on {}",
+                    head.method, head.path
+                )),
+            );
+        }
+        (_, p)
+            if parse_work_path(p).is_some()
+                || p.starts_with("/artifacts/") =>
+        {
             let _ = respond_json(
                 &mut w,
                 405,
@@ -455,6 +602,343 @@ fn handle_conn(
         }
     }
     let _ = (&stream).flush();
+}
+
+/// `/work/<seq>/renew` | `/work/<seq>/result` → `(seq, verb)`.
+fn parse_work_path(path: &str) -> Option<(u64, &str)> {
+    let rest = path.strip_prefix("/work/")?;
+    let (seq, verb) = rest.split_once('/')?;
+    let seq: u64 = seq.parse().ok()?;
+    match verb {
+        "renew" | "result" => Some((seq, verb)),
+        _ => None,
+    }
+}
+
+/// Read a small JSON request body (worker-protocol endpoints). Answers
+/// the error response itself and returns `None` when the body is
+/// over-long, unreadable, or not JSON.
+fn read_json_body<R: BufRead, W: Write>(
+    reader: &mut R,
+    w: &mut W,
+    head: &HttpHead,
+) -> Option<Json> {
+    if head.content_length > MAX_BODY_BYTES {
+        if !head.expect_continue {
+            drain_body(reader, head.content_length);
+        }
+        let _ = respond_json(
+            w,
+            413,
+            "Payload Too Large",
+            &[],
+            &err_body(&format!("body exceeds {MAX_BODY_BYTES} bytes")),
+        );
+        return None;
+    }
+    if head.expect_continue {
+        let _ = write!(w, "HTTP/1.1 100 Continue\r\n\r\n");
+        let _ = w.flush();
+    }
+    let body = match read_body(reader, head.content_length) {
+        Ok(b) => b,
+        Err(e) => {
+            let _ = respond_json(
+                w,
+                400,
+                "Bad Request",
+                &[],
+                &err_body(&e.to_string()),
+            );
+            return None;
+        }
+    };
+    let text = String::from_utf8_lossy(&body);
+    match Json::parse(text.trim()) {
+        Ok(j) => Some(j),
+        Err(e) => {
+            let _ = respond_json(
+                w,
+                400,
+                "Bad Request",
+                &[],
+                &err_body(&format!("request body is not JSON: {e}")),
+            );
+            None
+        }
+    }
+}
+
+/// `POST /work/lease`: long-poll for one job on behalf of a remote
+/// worker. Cache-hit jobs are completed inline (the worker never sees
+/// them) and the poll continues, mirroring the local pool's
+/// `cached_runner` fast path.
+fn handle_lease<R: BufRead, W: Write>(
+    ctx: &GwCtx<'_>,
+    reader: &mut R,
+    w: &mut W,
+    head: &HttpHead,
+) {
+    let Some(j) = read_json_body(reader, w, head) else { return };
+    let worker = j
+        .get("worker")
+        .and_then(Json::as_str)
+        .unwrap_or("anonymous")
+        .to_string();
+    // `artifacts` (the worker's cached fingerprints) is accepted as a
+    // scheduling hint; the current scheduler does not use it.
+    let ttl = Duration::from_secs(ctx.lopts.lease_secs.max(1));
+    let deadline =
+        Instant::now() + Duration::from_secs(ctx.lopts.poll_secs);
+    // Short wait slices so a drain (or the deadline) is noticed
+    // promptly even while blocked on an empty queue.
+    let slice = Duration::from_millis(100);
+    loop {
+        match ctx.hub.try_lease(&worker, ttl, slice) {
+            LeaseReply::Granted(info) => {
+                // Cache fast path: a hit completes the job without a
+                // round trip, exactly like the local cached_runner.
+                if let Some(cache) = ctx.cache {
+                    if ctx.lopts.force {
+                        cache.invalidate(&info.spec);
+                    } else if let Some(out) =
+                        cache.get(&info.spec, &info.afp)
+                    {
+                        ctx.hub.complete_remote(
+                            info.seq,
+                            &worker,
+                            JobStatus::Done(out),
+                            true,
+                            0.0,
+                        );
+                        continue;
+                    }
+                }
+                // Register the artifact set for `GET /artifacts/<fp>`
+                // before the lease is answered, so the worker's fetch
+                // cannot race the index.
+                if info.afp != "absent" {
+                    let dir = super::resolve_artifacts(
+                        &info.spec.cfg.artifacts_dir,
+                    );
+                    ctx.artifacts.lock().unwrap().insert(
+                        info.afp.clone(),
+                        (dir, info.spec.cfg.model.clone()),
+                    );
+                }
+                // `force` rides along so a `--force` gateway defeats
+                // the *workers'* local result caches too, not just its
+                // own — otherwise a worker would replay the very cell
+                // the operator asked to recompute.
+                let body = format!(
+                    "{{\"lease\":{{\"seq\":{},\"priority\":{},\
+                     \"hash\":\"{}\",\"label\":\"{}\",\"model\":\"{}\",\
+                     \"afp\":\"{}\",\"lease_secs\":{},\"force\":{},\
+                     \"spec\":{}}}}}",
+                    info.seq,
+                    info.priority,
+                    info.spec.hash_hex(),
+                    esc(&info.spec.label()),
+                    esc(&info.spec.cfg.model),
+                    esc(&info.afp),
+                    ttl.as_secs(),
+                    ctx.lopts.force,
+                    info.spec.to_wire(),
+                );
+                let _ = respond_json(w, 200, "OK", &[], &body);
+                return;
+            }
+            LeaseReply::Closed => {
+                let _ = respond_json(
+                    w,
+                    200,
+                    "OK",
+                    &[],
+                    "{\"closed\":true}",
+                );
+                return;
+            }
+            LeaseReply::Idle => {
+                let draining = ctx.stop.load(Ordering::SeqCst);
+                if draining || Instant::now() >= deadline {
+                    let _ = respond_json(
+                        w,
+                        200,
+                        "OK",
+                        &[],
+                        &format!("{{\"idle\":true,\"draining\":{draining}}}"),
+                    );
+                    return;
+                }
+            }
+        }
+    }
+}
+
+/// `POST /work/<seq>/renew` and `POST /work/<seq>/result`.
+fn handle_work_post<R: BufRead, W: Write>(
+    ctx: &GwCtx<'_>,
+    reader: &mut R,
+    w: &mut W,
+    head: &HttpHead,
+    seq: u64,
+    verb: &str,
+) {
+    let Some(j) = read_json_body(reader, w, head) else { return };
+    let worker = j
+        .get("worker")
+        .and_then(Json::as_str)
+        .unwrap_or("anonymous")
+        .to_string();
+    let ttl = Duration::from_secs(ctx.lopts.lease_secs.max(1));
+    if verb == "renew" {
+        if ctx.hub.renew(seq, &worker, ttl) {
+            let _ = respond_json(
+                w,
+                200,
+                "OK",
+                &[],
+                &format!("{{\"ok\":true,\"lease_secs\":{}}}", ttl.as_secs()),
+            );
+        } else {
+            let _ = respond_json(
+                w,
+                409,
+                "Conflict",
+                &[],
+                &err_body(&format!(
+                    "no lease on job {seq} held by {worker:?} \
+                     (expired and re-dispatched?)"
+                )),
+            );
+        }
+        return;
+    }
+    // verb == "result"
+    let mut outcome = None;
+    let status = match j.get("status").and_then(Json::as_str) {
+        Some("done") => {
+            let Some(out) =
+                j.get("outcome").and_then(cache::parse_outcome)
+            else {
+                let _ = respond_json(
+                    w,
+                    400,
+                    "Bad Request",
+                    &[],
+                    &err_body("done result carries no valid outcome"),
+                );
+                return;
+            };
+            // Keep a copy for the cache write below; the original
+            // moves into the dispatched result.
+            outcome = Some(out.clone());
+            JobStatus::Done(out)
+        }
+        Some("failed") => JobStatus::Failed(
+            j.get("error")
+                .and_then(Json::as_str)
+                .unwrap_or("remote worker reported failure")
+                .to_string(),
+        ),
+        Some("panicked") => JobStatus::Panicked(
+            j.get("error")
+                .and_then(Json::as_str)
+                .unwrap_or("remote worker panicked")
+                .to_string(),
+        ),
+        other => {
+            let _ = respond_json(
+                w,
+                400,
+                "Bad Request",
+                &[],
+                &err_body(&format!("unknown result status {other:?}")),
+            );
+            return;
+        }
+    };
+    let from_cache =
+        j.get("cached").and_then(Json::as_bool).unwrap_or(false);
+    let secs = j.get("secs").and_then(Json::as_f64).unwrap_or(0.0);
+    match ctx.hub.complete_remote(seq, &worker, status, from_cache, secs) {
+        RemoteDone::Accepted { spec, afp } => {
+            // The gateway's cache learns remote results too, so the
+            // next identical cell replays locally without a worker.
+            // Best-effort, like every other cache write; `outcome` is
+            // only set for done results, so failures never poison the
+            // cache.
+            if let (Some(cache), Some(out)) = (ctx.cache, outcome) {
+                if let Err(e) = cache.put(&spec, &afp, &out) {
+                    eprintln!(
+                        "warning: cache write failed for {} ({}): {e:#}",
+                        spec.label(),
+                        spec.hash_hex()
+                    );
+                }
+            }
+            let _ = respond_json(w, 200, "OK", &[], "{\"ok\":true}");
+        }
+        RemoteDone::Conflict => {
+            let _ = respond_json(
+                w,
+                409,
+                "Conflict",
+                &[],
+                &err_body(&format!(
+                    "no lease on job {seq} held by {worker:?}; \
+                     result dropped (job was re-dispatched)"
+                )),
+            );
+        }
+    }
+}
+
+/// `GET /artifacts/<fp>`: stream the artifact set identified by a
+/// fingerprint the gateway previously leased against. The fingerprint
+/// is re-verified at pack time, so a worker can never download an
+/// artifact set that changed since its lease ("stale fingerprint" →
+/// the job fails loudly instead of computing on regenerated weights).
+fn handle_artifact_get<W: Write>(ctx: &GwCtx<'_>, w: &mut W, fp: &str) {
+    let entry = ctx.artifacts.lock().unwrap().get(fp).cloned();
+    let Some((dir, model)) = entry else {
+        let _ = respond_json(
+            w,
+            404,
+            "Not Found",
+            &[],
+            &err_body(&format!("unknown artifact fingerprint {fp:?}")),
+        );
+        return;
+    };
+    let current = super::artifact_fingerprint_at(&dir, &model);
+    if current != fp {
+        let _ = respond_json(
+            w,
+            409,
+            "Conflict",
+            &[],
+            &err_body(&format!(
+                "artifact fingerprint {fp} is stale (artifacts for \
+                 {model:?} changed; current {current})"
+            )),
+        );
+        return;
+    }
+    match sync::pack(&dir, &model) {
+        Ok(frame) => {
+            let _ = respond_bytes(w, &frame);
+        }
+        Err(e) => {
+            let _ = respond_json(
+                w,
+                500,
+                "Internal Server Error",
+                &[],
+                &err_body(&format!("packing artifacts failed: {e:#}")),
+            );
+        }
+    }
 }
 
 /// Parsed request head (the slice of HTTP/1.1 this gateway speaks).
@@ -549,6 +1033,18 @@ fn err_body(msg: &str) -> String {
     format!("{{\"error\":\"{}\"}}", esc(msg))
 }
 
+/// One binary response (the `GET /artifacts/<fp>` frame).
+fn respond_bytes<W: Write>(w: &mut W, body: &[u8]) -> std::io::Result<()> {
+    write!(
+        w,
+        "HTTP/1.1 200 OK\r\nContent-Type: application/octet-stream\
+         \r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    )?;
+    w.write_all(body)?;
+    w.flush()
+}
+
 /// One small self-delimited JSON response (everything except the
 /// streamed `POST /jobs` body).
 fn respond_json<W: Write>(
@@ -641,6 +1137,20 @@ mod tests {
         assert!(text.contains("Retry-After: 1\r\n"));
         assert!(text.contains("Content-Length: 16\r\n"));
         assert!(text.ends_with("\r\n\r\n{\"error\":\"full\"}"));
+    }
+
+    #[test]
+    fn work_paths_parse_strictly() {
+        assert_eq!(parse_work_path("/work/7/renew"), Some((7, "renew")));
+        assert_eq!(
+            parse_work_path("/work/123/result"),
+            Some((123, "result"))
+        );
+        assert_eq!(parse_work_path("/work/lease"), None);
+        assert_eq!(parse_work_path("/work/x/result"), None);
+        assert_eq!(parse_work_path("/work/7/steal"), None);
+        assert_eq!(parse_work_path("/work/"), None);
+        assert_eq!(parse_work_path("/jobs"), None);
     }
 
     #[test]

@@ -159,7 +159,9 @@ pub fn worker_loop<W>(
     }
 }
 
-fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+/// Best-effort human-readable panic payload; shared with the remote
+/// worker agent, which panic-isolates jobs the same way this pool does.
+pub(crate) fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
     if let Some(s) = payload.downcast_ref::<&str>() {
         (*s).to_string()
     } else if let Some(s) = payload.downcast_ref::<String>() {

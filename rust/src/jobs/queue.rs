@@ -14,6 +14,7 @@ use super::spec::JobSpec;
 use anyhow::{bail, Result};
 use std::collections::BinaryHeap;
 use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 /// A queued job: the spec plus its queue identity.
 #[derive(Clone, Debug)]
@@ -56,6 +57,19 @@ struct State {
     capacity: usize,
     closed: bool,
     cancelled: bool,
+}
+
+/// Outcome of a timed [`JobQueue::pop_timeout`].
+#[derive(Debug)]
+pub enum PopTimeout {
+    /// A job was available (or arrived) within the timeout.
+    Job(Job),
+    /// The timeout elapsed with the queue open but empty — the caller
+    /// (a long-polling lease, typically) should answer "idle".
+    Empty,
+    /// The queue is closed and drained, or cancelled: no job will ever
+    /// arrive again.
+    Closed,
 }
 
 /// Outcome of a non-blocking [`JobQueue::try_push`].
@@ -161,6 +175,66 @@ impl JobQueue {
             }
             st = self.not_empty.wait(st).unwrap();
         }
+    }
+
+    /// Timed [`Self::pop`]: wait at most `timeout` for a job. Unlike
+    /// `pop`, the closed-and-drained and still-open-but-empty cases are
+    /// distinguished, so a long-polling remote lease can answer "idle,
+    /// retry" vs "no more work ever".
+    pub fn pop_timeout(&self, timeout: Duration) -> PopTimeout {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.cancelled {
+                return PopTimeout::Closed;
+            }
+            if let Some(e) = st.heap.pop() {
+                drop(st);
+                self.not_full.notify_one();
+                return PopTimeout::Job(Job {
+                    seq: e.seq,
+                    priority: e.priority,
+                    spec: e.spec,
+                });
+            }
+            if st.closed {
+                return PopTimeout::Closed;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return PopTimeout::Empty;
+            }
+            let (guard, _timed_out) = self
+                .not_empty
+                .wait_timeout(st, deadline - now)
+                .unwrap();
+            st = guard;
+        }
+    }
+
+    /// Re-admit a job that was popped but not completed (an expired
+    /// remote lease). The original `seq`/`priority` are preserved so
+    /// result routing — keyed by the seq the submitter was acked with
+    /// — still works after re-dispatch.
+    ///
+    /// Re-admission deliberately ignores the capacity bound (the job
+    /// was already accounted for when first pushed) and is allowed on a
+    /// *closed* queue (drain re-dispatch: consumers are still
+    /// draining). Only a cancelled queue refuses, since its consumers
+    /// are already gone.
+    pub fn requeue(&self, job: Job) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        if st.cancelled {
+            bail!("job queue is cancelled");
+        }
+        st.heap.push(Entry {
+            priority: job.priority,
+            seq: job.seq,
+            spec: job.spec,
+        });
+        drop(st);
+        self.not_empty.notify_one();
+        Ok(())
     }
 
     /// Seal the producer side: further pushes fail, consumers drain the
@@ -311,6 +385,64 @@ mod tests {
         q.close();
         assert_eq!(q.pop().unwrap().spec.cfg.seed, 1);
         assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn pop_timeout_distinguishes_empty_from_closed() {
+        let q = JobQueue::bounded(4);
+        match q.pop_timeout(Duration::from_millis(10)) {
+            PopTimeout::Empty => {}
+            other => panic!("open+empty should time out, got {other:?}"),
+        }
+        q.push(spec(0), 0).unwrap();
+        match q.pop_timeout(Duration::from_millis(10)) {
+            PopTimeout::Job(j) => assert_eq!(j.spec.cfg.seed, 0),
+            other => panic!("expected Job, got {other:?}"),
+        }
+        q.close();
+        match q.pop_timeout(Duration::from_millis(10)) {
+            PopTimeout::Closed => {}
+            other => panic!("closed+drained is Closed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn pop_timeout_still_drains_a_closed_queue() {
+        let q = JobQueue::bounded(4);
+        q.push(spec(7), 0).unwrap();
+        q.close();
+        match q.pop_timeout(Duration::from_millis(10)) {
+            PopTimeout::Job(j) => assert_eq!(j.spec.cfg.seed, 7),
+            other => panic!("expected Job, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn requeue_preserves_seq_and_ignores_capacity() {
+        let q = JobQueue::bounded(1);
+        let seq = q.push(spec(0), 3).unwrap();
+        let job = q.pop().unwrap();
+        assert_eq!(job.seq, seq);
+        // Fill the queue again, then requeue on top of a full queue.
+        q.push(spec(1), 0).unwrap();
+        q.requeue(job).unwrap();
+        assert_eq!(q.len(), 2, "requeue bypasses the capacity bound");
+        // Higher priority (3) pops first, with its original seq.
+        let back = q.pop().unwrap();
+        assert_eq!((back.seq, back.priority), (seq, 3));
+        assert_eq!(back.spec.cfg.seed, 0);
+        // Requeue after close still works (drain re-dispatch)...
+        q.close();
+        let j2 = q.pop().unwrap();
+        q.requeue(j2).unwrap();
+        assert_eq!(q.pop().unwrap().spec.cfg.seed, 1);
+        // ...but not after cancel.
+        let q2 = JobQueue::bounded(1);
+        let s = q2.push(spec(9), 0).unwrap();
+        let job = q2.pop().unwrap();
+        assert_eq!(job.seq, s);
+        q2.cancel();
+        assert!(q2.requeue(job).is_err());
     }
 
     #[test]

@@ -1,0 +1,997 @@
+//! Distributed execution over the HTTP gateway: the `omgd worker`
+//! pull agent and the `omgd grid --remote` submission client.
+//!
+//! ## Worker agent (`omgd worker --connect <addr>`)
+//!
+//! N worker threads long-poll the gateway for leases
+//! (`POST /work/lease`), each carrying this worker's identity and the
+//! artifact fingerprints its local [`ArtifactStore`] already holds. A
+//! granted lease delivers the full-fidelity wire spec
+//! ([`JobSpec::to_wire`]); the agent verifies the spec's content hash,
+//! syncs the referenced artifact set on a store miss
+//! (`GET /artifacts/<fp>`, verified frame), consults its local result
+//! cache (keyed by the *gateway's* fingerprint, so both ends agree),
+//! runs the job panic-isolated, and reports via
+//! `POST /work/<seq>/result`. A heartbeat thread renews in-flight
+//! leases at a third of the TTL, so only a genuinely crashed,
+//! partitioned, or wedged worker lets its lease expire — at which point
+//! the gateway requeues the job for someone else.
+//!
+//! The agent exits when the gateway reports it is draining (or its
+//! queue closed), or — once it has ever successfully connected — after
+//! [`WorkerOptions::max_failures`] consecutive connection failures
+//! (gateway gone). A gateway that was *never* reachable is an error.
+//!
+//! ## Remote grids (`omgd grid --remote <addr>`)
+//!
+//! [`run_grid_remote`] submits every cell of a grid to a gateway as one
+//! `POST /jobs` session, using `{"spec":<wire>}` request lines so no
+//! `RunConfig` field is lost in transit, verifies each ack's spec hash
+//! against the locally-built cell, and reassembles the streamed results
+//! into a [`GridReport`] whose CSV aggregate is byte-identical to the
+//! same grid run on a local pool (deterministic columns only).
+//!
+//! Everything here is dependency-free `std::net` HTTP/1.1, matching the
+//! gateway's deliberately minimal framing (`Content-Length` bodies,
+//! `Connection: close`).
+
+use super::cache::{self, ResultCache};
+use super::pool::{panic_message, JobOutcome, JobResult, JobStatus};
+use super::report::GridReport;
+use super::spec::JobSpec;
+use super::sync::ArtifactStore;
+use super::SpecRunner;
+use crate::metrics::Timer;
+use crate::util::json::{escape_str as esc, ser_f64 as ser_f, Json};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// One agent-local lease registration: how often to renew, when the
+/// next renewal is due, and a per-run token so a stale run of a seq
+/// (its lease expired, the gateway re-leased the job back to a sibling
+/// thread of this very agent) can never unregister the live run's
+/// renewals.
+struct InFlight {
+    ttl: Duration,
+    next_renew: Instant,
+    token: u64,
+}
+
+type InFlightMap = Mutex<HashMap<u64, InFlight>>;
+
+static RUN_TOKEN: AtomicU64 = AtomicU64::new(0);
+
+/// Knobs for one `omgd worker` agent.
+#[derive(Clone, Debug)]
+pub struct WorkerOptions {
+    /// Gateway address, `host:port`.
+    pub connect: String,
+    /// Concurrent jobs (worker threads); each owns its own runtime.
+    pub workers: usize,
+    /// Identity sent with every lease/renew/result — lease ownership is
+    /// checked against it, so it should be unique per agent.
+    pub worker_id: String,
+    /// Local result-cache directory (default [`super::DEFAULT_CACHE_DIR`]).
+    pub cache_dir: Option<String>,
+    /// Local artifact-store root (default [`super::DEFAULT_STORE_DIR`]).
+    pub store_dir: Option<String>,
+    /// Recompute locally-cached cells instead of replaying them.
+    pub force: bool,
+    /// Consecutive connection failures tolerated (after the first
+    /// successful round trip) before the agent concludes the gateway is
+    /// gone and exits.
+    pub max_failures: usize,
+}
+
+impl Default for WorkerOptions {
+    fn default() -> Self {
+        Self {
+            connect: String::new(),
+            workers: 1,
+            worker_id: default_worker_id(),
+            cache_dir: None,
+            store_dir: None,
+            force: false,
+            max_failures: 5,
+        }
+    }
+}
+
+/// `<hostname>-<pid>`, unique enough for lease ownership on a fleet.
+pub fn default_worker_id() -> String {
+    let host = std::env::var("HOSTNAME")
+        .ok()
+        .filter(|h| !h.is_empty())
+        .unwrap_or_else(|| "worker".to_string());
+    format!("{host}-{}", std::process::id())
+}
+
+/// What one agent did over its lifetime.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WorkerStats {
+    /// Leases received and executed (including cache replays).
+    pub leased: usize,
+    /// Jobs that ran and reported `done`.
+    pub done: usize,
+    /// Jobs reported `failed` or `panicked`.
+    pub failed: usize,
+    /// Jobs answered from the local result cache.
+    pub cached: usize,
+    /// Artifact sets downloaded into the local store.
+    pub synced: usize,
+    /// Results the gateway refused (`409`: lease expired mid-run and
+    /// the job was re-dispatched).
+    pub conflicts: usize,
+}
+
+#[derive(Default)]
+struct StatCounters {
+    leased: AtomicUsize,
+    done: AtomicUsize,
+    failed: AtomicUsize,
+    cached: AtomicUsize,
+    synced: AtomicUsize,
+    conflicts: AtomicUsize,
+}
+
+impl StatCounters {
+    fn snapshot(&self) -> WorkerStats {
+        WorkerStats {
+            leased: self.leased.load(Ordering::Relaxed),
+            done: self.done.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            cached: self.cached.load(Ordering::Relaxed),
+            synced: self.synced.load(Ordering::Relaxed),
+            conflicts: self.conflicts.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Run a worker agent with the production [`SpecRunner`] (PJRT runtime
+/// per thread) until the gateway drains.
+pub fn run_worker(opts: &WorkerOptions) -> Result<WorkerStats> {
+    run_worker_with(opts, |_wid| {
+        let mut runner = SpecRunner::new();
+        move |spec: &JobSpec| runner.run(spec)
+    })
+}
+
+/// [`run_worker`] with an injectable per-thread runner (tests use
+/// stubs, exactly like [`super::run_pool`] / [`super::run_gateway`]).
+/// The agent wraps the runner with artifact sync, the local result
+/// cache, and panic isolation.
+pub fn run_worker_with<M, F>(
+    opts: &WorkerOptions,
+    make_runner: M,
+) -> Result<WorkerStats>
+where
+    M: Fn(usize) -> F + Sync,
+    F: FnMut(&JobSpec) -> Result<JobOutcome>,
+{
+    let cache = ResultCache::open(opts.cache_dir.as_deref())?;
+    let store = ArtifactStore::open(opts.store_dir.as_deref())?;
+    let stats = StatCounters::default();
+    // Every job this agent is currently running, for the heartbeat
+    // thread to renew.
+    let in_flight: InFlightMap = Mutex::new(HashMap::new());
+    let hb_stop = AtomicBool::new(false);
+    eprintln!(
+        "omgd worker {}: {} thread(s), gateway {}",
+        opts.worker_id,
+        opts.workers.max(1),
+        opts.connect,
+    );
+    let results: Vec<Result<()>> = std::thread::scope(|s| {
+        let heartbeat = s.spawn(|| {
+            heartbeat_loop(opts, &in_flight, &hb_stop);
+        });
+        let handles: Vec<_> = (0..opts.workers.max(1))
+            .map(|wid| {
+                let (make, cache, store, stats, in_flight) =
+                    (&make_runner, &cache, &store, &stats, &in_flight);
+                s.spawn(move || {
+                    let mut runner = make(wid);
+                    worker_thread(
+                        opts, cache, store, stats, in_flight, &mut runner,
+                    )
+                })
+            })
+            .collect();
+        let out: Vec<Result<()>> = handles
+            .into_iter()
+            .map(|h| match h.join() {
+                Ok(r) => r,
+                Err(p) => Err(anyhow!(
+                    "worker thread panicked: {}",
+                    panic_message(p.as_ref())
+                )),
+            })
+            .collect();
+        hb_stop.store(true, Ordering::SeqCst);
+        let _ = heartbeat.join();
+        out
+    });
+    for r in results {
+        r?;
+    }
+    Ok(stats.snapshot())
+}
+
+/// One lease-pull thread: poll → (sync, cache, run) → report, until
+/// the gateway drains or disappears.
+fn worker_thread<F>(
+    opts: &WorkerOptions,
+    cache: &ResultCache,
+    store: &ArtifactStore,
+    stats: &StatCounters,
+    in_flight: &InFlightMap,
+    runner: &mut F,
+) -> Result<()>
+where
+    F: FnMut(&JobSpec) -> Result<JobOutcome>,
+{
+    let mut failures = 0usize;
+    let mut ever_connected = false;
+    loop {
+        let fps = store.fingerprints();
+        let fps_json: Vec<String> =
+            fps.iter().map(|f| format!("\"{}\"", esc(f))).collect();
+        let body = format!(
+            "{{\"worker\":\"{}\",\"artifacts\":[{}]}}",
+            esc(&opts.worker_id),
+            fps_json.join(",")
+        );
+        // The gateway long-polls ~20s by default; allow slack on top.
+        let reply = http_json(
+            &opts.connect,
+            "POST",
+            "/work/lease",
+            body.as_bytes(),
+            Duration::from_secs(120),
+        );
+        let (status, j) = match reply {
+            Ok(r) => r,
+            Err(_) if !ever_connected => {
+                failures += 1;
+                if failures > opts.max_failures {
+                    bail!(
+                        "gateway {} unreachable after {} attempts",
+                        opts.connect,
+                        failures
+                    );
+                }
+                std::thread::sleep(backoff(failures));
+                continue;
+            }
+            Err(e) => {
+                failures += 1;
+                if failures > opts.max_failures {
+                    eprintln!(
+                        "omgd worker: gateway {} gone ({e:#}); exiting",
+                        opts.connect
+                    );
+                    return Ok(());
+                }
+                std::thread::sleep(backoff(failures));
+                continue;
+            }
+        };
+        ever_connected = true;
+        failures = 0;
+        match status {
+            200 => {}
+            503 => {
+                // Connection cap; retry politely.
+                std::thread::sleep(Duration::from_secs(1));
+                continue;
+            }
+            other => {
+                bail!("lease request rejected with HTTP {other}: {j:?}")
+            }
+        }
+        if j.get("closed").and_then(Json::as_bool) == Some(true) {
+            return Ok(());
+        }
+        if j.get("idle").and_then(Json::as_bool) == Some(true) {
+            if j.get("draining").and_then(Json::as_bool) == Some(true) {
+                return Ok(());
+            }
+            continue;
+        }
+        let Some(lease) = j.get("lease") else {
+            bail!("lease response has neither lease/idle/closed: {j:?}")
+        };
+        stats.leased.fetch_add(1, Ordering::Relaxed);
+        run_lease(opts, cache, store, stats, in_flight, runner, lease);
+    }
+}
+
+/// Execute one granted lease end to end. Never returns an error — every
+/// failure mode becomes a reported `failed` result (or, if even the
+/// report fails, an expired lease the gateway requeues).
+#[allow(clippy::too_many_arguments)]
+fn run_lease<F>(
+    opts: &WorkerOptions,
+    cache: &ResultCache,
+    store: &ArtifactStore,
+    stats: &StatCounters,
+    in_flight: &InFlightMap,
+    runner: &mut F,
+    lease: &Json,
+) where
+    F: FnMut(&JobSpec) -> Result<JobOutcome>,
+{
+    let seq = lease
+        .get("seq")
+        .and_then(Json::as_usize)
+        .map(|s| s as u64)
+        .unwrap_or(u64::MAX);
+    let ttl = Duration::from_secs(
+        lease
+            .get("lease_secs")
+            .and_then(Json::as_usize)
+            .unwrap_or(60)
+            .max(1) as u64,
+    );
+    let afp = lease
+        .get("afp")
+        .and_then(Json::as_str)
+        .unwrap_or("absent")
+        .to_string();
+    // Renew at a third of the TTL; register before any slow work
+    // (artifact sync included) so a long download cannot expire the
+    // lease. The token ties the registration to THIS run: if this
+    // lease expires and the same seq is re-leased to a sibling thread,
+    // neither this run's epilogue nor its heartbeat 409 may unregister
+    // the newer run's renewals.
+    let token = RUN_TOKEN.fetch_add(1, Ordering::Relaxed);
+    in_flight.lock().unwrap().insert(
+        seq,
+        InFlight { ttl, next_renew: Instant::now() + ttl / 3, token },
+    );
+    let t = Timer::start();
+    let (status, from_cache) =
+        execute_lease(opts, cache, store, stats, runner, lease, &afp);
+    {
+        let mut map = in_flight.lock().unwrap();
+        if map.get(&seq).map(|e| e.token) == Some(token) {
+            map.remove(&seq);
+        }
+    }
+    match &status {
+        JobStatus::Done(_) if from_cache => {
+            stats.cached.fetch_add(1, Ordering::Relaxed);
+            stats.done.fetch_add(1, Ordering::Relaxed);
+        }
+        JobStatus::Done(_) => {
+            stats.done.fetch_add(1, Ordering::Relaxed);
+        }
+        _ => {
+            stats.failed.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+    if !post_result(opts, seq, &status, from_cache, t.total()) {
+        stats.conflicts.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// The sync → cache → run core of one lease; returns the job status
+/// plus whether it came from the local cache.
+fn execute_lease<F>(
+    opts: &WorkerOptions,
+    cache: &ResultCache,
+    store: &ArtifactStore,
+    stats: &StatCounters,
+    runner: &mut F,
+    lease: &Json,
+    afp: &str,
+) -> (JobStatus, bool)
+where
+    F: FnMut(&JobSpec) -> Result<JobOutcome>,
+{
+    let Some(wire) = lease.get("spec") else {
+        return (JobStatus::Failed("lease carries no spec".into()), false);
+    };
+    let mut spec = match JobSpec::from_wire(wire) {
+        Ok(s) => s,
+        Err(e) => {
+            return (
+                JobStatus::Failed(format!("bad wire spec: {e:#}")),
+                false,
+            )
+        }
+    };
+    // End-to-end fidelity check: the reconstructed spec must hash to
+    // exactly what the gateway leased, else the two sides would run —
+    // and cache — different cells under one seq.
+    let want_hash = lease.get("hash").and_then(Json::as_str).unwrap_or("");
+    if spec.hash_hex() != want_hash {
+        return (
+            JobStatus::Failed(format!(
+                "wire spec hash mismatch (got {}, lease says {want_hash}; \
+                 gateway/worker version skew?)",
+                spec.hash_hex()
+            )),
+            false,
+        );
+    }
+    // Artifact sync: on a gateway fingerprint, run against the synced
+    // copy; `"absent"` means the gateway itself had no artifacts and
+    // this worker falls back to its own local resolution.
+    let cache_afp = if afp == "absent" {
+        super::artifact_fingerprint(&spec.cfg)
+    } else {
+        let had_it = store.contains(afp);
+        let dir = store.ensure(afp, || fetch_artifacts(opts, afp));
+        match dir {
+            Ok(d) => {
+                if !had_it {
+                    stats.synced.fetch_add(1, Ordering::Relaxed);
+                }
+                spec.cfg.artifacts_dir = d.to_string_lossy().into_owned();
+                afp.to_string()
+            }
+            Err(e) => {
+                return (
+                    JobStatus::Failed(format!(
+                        "artifact sync of {afp} failed: {e:#}"
+                    )),
+                    false,
+                )
+            }
+        }
+    };
+    // The gateway's `--force` travels with the lease: a recompute
+    // request must defeat the worker's local cache too.
+    let force = opts.force
+        || lease.get("force").and_then(Json::as_bool) == Some(true);
+    if force {
+        cache.invalidate(&spec);
+    } else if let Some(out) = cache.get(&spec, &cache_afp) {
+        return (JobStatus::Done(out), true);
+    }
+    let run = catch_unwind(AssertUnwindSafe(|| runner(&spec)));
+    match run {
+        Ok(Ok(out)) => {
+            if let Err(e) = cache.put(&spec, &cache_afp, &out) {
+                eprintln!(
+                    "warning: cache write failed for {} ({}): {e:#}",
+                    spec.label(),
+                    spec.hash_hex()
+                );
+            }
+            (JobStatus::Done(out), false)
+        }
+        Ok(Err(e)) => (JobStatus::Failed(format!("{e:#}")), false),
+        Err(p) => (JobStatus::Panicked(panic_message(p.as_ref())), false),
+    }
+}
+
+/// Report one result; retried briefly because losing a finished
+/// training run to a transient network blip is expensive. `false` when
+/// the gateway rejected the result (lease conflict) or never took it.
+fn post_result(
+    opts: &WorkerOptions,
+    seq: u64,
+    status: &JobStatus,
+    from_cache: bool,
+    secs: f64,
+) -> bool {
+    let body = match status {
+        JobStatus::Done(out) => format!(
+            "{{\"worker\":\"{}\",\"status\":\"done\",\"cached\":{},\
+             \"secs\":{},\"outcome\":{}}}",
+            esc(&opts.worker_id),
+            from_cache,
+            ser_f(secs),
+            cache::ser_outcome(out),
+        ),
+        JobStatus::Failed(e) | JobStatus::Panicked(e) => format!(
+            "{{\"worker\":\"{}\",\"status\":\"{}\",\"secs\":{},\
+             \"error\":\"{}\"}}",
+            esc(&opts.worker_id),
+            status.tag(),
+            ser_f(secs),
+            esc(e),
+        ),
+    };
+    let path = format!("/work/{seq}/result");
+    for attempt in 0..3 {
+        match http_json(
+            &opts.connect,
+            "POST",
+            &path,
+            body.as_bytes(),
+            Duration::from_secs(30),
+        ) {
+            Ok((200, _)) => return true,
+            Ok((409, _)) => {
+                eprintln!(
+                    "omgd worker: result for job {seq} dropped \
+                     (lease expired; job was re-dispatched)"
+                );
+                return false;
+            }
+            Ok((code, j)) => {
+                eprintln!(
+                    "omgd worker: result for job {seq} rejected \
+                     (HTTP {code}): {j:?}"
+                );
+                return false;
+            }
+            Err(_) if attempt + 1 < 3 => {
+                std::thread::sleep(Duration::from_millis(500));
+            }
+            Err(e) => {
+                eprintln!(
+                    "omgd worker: could not report job {seq} ({e:#}); \
+                     the gateway will re-dispatch it on lease expiry"
+                );
+                return false;
+            }
+        }
+    }
+    false
+}
+
+fn fetch_artifacts(opts: &WorkerOptions, fp: &str) -> Result<Vec<u8>> {
+    let (status, body) = http_bytes(
+        &opts.connect,
+        "GET",
+        &format!("/artifacts/{fp}"),
+        &[],
+        Duration::from_secs(120),
+    )?;
+    if status != 200 {
+        bail!(
+            "GET /artifacts/{fp} returned HTTP {status}: {}",
+            String::from_utf8_lossy(&body)
+        );
+    }
+    Ok(body)
+}
+
+/// Renew every in-flight lease that is due. Renewal failures are
+/// tolerated silently (the job keeps running; at worst the gateway
+/// re-dispatches and this worker's result is dropped as a conflict) —
+/// except a `409`, which means the lease is already lost, so renewing
+/// stops.
+fn heartbeat_loop(
+    opts: &WorkerOptions,
+    in_flight: &InFlightMap,
+    stop: &AtomicBool,
+) {
+    let body = format!("{{\"worker\":\"{}\"}}", esc(&opts.worker_id));
+    while !stop.load(Ordering::SeqCst) {
+        std::thread::sleep(Duration::from_millis(200));
+        let due: Vec<(u64, Duration, u64)> = {
+            let now = Instant::now();
+            let map = in_flight.lock().unwrap();
+            map.iter()
+                .filter(|(_, e)| e.next_renew <= now)
+                .map(|(&seq, e)| (seq, e.ttl, e.token))
+                .collect()
+        };
+        for (seq, ttl, token) in due {
+            // Only a definitive 409 means the lease is gone. Transport
+            // errors and transient rejections (503 connection cap, …)
+            // keep the renewal scheduled — dropping it on a blip would
+            // let a healthy long job's lease expire mid-run.
+            let lease_gone = matches!(
+                http_json(
+                    &opts.connect,
+                    "POST",
+                    &format!("/work/{seq}/renew"),
+                    body.as_bytes(),
+                    Duration::from_secs(10),
+                ),
+                Ok((409, _))
+            );
+            let mut map = in_flight.lock().unwrap();
+            // Touch the registration only if it is still the run we
+            // just renewed for (token match) — never a successor's.
+            if let Some(entry) = map.get_mut(&seq) {
+                if entry.token != token {
+                    continue;
+                }
+                if lease_gone {
+                    // Stop renewing, let the run finish — its result
+                    // will be dropped as stale.
+                    map.remove(&seq);
+                } else {
+                    entry.next_renew = Instant::now() + ttl / 3;
+                }
+            }
+        }
+    }
+}
+
+fn backoff(failures: usize) -> Duration {
+    Duration::from_millis(250 * failures.min(8) as u64)
+}
+
+// ---------------------------------------------------------------------
+// Remote grid submission
+// ---------------------------------------------------------------------
+
+/// Submit `specs` to a gateway as one `POST /jobs` session and collect
+/// the results into a [`GridReport`] ordered like the input — the same
+/// shape [`super::run_grid`] returns, so callers print/CSV identically.
+///
+/// Each request line is `{"spec":<wire>}` (full fidelity) and each
+/// ack's hash is checked against the locally-built cell, so a gateway
+/// running skewed code fails loudly instead of aggregating the wrong
+/// sweep. A saturated gateway (`429`) is retried with backoff.
+pub fn run_grid_remote(
+    addr: &str,
+    specs: Vec<JobSpec>,
+) -> Result<GridReport> {
+    if specs.is_empty() {
+        return Ok(GridReport::new(Vec::new()));
+    }
+    let body: String = specs
+        .iter()
+        .map(|s| format!("{{\"spec\":{}}}\n", s.to_wire()))
+        .collect();
+    // The returned reader is already positioned at the NDJSON body.
+    let mut reader = post_jobs_with_retry(addr, body.as_bytes())?;
+
+    // seq (gateway) → index (ours). Acks and rejects arrive in request
+    // order, so the n-th ack-or-reject line belongs to specs[n].
+    let mut seq_to_idx: HashMap<u64, usize> = HashMap::new();
+    let mut next_idx = 0usize;
+    let mut statuses: Vec<Option<(JobStatus, bool, f64)>> =
+        vec![None; specs.len()];
+    let mut line = String::new();
+    loop {
+        line.clear();
+        let n = reader
+            .read_line(&mut line)
+            .context("reading result stream")?;
+        if n == 0 {
+            break; // gateway closed the stream: session over
+        }
+        let text = line.trim();
+        if text.is_empty() {
+            continue;
+        }
+        let j = Json::parse(text).map_err(|e| {
+            anyhow!("gateway sent a non-JSON line {text:?}: {e}")
+        })?;
+        if let Some(seq) = j.get("accepted").and_then(Json::as_usize) {
+            if next_idx >= specs.len() {
+                bail!("gateway acked more jobs than were submitted");
+            }
+            let want = specs[next_idx].hash_hex();
+            let got = j.get("hash").and_then(Json::as_str).unwrap_or("");
+            if got != want {
+                bail!(
+                    "spec hash mismatch on cell {next_idx} \
+                     ({}): ours {want}, gateway {got} — version skew?",
+                    specs[next_idx].label()
+                );
+            }
+            seq_to_idx.insert(seq as u64, next_idx);
+            next_idx += 1;
+        } else if let Some(tag) = j.get("status").and_then(Json::as_str) {
+            let seq = j
+                .get("seq")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("result line without seq"))? as u64;
+            let idx = *seq_to_idx
+                .get(&seq)
+                .ok_or_else(|| anyhow!("result for unknown seq {seq}"))?;
+            let err = || {
+                j.get("error")
+                    .and_then(Json::as_str)
+                    .unwrap_or("remote failure")
+                    .to_string()
+            };
+            let status = match tag {
+                "done" => JobStatus::Done(outcome_from_result(&j)),
+                "failed" => JobStatus::Failed(err()),
+                "panicked" => JobStatus::Panicked(err()),
+                other => bail!("unknown result status {other:?}"),
+            };
+            let cached =
+                j.get("cached").and_then(Json::as_bool).unwrap_or(false);
+            let secs =
+                j.get("secs").and_then(Json::as_f64).unwrap_or(0.0);
+            statuses[idx] = Some((status, cached, secs));
+        } else if let Some(msg) = j.get("error").and_then(Json::as_str) {
+            // Reject line: consumes the next request slot.
+            if next_idx >= specs.len() {
+                bail!("gateway rejected more lines than were submitted");
+            }
+            statuses[next_idx] =
+                Some((JobStatus::Failed(msg.to_string()), false, 0.0));
+            next_idx += 1;
+        } else {
+            bail!("unrecognized stream line {text:?}");
+        }
+    }
+
+    let results: Vec<JobResult> = specs
+        .into_iter()
+        .enumerate()
+        .map(|(i, spec)| {
+            let (status, from_cache, secs) =
+                statuses[i].take().unwrap_or((
+                    JobStatus::Failed(
+                        "gateway closed the stream before this cell's \
+                         result arrived"
+                            .into(),
+                    ),
+                    false,
+                    0.0,
+                ));
+            JobResult { seq: i as u64, spec, status, from_cache, secs }
+        })
+        .collect();
+    Ok(GridReport::new(results))
+}
+
+/// The deterministic outcome slice carried by a result line. Loss/eval
+/// series are not streamed (they live in the gateway-side cache), so
+/// curve CSVs require a local run; the aggregate CSV needs only these.
+fn outcome_from_result(j: &Json) -> JobOutcome {
+    let f = |k: &str| match j.get(k) {
+        Some(Json::Null) => f64::NAN,
+        Some(v) => v.as_f64().unwrap_or(f64::NAN),
+        None => f64::NAN,
+    };
+    JobOutcome {
+        final_metric: f("final_metric"),
+        tail_loss: f("tail_loss"),
+        steps: j.get("steps").and_then(Json::as_usize).unwrap_or(0),
+        train_secs: f("secs"),
+        loss_series: Vec::new(),
+        eval_series: Vec::new(),
+    }
+}
+
+/// POST the session body, honoring `429 Retry-After` with bounded
+/// retries; on `200` returns a reader positioned at the start of the
+/// NDJSON body (the buffered reader owns the socket — it may have
+/// read ahead past the headers, so the raw stream must not be reused).
+fn post_jobs_with_retry(
+    addr: &str,
+    body: &[u8],
+) -> Result<BufReader<TcpStream>> {
+    const MAX_RETRIES: usize = 30;
+    for attempt in 0..=MAX_RETRIES {
+        let mut stream = connect(addr)?;
+        // Results can be minutes apart mid-grid: no read timeout on
+        // the session stream (a dead gateway still EOFs via TCP).
+        stream
+            .set_write_timeout(Some(Duration::from_secs(60)))
+            .ok();
+        write!(
+            stream,
+            "POST /jobs HTTP/1.1\r\nHost: omgd\r\nContent-Type: \
+             application/x-ndjson\r\nContent-Length: {}\r\n\
+             Connection: close\r\n\r\n",
+            body.len()
+        )?;
+        stream.write_all(body)?;
+        stream.flush()?;
+        let mut reader = BufReader::new(stream);
+        let mut status_line = String::new();
+        reader.read_line(&mut status_line)?;
+        let status = parse_status_line(&status_line)?;
+        let headers = read_headers(&mut reader)?;
+        match status {
+            200 => return Ok(reader),
+            // Retry only transient rejections, which carry Retry-After
+            // (queue saturation 429, connection-cap 503). The gateway's
+            // drain-mode 503 has no Retry-After and never reverts —
+            // fail it immediately instead of resubmitting for ~30s.
+            429 | 503
+                if attempt < MAX_RETRIES
+                    && headers.contains_key("retry-after") =>
+            {
+                let secs = headers
+                    .get("retry-after")
+                    .and_then(|v| v.parse::<u64>().ok())
+                    .unwrap_or(1);
+                eprintln!(
+                    "gateway busy (HTTP {status}); retrying in {secs}s \
+                     [{}/{MAX_RETRIES}]",
+                    attempt + 1
+                );
+                std::thread::sleep(Duration::from_secs(secs.clamp(1, 30)));
+            }
+            other => {
+                let mut body = String::new();
+                if let Some(len) = headers
+                    .get("content-length")
+                    .and_then(|v| v.parse::<usize>().ok())
+                {
+                    let mut buf = vec![0u8; len.min(64 << 10)];
+                    let _ = reader.read_exact(&mut buf);
+                    body = String::from_utf8_lossy(&buf).into_owned();
+                }
+                bail!("gateway rejected the grid (HTTP {other}): {body}");
+            }
+        }
+    }
+    bail!("gateway stayed saturated after {MAX_RETRIES} retries (429)")
+}
+
+// ---------------------------------------------------------------------
+// Minimal HTTP/1.1 client (std::net only)
+// ---------------------------------------------------------------------
+
+fn connect(addr: &str) -> Result<TcpStream> {
+    TcpStream::connect(addr)
+        .with_context(|| format!("connecting to gateway {addr}"))
+}
+
+/// One request/response round trip; the response body is read fully
+/// (via `Content-Length`, else to EOF — every gateway response closes
+/// the connection).
+fn http_bytes(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: &[u8],
+    timeout: Duration,
+) -> Result<(u16, Vec<u8>)> {
+    let mut stream = connect(addr)?;
+    stream.set_read_timeout(Some(timeout)).ok();
+    stream.set_write_timeout(Some(timeout)).ok();
+    write!(
+        stream,
+        "{method} {path} HTTP/1.1\r\nHost: omgd\r\nContent-Type: \
+         application/json\r\nContent-Length: {}\r\nConnection: close\
+         \r\n\r\n",
+        body.len()
+    )?;
+    stream.write_all(body)?;
+    stream.flush()?;
+    let mut reader = BufReader::new(stream);
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line).context("reading status")?;
+    let status = parse_status_line(&status_line)?;
+    let headers = read_headers(&mut reader)?;
+    let body = match headers
+        .get("content-length")
+        .and_then(|v| v.parse::<usize>().ok())
+    {
+        Some(len) => {
+            let mut buf = vec![0u8; len];
+            reader
+                .read_exact(&mut buf)
+                .context("reading response body")?;
+            buf
+        }
+        None => {
+            let mut buf = Vec::new();
+            reader
+                .read_to_end(&mut buf)
+                .context("reading response body")?;
+            buf
+        }
+    };
+    Ok((status, body))
+}
+
+/// [`http_bytes`] with the response parsed as JSON.
+fn http_json(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: &[u8],
+    timeout: Duration,
+) -> Result<(u16, Json)> {
+    let (status, bytes) = http_bytes(addr, method, path, body, timeout)?;
+    let text = String::from_utf8_lossy(&bytes);
+    let j = Json::parse(text.trim()).map_err(|e| {
+        anyhow!("gateway sent non-JSON ({e}): {:?}", text.trim())
+    })?;
+    Ok((status, j))
+}
+
+fn parse_status_line(line: &str) -> Result<u16> {
+    let code = line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|c| c.parse::<u16>().ok());
+    code.ok_or_else(|| anyhow!("malformed HTTP status line {line:?}"))
+}
+
+/// Read response headers up to the blank line; names lowercased.
+fn read_headers<R: BufRead>(
+    reader: &mut R,
+) -> Result<HashMap<String, String>> {
+    let mut headers = HashMap::new();
+    for _ in 0..100 {
+        let mut h = String::new();
+        if reader.read_line(&mut h)? == 0 {
+            bail!("eof inside response headers");
+        }
+        let h = h.trim_end();
+        if h.is_empty() {
+            return Ok(headers);
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            headers.insert(
+                k.trim().to_ascii_lowercase(),
+                v.trim().to_string(),
+            );
+        }
+    }
+    bail!("too many response headers")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RunConfig;
+    use crate::jobs::spec::ExperimentKind;
+
+    #[test]
+    fn status_lines_parse() {
+        assert_eq!(parse_status_line("HTTP/1.1 200 OK\r\n").unwrap(), 200);
+        assert_eq!(
+            parse_status_line("HTTP/1.1 429 Too Many Requests").unwrap(),
+            429
+        );
+        assert!(parse_status_line("garbage").is_err());
+        assert!(parse_status_line("").is_err());
+    }
+
+    #[test]
+    fn response_headers_parse_and_lowercase() {
+        let raw = "Content-Length: 12\r\nRetry-After: 1\r\n\r\nBODY";
+        let mut r = raw.as_bytes();
+        let h = read_headers(&mut r).unwrap();
+        assert_eq!(h.get("content-length").map(String::as_str), Some("12"));
+        assert_eq!(h.get("retry-after").map(String::as_str), Some("1"));
+        assert!(read_headers(&mut "no terminator".as_bytes()).is_err());
+    }
+
+    #[test]
+    fn result_outcomes_tolerate_null_metrics() {
+        let j = Json::parse(
+            "{\"seq\":0,\"status\":\"done\",\"final_metric\":null,\
+             \"tail_loss\":0.5,\"steps\":7,\"secs\":1.25}",
+        )
+        .unwrap();
+        let o = outcome_from_result(&j);
+        assert!(o.final_metric.is_nan());
+        assert_eq!(o.tail_loss, 0.5);
+        assert_eq!(o.steps, 7);
+    }
+
+    #[test]
+    fn worker_ids_are_process_unique() {
+        let id = default_worker_id();
+        assert!(id.ends_with(&format!("-{}", std::process::id())));
+    }
+
+    #[test]
+    fn empty_remote_grid_short_circuits() {
+        // No gateway needed: zero cells is a complete report.
+        let report = run_grid_remote("127.0.0.1:1", Vec::new()).unwrap();
+        assert_eq!(report.n_jobs(), 0);
+    }
+
+    #[test]
+    fn unreachable_gateway_is_an_error_not_a_hang() {
+        let spec = JobSpec {
+            kind: ExperimentKind::Pretrain,
+            cfg: RunConfig::default(),
+        };
+        // Port 1 is essentially never listening; connect must fail
+        // fast with a contextual error.
+        let err = run_grid_remote("127.0.0.1:1", vec![spec]).unwrap_err();
+        assert!(format!("{err:#}").contains("connecting to gateway"));
+    }
+}

@@ -24,9 +24,18 @@
 //! backpressure is [`SessionOptions::max_in_flight`]: submission of the
 //! next request blocks until a result drains. Full protocol spec with
 //! examples: `docs/serve-protocol.md`.
+//!
+//! Besides the local pool, queued jobs can be **leased** to remote
+//! workers ([`JobHub::try_lease`] / [`JobHub::complete_remote`], used
+//! by the gateway's `/work/*` endpoints — see [`super::net`] and
+//! [`super::remote`]): a lease parks the job in a table with a TTL, a
+//! completed lease dispatches through the same seq-routed channel a
+//! local result would, and an expired lease is requeued **with its
+//! original seq** so the submitting session's ack stays valid across
+//! worker crashes.
 
 use super::pool::{worker_loop, JobOutcome, JobResult, JobStatus};
-use super::queue::{JobQueue, TryPush};
+use super::queue::{Job, JobQueue, PopTimeout, TryPush};
 use super::spec::JobSpec;
 use super::{cached_runner, open_cache, GridOptions};
 use crate::util::json::Json;
@@ -35,6 +44,7 @@ use std::collections::HashMap;
 use std::io::{BufRead, Write};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 /// Counters for one serve session.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -74,11 +84,74 @@ impl Default for SessionOptions {
 pub struct JobHub {
     pub queue: JobQueue,
     routes: Mutex<HashMap<u64, mpsc::Sender<JobResult>>>,
+    /// Jobs currently leased to remote workers, keyed by seq. An
+    /// expired entry is requeued (same seq) by [`Self::requeue_expired`]
+    /// so a crashed or partitioned worker's jobs are re-dispatched.
+    leases: Mutex<HashMap<u64, LeaseEntry>>,
     accepted: AtomicUsize,
     rejected: AtomicUsize,
     done: AtomicUsize,
     failed: AtomicUsize,
     cached: AtomicUsize,
+    leased: AtomicUsize,
+    requeued: AtomicUsize,
+    conflicts: AtomicUsize,
+}
+
+struct LeaseEntry {
+    spec: JobSpec,
+    priority: i32,
+    afp: String,
+    worker: String,
+    expires: Instant,
+}
+
+/// Hub-lifetime remote-worker counters (the `"remote"` block of
+/// `GET /stats`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RemoteStats {
+    /// Leases granted to remote workers.
+    pub leased: usize,
+    /// Expired leases re-dispatched into the queue.
+    pub requeued: usize,
+    /// Stale remote completions/renewals rejected (lease lost).
+    pub conflicts: usize,
+}
+
+/// What a lease request got.
+#[derive(Debug)]
+pub enum LeaseReply {
+    /// One job, now owned by the requesting worker until `ttl` elapses
+    /// (renewable).
+    Granted(LeaseInfo),
+    /// Queue open but empty for the whole wait window.
+    Idle,
+    /// Queue closed/cancelled: no job will ever arrive again.
+    Closed,
+}
+
+/// The leased job plus everything a remote worker needs to run it.
+#[derive(Debug)]
+pub struct LeaseInfo {
+    pub seq: u64,
+    pub priority: i32,
+    pub spec: JobSpec,
+    /// The gateway's artifact fingerprint for the spec's model
+    /// (`"absent"` when the gateway has no artifacts for it) — the
+    /// worker's sync key *and* the cache key on both ends.
+    pub afp: String,
+    pub ttl: Duration,
+}
+
+/// Outcome of a remote completion ([`JobHub::complete_remote`]).
+pub enum RemoteDone {
+    /// The result was dispatched; the gateway may now cache it under
+    /// `(spec, afp)`.
+    Accepted { spec: JobSpec, afp: String },
+    /// The caller no longer holds the lease (it expired and was
+    /// re-dispatched, or another worker owns it): the result was
+    /// dropped. Exactly-once dispatch is preserved by the re-run.
+    Conflict,
 }
 
 impl JobHub {
@@ -87,11 +160,15 @@ impl JobHub {
         Self {
             queue: JobQueue::bounded(queue_capacity),
             routes: Mutex::new(HashMap::new()),
+            leases: Mutex::new(HashMap::new()),
             accepted: AtomicUsize::new(0),
             rejected: AtomicUsize::new(0),
             done: AtomicUsize::new(0),
             failed: AtomicUsize::new(0),
             cached: AtomicUsize::new(0),
+            leased: AtomicUsize::new(0),
+            requeued: AtomicUsize::new(0),
+            conflicts: AtomicUsize::new(0),
         }
     }
 
@@ -155,23 +232,187 @@ impl JobHub {
         )
     }
 
-    /// Router loop: drain worker results, bump counters, hand each
-    /// result to its session's reply channel. A vanished session (send
-    /// fails) is fine — the job still ran and was cached.
+    /// Router loop: drain worker results and dispatch each one.
     pub(crate) fn route(&self, rx: mpsc::Receiver<JobResult>) {
         for r in rx {
-            if r.from_cache {
-                self.cached.fetch_add(1, Ordering::Relaxed);
+            self.dispatch(r);
+        }
+    }
+
+    /// Bump the completion counters and hand one result to the session
+    /// that submitted it. A vanished session (send fails) is fine — the
+    /// job still ran and was cached. Shared by the local-pool router and
+    /// the remote completion path, so both provide exactly-once dispatch
+    /// through the same `routes.remove`.
+    fn dispatch(&self, r: JobResult) {
+        if r.from_cache {
+            self.cached.fetch_add(1, Ordering::Relaxed);
+        }
+        if r.is_ok() {
+            self.done.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.failed.fetch_add(1, Ordering::Relaxed);
+        }
+        let reply = self.routes.lock().unwrap().remove(&r.seq);
+        if let Some(tx) = reply {
+            let _ = tx.send(r);
+        }
+    }
+
+    /// Lease one queued job to a remote worker: wait up to `wait` for
+    /// work, then record the lease (expiring after `ttl`, renewable via
+    /// [`Self::renew`]). Expired leases are swept first, so a single
+    /// polling worker also drives re-dispatch.
+    pub fn try_lease(
+        &self,
+        worker: &str,
+        ttl: Duration,
+        wait: Duration,
+    ) -> LeaseReply {
+        self.requeue_expired();
+        match self.queue.pop_timeout(wait) {
+            PopTimeout::Job(job) => {
+                let afp = super::artifact_fingerprint(&job.spec.cfg);
+                let info = LeaseInfo {
+                    seq: job.seq,
+                    priority: job.priority,
+                    spec: job.spec.clone(),
+                    afp: afp.clone(),
+                    ttl,
+                };
+                self.leases.lock().unwrap().insert(
+                    job.seq,
+                    LeaseEntry {
+                        spec: job.spec,
+                        priority: job.priority,
+                        afp,
+                        worker: worker.to_string(),
+                        expires: Instant::now() + ttl,
+                    },
+                );
+                self.leased.fetch_add(1, Ordering::Relaxed);
+                LeaseReply::Granted(info)
             }
-            if r.is_ok() {
-                self.done.fetch_add(1, Ordering::Relaxed);
+            PopTimeout::Empty => LeaseReply::Idle,
+            PopTimeout::Closed => LeaseReply::Closed,
+        }
+    }
+
+    /// Extend `worker`'s lease on `seq` by `ttl` from now. `false` when
+    /// the lease is gone (expired and re-dispatched) or owned by
+    /// another worker — the caller should stop renewing and expect its
+    /// eventual result to be rejected as a conflict.
+    pub fn renew(&self, seq: u64, worker: &str, ttl: Duration) -> bool {
+        let renewed = {
+            let mut leases = self.leases.lock().unwrap();
+            match leases.get_mut(&seq) {
+                Some(e) if e.worker == worker => {
+                    e.expires = Instant::now() + ttl;
+                    true
+                }
+                _ => false,
+            }
+        };
+        if !renewed {
+            self.conflicts.fetch_add(1, Ordering::Relaxed);
+        }
+        renewed
+    }
+
+    /// Complete a remotely-leased job: verify the caller still holds
+    /// the lease, then dispatch the result exactly like a local
+    /// worker's. A late result from an expired lease is dropped
+    /// ([`RemoteDone::Conflict`]) — the re-dispatched copy will produce
+    /// the (deterministic) result instead, so a session never sees two
+    /// results for one seq.
+    pub fn complete_remote(
+        &self,
+        seq: u64,
+        worker: &str,
+        status: JobStatus,
+        from_cache: bool,
+        secs: f64,
+    ) -> RemoteDone {
+        let entry = {
+            let mut leases = self.leases.lock().unwrap();
+            let owned =
+                matches!(leases.get(&seq), Some(e) if e.worker == worker);
+            if owned {
+                leases.remove(&seq)
             } else {
-                self.failed.fetch_add(1, Ordering::Relaxed);
+                None
             }
-            let reply = self.routes.lock().unwrap().remove(&r.seq);
-            if let Some(tx) = reply {
-                let _ = tx.send(r);
+        };
+        match entry {
+            Some(e) => {
+                self.dispatch(JobResult {
+                    seq,
+                    spec: e.spec.clone(),
+                    status,
+                    from_cache,
+                    secs,
+                });
+                RemoteDone::Accepted { spec: e.spec, afp: e.afp }
             }
+            None => {
+                self.conflicts.fetch_add(1, Ordering::Relaxed);
+                RemoteDone::Conflict
+            }
+        }
+    }
+
+    /// Requeue every expired lease (same seq, same priority) so the
+    /// job is re-dispatched to the local pool or the next leasing
+    /// worker. If the queue refuses (cancelled), the job is reported
+    /// failed instead of leaving its session waiting forever. Returns
+    /// how many leases were re-dispatched.
+    pub fn requeue_expired(&self) -> usize {
+        let now = Instant::now();
+        let expired: Vec<(u64, LeaseEntry)> = {
+            let mut leases = self.leases.lock().unwrap();
+            let seqs: Vec<u64> = leases
+                .iter()
+                .filter(|(_, e)| e.expires <= now)
+                .map(|(&s, _)| s)
+                .collect();
+            seqs.into_iter()
+                .filter_map(|s| leases.remove(&s).map(|e| (s, e)))
+                .collect()
+        };
+        let mut n = 0;
+        for (seq, e) in expired {
+            let spec = e.spec.clone();
+            let job = Job { seq, priority: e.priority, spec: e.spec };
+            match self.queue.requeue(job) {
+                Ok(()) => {
+                    n += 1;
+                    self.requeued.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(err) => self.dispatch(JobResult {
+                    seq,
+                    spec,
+                    status: JobStatus::Failed(format!(
+                        "worker lease expired and re-dispatch failed: {err}"
+                    )),
+                    from_cache: false,
+                    secs: 0.0,
+                }),
+            }
+        }
+        n
+    }
+
+    /// Number of jobs currently leased out to remote workers.
+    pub fn n_leased(&self) -> usize {
+        self.leases.lock().unwrap().len()
+    }
+
+    /// Hub-lifetime remote-lease counters.
+    pub fn remote_counters(&self) -> RemoteStats {
+        RemoteStats {
+            leased: self.leased.load(Ordering::Relaxed),
+            requeued: self.requeued.load(Ordering::Relaxed),
+            conflicts: self.conflicts.load(Ordering::Relaxed),
         }
     }
 }
@@ -179,6 +420,13 @@ impl JobHub {
 /// Run `body` against a live hub: spawns `workers` worker threads (each
 /// with per-thread state from `make_worker`) plus the result router,
 /// then closes the queue and drains once `body` returns.
+///
+/// `workers == 0` is allowed and spawns no local pool — the
+/// coordinator-only shape of `omgd serve --listen --workers 0`, where
+/// every job is drained by remotely-leased workers instead
+/// ([`JobHub::try_lease`]). With zero workers *and* no remote leasing,
+/// submitted jobs wait forever; front-ends that cannot lease remotely
+/// must pass ≥ 1.
 ///
 /// Deadlock discipline: nothing between the spawns and `queue.close()`
 /// early-returns, so workers can never be left blocked on `pop()`.
@@ -197,7 +445,7 @@ where
         let (tx, rx) = mpsc::channel::<JobResult>();
         let make = &make_worker;
         let hub_ref = &hub;
-        for wid in 0..workers.max(1) {
+        for wid in 0..workers {
             let tx = tx.clone();
             s.spawn(move || {
                 let mut work = make(wid);
@@ -308,7 +556,15 @@ where
             }
             let priority =
                 j.get("priority").and_then(Json::as_f64).unwrap_or(0.0) as i32;
-            let spec = match JobSpec::from_json(&j) {
+            // Two request shapes: the operator-facing field set
+            // (`JobSpec::from_json`), or — under a `"spec"` key — the
+            // full-fidelity wire object `grid --remote` submits so no
+            // RunConfig field is lost in transit.
+            let parsed = match j.get("spec") {
+                Some(sj) => JobSpec::from_wire(sj),
+                None => JobSpec::from_json(&j),
+            };
+            let spec = match parsed {
                 Ok(spec) => spec,
                 Err(e) => {
                     rejected += 1;
@@ -584,6 +840,181 @@ this is not json\n\
                 assert!(j.get("status").is_some(), "line {i}: {l}");
             }
         }
+    }
+
+    fn mk_spec(seed: u64) -> JobSpec {
+        let mut cfg = crate::config::RunConfig::default();
+        cfg.seed = seed;
+        // Point at a directory that cannot exist so the artifact
+        // fingerprint is deterministically "absent".
+        cfg.artifacts_dir = "/nonexistent/omgd-test-artifacts".into();
+        JobSpec {
+            kind: crate::jobs::spec::ExperimentKind::Pretrain,
+            cfg,
+        }
+    }
+
+    #[test]
+    fn lease_renew_and_complete_lifecycle() {
+        let hub = JobHub::new(4);
+        let seq = hub.queue.push(mk_spec(1), 0).unwrap();
+        // Grant
+        let info = match hub.try_lease(
+            "w1",
+            Duration::from_secs(60),
+            Duration::ZERO,
+        ) {
+            LeaseReply::Granted(i) => i,
+            other => panic!("expected Granted, got {other:?}"),
+        };
+        assert_eq!(info.seq, seq);
+        assert_eq!(info.afp, "absent");
+        assert_eq!(hub.n_leased(), 1);
+        // Empty queue now → Idle
+        assert!(matches!(
+            hub.try_lease("w2", Duration::from_secs(60), Duration::ZERO),
+            LeaseReply::Idle
+        ));
+        // Renewal: owner only
+        assert!(hub.renew(seq, "w1", Duration::from_secs(60)));
+        assert!(!hub.renew(seq, "w2", Duration::from_secs(60)));
+        assert!(!hub.renew(999, "w1", Duration::from_secs(60)));
+        // Wrong-worker completion is a conflict and dispatches nothing.
+        assert!(matches!(
+            hub.complete_remote(
+                seq,
+                "w2",
+                JobStatus::Failed("hijack".into()),
+                false,
+                0.0
+            ),
+            RemoteDone::Conflict
+        ));
+        assert_eq!(hub.n_leased(), 1);
+        // Owner completion dispatches and frees the lease.
+        let done = hub.complete_remote(
+            seq,
+            "w1",
+            JobStatus::Done(JobOutcome::default()),
+            false,
+            0.5,
+        );
+        match done {
+            RemoteDone::Accepted { spec, afp } => {
+                assert_eq!(spec.cfg.seed, 1);
+                assert_eq!(afp, "absent");
+            }
+            RemoteDone::Conflict => panic!("owner completion conflicted"),
+        }
+        assert_eq!(hub.n_leased(), 0);
+        let (_, _, done_n, failed_n, _) = hub.counters();
+        assert_eq!((done_n, failed_n), (1, 0));
+        // A duplicate (late) completion is a conflict.
+        assert!(matches!(
+            hub.complete_remote(
+                seq,
+                "w1",
+                JobStatus::Done(JobOutcome::default()),
+                false,
+                0.5
+            ),
+            RemoteDone::Conflict
+        ));
+        // Two failed renewals + wrong-worker + duplicate completion.
+        assert_eq!(hub.remote_counters().conflicts, 4);
+    }
+
+    #[test]
+    fn expired_lease_requeues_with_the_same_seq() {
+        let hub = JobHub::new(4);
+        let seq = hub.queue.push(mk_spec(2), 7).unwrap();
+        let info = match hub.try_lease(
+            "dead-worker",
+            Duration::from_millis(5),
+            Duration::ZERO,
+        ) {
+            LeaseReply::Granted(i) => i,
+            other => panic!("expected Granted, got {other:?}"),
+        };
+        assert_eq!(info.seq, seq);
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(hub.requeue_expired(), 1);
+        assert_eq!(hub.n_leased(), 0);
+        assert_eq!(hub.queue.len(), 1);
+        // Re-leased to a healthy worker with identity intact.
+        let again = match hub.try_lease(
+            "w2",
+            Duration::from_secs(60),
+            Duration::ZERO,
+        ) {
+            LeaseReply::Granted(i) => i,
+            other => panic!("expected Granted, got {other:?}"),
+        };
+        assert_eq!((again.seq, again.priority), (seq, 7));
+        // The dead worker's late result is rejected...
+        assert!(matches!(
+            hub.complete_remote(
+                seq,
+                "dead-worker",
+                JobStatus::Done(JobOutcome::default()),
+                false,
+                1.0
+            ),
+            RemoteDone::Conflict
+        ));
+        // ...and the healthy worker's lands.
+        assert!(matches!(
+            hub.complete_remote(
+                seq,
+                "w2",
+                JobStatus::Done(JobOutcome::default()),
+                false,
+                1.0
+            ),
+            RemoteDone::Accepted { .. }
+        ));
+        assert_eq!(hub.remote_counters().requeued, 1);
+    }
+
+    #[test]
+    fn remote_completion_routes_to_the_submitting_session() {
+        let hub = JobHub::new(4);
+        let (tx, rx) = mpsc::channel::<JobResult>();
+        let seq = hub.submit(mk_spec(3), 0, &tx).unwrap();
+        let _info = match hub.try_lease(
+            "w1",
+            Duration::from_secs(60),
+            Duration::ZERO,
+        ) {
+            LeaseReply::Granted(i) => i,
+            other => panic!("expected Granted, got {other:?}"),
+        };
+        hub.complete_remote(
+            seq,
+            "w1",
+            JobStatus::Done(JobOutcome {
+                final_metric: 3.5,
+                ..JobOutcome::default()
+            }),
+            true,
+            0.0,
+        );
+        let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(r.seq, seq);
+        assert!(r.from_cache);
+        assert_eq!(r.outcome().unwrap().final_metric, 3.5);
+        let (_, _, _, _, cached) = hub.counters();
+        assert_eq!(cached, 1);
+    }
+
+    #[test]
+    fn lease_replies_closed_once_the_queue_closes() {
+        let hub = JobHub::new(4);
+        hub.queue.close();
+        assert!(matches!(
+            hub.try_lease("w", Duration::from_secs(1), Duration::ZERO),
+            LeaseReply::Closed
+        ));
     }
 
     #[test]

@@ -9,8 +9,8 @@
 //! artifacts produce the same cells.
 
 use crate::config::{RunConfig, Schedule};
-use crate::util::json::Json;
-use anyhow::{bail, Result};
+use crate::util::json::{escape_str as esc, ser_f64 as ser_f, Json};
+use anyhow::{anyhow, bail, Result};
 
 /// Blob-dataset sizes used by the job runner. They live here — next to
 /// the hash — so the canonical string sees the same values the runner
@@ -206,6 +206,214 @@ impl JobSpec {
     }
 }
 
+/// Version tag of the wire format below. Bump on any field change so a
+/// gateway and a worker built from different revisions fail loudly at
+/// parse time instead of running subtly different cells.
+const WIRE_VERSION: u64 = 1;
+
+impl JobSpec {
+    /// Full-fidelity JSON serialization for shipping a spec between
+    /// hosts (`grid --remote` submission, worker leases).
+    ///
+    /// Unlike the operator-facing [`Self::from_json`] request format —
+    /// which exposes only the commonly-swept knobs — the wire object
+    /// carries **every** field of [`Self::canonical`] (schedule, betas,
+    /// momentum, topk, dataset sizing, ...), so a remote worker runs
+    /// bit-for-bit the same cell a local pool would.
+    ///
+    /// `artifacts_dir` travels as a *location hint*, emitted only when
+    /// explicitly configured (the default resolves host-locally on the
+    /// receiving side): it is outside the content hash, the gateway
+    /// honors it exactly like a local `--artifacts` override (a bad
+    /// path fails loudly), and workers replace it with their synced
+    /// copy anyway. `out_dir` never travels. Floats use
+    /// shortest-round-trip `Display`, so a serialize → parse cycle
+    /// reproduces the identical `f64` and therefore the identical hash
+    /// — consumers verify that hash after [`Self::from_wire`] as an
+    /// end-to-end fidelity check.
+    pub fn to_wire(&self) -> String {
+        let c = &self.cfg;
+        let artifacts_hint =
+            if c.artifacts_dir == RunConfig::default().artifacts_dir {
+                String::new()
+            } else {
+                format!(
+                    ",\"artifacts_dir\":\"{}\"",
+                    esc(&c.artifacts_dir)
+                )
+            };
+        let kind = match &self.kind {
+            ExperimentKind::Finetune { task, epochs } => format!(
+                "{{\"t\":\"finetune\",\"task\":\"{}\",\"epochs\":{epochs}}}",
+                esc(task)
+            ),
+            ExperimentKind::Blobs { dataset, spread, data_seed, epochs } => {
+                format!(
+                    "{{\"t\":\"blobs\",\"dataset\":\"{}\",\"spread\":{},\
+                     \"data_seed\":{data_seed},\"epochs\":{epochs}}}",
+                    esc(dataset),
+                    ser_f(*spread)
+                )
+            }
+            ExperimentKind::Pretrain => "{\"t\":\"pretrain\"}".to_string(),
+        };
+        let schedule = match &c.schedule {
+            Schedule::Constant => "{\"t\":\"constant\"}".to_string(),
+            Schedule::MultiStep { milestones, gamma } => {
+                let ms: Vec<String> =
+                    milestones.iter().map(|m| m.to_string()).collect();
+                format!(
+                    "{{\"t\":\"multistep\",\"milestones\":[{}],\
+                     \"gamma\":{}}}",
+                    ms.join(","),
+                    ser_f(*gamma)
+                )
+            }
+            Schedule::CosineWarmup { warmup, total, min_lr } => format!(
+                "{{\"t\":\"cosine\",\"warmup\":{warmup},\"total\":{total},\
+                 \"min_lr\":{}}}",
+                ser_f(*min_lr)
+            ),
+            Schedule::InvT { c0 } => {
+                format!("{{\"t\":\"inv_t\",\"c0\":{}}}", ser_f(*c0))
+            }
+        };
+        format!(
+            "{{\"v\":{WIRE_VERSION},\"kind\":{kind},\"model\":\"{}\",\
+             \"method\":\"{}\",\"opt\":{{\"family\":\"{}\",\"lr\":{},\
+             \"beta1\":{},\"beta2\":{},\"eps\":{},\"wd\":{},\
+             \"momentum\":{},\"nesterov\":{}}},\"mask\":{{\
+             \"keep_ratio\":{},\"gamma\":{},\"period\":{},\"rank\":{},\
+             \"topk\":{}}},\"schedule\":{schedule},\"steps\":{},\
+             \"eval_every\":{},\"seed\":{},\"dataset_size\":{},\
+             \"data_seed\":{}{artifacts_hint}}}",
+            esc(&c.model),
+            c.method.name(),
+            c.opt.family.name(),
+            ser_f(c.opt.lr),
+            ser_f(c.opt.beta1),
+            ser_f(c.opt.beta2),
+            ser_f(c.opt.eps),
+            ser_f(c.opt.weight_decay),
+            ser_f(c.opt.momentum),
+            c.opt.nesterov,
+            ser_f(c.mask.keep_ratio),
+            c.mask.gamma,
+            c.mask.period,
+            c.mask.rank,
+            ser_f(c.mask.topk),
+            c.steps,
+            c.eval_every,
+            c.seed,
+            c.dataset_size,
+            c.data_seed,
+        )
+    }
+
+    /// Parse a [`Self::to_wire`] object. Fields absent from the wire
+    /// fall back to [`RunConfig::default`] — fidelity is guarded by the
+    /// consumer comparing content hashes, not by strict parsing — but
+    /// an unknown wire *version* or kind/schedule tag is a hard error.
+    pub fn from_wire(j: &Json) -> Result<JobSpec> {
+        let v = j.get("v").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+        if v != WIRE_VERSION {
+            bail!("unsupported wire spec version {v} (want {WIRE_VERSION})");
+        }
+        let kj = j.get("kind").ok_or_else(|| anyhow!("wire spec: no kind"))?;
+        let ks = |o: &Json, k: &str| {
+            o.get(k).and_then(Json::as_str).map(str::to_string)
+        };
+        let kind = match kj.get("t").and_then(Json::as_str) {
+            Some("finetune") => ExperimentKind::Finetune {
+                task: ks(kj, "task")
+                    .ok_or_else(|| anyhow!("finetune kind: no task"))?,
+                epochs: kj.get("epochs").and_then(Json::as_usize).unwrap_or(1),
+            },
+            Some("blobs") => ExperimentKind::Blobs {
+                dataset: ks(kj, "dataset")
+                    .ok_or_else(|| anyhow!("blobs kind: no dataset"))?,
+                spread: kj.get("spread").and_then(Json::as_f64).unwrap_or(4.0),
+                data_seed: kj
+                    .get("data_seed")
+                    .and_then(Json::as_usize)
+                    .unwrap_or(0) as u64,
+                epochs: kj.get("epochs").and_then(Json::as_usize).unwrap_or(1),
+            },
+            Some("pretrain") => ExperimentKind::Pretrain,
+            other => bail!("unknown wire kind tag {other:?}"),
+        };
+        let mut cfg = RunConfig::default();
+        let f_usize =
+            |k: &str, d: usize| j.get(k).and_then(Json::as_usize).unwrap_or(d);
+        if let Some(m) = j.get("model").and_then(Json::as_str) {
+            cfg.model = m.to_string();
+        }
+        if let Some(m) = j.get("method").and_then(Json::as_str) {
+            cfg.method = crate::config::Method::parse(m)?;
+        }
+        if let Some(o) = j.get("opt") {
+            if let Some(fam) = o.get("family").and_then(Json::as_str) {
+                cfg.opt.family = crate::config::OptFamily::parse(fam)?;
+            }
+            let g = |k: &str, d: f64| o.get(k).and_then(Json::as_f64).unwrap_or(d);
+            cfg.opt.lr = g("lr", cfg.opt.lr);
+            cfg.opt.beta1 = g("beta1", cfg.opt.beta1);
+            cfg.opt.beta2 = g("beta2", cfg.opt.beta2);
+            cfg.opt.eps = g("eps", cfg.opt.eps);
+            cfg.opt.weight_decay = g("wd", cfg.opt.weight_decay);
+            cfg.opt.momentum = g("momentum", cfg.opt.momentum);
+            if let Some(n) = o.get("nesterov").and_then(Json::as_bool) {
+                cfg.opt.nesterov = n;
+            }
+        }
+        if let Some(m) = j.get("mask") {
+            let g = |k: &str, d: f64| m.get(k).and_then(Json::as_f64).unwrap_or(d);
+            cfg.mask.keep_ratio = g("keep_ratio", cfg.mask.keep_ratio);
+            cfg.mask.topk = g("topk", cfg.mask.topk);
+            let u = |k: &str, d: usize| {
+                m.get(k).and_then(Json::as_usize).unwrap_or(d)
+            };
+            cfg.mask.gamma = u("gamma", cfg.mask.gamma);
+            cfg.mask.period = u("period", cfg.mask.period);
+            cfg.mask.rank = u("rank", cfg.mask.rank);
+        }
+        if let Some(s) = j.get("schedule") {
+            cfg.schedule = match s.get("t").and_then(Json::as_str) {
+                Some("constant") => Schedule::Constant,
+                Some("multistep") => Schedule::MultiStep {
+                    milestones: s
+                        .get("milestones")
+                        .and_then(Json::as_arr)
+                        .map(|a| {
+                            a.iter().filter_map(Json::as_usize).collect()
+                        })
+                        .unwrap_or_default(),
+                    gamma: s.get("gamma").and_then(Json::as_f64).unwrap_or(0.1),
+                },
+                Some("cosine") => Schedule::CosineWarmup {
+                    warmup: s.get("warmup").and_then(Json::as_usize).unwrap_or(0),
+                    total: s.get("total").and_then(Json::as_usize).unwrap_or(0),
+                    min_lr: s.get("min_lr").and_then(Json::as_f64).unwrap_or(0.0),
+                },
+                Some("inv_t") => Schedule::InvT {
+                    c0: s.get("c0").and_then(Json::as_f64).unwrap_or(1.0),
+                },
+                other => bail!("unknown wire schedule tag {other:?}"),
+            };
+        }
+        cfg.steps = f_usize("steps", cfg.steps);
+        cfg.eval_every = f_usize("eval_every", cfg.eval_every);
+        cfg.seed = f_usize("seed", cfg.seed as usize) as u64;
+        cfg.dataset_size = f_usize("dataset_size", cfg.dataset_size);
+        cfg.data_seed = f_usize("data_seed", cfg.data_seed as usize) as u64;
+        if let Some(dir) = j.get("artifacts_dir").and_then(Json::as_str) {
+            cfg.artifacts_dir = dir.to_string();
+        }
+        cfg.validate()?;
+        Ok(JobSpec { kind, cfg })
+    }
+}
+
 fn canonical_schedule(s: &Schedule) -> String {
     match s {
         Schedule::Constant => "constant".to_string(),
@@ -313,6 +521,97 @@ mod tests {
         assert_eq!(s.cfg.mask.gamma, 4);
         assert!((s.cfg.opt.lr - 0.002).abs() < 1e-12);
         assert_eq!(s.label(), "SST-2/lisa-wor/s3");
+    }
+
+    #[test]
+    fn wire_round_trip_preserves_the_content_hash() {
+        // The wire format must reproduce *every* canonical field —
+        // including the ones `from_json` does not expose — so remote
+        // workers run bit-identical cells. Exercise defaults, a
+        // schedule-heavy pretrain cell, and a blobs cell.
+        let mut pretrain = JobSpec {
+            kind: ExperimentKind::Pretrain,
+            cfg: RunConfig::default(),
+        };
+        pretrain.cfg.schedule = Schedule::CosineWarmup {
+            warmup: 10,
+            total: 100,
+            min_lr: 6e-5,
+        };
+        pretrain.cfg.opt.beta2 = 0.95;
+        pretrain.cfg.opt.eps = 1e-8;
+        pretrain.cfg.opt.nesterov = false;
+        pretrain.cfg.mask.topk = 0.07;
+        pretrain.cfg.dataset_size = 777;
+        pretrain.cfg.data_seed = 42;
+        let mut multistep = spec();
+        multistep.cfg.schedule = Schedule::MultiStep {
+            milestones: vec![10, 20],
+            gamma: 0.5,
+        };
+        let blobs = JobSpec {
+            kind: ExperimentKind::Blobs {
+                dataset: "IMG-mid".into(),
+                spread: 4.25,
+                data_seed: 6002,
+                epochs: 3,
+            },
+            cfg: RunConfig::default(),
+        };
+        let mut invt = spec();
+        invt.cfg.schedule = Schedule::InvT { c0: 2.5 };
+        for s in [spec(), pretrain, multistep, blobs, invt] {
+            let j = Json::parse(&s.to_wire()).expect("wire is valid JSON");
+            let back = JobSpec::from_wire(&j).expect("wire parses back");
+            assert_eq!(
+                back.canonical(),
+                s.canonical(),
+                "wire round trip must preserve the canonical string"
+            );
+            assert_eq!(back.content_hash(), s.content_hash());
+        }
+    }
+
+    #[test]
+    fn wire_carries_the_artifacts_hint_but_never_out_dir() {
+        // Explicit artifacts dirs travel (a location hint, honored like
+        // a local --artifacts override); defaults stay host-local.
+        let mut a = spec();
+        a.cfg.artifacts_dir = "/shared/fs/artifacts".into();
+        a.cfg.out_dir = "/client/results".into();
+        let wire = a.to_wire();
+        assert!(wire.contains("/shared/fs/artifacts"));
+        assert!(!wire.contains("/client/results"), "out_dir never travels");
+        let back =
+            JobSpec::from_wire(&Json::parse(&wire).unwrap()).unwrap();
+        assert_eq!(back.cfg.artifacts_dir, "/shared/fs/artifacts");
+        // Location hints stay outside the cell identity.
+        assert_eq!(back.content_hash(), a.content_hash());
+
+        let d = spec(); // default artifacts_dir
+        assert!(
+            !d.to_wire().contains("artifacts_dir"),
+            "default dirs resolve host-locally on the receiving side"
+        );
+        let back =
+            JobSpec::from_wire(&Json::parse(&d.to_wire()).unwrap()).unwrap();
+        assert_eq!(back.cfg.artifacts_dir, RunConfig::default().artifacts_dir);
+    }
+
+    #[test]
+    fn from_wire_rejects_version_skew_and_bad_tags() {
+        let bad_v = Json::parse(r#"{"v":99,"kind":{"t":"pretrain"}}"#).unwrap();
+        assert!(JobSpec::from_wire(&bad_v).is_err());
+        let bad_kind =
+            Json::parse(r#"{"v":1,"kind":{"t":"mystery"}}"#).unwrap();
+        assert!(JobSpec::from_wire(&bad_kind).is_err());
+        let bad_sched = Json::parse(
+            r#"{"v":1,"kind":{"t":"pretrain"},"schedule":{"t":"warp"}}"#,
+        )
+        .unwrap();
+        assert!(JobSpec::from_wire(&bad_sched).is_err());
+        let no_kind = Json::parse(r#"{"v":1}"#).unwrap();
+        assert!(JobSpec::from_wire(&no_kind).is_err());
     }
 
     #[test]

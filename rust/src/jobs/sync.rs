@@ -1,0 +1,443 @@
+//! Content-addressed artifact sync between a gateway and its remote
+//! workers.
+//!
+//! A [`crate::jobs::JobSpec`] names a model; running it needs the
+//! model's on-disk artifact set (`<model>.json` manifest, `*.hlo.txt`
+//! kernel texts, init dumps — every file `<model>.*` in the artifacts
+//! dir). The gateway identifies one concrete artifact set by its
+//! [`super::artifact_fingerprint`]; a worker whose local store lacks
+//! that fingerprint downloads the set (`GET /artifacts/<fp>`),
+//! verifies it, and runs against the synced copy — so a worker can
+//! never silently compute against *older* weights than the gateway
+//! leased the job for, and the fingerprint is the result-cache key on
+//! both ends.
+//!
+//! The transfer format is a minimal tar-like frame (no external
+//! crates):
+//!
+//! ```text
+//! OMGD-ART1\n
+//! <n files>\n
+//! then, per file (sorted by name):
+//! <name-byte-len> <content-byte-len> <fnv1a64-of-content hex>\n
+//! <name bytes><content bytes>
+//! ```
+//!
+//! Every file carries its own FNV-1a 64 content hash; [`unpack`]
+//! rejects a frame whose bytes do not match (a truncated download or a
+//! corrupting proxy degrades to a failed sync, never to silently wrong
+//! artifacts). File names must be bare (no path separators), matching
+//! how artifact sets are laid out.
+//!
+//! [`ArtifactStore`] is the worker-side cache: one subdirectory per
+//! fingerprint, populated atomically (unpack into a temp dir, fsync
+//! marker, rename), so concurrent worker threads — or a crash mid-sync
+//! — can never leave a half-synced set that later runs.
+
+use super::spec::fnv1a64;
+use anyhow::{bail, Context, Result};
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Magic line opening every artifact frame; bump the digit on any
+/// format change so skewed builds fail loudly.
+const MAGIC: &str = "OMGD-ART1";
+
+/// Hard cap on files per frame and bytes per file: artifact sets are a
+/// handful of manifests/HLO texts/init dumps, so anything bigger is a
+/// protocol error, not a workload.
+const MAX_FILES: usize = 256;
+const MAX_FILE_BYTES: usize = 1 << 30;
+
+static TMP_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// Serialize every file of `dir` whose name starts with `<model>.` into
+/// one artifact frame, sorted by name so identical sets produce
+/// identical frames.
+pub fn pack(dir: &Path, model: &str) -> Result<Vec<u8>> {
+    let prefix = format!("{model}.");
+    let mut names: Vec<String> = fs::read_dir(dir)
+        .with_context(|| format!("reading artifacts dir {dir:?}"))?
+        .filter_map(|e| e.ok())
+        .filter(|e| e.file_type().map(|t| t.is_file()).unwrap_or(false))
+        .map(|e| e.file_name().to_string_lossy().into_owned())
+        .filter(|n| n.starts_with(&prefix))
+        .collect();
+    if names.is_empty() {
+        bail!("no artifact files for model {model:?} under {dir:?}");
+    }
+    if names.len() > MAX_FILES {
+        bail!("artifact set for {model:?} exceeds {MAX_FILES} files");
+    }
+    names.sort();
+    let mut out = Vec::new();
+    out.extend_from_slice(format!("{MAGIC}\n{}\n", names.len()).as_bytes());
+    for name in &names {
+        let bytes = fs::read(dir.join(name))
+            .with_context(|| format!("reading artifact {name:?}"))?;
+        out.extend_from_slice(
+            format!(
+                "{} {} {:016x}\n",
+                name.len(),
+                bytes.len(),
+                fnv1a64(&bytes)
+            )
+            .as_bytes(),
+        );
+        out.extend_from_slice(name.as_bytes());
+        out.extend_from_slice(&bytes);
+    }
+    Ok(out)
+}
+
+/// One file parsed out of a frame.
+pub struct ArtifactFile {
+    pub name: String,
+    pub bytes: Vec<u8>,
+}
+
+/// Parse and verify an artifact frame. Errors on a bad magic/shape, a
+/// per-file hash mismatch, or an unsafe file name.
+pub fn unpack(frame: &[u8]) -> Result<Vec<ArtifactFile>> {
+    let mut pos = 0usize;
+    let magic = read_line(frame, &mut pos)?;
+    if magic != MAGIC {
+        bail!("bad artifact frame magic {magic:?}");
+    }
+    let n: usize = read_line(frame, &mut pos)?
+        .parse()
+        .map_err(|_| anyhow::anyhow!("bad artifact frame file count"))?;
+    if n == 0 || n > MAX_FILES {
+        bail!("artifact frame file count {n} out of range");
+    }
+    let mut files = Vec::with_capacity(n);
+    for _ in 0..n {
+        let head = read_line(frame, &mut pos)?;
+        let mut parts = head.split_whitespace();
+        let name_len: usize = parts
+            .next()
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| anyhow::anyhow!("bad frame entry head {head:?}"))?;
+        let byte_len: usize = parts
+            .next()
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| anyhow::anyhow!("bad frame entry head {head:?}"))?;
+        let want_hash = parts
+            .next()
+            .and_then(|s| u64::from_str_radix(s, 16).ok())
+            .ok_or_else(|| anyhow::anyhow!("bad frame entry head {head:?}"))?;
+        if parts.next().is_some() || byte_len > MAX_FILE_BYTES {
+            bail!("bad frame entry head {head:?}");
+        }
+        let name_bytes = take(frame, &mut pos, name_len)?;
+        let name = std::str::from_utf8(name_bytes)
+            .context("artifact name is not UTF-8")?
+            .to_string();
+        if name.is_empty()
+            || name.contains('/')
+            || name.contains('\\')
+            || name.contains("..")
+            || name.starts_with('.')
+        {
+            bail!("unsafe artifact file name {name:?}");
+        }
+        let bytes = take(frame, &mut pos, byte_len)?.to_vec();
+        let got = fnv1a64(&bytes);
+        if got != want_hash {
+            bail!(
+                "artifact {name:?} failed verification \
+                 (got {got:016x}, want {want_hash:016x})"
+            );
+        }
+        files.push(ArtifactFile { name, bytes });
+    }
+    if pos != frame.len() {
+        bail!("trailing bytes after artifact frame");
+    }
+    Ok(files)
+}
+
+/// Write + fsync one file (the durable half of the atomic publish).
+fn write_durable(path: &Path, bytes: &[u8]) -> Result<()> {
+    use std::io::Write as _;
+    let mut f = fs::File::create(path)?;
+    f.write_all(bytes)?;
+    f.sync_all()?;
+    Ok(())
+}
+
+fn read_line<'a>(frame: &'a [u8], pos: &mut usize) -> Result<&'a str> {
+    let rest = &frame[*pos..];
+    let nl = rest
+        .iter()
+        .position(|&b| b == b'\n')
+        .ok_or_else(|| anyhow::anyhow!("truncated artifact frame"))?;
+    let line = std::str::from_utf8(&rest[..nl])
+        .context("artifact frame header is not UTF-8")?;
+    *pos += nl + 1;
+    Ok(line)
+}
+
+fn take<'a>(frame: &'a [u8], pos: &mut usize, n: usize) -> Result<&'a [u8]> {
+    if frame.len() - *pos < n {
+        bail!("truncated artifact frame");
+    }
+    let out = &frame[*pos..*pos + n];
+    *pos += n;
+    Ok(out)
+}
+
+/// Default worker-side store location, relative to the working dir.
+pub const DEFAULT_STORE_DIR: &str = "target/omgd-artifacts";
+
+/// Worker-side artifact store: one immutable directory per gateway
+/// fingerprint. `ensure` is the only write path and it is atomic, so a
+/// fingerprint directory either exists completely (with its `.ok`
+/// marker) or not at all.
+pub struct ArtifactStore {
+    root: PathBuf,
+}
+
+impl ArtifactStore {
+    /// Open (creating if needed) the store at `dir`, or the default.
+    pub fn open(dir: Option<&str>) -> Result<Self> {
+        let root = PathBuf::from(dir.unwrap_or(DEFAULT_STORE_DIR));
+        fs::create_dir_all(&root)
+            .with_context(|| format!("creating artifact store {root:?}"))?;
+        Ok(Self { root })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    fn fp_dir(&self, fp: &str) -> Result<PathBuf> {
+        // Fingerprints are 16-hex strings (see `artifact_fingerprint`);
+        // refuse anything that could walk out of the store.
+        if fp.is_empty()
+            || fp.len() > 64
+            || !fp.chars().all(|c| c.is_ascii_alphanumeric())
+        {
+            bail!("invalid artifact fingerprint {fp:?}");
+        }
+        Ok(self.root.join(fp))
+    }
+
+    /// True when the store already holds a verified copy of `fp`.
+    pub fn contains(&self, fp: &str) -> bool {
+        self.fp_dir(fp)
+            .map(|d| d.join(".ok").exists())
+            .unwrap_or(false)
+    }
+
+    /// Directory for a fingerprint already in the store.
+    pub fn dir_of(&self, fp: &str) -> Result<PathBuf> {
+        let d = self.fp_dir(fp)?;
+        if !d.join(".ok").exists() {
+            bail!("artifact fingerprint {fp:?} not in store");
+        }
+        Ok(d)
+    }
+
+    /// Every fingerprint currently in the store (sorted) — sent along
+    /// with lease requests so the gateway knows what a worker already
+    /// holds.
+    pub fn fingerprints(&self) -> Vec<String> {
+        let mut fps: Vec<String> = fs::read_dir(&self.root)
+            .into_iter()
+            .flatten()
+            .filter_map(|e| e.ok())
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            // Skip in-flight `.tmp-*` sync dirs (they contain a `.ok`
+            // marker of their own just before the rename).
+            .filter(|n| !n.starts_with('.'))
+            .filter(|n| self.root.join(n).join(".ok").exists())
+            .collect();
+        fps.sort();
+        fps
+    }
+
+    /// Return the directory holding fingerprint `fp`, downloading via
+    /// `fetch` on a store miss. The unpack-verify-rename sequence is
+    /// atomic: a failed or concurrent sync never publishes a partial
+    /// set, and a lost rename race simply reuses the winner's copy.
+    pub fn ensure(
+        &self,
+        fp: &str,
+        fetch: impl FnOnce() -> Result<Vec<u8>>,
+    ) -> Result<PathBuf> {
+        let dest = self.fp_dir(fp)?;
+        if dest.join(".ok").exists() {
+            return Ok(dest);
+        }
+        let frame = fetch()?;
+        let files = unpack(&frame)
+            .with_context(|| format!("verifying artifact frame {fp}"))?;
+        let tmp = self.root.join(format!(
+            ".tmp-{}-{}",
+            std::process::id(),
+            TMP_COUNTER.fetch_add(1, Ordering::Relaxed)
+        ));
+        fs::create_dir_all(&tmp)?;
+        // fsync every file (and the `.ok` marker) before the rename
+        // publishes the set: a crash after publication must never
+        // leave a `.ok` beside unflushed data — `contains` trusts the
+        // marker without re-hashing.
+        for f in &files {
+            write_durable(&tmp.join(&f.name), &f.bytes)
+                .with_context(|| format!("writing synced {:?}", f.name))?;
+        }
+        write_durable(&tmp.join(".ok"), fp.as_bytes())?;
+        // Flush the directory entries themselves, best-effort (not
+        // every platform supports fsync on a directory handle).
+        if let Ok(d) = fs::File::open(&tmp) {
+            let _ = d.sync_all();
+        }
+        match fs::rename(&tmp, &dest) {
+            Ok(()) => {}
+            Err(e) => {
+                // Lost a race with a concurrent sync of the same fp?
+                // Their verified copy is as good as ours.
+                let _ = fs::remove_dir_all(&tmp);
+                if !dest.join(".ok").exists() {
+                    return Err(e).with_context(|| {
+                        format!("publishing synced artifacts {dest:?}")
+                    });
+                }
+            }
+        }
+        Ok(dest)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("omgd-sync-test-{tag}-{}", std::process::id()));
+        fs::remove_dir_all(&d).ok();
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn fake_artifacts(dir: &Path, model: &str) {
+        fs::write(dir.join(format!("{model}.json")), b"{\"m\":1}").unwrap();
+        fs::write(
+            dir.join(format!("{model}.train.hlo.txt")),
+            b"HloModule train",
+        )
+        .unwrap();
+        // Binary content with embedded newlines and NULs.
+        fs::write(
+            dir.join(format!("{model}.init.bin")),
+            [0u8, 10, 13, 255, 0, 42],
+        )
+        .unwrap();
+        // A different model's file must not be packed.
+        fs::write(dir.join("other.json"), b"{}").unwrap();
+    }
+
+    #[test]
+    fn pack_unpack_round_trips_bytes_exactly() {
+        let dir = tmp_dir("roundtrip");
+        fake_artifacts(&dir, "m1");
+        let frame = pack(&dir, "m1").unwrap();
+        let files = unpack(&frame).unwrap();
+        assert_eq!(files.len(), 3, "only m1.* files are packed");
+        let names: Vec<&str> =
+            files.iter().map(|f| f.name.as_str()).collect();
+        assert_eq!(
+            names,
+            vec!["m1.init.bin", "m1.json", "m1.train.hlo.txt"],
+            "sorted by name"
+        );
+        for f in &files {
+            assert_eq!(f.bytes, fs::read(dir.join(&f.name)).unwrap());
+        }
+        // Identical input → identical frame (content-addressable).
+        assert_eq!(frame, pack(&dir, "m1").unwrap());
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn unpack_rejects_corruption_and_unsafe_names() {
+        let dir = tmp_dir("corrupt");
+        fake_artifacts(&dir, "m1");
+        let frame = pack(&dir, "m1").unwrap();
+        // Flip one content byte near the end: hash check must fire.
+        let mut bad = frame.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0xFF;
+        let err = unpack(&bad).unwrap_err().to_string();
+        assert!(err.contains("verification"), "got: {err}");
+        // Truncation.
+        assert!(unpack(&frame[..frame.len() - 3]).is_err());
+        // Trailing garbage.
+        let mut long = frame.clone();
+        long.extend_from_slice(b"extra");
+        assert!(unpack(&long).is_err());
+        // Bad magic.
+        assert!(unpack(b"NOPE\n0\n").is_err());
+        // Path traversal in a name.
+        let evil = format!(
+            "{MAGIC}\n1\n{} {} {:016x}\n../evilhi",
+            "../evil".len(),
+            2,
+            fnv1a64(b"hi")
+        );
+        let err = unpack(evil.as_bytes()).unwrap_err().to_string();
+        assert!(err.contains("unsafe"), "got: {err}");
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn store_ensure_fetches_once_and_verifies() {
+        let src = tmp_dir("store-src");
+        fake_artifacts(&src, "m1");
+        let frame = pack(&src, "m1").unwrap();
+        let root = tmp_dir("store");
+        let store =
+            ArtifactStore::open(Some(root.to_str().unwrap())).unwrap();
+        assert!(!store.contains("00ff00ff00ff00ff"));
+        assert!(store.fingerprints().is_empty());
+
+        let mut fetches = 0;
+        let dir = store
+            .ensure("00ff00ff00ff00ff", || {
+                fetches += 1;
+                Ok(frame.clone())
+            })
+            .unwrap();
+        assert_eq!(fetches, 1);
+        assert!(store.contains("00ff00ff00ff00ff"));
+        assert_eq!(
+            fs::read(dir.join("m1.json")).unwrap(),
+            fs::read(src.join("m1.json")).unwrap()
+        );
+        // Second ensure is a pure store hit.
+        let again = store
+            .ensure("00ff00ff00ff00ff", || {
+                panic!("must not refetch a stored fingerprint")
+            })
+            .unwrap();
+        assert_eq!(again, dir);
+        assert_eq!(store.fingerprints(), vec!["00ff00ff00ff00ff"]);
+        assert_eq!(store.dir_of("00ff00ff00ff00ff").unwrap(), dir);
+
+        // A corrupt fetch never publishes anything.
+        let mut bad = frame.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0xFF;
+        assert!(store.ensure("1111222233334444", || Ok(bad)).is_err());
+        assert!(!store.contains("1111222233334444"));
+
+        // Fingerprints that could escape the store are refused.
+        assert!(store.ensure("../../etc", || Ok(vec![])).is_err());
+        assert!(store.ensure("", || Ok(vec![])).is_err());
+        fs::remove_dir_all(&src).ok();
+        fs::remove_dir_all(&root).ok();
+    }
+}

@@ -12,10 +12,13 @@
 //!   the PJRT runtime ([`runtime`]) that executes AOT-compiled HLO, and
 //!   the job-orchestration subsystem ([`jobs`]): hashed [`jobs::JobSpec`]
 //!   grid cells sharded across a panic-isolated worker pool, with an
-//!   on-disk result cache (age/size GC), transport-agnostic serve
-//!   sessions over a shared [`jobs::JobHub`], and `omgd grid` /
-//!   `omgd serve` front-ends including the HTTP/1.1 gateway
-//!   ([`jobs::net`], `omgd serve --listen`).
+//!   on-disk result cache (true-LRU age/size GC), transport-agnostic
+//!   serve sessions over a shared [`jobs::JobHub`], the HTTP/1.1
+//!   gateway ([`jobs::net`], `omgd serve --listen`), and distributed
+//!   execution over that gateway ([`jobs::remote`] /
+//!   [`jobs::sync`]: `omgd worker --connect` lease-pull agents with
+//!   content-addressed artifact sync, `omgd grid --remote`
+//!   submission).
 //! * **L2 (python/compile, build-time)** — JAX models over a flat
 //!   parameter vector, lowered once to HLO text.
 //! * **L1 (python/compile/kernels, build-time)** — Pallas masked-update

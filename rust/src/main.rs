@@ -19,18 +19,26 @@
 //!     --cache-dir DIR                 cache root (target/omgd-cache)
 //!     --out results/grid.csv          deterministic per-cell aggregate
 //!     --curves results/curves.csv     per-step loss curves per cell
+//!     --remote HOST:PORT              submit to a gateway instead of
+//!                                     running on the local pool
 //!   serve                             long-lived job service: JSONL on
 //!                                     stdin/stdout, or — with --listen
 //!                                     — an HTTP/1.1 gateway serving N
-//!                                     concurrent clients from one
-//!                                     worker pool + cache (docs/
-//!                                     serve-protocol.md)
+//!                                     concurrent clients and remote
+//!                                     workers from one pool + cache
+//!                                     (docs/serve-protocol.md)
 //!     --listen 127.0.0.1:8080         bind an HTTP gateway (:0 = any
 //!                                     free port, printed to stderr)
 //!     --workers N --force --cache-dir DIR
 //!     --max-conns N --max-in-flight N --queue-cap N   (HTTP mode only)
+//!     --lease-secs N --poll-secs N    remote-worker lease TTL / poll
+//!   worker                            remote worker agent for a
+//!                                     gateway: lease → artifact sync →
+//!                                     run → report, until drained
+//!     --connect HOST:PORT --workers N --id NAME
+//!     --cache-dir DIR --artifact-store DIR --force --max-failures N
 //!   cache-gc                          prune the result cache by age
-//!                                     and/or total size
+//!                                     and/or total size (true LRU)
 //!     --max-age-secs N --max-bytes N [--dry-run] [--cache-dir DIR]
 //!
 //! Every flag has a default; `omgd <cmd> --help` lists them.
@@ -43,8 +51,8 @@ use omgd::data::{ClassTask, Corpus, CorpusConfig, LinRegData};
 use omgd::experiments::{finetune_spec, pretrain_config, FinetuneSetup,
                         PretrainSetup};
 use omgd::jobs::{
-    run_grid, ExperimentKind, GcPolicy, GridOptions, JobSpec,
-    ListenOptions, ResultCache,
+    run_grid, run_grid_remote, run_worker, ExperimentKind, GcPolicy,
+    GridOptions, JobSpec, ListenOptions, ResultCache, WorkerOptions,
 };
 use omgd::memory::{breakdown, ArchSpec, MemBreakdown, MemPolicy};
 use omgd::metrics::CsvWriter;
@@ -81,6 +89,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "memory" => cmd_memory(args),
         "grid" => cmd_grid(args),
         "serve" => cmd_serve(args),
+        "worker" => cmd_worker(args),
         "cache-gc" => cmd_cache_gc(args),
         "" | "help" | "--help" => {
             print!("{}", USAGE);
@@ -108,22 +117,35 @@ USAGE: omgd <subcommand> [flags]
   memory       analytic memory breakdown (Table 8 / Fig. 6)
     --arch llama-7b --rank 128 --gamma 2
   grid         sweep methods × seeds × keep-ratios on a worker pool
-               (cells cached under target/omgd-cache by config hash)
+               (cells cached under target/omgd-cache by config hash);
+               with --remote, submit the grid to a gateway instead of
+               running locally (aggregates are byte-identical)
     --kind finetune --tasks CoLA --methods full,lisa,lisa-wor
     --seeds 0,1,2 --keep-ratios 0.5 --epochs 4 --workers 4
     [--force] [--cache-dir DIR] [--out results/grid.csv]
+    [--remote HOST:PORT]
   serve        long-lived job service sharing one worker pool + cache
                stdin mode: JSONL requests in, JSONL results out
                ({\"cmd\":\"shutdown\"} or EOF ends)
                HTTP mode (--listen): POST /jobs streams NDJSON results;
-               GET /healthz /stats /cache; POST /shutdown drains
+               GET /healthz /stats /cache; POST /work/lease hands jobs
+               to remote `omgd worker` agents (--workers 0 = pure
+               coordinator); POST /shutdown drains
                (protocol: docs/serve-protocol.md)
     --workers 4 [--force] [--cache-dir DIR]
     [--cache-max-age-secs N] [--cache-max-bytes N]
     HTTP mode only: [--listen 127.0.0.1:8080] [--max-conns 64]
-    [--max-in-flight 32] [--queue-cap N]
+    [--max-in-flight 32] [--queue-cap N] [--lease-secs 60]
+    [--poll-secs 20]
+  worker       remote worker agent: long-poll a gateway for leased
+               jobs, sync missing artifacts by fingerprint, run on a
+               local pool, report results; exits when the gateway
+               drains (see docs/operations.md)
+    --connect HOST:PORT [--workers N] [--id NAME] [--cache-dir DIR]
+    [--artifact-store DIR] [--force] [--max-failures 5]
   cache-gc     prune the result cache (age cap, then size cap evicting
-               oldest-write-first); see docs/operations.md
+               least-recently-used-first; cache hits refresh recency);
+               see docs/operations.md
     --max-age-secs N --max-bytes N [--dry-run] [--cache-dir DIR]
 ";
 
@@ -594,18 +616,45 @@ fn cmd_grid(args: &Args) -> Result<()> {
         }
     }
 
-    let opts = grid_options_from_args(args)?;
-    println!(
-        "grid: {} cells ({} methods × {} seeds × {} keep-ratios), \
-         {} workers{}",
-        specs.len(),
-        methods.len(),
-        seeds.len(),
-        keeps.len(),
-        opts.workers,
-        if opts.force { ", force" } else { "" },
-    );
-    let report = run_grid(specs, &opts)?;
+    let report = if let Some(addr) = args.get("remote") {
+        // Remote submission: the gateway's pool (and its remote
+        // workers) run the cells; cache policy is the gateway's.
+        if args.bool("force") {
+            bail!(
+                "--force is a server-side setting; pass it to the \
+                 gateway (`omgd serve --force`), not to --remote grids"
+            );
+        }
+        if args.get("curves").is_some() {
+            bail!(
+                "--curves needs per-step series, which result streams \
+                 do not carry; run the grid locally (the gateway's \
+                 cache makes it a replay) to export curves"
+            );
+        }
+        println!(
+            "grid: {} cells ({} methods × {} seeds × {} keep-ratios) \
+             → gateway {addr}",
+            specs.len(),
+            methods.len(),
+            seeds.len(),
+            keeps.len(),
+        );
+        run_grid_remote(addr, specs)?
+    } else {
+        let opts = grid_options_from_args(args)?;
+        println!(
+            "grid: {} cells ({} methods × {} seeds × {} keep-ratios), \
+             {} workers{}",
+            specs.len(),
+            methods.len(),
+            seeds.len(),
+            keeps.len(),
+            opts.workers,
+            if opts.force { ", force" } else { "" },
+        );
+        run_grid(specs, &opts)?
+    };
     report.print("omgd grid");
     if let Some(p) = args.get("out") {
         report.write_csv(p)?;
@@ -627,20 +676,26 @@ fn cmd_grid(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let opts = grid_options_from_args(args)?;
     if let Some(addr) = args.get("listen") {
+        let defaults = ListenOptions::default();
         let lopts = ListenOptions {
             max_conns: args.usize_or("max-conns", 64)?,
             max_in_flight: args.usize_or("max-in-flight", 32)?,
             queue_capacity: args.usize_or("queue-cap", 0)?,
-            ..ListenOptions::default()
+            lease_secs: args.u64_or("lease-secs", defaults.lease_secs)?,
+            poll_secs: args.u64_or("poll-secs", defaults.poll_secs)?,
+            ..defaults
         };
         let stats = omgd::jobs::net::serve_listen(addr, &opts, &lopts)?;
         eprintln!(
             "gateway drained: {} connection(s), {} request(s), \
              {} throttled (429), {} refused (503); jobs: {} accepted, \
-             {} rejected, {} ok, {} failed, {} from cache",
+             {} rejected, {} ok, {} failed, {} from cache; remote: \
+             {} leased, {} requeued, {} conflicts",
             stats.connections, stats.requests, stats.throttled,
             stats.refused, stats.jobs.accepted, stats.jobs.rejected,
-            stats.jobs.done, stats.jobs.failed, stats.jobs.cached
+            stats.jobs.done, stats.jobs.failed, stats.jobs.cached,
+            stats.remote.leased, stats.remote.requeued,
+            stats.remote.conflicts
         );
         return Ok(());
     }
@@ -657,6 +712,30 @@ fn cmd_serve(args: &Args) -> Result<()> {
          {} from cache",
         stats.accepted, stats.rejected, stats.done, stats.failed,
         stats.cached
+    );
+    Ok(())
+}
+
+/// `omgd worker`: remote worker agent — lease jobs from a gateway,
+/// sync missing artifacts, run them on a local pool, report results.
+fn cmd_worker(args: &Args) -> Result<()> {
+    let defaults = WorkerOptions::default();
+    let opts = WorkerOptions {
+        connect: args.require("connect", "host:port")?,
+        workers: args.usize_or("workers", omgd::jobs::default_workers())?,
+        worker_id: args.str_or("id", &defaults.worker_id),
+        cache_dir: args.get("cache-dir").map(String::from),
+        store_dir: args.get("artifact-store").map(String::from),
+        force: args.bool("force"),
+        max_failures: args
+            .usize_or("max-failures", defaults.max_failures)?,
+    };
+    let stats = run_worker(&opts)?;
+    eprintln!(
+        "worker {} done: {} leased, {} ok, {} failed, {} from local \
+         cache, {} artifact set(s) synced, {} conflict(s)",
+        opts.worker_id, stats.leased, stats.done, stats.failed,
+        stats.cached, stats.synced, stats.conflicts
     );
     Ok(())
 }

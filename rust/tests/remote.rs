@@ -1,0 +1,488 @@
+//! Integration tests for distributed execution (`jobs::remote` +
+//! `jobs::sync` over the `jobs::net` gateway) on loopback sockets with
+//! stub runners — no artifacts, no PJRT.
+//!
+//! Under test: the PR's acceptance criteria — a grid submitted via
+//! `grid --remote` to a gateway with ≥2 worker agents produces
+//! byte-identical CSV aggregates to the same grid on a local pool;
+//! a worker killed mid-lease has its job re-dispatched (and its late
+//! result rejected); a worker starting with an empty artifact store
+//! syncs the fingerprinted artifact set before running.
+
+use omgd::jobs::{
+    run_gateway, run_grid_remote, run_pool, run_worker_with,
+    ExperimentKind, GatewayStats, GridReport, JobOutcome, JobQueue,
+    JobSpec, ListenOptions, WorkerOptions,
+};
+use omgd::config::RunConfig;
+use omgd::util::json::Json;
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::Mutex;
+use std::time::Duration;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("omgd-remote-test-{tag}-{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// A finetune cell whose artifacts dir is deliberately nonexistent, so
+/// the gateway's fingerprint is deterministically `"absent"` and no
+/// sync happens (the stub runners never touch artifacts anyway).
+fn spec(seed: u64) -> JobSpec {
+    let mut cfg = RunConfig::default();
+    cfg.seed = seed;
+    cfg.artifacts_dir = "/nonexistent/omgd-remote-test".into();
+    JobSpec {
+        kind: ExperimentKind::Finetune { task: "CoLA".into(), epochs: 1 },
+        cfg,
+    }
+}
+
+/// Deterministic stub outcome, a pure function of the spec.
+fn stub_outcome(spec: &JobSpec) -> JobOutcome {
+    JobOutcome {
+        final_metric: spec.cfg.seed as f64 + 0.5,
+        tail_loss: 0.25,
+        steps: 2,
+        train_secs: 0.0,
+        loss_series: vec![(0, 1.0)],
+        eval_series: vec![],
+    }
+}
+
+/// The same grid on a local pool — the byte-identical baseline.
+fn local_report(specs: Vec<JobSpec>, workers: usize) -> GridReport {
+    let queue = JobQueue::bounded(specs.len().max(1));
+    for s in specs {
+        queue.push(s, 0).unwrap();
+    }
+    queue.close();
+    let results = run_pool(&queue, workers, |_wid| {
+        |s: &JobSpec| Ok((stub_outcome(s), false))
+    });
+    GridReport::new(results)
+}
+
+fn csv_bytes(report: &GridReport, tag: &str) -> Vec<u8> {
+    let dir = tmp_dir(tag);
+    let path = dir.join("grid.csv");
+    report.write_csv(&path).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+    bytes
+}
+
+/// Start a coordinator-only gateway (no local workers, no cache) on a
+/// free loopback port.
+fn start_gateway(
+    lopts: ListenOptions,
+) -> (SocketAddr, std::thread::JoinHandle<GatewayStats>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let handle = std::thread::spawn(move || {
+        run_gateway(listener, 0, &lopts, None, |_wid| {
+            |_s: &JobSpec| -> anyhow::Result<(JobOutcome, bool)> {
+                unreachable!("coordinator-only gateway has no local pool")
+            }
+        })
+        .unwrap()
+    });
+    (addr, handle)
+}
+
+fn worker_opts(addr: SocketAddr, id: &str, tag: &str) -> WorkerOptions {
+    WorkerOptions {
+        connect: addr.to_string(),
+        workers: 2,
+        worker_id: id.to_string(),
+        cache_dir: Some(
+            tmp_dir(&format!("{tag}-cache-{id}"))
+                .to_string_lossy()
+                .into_owned(),
+        ),
+        store_dir: Some(
+            tmp_dir(&format!("{tag}-store-{id}"))
+                .to_string_lossy()
+                .into_owned(),
+        ),
+        force: false,
+        max_failures: 50,
+    }
+}
+
+/// One raw HTTP/1.1 round trip (the manual-protocol side of the tests).
+fn http(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    body: &str,
+) -> (u16, String) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    write!(
+        stream,
+        "{method} {path} HTTP/1.1\r\nHost: omgd-test\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    stream.flush().unwrap();
+    let mut r = BufReader::new(stream);
+    let mut status_line = String::new();
+    r.read_line(&mut status_line).unwrap();
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .expect("status code")
+        .parse()
+        .unwrap();
+    loop {
+        let mut h = String::new();
+        r.read_line(&mut h).unwrap();
+        if h.trim_end().is_empty() {
+            break;
+        }
+    }
+    let mut body = String::new();
+    r.read_to_string(&mut body).unwrap();
+    (status, body)
+}
+
+fn shutdown(addr: SocketAddr) {
+    let (status, body) = http(addr, "POST", "/shutdown", "");
+    assert_eq!(status, 200);
+    assert!(body.contains("draining"));
+}
+
+#[test]
+fn remote_grid_on_two_workers_matches_local_pool_byte_for_byte() {
+    let lopts = ListenOptions {
+        poll_secs: 2,
+        ..ListenOptions::default()
+    };
+    let (addr, gateway) = start_gateway(lopts);
+
+    let specs: Vec<JobSpec> = (0..6).map(spec).collect();
+    let baseline = csv_bytes(&local_report(specs.clone(), 1), "base-a");
+
+    let (report, wa, wb) = std::thread::scope(|s| {
+        let a = s.spawn(|| {
+            run_worker_with(&worker_opts(addr, "w-a", "two"), |_wid| {
+                |s: &JobSpec| -> anyhow::Result<JobOutcome> {
+                    Ok(stub_outcome(s))
+                }
+            })
+            .unwrap()
+        });
+        let b = s.spawn(|| {
+            run_worker_with(&worker_opts(addr, "w-b", "two"), |_wid| {
+                |s: &JobSpec| -> anyhow::Result<JobOutcome> {
+                    Ok(stub_outcome(s))
+                }
+            })
+            .unwrap()
+        });
+        let report = run_grid_remote(&addr.to_string(), specs).unwrap();
+        // Grid done: drain the gateway so both agents exit.
+        shutdown(addr);
+        (report, a.join().unwrap(), b.join().unwrap())
+    });
+
+    assert_eq!(report.n_jobs(), 6);
+    assert_eq!(report.n_failed(), 0);
+    let remote_csv = csv_bytes(&report, "remote-a");
+    assert_eq!(
+        remote_csv, baseline,
+        "remote aggregate must be byte-identical to the local pool's"
+    );
+    // Both ends agree on the accounting: every job ran exactly once,
+    // somewhere.
+    let stats = gateway.join().unwrap();
+    assert_eq!(stats.jobs.done, 6);
+    assert_eq!(stats.jobs.failed, 0);
+    assert_eq!(stats.remote.leased, 6);
+    assert_eq!(stats.remote.conflicts, 0);
+    assert_eq!(wa.done + wb.done, 6);
+    assert_eq!(wa.failed + wb.failed, 0);
+}
+
+#[test]
+fn killed_worker_mid_lease_is_requeued_and_its_late_result_rejected() {
+    let lopts = ListenOptions {
+        poll_secs: 2,
+        lease_secs: 1, // expire fast: the zombie never renews
+        ..ListenOptions::default()
+    };
+    let (addr, gateway) = start_gateway(lopts);
+
+    let specs: Vec<JobSpec> = (10..13).map(spec).collect();
+    let baseline = csv_bytes(&local_report(specs.clone(), 1), "base-b");
+
+    let (report, zombie_seq, stolen) = std::thread::scope(|s| {
+        let grid = s.spawn({
+            let specs = specs.clone();
+            move || run_grid_remote(&addr.to_string(), specs).unwrap()
+        });
+        // Wait until the session has queued work.
+        let mut queued = false;
+        for _ in 0..400 {
+            let (status, body) = http(addr, "GET", "/healthz", "");
+            assert_eq!(status, 200);
+            let j = Json::parse(&body).unwrap();
+            if j.at("queue_len").as_usize().unwrap_or(0) >= 1 {
+                queued = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(queued, "grid session never queued work");
+        // A "worker" leases one job and dies (never renews, never
+        // reports) — simulated by simply holding the lease reply.
+        let (status, body) = http(
+            addr,
+            "POST",
+            "/work/lease",
+            "{\"worker\":\"zombie\",\"artifacts\":[]}",
+        );
+        assert_eq!(status, 200);
+        let j = Json::parse(&body).unwrap();
+        let lease = j.get("lease").expect("zombie got a lease");
+        let zombie_seq = lease.at("seq").as_usize().unwrap();
+        let stolen_seed = lease
+            .at("spec")
+            .at("seed")
+            .as_usize()
+            .expect("leases carry the full wire spec");
+        // Now a healthy agent joins; after ~1s the zombie's lease
+        // expires and its job is re-dispatched to this agent.
+        let healthy = s.spawn(|| {
+            run_worker_with(&worker_opts(addr, "w-ok", "kill"), |_wid| {
+                |s: &JobSpec| -> anyhow::Result<JobOutcome> {
+                    Ok(stub_outcome(s))
+                }
+            })
+            .unwrap()
+        });
+        let report = grid.join().unwrap();
+        // The zombie reports its result *after* re-dispatch completed:
+        // the gateway must reject it as a conflict, not double-deliver.
+        let late = format!(
+            "{{\"worker\":\"zombie\",\"status\":\"done\",\
+             \"cached\":false,\"secs\":9.9,\"outcome\":\
+             {{\"final_metric\":999.0,\"tail_loss\":9.0,\"steps\":9,\
+             \"train_secs\":9.0,\"loss_series\":[],\
+             \"eval_series\":[]}}}}"
+        );
+        let (status, body) = http(
+            addr,
+            "POST",
+            &format!("/work/{zombie_seq}/result"),
+            &late,
+        );
+        assert_eq!(status, 409, "late result must conflict: {body}");
+        shutdown(addr);
+        let _ = healthy.join().unwrap();
+        (report, zombie_seq, stolen_seed)
+    });
+
+    assert_eq!(report.n_jobs(), 3);
+    assert_eq!(
+        report.n_failed(),
+        0,
+        "the re-dispatched job completed despite the dead worker"
+    );
+    // The lease the zombie held really was one of this grid's cells.
+    assert!(zombie_seq < 3, "seq {zombie_seq} out of range");
+    assert!((10..13).contains(&stolen), "leased seed {stolen}");
+    // And the aggregate is still byte-identical — 999.0 never leaked.
+    let remote_csv = csv_bytes(&report, "remote-b");
+    assert_eq!(remote_csv, baseline);
+    let stats = gateway.join().unwrap();
+    assert_eq!(stats.jobs.done, 3);
+    assert!(stats.remote.requeued >= 1, "expiry re-dispatched the job");
+    assert!(stats.remote.conflicts >= 1, "late result was rejected");
+}
+
+#[test]
+fn empty_store_worker_syncs_artifacts_by_fingerprint_before_running() {
+    let lopts = ListenOptions {
+        poll_secs: 2,
+        ..ListenOptions::default()
+    };
+    let (addr, gateway) = start_gateway(lopts);
+
+    // A fake-but-real artifact set on the "gateway" machine.
+    let art_dir = tmp_dir("sync-artifacts");
+    std::fs::write(art_dir.join("fakemod.json"), b"{\"manifest\":1}")
+        .unwrap();
+    std::fs::write(
+        art_dir.join("fakemod.train.hlo.txt"),
+        b"HloModule train\n",
+    )
+    .unwrap();
+    std::fs::write(
+        art_dir.join("fakemod.init.bin"),
+        [0u8, 1, 2, 253, 254, 255, 10, 13],
+    )
+    .unwrap();
+    std::fs::write(art_dir.join("unrelated.json"), b"{}").unwrap();
+
+    let mk = |seed: u64| {
+        let mut s = spec(seed);
+        s.cfg.model = "fakemod".into();
+        s.cfg.artifacts_dir = art_dir.to_string_lossy().into_owned();
+        s
+    };
+    let specs = vec![mk(0), mk(1)];
+    let expect_fp = omgd::jobs::artifact_fingerprint(&specs[0].cfg);
+    assert_ne!(expect_fp, "absent", "fixture artifacts must fingerprint");
+
+    // The stub runner records the artifacts dir each job actually saw
+    // and verifies the synced bytes match the originals.
+    let seen: Mutex<Vec<String>> = Mutex::new(Vec::new());
+    let art_src = art_dir.clone();
+    let (report, wstats) = std::thread::scope(|s| {
+        let worker = s.spawn(|| {
+            let mut opts = worker_opts(addr, "w-sync", "sync");
+            opts.workers = 1; // serialize: exactly one sync expected
+            run_worker_with(&opts, |_wid| {
+                |js: &JobSpec| -> anyhow::Result<JobOutcome> {
+                    let dir = PathBuf::from(&js.cfg.artifacts_dir);
+                    assert_ne!(
+                        dir, art_src,
+                        "worker must run against its own synced copy"
+                    );
+                    for name in
+                        ["fakemod.json", "fakemod.train.hlo.txt",
+                         "fakemod.init.bin"]
+                    {
+                        let synced = std::fs::read(dir.join(name))
+                            .expect("synced file exists");
+                        let orig =
+                            std::fs::read(art_src.join(name)).unwrap();
+                        assert_eq!(synced, orig, "{name} byte-identical");
+                    }
+                    assert!(
+                        !dir.join("unrelated.json").exists(),
+                        "foreign files are not synced"
+                    );
+                    seen.lock()
+                        .unwrap()
+                        .push(js.cfg.artifacts_dir.clone());
+                    Ok(stub_outcome(js))
+                }
+            })
+            .unwrap()
+        });
+        let report =
+            run_grid_remote(&addr.to_string(), specs.clone()).unwrap();
+        shutdown(addr);
+        (report, worker.join().unwrap())
+    });
+
+    assert_eq!(report.n_jobs(), 2);
+    assert_eq!(report.n_failed(), 0, "both synced cells ran");
+    assert_eq!(wstats.synced, 1, "one artifact set, fetched once");
+    let seen = seen.into_inner().unwrap();
+    assert_eq!(seen.len(), 2);
+    assert_eq!(seen[0], seen[1], "both jobs share the synced copy");
+    assert!(
+        seen[0].contains(&expect_fp),
+        "store keys by the gateway fingerprint: {} vs {expect_fp}",
+        seen[0]
+    );
+    let stats = gateway.join().unwrap();
+    assert_eq!(stats.jobs.done, 2);
+    std::fs::remove_dir_all(&art_dir).ok();
+}
+
+/// `GET /artifacts/<fp>` error shapes: unknown fingerprints 404; a
+/// fingerprint whose files changed since the lease 409s ("stale").
+#[test]
+fn artifact_endpoint_rejects_unknown_and_stale_fingerprints() {
+    let lopts = ListenOptions {
+        poll_secs: 1,
+        ..ListenOptions::default()
+    };
+    let (addr, gateway) = start_gateway(lopts);
+
+    let (status, body) =
+        http(addr, "GET", "/artifacts/0123456789abcdef", "");
+    assert_eq!(status, 404, "unknown fingerprint: {body}");
+
+    let art_dir = tmp_dir("stale-artifacts");
+    std::fs::write(art_dir.join("m.json"), b"v1").unwrap();
+    let mut s = spec(0);
+    s.cfg.model = "m".into();
+    s.cfg.artifacts_dir = art_dir.to_string_lossy().into_owned();
+    let fp = omgd::jobs::artifact_fingerprint(&s.cfg);
+
+    // Submit + manually lease so the gateway registers the fingerprint.
+    let grid = {
+        let specs = vec![s];
+        std::thread::spawn(move || {
+            // The job will be completed manually below.
+            run_grid_remote(&addr.to_string(), specs)
+        })
+    };
+    let mut lease = None;
+    for _ in 0..50 {
+        let (status, body) = http(
+            addr,
+            "POST",
+            "/work/lease",
+            "{\"worker\":\"manual\",\"artifacts\":[]}",
+        );
+        assert_eq!(status, 200);
+        let j = Json::parse(&body).unwrap();
+        if j.get("lease").is_some() {
+            lease = Some(j);
+            break;
+        }
+    }
+    let lease = lease.expect("grid job never became leasable");
+    let leased = lease.get("lease").unwrap();
+    assert_eq!(leased.at("afp").as_str(), Some(fp.as_str()));
+
+    // Regenerate the artifact after the lease: same name, new content.
+    std::thread::sleep(Duration::from_millis(20));
+    std::fs::write(art_dir.join("m.json"), b"v2-regenerated").unwrap();
+    let (status, body) = http(addr, "GET", &format!("/artifacts/{fp}"), "");
+    assert_eq!(status, 409, "stale fingerprint must 409: {body}");
+    assert!(body.contains("stale"));
+
+    // Finish the leased job so the grid session drains.
+    let seq = leased.at("seq").as_usize().unwrap();
+    let done = "{\"worker\":\"manual\",\"status\":\"failed\",\
+                \"secs\":0.1,\"error\":\"fixture\"}";
+    let (status, _) =
+        http(addr, "POST", &format!("/work/{seq}/result"), done);
+    assert_eq!(status, 200);
+    let report = grid.join().unwrap().unwrap();
+    assert_eq!(report.n_failed(), 1);
+    shutdown(addr);
+    gateway.join().unwrap();
+    std::fs::remove_dir_all(&art_dir).ok();
+}
+
+/// Sanity net for the aggregation math used above: metrics grouped per
+/// method over a mixed local report (keeps `mean_metric_by` honest for
+/// remote-built reports too).
+#[test]
+fn remote_reports_aggregate_like_local_ones() {
+    let specs: Vec<JobSpec> = (0..4).map(spec).collect();
+    let rep = local_report(specs, 2);
+    let by: BTreeMap<String, f64> =
+        rep.mean_metric_by(|r| r.spec.cfg.method.name().to_string());
+    assert_eq!(by.len(), 1);
+    // seeds 0..4 → metrics 0.5,1.5,2.5,3.5 → mean 2.0
+    assert!((by.values().next().unwrap() - 2.0).abs() < 1e-12);
+}
