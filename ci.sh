@@ -38,12 +38,14 @@ echo "== cargo test (OMGD_BENCH_SCALE=$OMGD_BENCH_SCALE)"
 cargo test -q
 
 # ---------------------------------------------------------------------
-# Distributed smoke: boot a coordinator-only gateway, attach one
-# worker agent, run a tiny grid through `--remote`, and diff its CSV
-# against the same grid on the local pool. The cells fail fast in CI
-# (no artifacts are generated here) — which is exactly what we want:
-# the lease/report/aggregate path is exercised end to end, and failed
-# cells must aggregate byte-identically on both paths too.
+# Distributed smoke: boot a quota'd coordinator-only gateway, attach
+# one worker agent, run two tiny grids through `--remote` under two
+# client tokens (keep-alive connections, per-client fair queuing), and
+# diff their merged CSV against the same grids on the local pool. The
+# cells fail fast in CI (no artifacts are generated here) — which is
+# exactly what we want: the lease/report/aggregate path is exercised
+# end to end, and failed cells must aggregate byte-identically on both
+# paths too.
 # ---------------------------------------------------------------------
 if [[ "${OMGD_CI_SKIP_SMOKE:-0}" == "1" ]]; then
   echo "== distributed smoke: skipped (OMGD_CI_SKIP_SMOKE=1)"
@@ -61,10 +63,17 @@ else
   }
   trap cleanup EXIT
 
-  GRID_ARGS=(--kind finetune --tasks CoLA --methods full,lisa-wor
-             --seeds 0,1 --epochs 1)
+  # The grid is split across two client identities (ci-a / ci-b) so
+  # the smoke exercises per-client fair queuing on a quota'd gateway;
+  # each half rides `grid --remote`'s keep-alive connection (429
+  # retries and the chunked session stream share one socket).
+  GRID_A=(--kind finetune --tasks CoLA --methods full
+          --seeds 0,1 --epochs 1)
+  GRID_B=(--kind finetune --tasks CoLA --methods lisa-wor
+          --seeds 0,1 --epochs 1)
 
   "$BIN" serve --listen 127.0.0.1:0 --workers 0 --poll-secs 2 \
+      --client-quota 4 \
       --cache-dir "$SMOKE/gateway-cache" 2> "$SMOKE/serve.log" &
   SERVE_PID=$!
   ADDR=""
@@ -86,22 +95,36 @@ else
       --artifact-store "$SMOKE/worker-store" 2> "$SMOKE/worker.log" &
   WORKER_PID=$!
 
-  # Remote run (cells fail without artifacts → non-zero exit; the CSV
-  # aggregate is still written and is what the smoke checks).
-  "$BIN" grid --remote "$ADDR" "${GRID_ARGS[@]}" \
-      --out "$SMOKE/remote.csv" > "$SMOKE/remote-grid.log" 2>&1 || true
-  # Local-pool run of the identical grid, isolated cache.
-  "$BIN" grid "${GRID_ARGS[@]}" --workers 1 \
+  # Remote runs, one per client token (cells fail without artifacts →
+  # non-zero exit; the CSV aggregates are still written and are what
+  # the smoke checks).
+  "$BIN" grid --remote "$ADDR" --client ci-a "${GRID_A[@]}" \
+      --out "$SMOKE/remote-a.csv" > "$SMOKE/remote-a.log" 2>&1 || true
+  "$BIN" grid --remote "$ADDR" --client ci-b "${GRID_B[@]}" \
+      --out "$SMOKE/remote-b.csv" > "$SMOKE/remote-b.log" 2>&1 || true
+  # Local-pool runs of the identical splits, isolated cache.
+  "$BIN" grid "${GRID_A[@]}" --workers 1 \
       --cache-dir "$SMOKE/local-cache" \
-      --out "$SMOKE/local.csv" > "$SMOKE/local-grid.log" 2>&1 || true
+      --out "$SMOKE/local-a.csv" > "$SMOKE/local-a.log" 2>&1 || true
+  "$BIN" grid "${GRID_B[@]}" --workers 1 \
+      --cache-dir "$SMOKE/local-cache" \
+      --out "$SMOKE/local-b.csv" > "$SMOKE/local-b.log" 2>&1 || true
 
-  if [[ ! -s "$SMOKE/remote.csv" || ! -s "$SMOKE/local.csv" ]]; then
-    echo "distributed smoke FAILED: a grid wrote no CSV" >&2
-    tail -n 40 "$SMOKE"/*.log >&2
-    exit 1
-  fi
+  for f in remote-a remote-b local-a local-b; do
+    if [[ ! -s "$SMOKE/$f.csv" ]]; then
+      echo "distributed smoke FAILED: $f wrote no CSV" >&2
+      tail -n 40 "$SMOKE"/*.log >&2
+      exit 1
+    fi
+  done
+  # Merge each pair (second header dropped) and compare the fleet's
+  # aggregate against the local pool's, byte for byte.
+  cat "$SMOKE/remote-a.csv" > "$SMOKE/remote.csv"
+  tail -n +2 "$SMOKE/remote-b.csv" >> "$SMOKE/remote.csv"
+  cat "$SMOKE/local-a.csv" > "$SMOKE/local.csv"
+  tail -n +2 "$SMOKE/local-b.csv" >> "$SMOKE/local.csv"
   if ! diff -u "$SMOKE/local.csv" "$SMOKE/remote.csv" >&2; then
-    echo "distributed smoke FAILED: remote aggregate differs" >&2
+    echo "distributed smoke FAILED: merged remote aggregate differs" >&2
     tail -n 40 "$SMOKE"/*.log >&2
     exit 1
   fi
@@ -117,7 +140,8 @@ else
   SERVE_PID=""
   wait "$WORKER_PID" || true
   WORKER_PID=""
-  echo "   distributed smoke passed (remote CSV byte-identical to local)"
+  echo "   distributed smoke passed (two-client merged CSV" \
+       "byte-identical to local)"
 fi
 
 echo "CI gate passed."

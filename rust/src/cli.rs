@@ -105,6 +105,25 @@ impl Args {
         matches!(self.get(name), Some("true") | Some("1") | Some("yes"))
     }
 
+    /// Optional identity token destined for an HTTP header value
+    /// (`grid --client`): `None` when absent; an error when present
+    /// but empty, over-long, or containing whitespace/control
+    /// characters that would corrupt header framing.
+    pub fn token_opt(&self, name: &str) -> Result<Option<String>> {
+        let Some(v) = self.get(name) else { return Ok(None) };
+        let ok = !v.is_empty()
+            && v != "true"
+            && v.len() <= 64
+            && v.chars().all(|c| c.is_ascii_graphic());
+        if !ok {
+            bail!(
+                "--{name} expects a token of up to 64 printable \
+                 non-whitespace ASCII characters, got {v:?}"
+            );
+        }
+        Ok(Some(v.to_string()))
+    }
+
     /// Comma-separated list flag (`--tasks CoLA,SST-2`). Empty items are
     /// dropped, whitespace around items is trimmed.
     pub fn list_or(&self, name: &str, default: &str) -> Vec<String> {
@@ -209,6 +228,24 @@ mod tests {
         assert_eq!(a.opt_u64("max-bytes").unwrap(), Some(1_048_576));
         assert_eq!(a.opt_u64("absent").unwrap(), None);
         assert!(a.opt_u64("max-age-secs").is_err());
+    }
+
+    #[test]
+    fn header_tokens_validate() {
+        let a = args("grid --client grid-a");
+        assert_eq!(a.token_opt("client").unwrap().as_deref(),
+                   Some("grid-a"));
+        assert_eq!(a.token_opt("absent").unwrap(), None);
+        assert!(args("grid --client").token_opt("client").is_err(),
+                "bare switch is not a token");
+        let b = Args {
+            cmd: "grid".into(),
+            flags: [("client".to_string(), "has space".to_string())]
+                .into_iter()
+                .collect(),
+            positional: vec![],
+        };
+        assert!(b.token_opt("client").is_err(), "whitespace rejected");
     }
 
     #[test]

@@ -18,8 +18,9 @@
 //! * [`serve`] — transport-agnostic JSONL sessions multiplexed over a
 //!   shared [`serve::JobHub`] (queue + worker pool + result routing);
 //! * [`net`] — HTTP/1.1 gateway (`omgd serve --listen`): N concurrent
-//!   connections share one hub, with `429` backpressure and graceful
-//!   drain;
+//!   connections share one hub, with `429` backpressure (global queue
+//!   saturation + per-client `X-OMGD-Client` quotas), HTTP keep-alive
+//!   (chunked `POST /jobs` streams), and graceful drain;
 //! * [`remote`] — distributed execution over the gateway: the
 //!   `omgd worker --connect` pull agent (lease → sync → run → report)
 //!   and the `omgd grid --remote` submission client;
@@ -47,7 +48,7 @@ pub use cache::{
 };
 pub use net::{run_gateway, GatewayStats, ListenOptions};
 pub use pool::{run_pool, JobOutcome, JobResult, JobStatus};
-pub use queue::{Job, JobQueue, PopTimeout, TryPush};
+pub use queue::{Job, JobQueue, PopScan, PopTimeout, TryPush};
 pub use remote::{
     run_grid_remote, run_worker, run_worker_with, WorkerOptions,
     WorkerStats,

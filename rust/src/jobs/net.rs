@@ -6,7 +6,12 @@
 //! budget. The HTTP layer is a thin, dependency-free HTTP/1.1 framing
 //! helper (request line + headers + `Content-Length` body in, status +
 //! headers + body out), not a general web server: request bodies are
-//! read up front, responses use `Connection: close`.
+//! read up front. A client that sends `Connection: keep-alive` gets a
+//! per-connection request loop — every `Content-Length`-framed
+//! response keeps the socket open (bounded idle timeout), and the
+//! streamed `POST /jobs` body switches to chunked transfer encoding so
+//! the session's end is visible without closing. Without the header,
+//! every response is `Connection: close` exactly as before.
 //!
 //! Endpoints (full spec with examples: `docs/serve-protocol.md`):
 //!
@@ -38,14 +43,14 @@
 use super::cache::{self, ResultCache};
 use super::pool::{JobOutcome, JobStatus};
 use super::serve::{
-    run_session, with_hub, JobHub, LeaseReply, RemoteDone, RemoteStats,
-    ServeStats, SessionOptions,
+    lock_recover, run_session, with_hub, JobHub, LeaseReply, RemoteDone,
+    RemoteStats, ServeStats, SessionOptions,
 };
 use super::spec::JobSpec;
 use super::{cached_runner, open_cache, sync, GridOptions};
 use crate::util::json::{escape_str as esc, Json};
 use anyhow::{bail, Context, Result};
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
@@ -90,6 +95,22 @@ pub struct ListenOptions {
     /// Mirror of [`GridOptions::force`] for remotely-leased jobs: skip
     /// (and invalidate) the gateway cache's fast-path when leasing.
     pub force: bool,
+    /// Per-client in-flight quota (`--client-quota`): a token presented
+    /// via `X-OMGD-Client` may have at most this many unfinished jobs
+    /// across all of its sessions. New `POST /jobs` from an over-quota
+    /// token answer `429` + `Retry-After`; inside an accepted stream
+    /// the quota throttles submission instead. `0` = off.
+    pub client_quota: usize,
+    /// Affinity-scan bound (`--affinity-window`): how many queued jobs
+    /// a worker lease may scan for one whose artifact fingerprint the
+    /// worker already caches. `0`/`1` = plain oldest-first leasing.
+    pub affinity_window: usize,
+    /// How long an idle keep-alive connection may sit between requests
+    /// before the gateway closes it (`--keepalive-idle-secs`; `0` = no
+    /// idle limit, matching the other knobs' `0 = off` convention).
+    /// While draining the bound drops to ~1s so parked connections
+    /// cannot stall shutdown.
+    pub keepalive_idle: Duration,
 }
 
 impl Default for ListenOptions {
@@ -102,6 +123,9 @@ impl Default for ListenOptions {
             lease_secs: 60,
             poll_secs: 20,
             force: false,
+            client_quota: 0,
+            affinity_window: 16,
+            keepalive_idle: Duration::from_secs(60),
         }
     }
 }
@@ -115,6 +139,8 @@ pub struct GatewayStats {
     pub requests: usize,
     /// `429 Too Many Requests` responses (queue saturated).
     pub throttled: usize,
+    /// `429` responses to clients over their `--client-quota`.
+    pub quota_throttled: usize,
     /// `503 Service Unavailable` responses (connection cap).
     pub refused: usize,
     /// Job counters aggregated across all `POST /jobs` sessions.
@@ -130,6 +156,7 @@ struct Counters {
     active: AtomicUsize,
     requests: AtomicUsize,
     throttled: AtomicUsize,
+    quota_throttled: AtomicUsize,
     refused: AtomicUsize,
 }
 
@@ -250,6 +277,7 @@ where
     // session finishes before the hub seals its queue.
     let ((accepted, rejected, done, failed, cached), remote) =
         with_hub(workers, queue_capacity, make_worker, |hub| {
+            hub.set_client_quota(lopts.client_quota);
             let ctx = GwCtx {
                 hub,
                 c: &c,
@@ -315,6 +343,7 @@ where
                             503,
                             "Service Unavailable",
                             &[("Retry-After", "1")],
+                            false,
                             "{\"error\":\"connection limit reached\"}",
                         );
                         continue;
@@ -347,16 +376,20 @@ where
         connections: c.connections.load(Ordering::Relaxed),
         requests: c.requests.load(Ordering::Relaxed),
         throttled: c.throttled.load(Ordering::Relaxed),
+        quota_throttled: c.quota_throttled.load(Ordering::Relaxed),
         refused: c.refused.load(Ordering::Relaxed),
         jobs: ServeStats { accepted, rejected, done, failed, cached },
         remote,
     })
 }
 
-/// Serve one connection: parse the request head, dispatch the endpoint,
-/// respond, close. Never panics — every IO failure is a dropped client.
+/// Serve one connection as a request loop: parse a request head,
+/// dispatch the endpoint, respond — then, if the client asked for
+/// `Connection: keep-alive` and the exchange left the stream cleanly
+/// framed, wait (bounded) for the next request on the same socket.
+/// Never panics — every IO failure is a dropped client.
 fn handle_conn(ctx: &GwCtx<'_>, stream: TcpStream) {
-    let GwCtx { hub, c, stop, lopts, cache, local, .. } = *ctx;
+    let lopts = ctx.lopts;
     let _ = stream.set_read_timeout(Some(lopts.io_timeout));
     let _ = stream.set_write_timeout(Some(lopts.io_timeout));
     let mut reader = match stream.try_clone() {
@@ -364,32 +397,128 @@ fn handle_conn(ctx: &GwCtx<'_>, stream: TcpStream) {
         Err(_) => return,
     };
     let mut w = &stream;
-    let head = match read_head(&mut reader) {
-        Ok(Some(h)) => h,
-        Ok(None) => return, // connected, sent nothing, closed
-        Err(e) => {
-            let _ = respond_json(
-                &mut w,
-                400,
-                "Bad Request",
-                &[],
-                &err_body(&e.to_string()),
-            );
+    let mut first = true;
+    loop {
+        // Between keep-alive requests, park on the socket without
+        // consuming anything (an idle timeout must never tear a
+        // half-read request head) until the next request's first byte
+        // arrives or the idle budget runs out. The first request rides
+        // the plain io_timeout, exactly as before keep-alive existed.
+        if !first && !wait_readable(&mut reader, &stream, ctx) {
             return;
         }
+        first = false;
+        let head = match read_head(&mut reader) {
+            Ok(Some(h)) => h,
+            Ok(None) => return, // clean EOF between requests
+            Err(e) => {
+                // The stream's framing is unknowable from here on:
+                // answer 400 and close regardless of keep-alive.
+                let _ = respond_json(
+                    &mut w,
+                    400,
+                    "Bad Request",
+                    &[],
+                    false,
+                    &err_body(&e.to_string()),
+                );
+                return;
+            }
+        };
+        ctx.c.requests.fetch_add(1, Ordering::Relaxed);
+        let keep = route_request(ctx, &mut reader, &mut w, &head);
+        let _ = w.flush();
+        if !keep {
+            return;
+        }
+    }
+}
+
+/// Wait for the next keep-alive request's first byte without consuming
+/// it: poll `fill_buf` in ~1s slices so a draining gateway closes
+/// parked connections promptly instead of after the full idle budget.
+/// `true` = data is buffered and the io timeout is restored; `false` =
+/// EOF, idle expiry, drain, or a socket error — close the connection.
+fn wait_readable(
+    reader: &mut BufReader<TcpStream>,
+    stream: &TcpStream,
+    ctx: &GwCtx<'_>,
+) -> bool {
+    let restore = |ok: bool| -> bool {
+        let _ = stream.set_read_timeout(Some(ctx.lopts.io_timeout));
+        ok
     };
-    c.requests.fetch_add(1, Ordering::Relaxed);
+    if !reader.buffer().is_empty() {
+        return true; // the client pipelined: next head already here
+    }
+    // `keepalive_idle == 0` means no idle limit (`0 = off`, like every
+    // other knob); the ~1s poll slices still shed the connection
+    // promptly on drain.
+    let idle = ctx.lopts.keepalive_idle;
+    let deadline =
+        (!idle.is_zero()).then(|| Instant::now() + idle);
+    let slice = Duration::from_secs(1);
+    loop {
+        let now = Instant::now();
+        if deadline.is_some_and(|d| now >= d) {
+            return restore(false);
+        }
+        let wait = match deadline {
+            Some(d) => slice.min(d - now),
+            None => slice,
+        };
+        let _ = stream.set_read_timeout(Some(wait));
+        match reader.fill_buf() {
+            Ok([]) => return restore(false), // clean EOF
+            Ok(_) => return restore(true),
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                if ctx.stop.load(Ordering::SeqCst) {
+                    // Draining: idle keep-alive connections step aside
+                    // so the gateway can exit.
+                    return restore(false);
+                }
+            }
+            Err(_) => return restore(false),
+        }
+    }
+}
+
+/// Dispatch one parsed request. The returned flag is "this connection
+/// may carry another request": the client asked for keep-alive, the
+/// request body was fully consumed, and the response was
+/// self-delimited (`Content-Length` or chunked).
+fn route_request(
+    ctx: &GwCtx<'_>,
+    reader: &mut BufReader<TcpStream>,
+    w: &mut &TcpStream,
+    head: &HttpHead,
+) -> bool {
+    let GwCtx { hub, c, stop, lopts, cache, local, .. } = *ctx;
     // POST /jobs and the worker-protocol POSTs consume their bodies;
     // every other endpoint ignores its body — drain it (bounded) up
-    // front so responding + closing can't RST the reply away. Skipped
-    // under Expect: 100-continue — the client has not sent the body
-    // yet and is waiting on our verdict.
+    // front so responding can't RST the reply away. Skipped under
+    // Expect: 100-continue — the client has not sent the body yet and
+    // is waiting on our verdict.
     let wants_body = head.method == "POST"
         && (head.path == "/jobs"
             || head.path == "/work/lease"
             || parse_work_path(&head.path).is_some());
-    if !wants_body && head.content_length > 0 && !head.expect_continue {
-        drain_body(&mut reader, head.content_length);
+    let mut keep = head.keep_alive;
+    if !wants_body && head.content_length > 0 {
+        if head.expect_continue {
+            // Nothing was sent yet and we answer without inviting the
+            // body: the stream would desynchronize if the client sent
+            // it anyway, so close after responding.
+            keep = false;
+        } else {
+            keep &= drain_body(reader, head.content_length);
+        }
     }
     match (head.method.as_str(), head.path.as_str()) {
         ("GET", "/healthz") => {
@@ -400,34 +529,46 @@ fn handle_conn(ctx: &GwCtx<'_>, stream: TcpStream) {
                 hub.queue.capacity(),
                 stop.load(Ordering::SeqCst),
             );
-            let _ = respond_json(&mut w, 200, "OK", &[], &body);
+            let _ = respond_json(w, 200, "OK", &[], keep, &body);
+            keep
         }
         ("GET", "/stats") => {
             let (accepted, rejected, done, failed, cached) =
                 hub.counters();
             let remote = hub.remote_counters();
+            let clients: String = hub
+                .clients_snapshot()
+                .iter()
+                .map(|(t, n)| format!("\"{}\":{n}", esc(t)))
+                .collect::<Vec<_>>()
+                .join(",");
             let body = format!(
                 "{{\"connections\":{},\"active_connections\":{},\
-                 \"requests\":{},\"throttled_429\":{},\"refused_503\":{},\
+                 \"requests\":{},\"throttled_429\":{},\"quota_429\":{},\
+                 \"refused_503\":{},\
                  \"queue_len\":{},\"queue_capacity\":{},\
+                 \"clients\":{{{clients}}},\
                  \"jobs\":{{\"accepted\":{accepted},\
                  \"rejected\":{rejected},\"done\":{done},\
                  \"failed\":{failed},\"cached\":{cached}}},\
-                 \"remote\":{{\"leased\":{},\"in_flight\":{},\
-                 \"requeued\":{},\"conflicts\":{}}}}}",
+                 \"remote\":{{\"leased\":{},\"affinity\":{},\
+                 \"in_flight\":{},\"requeued\":{},\"conflicts\":{}}}}}",
                 c.connections.load(Ordering::Relaxed),
                 c.active.load(Ordering::SeqCst),
                 c.requests.load(Ordering::Relaxed),
                 c.throttled.load(Ordering::Relaxed),
+                c.quota_throttled.load(Ordering::Relaxed),
                 c.refused.load(Ordering::Relaxed),
                 hub.queue.len(),
                 hub.queue.capacity(),
                 remote.leased,
+                remote.affinity,
                 hub.n_leased(),
                 remote.requeued,
                 remote.conflicts,
             );
-            let _ = respond_json(&mut w, 200, "OK", &[], &body);
+            let _ = respond_json(w, 200, "OK", &[], keep, &body);
+            keep
         }
         ("GET", "/cache") => {
             let body = match cache {
@@ -443,14 +584,16 @@ fn handle_conn(ctx: &GwCtx<'_>, stream: TcpStream) {
                 }
                 None => "{\"enabled\":false}".to_string(),
             };
-            let _ = respond_json(&mut w, 200, "OK", &[], &body);
+            let _ = respond_json(w, 200, "OK", &[], keep, &body);
+            keep
         }
         ("POST", "/shutdown") => {
             let _ = respond_json(
-                &mut w,
+                w,
                 200,
                 "OK",
                 &[],
+                false,
                 "{\"draining\":true}",
             );
             stop.store(true, Ordering::SeqCst);
@@ -469,40 +612,41 @@ fn handle_conn(ctx: &GwCtx<'_>, stream: TcpStream) {
                 });
             }
             let _ = TcpStream::connect(wake);
+            false
         }
         ("POST", "/jobs") => {
             if stop.load(Ordering::SeqCst) {
                 // Draining: no new sessions; the connection's body (if
-                // any) was not read, so answer-and-close is safe only
-                // after a bounded drain.
-                if !head.expect_continue {
-                    drain_body(&mut reader, head.content_length);
-                }
+                // any) was not read, so answering is safe only after a
+                // bounded drain.
+                let drained = !head.expect_continue
+                    && drain_body(reader, head.content_length);
                 let _ = respond_json(
-                    &mut w,
+                    w,
                     503,
                     "Service Unavailable",
                     &[],
+                    keep && drained,
                     "{\"error\":\"gateway is draining\"}",
                 );
-                return;
+                return keep && drained;
             }
             if head.content_length > MAX_BODY_BYTES {
                 // Under Expect: 100-continue there is nothing to
                 // drain — the client is still waiting on our verdict.
-                if !head.expect_continue {
-                    drain_body(&mut reader, head.content_length);
-                }
+                let drained = !head.expect_continue
+                    && drain_body(reader, head.content_length);
                 let _ = respond_json(
-                    &mut w,
+                    w,
                     413,
                     "Payload Too Large",
                     &[],
+                    keep && drained,
                     &err_body(&format!(
                         "body exceeds {MAX_BODY_BYTES} bytes"
                     )),
                 );
-                return;
+                return keep && drained;
             }
             if head.expect_continue {
                 let _ = write!(w, "HTTP/1.1 100 Continue\r\n\r\n");
@@ -511,29 +655,75 @@ fn handle_conn(ctx: &GwCtx<'_>, stream: TcpStream) {
             // Read the body even when about to throttle: closing a
             // socket with unread request bytes can RST the response
             // out from under the client.
-            let body = match read_body(&mut reader, head.content_length) {
+            let body = match read_body(reader, head.content_length) {
                 Ok(b) => b,
                 Err(e) => {
                     let _ = respond_json(
-                        &mut w,
+                        w,
                         400,
                         "Bad Request",
                         &[],
+                        false,
                         &err_body(&e.to_string()),
                     );
-                    return;
+                    return false;
                 }
             };
+            // Fairness gate: a token already at its in-flight quota is
+            // bounced before a new session starts, in the same 429 +
+            // Retry-After shape as queue saturation — its *other*
+            // sessions keep streaming untouched.
+            let quota = lopts.client_quota;
+            if quota > 0 {
+                if let Some(client) = &head.client {
+                    if hub.client_in_flight(client) >= quota {
+                        c.quota_throttled.fetch_add(1, Ordering::Relaxed);
+                        let _ = respond_json(
+                            w,
+                            429,
+                            "Too Many Requests",
+                            &[("Retry-After", "1")],
+                            keep,
+                            &err_body(&format!(
+                                "client {client:?} is at its in-flight \
+                                 quota ({quota}); retry"
+                            )),
+                        );
+                        return keep;
+                    }
+                }
+            }
             if hub.is_saturated() {
                 c.throttled.fetch_add(1, Ordering::Relaxed);
                 let _ = respond_json(
-                    &mut w,
+                    w,
                     429,
                     "Too Many Requests",
                     &[("Retry-After", "1")],
+                    keep,
                     "{\"error\":\"job queue is full; retry\"}",
                 );
-                return;
+                return keep;
+            }
+            let sopts = SessionOptions {
+                max_in_flight: lopts.max_in_flight,
+                client: head.client.clone(),
+            };
+            if keep {
+                // Keep-alive stream: chunked transfer encoding makes
+                // the session's end visible without closing, so the
+                // same connection can carry the next round.
+                let _ = write!(
+                    w,
+                    "HTTP/1.1 200 OK\r\nContent-Type: \
+                     application/x-ndjson\r\nTransfer-Encoding: chunked\
+                     \r\nConnection: keep-alive\r\n\r\n"
+                );
+                let _ = w.flush();
+                let mut cw = ChunkedWriter::new(&mut *w);
+                // Session stats land in the hub's live counters.
+                run_session(hub, &body[..], &mut cw, &sopts);
+                return cw.finish().is_ok();
             }
             let _ = write!(
                 w,
@@ -541,67 +731,86 @@ fn handle_conn(ctx: &GwCtx<'_>, stream: TcpStream) {
                  \r\nConnection: close\r\n\r\n"
             );
             let _ = w.flush();
-            // Session stats land in the hub's live counters.
-            run_session(
-                hub,
-                &body[..],
-                w,
-                &SessionOptions { max_in_flight: lopts.max_in_flight },
-            );
+            run_session(hub, &body[..], w, &sopts);
+            false
         }
         ("POST", "/work/lease") => {
-            handle_lease(ctx, &mut reader, &mut w, &head);
+            handle_lease(ctx, reader, w, head, keep)
         }
-        ("POST", p) if parse_work_path(p).is_some() => {
-            let (seq, verb) = parse_work_path(p).unwrap();
-            handle_work_post(ctx, &mut reader, &mut w, &head, seq, verb);
+        ("POST", p) if p.starts_with("/work/") => {
+            match parse_work_path(p) {
+                Some((seq, verb)) => handle_work_post(
+                    ctx, reader, w, head, keep, seq, verb,
+                ),
+                None => {
+                    // Prefix-matching but malformed (`/work/x/result`,
+                    // `/work/7/steal`, an overflowing seq, …): a 400
+                    // error shape, never a panic or a misleading 404.
+                    let _ = respond_json(
+                        w,
+                        400,
+                        "Bad Request",
+                        &[],
+                        keep,
+                        &err_body(&format!(
+                            "malformed /work/ path {p:?} (expected \
+                             /work/<seq>/renew|result)"
+                        )),
+                    );
+                    keep
+                }
+            }
         }
         ("GET", p) if p.starts_with("/artifacts/") => {
             let fp = p.trim_start_matches("/artifacts/");
-            handle_artifact_get(ctx, &mut w, fp);
+            handle_artifact_get(ctx, w, fp, keep);
+            keep
         }
         (
             _,
-            "/healthz" | "/stats" | "/cache" | "/shutdown" | "/jobs"
-            | "/work/lease",
+            "/healthz" | "/stats" | "/cache" | "/shutdown" | "/jobs",
         ) => {
             let _ = respond_json(
-                &mut w,
+                w,
                 405,
                 "Method Not Allowed",
                 &[],
+                keep,
                 &err_body(&format!(
                     "{} not allowed on {}",
                     head.method, head.path
                 )),
             );
+            keep
         }
         (_, p)
-            if parse_work_path(p).is_some()
-                || p.starts_with("/artifacts/") =>
+            if p.starts_with("/work/") || p.starts_with("/artifacts/") =>
         {
             let _ = respond_json(
-                &mut w,
+                w,
                 405,
                 "Method Not Allowed",
                 &[],
+                keep,
                 &err_body(&format!(
                     "{} not allowed on {}",
                     head.method, head.path
                 )),
             );
+            keep
         }
         _ => {
             let _ = respond_json(
-                &mut w,
+                w,
                 404,
                 "Not Found",
                 &[],
+                keep,
                 &err_body(&format!("no such endpoint {}", head.path)),
             );
+            keep
         }
     }
-    let _ = (&stream).flush();
 }
 
 /// `/work/<seq>/renew` | `/work/<seq>/result` → `(seq, verb)`.
@@ -617,24 +826,27 @@ fn parse_work_path(path: &str) -> Option<(u64, &str)> {
 
 /// Read a small JSON request body (worker-protocol endpoints). Answers
 /// the error response itself and returns `None` when the body is
-/// over-long, unreadable, or not JSON.
+/// over-long, unreadable, or not JSON. `keep` is the connection's
+/// keep-alive eligibility; of the error paths, only "valid body,
+/// not JSON" leaves the stream framed — the others force a close.
 fn read_json_body<R: BufRead, W: Write>(
     reader: &mut R,
     w: &mut W,
     head: &HttpHead,
-) -> Option<Json> {
+    keep: bool,
+) -> (Option<Json>, bool) {
     if head.content_length > MAX_BODY_BYTES {
-        if !head.expect_continue {
-            drain_body(reader, head.content_length);
-        }
+        let drained = !head.expect_continue
+            && drain_body(reader, head.content_length);
         let _ = respond_json(
             w,
             413,
             "Payload Too Large",
             &[],
+            keep && drained,
             &err_body(&format!("body exceeds {MAX_BODY_BYTES} bytes")),
         );
-        return None;
+        return (None, keep && drained);
     }
     if head.expect_continue {
         let _ = write!(w, "HTTP/1.1 100 Continue\r\n\r\n");
@@ -648,23 +860,25 @@ fn read_json_body<R: BufRead, W: Write>(
                 400,
                 "Bad Request",
                 &[],
+                false,
                 &err_body(&e.to_string()),
             );
-            return None;
+            return (None, false);
         }
     };
     let text = String::from_utf8_lossy(&body);
     match Json::parse(text.trim()) {
-        Ok(j) => Some(j),
+        Ok(j) => (Some(j), keep),
         Err(e) => {
             let _ = respond_json(
                 w,
                 400,
                 "Bad Request",
                 &[],
+                keep,
                 &err_body(&format!("request body is not JSON: {e}")),
             );
-            None
+            (None, keep)
         }
     }
 }
@@ -672,21 +886,34 @@ fn read_json_body<R: BufRead, W: Write>(
 /// `POST /work/lease`: long-poll for one job on behalf of a remote
 /// worker. Cache-hit jobs are completed inline (the worker never sees
 /// them) and the poll continues, mirroring the local pool's
-/// `cached_runner` fast path.
+/// `cached_runner` fast path. Returns keep-alive eligibility.
 fn handle_lease<R: BufRead, W: Write>(
     ctx: &GwCtx<'_>,
     reader: &mut R,
     w: &mut W,
     head: &HttpHead,
-) {
-    let Some(j) = read_json_body(reader, w, head) else { return };
+    keep: bool,
+) -> bool {
+    let (j, keep) = read_json_body(reader, w, head, keep);
+    let Some(j) = j else { return keep };
     let worker = j
         .get("worker")
         .and_then(Json::as_str)
         .unwrap_or("anonymous")
         .to_string();
-    // `artifacts` (the worker's cached fingerprints) is accepted as a
-    // scheduling hint; the current scheduler does not use it.
+    // `artifacts` — the fingerprints the worker's local store already
+    // holds — drives affinity placement: the scheduler prefers leasing
+    // a job whose artifact set the worker needs no sync for.
+    let cached_fps: HashSet<String> = j
+        .get("artifacts")
+        .and_then(Json::as_arr)
+        .map(|a| {
+            a.iter()
+                .filter_map(Json::as_str)
+                .map(String::from)
+                .collect()
+        })
+        .unwrap_or_default();
     let ttl = Duration::from_secs(ctx.lopts.lease_secs.max(1));
     let deadline =
         Instant::now() + Duration::from_secs(ctx.lopts.poll_secs);
@@ -694,7 +921,13 @@ fn handle_lease<R: BufRead, W: Write>(
     // promptly even while blocked on an empty queue.
     let slice = Duration::from_millis(100);
     loop {
-        match ctx.hub.try_lease(&worker, ttl, slice) {
+        match ctx.hub.try_lease(
+            &worker,
+            &cached_fps,
+            ctx.lopts.affinity_window,
+            ttl,
+            slice,
+        ) {
             LeaseReply::Granted(info) => {
                 // Cache fast path: a hit completes the job without a
                 // round trip, exactly like the local cached_runner.
@@ -721,7 +954,7 @@ fn handle_lease<R: BufRead, W: Write>(
                     let dir = super::resolve_artifacts(
                         &info.spec.cfg.artifacts_dir,
                     );
-                    ctx.artifacts.lock().unwrap().insert(
+                    lock_recover(ctx.artifacts).insert(
                         info.afp.clone(),
                         (dir, info.spec.cfg.model.clone()),
                     );
@@ -733,20 +966,21 @@ fn handle_lease<R: BufRead, W: Write>(
                 let body = format!(
                     "{{\"lease\":{{\"seq\":{},\"priority\":{},\
                      \"hash\":\"{}\",\"label\":\"{}\",\"model\":\"{}\",\
-                     \"afp\":\"{}\",\"lease_secs\":{},\"force\":{},\
-                     \"spec\":{}}}}}",
+                     \"afp\":\"{}\",\"affine\":{},\"lease_secs\":{},\
+                     \"force\":{},\"spec\":{}}}}}",
                     info.seq,
                     info.priority,
                     info.spec.hash_hex(),
                     esc(&info.spec.label()),
                     esc(&info.spec.cfg.model),
                     esc(&info.afp),
+                    info.affine,
                     ttl.as_secs(),
                     ctx.lopts.force,
                     info.spec.to_wire(),
                 );
-                let _ = respond_json(w, 200, "OK", &[], &body);
-                return;
+                let _ = respond_json(w, 200, "OK", &[], keep, &body);
+                return keep;
             }
             LeaseReply::Closed => {
                 let _ = respond_json(
@@ -754,9 +988,10 @@ fn handle_lease<R: BufRead, W: Write>(
                     200,
                     "OK",
                     &[],
+                    keep,
                     "{\"closed\":true}",
                 );
-                return;
+                return keep;
             }
             LeaseReply::Idle => {
                 let draining = ctx.stop.load(Ordering::SeqCst);
@@ -766,25 +1001,29 @@ fn handle_lease<R: BufRead, W: Write>(
                         200,
                         "OK",
                         &[],
+                        keep,
                         &format!("{{\"idle\":true,\"draining\":{draining}}}"),
                     );
-                    return;
+                    return keep;
                 }
             }
         }
     }
 }
 
-/// `POST /work/<seq>/renew` and `POST /work/<seq>/result`.
+/// `POST /work/<seq>/renew` and `POST /work/<seq>/result`. Returns
+/// keep-alive eligibility.
 fn handle_work_post<R: BufRead, W: Write>(
     ctx: &GwCtx<'_>,
     reader: &mut R,
     w: &mut W,
     head: &HttpHead,
+    keep: bool,
     seq: u64,
     verb: &str,
-) {
-    let Some(j) = read_json_body(reader, w, head) else { return };
+) -> bool {
+    let (j, keep) = read_json_body(reader, w, head, keep);
+    let Some(j) = j else { return keep };
     let worker = j
         .get("worker")
         .and_then(Json::as_str)
@@ -798,6 +1037,7 @@ fn handle_work_post<R: BufRead, W: Write>(
                 200,
                 "OK",
                 &[],
+                keep,
                 &format!("{{\"ok\":true,\"lease_secs\":{}}}", ttl.as_secs()),
             );
         } else {
@@ -806,13 +1046,14 @@ fn handle_work_post<R: BufRead, W: Write>(
                 409,
                 "Conflict",
                 &[],
+                keep,
                 &err_body(&format!(
                     "no lease on job {seq} held by {worker:?} \
                      (expired and re-dispatched?)"
                 )),
             );
         }
-        return;
+        return keep;
     }
     // verb == "result"
     let mut outcome = None;
@@ -826,9 +1067,10 @@ fn handle_work_post<R: BufRead, W: Write>(
                     400,
                     "Bad Request",
                     &[],
+                    keep,
                     &err_body("done result carries no valid outcome"),
                 );
-                return;
+                return keep;
             };
             // Keep a copy for the cache write below; the original
             // moves into the dispatched result.
@@ -853,9 +1095,10 @@ fn handle_work_post<R: BufRead, W: Write>(
                 400,
                 "Bad Request",
                 &[],
+                keep,
                 &err_body(&format!("unknown result status {other:?}")),
             );
-            return;
+            return keep;
         }
     };
     let from_cache =
@@ -877,7 +1120,7 @@ fn handle_work_post<R: BufRead, W: Write>(
                     );
                 }
             }
-            let _ = respond_json(w, 200, "OK", &[], "{\"ok\":true}");
+            let _ = respond_json(w, 200, "OK", &[], keep, "{\"ok\":true}");
         }
         RemoteDone::Conflict => {
             let _ = respond_json(
@@ -885,6 +1128,7 @@ fn handle_work_post<R: BufRead, W: Write>(
                 409,
                 "Conflict",
                 &[],
+                keep,
                 &err_body(&format!(
                     "no lease on job {seq} held by {worker:?}; \
                      result dropped (job was re-dispatched)"
@@ -892,6 +1136,7 @@ fn handle_work_post<R: BufRead, W: Write>(
             );
         }
     }
+    keep
 }
 
 /// `GET /artifacts/<fp>`: stream the artifact set identified by a
@@ -899,14 +1144,20 @@ fn handle_work_post<R: BufRead, W: Write>(
 /// is re-verified at pack time, so a worker can never download an
 /// artifact set that changed since its lease ("stale fingerprint" →
 /// the job fails loudly instead of computing on regenerated weights).
-fn handle_artifact_get<W: Write>(ctx: &GwCtx<'_>, w: &mut W, fp: &str) {
-    let entry = ctx.artifacts.lock().unwrap().get(fp).cloned();
+fn handle_artifact_get<W: Write>(
+    ctx: &GwCtx<'_>,
+    w: &mut W,
+    fp: &str,
+    keep: bool,
+) {
+    let entry = lock_recover(ctx.artifacts).get(fp).cloned();
     let Some((dir, model)) = entry else {
         let _ = respond_json(
             w,
             404,
             "Not Found",
             &[],
+            keep,
             &err_body(&format!("unknown artifact fingerprint {fp:?}")),
         );
         return;
@@ -918,6 +1169,7 @@ fn handle_artifact_get<W: Write>(ctx: &GwCtx<'_>, w: &mut W, fp: &str) {
             409,
             "Conflict",
             &[],
+            keep,
             &err_body(&format!(
                 "artifact fingerprint {fp} is stale (artifacts for \
                  {model:?} changed; current {current})"
@@ -927,7 +1179,7 @@ fn handle_artifact_get<W: Write>(ctx: &GwCtx<'_>, w: &mut W, fp: &str) {
     }
     match sync::pack(&dir, &model) {
         Ok(frame) => {
-            let _ = respond_bytes(w, &frame);
+            let _ = respond_bytes(w, &frame, keep);
         }
         Err(e) => {
             let _ = respond_json(
@@ -935,6 +1187,7 @@ fn handle_artifact_get<W: Write>(ctx: &GwCtx<'_>, w: &mut W, fp: &str) {
                 500,
                 "Internal Server Error",
                 &[],
+                keep,
                 &err_body(&format!("packing artifacts failed: {e:#}")),
             );
         }
@@ -947,6 +1200,12 @@ struct HttpHead {
     path: String,
     content_length: usize,
     expect_continue: bool,
+    /// The client explicitly asked for `Connection: keep-alive`. The
+    /// gateway is conservative: absent the header it closes after one
+    /// response (the pre-keep-alive behavior), even on HTTP/1.1.
+    keep_alive: bool,
+    /// `X-OMGD-Client` fairness token, if presented.
+    client: Option<String>,
 }
 
 /// Read one request head. `Ok(None)` = clean EOF before any bytes (the
@@ -975,6 +1234,8 @@ fn read_head<R: BufRead>(r: &mut R) -> Result<Option<HttpHead>> {
     };
     let mut content_length = 0usize;
     let mut expect_continue = false;
+    let mut keep_alive = false;
+    let mut client = None;
     for _ in 0..MAX_HEADERS {
         let mut h = String::new();
         if head.read_line(&mut h)? == 0 {
@@ -987,6 +1248,8 @@ fn read_head<R: BufRead>(r: &mut R) -> Result<Option<HttpHead>> {
                 path,
                 content_length,
                 expect_continue,
+                keep_alive,
+                client,
             }));
         }
         let Some((name, value)) = h.split_once(':') else {
@@ -1003,6 +1266,27 @@ fn read_head<R: BufRead>(r: &mut R) -> Result<Option<HttpHead>> {
             }
             "expect" => {
                 expect_continue = value.eq_ignore_ascii_case("100-continue");
+            }
+            "connection" => {
+                // Connection: keep-alive may carry other tokens too
+                // (e.g. "keep-alive, TE"); "close" always wins.
+                let mut ka = keep_alive;
+                for tok in value.split(',') {
+                    let tok = tok.trim();
+                    if tok.eq_ignore_ascii_case("keep-alive") {
+                        ka = true;
+                    }
+                    if tok.eq_ignore_ascii_case("close") {
+                        ka = false;
+                        break;
+                    }
+                }
+                keep_alive = ka;
+            }
+            "x-omgd-client" => {
+                if !value.is_empty() {
+                    client = Some(value.to_string());
+                }
             }
             "transfer-encoding" => {
                 bail!("chunked request bodies are not supported");
@@ -1022,11 +1306,14 @@ fn read_body<R: BufRead>(r: &mut R, len: usize) -> Result<Vec<u8>> {
 /// Discard up to `len` request-body bytes (capped at
 /// [`MAX_DRAIN_BYTES`]) before an error response: closing a socket
 /// with unread bytes can RST the reply out from under the client.
-fn drain_body<R: BufRead>(r: &mut R, len: usize) {
-    let _ = std::io::copy(
-        &mut r.take((len as u64).min(MAX_DRAIN_BYTES)),
-        &mut std::io::sink(),
-    );
+/// `true` = the body was consumed in full, so the connection is still
+/// cleanly framed for another keep-alive request.
+fn drain_body<R: BufRead>(r: &mut R, len: usize) -> bool {
+    let want = (len as u64).min(MAX_DRAIN_BYTES);
+    match std::io::copy(&mut r.take(want), &mut std::io::sink()) {
+        Ok(n) => n == len as u64,
+        Err(_) => false,
+    }
 }
 
 fn err_body(msg: &str) -> String {
@@ -1034,37 +1321,173 @@ fn err_body(msg: &str) -> String {
 }
 
 /// One binary response (the `GET /artifacts/<fp>` frame).
-fn respond_bytes<W: Write>(w: &mut W, body: &[u8]) -> std::io::Result<()> {
+fn respond_bytes<W: Write>(
+    w: &mut W,
+    body: &[u8],
+    keep: bool,
+) -> std::io::Result<()> {
     write!(
         w,
         "HTTP/1.1 200 OK\r\nContent-Type: application/octet-stream\
-         \r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
-        body.len()
+         \r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+        body.len(),
+        if keep { "keep-alive" } else { "close" },
     )?;
     w.write_all(body)?;
     w.flush()
 }
 
 /// One small self-delimited JSON response (everything except the
-/// streamed `POST /jobs` body).
+/// streamed `POST /jobs` body). `keep` picks the `Connection` header:
+/// `Content-Length` framing makes every such response reusable, so the
+/// caller decides based on what the *request* side of the exchange
+/// left behind.
 fn respond_json<W: Write>(
     w: &mut W,
     status: u16,
     reason: &str,
     extra: &[(&str, &str)],
+    keep: bool,
     body: &str,
 ) -> std::io::Result<()> {
     write!(
         w,
         "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\
-         \r\nContent-Length: {}\r\nConnection: close\r\n",
-        body.len()
+         \r\nContent-Length: {}\r\nConnection: {}\r\n",
+        body.len(),
+        if keep { "keep-alive" } else { "close" },
     )?;
     for (k, v) in extra {
         write!(w, "{k}: {v}\r\n")?;
     }
     write!(w, "\r\n{body}")?;
     w.flush()
+}
+
+/// Chunked transfer *encoding* writer for the keep-alive `POST /jobs`
+/// response stream. Writes buffer internally; every `flush` emits the
+/// buffered bytes as ONE chunk — the session flushes once per protocol
+/// line, so lines map 1:1 to chunks. [`ChunkedWriter::finish`] writes
+/// the terminal `0` chunk that marks end-of-stream without closing the
+/// connection.
+pub struct ChunkedWriter<W: Write> {
+    inner: W,
+    buf: Vec<u8>,
+}
+
+impl<W: Write> ChunkedWriter<W> {
+    pub fn new(inner: W) -> Self {
+        Self { inner, buf: Vec::new() }
+    }
+
+    /// Flush any buffered bytes, then write the terminal chunk.
+    pub fn finish(mut self) -> std::io::Result<()> {
+        self.flush()?;
+        self.inner.write_all(b"0\r\n\r\n")?;
+        self.inner.flush()
+    }
+}
+
+impl<W: Write> Write for ChunkedWriter<W> {
+    fn write(&mut self, data: &[u8]) -> std::io::Result<usize> {
+        self.buf.extend_from_slice(data);
+        Ok(data.len())
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        // An empty buffer must NOT emit a chunk: a zero-length chunk
+        // is the stream terminator.
+        if !self.buf.is_empty() {
+            write!(self.inner, "{:x}\r\n", self.buf.len())?;
+            self.inner.write_all(&self.buf)?;
+            self.inner.write_all(b"\r\n")?;
+            self.buf.clear();
+        }
+        self.inner.flush()
+    }
+}
+
+/// Chunked transfer *decoding* reader — the client side of the
+/// keep-alive `POST /jobs` stream ([`super::remote`] and the
+/// integration tests use it). After the terminal chunk, `read` returns
+/// `Ok(0)` and the underlying reader is positioned exactly past the
+/// stream, ready for the next keep-alive response on the same socket.
+pub struct ChunkedReader<R: BufRead> {
+    inner: R,
+    remaining: usize,
+    after_data: bool,
+    done: bool,
+}
+
+impl<R: BufRead> ChunkedReader<R> {
+    pub fn new(inner: R) -> Self {
+        Self { inner, remaining: 0, after_data: false, done: false }
+    }
+
+    /// The underlying reader, for connection reuse after the terminal
+    /// chunk.
+    pub fn into_inner(self) -> R {
+        self.inner
+    }
+}
+
+fn bad_chunk(msg: &str) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData, msg.to_string())
+}
+
+impl<R: BufRead> Read for ChunkedReader<R> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        loop {
+            if self.done || buf.is_empty() {
+                return Ok(0);
+            }
+            if self.remaining > 0 {
+                let want = buf.len().min(self.remaining);
+                let n = self.inner.read(&mut buf[..want])?;
+                if n == 0 {
+                    return Err(bad_chunk("eof inside a chunk"));
+                }
+                self.remaining -= n;
+                if self.remaining == 0 {
+                    self.after_data = true;
+                }
+                return Ok(n);
+            }
+            if self.after_data {
+                // Chunk data is terminated by CRLF before the next
+                // size line.
+                let mut crlf = String::new();
+                self.inner.read_line(&mut crlf)?;
+                if !crlf.trim_end().is_empty() {
+                    return Err(bad_chunk("missing chunk terminator"));
+                }
+                self.after_data = false;
+            }
+            let mut line = String::new();
+            if self.inner.read_line(&mut line)? == 0 {
+                return Err(bad_chunk("eof before a chunk size"));
+            }
+            let size_str =
+                line.trim_end().split(';').next().unwrap_or("").trim();
+            let size = usize::from_str_radix(size_str, 16)
+                .map_err(|_| bad_chunk("malformed chunk size"))?;
+            if size == 0 {
+                // Terminal chunk: skip (empty) trailer lines up to the
+                // final blank line.
+                loop {
+                    let mut t = String::new();
+                    if self.inner.read_line(&mut t)? == 0
+                        || t.trim_end().is_empty()
+                    {
+                        break;
+                    }
+                }
+                self.done = true;
+                return Ok(0);
+            }
+            self.remaining = size;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -1129,6 +1552,7 @@ mod tests {
             429,
             "Too Many Requests",
             &[("Retry-After", "1")],
+            false,
             "{\"error\":\"full\"}",
         )
         .unwrap();
@@ -1136,7 +1560,83 @@ mod tests {
         assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"));
         assert!(text.contains("Retry-After: 1\r\n"));
         assert!(text.contains("Content-Length: 16\r\n"));
+        assert!(text.contains("Connection: close\r\n"));
         assert!(text.ends_with("\r\n\r\n{\"error\":\"full\"}"));
+        let mut out: Vec<u8> = Vec::new();
+        respond_json(&mut out, 200, "OK", &[], true, "{}").unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.contains("Connection: keep-alive\r\n"));
+    }
+
+    #[test]
+    fn head_parses_keep_alive_and_client_token() {
+        let h = head_of(
+            "POST /jobs HTTP/1.1\r\nConnection: Keep-Alive\r\n\
+             X-OMGD-Client: grid-a\r\n\r\n",
+        )
+        .unwrap()
+        .unwrap();
+        assert!(h.keep_alive);
+        assert_eq!(h.client.as_deref(), Some("grid-a"));
+        // Absent header = close (the conservative pre-keep-alive
+        // default), and "close" beats "keep-alive" in a token list.
+        let h = head_of("GET /stats HTTP/1.1\r\nHost: x\r\n\r\n")
+            .unwrap()
+            .unwrap();
+        assert!(!h.keep_alive);
+        assert!(h.client.is_none());
+        let h = head_of(
+            "GET /stats HTTP/1.1\r\nConnection: keep-alive, close\r\n\r\n",
+        )
+        .unwrap()
+        .unwrap();
+        assert!(!h.keep_alive);
+    }
+
+    #[test]
+    fn chunked_round_trip_and_reader_positioning() {
+        // Writer: one chunk per flush, terminal 0-chunk on finish.
+        let mut wire: Vec<u8> = Vec::new();
+        {
+            let mut cw = ChunkedWriter::new(&mut wire);
+            cw.write_all(b"{\"accepted\":0}\n").unwrap();
+            cw.flush().unwrap();
+            cw.flush().unwrap(); // idempotent: no empty chunk emitted
+            cw.write_all(b"{\"seq\":0}\n").unwrap();
+            cw.finish().unwrap();
+        }
+        let text = String::from_utf8(wire.clone()).unwrap();
+        assert!(text.starts_with("f\r\n{\"accepted\":0}\n\r\n"));
+        assert!(text.ends_with("0\r\n\r\n"));
+        // Reader: decodes the byte stream and leaves trailing bytes
+        // (the next keep-alive response) untouched.
+        wire.extend_from_slice(b"HTTP/1.1 200 OK\r\n");
+        let mut cr = ChunkedReader::new(&wire[..]);
+        let mut body = String::new();
+        cr.read_to_string(&mut body).unwrap();
+        assert_eq!(body, "{\"accepted\":0}\n{\"seq\":0}\n");
+        let mut rest = String::new();
+        cr.into_inner().read_to_string(&mut rest).unwrap();
+        assert_eq!(rest, "HTTP/1.1 200 OK\r\n");
+    }
+
+    #[test]
+    fn chunked_reader_rejects_garbage() {
+        let mut cr = ChunkedReader::new(&b"zz\r\nboom"[..]);
+        let mut s = String::new();
+        assert!(cr.read_to_string(&mut s).is_err(), "bad size line");
+        let mut cr = ChunkedReader::new(&b"5\r\nab"[..]);
+        let mut s = String::new();
+        assert!(cr.read_to_string(&mut s).is_err(), "eof inside chunk");
+    }
+
+    #[test]
+    fn drained_bodies_report_framing() {
+        let mut input: &[u8] = b"0123456789rest";
+        assert!(drain_body(&mut input, 10), "fully drained");
+        assert_eq!(input, b"rest");
+        let mut short: &[u8] = b"abc";
+        assert!(!drain_body(&mut short, 10), "truncated body");
     }
 
     #[test]

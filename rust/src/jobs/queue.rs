@@ -29,6 +29,9 @@ struct Entry {
     priority: i32,
     seq: u64,
     spec: JobSpec,
+    /// Times a window scan chose a deeper match over this entry while
+    /// it sat at the head (see [`JobQueue::pop_scan_timeout`]).
+    skips: u32,
 }
 
 impl PartialEq for Entry {
@@ -71,6 +74,37 @@ pub enum PopTimeout {
     /// arrive again.
     Closed,
 }
+
+impl PopTimeout {
+    /// The extracted job, if any — handy when draining a queue whose
+    /// open/closed distinction does not matter to the caller.
+    pub fn job(self) -> Option<Job> {
+        match self {
+            PopTimeout::Job(j) => Some(j),
+            _ => None,
+        }
+    }
+}
+
+/// Outcome of a windowed [`JobQueue::pop_scan_timeout`].
+#[derive(Debug)]
+pub enum PopScan {
+    /// A window entry matched the predicate and was extracted.
+    Match(Job),
+    /// Nothing in the window matched (or the head has been passed over
+    /// [`MAX_SCAN_SKIPS`] times): the queue head — oldest seq of the
+    /// highest pending priority — was extracted instead.
+    Head(Job),
+    /// The timeout elapsed with the queue open but empty.
+    Empty,
+    /// The queue is closed and drained, or cancelled.
+    Closed,
+}
+
+/// How many times the queue head may be passed over by scan matches
+/// before a scan is forced to take it regardless — the anti-starvation
+/// bound of [`JobQueue::pop_scan_timeout`].
+pub const MAX_SCAN_SKIPS: u32 = 8;
 
 /// Outcome of a non-blocking [`JobQueue::try_push`].
 #[derive(Debug)]
@@ -118,7 +152,7 @@ impl JobQueue {
         }
         let seq = st.next_seq;
         st.next_seq += 1;
-        st.heap.push(Entry { priority, seq, spec });
+        st.heap.push(Entry { priority, seq, spec, skips: 0 });
         drop(st);
         self.not_empty.notify_one();
         Ok(seq)
@@ -137,7 +171,7 @@ impl JobQueue {
         }
         let seq = st.next_seq;
         st.next_seq += 1;
-        st.heap.push(Entry { priority, seq, spec });
+        st.heap.push(Entry { priority, seq, spec, skips: 0 });
         drop(st);
         self.not_empty.notify_one();
         TryPush::Pushed(seq)
@@ -212,6 +246,117 @@ impl JobQueue {
         }
     }
 
+    /// Windowed [`Self::pop_timeout`]: scan up to `window` pending
+    /// entries — in exact pop order — for one whose spec satisfies
+    /// `pred`, extract the first match, and hand every passed-over
+    /// entry back unchanged (same seq, same priority, so ordering
+    /// guarantees and result routing survive the scan). With no match,
+    /// the queue head is extracted instead — the oldest-first fallback
+    /// that keeps any job from starving.
+    ///
+    /// Two deliberate bounds on the reordering this allows:
+    ///
+    /// * The scan never crosses a priority boundary: only entries of
+    ///   the head's priority are candidates, so "higher priority pops
+    ///   first" still holds exactly.
+    /// * A head passed over [`MAX_SCAN_SKIPS`] times is forced out on
+    ///   the next scan even when a deeper match exists, so a steady
+    ///   stream of affinity matches cannot park one job forever.
+    ///
+    /// `pred` runs under the queue lock — keep it cheap (the affinity
+    /// scheduler memoizes its per-(dir, model) fingerprint lookups for
+    /// exactly this reason). `window <= 1` never reorders anything —
+    /// the head is always extracted, reported as `Match` when it
+    /// happens to satisfy `pred`.
+    pub fn pop_scan_timeout(
+        &self,
+        timeout: Duration,
+        window: usize,
+        pred: &mut dyn FnMut(&JobSpec) -> bool,
+    ) -> PopScan {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.cancelled {
+                return PopScan::Closed;
+            }
+            if !st.heap.is_empty() {
+                let picked =
+                    Self::scan_extract(&mut st, window, &mut *pred);
+                drop(st);
+                self.not_full.notify_one();
+                return picked;
+            }
+            if st.closed {
+                return PopScan::Closed;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return PopScan::Empty;
+            }
+            let (guard, _timed_out) = self
+                .not_empty
+                .wait_timeout(st, deadline - now)
+                .unwrap();
+            st = guard;
+        }
+    }
+
+    /// The scan-and-extract core of [`Self::pop_scan_timeout`], run
+    /// with the state lock held and a non-empty heap.
+    fn scan_extract(
+        st: &mut State,
+        window: usize,
+        pred: &mut dyn FnMut(&JobSpec) -> bool,
+    ) -> PopScan {
+        let job = |e: Entry| Job {
+            seq: e.seq,
+            priority: e.priority,
+            spec: e.spec,
+        };
+        let head = st.heap.pop().expect("scan_extract needs a non-empty heap");
+        if pred(&head.spec) {
+            return PopScan::Match(job(head));
+        }
+        if window <= 1 || head.skips >= MAX_SCAN_SKIPS {
+            return PopScan::Head(job(head));
+        }
+        // Pull up to window-1 more entries of the head's priority,
+        // looking for a match; everything not chosen goes back intact.
+        let mut passed: Vec<Entry> = Vec::new();
+        let mut matched: Option<Entry> = None;
+        while passed.len() + 1 < window {
+            match st.heap.pop() {
+                Some(e) if e.priority == head.priority => {
+                    if pred(&e.spec) {
+                        matched = Some(e);
+                        break;
+                    }
+                    passed.push(e);
+                }
+                Some(e) => {
+                    // Crossed into a lower priority band: scan over.
+                    st.heap.push(e);
+                    break;
+                }
+                None => break,
+            }
+        }
+        match matched {
+            Some(e) => {
+                let mut head = head;
+                head.skips += 1;
+                st.heap.push(head);
+                st.heap.extend(passed);
+                PopScan::Match(job(e))
+            }
+            None => {
+                st.heap.extend(passed);
+                PopScan::Head(job(head))
+            }
+        }
+    }
+
     /// Re-admit a job that was popped but not completed (an expired
     /// remote lease). The original `seq`/`priority` are preserved so
     /// result routing — keyed by the seq the submitter was acked with
@@ -231,6 +376,7 @@ impl JobQueue {
             priority: job.priority,
             seq: job.seq,
             spec: job.spec,
+            skips: 0,
         });
         drop(st);
         self.not_empty.notify_one();
@@ -443,6 +589,89 @@ mod tests {
         assert_eq!(job.seq, s);
         q2.cancel();
         assert!(q2.requeue(job).is_err());
+    }
+
+    fn scan(q: &JobQueue, window: usize, want: &[u64]) -> PopScan {
+        let mut pred = |s: &JobSpec| want.contains(&s.cfg.seed);
+        q.pop_scan_timeout(Duration::from_millis(10), window, &mut pred)
+    }
+
+    #[test]
+    fn scan_extracts_a_deeper_match_and_preserves_order() {
+        let q = JobQueue::bounded(16);
+        let seqs: Vec<u64> =
+            (0..4).map(|i| q.push(spec(i), 0).unwrap()).collect();
+        // Seed 2 sits third in line; a window of 4 finds it.
+        let j = match scan(&q, 4, &[2]) {
+            PopScan::Match(j) => j,
+            other => panic!("expected Match, got {other:?}"),
+        };
+        assert_eq!(j.spec.cfg.seed, 2);
+        assert_eq!(j.seq, seqs[2], "extraction keeps the original seq");
+        // The passed-over entries drain in their original FIFO order.
+        let rest: Vec<u64> =
+            std::iter::from_fn(|| q.pop_timeout(Duration::ZERO).job())
+                .map(|j| j.spec.cfg.seed)
+                .collect();
+        assert_eq!(rest, vec![0, 1, 3]);
+    }
+
+    #[test]
+    fn scan_without_match_falls_back_to_the_head() {
+        let q = JobQueue::bounded(16);
+        for i in 0..3 {
+            q.push(spec(i), 0).unwrap();
+        }
+        match scan(&q, 8, &[99]) {
+            PopScan::Head(j) => assert_eq!(j.spec.cfg.seed, 0),
+            other => panic!("expected Head, got {other:?}"),
+        }
+        // A window larger than the queue is fine; matching head is a
+        // Match without any scan.
+        match scan(&q, 8, &[1]) {
+            PopScan::Match(j) => assert_eq!(j.spec.cfg.seed, 1),
+            other => panic!("expected Match, got {other:?}"),
+        }
+        // Empty and closed are distinguished exactly like pop_timeout.
+        assert!(matches!(scan(&q, 8, &[99]), PopScan::Head(_)));
+        assert!(matches!(scan(&q, 8, &[99]), PopScan::Empty));
+        q.close();
+        assert!(matches!(scan(&q, 8, &[99]), PopScan::Closed));
+    }
+
+    #[test]
+    fn scan_never_crosses_a_priority_boundary() {
+        let q = JobQueue::bounded(16);
+        q.push(spec(0), 5).unwrap(); // head: high priority, no match
+        q.push(spec(1), 0).unwrap(); // deeper match, but lower priority
+        match scan(&q, 8, &[1]) {
+            PopScan::Head(j) => {
+                assert_eq!(j.spec.cfg.seed, 0, "priority still wins")
+            }
+            other => panic!("expected Head, got {other:?}"),
+        }
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn scan_head_skip_cap_prevents_starvation() {
+        let q = JobQueue::bounded(64);
+        q.push(spec(0), 0).unwrap(); // never matches
+        q.push(spec(1), 0).unwrap(); // always matches
+        for _ in 0..MAX_SCAN_SKIPS {
+            let j = match scan(&q, 4, &[1]) {
+                PopScan::Match(j) => j,
+                other => panic!("expected Match, got {other:?}"),
+            };
+            assert_eq!(j.spec.cfg.seed, 1);
+            q.requeue(j).unwrap(); // keep a matching sibling available
+        }
+        // The head has now been skipped MAX_SCAN_SKIPS times: the next
+        // scan must take it even though a match is still waiting.
+        match scan(&q, 4, &[1]) {
+            PopScan::Head(j) => assert_eq!(j.spec.cfg.seed, 0),
+            other => panic!("expected forced Head, got {other:?}"),
+        }
     }
 
     #[test]

@@ -31,9 +31,15 @@
 //! into a [`GridReport`] whose CSV aggregate is byte-identical to the
 //! same grid run on a local pool (deterministic columns only).
 //!
-//! Everything here is dependency-free `std::net` HTTP/1.1, matching the
-//! gateway's deliberately minimal framing (`Content-Length` bodies,
-//! `Connection: close`).
+//! Everything here is dependency-free `std::net` HTTP/1.1, matching
+//! the gateway's deliberately minimal framing (`Content-Length`
+//! request bodies). Both clients speak `Connection: keep-alive`: each
+//! worker thread (and the heartbeat) holds ONE persistent connection
+//! across lease/renew/result/artifact rounds (`GatewayConn`), and
+//! `run_grid_remote` reuses its socket across `429` retry rounds, with
+//! the `200` session stream arriving chunked so its end is visible
+//! without a close. A connection the gateway idle-closed between
+//! rounds is retried once on a fresh socket.
 
 use super::cache::{self, ResultCache};
 use super::pool::{panic_message, JobOutcome, JobResult, JobStatus};
@@ -87,6 +93,15 @@ pub struct WorkerOptions {
     /// successful round trip) before the agent concludes the gateway is
     /// gone and exits.
     pub max_failures: usize,
+    /// Lifecycle: total leases this agent will run before exiting
+    /// cleanly (`--max-jobs`; shared budget across its threads). `0` =
+    /// unlimited. For autoscaled fleets that recycle agents.
+    pub max_jobs: usize,
+    /// Lifecycle: exit once a thread has gone this many seconds
+    /// without being granted work (`--idle-exit`; granularity is the
+    /// gateway's long-poll window). `0` = keep polling forever. For
+    /// autoscaled fleets that scale to zero on an idle gateway.
+    pub idle_exit_secs: u64,
 }
 
 impl Default for WorkerOptions {
@@ -99,6 +114,8 @@ impl Default for WorkerOptions {
             store_dir: None,
             force: false,
             max_failures: 5,
+            max_jobs: 0,
+            idle_exit_secs: 0,
         }
     }
 }
@@ -181,6 +198,9 @@ where
     // thread to renew.
     let in_flight: InFlightMap = Mutex::new(HashMap::new());
     let hb_stop = AtomicBool::new(false);
+    // `--max-jobs` ledger, shared by every thread: a slot is claimed
+    // before each lease poll and kept only when a job is granted.
+    let claimed = AtomicUsize::new(0);
     eprintln!(
         "omgd worker {}: {} thread(s), gateway {}",
         opts.worker_id,
@@ -193,12 +213,19 @@ where
         });
         let handles: Vec<_> = (0..opts.workers.max(1))
             .map(|wid| {
-                let (make, cache, store, stats, in_flight) =
-                    (&make_runner, &cache, &store, &stats, &in_flight);
+                let (make, cache, store, stats, in_flight, claimed) = (
+                    &make_runner,
+                    &cache,
+                    &store,
+                    &stats,
+                    &in_flight,
+                    &claimed,
+                );
                 s.spawn(move || {
                     let mut runner = make(wid);
                     worker_thread(
-                        opts, cache, store, stats, in_flight, &mut runner,
+                        opts, cache, store, stats, in_flight, claimed,
+                        &mut runner,
                     )
                 })
             })
@@ -223,22 +250,65 @@ where
     Ok(stats.snapshot())
 }
 
-/// One lease-pull thread: poll → (sync, cache, run) → report, until
-/// the gateway drains or disappears.
+/// A claimed `--max-jobs` budget slot: refunded on drop unless the
+/// claim turned into a granted lease ([`Self::keep`]).
+struct BudgetClaim<'a> {
+    counter: &'a AtomicUsize,
+    armed: bool,
+}
+
+impl BudgetClaim<'_> {
+    fn keep(mut self) {
+        self.armed = false;
+    }
+}
+
+impl Drop for BudgetClaim<'_> {
+    fn drop(&mut self) {
+        if self.armed {
+            self.counter.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+}
+
+/// One lease-pull thread: poll → (sync, cache, run) → report over one
+/// persistent keep-alive connection, until the gateway drains or
+/// disappears — or the agent's `--max-jobs`/`--idle-exit` lifecycle
+/// bounds are reached.
+#[allow(clippy::too_many_arguments)]
 fn worker_thread<F>(
     opts: &WorkerOptions,
     cache: &ResultCache,
     store: &ArtifactStore,
     stats: &StatCounters,
     in_flight: &InFlightMap,
+    claimed: &AtomicUsize,
     runner: &mut F,
 ) -> Result<()>
 where
     F: FnMut(&JobSpec) -> Result<JobOutcome>,
 {
+    let mut conn = GatewayConn::new(&opts.connect);
     let mut failures = 0usize;
     let mut ever_connected = false;
+    let mut last_work = Instant::now();
     loop {
+        // `--max-jobs`: claim a budget slot up front (exact accounting
+        // across threads — no overshoot); the claim is dropped back
+        // unless this poll actually wins a lease.
+        let budget = if opts.max_jobs > 0 {
+            if claimed.fetch_add(1, Ordering::SeqCst) >= opts.max_jobs {
+                claimed.fetch_sub(1, Ordering::SeqCst);
+                eprintln!(
+                    "omgd worker: --max-jobs {} reached; exiting",
+                    opts.max_jobs
+                );
+                return Ok(());
+            }
+            Some(BudgetClaim { counter: claimed, armed: true })
+        } else {
+            None
+        };
         let fps = store.fingerprints();
         let fps_json: Vec<String> =
             fps.iter().map(|f| format!("\"{}\"", esc(f))).collect();
@@ -248,8 +318,7 @@ where
             fps_json.join(",")
         );
         // The gateway long-polls ~20s by default; allow slack on top.
-        let reply = http_json(
-            &opts.connect,
+        let reply = conn.request_json(
             "POST",
             "/work/lease",
             body.as_bytes(),
@@ -302,13 +371,30 @@ where
             if j.get("draining").and_then(Json::as_bool) == Some(true) {
                 return Ok(());
             }
+            if opts.idle_exit_secs > 0
+                && last_work.elapsed()
+                    >= Duration::from_secs(opts.idle_exit_secs)
+            {
+                eprintln!(
+                    "omgd worker: no work for {}s; exiting (--idle-exit)",
+                    last_work.elapsed().as_secs()
+                );
+                return Ok(());
+            }
             continue;
         }
         let Some(lease) = j.get("lease") else {
             bail!("lease response has neither lease/idle/closed: {j:?}")
         };
+        if let Some(b) = budget {
+            b.keep();
+        }
+        last_work = Instant::now();
         stats.leased.fetch_add(1, Ordering::Relaxed);
-        run_lease(opts, cache, store, stats, in_flight, runner, lease);
+        run_lease(
+            opts, &mut conn, cache, store, stats, in_flight, runner,
+            lease,
+        );
     }
 }
 
@@ -318,6 +404,7 @@ where
 #[allow(clippy::too_many_arguments)]
 fn run_lease<F>(
     opts: &WorkerOptions,
+    conn: &mut GatewayConn,
     cache: &ResultCache,
     store: &ArtifactStore,
     stats: &StatCounters,
@@ -357,7 +444,7 @@ fn run_lease<F>(
     );
     let t = Timer::start();
     let (status, from_cache) =
-        execute_lease(opts, cache, store, stats, runner, lease, &afp);
+        execute_lease(opts, conn, cache, store, stats, runner, lease, &afp);
     {
         let mut map = in_flight.lock().unwrap();
         if map.get(&seq).map(|e| e.token) == Some(token) {
@@ -376,15 +463,17 @@ fn run_lease<F>(
             stats.failed.fetch_add(1, Ordering::Relaxed);
         }
     }
-    if !post_result(opts, seq, &status, from_cache, t.total()) {
+    if !post_result(opts, conn, seq, &status, from_cache, t.total()) {
         stats.conflicts.fetch_add(1, Ordering::Relaxed);
     }
 }
 
 /// The sync → cache → run core of one lease; returns the job status
 /// plus whether it came from the local cache.
+#[allow(clippy::too_many_arguments)]
 fn execute_lease<F>(
     opts: &WorkerOptions,
+    conn: &mut GatewayConn,
     cache: &ResultCache,
     store: &ArtifactStore,
     stats: &StatCounters,
@@ -428,7 +517,7 @@ where
         super::artifact_fingerprint(&spec.cfg)
     } else {
         let had_it = store.contains(afp);
-        let dir = store.ensure(afp, || fetch_artifacts(opts, afp));
+        let dir = store.ensure(afp, || fetch_artifacts(conn, afp));
         match dir {
             Ok(d) => {
                 if !had_it {
@@ -478,6 +567,7 @@ where
 /// the gateway rejected the result (lease conflict) or never took it.
 fn post_result(
     opts: &WorkerOptions,
+    conn: &mut GatewayConn,
     seq: u64,
     status: &JobStatus,
     from_cache: bool,
@@ -503,8 +593,7 @@ fn post_result(
     };
     let path = format!("/work/{seq}/result");
     for attempt in 0..3 {
-        match http_json(
-            &opts.connect,
+        match conn.request_json(
             "POST",
             &path,
             body.as_bytes(),
@@ -540,9 +629,8 @@ fn post_result(
     false
 }
 
-fn fetch_artifacts(opts: &WorkerOptions, fp: &str) -> Result<Vec<u8>> {
-    let (status, body) = http_bytes(
-        &opts.connect,
+fn fetch_artifacts(conn: &mut GatewayConn, fp: &str) -> Result<Vec<u8>> {
+    let (status, body) = conn.request_bytes(
         "GET",
         &format!("/artifacts/{fp}"),
         &[],
@@ -567,6 +655,7 @@ fn heartbeat_loop(
     in_flight: &InFlightMap,
     stop: &AtomicBool,
 ) {
+    let mut conn = GatewayConn::new(&opts.connect);
     let body = format!("{{\"worker\":\"{}\"}}", esc(&opts.worker_id));
     while !stop.load(Ordering::SeqCst) {
         std::thread::sleep(Duration::from_millis(200));
@@ -584,8 +673,7 @@ fn heartbeat_loop(
             // keep the renewal scheduled — dropping it on a blip would
             // let a healthy long job's lease expire mid-run.
             let lease_gone = matches!(
-                http_json(
-                    &opts.connect,
+                conn.request_json(
                     "POST",
                     &format!("/work/{seq}/renew"),
                     body.as_bytes(),
@@ -627,10 +715,14 @@ fn backoff(failures: usize) -> Duration {
 /// Each request line is `{"spec":<wire>}` (full fidelity) and each
 /// ack's hash is checked against the locally-built cell, so a gateway
 /// running skewed code fails loudly instead of aggregating the wrong
-/// sweep. A saturated gateway (`429`) is retried with backoff.
+/// sweep. A saturated gateway (`429`) is retried with backoff over one
+/// reused keep-alive connection. `client` is presented as the
+/// `X-OMGD-Client` fairness token (`--client`), subjecting this grid
+/// to the gateway's per-client quota.
 pub fn run_grid_remote(
     addr: &str,
     specs: Vec<JobSpec>,
+    client: Option<&str>,
 ) -> Result<GridReport> {
     if specs.is_empty() {
         return Ok(GridReport::new(Vec::new()));
@@ -640,7 +732,7 @@ pub fn run_grid_remote(
         .map(|s| format!("{{\"spec\":{}}}\n", s.to_wire()))
         .collect();
     // The returned reader is already positioned at the NDJSON body.
-    let mut reader = post_jobs_with_retry(addr, body.as_bytes())?;
+    let mut reader = post_jobs_with_retry(addr, body.as_bytes(), client)?;
 
     // seq (gateway) → index (ours). Acks and rejects arrive in request
     // order, so the n-th ack-or-reject line belongs to specs[n].
@@ -757,54 +849,98 @@ fn outcome_from_result(j: &Json) -> JobOutcome {
 }
 
 /// POST the session body, honoring `429 Retry-After` with bounded
-/// retries; on `200` returns a reader positioned at the start of the
-/// NDJSON body (the buffered reader owns the socket — it may have
-/// read ahead past the headers, so the raw stream must not be reused).
+/// retries on ONE reused keep-alive connection; on `200` returns a
+/// reader positioned at the start of the NDJSON body (chunked streams
+/// are transparently decoded, close-delimited streams read to EOF).
 fn post_jobs_with_retry(
     addr: &str,
     body: &[u8],
-) -> Result<BufReader<TcpStream>> {
+    client: Option<&str>,
+) -> Result<Box<dyn BufRead>> {
     const MAX_RETRIES: usize = 30;
-    for attempt in 0..=MAX_RETRIES {
-        let mut stream = connect(addr)?;
-        // Results can be minutes apart mid-grid: no read timeout on
-        // the session stream (a dead gateway still EOFs via TCP).
-        stream
-            .set_write_timeout(Some(Duration::from_secs(60)))
-            .ok();
-        write!(
-            stream,
-            "POST /jobs HTTP/1.1\r\nHost: omgd\r\nContent-Type: \
-             application/x-ndjson\r\nContent-Length: {}\r\n\
-             Connection: close\r\n\r\n",
-            body.len()
-        )?;
-        stream.write_all(body)?;
-        stream.flush()?;
-        let mut reader = BufReader::new(stream);
-        let mut status_line = String::new();
-        reader.read_line(&mut status_line)?;
-        let status = parse_status_line(&status_line)?;
-        let headers = read_headers(&mut reader)?;
+    let client_hdr = client
+        .map(|c| format!("X-OMGD-Client: {c}\r\n"))
+        .unwrap_or_default();
+    let mut conn: Option<BufReader<TcpStream>> = None;
+    let mut attempt = 0usize;
+    let mut stale_retries = 0usize;
+    loop {
+        let reused = conn.is_some();
+        let mut reader = match conn.take() {
+            Some(r) => r,
+            None => {
+                let stream = connect(addr)?;
+                // Results can be minutes apart mid-grid: no read
+                // timeout on the session stream (a dead gateway still
+                // EOFs via TCP).
+                stream
+                    .set_write_timeout(Some(Duration::from_secs(60)))
+                    .ok();
+                BufReader::new(stream)
+            }
+        };
+        let round = submit_jobs_round(&mut reader, body, &client_hdr);
+        let (status, headers) = match round {
+            Ok(x) => x,
+            // A reused connection the gateway idle-closed between
+            // retry rounds is expected — one fresh reconnect; a fresh
+            // connection's failure is real.
+            Err(_) if reused && stale_retries < 3 => {
+                stale_retries += 1;
+                continue;
+            }
+            Err(e) => return Err(e).context("submitting the grid"),
+        };
+        let chunked = headers
+            .get("transfer-encoding")
+            .map(|v| v.to_ascii_lowercase().contains("chunked"))
+            .unwrap_or(false);
+        let keep = headers
+            .get("connection")
+            .map(|v| v.eq_ignore_ascii_case("keep-alive"))
+            .unwrap_or(false);
         match status {
-            200 => return Ok(reader),
+            200 if chunked => {
+                return Ok(Box::new(BufReader::new(ChunkedReader::new(
+                    reader,
+                ))))
+            }
+            200 => return Ok(Box::new(reader)),
             // Retry only transient rejections, which carry Retry-After
-            // (queue saturation 429, connection-cap 503). The gateway's
-            // drain-mode 503 has no Retry-After and never reverts —
-            // fail it immediately instead of resubmitting for ~30s.
-            429 | 503
-                if attempt < MAX_RETRIES
-                    && headers.contains_key("retry-after") =>
-            {
+            // (queue saturation / client quota 429, connection-cap
+            // 503). The gateway's drain-mode 503 has no Retry-After
+            // and never reverts — fail it immediately instead of
+            // resubmitting for ~30s.
+            429 | 503 if headers.contains_key("retry-after") => {
+                if attempt >= MAX_RETRIES {
+                    bail!(
+                        "gateway stayed saturated after {MAX_RETRIES} \
+                         retries (HTTP {status})"
+                    );
+                }
+                attempt += 1;
                 let secs = headers
                     .get("retry-after")
                     .and_then(|v| v.parse::<u64>().ok())
                     .unwrap_or(1);
                 eprintln!(
                     "gateway busy (HTTP {status}); retrying in {secs}s \
-                     [{}/{MAX_RETRIES}]",
-                    attempt + 1
+                     [{attempt}/{MAX_RETRIES}]"
                 );
+                // Keep the connection across the retry round when the
+                // gateway kept it: drain the (Content-Length-framed)
+                // error body so the next response starts cleanly.
+                let len = headers
+                    .get("content-length")
+                    .and_then(|v| v.parse::<usize>().ok());
+                if keep {
+                    if let Some(len) = len {
+                        let mut buf = vec![0u8; len];
+                        if reader.read_exact(&mut buf).is_ok() {
+                            conn = Some(reader);
+                        }
+                    }
+                }
                 std::thread::sleep(Duration::from_secs(secs.clamp(1, 30)));
             }
             other => {
@@ -821,81 +957,174 @@ fn post_jobs_with_retry(
             }
         }
     }
-    bail!("gateway stayed saturated after {MAX_RETRIES} retries (429)")
+}
+
+/// One submission round of [`post_jobs_with_retry`]: write the
+/// `POST /jobs` request on the (possibly reused) connection and parse
+/// the response head.
+fn submit_jobs_round(
+    reader: &mut BufReader<TcpStream>,
+    body: &[u8],
+    client_hdr: &str,
+) -> Result<(u16, HashMap<String, String>)> {
+    {
+        let mut sw = reader.get_ref();
+        write!(
+            sw,
+            "POST /jobs HTTP/1.1\r\nHost: omgd\r\nContent-Type: \
+             application/x-ndjson\r\nContent-Length: {}\r\n\
+             {client_hdr}Connection: keep-alive\r\n\r\n",
+            body.len()
+        )?;
+        sw.write_all(body)?;
+        sw.flush()?;
+    }
+    let mut status_line = String::new();
+    if reader.read_line(&mut status_line)? == 0 {
+        bail!("gateway closed the connection before responding");
+    }
+    let status = parse_status_line(&status_line)?;
+    let headers = read_headers(reader)?;
+    Ok((status, headers))
 }
 
 // ---------------------------------------------------------------------
 // Minimal HTTP/1.1 client (std::net only)
 // ---------------------------------------------------------------------
 
+use super::net::ChunkedReader;
+
 fn connect(addr: &str) -> Result<TcpStream> {
     TcpStream::connect(addr)
         .with_context(|| format!("connecting to gateway {addr}"))
 }
 
-/// One request/response round trip; the response body is read fully
-/// (via `Content-Length`, else to EOF — every gateway response closes
-/// the connection).
-fn http_bytes(
-    addr: &str,
-    method: &str,
-    path: &str,
-    body: &[u8],
-    timeout: Duration,
-) -> Result<(u16, Vec<u8>)> {
-    let mut stream = connect(addr)?;
-    stream.set_read_timeout(Some(timeout)).ok();
-    stream.set_write_timeout(Some(timeout)).ok();
-    write!(
-        stream,
-        "{method} {path} HTTP/1.1\r\nHost: omgd\r\nContent-Type: \
-         application/json\r\nContent-Length: {}\r\nConnection: close\
-         \r\n\r\n",
-        body.len()
-    )?;
-    stream.write_all(body)?;
-    stream.flush()?;
-    let mut reader = BufReader::new(stream);
-    let mut status_line = String::new();
-    reader.read_line(&mut status_line).context("reading status")?;
-    let status = parse_status_line(&status_line)?;
-    let headers = read_headers(&mut reader)?;
-    let body = match headers
-        .get("content-length")
-        .and_then(|v| v.parse::<usize>().ok())
-    {
-        Some(len) => {
-            let mut buf = vec![0u8; len];
-            reader
-                .read_exact(&mut buf)
-                .context("reading response body")?;
-            buf
-        }
-        None => {
-            let mut buf = Vec::new();
-            reader
-                .read_to_end(&mut buf)
-                .context("reading response body")?;
-            buf
-        }
-    };
-    Ok((status, body))
+/// One persistent keep-alive connection to the gateway for the
+/// worker-protocol endpoints. Every request announces
+/// `Connection: keep-alive`; as long as the gateway answers in kind
+/// with a `Content-Length`-framed body, the socket is reused for the
+/// next round — lease, renew, result, and artifact fetches all ride
+/// one connection per thread instead of a TCP handshake per request.
+/// A cached connection that died between rounds (gateway idle timeout,
+/// network blip) is retried once on a fresh socket.
+struct GatewayConn {
+    addr: String,
+    stream: Option<BufReader<TcpStream>>,
 }
 
-/// [`http_bytes`] with the response parsed as JSON.
-fn http_json(
-    addr: &str,
-    method: &str,
-    path: &str,
-    body: &[u8],
-    timeout: Duration,
-) -> Result<(u16, Json)> {
-    let (status, bytes) = http_bytes(addr, method, path, body, timeout)?;
-    let text = String::from_utf8_lossy(&bytes);
-    let j = Json::parse(text.trim()).map_err(|e| {
-        anyhow!("gateway sent non-JSON ({e}): {:?}", text.trim())
-    })?;
-    Ok((status, j))
+impl GatewayConn {
+    fn new(addr: &str) -> Self {
+        Self { addr: addr.to_string(), stream: None }
+    }
+
+    /// One request/response round trip; the response body is read
+    /// fully (via `Content-Length`, else to EOF, which also retires
+    /// the connection).
+    fn request_bytes(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: &[u8],
+        timeout: Duration,
+    ) -> Result<(u16, Vec<u8>)> {
+        loop {
+            let reused = self.stream.is_some();
+            if self.stream.is_none() {
+                self.stream = Some(BufReader::new(connect(&self.addr)?));
+            }
+            match self.round_trip(method, path, body, timeout) {
+                Ok(out) => return Ok(out),
+                Err(e) => {
+                    self.stream = None;
+                    if !reused {
+                        return Err(e);
+                    }
+                    // Stale keep-alive connection: fresh socket, one
+                    // more try.
+                }
+            }
+        }
+    }
+
+    /// [`Self::request_bytes`] with the response parsed as JSON.
+    fn request_json(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: &[u8],
+        timeout: Duration,
+    ) -> Result<(u16, Json)> {
+        let (status, bytes) =
+            self.request_bytes(method, path, body, timeout)?;
+        let text = String::from_utf8_lossy(&bytes);
+        let j = Json::parse(text.trim()).map_err(|e| {
+            anyhow!("gateway sent non-JSON ({e}): {:?}", text.trim())
+        })?;
+        Ok((status, j))
+    }
+
+    fn round_trip(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: &[u8],
+        timeout: Duration,
+    ) -> Result<(u16, Vec<u8>)> {
+        let reader =
+            self.stream.as_mut().expect("round_trip needs a connection");
+        reader.get_ref().set_read_timeout(Some(timeout)).ok();
+        reader.get_ref().set_write_timeout(Some(timeout)).ok();
+        {
+            let mut sw = reader.get_ref();
+            write!(
+                sw,
+                "{method} {path} HTTP/1.1\r\nHost: omgd\r\n\
+                 Content-Type: application/json\r\nContent-Length: {}\
+                 \r\nConnection: keep-alive\r\n\r\n",
+                body.len()
+            )?;
+            sw.write_all(body)?;
+            sw.flush()?;
+        }
+        let mut status_line = String::new();
+        if reader
+            .read_line(&mut status_line)
+            .context("reading status")?
+            == 0
+        {
+            bail!("gateway closed the connection");
+        }
+        let status = parse_status_line(&status_line)?;
+        let headers = read_headers(reader)?;
+        let keep = headers
+            .get("connection")
+            .map(|v| v.eq_ignore_ascii_case("keep-alive"))
+            .unwrap_or(false);
+        let body = match headers
+            .get("content-length")
+            .and_then(|v| v.parse::<usize>().ok())
+        {
+            Some(len) => {
+                let mut buf = vec![0u8; len];
+                reader
+                    .read_exact(&mut buf)
+                    .context("reading response body")?;
+                buf
+            }
+            None => {
+                let mut buf = Vec::new();
+                reader
+                    .read_to_end(&mut buf)
+                    .context("reading response body")?;
+                self.stream = None; // EOF-delimited: socket is spent
+                return Ok((status, buf));
+            }
+        };
+        if !keep {
+            self.stream = None;
+        }
+        Ok((status, body))
+    }
 }
 
 fn parse_status_line(line: &str) -> Result<u16> {
@@ -979,7 +1208,8 @@ mod tests {
     #[test]
     fn empty_remote_grid_short_circuits() {
         // No gateway needed: zero cells is a complete report.
-        let report = run_grid_remote("127.0.0.1:1", Vec::new()).unwrap();
+        let report =
+            run_grid_remote("127.0.0.1:1", Vec::new(), None).unwrap();
         assert_eq!(report.n_jobs(), 0);
     }
 
@@ -991,7 +1221,8 @@ mod tests {
         };
         // Port 1 is essentially never listening; connect must fail
         // fast with a contextual error.
-        let err = run_grid_remote("127.0.0.1:1", vec![spec]).unwrap_err();
+        let err = run_grid_remote("127.0.0.1:1", vec![spec], None)
+            .unwrap_err();
         assert!(format!("{err:#}").contains("connecting to gateway"));
     }
 }

@@ -35,16 +35,27 @@
 //! worker crashes.
 
 use super::pool::{worker_loop, JobOutcome, JobResult, JobStatus};
-use super::queue::{Job, JobQueue, PopTimeout, TryPush};
+use super::queue::{Job, JobQueue, PopScan, PopTimeout, TryPush};
 use super::spec::JobSpec;
 use super::{cached_runner, open_cache, GridOptions};
 use crate::util::json::Json;
 use anyhow::Result;
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::io::{BufRead, Write};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{mpsc, Condvar, Mutex};
+use std::sync::{mpsc, Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
+
+/// Lock a shared-map mutex, recovering from poisoning. A worker or
+/// connection thread that panics while holding one of the hub's maps
+/// must not turn every later request into a 500/panic until restart:
+/// the maps' invariants are per-entry (insert/remove of self-contained
+/// values), so the inner state is still usable after a poisoned
+/// unlock. Every shared-map lock site in the serving layer goes
+/// through here.
+pub(crate) fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
 
 /// Counters for one serve session.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -57,18 +68,24 @@ pub struct ServeStats {
 }
 
 /// Per-session knobs.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct SessionOptions {
     /// Cap on this session's unfinished jobs: submission of the next
     /// request blocks until a result drains. `0` = unlimited (the stdin
     /// loop's historical behavior — the bounded queue is then the only
     /// backpressure).
     pub max_in_flight: usize,
+    /// Client identity this session's jobs are accounted under (the
+    /// `X-OMGD-Client` token). When the hub has a client quota, every
+    /// submission first acquires one of the token's in-flight slots —
+    /// shared across all sessions presenting the same token — blocking
+    /// until a slot drains. `None` = anonymous, never quota-throttled.
+    pub client: Option<String>,
 }
 
 impl Default for SessionOptions {
     fn default() -> Self {
-        Self { max_in_flight: 0 }
+        Self { max_in_flight: 0, client: None }
     }
 }
 
@@ -83,19 +100,35 @@ impl Default for SessionOptions {
 /// own accept loop.
 pub struct JobHub {
     pub queue: JobQueue,
-    routes: Mutex<HashMap<u64, mpsc::Sender<JobResult>>>,
+    routes: Mutex<HashMap<u64, Route>>,
     /// Jobs currently leased to remote workers, keyed by seq. An
     /// expired entry is requeued (same seq) by [`Self::requeue_expired`]
     /// so a crashed or partitioned worker's jobs are re-dispatched.
     leases: Mutex<HashMap<u64, LeaseEntry>>,
+    /// Unfinished jobs per client token, across every session that
+    /// presented the token ([`Self::acquire_client_slot`] /
+    /// [`Self::dispatch`]); the fairness ledger behind `--client-quota`.
+    clients: Mutex<HashMap<String, usize>>,
+    clients_cv: Condvar,
+    /// Per-token in-flight cap (`0` = unlimited); see
+    /// [`Self::set_client_quota`].
+    client_quota: AtomicUsize,
     accepted: AtomicUsize,
     rejected: AtomicUsize,
     done: AtomicUsize,
     failed: AtomicUsize,
     cached: AtomicUsize,
     leased: AtomicUsize,
+    affinity: AtomicUsize,
     requeued: AtomicUsize,
     conflicts: AtomicUsize,
+}
+
+/// One submitted job's reply channel plus the client token its
+/// completion must be debited against.
+struct Route {
+    tx: mpsc::Sender<JobResult>,
+    client: Option<String>,
 }
 
 struct LeaseEntry {
@@ -112,6 +145,9 @@ struct LeaseEntry {
 pub struct RemoteStats {
     /// Leases granted to remote workers.
     pub leased: usize,
+    /// Leases placed by artifact affinity: the granted job's artifact
+    /// fingerprint was already in the requesting worker's cache.
+    pub affinity: usize,
     /// Expired leases re-dispatched into the queue.
     pub requeued: usize,
     /// Stale remote completions/renewals rejected (lease lost).
@@ -140,6 +176,10 @@ pub struct LeaseInfo {
     /// (`"absent"` when the gateway has no artifacts for it) — the
     /// worker's sync key *and* the cache key on both ends.
     pub afp: String,
+    /// True when the job was placed by artifact affinity — its
+    /// fingerprint was already in the worker's advertised cache, so no
+    /// sync round trip is needed.
+    pub affine: bool,
     pub ttl: Duration,
 }
 
@@ -161,15 +201,79 @@ impl JobHub {
             queue: JobQueue::bounded(queue_capacity),
             routes: Mutex::new(HashMap::new()),
             leases: Mutex::new(HashMap::new()),
+            clients: Mutex::new(HashMap::new()),
+            clients_cv: Condvar::new(),
+            client_quota: AtomicUsize::new(0),
             accepted: AtomicUsize::new(0),
             rejected: AtomicUsize::new(0),
             done: AtomicUsize::new(0),
             failed: AtomicUsize::new(0),
             cached: AtomicUsize::new(0),
             leased: AtomicUsize::new(0),
+            affinity: AtomicUsize::new(0),
             requeued: AtomicUsize::new(0),
             conflicts: AtomicUsize::new(0),
         }
+    }
+
+    /// Set the per-client in-flight quota (`0` = unlimited). The
+    /// gateway installs `--client-quota` here before serving; changing
+    /// it mid-flight only affects future acquisitions.
+    pub fn set_client_quota(&self, quota: usize) {
+        self.client_quota.store(quota, Ordering::SeqCst);
+        self.clients_cv.notify_all();
+    }
+
+    /// Unfinished jobs currently accounted to `client` across every
+    /// session presenting that token.
+    pub fn client_in_flight(&self, client: &str) -> usize {
+        lock_recover(&self.clients).get(client).copied().unwrap_or(0)
+    }
+
+    /// Snapshot of every client token with unfinished jobs, sorted by
+    /// token (the `"clients"` block of `GET /stats`).
+    pub fn clients_snapshot(&self) -> Vec<(String, usize)> {
+        let mut v: Vec<(String, usize)> = lock_recover(&self.clients)
+            .iter()
+            .map(|(k, &n)| (k.clone(), n))
+            .collect();
+        v.sort();
+        v
+    }
+
+    /// Reserve one in-flight slot for `client`, blocking while the
+    /// token is at quota. Slots are released by [`Self::dispatch`] as
+    /// the token's results (from any of its sessions) drain, so a
+    /// blocked submitter always makes progress; callers on a failed
+    /// submit must return the slot via [`Self::release_client_slot`].
+    fn acquire_client_slot(&self, client: &str) {
+        let mut map = lock_recover(&self.clients);
+        loop {
+            let quota = self.client_quota.load(Ordering::SeqCst);
+            let n = map.get(client).copied().unwrap_or(0);
+            if quota == 0 || n < quota {
+                *map.entry(client.to_string()).or_insert(0) += 1;
+                return;
+            }
+            map = self
+                .clients_cv
+                .wait(map)
+                .unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// Return a slot acquired by [`Self::acquire_client_slot`] whose
+    /// job never made it into the queue.
+    fn release_client_slot(&self, client: &str) {
+        let mut map = lock_recover(&self.clients);
+        if let Some(n) = map.get_mut(client) {
+            *n = n.saturating_sub(1);
+            if *n == 0 {
+                map.remove(client);
+            }
+        }
+        drop(map);
+        self.clients_cv.notify_all();
     }
 
     /// True when the pending queue is at capacity — the signal the HTTP
@@ -180,7 +284,10 @@ impl JobHub {
 
     /// Submit one job; its eventual [`JobResult`] goes to `reply`.
     /// Blocks while the queue is full; fails only once the hub drains
-    /// (queue closed).
+    /// (queue closed). `client` attributes the job to a fairness
+    /// ledger token — callers must already hold one of the token's
+    /// slots (`acquire_client_slot`); the dispatch path returns it
+    /// when the result lands.
     ///
     /// The push and the route registration happen together under the
     /// routes lock, so a job that completes in microseconds still finds
@@ -194,13 +301,20 @@ impl JobHub {
         mut spec: JobSpec,
         priority: i32,
         reply: &mpsc::Sender<JobResult>,
+        client: Option<&str>,
     ) -> Result<u64> {
         loop {
             {
-                let mut routes = self.routes.lock().unwrap();
+                let mut routes = lock_recover(&self.routes);
                 match self.queue.try_push(spec, priority) {
                     TryPush::Pushed(seq) => {
-                        routes.insert(seq, reply.clone());
+                        routes.insert(
+                            seq,
+                            Route {
+                                tx: reply.clone(),
+                                client: client.map(String::from),
+                            },
+                        );
                         self.accepted.fetch_add(1, Ordering::Relaxed);
                         return Ok(seq);
                     }
@@ -253,9 +367,12 @@ impl JobHub {
         } else {
             self.failed.fetch_add(1, Ordering::Relaxed);
         }
-        let reply = self.routes.lock().unwrap().remove(&r.seq);
-        if let Some(tx) = reply {
-            let _ = tx.send(r);
+        let reply = lock_recover(&self.routes).remove(&r.seq);
+        if let Some(route) = reply {
+            if let Some(client) = &route.client {
+                self.release_client_slot(client);
+            }
+            let _ = route.tx.send(r);
         }
     }
 
@@ -263,39 +380,92 @@ impl JobHub {
     /// work, then record the lease (expiring after `ttl`, renewable via
     /// [`Self::renew`]). Expired leases are swept first, so a single
     /// polling worker also drives re-dispatch.
+    ///
+    /// `cached_fps` is the worker's advertised artifact cache and
+    /// `window` the affinity scan bound: up to `window` queued jobs (of
+    /// the head's priority) are scanned for one whose artifact
+    /// fingerprint the worker already holds, falling back to the
+    /// oldest-first head so no job starves
+    /// ([`JobQueue::pop_scan_timeout`] owns the ordering guarantees).
+    /// `window <= 1` or an empty fingerprint set disables the scan —
+    /// the head is leased exactly as before.
     pub fn try_lease(
         &self,
         worker: &str,
+        cached_fps: &HashSet<String>,
+        window: usize,
         ttl: Duration,
         wait: Duration,
     ) -> LeaseReply {
         self.requeue_expired();
-        match self.queue.pop_timeout(wait) {
-            PopTimeout::Job(job) => {
-                let afp = super::artifact_fingerprint(&job.spec.cfg);
-                let info = LeaseInfo {
-                    seq: job.seq,
-                    priority: job.priority,
-                    spec: job.spec.clone(),
-                    afp: afp.clone(),
-                    ttl,
-                };
-                self.leases.lock().unwrap().insert(
-                    job.seq,
-                    LeaseEntry {
-                        spec: job.spec,
-                        priority: job.priority,
-                        afp,
-                        worker: worker.to_string(),
-                        expires: Instant::now() + ttl,
-                    },
-                );
-                self.leased.fetch_add(1, Ordering::Relaxed);
-                LeaseReply::Granted(info)
+        // A worker advertising nothing can never match: skip the scan
+        // entirely (plain oldest-first pop, no filesystem work under
+        // the queue lock).
+        let (job, affine, mut memo) = if cached_fps.is_empty()
+            || window <= 1
+        {
+            match self.queue.pop_timeout(wait) {
+                PopTimeout::Job(job) => (job, false, HashMap::new()),
+                PopTimeout::Empty => return LeaseReply::Idle,
+                PopTimeout::Closed => return LeaseReply::Closed,
             }
-            PopTimeout::Empty => LeaseReply::Idle,
-            PopTimeout::Closed => LeaseReply::Closed,
+        } else {
+            // Fingerprinting a spec hits the filesystem and the
+            // predicate runs under the queue lock, so memoize per
+            // (dir, model) — a grid's cells share a handful of
+            // artifact sets, bounding the scan to one or two
+            // `read_dir`s per lease.
+            let mut memo: HashMap<(String, String), String> =
+                HashMap::new();
+            let mut pred = |spec: &JobSpec| {
+                let key = (
+                    spec.cfg.artifacts_dir.clone(),
+                    spec.cfg.model.clone(),
+                );
+                let fp = memo.entry(key).or_insert_with(|| {
+                    super::artifact_fingerprint(&spec.cfg)
+                });
+                fp.as_str() != "absent"
+                    && cached_fps.contains(fp.as_str())
+            };
+            match self.queue.pop_scan_timeout(wait, window, &mut pred) {
+                PopScan::Match(job) => (job, true, memo),
+                PopScan::Head(job) => (job, false, memo),
+                PopScan::Empty => return LeaseReply::Idle,
+                PopScan::Closed => return LeaseReply::Closed,
+            }
+        };
+        // The scan already fingerprinted the granted job — reuse it
+        // instead of re-statting the artifact files.
+        let afp = memo
+            .remove(&(
+                job.spec.cfg.artifacts_dir.clone(),
+                job.spec.cfg.model.clone(),
+            ))
+            .unwrap_or_else(|| super::artifact_fingerprint(&job.spec.cfg));
+        let info = LeaseInfo {
+            seq: job.seq,
+            priority: job.priority,
+            spec: job.spec.clone(),
+            afp: afp.clone(),
+            affine,
+            ttl,
+        };
+        lock_recover(&self.leases).insert(
+            job.seq,
+            LeaseEntry {
+                spec: job.spec,
+                priority: job.priority,
+                afp,
+                worker: worker.to_string(),
+                expires: Instant::now() + ttl,
+            },
+        );
+        self.leased.fetch_add(1, Ordering::Relaxed);
+        if affine {
+            self.affinity.fetch_add(1, Ordering::Relaxed);
         }
+        LeaseReply::Granted(info)
     }
 
     /// Extend `worker`'s lease on `seq` by `ttl` from now. `false` when
@@ -304,7 +474,7 @@ impl JobHub {
     /// eventual result to be rejected as a conflict.
     pub fn renew(&self, seq: u64, worker: &str, ttl: Duration) -> bool {
         let renewed = {
-            let mut leases = self.leases.lock().unwrap();
+            let mut leases = lock_recover(&self.leases);
             match leases.get_mut(&seq) {
                 Some(e) if e.worker == worker => {
                     e.expires = Instant::now() + ttl;
@@ -334,7 +504,7 @@ impl JobHub {
         secs: f64,
     ) -> RemoteDone {
         let entry = {
-            let mut leases = self.leases.lock().unwrap();
+            let mut leases = lock_recover(&self.leases);
             let owned =
                 matches!(leases.get(&seq), Some(e) if e.worker == worker);
             if owned {
@@ -369,7 +539,7 @@ impl JobHub {
     pub fn requeue_expired(&self) -> usize {
         let now = Instant::now();
         let expired: Vec<(u64, LeaseEntry)> = {
-            let mut leases = self.leases.lock().unwrap();
+            let mut leases = lock_recover(&self.leases);
             let seqs: Vec<u64> = leases
                 .iter()
                 .filter(|(_, e)| e.expires <= now)
@@ -404,13 +574,14 @@ impl JobHub {
 
     /// Number of jobs currently leased out to remote workers.
     pub fn n_leased(&self) -> usize {
-        self.leases.lock().unwrap().len()
+        lock_recover(&self.leases).len()
     }
 
     /// Hub-lifetime remote-lease counters.
     pub fn remote_counters(&self) -> RemoteStats {
         RemoteStats {
             leased: self.leased.load(Ordering::Relaxed),
+            affinity: self.affinity.load(Ordering::Relaxed),
             requeued: self.requeued.load(Ordering::Relaxed),
             conflicts: self.conflicts.load(Ordering::Relaxed),
         }
@@ -582,6 +753,15 @@ where
                 }
             };
             let (hash, label) = (spec.hash_hex(), spec.label());
+            // Fairness first: with a hub quota, submitting blocks until
+            // this client token (across ALL its sessions) is under its
+            // in-flight cap. Slots drain via the hub's dispatch path,
+            // never via this session's writer, so blocking here cannot
+            // deadlock the stream.
+            let client = opts.client.as_deref();
+            if let Some(c) = client {
+                hub.acquire_client_slot(c);
+            }
             // Backpressure: cap this session's outstanding jobs,
             // draining a result before submitting the next request.
             {
@@ -597,7 +777,7 @@ where
             // its result line. The hub drains without this lock, so a
             // full-queue submit still makes progress.
             let mut o = out_ref.lock().unwrap();
-            match hub.submit(spec, priority, &reply_tx) {
+            match hub.submit(spec, priority, &reply_tx, client) {
                 Ok(seq) => {
                     accepted += 1;
                     let wrote = writeln!(
@@ -613,10 +793,14 @@ where
                     }
                 }
                 Err(_) => {
-                    // Hub is draining: undo the in-flight reservation
-                    // and keep the one-ack-or-reject-per-line promise.
+                    // Hub is draining: undo the in-flight and client
+                    // reservations and keep the one-ack-or-reject-per-
+                    // line promise.
                     rejected += 1;
                     hub.note_rejected();
+                    if let Some(c) = client {
+                        hub.release_client_slot(c);
+                    }
                     let wrote = writeln!(
                         o,
                         "{{\"error\":\"job queue is closed\",\
@@ -823,7 +1007,7 @@ this is not json\n\
                 hub,
                 input.as_bytes(),
                 &mut out,
-                &SessionOptions { max_in_flight: 1 },
+                &SessionOptions { max_in_flight: 1, ..Default::default() },
             )
         });
         assert_eq!(stats.accepted, 6);
@@ -861,6 +1045,8 @@ this is not json\n\
         // Grant
         let info = match hub.try_lease(
             "w1",
+            &HashSet::new(),
+            0,
             Duration::from_secs(60),
             Duration::ZERO,
         ) {
@@ -872,7 +1058,13 @@ this is not json\n\
         assert_eq!(hub.n_leased(), 1);
         // Empty queue now → Idle
         assert!(matches!(
-            hub.try_lease("w2", Duration::from_secs(60), Duration::ZERO),
+            hub.try_lease(
+                "w2",
+                &HashSet::new(),
+                0,
+                Duration::from_secs(60),
+                Duration::ZERO
+            ),
             LeaseReply::Idle
         ));
         // Renewal: owner only
@@ -930,6 +1122,8 @@ this is not json\n\
         let seq = hub.queue.push(mk_spec(2), 7).unwrap();
         let info = match hub.try_lease(
             "dead-worker",
+            &HashSet::new(),
+            0,
             Duration::from_millis(5),
             Duration::ZERO,
         ) {
@@ -944,6 +1138,8 @@ this is not json\n\
         // Re-leased to a healthy worker with identity intact.
         let again = match hub.try_lease(
             "w2",
+            &HashSet::new(),
+            0,
             Duration::from_secs(60),
             Duration::ZERO,
         ) {
@@ -980,9 +1176,11 @@ this is not json\n\
     fn remote_completion_routes_to_the_submitting_session() {
         let hub = JobHub::new(4);
         let (tx, rx) = mpsc::channel::<JobResult>();
-        let seq = hub.submit(mk_spec(3), 0, &tx).unwrap();
+        let seq = hub.submit(mk_spec(3), 0, &tx, None).unwrap();
         let _info = match hub.try_lease(
             "w1",
+            &HashSet::new(),
+            0,
             Duration::from_secs(60),
             Duration::ZERO,
         ) {
@@ -1012,9 +1210,186 @@ this is not json\n\
         let hub = JobHub::new(4);
         hub.queue.close();
         assert!(matches!(
-            hub.try_lease("w", Duration::from_secs(1), Duration::ZERO),
+            hub.try_lease(
+                "w",
+                &HashSet::new(),
+                0,
+                Duration::from_secs(1),
+                Duration::ZERO
+            ),
             LeaseReply::Closed
         ));
+    }
+
+    /// A spec whose artifact files really exist, so its fingerprint is
+    /// a real hash (not `"absent"`) and affinity can match on it.
+    fn art_spec(dir: &std::path::Path, model: &str, seed: u64) -> JobSpec {
+        let mut cfg = crate::config::RunConfig::default();
+        cfg.seed = seed;
+        cfg.model = model.to_string();
+        cfg.artifacts_dir = dir.to_string_lossy().into_owned();
+        JobSpec {
+            kind: crate::jobs::spec::ExperimentKind::Pretrain,
+            cfg,
+        }
+    }
+
+    #[test]
+    fn affinity_lease_prefers_jobs_the_worker_already_holds() {
+        let dir = std::env::temp_dir().join(format!(
+            "omgd-affinity-test-{}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("ma.json"), b"{\"a\":1}").unwrap();
+        std::fs::write(dir.join("mb.json"), b"{\"b\":1}").unwrap();
+        let sa = art_spec(&dir, "ma", 0);
+        let sb = art_spec(&dir, "mb", 1);
+        let fp_b = crate::jobs::artifact_fingerprint(&sb.cfg);
+        assert_ne!(fp_b, "absent");
+
+        let hub = JobHub::new(8);
+        hub.queue.push(sa, 0).unwrap(); // head of the queue
+        hub.queue.push(sb, 0).unwrap();
+        // A worker holding only model-b artifacts gets the deeper
+        // model-b job, not the head.
+        let fps: HashSet<String> = [fp_b.clone()].into_iter().collect();
+        let info = match hub.try_lease(
+            "wb",
+            &fps,
+            8,
+            Duration::from_secs(60),
+            Duration::ZERO,
+        ) {
+            LeaseReply::Granted(i) => i,
+            other => panic!("expected Granted, got {other:?}"),
+        };
+        assert_eq!(info.spec.cfg.model, "mb");
+        assert!(info.affine, "placement was an affinity match");
+        assert_eq!(info.afp, fp_b);
+        assert_eq!(hub.remote_counters().affinity, 1);
+        // A cache-less worker falls back to the (passed-over) head.
+        let info2 = match hub.try_lease(
+            "w-plain",
+            &HashSet::new(),
+            8,
+            Duration::from_secs(60),
+            Duration::ZERO,
+        ) {
+            LeaseReply::Granted(i) => i,
+            other => panic!("expected Granted, got {other:?}"),
+        };
+        assert_eq!(info2.spec.cfg.model, "ma");
+        assert!(!info2.affine);
+        assert_eq!(hub.remote_counters().affinity, 1, "no new hit");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn client_slots_block_at_quota_and_drain_on_release() {
+        let hub = JobHub::new(4);
+        hub.set_client_quota(1);
+        hub.acquire_client_slot("tok");
+        assert_eq!(hub.client_in_flight("tok"), 1);
+        assert_eq!(hub.client_in_flight("other"), 0);
+        std::thread::scope(|s| {
+            let waiter = s.spawn(|| {
+                hub.acquire_client_slot("tok"); // blocks at quota
+                hub.release_client_slot("tok");
+            });
+            // A different token is unaffected by "tok" being at quota.
+            hub.acquire_client_slot("other");
+            hub.release_client_slot("other");
+            std::thread::sleep(Duration::from_millis(30));
+            assert!(!waiter.is_finished(), "waiter held at quota");
+            hub.release_client_slot("tok");
+            waiter.join().unwrap();
+        });
+        assert!(hub.clients_snapshot().is_empty(), "ledger drains to 0");
+    }
+
+    #[test]
+    fn quota_throttled_session_still_completes_every_job() {
+        let input: String = (0..6).map(request).collect();
+        let mut out: Vec<u8> = Vec::new();
+        let stats = with_hub(2, 8, stub_factory, |hub| {
+            hub.set_client_quota(1);
+            let st = run_session(
+                hub,
+                input.as_bytes(),
+                &mut out,
+                &SessionOptions {
+                    max_in_flight: 0,
+                    client: Some("grid-a".into()),
+                },
+            );
+            // Per-session drain done: the token's ledger is back to 0.
+            assert!(hub.clients_snapshot().is_empty());
+            st
+        });
+        // One slot throttles submission (a job must complete before
+        // the next is accepted) but never wedges or drops work.
+        // (The slot is released by the hub's dispatch path, which runs
+        // just before the result line is written — so unlike
+        // max_in_flight, strict ack/result alternation on the stream
+        // is not guaranteed, only completion.)
+        assert_eq!(stats.accepted, 6);
+        assert_eq!(stats.done, 6);
+        assert_eq!(stats.failed, 0);
+        let text = String::from_utf8(out).unwrap();
+        assert_eq!(text.lines().count(), 12, "6 acks + 6 results");
+    }
+
+    #[test]
+    fn poisoned_hub_maps_recover_instead_of_panicking() {
+        use std::panic::{catch_unwind, AssertUnwindSafe};
+        let hub = JobHub::new(4);
+        // Panic while holding each shared map, poisoning the mutexes
+        // the way a crashed connection/worker thread would.
+        let _ = catch_unwind(AssertUnwindSafe(|| {
+            let _g = hub.routes.lock().unwrap();
+            panic!("poison routes");
+        }));
+        let _ = catch_unwind(AssertUnwindSafe(|| {
+            let _g = hub.leases.lock().unwrap();
+            panic!("poison leases");
+        }));
+        let _ = catch_unwind(AssertUnwindSafe(|| {
+            let _g = hub.clients.lock().unwrap();
+            panic!("poison clients");
+        }));
+        // Every later request must still work: submit → lease → renew
+        // → complete, with the client ledger draining to zero.
+        let (tx, rx) = mpsc::channel::<JobResult>();
+        let seq = hub.submit(mk_spec(5), 0, &tx, Some("t")).unwrap();
+        assert_eq!(hub.client_in_flight("t"), 1);
+        let info = match hub.try_lease(
+            "w1",
+            &HashSet::new(),
+            0,
+            Duration::from_secs(60),
+            Duration::ZERO,
+        ) {
+            LeaseReply::Granted(i) => i,
+            other => panic!("expected Granted, got {other:?}"),
+        };
+        assert_eq!(info.seq, seq);
+        assert!(hub.renew(seq, "w1", Duration::from_secs(60)));
+        assert!(matches!(
+            hub.complete_remote(
+                seq,
+                "w1",
+                JobStatus::Done(JobOutcome::default()),
+                false,
+                0.1
+            ),
+            RemoteDone::Accepted { .. }
+        ));
+        let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(r.seq, seq);
+        assert_eq!(hub.client_in_flight("t"), 0);
+        assert!(hub.clients_snapshot().is_empty());
     }
 
     #[test]
@@ -1030,7 +1405,7 @@ this is not json\n\
                             hub,
                             input_a.as_bytes(),
                             &mut out,
-                            &SessionOptions { max_in_flight: 2 },
+                            &SessionOptions { max_in_flight: 2, ..Default::default() },
                         );
                         (st, out)
                     });
@@ -1040,7 +1415,7 @@ this is not json\n\
                             hub,
                             input_b.as_bytes(),
                             &mut out,
-                            &SessionOptions { max_in_flight: 2 },
+                            &SessionOptions { max_in_flight: 2, ..Default::default() },
                         );
                         (st, out)
                     });

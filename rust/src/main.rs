@@ -32,11 +32,15 @@
 //!     --workers N --force --cache-dir DIR
 //!     --max-conns N --max-in-flight N --queue-cap N   (HTTP mode only)
 //!     --lease-secs N --poll-secs N    remote-worker lease TTL / poll
+//!     --client-quota N                per-client in-flight cap
+//!     --affinity-window N             artifact-affinity scan bound
+//!     --keepalive-idle-secs N         idle keep-alive connection cap
 //!   worker                            remote worker agent for a
 //!                                     gateway: lease → artifact sync →
 //!                                     run → report, until drained
 //!     --connect HOST:PORT --workers N --id NAME
 //!     --cache-dir DIR --artifact-store DIR --force --max-failures N
+//!     --max-jobs N --idle-exit SECS   lifecycle bounds for autoscaling
 //!   cache-gc                          prune the result cache by age
 //!                                     and/or total size (true LRU)
 //!     --max-age-secs N --max-bytes N [--dry-run] [--cache-dir DIR]
@@ -123,7 +127,7 @@ USAGE: omgd <subcommand> [flags]
     --kind finetune --tasks CoLA --methods full,lisa,lisa-wor
     --seeds 0,1,2 --keep-ratios 0.5 --epochs 4 --workers 4
     [--force] [--cache-dir DIR] [--out results/grid.csv]
-    [--remote HOST:PORT]
+    [--remote HOST:PORT] [--client TOKEN]
   serve        long-lived job service sharing one worker pool + cache
                stdin mode: JSONL requests in, JSONL results out
                ({\"cmd\":\"shutdown\"} or EOF ends)
@@ -136,13 +140,15 @@ USAGE: omgd <subcommand> [flags]
     [--cache-max-age-secs N] [--cache-max-bytes N]
     HTTP mode only: [--listen 127.0.0.1:8080] [--max-conns 64]
     [--max-in-flight 32] [--queue-cap N] [--lease-secs 60]
-    [--poll-secs 20]
+    [--poll-secs 20] [--client-quota N] [--affinity-window 16]
+    [--keepalive-idle-secs 60]
   worker       remote worker agent: long-poll a gateway for leased
                jobs, sync missing artifacts by fingerprint, run on a
                local pool, report results; exits when the gateway
                drains (see docs/operations.md)
     --connect HOST:PORT [--workers N] [--id NAME] [--cache-dir DIR]
     [--artifact-store DIR] [--force] [--max-failures 5]
+    [--max-jobs N] [--idle-exit SECS]
   cache-gc     prune the result cache (age cap, then size cap evicting
                least-recently-used-first; cache hits refresh recency);
                see docs/operations.md
@@ -632,15 +638,20 @@ fn cmd_grid(args: &Args) -> Result<()> {
                  cache makes it a replay) to export curves"
             );
         }
+        let client = args.token_opt("client")?;
         println!(
             "grid: {} cells ({} methods × {} seeds × {} keep-ratios) \
-             → gateway {addr}",
+             → gateway {addr}{}",
             specs.len(),
             methods.len(),
             seeds.len(),
             keeps.len(),
+            client
+                .as_deref()
+                .map(|c| format!(" as client {c:?}"))
+                .unwrap_or_default(),
         );
-        run_grid_remote(addr, specs)?
+        run_grid_remote(addr, specs, client.as_deref())?
     } else {
         let opts = grid_options_from_args(args)?;
         println!(
@@ -683,18 +694,31 @@ fn cmd_serve(args: &Args) -> Result<()> {
             queue_capacity: args.usize_or("queue-cap", 0)?,
             lease_secs: args.u64_or("lease-secs", defaults.lease_secs)?,
             poll_secs: args.u64_or("poll-secs", defaults.poll_secs)?,
+            client_quota: args.usize_or("client-quota", 0)?,
+            affinity_window: args.usize_or(
+                "affinity-window",
+                defaults.affinity_window,
+            )?,
+            keepalive_idle: std::time::Duration::from_secs(
+                args.u64_or(
+                    "keepalive-idle-secs",
+                    defaults.keepalive_idle.as_secs(),
+                )?,
+            ),
             ..defaults
         };
         let stats = omgd::jobs::net::serve_listen(addr, &opts, &lopts)?;
         eprintln!(
             "gateway drained: {} connection(s), {} request(s), \
-             {} throttled (429), {} refused (503); jobs: {} accepted, \
-             {} rejected, {} ok, {} failed, {} from cache; remote: \
-             {} leased, {} requeued, {} conflicts",
+             {} throttled (429), {} quota-throttled (429), \
+             {} refused (503); jobs: {} accepted, {} rejected, {} ok, \
+             {} failed, {} from cache; remote: {} leased \
+             ({} by affinity), {} requeued, {} conflicts",
             stats.connections, stats.requests, stats.throttled,
-            stats.refused, stats.jobs.accepted, stats.jobs.rejected,
-            stats.jobs.done, stats.jobs.failed, stats.jobs.cached,
-            stats.remote.leased, stats.remote.requeued,
+            stats.quota_throttled, stats.refused, stats.jobs.accepted,
+            stats.jobs.rejected, stats.jobs.done, stats.jobs.failed,
+            stats.jobs.cached, stats.remote.leased,
+            stats.remote.affinity, stats.remote.requeued,
             stats.remote.conflicts
         );
         return Ok(());
@@ -729,6 +753,8 @@ fn cmd_worker(args: &Args) -> Result<()> {
         force: args.bool("force"),
         max_failures: args
             .usize_or("max-failures", defaults.max_failures)?,
+        max_jobs: args.usize_or("max-jobs", 0)?,
+        idle_exit_secs: args.u64_or("idle-exit", 0)?,
     };
     let stats = run_worker(&opts)?;
     eprintln!(

@@ -56,21 +56,37 @@ fn start_gateway(
 }
 
 /// One HTTP/1.1 request; returns (status, headers, body). The body is
-/// read to EOF (every gateway response is `Connection: close`).
+/// read to EOF (every `Connection: close` gateway response).
 fn http(
     addr: SocketAddr,
     method: &str,
     path: &str,
     body: &str,
 ) -> (u16, BTreeMap<String, String>, String) {
+    http_hdr(addr, method, path, &[], body)
+}
+
+/// [`http`] with extra request headers (e.g. `X-OMGD-Client`).
+fn http_hdr(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    extra: &[(&str, &str)],
+    body: &str,
+) -> (u16, BTreeMap<String, String>, String) {
     let mut stream = TcpStream::connect(addr).unwrap();
     stream
         .set_read_timeout(Some(Duration::from_secs(30)))
         .unwrap();
+    let extra_hdrs: String = extra
+        .iter()
+        .map(|(k, v)| format!("{k}: {v}\r\n"))
+        .collect();
     write!(
         stream,
         "{method} {path} HTTP/1.1\r\nHost: omgd-test\r\n\
-         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+         Content-Length: {}\r\n{extra_hdrs}Connection: close\r\n\r\n\
+         {body}",
         body.len()
     )
     .unwrap();
@@ -100,6 +116,69 @@ fn http(
     let mut body = String::new();
     r.read_to_string(&mut body).unwrap();
     (status, headers, body)
+}
+
+/// One request/response round on an already-open keep-alive
+/// connection. The response must be `Content-Length`-framed (every
+/// non-stream gateway response is); asserts the gateway answered
+/// `Connection: keep-alive` so the socket stays usable.
+fn keep_alive_round(
+    r: &mut BufReader<TcpStream>,
+    method: &str,
+    path: &str,
+    extra: &[(&str, &str)],
+    body: &str,
+) -> (u16, BTreeMap<String, String>, String) {
+    let extra_hdrs: String = extra
+        .iter()
+        .map(|(k, v)| format!("{k}: {v}\r\n"))
+        .collect();
+    {
+        let mut w = r.get_ref();
+        write!(
+            w,
+            "{method} {path} HTTP/1.1\r\nHost: omgd-test\r\n\
+             Content-Length: {}\r\n{extra_hdrs}\
+             Connection: keep-alive\r\n\r\n{body}",
+            body.len()
+        )
+        .unwrap();
+        w.flush().unwrap();
+    }
+    let mut status_line = String::new();
+    r.read_line(&mut status_line).unwrap();
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .expect("status code")
+        .parse()
+        .unwrap();
+    let mut headers = BTreeMap::new();
+    loop {
+        let mut h = String::new();
+        r.read_line(&mut h).unwrap();
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            headers
+                .insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
+        }
+    }
+    assert_eq!(
+        headers.get("connection").map(String::as_str),
+        Some("keep-alive"),
+        "{method} {path} must keep the connection alive"
+    );
+    let len: usize = headers
+        .get("content-length")
+        .expect("keep-alive responses are length-framed")
+        .parse()
+        .unwrap();
+    let mut buf = vec![0u8; len];
+    r.read_exact(&mut buf).unwrap();
+    (status, headers, String::from_utf8(buf).unwrap())
 }
 
 /// Parse a streamed NDJSON `/jobs` response into (acks, results).
@@ -248,6 +327,265 @@ fn saturated_queue_returns_429_with_retry_after() {
     let stats = gateway.join().unwrap();
     assert_eq!(stats.throttled, 1);
     assert_eq!(stats.jobs.done, 2);
+}
+
+/// Satellite regression: a prefix-matching but malformed `/work/` path
+/// must answer a 400 error shape (it used to risk panicking the
+/// connection thread via an unchecked parse), and wrong methods on
+/// worker paths stay 405.
+#[test]
+fn malformed_work_paths_answer_400_not_panic() {
+    let (addr, gateway) = start_gateway(1, ListenOptions::default());
+
+    for path in [
+        "/work/x/result",
+        "/work/7/steal",
+        "/work//renew",
+        "/work/99999999999999999999999999/result", // u64 overflow
+    ] {
+        let (status, _, body) = http(addr, "POST", path, "{}");
+        assert_eq!(status, 400, "{path} must 400: {body}");
+        let j = Json::parse(&body).unwrap();
+        assert!(
+            j.at("error").as_str().unwrap().contains("malformed"),
+            "{path}: {body}"
+        );
+    }
+    let (status, _, _) = http(addr, "GET", "/work/7/renew", "");
+    assert_eq!(status, 405, "wrong method on a well-formed work path");
+    // The gateway survived all of it.
+    let (status, _, _) = http(addr, "GET", "/healthz", "");
+    assert_eq!(status, 200);
+
+    let (status, _, _) = http(addr, "POST", "/shutdown", "");
+    assert_eq!(status, 200);
+    gateway.join().unwrap();
+}
+
+/// Tentpole: one keep-alive connection carries several
+/// request/response rounds — including a 429 — and the `POST /jobs`
+/// stream arrives chunked so the socket survives it too.
+#[test]
+fn keep_alive_connection_carries_multiple_rounds_including_429() {
+    // 1 worker, queue of 1: park the worker, fill the queue, then
+    // exercise a keep-alive connection against the saturated gateway.
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let (started_tx, started_rx) = mpsc::channel::<()>();
+    let (release_tx, release_rx) = mpsc::channel::<()>();
+    let started_tx = Arc::new(Mutex::new(started_tx));
+    let release_rx = Arc::new(Mutex::new(release_rx));
+    let lopts = ListenOptions {
+        queue_capacity: 1,
+        ..ListenOptions::default()
+    };
+    let gateway = std::thread::spawn(move || {
+        run_gateway(listener, 1, &lopts, None, |_wid| {
+            let started = Arc::clone(&started_tx);
+            let release = Arc::clone(&release_rx);
+            move |spec: &JobSpec| {
+                started.lock().unwrap().send(()).ok();
+                release.lock().unwrap().recv().ok();
+                Ok((stub_outcome(spec), false))
+            }
+        })
+        .unwrap()
+    });
+
+    let blocked_client = std::thread::spawn(move || {
+        let body: String = (0..2).map(request_line).collect();
+        http(addr, "POST", "/jobs", &body)
+    });
+    started_rx
+        .recv_timeout(Duration::from_secs(10))
+        .expect("worker picked up job 1");
+    let mut saturated = false;
+    for _ in 0..400 {
+        let (_, _, body) = http(addr, "GET", "/healthz", "");
+        if Json::parse(&body).unwrap().at("queue_len").as_usize()
+            == Some(1)
+        {
+            saturated = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(saturated, "queue never filled");
+
+    // One socket, four rounds: healthz → 429 on /jobs → stats → 404.
+    let stream = TcpStream::connect(addr).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    let mut conn = BufReader::new(stream);
+    let (status, _, body) =
+        keep_alive_round(&mut conn, "GET", "/healthz", &[], "");
+    assert_eq!(status, 200);
+    assert!(body.contains("\"ok\":true"));
+    let (status, headers, body) = keep_alive_round(
+        &mut conn,
+        "POST",
+        "/jobs",
+        &[],
+        &request_line(7),
+    );
+    assert_eq!(status, 429, "saturated queue still throttles: {body}");
+    assert_eq!(headers.get("retry-after").map(String::as_str), Some("1"));
+    let (status, _, body) =
+        keep_alive_round(&mut conn, "GET", "/stats", &[], "");
+    assert_eq!(status, 200);
+    assert!(body.contains("\"throttled_429\":1"), "{body}");
+    let (status, _, _) =
+        keep_alive_round(&mut conn, "GET", "/nope", &[], "");
+    assert_eq!(status, 404, "even errors ride the same connection");
+
+    // A keep-alive POST /jobs streams chunked and leaves the socket
+    // usable: submit one job (queue has room once the worker moves).
+    release_tx.send(()).unwrap(); // finish job 1; worker takes job 2
+    release_tx.send(()).unwrap(); // finish job 2
+    let (status, _, text) = blocked_client.join().unwrap();
+    assert_eq!(status, 200);
+    let (acks, results) = split_stream(&text);
+    assert_eq!((acks.len(), results.len()), (2, 2));
+    {
+        let mut w = conn.get_ref();
+        let body = request_line(9);
+        write!(
+            w,
+            "POST /jobs HTTP/1.1\r\nHost: omgd-test\r\n\
+             Content-Length: {}\r\nConnection: keep-alive\r\n\r\n{body}",
+            body.len()
+        )
+        .unwrap();
+        w.flush().unwrap();
+    }
+    release_tx.send(()).unwrap(); // let job 3 run
+    let mut status_line = String::new();
+    conn.read_line(&mut status_line).unwrap();
+    assert!(status_line.starts_with("HTTP/1.1 200"), "{status_line}");
+    let mut chunked = false;
+    loop {
+        let mut h = String::new();
+        conn.read_line(&mut h).unwrap();
+        let h = h.trim_end().to_ascii_lowercase();
+        if h.is_empty() {
+            break;
+        }
+        if h == "transfer-encoding: chunked" {
+            chunked = true;
+        }
+    }
+    assert!(chunked, "keep-alive /jobs stream must be chunked");
+    let mut cr = omgd::jobs::net::ChunkedReader::new(&mut conn);
+    let mut session = String::new();
+    cr.read_to_string(&mut session).unwrap();
+    let (acks, results) = split_stream(&session);
+    assert_eq!((acks.len(), results.len()), (1, 1));
+    // …and a fifth round on the very same socket still works.
+    let (status, _, _) =
+        keep_alive_round(&mut conn, "GET", "/healthz", &[], "");
+    assert_eq!(status, 200);
+    drop(conn);
+
+    let (status, _, _) = http(addr, "POST", "/shutdown", "");
+    assert_eq!(status, 200);
+    let stats = gateway.join().unwrap();
+    assert_eq!(stats.jobs.done, 3);
+    assert_eq!(stats.throttled, 1);
+}
+
+/// Tentpole: `--client-quota` fairness — a token at its in-flight cap
+/// gets the 429 + Retry-After shape while other tokens sail through.
+#[test]
+fn client_quota_throttles_greedy_token_but_not_siblings() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let (release_tx, release_rx) = mpsc::channel::<()>();
+    let release_rx = Arc::new(Mutex::new(release_rx));
+    let lopts = ListenOptions {
+        client_quota: 2,
+        queue_capacity: 8,
+        ..ListenOptions::default()
+    };
+    let gateway = std::thread::spawn(move || {
+        run_gateway(listener, 1, &lopts, None, |_wid| {
+            let release = Arc::clone(&release_rx);
+            move |spec: &JobSpec| {
+                release.lock().unwrap().recv().ok();
+                Ok((stub_outcome(spec), false))
+            }
+        })
+        .unwrap()
+    });
+
+    // Greedy client: one session, 2 jobs — exactly at quota while the
+    // parked worker sits on job 1.
+    let greedy = std::thread::spawn(move || {
+        let body: String = (0..2).map(request_line).collect();
+        http_hdr(
+            addr,
+            "POST",
+            "/jobs",
+            &[("X-OMGD-Client", "alpha")],
+            &body,
+        )
+    });
+    // Deterministic signal: the hub's client ledger shows alpha at 2.
+    let mut at_quota = false;
+    for _ in 0..400 {
+        let (_, _, body) = http(addr, "GET", "/stats", "");
+        let j = Json::parse(&body).unwrap();
+        if j.at("clients").get("alpha").and_then(Json::as_usize)
+            == Some(2)
+        {
+            at_quota = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(at_quota, "alpha never reached its quota");
+
+    // A second alpha session bounces with the 429 + Retry-After shape…
+    let (status, headers, body) = http_hdr(
+        addr,
+        "POST",
+        "/jobs",
+        &[("X-OMGD-Client", "alpha")],
+        &request_line(7),
+    );
+    assert_eq!(status, 429, "over-quota token must bounce: {body}");
+    assert_eq!(headers.get("retry-after").map(String::as_str), Some("1"));
+    assert!(body.contains("quota"), "{body}");
+
+    // …while a different token is admitted into the same queue.
+    let beta = std::thread::spawn(move || {
+        http_hdr(
+            addr,
+            "POST",
+            "/jobs",
+            &[("X-OMGD-Client", "beta")],
+            &request_line(20),
+        )
+    });
+    // Unpark: 2 alpha jobs + 1 beta job drain.
+    for _ in 0..3 {
+        release_tx.send(()).unwrap();
+    }
+    let (status, _, text) = greedy.join().unwrap();
+    assert_eq!(status, 200);
+    let (acks, results) = split_stream(&text);
+    assert_eq!((acks.len(), results.len()), (2, 2));
+    let (status, _, text) = beta.join().unwrap();
+    assert_eq!(status, 200, "beta was never quota-throttled");
+    let (acks, results) = split_stream(&text);
+    assert_eq!((acks.len(), results.len()), (1, 1));
+
+    let (status, _, _) = http(addr, "POST", "/shutdown", "");
+    assert_eq!(status, 200);
+    let stats = gateway.join().unwrap();
+    assert_eq!(stats.quota_throttled, 1);
+    assert_eq!(stats.jobs.done, 3);
+    assert_eq!(stats.throttled, 0, "queue itself never saturated");
 }
 
 #[test]

@@ -11,8 +11,8 @@
 
 use omgd::jobs::{
     run_gateway, run_grid_remote, run_pool, run_worker_with,
-    ExperimentKind, GatewayStats, GridReport, JobOutcome, JobQueue,
-    JobSpec, ListenOptions, WorkerOptions,
+    ArtifactStore, ExperimentKind, GatewayStats, GridReport, JobOutcome,
+    JobQueue, JobSpec, ListenOptions, WorkerOptions,
 };
 use omgd::config::RunConfig;
 use omgd::util::json::Json;
@@ -21,7 +21,7 @@ use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::sync::Mutex;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 fn tmp_dir(tag: &str) -> PathBuf {
     let d = std::env::temp_dir()
@@ -113,6 +113,7 @@ fn worker_opts(addr: SocketAddr, id: &str, tag: &str) -> WorkerOptions {
         ),
         force: false,
         max_failures: 50,
+        ..WorkerOptions::default()
     }
 }
 
@@ -190,7 +191,8 @@ fn remote_grid_on_two_workers_matches_local_pool_byte_for_byte() {
             })
             .unwrap()
         });
-        let report = run_grid_remote(&addr.to_string(), specs).unwrap();
+        let report =
+            run_grid_remote(&addr.to_string(), specs, None).unwrap();
         // Grid done: drain the gateway so both agents exit.
         shutdown(addr);
         (report, a.join().unwrap(), b.join().unwrap())
@@ -229,7 +231,9 @@ fn killed_worker_mid_lease_is_requeued_and_its_late_result_rejected() {
     let (report, zombie_seq, stolen) = std::thread::scope(|s| {
         let grid = s.spawn({
             let specs = specs.clone();
-            move || run_grid_remote(&addr.to_string(), specs).unwrap()
+            move || {
+                run_grid_remote(&addr.to_string(), specs, None).unwrap()
+            }
         });
         // Wait until the session has queued work.
         let mut queued = false;
@@ -383,7 +387,8 @@ fn empty_store_worker_syncs_artifacts_by_fingerprint_before_running() {
             .unwrap()
         });
         let report =
-            run_grid_remote(&addr.to_string(), specs.clone()).unwrap();
+            run_grid_remote(&addr.to_string(), specs.clone(), None)
+                .unwrap();
         shutdown(addr);
         (report, worker.join().unwrap())
     });
@@ -430,7 +435,7 @@ fn artifact_endpoint_rejects_unknown_and_stale_fingerprints() {
         let specs = vec![s];
         std::thread::spawn(move || {
             // The job will be completed manually below.
-            run_grid_remote(&addr.to_string(), specs)
+            run_grid_remote(&addr.to_string(), specs, None)
         })
     };
     let mut lease = None;
@@ -471,6 +476,156 @@ fn artifact_endpoint_rejects_unknown_and_stale_fingerprints() {
     shutdown(addr);
     gateway.join().unwrap();
     std::fs::remove_dir_all(&art_dir).ok();
+}
+
+/// Tentpole acceptance: with two workers whose artifact stores cover
+/// disjoint halves of a mixed grid, affinity leasing routes every cell
+/// to the worker that already holds its artifact set — zero redundant
+/// syncs, `remote.affinity` visible in `/stats`, and the aggregate
+/// still byte-identical to a local pool. Placement is deterministic:
+/// the whole grid is queued before either worker polls, and each
+/// worker's `--max-jobs` budget equals exactly its half (which also
+/// exercises the lifecycle knob end to end).
+#[test]
+fn affinity_routes_cells_to_artifact_holders_with_zero_resync() {
+    let lopts = ListenOptions {
+        poll_secs: 2,
+        ..ListenOptions::default()
+    };
+    let (addr, gateway) = start_gateway(lopts);
+
+    // Two disjoint artifact sets ("models") on the gateway host.
+    let art = tmp_dir("aff-artifacts");
+    std::fs::write(art.join("ma.json"), b"{\"m\":\"a\"}").unwrap();
+    std::fs::write(art.join("mb.json"), b"{\"m\":\"b\"}").unwrap();
+    let mk = |model: &str, seed: u64| {
+        let mut s = spec(seed);
+        s.cfg.model = model.to_string();
+        s.cfg.artifacts_dir = art.to_string_lossy().into_owned();
+        s
+    };
+    // ma cells lead the queue: a cache-blind scheduler's oldest-first
+    // pop would hand worker B an ma cell (and force a sync).
+    let specs =
+        vec![mk("ma", 0), mk("ma", 1), mk("mb", 2), mk("mb", 3)];
+    let fp_a = omgd::jobs::artifact_fingerprint(&specs[0].cfg);
+    let fp_b = omgd::jobs::artifact_fingerprint(&specs[2].cfg);
+    assert_ne!(fp_a, "absent");
+    assert_ne!(fp_a, fp_b);
+    let baseline = csv_bytes(&local_report(specs.clone(), 1), "aff-base");
+
+    // Pre-seed each worker's store with ITS half, as if synced on an
+    // earlier grid; each agent runs one thread with a 2-job budget.
+    let mut opts_a = worker_opts(addr, "w-aff-a", "aff");
+    opts_a.workers = 1;
+    opts_a.max_jobs = 2;
+    let mut opts_b = worker_opts(addr, "w-aff-b", "aff");
+    opts_b.workers = 1;
+    opts_b.max_jobs = 2;
+    let store_a = ArtifactStore::open(opts_a.store_dir.as_deref()).unwrap();
+    store_a
+        .ensure(&fp_a, || omgd::jobs::sync::pack(&art, "ma"))
+        .unwrap();
+    let store_b = ArtifactStore::open(opts_b.store_dir.as_deref()).unwrap();
+    store_b
+        .ensure(&fp_b, || omgd::jobs::sync::pack(&art, "mb"))
+        .unwrap();
+
+    let (report, wa, wb, affinity) = std::thread::scope(|s| {
+        let grid = s.spawn({
+            let specs = specs.clone();
+            move || {
+                run_grid_remote(&addr.to_string(), specs, None).unwrap()
+            }
+        });
+        // Every cell queued before the first poll → every scan sees
+        // the full grid.
+        let mut queued = false;
+        for _ in 0..400 {
+            let (status, body) = http(addr, "GET", "/healthz", "");
+            assert_eq!(status, 200);
+            let j = Json::parse(&body).unwrap();
+            if j.at("queue_len").as_usize().unwrap_or(0) == 4 {
+                queued = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(queued, "grid session never queued all 4 cells");
+        let run = |opts: WorkerOptions| {
+            move || {
+                run_worker_with(&opts, |_wid| {
+                    |s: &JobSpec| -> anyhow::Result<JobOutcome> {
+                        Ok(stub_outcome(s))
+                    }
+                })
+                .unwrap()
+            }
+        };
+        let a = s.spawn(run(opts_a));
+        let b = s.spawn(run(opts_b));
+        let report = grid.join().unwrap();
+        // Snapshot /stats before shutdown resets nothing — affinity
+        // is hub-lifetime, but the gateway exits after drain.
+        let (status, body) = http(addr, "GET", "/stats", "");
+        assert_eq!(status, 200);
+        let affinity = Json::parse(&body)
+            .unwrap()
+            .at("remote")
+            .at("affinity")
+            .as_usize();
+        shutdown(addr);
+        (report, a.join().unwrap(), b.join().unwrap(), affinity)
+    });
+
+    assert_eq!(report.n_jobs(), 4);
+    assert_eq!(report.n_failed(), 0);
+    assert_eq!(
+        (wa.leased, wb.leased),
+        (2, 2),
+        "the --max-jobs budget split the grid evenly"
+    );
+    assert_eq!(
+        (wa.synced, wb.synced),
+        (0, 0),
+        "affinity placement makes every sync redundant"
+    );
+    assert_eq!(affinity, Some(4), "every lease was an affinity match");
+    let remote_csv = csv_bytes(&report, "aff-remote");
+    assert_eq!(remote_csv, baseline);
+    let stats = gateway.join().unwrap();
+    assert_eq!(stats.jobs.done, 4);
+    assert_eq!(stats.remote.leased, 4);
+    assert_eq!(stats.remote.affinity, 4);
+    std::fs::remove_dir_all(&art).ok();
+}
+
+/// Lifecycle: an agent pointed at an idle gateway exits on its own via
+/// `--idle-exit`, without waiting for a drain signal.
+#[test]
+fn idle_worker_exits_via_idle_exit_without_drain() {
+    let lopts = ListenOptions {
+        poll_secs: 1,
+        ..ListenOptions::default()
+    };
+    let (addr, gateway) = start_gateway(lopts);
+    let mut opts = worker_opts(addr, "w-idle", "idle");
+    opts.workers = 1;
+    opts.idle_exit_secs = 1;
+    let t0 = Instant::now();
+    let stats = run_worker_with(&opts, |_wid| {
+        |_s: &JobSpec| -> anyhow::Result<JobOutcome> {
+            unreachable!("no jobs were ever submitted")
+        }
+    })
+    .unwrap();
+    assert_eq!(stats.leased, 0);
+    assert!(
+        t0.elapsed() < Duration::from_secs(30),
+        "idle-exit must beat the drain-or-die default"
+    );
+    shutdown(addr);
+    gateway.join().unwrap();
 }
 
 /// Sanity net for the aggregation math used above: metrics grouped per
