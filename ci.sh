@@ -38,6 +38,23 @@ echo "== cargo test (OMGD_BENCH_SCALE=$OMGD_BENCH_SCALE)"
 cargo test -q
 
 # ---------------------------------------------------------------------
+# Mask-runs micro-bench: native masked-AdamW steps at keep-ratio 0.25,
+# segment-run path vs the dense reference (10⁴ steps at scale 1;
+# OMGD_BENCH_SCALE shrinks it like every other bench). The binary
+# verifies the two paths agree bitwise before timing, prints the
+# ratio, and writes BENCH_maskruns.json at the repo root so the runs
+# path's perf trajectory is tracked across PRs.
+# ---------------------------------------------------------------------
+if [[ "${OMGD_CI_SKIP_BENCH:-0}" == "1" ]]; then
+  echo "== mask-runs microbench: skipped (OMGD_CI_SKIP_BENCH=1)"
+else
+  echo "== mask-runs microbench (runs vs dense, keep-ratio 0.25)"
+  cargo build -q --release --bin omgd
+  target/release/omgd microbench --keep 0.25 \
+      --out ../BENCH_maskruns.json
+fi
+
+# ---------------------------------------------------------------------
 # Distributed smoke: boot a quota'd coordinator-only gateway, attach
 # one worker agent, run two tiny grids through `--remote` under two
 # client tokens (keep-alive connections, per-client fair queuing), and

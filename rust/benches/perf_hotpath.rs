@@ -27,7 +27,7 @@ fn main() -> anyhow::Result<()> {
     cfg.mask.gamma = 2;
     let mut rng = Rng::seed_from_u64(0);
     let mut engine = MethodEngine::new(&bundle.man, &cfg, &mut rng)?;
-    engine.on_period(&mut rng);
+    engine.on_period(&mut rng)?;
 
     let mut flat = bundle.init_params()?;
     let idx: Vec<usize> = (0..bundle.man.data.batch).collect();
@@ -47,21 +47,22 @@ fn main() -> anyhow::Result<()> {
     let mut m = vec![0.0f32; n];
     let mut v = vec![0.0f32; n];
     let hp = [1e-3f32, 0.9, 0.999, 1e-8, 0.01, 0.1, 0.001, 0.0];
-    let mask = engine.mask().values.clone();
+    let mask = engine.mask().values().to_vec();
     let r2 = measure("masked_adamw_hlo", 2, 20, || {
         bundle
             .adamw_update(&mut flat, &grad, &mask, &mut m, &mut v, &hp)
             .unwrap();
     });
 
-    // 3. native mirror of the same update (no PJRT dispatch).
-    let r3 = measure("masked_adamw_native", 2, 20, || {
+    // 3. native mirror of the same update (walks the mask's segment
+    //    runs: O(active) work, no PJRT dispatch).
+    let r3 = measure("masked_adamw_native_runs", 2, 20, || {
         engine.apply_native(&mut flat, &grad, 1e-3);
     });
 
-    // 4. coordinator overhead: period refresh (mask build).
+    // 4. coordinator overhead: period refresh (mask + runs rebuild).
     let r4 = measure("mask_refresh", 5, 50, || {
-        engine.on_period(&mut rng);
+        engine.on_period(&mut rng).unwrap();
     });
 
     let bytes = 9.0 * n as f64 * 4.0; // p,g,mask,m,v in + p,m,v out

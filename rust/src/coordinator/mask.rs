@@ -1,8 +1,22 @@
-//! Masks and mask sets.
+//! Masks, their segment-run representation, and mask sets.
 //!
-//! A [`Mask`] is a dense `f32` vector over the flat parameter space whose
-//! non-zero entries both *select* coordinates and carry the OMGD rescale
-//! factor. A [`MaskSet`] is the per-cycle collection `{S⁽ʲ⁾}` required to
+//! A [`Mask`] selects coordinates of the flat parameter space and
+//! carries the OMGD rescale factor on the selected ones. It is stored
+//! twice, always in sync:
+//!
+//! * a dense `f32` vector (the *bridge* the fused HLO kernels consume —
+//!   [`Mask::values`]), and
+//! * a canonical [`MaskRuns`] view: sorted, disjoint `(offset, len,
+//!   scale)` segments over the active region only ([`Mask::runs`]).
+//!
+//! Everything native iterates the runs — optimizer steps, coverage
+//! verification, residency accounting — so masked work is O(active)
+//! instead of O(d). The runs (and the cached active count) are
+//! maintained *natively* by [`Mask::set_segment`] via a run splice; the
+//! dense↔runs bridge ([`MaskRuns::from_dense`] / [`MaskRuns::to_dense`])
+//! covers scattered-coordinate constructions and the HLO path.
+//!
+//! A [`MaskSet`] is the per-cycle collection `{S⁽ʲ⁾}` required to
 //! satisfy eq. (3): `Σⱼ S⁽ʲ⁾ = M·1_d` over the *maskable* region (the
 //! paper's LISA instantiation keeps embed/head always active with scale 1
 //! and splits only middle layers — the §5.2 worked example shows exactly
@@ -10,20 +24,297 @@
 
 use crate::manifest::Manifest;
 use crate::rng::Rng;
+use anyhow::{bail, ensure, Result};
 
-/// Dense coordinate mask with scale values.
+/// One active segment of a mask: coordinates `offset .. offset+len`,
+/// all carrying the same non-zero `scale`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Run {
+    pub offset: usize,
+    pub len: usize,
+    pub scale: f32,
+}
+
+impl Run {
+    /// One past the last coordinate of the run.
+    pub fn end(&self) -> usize {
+        self.offset + self.len
+    }
+}
+
+/// Canonical run-length view of a mask over a flat space of `n`
+/// coordinates.
+///
+/// Invariants (enforced by every constructor and mutator):
+/// * runs are sorted by `offset` and pairwise disjoint;
+/// * every run has `len > 0` and `scale != 0.0`;
+/// * adjacent runs with equal scale are coalesced (no `[0,4)@2, [4,8)@2`
+///   split — that is one run);
+/// * `active` caches the total run length.
+///
+/// The canonical form makes support comparison ([`same_support`]) and
+/// residency accounting O(runs), and lets consumers iterate exactly the
+/// active coordinates.
+///
+/// [`same_support`]: MaskRuns::same_support
 #[derive(Clone, Debug, PartialEq)]
+pub struct MaskRuns {
+    n: usize,
+    runs: Vec<Run>,
+    active: usize,
+}
+
+impl MaskRuns {
+    /// All-frozen view over `n` coordinates.
+    pub fn empty(n: usize) -> Self {
+        Self { n, runs: Vec::new(), active: 0 }
+    }
+
+    /// Derive runs from a dense value vector (one O(d) scan). Values
+    /// are grouped by bit pattern so a NaN entry (e.g. out of a
+    /// degenerate config) forms its own run instead of stalling the
+    /// scan — `NaN != NaN` would otherwise never advance it.
+    pub fn from_dense(values: &[f32]) -> Self {
+        let mut runs = Vec::new();
+        let mut i = 0usize;
+        while i < values.len() {
+            let s = values[i];
+            if s == 0.0 {
+                // ±0.0 are both "frozen" (every consumer tests == 0.0).
+                i += 1;
+                continue;
+            }
+            let start = i;
+            while i < values.len()
+                && values[i].to_bits() == s.to_bits()
+            {
+                i += 1;
+            }
+            runs.push(Run { offset: start, len: i - start, scale: s });
+        }
+        let active = runs.iter().map(|r| r.len).sum();
+        Self { n: values.len(), runs, active }
+    }
+
+    /// Materialize the dense vector (the HLO bridge direction).
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut v = vec![0.0f32; self.n];
+        for r in &self.runs {
+            v[r.offset..r.end()].fill(r.scale);
+        }
+        v
+    }
+
+    /// Full (padded) coordinate-space length.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// The canonical run list.
+    pub fn runs(&self) -> &[Run] {
+        &self.runs
+    }
+
+    /// Number of active coordinates (cached; O(1)).
+    pub fn active_count(&self) -> usize {
+        self.active
+    }
+
+    /// Active / total keep ratio.
+    pub fn keep_ratio(&self) -> f64 {
+        self.active as f64 / self.n.max(1) as f64
+    }
+
+    /// Scale at a single coordinate (binary search; 0.0 when frozen).
+    pub fn scale_at(&self, i: usize) -> f32 {
+        match self.runs.binary_search_by(|r| {
+            if r.end() <= i {
+                std::cmp::Ordering::Less
+            } else if r.offset > i {
+                std::cmp::Ordering::Greater
+            } else {
+                std::cmp::Ordering::Equal
+            }
+        }) {
+            Ok(k) => self.runs[k].scale,
+            Err(_) => 0.0,
+        }
+    }
+
+    /// True when both views activate exactly the same coordinates
+    /// (scales ignored) — the optimizer index map only depends on the
+    /// support, not on the rescale factors.
+    pub fn same_support(&self, other: &MaskRuns) -> bool {
+        // Canonical form almost gives run-list equality, but two
+        // adjacent runs with *different* scales coalesce into one when
+        // scales are ignored — walk coordinate intervals instead.
+        let mut a = support_iter(&self.runs);
+        let mut b = support_iter(&other.runs);
+        loop {
+            match (a.next(), b.next()) {
+                (None, None) => return true,
+                (Some(x), Some(y)) if x == y => {}
+                _ => return false,
+            }
+        }
+    }
+
+    /// Coordinates active in *both* views, keeping `self`'s scales —
+    /// e.g. a caller mask restricted to SIFT's top-k selection.
+    pub fn intersect_keep_scale(&self, sel: &MaskRuns) -> MaskRuns {
+        let mut out = Vec::new();
+        let (mut i, mut j) = (0usize, 0usize);
+        while i < self.runs.len() && j < sel.runs.len() {
+            let (a, b) = (&self.runs[i], &sel.runs[j]);
+            let lo = a.offset.max(b.offset);
+            let hi = a.end().min(b.end());
+            if lo < hi {
+                push_coalesced(&mut out, Run {
+                    offset: lo,
+                    len: hi - lo,
+                    scale: a.scale,
+                });
+            }
+            if a.end() <= b.end() {
+                i += 1;
+            } else {
+                j += 1;
+            }
+        }
+        let active = out.iter().map(|r| r.len).sum();
+        MaskRuns { n: self.n, runs: out, active }
+    }
+
+    /// Replace the region `[offset, offset+len)` with `scale` (0 =
+    /// freeze). Bounds are the caller's responsibility ([`Mask`] checks
+    /// them); O(runs) via a vector splice, no dense scan.
+    fn splice(&mut self, offset: usize, len: usize, scale: f32) {
+        if len == 0 {
+            return;
+        }
+        let end = offset + len;
+        // First run ending after `offset`, first run starting at/after
+        // `end`: the affected range.
+        let lo = self.runs.partition_point(|r| r.end() <= offset);
+        let hi = self.runs.partition_point(|r| r.offset < end);
+        let mut repl = Vec::with_capacity(3);
+        if lo < hi && self.runs[lo].offset < offset {
+            let r = self.runs[lo];
+            repl.push(Run {
+                offset: r.offset,
+                len: offset - r.offset,
+                scale: r.scale,
+            });
+        }
+        if scale != 0.0 {
+            push_coalesced(&mut repl, Run { offset, len, scale });
+        }
+        if lo < hi && self.runs[hi - 1].end() > end {
+            let r = self.runs[hi - 1];
+            push_coalesced(&mut repl, Run {
+                offset: end,
+                len: r.end() - end,
+                scale: r.scale,
+            });
+        }
+        let repl_len = repl.len();
+        self.runs.splice(lo..hi, repl);
+        // The replacement pieces are internally coalesced; only the two
+        // seams with the untouched neighbors can still need a merge.
+        // Right seam first so the left index stays valid.
+        if repl_len > 0 {
+            self.try_merge_at(lo + repl_len - 1);
+        }
+        if lo > 0 {
+            self.try_merge_at(lo - 1);
+        }
+        self.active = self.runs.iter().map(|r| r.len).sum();
+    }
+
+    /// Merge `runs[k]` into `runs[k+1]`'s place when they are adjacent
+    /// and equal-scale (no-op otherwise or out of bounds).
+    fn try_merge_at(&mut self, k: usize) {
+        if k + 1 >= self.runs.len() {
+            return;
+        }
+        let (a, b) = (self.runs[k], self.runs[k + 1]);
+        if a.end() == b.offset && a.scale == b.scale {
+            self.runs[k].len += b.len;
+            self.runs.remove(k + 1);
+        }
+    }
+}
+
+/// Append a run, merging into the previous one when adjacent and
+/// equal-scale (keeps builder output canonical).
+fn push_coalesced(out: &mut Vec<Run>, r: Run) {
+    if let Some(last) = out.last_mut() {
+        if last.end() == r.offset && last.scale == r.scale {
+            last.len += r.len;
+            return;
+        }
+    }
+    out.push(r);
+}
+
+/// Iterate maximal active coordinate intervals `(offset, end)`,
+/// merging adjacent runs regardless of scale.
+fn support_iter(runs: &[Run]) -> impl Iterator<Item = (usize, usize)> + '_ {
+    let mut i = 0usize;
+    std::iter::from_fn(move || {
+        if i >= runs.len() {
+            return None;
+        }
+        let start = runs[i].offset;
+        let mut end = runs[i].end();
+        i += 1;
+        while i < runs.len() && runs[i].offset == end {
+            end = runs[i].end();
+            i += 1;
+        }
+        Some((start, end))
+    })
+}
+
+/// Coordinate mask with scale values: dense bridge + canonical runs,
+/// kept in sync by construction.
+#[derive(Clone, Debug)]
 pub struct Mask {
-    pub values: Vec<f32>,
+    values: Vec<f32>,
+    runs: MaskRuns,
+}
+
+impl PartialEq for Mask {
+    fn eq(&self, other: &Self) -> bool {
+        // `runs` is a canonical function of `values`.
+        self.values == other.values
+    }
 }
 
 impl Mask {
     pub fn zeros(n: usize) -> Self {
-        Self { values: vec![0.0; n] }
+        Self { values: vec![0.0; n], runs: MaskRuns::empty(n) }
     }
 
     pub fn ones(n: usize) -> Self {
-        Self { values: vec![1.0; n] }
+        let runs = if n == 0 {
+            MaskRuns::empty(0)
+        } else {
+            MaskRuns {
+                n,
+                runs: vec![Run { offset: 0, len: n, scale: 1.0 }],
+                active: n,
+            }
+        };
+        Self { values: vec![1.0; n], runs }
+    }
+
+    /// Build from a dense value vector (scattered-coordinate
+    /// constructions: coordinate partitions, i.i.d. masks, top-k
+    /// selections); one O(d) scan derives the runs.
+    pub fn from_dense(values: Vec<f32>) -> Self {
+        let runs = MaskRuns::from_dense(&values);
+        Self { values, runs }
     }
 
     pub fn len(&self) -> usize {
@@ -34,29 +325,74 @@ impl Mask {
         self.values.is_empty()
     }
 
-    /// Number of active (non-zero) coordinates.
+    /// Dense view — the bridge the fused HLO kernels consume.
+    pub fn values(&self) -> &[f32] {
+        &self.values
+    }
+
+    /// Scale at one coordinate (O(1) dense read).
+    pub fn value(&self, i: usize) -> f32 {
+        self.values[i]
+    }
+
+    /// Canonical segment-run view (O(1); maintained incrementally).
+    pub fn runs(&self) -> &MaskRuns {
+        &self.runs
+    }
+
+    /// Number of active (non-zero) coordinates. Cached at
+    /// construction/refresh — O(1), never a dense rescan.
     pub fn active_count(&self) -> usize {
-        self.values.iter().filter(|&&v| v != 0.0).count()
+        self.runs.active_count()
     }
 
-    /// Keep ratio = active / total.
+    /// Keep ratio = active / total (O(1)).
     pub fn keep_ratio(&self) -> f64 {
-        self.active_count() as f64 / self.len().max(1) as f64
+        self.runs.active_count() as f64 / self.len().max(1) as f64
     }
 
-    /// Set a contiguous segment to `scale`.
-    pub fn set_segment(&mut self, offset: usize, len: usize, scale: f32) {
-        for v in &mut self.values[offset..offset + len] {
-            *v = scale;
-        }
+    /// Set a contiguous segment to `scale` (0 freezes it). Errors on an
+    /// out-of-bounds segment instead of panicking — a malformed
+    /// manifest must surface as a job failure, not take down a worker
+    /// thread.
+    pub fn set_segment(
+        &mut self,
+        offset: usize,
+        len: usize,
+        scale: f32,
+    ) -> Result<()> {
+        let Some(end) = offset.checked_add(len) else {
+            bail!("mask segment {offset}+{len} overflows");
+        };
+        ensure!(
+            end <= self.values.len(),
+            "mask segment {offset}..{end} exceeds mask length {}",
+            self.values.len()
+        );
+        self.values[offset..end].fill(scale);
+        self.runs.splice(offset, len, scale);
+        Ok(())
     }
 
-    /// Apply in place to a gradient: `g ← mask ⊙ g`.
-    pub fn apply(&self, grad: &mut [f32]) {
-        assert_eq!(grad.len(), self.values.len());
+    /// Set a single coordinate (run splice; prefer [`Mask::from_dense`]
+    /// when writing many scattered coordinates).
+    pub fn set_coord(&mut self, i: usize, scale: f32) -> Result<()> {
+        self.set_segment(i, 1, scale)
+    }
+
+    /// Apply in place to a gradient: `g ← mask ⊙ g`. Errors on a
+    /// length mismatch instead of panicking.
+    pub fn apply(&self, grad: &mut [f32]) -> Result<()> {
+        ensure!(
+            grad.len() == self.values.len(),
+            "mask/gradient length mismatch: {} vs {}",
+            self.values.len(),
+            grad.len()
+        );
         for (g, &m) in grad.iter_mut().zip(&self.values) {
             *g *= m;
         }
+        Ok(())
     }
 }
 
@@ -72,21 +408,47 @@ impl MaskSet {
     }
 
     /// Verify `Σⱼ S⁽ʲ⁾ = c·1` over `0..total` (padding excluded) for a
-    /// *single* scalar c; returns c or None if violated.
+    /// *single* scalar c; returns c or None if violated. Runs entirely
+    /// over the segment-run views: an event sweep over run boundaries,
+    /// O(R log R) in the total run count instead of O(total·M).
     pub fn coverage_scalar(&self, total: usize) -> Option<f32> {
         if self.masks.is_empty() || total == 0 {
             return None;
         }
-        let mut c = None;
-        for i in 0..total {
-            let s: f32 = self.masks.iter().map(|m| m.values[i]).sum();
-            match c {
-                None => c = Some(s),
-                Some(prev) if (prev - s).abs() > 1e-4 => return None,
-                _ => {}
+        // Difference events: +scale at run start, −scale at run end.
+        let mut events: Vec<(usize, f64)> = Vec::new();
+        for m in &self.masks {
+            for r in m.runs().runs() {
+                if r.offset >= total {
+                    break; // runs are sorted; the rest is padding
+                }
+                events.push((r.offset, r.scale as f64));
+                events.push((r.end().min(total), -(r.scale as f64)));
             }
         }
-        c
+        events.sort_by_key(|&(pos, _)| pos);
+        let mut c: Option<f64> = None;
+        let mut sum = 0.0f64;
+        let mut pos = 0usize;
+        let mut k = 0usize;
+        while pos < total {
+            while k < events.len() && events[k].0 == pos {
+                sum += events[k].1;
+                k += 1;
+            }
+            // The sum is constant on [pos, next): one check covers it.
+            match c {
+                None => c = Some(sum),
+                Some(prev) if (prev - sum).abs() > 1e-4 => return None,
+                _ => {}
+            }
+            pos = if k < events.len() {
+                events[k].0.min(total)
+            } else {
+                total
+            };
+        }
+        c.map(|x| x as f32)
     }
 
     /// Remark 4.11 construction over raw coordinates: `M = ⌈1/r⌉` masks;
@@ -104,22 +466,26 @@ impl MaskSet {
         let chunk = ((total as f64) * keep_ratio).floor() as usize;
         let perm = rng.permutation(total);
         let scale = m as f32;
-        let mut masks = vec![Mask::zeros(n); m];
+        let mut dense = vec![vec![0.0f32; n]; m];
         for (rank, &coord) in perm.iter().enumerate() {
             let j = (rank / chunk.max(1)).min(m - 1);
-            masks[j].values[coord] = scale;
+            dense[j][coord] = scale;
         }
-        MaskSet { masks }
+        MaskSet {
+            masks: dense.into_iter().map(Mask::from_dense).collect(),
+        }
     }
 
     /// Tensorwise partition (§5.2 SGDM-wor): randomly split the
     /// manifest's tensors into `M` groups of approximately equal
     /// parameter count; mask `j` activates group `j` with scale `M`.
+    /// Errors (instead of panicking) when the manifest's tensor table
+    /// points outside the padded parameter space.
     pub fn tensor_partition(
         man: &Manifest,
         keep_ratio: f64,
         rng: &mut Rng,
-    ) -> MaskSet {
+    ) -> Result<MaskSet> {
         let m = (1.0 / keep_ratio).ceil().max(1.0) as usize;
         let n = man.padded_len;
         let mut order: Vec<usize> = (0..man.params.len()).collect();
@@ -133,47 +499,51 @@ impl MaskSet {
             let p = &man.params[pi];
             let j = (0..m).min_by_key(|&j| group_load[j]).unwrap();
             group_load[j] += p.len;
-            masks[j].set_segment(p.offset, p.len, scale);
+            masks[j].set_segment(p.offset, p.len, scale)?;
         }
-        MaskSet { masks }
+        Ok(MaskSet { masks })
     }
 
     /// I.i.d. tensorwise baseline (§5.2 SGDM-iid): each tensor kept
     /// independently with probability `keep_ratio`, scale 1 (the naïve
     /// freeze scheme — no rescale, matching the paper's baseline).
-    pub fn tensor_iid(man: &Manifest, keep_ratio: f64, rng: &mut Rng)
-                      -> Mask {
+    pub fn tensor_iid(
+        man: &Manifest,
+        keep_ratio: f64,
+        rng: &mut Rng,
+    ) -> Result<Mask> {
         let mut mask = Mask::zeros(man.padded_len);
         for p in &man.params {
             if rng.f64() < keep_ratio {
-                mask.set_segment(p.offset, p.len, 1.0);
+                mask.set_segment(p.offset, p.len, 1.0)?;
             }
         }
-        mask
+        Ok(mask)
     }
 
     /// I.i.d. coordinate mask (Remark 4.10): each coordinate kept with
     /// probability `r`, active entries scaled by `1/r` (unbiased).
     pub fn coordinate_iid(n: usize, total: usize, r: f64, rng: &mut Rng)
                           -> Mask {
-        let mut mask = Mask::zeros(n);
+        let mut dense = vec![0.0f32; n];
         let scale = (1.0 / r) as f32;
-        for v in &mut mask.values[..total] {
+        for v in &mut dense[..total] {
             if rng.f64() < r {
                 *v = scale;
             }
         }
-        mask
+        Mask::from_dense(dense)
     }
 
     /// Layerwise mask (LISA family): embed/head/final always active at
     /// scale 1; the given middle layers active at `mid_scale`; everything
-    /// else frozen.
+    /// else frozen. Errors on a manifest whose tensor table points
+    /// outside the padded space.
     pub fn layerwise(
         man: &Manifest,
         active_middle: &[String],
         mid_scale: f32,
-    ) -> Mask {
+    ) -> Result<Mask> {
         let mut mask = Mask::zeros(man.padded_len);
         for p in &man.params {
             let scale = if p.layer == "embed"
@@ -186,9 +556,9 @@ impl MaskSet {
             } else {
                 continue;
             };
-            mask.set_segment(p.offset, p.len, scale);
+            mask.set_segment(p.offset, p.len, scale)?;
         }
-        mask
+        Ok(mask)
     }
 }
 
@@ -219,6 +589,38 @@ mod tests {
         Manifest::from_json(&j, Path::new("/tmp")).unwrap()
     }
 
+    /// Dense scan ground truth for the cached count.
+    fn dense_active(mask: &Mask) -> usize {
+        mask.values().iter().filter(|&&v| v != 0.0).count()
+    }
+
+    /// Runs must be canonical: sorted, disjoint, non-zero scale,
+    /// coalesced, with a truthful cached count, and must round-trip
+    /// through the dense bridge.
+    fn assert_canonical(mask: &Mask) {
+        let runs = mask.runs();
+        let mut prev_end = 0usize;
+        let mut prev_scale = f32::NAN;
+        for r in runs.runs() {
+            assert!(r.len > 0, "empty run {r:?}");
+            assert!(r.scale != 0.0, "zero-scale run {r:?}");
+            assert!(r.offset >= prev_end, "overlap at {r:?}");
+            if r.offset == prev_end {
+                assert!(r.scale != prev_scale, "uncoalesced {r:?}");
+            }
+            prev_end = r.end();
+            prev_scale = r.scale;
+        }
+        assert!(prev_end <= mask.len());
+        assert_eq!(runs.active_count(), dense_active(mask));
+        assert_eq!(runs.to_dense(), mask.values());
+        assert_eq!(
+            MaskRuns::from_dense(mask.values()).runs(),
+            runs.runs(),
+            "splice-maintained runs differ from a fresh dense scan"
+        );
+    }
+
     #[test]
     fn coordinate_partition_satisfies_eq3() {
         let mut rng = Rng::seed_from_u64(1);
@@ -230,7 +632,8 @@ mod tests {
             assert!((c - m as f32).abs() < 1e-5, "c={c} m={m}");
             // padding untouched
             for mask in &set.masks {
-                assert!(mask.values[100..].iter().all(|&v| v == 0.0));
+                assert!(mask.values()[100..].iter().all(|&v| v == 0.0));
+                assert_canonical(mask);
             }
         }
     }
@@ -241,7 +644,7 @@ mod tests {
         let set = MaskSet::coordinate_partition(64, 64, 0.25, &mut rng);
         for i in 0..64 {
             let active =
-                set.masks.iter().filter(|m| m.values[i] != 0.0).count();
+                set.masks.iter().filter(|m| m.value(i) != 0.0).count();
             assert_eq!(active, 1, "coord {i} owned by {active} masks");
         }
     }
@@ -259,14 +662,15 @@ mod tests {
     fn tensor_partition_satisfies_eq3() {
         let man = toy_manifest();
         let mut rng = Rng::seed_from_u64(4);
-        let set = MaskSet::tensor_partition(&man, 0.5, &mut rng);
+        let set = MaskSet::tensor_partition(&man, 0.5, &mut rng).unwrap();
         assert_eq!(set.m(), 2);
         let c = set.coverage_scalar(man.total_len).unwrap();
         assert!((c - 2.0).abs() < 1e-6);
         // groups are tensor-aligned: a tensor is fully in or fully out
         for mask in &set.masks {
+            assert_canonical(mask);
             for p in &man.params {
-                let seg = &mask.values[p.offset..p.offset + p.len];
+                let seg = &mask.values()[p.offset..p.offset + p.len];
                 let first = seg[0];
                 assert!(seg.iter().all(|&v| v == first), "{} split", p.name);
             }
@@ -277,7 +681,7 @@ mod tests {
     fn tensor_partition_balances_load() {
         let man = toy_manifest();
         let mut rng = Rng::seed_from_u64(5);
-        let set = MaskSet::tensor_partition(&man, 0.5, &mut rng);
+        let set = MaskSet::tensor_partition(&man, 0.5, &mut rng).unwrap();
         let loads: Vec<usize> =
             set.masks.iter().map(|m| m.active_count()).collect();
         // 5 tensors of 4 params in 2 groups → 12 vs 8
@@ -289,9 +693,10 @@ mod tests {
     fn tensor_iid_keeps_whole_tensors() {
         let man = toy_manifest();
         let mut rng = Rng::seed_from_u64(6);
-        let mask = MaskSet::tensor_iid(&man, 0.5, &mut rng);
+        let mask = MaskSet::tensor_iid(&man, 0.5, &mut rng).unwrap();
+        assert_canonical(&mask);
         for p in &man.params {
-            let seg = &mask.values[p.offset..p.offset + p.len];
+            let seg = &mask.values()[p.offset..p.offset + p.len];
             assert!(seg.iter().all(|&v| v == seg[0]));
         }
     }
@@ -300,30 +705,39 @@ mod tests {
     fn coordinate_iid_scale_unbiased() {
         let mut rng = Rng::seed_from_u64(7);
         let mask = MaskSet::coordinate_iid(4096, 4000, 0.25, &mut rng);
-        let active = mask.values[..4000].iter()
+        let active = mask.values()[..4000].iter()
             .filter(|&&v| v != 0.0).count();
         // ~1000 expected
         assert!((active as f64 - 1000.0).abs() < 150.0, "active {active}");
-        assert!(mask.values.iter().all(|&v| v == 0.0 || v == 4.0));
-        assert!(mask.values[4000..].iter().all(|&v| v == 0.0));
+        assert!(mask.values().iter().all(|&v| v == 0.0 || v == 4.0));
+        assert!(mask.values()[4000..].iter().all(|&v| v == 0.0));
+        assert_canonical(&mask);
     }
 
     #[test]
     fn layerwise_mask_shape() {
         let man = toy_manifest();
-        let mask = MaskSet::layerwise(&man, &["block_1".into()], 3.0);
+        let mask =
+            MaskSet::layerwise(&man, &["block_1".into()], 3.0).unwrap();
         // embed active at 1
-        assert!(mask.values[0..4].iter().all(|&v| v == 1.0));
+        assert!(mask.values()[0..4].iter().all(|&v| v == 1.0));
         // block_0 frozen
-        assert!(mask.values[4..8].iter().all(|&v| v == 0.0));
+        assert!(mask.values()[4..8].iter().all(|&v| v == 0.0));
         // block_1 active at 3 (= N_L/γ with N_L=3, γ=1)
-        assert!(mask.values[8..12].iter().all(|&v| v == 3.0));
+        assert!(mask.values()[8..12].iter().all(|&v| v == 3.0));
         // block_2 frozen
-        assert!(mask.values[12..16].iter().all(|&v| v == 0.0));
+        assert!(mask.values()[12..16].iter().all(|&v| v == 0.0));
         // head active at 1
-        assert!(mask.values[16..20].iter().all(|&v| v == 1.0));
+        assert!(mask.values()[16..20].iter().all(|&v| v == 1.0));
         // padding zero
-        assert!(mask.values[20..].iter().all(|&v| v == 0.0));
+        assert!(mask.values()[20..].iter().all(|&v| v == 0.0));
+        // runs view: embed@1, block_1@3, head@1 — three segments
+        assert_canonical(&mask);
+        assert_eq!(mask.runs().runs(), &[
+            Run { offset: 0, len: 4, scale: 1.0 },
+            Run { offset: 8, len: 4, scale: 3.0 },
+            Run { offset: 16, len: 4, scale: 1.0 },
+        ]);
     }
 
     #[test]
@@ -335,7 +749,9 @@ mod tests {
         let man = toy_manifest();
         let masks: Vec<Mask> = ["block_0", "block_1", "block_2"]
             .iter()
-            .map(|l| MaskSet::layerwise(&man, &[l.to_string()], 3.0))
+            .map(|l| {
+                MaskSet::layerwise(&man, &[l.to_string()], 3.0).unwrap()
+            })
             .collect();
         let set = MaskSet { masks };
         let c = set.coverage_scalar(man.total_len).unwrap();
@@ -345,11 +761,154 @@ mod tests {
     #[test]
     fn apply_masks_gradient() {
         let mut mask = Mask::zeros(4);
-        mask.set_segment(1, 2, 2.0);
+        mask.set_segment(1, 2, 2.0).unwrap();
         let mut g = vec![1.0f32, 1.0, 1.0, 1.0];
-        mask.apply(&mut g);
+        mask.apply(&mut g).unwrap();
         assert_eq!(g, vec![0.0, 2.0, 2.0, 0.0]);
         assert_eq!(mask.active_count(), 2);
         assert!((mask.keep_ratio() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn apply_length_mismatch_is_an_error() {
+        let mask = Mask::ones(4);
+        let mut g = vec![1.0f32; 5];
+        assert!(mask.apply(&mut g).is_err());
+    }
+
+    #[test]
+    fn set_segment_out_of_bounds_is_an_error() {
+        let mut mask = Mask::zeros(8);
+        assert!(mask.set_segment(4, 8, 1.0).is_err());
+        assert!(mask.set_segment(9, 0, 1.0).is_err());
+        assert!(mask.set_segment(usize::MAX, 2, 1.0).is_err());
+        // the failed writes left the mask untouched
+        assert_eq!(mask.active_count(), 0);
+        assert!(mask.values().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn active_count_stays_consistent_after_overwrites() {
+        // Regression guard for the cached count: overlapping
+        // set_segment rewrites (activate, partially freeze, rescale,
+        // re-activate) must keep the cache equal to a dense rescan.
+        let mut mask = Mask::zeros(32);
+        let script: &[(usize, usize, f32)] = &[
+            (0, 16, 2.0),   // activate the front half
+            (4, 8, 0.0),    // punch a hole
+            (8, 20, 3.0),   // overwrite across the hole + beyond
+            (0, 32, 1.0),   // full activate
+            (30, 2, 0.0),   // trim the tail
+            (10, 4, 1.0),   // same-scale overwrite (no-op net effect)
+        ];
+        for &(off, len, scale) in script {
+            mask.set_segment(off, len, scale).unwrap();
+            assert_eq!(
+                mask.active_count(),
+                mask.values().iter().filter(|&&v| v != 0.0).count(),
+                "cache diverged after set_segment({off}, {len}, {scale})"
+            );
+            assert_canonical(&mask);
+        }
+        assert_eq!(mask.active_count(), 30);
+    }
+
+    #[test]
+    fn runs_splice_randomized_matches_dense_scan() {
+        let mut rng = Rng::seed_from_u64(11);
+        let mut mask = Mask::zeros(64);
+        for _ in 0..200 {
+            let off = rng.index(64);
+            let len = rng.index(64 - off + 1);
+            let scale = [0.0f32, 1.0, 2.0, 4.0][rng.index(4)];
+            mask.set_segment(off, len, scale).unwrap();
+            assert_canonical(&mask);
+        }
+    }
+
+    #[test]
+    fn dense_runs_bridge_round_trips() {
+        let mut rng = Rng::seed_from_u64(12);
+        for _ in 0..50 {
+            let n = 1 + rng.index(100);
+            let dense: Vec<f32> = (0..n)
+                .map(|_| [0.0f32, 0.0, 1.0, 2.0][rng.index(4)])
+                .collect();
+            let runs = MaskRuns::from_dense(&dense);
+            assert_eq!(runs.to_dense(), dense);
+            assert_eq!(
+                runs.active_count(),
+                dense.iter().filter(|&&v| v != 0.0).count()
+            );
+        }
+    }
+
+    #[test]
+    fn scale_at_matches_dense() {
+        let mut mask = Mask::zeros(16);
+        mask.set_segment(2, 3, 2.0).unwrap();
+        mask.set_segment(9, 4, 0.5).unwrap();
+        for i in 0..16 {
+            assert_eq!(mask.runs().scale_at(i), mask.value(i), "coord {i}");
+        }
+    }
+
+    #[test]
+    fn same_support_ignores_scales_and_run_splits() {
+        let mut a = Mask::zeros(10);
+        a.set_segment(0, 4, 1.0).unwrap();
+        a.set_segment(4, 2, 3.0).unwrap(); // adjacent, different scale
+        let mut b = Mask::zeros(10);
+        b.set_segment(0, 6, 2.0).unwrap(); // one run, same coords
+        assert!(a.runs().same_support(b.runs()));
+        b.set_segment(8, 1, 1.0).unwrap();
+        assert!(!a.runs().same_support(b.runs()));
+    }
+
+    #[test]
+    fn intersect_keeps_left_scales() {
+        let mut a = Mask::zeros(12);
+        a.set_segment(0, 8, 4.0).unwrap();
+        let mut sel = Mask::zeros(12);
+        sel.set_segment(2, 3, 1.0).unwrap();
+        sel.set_segment(6, 4, 1.0).unwrap();
+        let eff = a.runs().intersect_keep_scale(sel.runs());
+        assert_eq!(eff.runs(), &[
+            Run { offset: 2, len: 3, scale: 4.0 },
+            Run { offset: 6, len: 2, scale: 4.0 },
+        ]);
+        assert_eq!(eff.active_count(), 5);
+    }
+
+    #[test]
+    fn coverage_scalar_over_runs_matches_worked_example() {
+        // §5.2 worked example, literally: d = 6 (embed, 4 middles,
+        // head), M = 4 masks, S⁽ʲ⁾ = (1, …, 4 at middle j, …, 1)ᵀ.
+        let mut masks = Vec::new();
+        for j in 0..4 {
+            let mut m = Mask::zeros(6);
+            m.set_segment(0, 1, 1.0).unwrap();
+            m.set_segment(1 + j, 1, 4.0).unwrap();
+            m.set_segment(5, 1, 1.0).unwrap();
+            masks.push(m);
+        }
+        let set = MaskSet { masks };
+        let c = set.coverage_scalar(6).expect("eq. (3) holds");
+        assert!((c - 4.0).abs() < 1e-6, "c={c}");
+        // Breaking one entry breaks the scalar.
+        let mut bad = set.clone();
+        bad.masks[0].set_segment(2, 1, 1.0).unwrap();
+        assert_eq!(bad.coverage_scalar(6), None);
+    }
+
+    #[test]
+    fn coverage_scalar_detects_uncovered_gap() {
+        // Coords 0..4 covered at 2, coord 4 uncovered → not scalar.
+        let mut m1 = Mask::zeros(5);
+        m1.set_segment(0, 4, 2.0).unwrap();
+        let set = MaskSet { masks: vec![m1] };
+        assert_eq!(set.coverage_scalar(5), None);
+        // But over total=4 it is.
+        assert_eq!(set.coverage_scalar(4), Some(2.0));
     }
 }

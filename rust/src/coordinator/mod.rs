@@ -2,7 +2,10 @@
 //!
 //! * [`mask`] — mask representations and mask-*set* generation satisfying
 //!   eq. (3): `Σⱼ S⁽ʲ⁾ = M·1_d` (coordinate, tensorwise and layerwise
-//!   constructions, plus the i.i.d. baselines they are compared against).
+//!   constructions, plus the i.i.d. baselines they are compared
+//!   against). Every mask carries a canonical segment-run view
+//!   ([`mask::MaskRuns`]) beside its dense HLO bridge, so native
+//!   consumers do O(active) work instead of O(d).
 //! * [`cycle`] — Algorithm 1's traversal engine: per cycle, a fresh
 //!   random permutation of `[M] × [N]` visited exactly once, plus the
 //!   epochwise variant of Figure 1.
@@ -18,5 +21,5 @@ pub mod sampler;
 
 pub use cycle::{EpochwiseCycle, OmgdCycle};
 pub use lisa::{LisaScheduler, LisaVariant};
-pub use mask::{Mask, MaskSet};
+pub use mask::{Mask, MaskRuns, MaskSet, Run};
 pub use sampler::DataSampler;

@@ -4,9 +4,12 @@
 //! every connection multiplexes into ONE hub — one bounded queue, one
 //! worker pool, one result cache — so N clients share the same compute
 //! budget. The HTTP layer is a thin, dependency-free HTTP/1.1 framing
-//! helper (request line + headers + `Content-Length` body in, status +
-//! headers + body out), not a general web server: request bodies are
-//! read up front. A client that sends `Connection: keep-alive` gets a
+//! helper (request line + headers + body in, status + headers + body
+//! out), not a general web server: request bodies are read up front —
+//! `Content-Length`-framed everywhere, with `Transfer-Encoding:
+//! chunked` additionally accepted on `POST /jobs` so a submitter can
+//! stream a session of unknown total size (`omgd grid --remote` does).
+//! A client that sends `Connection: keep-alive` gets a
 //! per-connection request loop — every `Content-Length`-framed
 //! response keeps the socket open (bounded idle timeout), and the
 //! streamed `POST /jobs` body switches to chunked transfer encoding so
@@ -510,6 +513,24 @@ fn route_request(
             || head.path == "/work/lease"
             || parse_work_path(&head.path).is_some());
     let mut keep = head.keep_alive;
+    // Chunked request bodies are a session-endpoint feature: `POST
+    // /jobs` decodes them inline; everywhere else the (small, JSON)
+    // bodies must be `Content-Length`-framed. Answer 400 and drain the
+    // stream so a keep-alive client survives its own mistake.
+    if head.chunked && !(head.method == "POST" && head.path == "/jobs") {
+        let drained = !head.expect_continue && drain_chunked(reader);
+        let _ = respond_json(
+            w,
+            400,
+            "Bad Request",
+            &[],
+            keep && drained,
+            &err_body(
+                "chunked request bodies are only supported on POST /jobs",
+            ),
+        );
+        return keep && drained;
+    }
     if !wants_body && head.content_length > 0 {
         if head.expect_continue {
             // Nothing was sent yet and we answer without inviting the
@@ -618,9 +639,13 @@ fn route_request(
             if stop.load(Ordering::SeqCst) {
                 // Draining: no new sessions; the connection's body (if
                 // any) was not read, so answering is safe only after a
-                // bounded drain.
+                // bounded drain (chunked bodies decode-and-discard).
                 let drained = !head.expect_continue
-                    && drain_body(reader, head.content_length);
+                    && if head.chunked {
+                        drain_chunked(reader)
+                    } else {
+                        drain_body(reader, head.content_length)
+                    };
                 let _ = respond_json(
                     w,
                     503,
@@ -631,9 +656,11 @@ fn route_request(
                 );
                 return keep && drained;
             }
-            if head.content_length > MAX_BODY_BYTES {
+            if !head.chunked && head.content_length > MAX_BODY_BYTES {
                 // Under Expect: 100-continue there is nothing to
                 // drain — the client is still waiting on our verdict.
+                // (A chunked body's size is unknown up front; its cap
+                // is enforced while decoding below.)
                 let drained = !head.expect_continue
                     && drain_body(reader, head.content_length);
                 let _ = respond_json(
@@ -655,18 +682,50 @@ fn route_request(
             // Read the body even when about to throttle: closing a
             // socket with unread request bytes can RST the response
             // out from under the client.
-            let body = match read_body(reader, head.content_length) {
-                Ok(b) => b,
-                Err(e) => {
-                    let _ = respond_json(
-                        w,
-                        400,
-                        "Bad Request",
-                        &[],
-                        false,
-                        &err_body(&e.to_string()),
-                    );
-                    return false;
+            let body = if head.chunked {
+                match read_chunked_body(reader, MAX_BODY_BYTES) {
+                    Ok(b) => b,
+                    Err(ChunkedBodyError::TooLarge) => {
+                        // Stopped mid-stream: framing is lost — close.
+                        let _ = respond_json(
+                            w,
+                            413,
+                            "Payload Too Large",
+                            &[],
+                            false,
+                            &err_body(&format!(
+                                "chunked body exceeds {MAX_BODY_BYTES} \
+                                 bytes"
+                            )),
+                        );
+                        return false;
+                    }
+                    Err(ChunkedBodyError::Malformed(e)) => {
+                        let _ = respond_json(
+                            w,
+                            400,
+                            "Bad Request",
+                            &[],
+                            false,
+                            &err_body(&e),
+                        );
+                        return false;
+                    }
+                }
+            } else {
+                match read_body(reader, head.content_length) {
+                    Ok(b) => b,
+                    Err(e) => {
+                        let _ = respond_json(
+                            w,
+                            400,
+                            "Bad Request",
+                            &[],
+                            false,
+                            &err_body(&e.to_string()),
+                        );
+                        return false;
+                    }
                 }
             };
             // Fairness gate: a token already at its in-flight quota is
@@ -1199,6 +1258,10 @@ struct HttpHead {
     method: String,
     path: String,
     content_length: usize,
+    /// `Transfer-Encoding: chunked` request body. Accepted only on
+    /// `POST /jobs` (a submitter can stream a session without knowing
+    /// its total size); every other endpoint answers 400.
+    chunked: bool,
     expect_continue: bool,
     /// The client explicitly asked for `Connection: keep-alive`. The
     /// gateway is conservative: absent the header it closes after one
@@ -1210,8 +1273,10 @@ struct HttpHead {
 
 /// Read one request head. `Ok(None)` = clean EOF before any bytes (the
 /// client opened and closed an idle connection). The head is capped at
-/// [`MAX_HEAD_BYTES`] / [`MAX_HEADERS`]; chunked request bodies are
-/// rejected (clients must send `Content-Length`).
+/// [`MAX_HEAD_BYTES`] / [`MAX_HEADERS`]. `Transfer-Encoding: chunked`
+/// is parsed into [`HttpHead::chunked`] (other codings, or chunked
+/// combined with `Content-Length` — a request-smuggling shape — are
+/// rejected here).
 fn read_head<R: BufRead>(r: &mut R) -> Result<Option<HttpHead>> {
     let mut head = r.take(MAX_HEAD_BYTES);
     let mut line = String::new();
@@ -1233,6 +1298,8 @@ fn read_head<R: BufRead>(r: &mut R) -> Result<Option<HttpHead>> {
         None => path.to_string(),
     };
     let mut content_length = 0usize;
+    let mut saw_content_length = false;
+    let mut chunked = false;
     let mut expect_continue = false;
     let mut keep_alive = false;
     let mut client = None;
@@ -1243,10 +1310,17 @@ fn read_head<R: BufRead>(r: &mut R) -> Result<Option<HttpHead>> {
         }
         let h = h.trim_end();
         if h.is_empty() {
+            if chunked && saw_content_length {
+                bail!(
+                    "both Transfer-Encoding and Content-Length present \
+                     (ambiguous framing)"
+                );
+            }
             return Ok(Some(HttpHead {
                 method,
                 path,
                 content_length,
+                chunked,
                 expect_continue,
                 keep_alive,
                 client,
@@ -1263,6 +1337,7 @@ fn read_head<R: BufRead>(r: &mut R) -> Result<Option<HttpHead>> {
                     .map_err(|_| {
                         anyhow::anyhow!("bad content-length {value:?}")
                     })?;
+                saw_content_length = true;
             }
             "expect" => {
                 expect_continue = value.eq_ignore_ascii_case("100-continue");
@@ -1289,7 +1364,16 @@ fn read_head<R: BufRead>(r: &mut R) -> Result<Option<HttpHead>> {
                 }
             }
             "transfer-encoding" => {
-                bail!("chunked request bodies are not supported");
+                // Only the plain `chunked` coding is spoken; anything
+                // else (gzip, a coding chain) is rejected.
+                if value.eq_ignore_ascii_case("chunked") {
+                    chunked = true;
+                } else {
+                    bail!(
+                        "unsupported transfer-encoding {value:?} \
+                         (only \"chunked\")"
+                    );
+                }
             }
             _ => {}
         }
@@ -1301,6 +1385,58 @@ fn read_body<R: BufRead>(r: &mut R, len: usize) -> Result<Vec<u8>> {
     let mut buf = vec![0u8; len];
     r.read_exact(&mut buf).context("reading request body")?;
     Ok(buf)
+}
+
+/// Why a chunked request body could not be read in full.
+enum ChunkedBodyError {
+    /// Decoded size exceeded the cap mid-stream; the connection is no
+    /// longer framed (bytes of the body remain unread).
+    TooLarge,
+    /// Malformed chunked framing; the connection is not reusable.
+    Malformed(String),
+}
+
+/// Decode a `Transfer-Encoding: chunked` request body via
+/// [`ChunkedReader`], capped at `cap` decoded bytes. On success the
+/// reader sits exactly past the terminal chunk — the connection stays
+/// framed for keep-alive.
+fn read_chunked_body<R: BufRead>(
+    r: &mut R,
+    cap: usize,
+) -> std::result::Result<Vec<u8>, ChunkedBodyError> {
+    let mut cr = ChunkedReader::new(r);
+    let mut body = Vec::new();
+    let mut buf = [0u8; 8 << 10];
+    loop {
+        match cr.read(&mut buf) {
+            Ok(0) => return Ok(body),
+            Ok(n) => {
+                if body.len() + n > cap {
+                    return Err(ChunkedBodyError::TooLarge);
+                }
+                body.extend_from_slice(&buf[..n]);
+            }
+            Err(e) => {
+                return Err(ChunkedBodyError::Malformed(e.to_string()))
+            }
+        }
+    }
+}
+
+/// Discard a chunked request body before an error response (the
+/// chunked analogue of [`drain_body`], without buffering). `true` =
+/// terminal chunk reached within [`MAX_DRAIN_BYTES`], so the
+/// connection is still cleanly framed for another keep-alive request.
+fn drain_chunked<R: BufRead>(r: &mut R) -> bool {
+    let mut cr = ChunkedReader::new(r);
+    match std::io::copy(
+        &mut (&mut cr).take(MAX_DRAIN_BYTES),
+        &mut std::io::sink(),
+    ) {
+        // n == cap: the terminal chunk was never seen — not framed.
+        Ok(n) => n < MAX_DRAIN_BYTES,
+        Err(_) => false,
+    }
 }
 
 /// Discard up to `len` request-body bytes (capped at
@@ -1534,14 +1670,61 @@ mod tests {
             "GET /x HTTP/1.1\r\nContent-Length: nan\r\n\r\n"
         )
         .is_err());
-        assert!(head_of(
-            "POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n"
-        )
-        .is_err());
         assert!(
             head_of("GET /x HTTP/1.1\r\nHost: y\r\n").is_err(),
             "eof before the blank line"
         );
+    }
+
+    #[test]
+    fn parses_chunked_transfer_encoding() {
+        let h = head_of(
+            "POST /jobs HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n",
+        )
+        .unwrap()
+        .unwrap();
+        assert!(h.chunked);
+        assert_eq!(h.content_length, 0);
+        // non-chunked codings are rejected
+        assert!(head_of(
+            "POST /jobs HTTP/1.1\r\nTransfer-Encoding: gzip\r\n\r\n"
+        )
+        .is_err());
+        // chunked + Content-Length is the smuggling shape — rejected
+        assert!(head_of(
+            "POST /jobs HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\
+             Content-Length: 10\r\n\r\n"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn chunked_body_reader_caps_and_positions() {
+        // 2-chunk body, trailing keep-alive request bytes intact.
+        let wire = b"3\r\nabc\r\n4\r\ndefg\r\n0\r\n\r\nNEXT";
+        let mut r = &wire[..];
+        let body = read_chunked_body(&mut r, 1024).unwrap();
+        assert_eq!(body, b"abcdefg");
+        let mut rest = String::new();
+        r.read_to_string(&mut rest).unwrap();
+        assert_eq!(rest, "NEXT", "reader must sit past the body");
+        // cap enforcement mid-stream
+        let mut r2 = &wire[..];
+        assert!(matches!(
+            read_chunked_body(&mut r2, 5),
+            Err(ChunkedBodyError::TooLarge)
+        ));
+        // malformed framing
+        let mut r3 = &b"zz\r\nboom"[..];
+        assert!(matches!(
+            read_chunked_body(&mut r3, 1024),
+            Err(ChunkedBodyError::Malformed(_))
+        ));
+        // drain: framed on success, not framed when truncated
+        let mut r4 = &wire[..];
+        assert!(drain_chunked(&mut r4));
+        let mut r5 = &b"5\r\nab"[..];
+        assert!(!drain_chunked(&mut r5));
     }
 
     #[test]

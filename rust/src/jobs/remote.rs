@@ -33,7 +33,10 @@
 //!
 //! Everything here is dependency-free `std::net` HTTP/1.1, matching
 //! the gateway's deliberately minimal framing (`Content-Length`
-//! request bodies). Both clients speak `Connection: keep-alive`: each
+//! request bodies on the worker protocol; the grid submission itself
+//! streams `Transfer-Encoding: chunked`, one chunk per spec line, so
+//! a grid's total size is never announced up front). Both clients
+//! speak `Connection: keep-alive`: each
 //! worker thread (and the heartbeat) holds ONE persistent connection
 //! across lease/renew/result/artifact rounds (`GatewayConn`), and
 //! `run_grid_remote` reuses its socket across `429` retry rounds, with
@@ -961,22 +964,33 @@ fn post_jobs_with_retry(
 
 /// One submission round of [`post_jobs_with_retry`]: write the
 /// `POST /jobs` request on the (possibly reused) connection and parse
-/// the response head.
+/// the response head. The request body goes out with
+/// `Transfer-Encoding: chunked`, one chunk per NDJSON line — the
+/// submitter never announces a total size, so an open-ended spec
+/// stream could ride the same wire shape.
 fn submit_jobs_round(
     reader: &mut BufReader<TcpStream>,
     body: &[u8],
     client_hdr: &str,
 ) -> Result<(u16, HashMap<String, String>)> {
     {
-        let mut sw = reader.get_ref();
+        // One chunk per spec line is the wire shape; the chunk framing
+        // is written into a BufWriter so the whole submission still
+        // goes out in large writes instead of three small syscalls per
+        // line.
+        let mut sw = std::io::BufWriter::new(reader.get_ref());
         write!(
             sw,
             "POST /jobs HTTP/1.1\r\nHost: omgd\r\nContent-Type: \
-             application/x-ndjson\r\nContent-Length: {}\r\n\
+             application/x-ndjson\r\nTransfer-Encoding: chunked\r\n\
              {client_hdr}Connection: keep-alive\r\n\r\n",
-            body.len()
         )?;
-        sw.write_all(body)?;
+        for line in body.split_inclusive(|&b| b == b'\n') {
+            write!(sw, "{:x}\r\n", line.len())?;
+            sw.write_all(line)?;
+            sw.write_all(b"\r\n")?;
+        }
+        sw.write_all(b"0\r\n\r\n")?; // terminal chunk
         sw.flush()?;
     }
     let mut status_line = String::new();

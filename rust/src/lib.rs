@@ -6,8 +6,12 @@
 //!
 //! * **L3 (this crate)** — the training coordinator: Algorithm 1's
 //!   `[M]×[N]` without-replacement traversal ([`coordinator`]), the
-//!   LISA/LISA-WOR layer scheduler (Algorithm 2), native baseline
-//!   optimizers ([`optim`]), the analytic memory model ([`memory`]), the
+//!   LISA/LISA-WOR layer scheduler (Algorithm 2) — masks carried as
+//!   canonical segment runs ([`coordinator::MaskRuns`]) with a dense
+//!   bridge to the HLO kernels, so native masked steps and residency
+//!   accounting are O(active), not O(d) — run-aware native optimizers
+//!   with active-region-only moment state ([`optim`]), the analytic
+//!   memory model ([`memory`]), the
 //!   §5.1 quadratic testbed ([`quadratic`]), data pipelines ([`data`]),
 //!   the PJRT runtime ([`runtime`]) that executes AOT-compiled HLO, and
 //!   the job-orchestration subsystem ([`jobs`]): hashed [`jobs::JobSpec`]

@@ -44,6 +44,12 @@
 //!   cache-gc                          prune the result cache by age
 //!                                     and/or total size (true LRU)
 //!     --max-age-secs N --max-bytes N [--dry-run] [--cache-dir DIR]
+//!   microbench                        segment-run vs dense masked-
+//!                                     AdamW step timing (BENCH_*.json)
+//!     --n 65536 --keep 0.25 --steps 10000 [--out FILE]
+//!
+//! `train`/`finetune` also accept `--residency FILE.csv` to export the
+//! per-period (step, keep_ratio, state_bytes) series.
 //!
 //! Every flag has a default; `omgd <cmd> --help` lists them.
 
@@ -95,6 +101,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "serve" => cmd_serve(args),
         "worker" => cmd_worker(args),
         "cache-gc" => cmd_cache_gc(args),
+        "microbench" => cmd_microbench(args),
         "" | "help" | "--help" => {
             print!("{}", USAGE);
             Ok(())
@@ -153,6 +160,10 @@ USAGE: omgd <subcommand> [flags]
                least-recently-used-first; cache hits refresh recency);
                see docs/operations.md
     --max-age-secs N --max-bytes N [--dry-run] [--cache-dir DIR]
+  microbench   time native masked-AdamW steps on the segment-run path
+               vs the dense reference and print the ratio (no
+               artifacts needed; steps scale with OMGD_BENCH_SCALE)
+    --n 65536 --keep 0.25 --steps 10000 [--out BENCH_maskruns.json]
 ";
 
 fn cmd_info(args: &Args) -> Result<()> {
@@ -216,18 +227,19 @@ fn cmd_check(args: &Args) -> Result<()> {
         let n = bundle.padded_len();
         let mut rng = Rng::seed_from_u64(0xC0FFEE);
         let g: Vec<f32> = (0..n).map(|_| rng.normal32()).collect();
-        let mut mask = Mask::zeros(n);
-        for i in 0..bundle.man.total_len {
+        let mut dense = vec![0.0f32; n];
+        for d in dense.iter_mut().take(bundle.man.total_len) {
             if rng.f64() < 0.5 {
-                mask.values[i] = 2.0;
+                *d = 2.0;
             }
         }
+        let mask = Mask::from_dense(dense);
         // Cross-check the fused kernel against the native mirror.
         let p0 = bundle.init_params()?;
         let (mut ph, mut m, mut v) =
             (p0.clone(), vec![0.0f32; n], vec![0.0f32; n]);
         let hp = [1e-3, 0.9, 0.999, 1e-8, 0.01, 0.1, 0.001, 0.0];
-        bundle.adamw_update(&mut ph, &g, &mask.values, &mut m, &mut v,
+        bundle.adamw_update(&mut ph, &g, mask.values(), &mut m, &mut v,
                             &hp)?;
         let mut pn = p0.clone();
         let mut nat = MaskedAdamW::new(n, 0.9, 0.999, 1e-8, 0.01);
@@ -362,6 +374,10 @@ fn cmd_train(args: &Args) -> Result<()> {
         w.flush()?;
         println!("wrote {path}");
     }
+    if let Some(path) = args.get("residency") {
+        omgd::metrics::write_residency_csv(path, &out.residency_series)?;
+        println!("wrote {path}");
+    }
     Ok(())
 }
 
@@ -403,6 +419,10 @@ fn cmd_finetune(args: &Args) -> Result<()> {
             w.row(&[s as f64, l])?;
         }
         w.flush()?;
+        println!("wrote {path}");
+    }
+    if let Some(path) = args.get("residency") {
+        omgd::metrics::write_residency_csv(path, &out.residency_series)?;
         println!("wrote {path}");
     }
     Ok(())
@@ -792,5 +812,100 @@ fn cmd_cache_gc(args: &Args) -> Result<()> {
         st.kept,
         st.kept_bytes,
     );
+    Ok(())
+}
+
+/// `omgd microbench`: native masked-AdamW steps on the segment-run
+/// path vs the dense reference, on a LISA-shaped mask (contiguous
+/// active segments). Needs no artifacts; writes a `BENCH_*.json` row
+/// so the perf trajectory of the runs path is tracked across PRs.
+fn cmd_microbench(args: &Args) -> Result<()> {
+    use omgd::coordinator::Mask;
+    use omgd::optim::{reference::DenseAdamW, MaskedAdamW, Optimizer};
+    use omgd::rng::Rng;
+    use std::time::Instant;
+
+    let n = args.usize_or("n", 1 << 16)?;
+    let keep = args.f64_or("keep", 0.25)?;
+    if !(keep > 0.0 && keep <= 1.0) {
+        bail!("--keep must be in (0, 1]");
+    }
+    // 10⁴ steps at scale 1; OMGD_BENCH_SCALE shrinks smoke runs.
+    let steps = omgd::experiments::scaled(
+        args.usize_or("steps", 10_000)?,
+        100,
+    );
+    // LISA-shaped support: `keep` of the space active as contiguous
+    // layer-sized segments spread over the vector.
+    let seg = (n / 64).max(1);
+    let stride = ((seg as f64) / keep).round() as usize;
+    let mut mask = Mask::zeros(n);
+    let mut off = 0usize;
+    while off < n {
+        mask.set_segment(off, seg.min(n - off), 2.0)
+            .expect("segment in bounds");
+        off += stride.max(seg);
+    }
+    let active = mask.active_count();
+    let mut rng = Rng::seed_from_u64(1);
+    let g: Vec<f32> = (0..n).map(|_| rng.normal32()).collect();
+    let p0: Vec<f32> = (0..n).map(|_| rng.normal32()).collect();
+
+    let mut p = p0.clone();
+    let mut dense = DenseAdamW::default_hp(n);
+    let t0 = Instant::now();
+    for _ in 0..steps {
+        dense.step(&mut p, &g, mask.values(), 1e-4);
+    }
+    let dense_secs = t0.elapsed().as_secs_f64();
+
+    let mut pr = p0;
+    let mut compact = MaskedAdamW::default_hp(n);
+    let t1 = Instant::now();
+    for _ in 0..steps {
+        compact.step_runs(&mut pr, &g, mask.runs(), 1e-4);
+    }
+    let runs_secs = t1.elapsed().as_secs_f64();
+
+    // The two paths must agree bitwise — a fast wrong answer is not a
+    // benchmark result.
+    if p.iter().zip(&pr).any(|(a, b)| a.to_bits() != b.to_bits()) {
+        bail!("runs path diverged from the dense reference");
+    }
+    let ratio = dense_secs / runs_secs.max(1e-12);
+    println!(
+        "microbench: n={n} keep={keep} ({} runs, {active} active), \
+         {steps} steps",
+        mask.runs().runs().len()
+    );
+    println!(
+        "  dense  {:8.1} ms ({:.0} steps/s)",
+        dense_secs * 1e3,
+        steps as f64 / dense_secs.max(1e-12)
+    );
+    println!(
+        "  runs   {:8.1} ms ({:.0} steps/s)",
+        runs_secs * 1e3,
+        steps as f64 / runs_secs.max(1e-12)
+    );
+    println!(
+        "  ratio  {ratio:.2}× (state resident: {} of {} bytes)",
+        compact.state_bytes(),
+        2 * n * 4
+    );
+    let out = args.str_or("out", "BENCH_maskruns.json");
+    std::fs::write(
+        &out,
+        format!(
+            "{{\"bench\":\"maskruns\",\"n\":{n},\"keep\":{keep},\
+             \"active\":{active},\"steps\":{steps},\
+             \"dense_secs\":{dense_secs:.6},\
+             \"runs_secs\":{runs_secs:.6},\"ratio\":{ratio:.4},\
+             \"state_bytes\":{},\"dense_state_bytes\":{}}}\n",
+            compact.state_bytes(),
+            2 * n * 4
+        ),
+    )?;
+    println!("wrote {out}");
     Ok(())
 }

@@ -257,6 +257,19 @@ pub fn breakdown(arch: &ArchSpec, policy: MemPolicy) -> MemBreakdown {
     MemBreakdown { model, gradients, optimizer, others }
 }
 
+/// Active-region element count implied by an AdamW-family `optimizer`
+/// entry of a [`breakdown`] (m + v per element, [`BYTES_PER_EL`] each).
+///
+/// This is the bridge for cross-checking the analytic model against the
+/// *live* residency the native stack now reports: the compact
+/// [`crate::optim::MaskedAdamW`] holds f32 m + v for exactly the active
+/// region, so its `state_bytes()` must equal `8 ×` this count for the
+/// matching mask (bf16 analytic model vs f32 native state — element
+/// counts agree, byte widths differ by the dtype).
+pub fn adamw_state_elems(optimizer_bytes: usize) -> usize {
+    optimizer_bytes / (2 * BYTES_PER_EL)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -339,6 +352,65 @@ mod tests {
         let p = arch.total_params();
         // 124M family (weights only, tied head): 124M ± 5%
         assert!((p as f64 - 1.24e8).abs() < 6.2e6, "params {p}");
+    }
+
+    #[test]
+    fn analytic_residency_matches_live_state_bytes() {
+        // The paper's residency model and the compact optimizer must
+        // agree on *element counts*: build the LISA mask the analytic
+        // Lisa(γ) policy describes, drive the native AdamW through it,
+        // and compare its live state_bytes() to the breakdown.
+        use crate::coordinator::{Mask, MaskSet};
+        use crate::optim::{MaskedAdamW, Optimizer};
+        use crate::util::json::Json;
+        use std::path::Path;
+
+        let j = Json::parse(
+            r#"{
+ "name": "toy", "kind": "mlp", "block": 4,
+ "total_len": 20, "padded_len": 24,
+ "params": [
+  {"name": "in_w", "shape": [4], "layer": "embed", "offset": 0, "len": 4},
+  {"name": "block_0.w", "shape": [4], "layer": "block_0", "offset": 4, "len": 4},
+  {"name": "block_1.w", "shape": [4], "layer": "block_1", "offset": 8, "len": 4},
+  {"name": "block_2.w", "shape": [4], "layer": "block_2", "offset": 12, "len": 4},
+  {"name": "out_w", "shape": [4], "layer": "head", "offset": 16, "len": 4}
+ ],
+ "data": {"batch": 2},
+ "artifacts": {"train": "t", "eval": "e", "init": "i",
+               "update": {"adamw": "a", "sgdm": "s"}}
+}"#,
+        )
+        .unwrap();
+        let man =
+            crate::manifest::Manifest::from_json(&j, Path::new("/tmp"))
+                .unwrap();
+        let arch = ArchSpec::from_manifest(&man);
+        for gamma in [1usize, 2, 3] {
+            let b = breakdown(&arch, MemPolicy::Lisa(gamma));
+            let elems = adamw_state_elems(b.optimizer);
+            // the mask the policy describes: embed+head + γ middles
+            let active: Vec<String> = (0..gamma)
+                .map(|i| format!("block_{i}"))
+                .collect();
+            let mask = MaskSet::layerwise(&man, &active, 1.0).unwrap();
+            assert_eq!(elems, mask.active_count(), "γ={gamma}");
+            let mut opt = MaskedAdamW::default_hp(man.padded_len);
+            let g = vec![0.1f32; man.padded_len];
+            let mut p = vec![0.0f32; man.padded_len];
+            opt.step(&mut p, &g, &mask, 1e-3);
+            assert_eq!(opt.state_bytes(), elems * 8, "γ={gamma}");
+        }
+        // Full policy: every real parameter resident.
+        let full = breakdown(&arch, MemPolicy::Full);
+        assert_eq!(adamw_state_elems(full.optimizer), man.total_len);
+        let mut opt = MaskedAdamW::default_hp(man.padded_len);
+        let mut full_mask = Mask::zeros(man.padded_len);
+        full_mask.set_segment(0, man.total_len, 1.0).unwrap();
+        let g = vec![0.1f32; man.padded_len];
+        let mut p = vec![0.0f32; man.padded_len];
+        opt.step(&mut p, &g, &full_mask, 1e-3);
+        assert_eq!(opt.state_bytes(), man.total_len * 8);
     }
 
     #[test]

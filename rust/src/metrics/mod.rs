@@ -151,6 +151,24 @@ fn escape(s: &str) -> String {
     s.replace('\\', "\\\\").replace('"', "\\\"")
 }
 
+/// Write a residency series — `(step, keep_ratio, state_bytes)`
+/// samples the trainer collects at period boundaries from the mask's
+/// segment-run view (see `TrainOutcome::residency_series`) — as a CSV
+/// with the standard header-row format.
+pub fn write_residency_csv<P: AsRef<Path>>(
+    path: P,
+    series: &[(usize, f64, usize)],
+) -> Result<()> {
+    let mut w = CsvWriter::create(
+        path,
+        &["step", "keep_ratio", "state_bytes"],
+    )?;
+    for &(step, keep, bytes) in series {
+        w.row(&[step as f64, keep, bytes as f64])?;
+    }
+    w.finish()
+}
+
 /// Wall-clock timer with named laps.
 pub struct Timer {
     start: Instant,
@@ -323,6 +341,24 @@ mod tests {
         let parsed = crate::util::json::Json::parse(text.trim()).unwrap();
         assert_eq!(parsed.at("kind").as_str(), Some("step"));
         assert_eq!(parsed.at("loss").as_f64(), Some(1.25));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn residency_csv_round_trips() {
+        let dir = std::env::temp_dir().join("omgd_test_residency");
+        let path = dir.join("r.csv");
+        write_residency_csv(
+            &path,
+            &[(0, 1.0, 160), (10, 0.25, 40), (20, 0.25, 40)],
+        )
+        .unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(
+            text,
+            "step,keep_ratio,state_bytes\n0,1,160\n10,0.25,40\n\
+             20,0.25,40\n"
+        );
         std::fs::remove_dir_all(&dir).ok();
     }
 

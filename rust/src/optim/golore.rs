@@ -14,10 +14,10 @@
 //! block of G (computed by power iteration), refreshed on the same
 //! schedule — the dominated-subspace scheme whose bias §1(i) discusses.
 
-use crate::coordinator::Mask;
+use crate::coordinator::{Mask, MaskRuns};
 use crate::linalg::{stiefel, Mat};
 use crate::manifest::ParamInfo;
-use crate::optim::Optimizer;
+use crate::optim::{dense_adamw_coord, Optimizer};
 use crate::rng::Rng;
 
 /// How the projection factor is chosen.
@@ -106,6 +106,9 @@ impl GoloreOptimizer {
             }
         }
         let _ = dense_len;
+        // The run-aware step merge-walks runs against these; keep them
+        // in flat-offset order regardless of manifest ordering.
+        segments.sort_unstable();
         let dense = DenseState {
             m: vec![0.0; n],
             v: vec![0.0; n],
@@ -179,18 +182,31 @@ fn top_singular_block(g: &[f32], ts: &TensorState, rank: usize,
     q
 }
 
-impl Optimizer for GoloreOptimizer {
-    fn step(&mut self, p: &mut [f32], g: &[f32], mask: &Mask, lr: f32) {
-        assert_eq!(p.len(), self.n);
+impl GoloreOptimizer {
+    /// Shared step prologue: projection refresh, step count, bias
+    /// corrections.
+    fn begin_step(&mut self, g: &[f32]) -> (f32, f32) {
         if self.t % self.refresh as u64 == 0 {
             self.refresh_projection(g);
         }
         self.t += 1;
-        let bc1 = 1.0 - self.beta1.powi(self.t as i32);
-        let bc2 = 1.0 - self.beta2.powi(self.t as i32);
-        let (b1, b2) = (self.beta1, self.beta2);
+        (
+            1.0 - self.beta1.powi(self.t as i32),
+            1.0 - self.beta2.powi(self.t as i32),
+        )
+    }
 
-        // Projected tensors.
+    /// The mask-independent part: project each large tensor's gradient,
+    /// run Adam in the projected space, back-project the update.
+    fn step_projected(
+        &mut self,
+        p: &mut [f32],
+        g: &[f32],
+        lr: f32,
+        bc1: f32,
+        bc2: f32,
+    ) {
+        let (b1, b2) = (self.beta1, self.beta2);
         for ts in &mut self.tensors {
             let (rows, cols) = (ts.rows, ts.cols);
             let gm = Mat {
@@ -232,24 +248,65 @@ impl Optimizer for GoloreOptimizer {
                     * (upd.data[i] as f32 + self.weight_decay * *pi);
             }
         }
+    }
+}
 
-        // Dense fallback tensors (biases / norms) — plain masked AdamW.
+impl Optimizer for GoloreOptimizer {
+    fn step(&mut self, p: &mut [f32], g: &[f32], mask: &Mask, lr: f32) {
+        assert_eq!(p.len(), self.n);
+        let (bc1, bc2) = self.begin_step(g);
+        self.step_projected(p, g, lr, bc1, bc2);
+        // Dense fallback tensors (biases / norms) — plain masked AdamW
+        // over the dense mask vector.
+        let hp = (self.beta1, self.beta2, bc1, bc2, self.eps,
+                  self.weight_decay);
         for &(off, len) in &self.dense.segments {
             for i in off..off + len {
-                let mk = mask.values[i];
+                let mk = mask.values()[i];
                 if mk == 0.0 {
                     continue;
                 }
-                let gm = mk * g[i];
-                let m = b1 * self.dense.m[i] + (1.0 - b1) * gm;
-                let v = b2 * self.dense.v[i] + (1.0 - b2) * gm * gm;
-                self.dense.m[i] = m;
-                self.dense.v[i] = v;
-                let mhat = m / bc1;
-                let vhat = v / bc2;
-                p[i] -= lr
-                    * (mhat / (vhat.sqrt() + self.eps)
-                        + self.weight_decay * p[i]);
+                dense_adamw_coord(
+                    &mut self.dense.m, &mut self.dense.v, p, g, i, mk,
+                    hp, lr,
+                );
+            }
+        }
+    }
+
+    fn step_runs(
+        &mut self,
+        p: &mut [f32],
+        g: &[f32],
+        runs: &MaskRuns,
+        lr: f32,
+    ) {
+        assert_eq!(p.len(), self.n);
+        assert_eq!(runs.n(), self.n);
+        let (bc1, bc2) = self.begin_step(g);
+        self.step_projected(p, g, lr, bc1, bc2);
+        // Dense fallback tensors: merge-walk the mask runs against the
+        // (sorted) fallback segments — O(active ∩ fallback), no dense
+        // mask scan.
+        let hp = (self.beta1, self.beta2, bc1, bc2, self.eps,
+                  self.weight_decay);
+        let rs = runs.runs();
+        let (mut i, mut j) = (0usize, 0usize);
+        while i < rs.len() && j < self.dense.segments.len() {
+            let r = rs[i];
+            let (off, len) = self.dense.segments[j];
+            let lo = r.offset.max(off);
+            let hi = r.end().min(off + len);
+            for idx in lo..hi {
+                dense_adamw_coord(
+                    &mut self.dense.m, &mut self.dense.v, p, g, idx,
+                    r.scale, hp, lr,
+                );
+            }
+            if r.end() <= off + len {
+                i += 1;
+            } else {
+                j += 1;
             }
         }
     }

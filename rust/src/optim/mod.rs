@@ -1,29 +1,70 @@
 //! Native optimizers over the flat parameter vector.
 //!
-//! [`MaskedAdamW`] and [`MaskedSgdm`] mirror the L1 Pallas kernels'
-//! semantics *exactly* (same hard-freeze masking, same bias-correction
-//! convention) — the integration tests cross-check native vs HLO outputs
-//! elementwise. They serve the baselines and any path where dispatching
-//! to PJRT would dominate (e.g. the 10⁶-step §5.1 runs).
+//! Every optimizer implements two step entry points:
+//!
+//! * [`Optimizer::step_runs`] — the hot path. It walks the mask's
+//!   segment-run view ([`MaskRuns`]) and touches **only active
+//!   coordinates**: O(active) time per step instead of O(d).
+//! * [`Optimizer::step`] — the dense-mask bridge (reads
+//!   [`Mask::values`]), kept for callers holding a dense mask and as
+//!   the independently-coded dense arm the property tests compare
+//!   against.
+//!
+//! [`MaskedAdamW`] and [`MaskedSgdm`] additionally store their moment
+//! state **only for the active region**: a compact index map (the
+//! support runs; compact slot = prefix position within them) is rebuilt
+//! at period boundaries with explicit carry/reset semantics —
+//! coordinates active across the refresh carry their moments,
+//! re-activated coordinates restart from zero, deactivated coordinates'
+//! state is freed. `state_bytes()` therefore reports **true residency**
+//! (≈ `keep_ratio · d · 8` bytes for AdamW), matching the paper's
+//! analytic model in [`crate::memory`] instead of silently holding
+//! 2·d·4 bytes. The update arithmetic per active coordinate is
+//! bit-identical to the L1 Pallas kernels (same hard-freeze masking,
+//! same bias-correction convention); [`reference`] holds plain dense
+//! mirrors used as ground truth by `tests/proptests.rs` and the
+//! `omgd microbench` dense arm.
 //!
 //! [`galore`]/[`golore`] implement the low-rank gradient-projection
-//! baselines, and [`sift`] the top-k magnitude-masking baseline.
+//! baselines, and [`sift`] the top-k magnitude-masking baseline. Those
+//! keep dense state (their residency story is the projection /
+//! selection, not the mask) but still iterate runs in `step_runs`.
 
 pub mod galore;
 pub mod golore;
+pub mod reference;
 pub mod sift;
 
 pub use galore::GaloreOptimizer;
 pub use golore::{GoloreOptimizer, ProjectionKind};
 pub use sift::SiftOptimizer;
 
-use crate::coordinator::Mask;
+use crate::coordinator::{Mask, MaskRuns};
 
 /// Common interface: one update step on the flat parameter vector.
-/// `mask` carries both selection and scale (see kernels/ref.py); `lr` is
-/// supplied per step so schedules stay outside the optimizer.
+/// The mask (dense or as runs) carries both selection and scale (see
+/// kernels/ref.py); `lr` is supplied per step so schedules stay outside
+/// the optimizer.
 pub trait Optimizer {
+    /// Dense-mask step (bridge path; iterates all of `p`).
     fn step(&mut self, p: &mut [f32], g: &[f32], mask: &Mask, lr: f32);
+
+    /// Run-aware step: touch only the mask's active coordinates.
+    /// Must produce parameters elementwise-identical to [`step`] with
+    /// the dense view of the same mask.
+    fn step_runs(
+        &mut self,
+        p: &mut [f32],
+        g: &[f32],
+        runs: &MaskRuns,
+        lr: f32,
+    );
+
+    /// Period-boundary notification: rebuild any active-region index
+    /// map for the new support (carry still-active state, reset
+    /// re-activated coordinates, free the rest). Default: no-op for
+    /// optimizers without compact state.
+    fn on_mask_refresh(&mut self, _runs: &MaskRuns) {}
 
     /// Bytes of optimizer state currently held (memory accounting).
     fn state_bytes(&self) -> usize;
@@ -31,14 +72,170 @@ pub trait Optimizer {
     fn name(&self) -> &'static str;
 }
 
-/// AdamW with hard-freeze masking (matches `masked_adamw` kernel).
+/// Compact active-region index map shared by the stateful masked
+/// optimizers: the support runs of the current mask, in order. The
+/// compact slot of coordinate `i` inside run `k` is
+/// `prefix_len(k) + (i − offset_k)` — walking the runs in order yields
+/// consecutive slots, so stepping needs no per-coordinate lookup table
+/// (which would itself be O(d) memory).
+#[derive(Clone, Debug, Default)]
+struct ActiveMap {
+    /// Support segments (scale is irrelevant to residency).
+    segs: Vec<(usize, usize)>,
+    active: usize,
+}
+
+impl ActiveMap {
+    fn from_runs(runs: &MaskRuns) -> Self {
+        let mut segs: Vec<(usize, usize)> = Vec::new();
+        for r in runs.runs() {
+            // Merge adjacent runs that differ only in scale: the map is
+            // support-only, so `same…` comparisons stay canonical.
+            if let Some(last) = segs.last_mut() {
+                if last.0 + last.1 == r.offset {
+                    last.1 += r.len;
+                    continue;
+                }
+            }
+            segs.push((r.offset, r.len));
+        }
+        Self { active: runs.active_count(), segs }
+    }
+
+    fn matches(&self, runs: &MaskRuns) -> bool {
+        if self.active != runs.active_count() {
+            return false;
+        }
+        let mut k = 0usize;
+        let mut segs = self.segs.iter().copied();
+        let mut cur: Option<(usize, usize)> = segs.next();
+        for r in runs.runs() {
+            // Consume run [r.offset, r.end()) from the current segment.
+            match cur {
+                Some((off, len)) if off + k == r.offset
+                    && r.len <= len - k =>
+                {
+                    k += r.len;
+                    if k == len {
+                        cur = segs.next();
+                        k = 0;
+                    }
+                }
+                _ => return false,
+            }
+        }
+        cur.is_none()
+    }
+
+    /// Compact slot of the first coordinate of each segment.
+    fn prefix(&self) -> Vec<usize> {
+        let mut p = Vec::with_capacity(self.segs.len());
+        let mut acc = 0usize;
+        for &(_, len) in &self.segs {
+            p.push(acc);
+            acc += len;
+        }
+        p
+    }
+
+    /// Compact slot for flat coordinate `i`, if active (no allocation:
+    /// the prefix of segment `k` is summed directly).
+    fn slot(&self, i: usize) -> Option<usize> {
+        let k = self.segs.partition_point(|&(off, len)| off + len <= i);
+        let (off, len) = *self.segs.get(k)?;
+        if i >= off && i < off + len {
+            let base: usize =
+                self.segs[..k].iter().map(|&(_, l)| l).sum();
+            Some(base + (i - off))
+        } else {
+            None
+        }
+    }
+
+    /// Copy instructions `(new_pos, old_pos, len)` carrying state for
+    /// every coordinate active in both maps (a merge walk over the two
+    /// support lists).
+    fn carry_copies(&self, new: &ActiveMap) -> Vec<(usize, usize, usize)> {
+        let (old_pre, new_pre) = (self.prefix(), new.prefix());
+        let mut out = Vec::new();
+        let (mut i, mut j) = (0usize, 0usize);
+        while i < self.segs.len() && j < new.segs.len() {
+            let (ao, al) = self.segs[i];
+            let (bo, bl) = new.segs[j];
+            let lo = ao.max(bo);
+            let hi = (ao + al).min(bo + bl);
+            if lo < hi {
+                out.push((
+                    new_pre[j] + (lo - bo),
+                    old_pre[i] + (lo - ao),
+                    hi - lo,
+                ));
+            }
+            if ao + al <= bo + bl {
+                i += 1;
+            } else {
+                j += 1;
+            }
+        }
+        out
+    }
+}
+
+/// One dense-state masked-AdamW coordinate update, shared by every
+/// optimizer that keeps full-length moments (golore's fallback
+/// segments, SIFT) so the arithmetic can never drift between them —
+/// the bitwise runs==dense property contract depends on it.
+/// `hp = (beta1, beta2, bc1, bc2, eps, weight_decay)`.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+pub(crate) fn dense_adamw_coord(
+    m: &mut [f32],
+    v: &mut [f32],
+    p: &mut [f32],
+    g: &[f32],
+    i: usize,
+    mk: f32,
+    hp: (f32, f32, f32, f32, f32, f32),
+    lr: f32,
+) {
+    let (b1, b2, bc1, bc2, eps, wd) = hp;
+    let gm = mk * g[i];
+    let mi = b1 * m[i] + (1.0 - b1) * gm;
+    let vi = b2 * v[i] + (1.0 - b2) * gm * gm;
+    m[i] = mi;
+    v[i] = vi;
+    let mhat = mi / bc1;
+    let vhat = vi / bc2;
+    p[i] -= lr * (mhat / (vhat.sqrt() + eps) + wd * p[i]);
+}
+
+/// Remap one compact state vector onto a new support: carried where the
+/// coordinate stays active, zero where (re-)activated.
+fn remap_state(
+    old_map: &ActiveMap,
+    new_map: &ActiveMap,
+    state: &mut Vec<f32>,
+) {
+    let mut fresh = vec![0.0f32; new_map.active];
+    for (np, op, len) in old_map.carry_copies(new_map) {
+        fresh[np..np + len].copy_from_slice(&state[op..op + len]);
+    }
+    *state = fresh;
+}
+
+/// AdamW with hard-freeze masking (matches the `masked_adamw` kernel
+/// per active coordinate) and **active-region-only** moment state.
 pub struct MaskedAdamW {
     pub beta1: f32,
     pub beta2: f32,
     pub eps: f32,
     pub weight_decay: f32,
-    pub m: Vec<f32>,
-    pub v: Vec<f32>,
+    /// Flat parameter-space length (contract check only).
+    n: usize,
+    /// Compact first/second moments, one slot per active coordinate.
+    m: Vec<f32>,
+    v: Vec<f32>,
+    map: ActiveMap,
     /// Global step count (bias correction).
     pub t: u64,
 }
@@ -51,8 +248,10 @@ impl MaskedAdamW {
             beta2,
             eps,
             weight_decay,
-            m: vec![0.0; n],
-            v: vec![0.0; n],
+            n,
+            m: Vec::new(),
+            v: Vec::new(),
+            map: ActiveMap::default(),
             t: 0,
         }
     }
@@ -67,32 +266,69 @@ impl MaskedAdamW {
         let t = (self.t + 1) as i32;
         (1.0 - self.beta1.powi(t), 1.0 - self.beta2.powi(t))
     }
+
+    /// Moments held for flat coordinate `i`, or `None` when the
+    /// coordinate is outside the active region (no state resident).
+    pub fn moment_at(&self, i: usize) -> Option<(f32, f32)> {
+        self.map.slot(i).map(|s| (self.m[s], self.v[s]))
+    }
+
+    /// Number of coordinates state is resident for.
+    pub fn resident(&self) -> usize {
+        self.map.active
+    }
+
+    fn ensure_support(&mut self, runs: &MaskRuns) {
+        if self.map.matches(runs) {
+            return;
+        }
+        let new_map = ActiveMap::from_runs(runs);
+        remap_state(&self.map, &new_map, &mut self.m);
+        remap_state(&self.map, &new_map, &mut self.v);
+        self.map = new_map;
+    }
 }
 
 impl Optimizer for MaskedAdamW {
     fn step(&mut self, p: &mut [f32], g: &[f32], mask: &Mask, lr: f32) {
+        self.step_runs(p, g, mask.runs(), lr);
+    }
+
+    fn step_runs(
+        &mut self,
+        p: &mut [f32],
+        g: &[f32],
+        runs: &MaskRuns,
+        lr: f32,
+    ) {
         assert_eq!(p.len(), g.len());
-        assert_eq!(p.len(), mask.len());
+        assert_eq!(p.len(), self.n);
+        assert_eq!(runs.n(), self.n);
+        self.ensure_support(runs);
         self.t += 1;
         let bc1 = 1.0 - self.beta1.powi(self.t as i32);
         let bc2 = 1.0 - self.beta2.powi(self.t as i32);
         let (b1, b2) = (self.beta1, self.beta2);
-        for i in 0..p.len() {
-            let mk = mask.values[i];
-            if mk == 0.0 {
-                continue;
+        let mut slot = 0usize;
+        for r in runs.runs() {
+            for i in r.offset..r.end() {
+                let gm = r.scale * g[i];
+                let m = b1 * self.m[slot] + (1.0 - b1) * gm;
+                let v = b2 * self.v[slot] + (1.0 - b2) * gm * gm;
+                self.m[slot] = m;
+                self.v[slot] = v;
+                let mhat = m / bc1;
+                let vhat = v / bc2;
+                p[i] -= lr
+                    * (mhat / (vhat.sqrt() + self.eps)
+                        + self.weight_decay * p[i]);
+                slot += 1;
             }
-            let gm = mk * g[i];
-            let m = b1 * self.m[i] + (1.0 - b1) * gm;
-            let v = b2 * self.v[i] + (1.0 - b2) * gm * gm;
-            self.m[i] = m;
-            self.v[i] = v;
-            let mhat = m / bc1;
-            let vhat = v / bc2;
-            p[i] -= lr
-                * (mhat / (vhat.sqrt() + self.eps)
-                    + self.weight_decay * p[i]);
         }
+    }
+
+    fn on_mask_refresh(&mut self, runs: &MaskRuns) {
+        self.ensure_support(runs);
     }
 
     fn state_bytes(&self) -> usize {
@@ -104,37 +340,82 @@ impl Optimizer for MaskedAdamW {
     }
 }
 
-/// SGD with momentum and hard-freeze masking (matches `masked_sgdm`).
+/// SGD with momentum, hard-freeze masking (matches `masked_sgdm` per
+/// active coordinate) and active-region-only momentum state.
 pub struct MaskedSgdm {
     pub momentum: f32,
     pub weight_decay: f32,
     pub nesterov: bool,
-    pub buf: Vec<f32>,
+    n: usize,
+    buf: Vec<f32>,
+    map: ActiveMap,
 }
 
 impl MaskedSgdm {
     pub fn new(n: usize, momentum: f32, weight_decay: f32,
                nesterov: bool) -> Self {
-        Self { momentum, weight_decay, nesterov, buf: vec![0.0; n] }
+        Self {
+            momentum,
+            weight_decay,
+            nesterov,
+            n,
+            buf: Vec::new(),
+            map: ActiveMap::default(),
+        }
+    }
+
+    /// Momentum held for flat coordinate `i` (`None` = not resident).
+    pub fn momentum_at(&self, i: usize) -> Option<f32> {
+        self.map.slot(i).map(|s| self.buf[s])
+    }
+
+    /// Compact momentum buffer (test introspection).
+    pub fn buf(&self) -> &[f32] {
+        &self.buf
+    }
+
+    fn ensure_support(&mut self, runs: &MaskRuns) {
+        if self.map.matches(runs) {
+            return;
+        }
+        let new_map = ActiveMap::from_runs(runs);
+        remap_state(&self.map, &new_map, &mut self.buf);
+        self.map = new_map;
     }
 }
 
 impl Optimizer for MaskedSgdm {
     fn step(&mut self, p: &mut [f32], g: &[f32], mask: &Mask, lr: f32) {
+        self.step_runs(p, g, mask.runs(), lr);
+    }
+
+    fn step_runs(
+        &mut self,
+        p: &mut [f32],
+        g: &[f32],
+        runs: &MaskRuns,
+        lr: f32,
+    ) {
         assert_eq!(p.len(), g.len());
-        assert_eq!(p.len(), mask.len());
+        assert_eq!(p.len(), self.n);
+        assert_eq!(runs.n(), self.n);
+        self.ensure_support(runs);
         let mu = self.momentum;
-        for i in 0..p.len() {
-            let mk = mask.values[i];
-            if mk == 0.0 {
-                continue;
+        let mut slot = 0usize;
+        for r in runs.runs() {
+            for i in r.offset..r.end() {
+                let gm = r.scale * g[i] + self.weight_decay * p[i];
+                let b = mu * self.buf[slot] + gm;
+                self.buf[slot] = b;
+                let upd = if self.nesterov { gm + mu * b } else { b };
+                p[i] -= lr * upd;
+                slot += 1;
             }
-            let gm = mk * g[i] + self.weight_decay * p[i];
-            let b = mu * self.buf[i] + gm;
-            self.buf[i] = b;
-            let upd = if self.nesterov { gm + mu * b } else { b };
-            p[i] -= lr * upd;
         }
+    }
+
+    fn on_mask_refresh(&mut self, runs: &MaskRuns) {
+        self.ensure_support(runs);
     }
 
     fn state_bytes(&self) -> usize {
@@ -147,14 +428,30 @@ impl Optimizer for MaskedSgdm {
 }
 
 /// Plain SGD (no state) — the Algorithm 1 reference instantiation.
+/// `step` keeps the dense loop (the property tests compare the two
+/// paths against each other).
 pub struct MaskedSgd;
 
 impl Optimizer for MaskedSgd {
     fn step(&mut self, p: &mut [f32], g: &[f32], mask: &Mask, lr: f32) {
         for i in 0..p.len() {
-            let mk = mask.values[i];
+            let mk = mask.values()[i];
             if mk != 0.0 {
                 p[i] -= lr * mk * g[i];
+            }
+        }
+    }
+
+    fn step_runs(
+        &mut self,
+        p: &mut [f32],
+        g: &[f32],
+        runs: &MaskRuns,
+        lr: f32,
+    ) {
+        for r in runs.runs() {
+            for i in r.offset..r.end() {
+                p[i] -= lr * r.scale * g[i];
             }
         }
     }
@@ -205,22 +502,69 @@ mod tests {
         let mut opt = MaskedAdamW::default_hp(n);
         opt.step(&mut p, &g, &Mask::zeros(n), 1e-3);
         assert_eq!(p, p0);
-        assert!(opt.m.iter().all(|&x| x == 0.0));
+        // no state is resident at all for an empty support
+        assert_eq!(opt.resident(), 0);
+        assert_eq!(opt.state_bytes(), 0);
     }
 
     #[test]
-    fn adamw_frozen_coords_keep_state() {
+    fn adamw_frozen_coords_hold_no_state() {
         let n = 8;
         let mut rng = Rng::seed_from_u64(3);
         let g = randv(n, &mut rng);
         let mut p = randv(n, &mut rng);
         let mut opt = MaskedAdamW::default_hp(n);
         let mut mask = Mask::zeros(n);
-        mask.set_segment(0, 4, 2.0);
+        mask.set_segment(0, 4, 2.0).unwrap();
         opt.step(&mut p, &g, &mask, 1e-3);
-        // active half has state, frozen half does not
-        assert!(opt.m[..4].iter().all(|&x| x != 0.0));
-        assert!(opt.m[4..].iter().all(|&x| x == 0.0));
+        // active half has state; frozen half has NO resident slots
+        for i in 0..4 {
+            let (m, _) = opt.moment_at(i).expect("active coord has state");
+            assert!(m != 0.0);
+        }
+        for i in 4..8 {
+            assert!(opt.moment_at(i).is_none(), "frozen coord {i}");
+        }
+        assert_eq!(opt.resident(), 4);
+    }
+
+    #[test]
+    fn adamw_support_change_carries_and_resets() {
+        // Support A = [0,8): step twice. Support B = [4,12): coords
+        // 4..8 carry their moments, 8..12 start from zero, 0..4 are
+        // freed. Re-activating 0..4 later finds zeros again (explicit
+        // reset semantics for re-activated coordinates).
+        let n = 16;
+        let mut rng = Rng::seed_from_u64(4);
+        let g = randv(n, &mut rng);
+        let mut p = randv(n, &mut rng);
+        let mut opt = MaskedAdamW::default_hp(n);
+        let mut a = Mask::zeros(n);
+        a.set_segment(0, 8, 1.0).unwrap();
+        opt.step(&mut p, &g, &a, 1e-3);
+        opt.step(&mut p, &g, &a, 1e-3);
+        let carried: Vec<(f32, f32)> =
+            (4..8).map(|i| opt.moment_at(i).unwrap()).collect();
+        let mut b = Mask::zeros(n);
+        b.set_segment(4, 8, 1.0).unwrap();
+        opt.on_mask_refresh(b.runs());
+        assert_eq!(opt.resident(), 8);
+        for (k, i) in (4..8).enumerate() {
+            assert_eq!(opt.moment_at(i).unwrap(), carried[k],
+                       "coord {i} did not carry");
+        }
+        for i in 8..12 {
+            assert_eq!(opt.moment_at(i).unwrap(), (0.0, 0.0),
+                       "newly-active coord {i} must reset");
+        }
+        for i in 0..4 {
+            assert!(opt.moment_at(i).is_none(), "coord {i} must be freed");
+        }
+        // back to A: previously-freed coords restart from zero
+        opt.on_mask_refresh(a.runs());
+        for i in 0..4 {
+            assert_eq!(opt.moment_at(i).unwrap(), (0.0, 0.0));
+        }
     }
 
     #[test]
@@ -267,12 +611,47 @@ mod tests {
     }
 
     #[test]
-    fn state_bytes() {
-        let a = MaskedAdamW::default_hp(100);
-        assert_eq!(a.state_bytes(), 800);
-        let s = MaskedSgdm::new(100, 0.9, 0.0, false);
-        assert_eq!(s.state_bytes(), 400);
+    fn state_bytes_scale_with_the_active_region() {
+        // Acceptance criterion: at keep ratios {1.0, 0.25, 0.05} over
+        // d = 4000, AdamW residency ≈ keep·d·8 bytes (m+v, f32) and
+        // SGDM ≈ keep·d·4 — never the dense 2·d·4 / d·4.
+        let d = 4000usize;
+        for keep in [1.0f64, 0.25, 0.05] {
+            let active = (d as f64 * keep) as usize;
+            let mut mask = Mask::zeros(d);
+            mask.set_segment(0, active, 1.0).unwrap();
+            let g = vec![0.1f32; d];
+            let mut p = vec![0.0f32; d];
+            let mut a = MaskedAdamW::default_hp(d);
+            a.step(&mut p, &g, &mask, 1e-3);
+            assert_eq!(a.state_bytes(), active * 8, "adamw keep={keep}");
+            let mut s = MaskedSgdm::new(d, 0.9, 0.0, false);
+            s.step(&mut p, &g, &mask, 1e-3);
+            assert_eq!(s.state_bytes(), active * 4, "sgdm keep={keep}");
+        }
         assert_eq!(MaskedSgd.state_bytes(), 0);
+    }
+
+    #[test]
+    fn step_and_step_runs_are_one_path() {
+        // `step` bridges to `step_runs` through the mask's run view:
+        // two optimizers driven through the two entry points stay
+        // bitwise identical.
+        let n = 128;
+        let mut rng = Rng::seed_from_u64(5);
+        let g = randv(n, &mut rng);
+        let p0 = randv(n, &mut rng);
+        let mut mask = Mask::zeros(n);
+        mask.set_segment(3, 40, 2.0).unwrap();
+        mask.set_segment(70, 21, 4.0).unwrap();
+        let (mut pa, mut pb) = (p0.clone(), p0);
+        let mut oa = MaskedAdamW::default_hp(n);
+        let mut ob = MaskedAdamW::default_hp(n);
+        for _ in 0..3 {
+            oa.step(&mut pa, &g, &mask, 1e-3);
+            ob.step_runs(&mut pb, &g, mask.runs(), 1e-3);
+        }
+        assert_eq!(pa, pb);
     }
 
     #[test]
@@ -285,7 +664,7 @@ mod tests {
         let mut pa = p0.clone();
         let mut oa = MaskedAdamW::default_hp(n);
         let mut mask = Mask::zeros(n);
-        mask.set_segment(0, n, 4.0);
+        mask.set_segment(0, n, 4.0).unwrap();
         oa.step(&mut pa, &g, &mask, 1e-3);
 
         let mut pb = p0.clone();
@@ -296,5 +675,59 @@ mod tests {
         for (a, b) in pa.iter().zip(&pb) {
             assert!((a - b).abs() < 1e-7);
         }
+    }
+
+    #[test]
+    fn sgdm_support_change_carries_momentum() {
+        let n = 8;
+        let g = vec![1.0f32; n];
+        let mut p = vec![0.0f32; n];
+        let mut opt = MaskedSgdm::new(n, 0.9, 0.0, false);
+        let mut a = Mask::zeros(n);
+        a.set_segment(0, 4, 1.0).unwrap();
+        opt.step(&mut p, &g, &a, 0.1); // buf = 1 on 0..4
+        let mut b = Mask::zeros(n);
+        b.set_segment(2, 4, 1.0).unwrap();
+        opt.step(&mut p, &g, &b, 0.1);
+        // carried coords: buf = 0.9·1 + 1 = 1.9; fresh coords: buf = 1
+        assert!((opt.momentum_at(2).unwrap() - 1.9).abs() < 1e-6);
+        assert!((opt.momentum_at(3).unwrap() - 1.9).abs() < 1e-6);
+        assert!((opt.momentum_at(4).unwrap() - 1.0).abs() < 1e-6);
+        assert!(opt.momentum_at(0).is_none());
+    }
+
+    #[test]
+    fn active_map_slots_and_copies() {
+        let mut a = Mask::zeros(20);
+        a.set_segment(2, 4, 1.0).unwrap();
+        a.set_segment(10, 5, 2.0).unwrap();
+        let map = ActiveMap::from_runs(a.runs());
+        assert_eq!(map.active, 9);
+        assert_eq!(map.slot(2), Some(0));
+        assert_eq!(map.slot(5), Some(3));
+        assert_eq!(map.slot(6), None);
+        assert_eq!(map.slot(10), Some(4));
+        assert_eq!(map.slot(14), Some(8));
+        assert_eq!(map.slot(15), None);
+        let mut b = Mask::zeros(20);
+        b.set_segment(4, 8, 1.0).unwrap();
+        let nmap = ActiveMap::from_runs(b.runs());
+        // overlap: coords 4..6 (old slots 2..4 → new slots 0..2) and
+        // 10..12 (old slots 4..6 → new slots 6..8)
+        assert_eq!(map.carry_copies(&nmap), vec![(0, 2, 2), (6, 4, 2)]);
+    }
+
+    #[test]
+    fn active_map_matches_is_support_only() {
+        let mut a = Mask::zeros(10);
+        a.set_segment(0, 3, 2.0).unwrap();
+        a.set_segment(3, 3, 5.0).unwrap(); // adjacent, different scale
+        let map = ActiveMap::from_runs(a.runs());
+        let mut b = Mask::zeros(10);
+        b.set_segment(0, 6, 1.0).unwrap();
+        assert!(map.matches(b.runs()), "scale change must not rebuild");
+        let mut c = Mask::zeros(10);
+        c.set_segment(0, 5, 1.0).unwrap();
+        assert!(!map.matches(c.runs()));
     }
 }

@@ -1,0 +1,145 @@
+//! Dense reference optimizers — ground truth for the runs path.
+//!
+//! Plain O(d) loops over the dense mask vector, written independently
+//! of the compact implementations in [`super`]. They mirror the L1
+//! Pallas kernels' semantics exactly (hard-freeze masking, same
+//! bias-correction convention) and keep full-length state, which is
+//! precisely what the compact optimizers must reproduce elementwise on
+//! the active region. Used by `tests/proptests.rs` (bitwise
+//! runs-vs-dense property) and as the dense arm of `omgd microbench`.
+
+/// Dense AdamW with hard-freeze masking and full-length `m`/`v`.
+pub struct DenseAdamW {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub t: u64,
+}
+
+impl DenseAdamW {
+    pub fn new(n: usize, beta1: f32, beta2: f32, eps: f32,
+               weight_decay: f32) -> Self {
+        Self {
+            beta1,
+            beta2,
+            eps,
+            weight_decay,
+            m: vec![0.0; n],
+            v: vec![0.0; n],
+            t: 0,
+        }
+    }
+
+    pub fn default_hp(n: usize) -> Self {
+        Self::new(n, 0.9, 0.999, 1e-8, 0.01)
+    }
+
+    /// One dense masked step: `mask` is the dense scale vector.
+    pub fn step(&mut self, p: &mut [f32], g: &[f32], mask: &[f32],
+                lr: f32) {
+        assert_eq!(p.len(), g.len());
+        assert_eq!(p.len(), mask.len());
+        self.t += 1;
+        let bc1 = 1.0 - self.beta1.powi(self.t as i32);
+        let bc2 = 1.0 - self.beta2.powi(self.t as i32);
+        let (b1, b2) = (self.beta1, self.beta2);
+        for i in 0..p.len() {
+            let mk = mask[i];
+            if mk == 0.0 {
+                continue;
+            }
+            let gm = mk * g[i];
+            let m = b1 * self.m[i] + (1.0 - b1) * gm;
+            let v = b2 * self.v[i] + (1.0 - b2) * gm * gm;
+            self.m[i] = m;
+            self.v[i] = v;
+            let mhat = m / bc1;
+            let vhat = v / bc2;
+            p[i] -= lr
+                * (mhat / (vhat.sqrt() + self.eps)
+                    + self.weight_decay * p[i]);
+        }
+    }
+}
+
+/// Dense SGDM with hard-freeze masking and a full-length buffer.
+pub struct DenseSgdm {
+    pub momentum: f32,
+    pub weight_decay: f32,
+    pub nesterov: bool,
+    pub buf: Vec<f32>,
+}
+
+impl DenseSgdm {
+    pub fn new(n: usize, momentum: f32, weight_decay: f32,
+               nesterov: bool) -> Self {
+        Self { momentum, weight_decay, nesterov, buf: vec![0.0; n] }
+    }
+
+    pub fn step(&mut self, p: &mut [f32], g: &[f32], mask: &[f32],
+                lr: f32) {
+        assert_eq!(p.len(), g.len());
+        assert_eq!(p.len(), mask.len());
+        let mu = self.momentum;
+        for i in 0..p.len() {
+            let mk = mask[i];
+            if mk == 0.0 {
+                continue;
+            }
+            let gm = mk * g[i] + self.weight_decay * p[i];
+            let b = mu * self.buf[i] + gm;
+            self.buf[i] = b;
+            let upd = if self.nesterov { gm + mu * b } else { b };
+            p[i] -= lr * upd;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Mask;
+    use crate::optim::{MaskedAdamW, MaskedSgdm, Optimizer};
+    use crate::rng::Rng;
+
+    #[test]
+    fn compact_adamw_matches_dense_reference_bitwise() {
+        let n = 96;
+        let mut rng = Rng::seed_from_u64(10);
+        let p0: Vec<f32> = (0..n).map(|_| rng.normal32()).collect();
+        let mut mask = Mask::zeros(n);
+        mask.set_segment(5, 30, 2.0).unwrap();
+        mask.set_segment(60, 17, 0.5).unwrap();
+        let (mut pd, mut pc) = (p0.clone(), p0);
+        let mut dense = DenseAdamW::default_hp(n);
+        let mut compact = MaskedAdamW::default_hp(n);
+        for _ in 0..4 {
+            let g: Vec<f32> = (0..n).map(|_| rng.normal32()).collect();
+            dense.step(&mut pd, &g, mask.values(), 1e-3);
+            compact.step_runs(&mut pc, &g, mask.runs(), 1e-3);
+        }
+        assert!(pd.iter().zip(&pc).all(|(a, b)| a.to_bits() == b.to_bits()));
+    }
+
+    #[test]
+    fn compact_sgdm_matches_dense_reference_bitwise() {
+        let n = 64;
+        let mut rng = Rng::seed_from_u64(11);
+        let p0: Vec<f32> = (0..n).map(|_| rng.normal32()).collect();
+        let mut mask = Mask::zeros(n);
+        mask.set_segment(0, 20, 3.0).unwrap();
+        mask.set_segment(40, 10, 1.0).unwrap();
+        let (mut pd, mut pc) = (p0.clone(), p0);
+        let mut dense = DenseSgdm::new(n, 0.9, 1e-4, true);
+        let mut compact = MaskedSgdm::new(n, 0.9, 1e-4, true);
+        for _ in 0..4 {
+            let g: Vec<f32> = (0..n).map(|_| rng.normal32()).collect();
+            dense.step(&mut pd, &g, mask.values(), 0.05);
+            compact.step_runs(&mut pc, &g, mask.runs(), 0.05);
+        }
+        assert!(pd.iter().zip(&pc).all(|(a, b)| a.to_bits() == b.to_bits()));
+    }
+}

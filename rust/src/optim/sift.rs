@@ -1,18 +1,34 @@
 //! SIFT baseline (Song et al., 2023): gradient-magnitude-based sparse
 //! fine-tuning. Each period the optimizer re-selects the top-k fraction
-//! of coordinates by |g| and only updates (and keeps Adam state for)
-//! those — "sparse is enough" component sparsification.
+//! of coordinates by |g| and only updates those — "sparse is enough"
+//! component sparsification.
+//!
+//! State stays dense (full-length `m`/`v`): the selection churns by
+//! gradient magnitude every refresh and SIFT's semantics carry moments
+//! across re-selections, so compacting would change the method. The
+//! *iteration* is still run-aware: the selection is held as a
+//! [`MaskRuns`] view and [`Optimizer::step_runs`] walks the caller's
+//! runs intersected with it — O(active ∩ selected) per step.
+//! `state_bytes()` reports the paper's residency model (moments for
+//! selected coordinates only).
 
-use crate::coordinator::Mask;
-use crate::optim::{MaskedAdamW, Optimizer};
+use crate::coordinator::{Mask, MaskRuns};
+use crate::optim::{dense_adamw_coord, Optimizer};
 
 pub struct SiftOptimizer {
-    inner: MaskedAdamW,
+    beta1: f32,
+    beta2: f32,
+    eps: f32,
+    weight_decay: f32,
+    /// Dense moments (carried across re-selections).
+    m: Vec<f32>,
+    v: Vec<f32>,
     /// Fraction of coordinates kept.
     pub topk: f64,
     /// Steps between re-selections.
     pub refresh: usize,
-    /// Current selection mask (1.0 on kept coords).
+    /// Current selection (scale 1.0 on kept coords; runs view drives
+    /// the intersection in `step_runs`).
     sel: Mask,
     t: u64,
     /// Only the first `total` coords participate (padding excluded).
@@ -23,7 +39,12 @@ impl SiftOptimizer {
     pub fn new(n: usize, total: usize, topk: f64, refresh: usize) -> Self {
         assert!(topk > 0.0 && topk <= 1.0);
         Self {
-            inner: MaskedAdamW::default_hp(n),
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            weight_decay: 0.01,
+            m: vec![0.0; n],
+            v: vec![0.0; n],
             topk,
             refresh: refresh.max(1),
             sel: Mask::zeros(n),
@@ -40,32 +61,74 @@ impl SiftOptimizer {
         idx.select_nth_unstable_by(kk - 1, |&a, &b| {
             g[b].abs().partial_cmp(&g[a].abs()).unwrap()
         });
-        self.sel = Mask::zeros(self.sel.len());
+        let mut dense = vec![0.0f32; self.sel.len()];
         for &i in &idx[..kk] {
-            self.sel.values[i] = 1.0;
+            dense[i] = 1.0;
         }
+        self.sel = Mask::from_dense(dense);
     }
 
     pub fn selected(&self) -> usize {
         self.sel.active_count()
     }
-}
 
-impl Optimizer for SiftOptimizer {
-    fn step(&mut self, p: &mut [f32], g: &[f32], mask: &Mask, lr: f32) {
+    /// Shared prologue: re-selection cadence, step count, corrections.
+    fn begin_step(&mut self, g: &[f32]) -> (f32, f32) {
         if self.t % self.refresh as u64 == 0 {
             self.reselect(g);
         }
         self.t += 1;
-        // Intersect the caller's mask with the top-k selection, keeping
-        // the caller's scale.
-        let mut eff = mask.clone();
-        for (e, &s) in eff.values.iter_mut().zip(&self.sel.values) {
-            if s == 0.0 {
-                *e = 0.0;
+        (
+            1.0 - self.beta1.powi(self.t as i32),
+            1.0 - self.beta2.powi(self.t as i32),
+        )
+    }
+
+    /// Hyper-parameter tuple for [`dense_adamw_coord`] — the one
+    /// shared dense masked-AdamW coordinate update (see optim/mod.rs),
+    /// so SIFT's arithmetic can never drift from golore's fallback or
+    /// the property-test contract.
+    fn hp(&self, bc1: f32, bc2: f32) -> (f32, f32, f32, f32, f32, f32) {
+        (self.beta1, self.beta2, bc1, bc2, self.eps, self.weight_decay)
+    }
+}
+
+impl Optimizer for SiftOptimizer {
+    fn step(&mut self, p: &mut [f32], g: &[f32], mask: &Mask, lr: f32) {
+        assert_eq!(p.len(), g.len());
+        assert_eq!(p.len(), mask.len());
+        let (bc1, bc2) = self.begin_step(g);
+        // Dense walk over the caller's mask intersected with the
+        // selection, keeping the caller's scale.
+        let hp = self.hp(bc1, bc2);
+        for i in 0..p.len() {
+            let mk = mask.values()[i];
+            if mk == 0.0 || self.sel.values()[i] == 0.0 {
+                continue;
+            }
+            dense_adamw_coord(&mut self.m, &mut self.v, p, g, i, mk,
+                              hp, lr);
+        }
+    }
+
+    fn step_runs(
+        &mut self,
+        p: &mut [f32],
+        g: &[f32],
+        runs: &MaskRuns,
+        lr: f32,
+    ) {
+        assert_eq!(p.len(), g.len());
+        assert_eq!(runs.n(), p.len());
+        let (bc1, bc2) = self.begin_step(g);
+        let hp = self.hp(bc1, bc2);
+        let eff = runs.intersect_keep_scale(self.sel.runs());
+        for r in eff.runs() {
+            for i in r.offset..r.end() {
+                dense_adamw_coord(&mut self.m, &mut self.v, p, g, i,
+                                  r.scale, hp, lr);
             }
         }
-        self.inner.step(p, g, &eff, lr);
     }
 
     fn state_bytes(&self) -> usize {
@@ -126,7 +189,7 @@ mod tests {
         let mut p = vec![0.0f32; n];
         let g = vec![1.0f32; n];
         let mut outer = Mask::zeros(n);
-        outer.set_segment(0, 8, 1.0);
+        outer.set_segment(0, 8, 1.0).unwrap();
         opt.step(&mut p, &g, &outer, 0.1);
         assert!(p[..8].iter().all(|&x| x != 0.0));
         assert!(p[8..].iter().all(|&x| x == 0.0));
@@ -153,5 +216,48 @@ mod tests {
         let mut p = vec![0.0f32; n];
         opt.step(&mut p, &g, &Mask::ones(n), 0.01);
         assert_eq!(opt.state_bytes(), 100 * 8);
+    }
+
+    #[test]
+    fn step_runs_matches_dense_step_bitwise() {
+        let n = 200;
+        let mut rng = Rng::seed_from_u64(1);
+        let p0: Vec<f32> = (0..n).map(|_| rng.normal32()).collect();
+        let mut mask = Mask::zeros(n);
+        mask.set_segment(10, 90, 2.0).unwrap();
+        mask.set_segment(120, 60, 1.0).unwrap();
+        let (mut pd, mut pr) = (p0.clone(), p0);
+        let mut od = SiftOptimizer::new(n, n, 0.2, 2);
+        let mut or = SiftOptimizer::new(n, n, 0.2, 2);
+        for _ in 0..5 {
+            let g: Vec<f32> = (0..n).map(|_| rng.normal32()).collect();
+            od.step(&mut pd, &g, &mask, 0.01);
+            or.step_runs(&mut pr, &g, mask.runs(), 0.01);
+        }
+        assert!(
+            pd.iter().zip(&pr).all(|(a, b)| a.to_bits() == b.to_bits())
+        );
+        assert_eq!(od.selected(), or.selected());
+    }
+
+    #[test]
+    fn moments_carry_across_reselection() {
+        // SIFT keeps dense state: a coordinate that leaves and
+        // re-enters the selection resumes from its old moments (unlike
+        // the compact masked optimizers' reset semantics).
+        let n = 8;
+        let mut opt = SiftOptimizer::new(n, n, 0.25, 1);
+        let mut p = vec![0.0f32; n];
+        let mut g1 = vec![0.0f32; n];
+        g1[0] = 1.0;
+        g1[1] = 1.0;
+        opt.step(&mut p, &g1, &Mask::ones(n), 0.0); // lr 0: state only
+        let m0 = opt.m[0];
+        assert!(m0 != 0.0);
+        let mut g2 = vec![0.0f32; n];
+        g2[6] = 1.0;
+        g2[7] = 1.0;
+        opt.step(&mut p, &g2, &Mask::ones(n), 0.0); // coord 0 deselected
+        assert_eq!(opt.m[0], m0, "dense state must survive deselection");
     }
 }

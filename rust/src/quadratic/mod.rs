@@ -174,12 +174,19 @@ pub fn run(data: &LinRegData, form: GradForm, params: QuadParams,
             match form {
                 GradForm::Rr | GradForm::Iid => gf.clone(),
                 GradForm::RrMaskWor { .. } => {
+                    // Walk the mask's segment runs: only the active
+                    // coordinates are multiplied — frozen ones are
+                    // never touched, so the 10⁶-step runs cost
+                    // O(active) per masked gradient, not O(d).
                     let set = mask_set.as_ref().unwrap();
                     let mask = &set.masks[mask_j.unwrap()];
-                    gf.iter()
-                        .zip(&mask.values)
-                        .map(|(&x, &m)| x * m as f64)
-                        .collect()
+                    let mut g = vec![0.0f64; d];
+                    for r in mask.runs().runs() {
+                        for i in r.offset..r.end() {
+                            g[i] = gf[i] * r.scale as f64;
+                        }
+                    }
+                    g
                 }
                 GradForm::RrMaskIid { r }
                 | GradForm::IidMaskIid { r } => {

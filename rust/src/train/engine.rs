@@ -5,12 +5,21 @@
 //!
 //! * HLO backend — the fused masked-update Pallas kernel via PJRT, used
 //!   by Full / mask / LISA methods (the paper's "plug-and-play into
-//!   mainstream optimizers" path — this IS the request-path hot loop);
+//!   mainstream optimizers" path — this IS the request-path hot loop).
+//!   The kernel consumes the mask's dense bridge and keeps full-length
+//!   `m`/`v` device-shaped buffers; its **native mirror**
+//!   ([`MethodEngine::apply_native`] — tests, benches, and the pure-rust
+//!   §5.1-style long runs) walks the mask's segment-run view instead,
+//!   so a native step costs O(active), never touching frozen
+//!   coordinates.
 //! * native backend — GaLore/GoLore/SIFT baselines, whose projections
-//!   don't fit the fused elementwise kernel.
+//!   don't fit the fused elementwise kernel. Driven through
+//!   [`crate::optim::Optimizer::step_runs`]; period boundaries rebuild
+//!   their active-region index maps via `on_mask_refresh`.
 
 use crate::config::{Method, OptFamily, RunConfig};
-use crate::coordinator::{LisaScheduler, LisaVariant, Mask, MaskSet};
+use crate::coordinator::{LisaScheduler, LisaVariant, Mask, MaskRuns,
+                         MaskSet};
 use crate::manifest::Manifest;
 use crate::optim::{galore, Optimizer, SiftOptimizer};
 use crate::rng::Rng;
@@ -20,10 +29,11 @@ use anyhow::{ensure, Result};
 
 /// Which update path executes the step.
 enum Backend {
-    /// Fused HLO kernel; optimizer state lives in rust-owned flat vecs.
+    /// Fused HLO kernel; optimizer state lives in rust-owned flat vecs
+    /// (the kernel's contract is full-length buffers).
     HloAdamW { m: Vec<f32>, v: Vec<f32>, t: u64 },
     HloSgdm { buf: Vec<f32> },
-    /// Native baseline optimizer.
+    /// Native baseline optimizer (run-aware).
     Native(Box<dyn Optimizer>),
 }
 
@@ -62,7 +72,7 @@ impl MethodEngine {
             Method::Full => MaskPlan::Full,
             Method::IidMask => MaskPlan::TensorIid { r },
             Method::WorMask => {
-                let set = MaskSet::tensor_partition(man, r, rng);
+                let set = MaskSet::tensor_partition(man, r, rng)?;
                 let order = rng.permutation(set.m());
                 MaskPlan::TensorWor { r, set, order, pos: 0 }
             }
@@ -111,7 +121,7 @@ impl MethodEngine {
 
         // Mask starts full-over-real-params (padding frozen).
         let mut mask = Mask::zeros(n);
-        mask.set_segment(0, man.total_len, 1.0);
+        mask.set_segment(0, man.total_len, 1.0)?;
         Ok(Self {
             method: cfg.method,
             man: man.clone(),
@@ -123,76 +133,87 @@ impl MethodEngine {
         })
     }
 
-    /// Refresh the mask at a period boundary (K epochs / K steps).
-    pub fn on_period(&mut self, rng: &mut Rng) {
+    /// Refresh the mask at a period boundary (K epochs / K steps) and
+    /// rebuild the native backend's active-region index map for the new
+    /// support. Errors (e.g. a malformed manifest's tensor table)
+    /// surface to the caller instead of panicking a worker thread.
+    pub fn on_period(&mut self, rng: &mut Rng) -> Result<()> {
         self.periods += 1;
         let total = self.man.total_len;
         match &mut self.plan {
             MaskPlan::Full | MaskPlan::Passthrough => {}
             MaskPlan::TensorIid { r } => {
-                let mut mask = MaskSet::tensor_iid(&self.man, *r, rng);
-                clamp_to_total(&mut mask, total);
+                let mut mask = MaskSet::tensor_iid(&self.man, *r, rng)?;
+                clamp_to_total(&mut mask, total)?;
                 self.mask = mask;
             }
             MaskPlan::TensorWor { r, set, order, pos } => {
                 if *pos >= order.len() {
                     // Cycle exhausted: fresh partition + fresh order
                     // (Algorithm 1 line 4, epochwise instantiation).
-                    *set = MaskSet::tensor_partition(&self.man, *r, rng);
+                    *set = MaskSet::tensor_partition(&self.man, *r, rng)?;
                     *order = rng.permutation(set.m());
                     *pos = 0;
                 }
                 let j = order[*pos];
                 *pos += 1;
                 let mut mask = set.masks[j].clone();
-                clamp_to_total(&mut mask, total);
+                clamp_to_total(&mut mask, total)?;
                 self.mask = mask;
             }
             MaskPlan::Lisa { sched } => {
                 let act = sched.next_period(rng);
                 let mut mask =
-                    MaskSet::layerwise(&self.man, &act.layers, act.scale);
-                clamp_to_total(&mut mask, total);
+                    MaskSet::layerwise(&self.man, &act.layers, act.scale)?;
+                clamp_to_total(&mut mask, total)?;
                 self.mask = mask;
             }
         }
+        // Period boundary = the one place compact optimizer state is
+        // remapped (carry still-active, reset re-activated, free the
+        // rest). The step path then only walks the runs.
+        if let Backend::Native(opt) = &mut self.backend {
+            opt.on_mask_refresh(self.mask.runs());
+        }
+        Ok(())
     }
 
     /// Apply one optimizer step (dispatches HLO kernel or native).
     pub fn apply(&mut self, bundle: &ModelBundle, p: &mut Vec<f32>,
                  g: &[f32], lr: f32) -> Result<()> {
-        match &mut self.backend {
+        let Self { backend, mask, opt, .. } = self;
+        match backend {
             Backend::HloAdamW { m, v, t } => {
                 ensure!(bundle.update_kind == UpdateKind::AdamW,
                         "bundle update kind mismatch");
                 *t += 1;
-                let bc1 = 1.0 - (self.opt.beta1 as f32).powi(*t as i32);
-                let bc2 = 1.0 - (self.opt.beta2 as f32).powi(*t as i32);
+                let bc1 = 1.0 - (opt.beta1 as f32).powi(*t as i32);
+                let bc2 = 1.0 - (opt.beta2 as f32).powi(*t as i32);
                 let hp = [
                     lr,
-                    self.opt.beta1 as f32,
-                    self.opt.beta2 as f32,
-                    self.opt.eps as f32,
-                    self.opt.weight_decay as f32,
+                    opt.beta1 as f32,
+                    opt.beta2 as f32,
+                    opt.eps as f32,
+                    opt.weight_decay as f32,
                     bc1,
                     bc2,
                     0.0,
                 ];
-                bundle.adamw_update(p, g, &self.mask.values, m, v, &hp)
+                bundle.adamw_update(p, g, mask.values(), m, v, &hp)
             }
             Backend::HloSgdm { buf } => {
                 ensure!(bundle.update_kind == UpdateKind::Sgdm,
                         "bundle update kind mismatch");
                 let hp = [
                     lr,
-                    self.opt.momentum as f32,
-                    self.opt.weight_decay as f32,
-                    if self.opt.nesterov { 1.0 } else { 0.0 },
+                    opt.momentum as f32,
+                    opt.weight_decay as f32,
+                    if opt.nesterov { 1.0 } else { 0.0 },
                 ];
-                bundle.sgdm_update(p, g, &self.mask.values, buf, &hp)
+                bundle.sgdm_update(p, g, mask.values(), buf, &hp)
             }
-            Backend::Native(opt) => {
-                opt.step(p, g, &self.mask, lr);
+            Backend::Native(o) => {
+                o.step_runs(p, g, mask.runs(), lr);
                 Ok(())
             }
         }
@@ -200,47 +221,46 @@ impl MethodEngine {
 
     /// Apply a step with a *native* optimizer mirroring the HLO kernel —
     /// used by tests and the pure-rust fast path (no PJRT dispatch).
+    /// Walks the mask's segment runs: O(active) work, frozen
+    /// coordinates are never read.
     pub fn apply_native(&mut self, p: &mut [f32], g: &[f32], lr: f32) {
-        match &mut self.backend {
+        let Self { backend, mask, opt, .. } = self;
+        match backend {
             Backend::HloAdamW { m, v, t } => {
                 *t += 1;
-                let bc1 = 1.0 - (self.opt.beta1 as f32).powi(*t as i32);
-                let bc2 = 1.0 - (self.opt.beta2 as f32).powi(*t as i32);
-                let (b1, b2) = (self.opt.beta1 as f32, self.opt.beta2 as f32);
+                let bc1 = 1.0 - (opt.beta1 as f32).powi(*t as i32);
+                let bc2 = 1.0 - (opt.beta2 as f32).powi(*t as i32);
+                let (b1, b2) = (opt.beta1 as f32, opt.beta2 as f32);
                 let (eps, wd) =
-                    (self.opt.eps as f32, self.opt.weight_decay as f32);
-                for i in 0..p.len() {
-                    let mk = self.mask.values[i];
-                    if mk == 0.0 {
-                        continue;
+                    (opt.eps as f32, opt.weight_decay as f32);
+                for r in mask.runs().runs() {
+                    for i in r.offset..r.end() {
+                        let gm = r.scale * g[i];
+                        let mi = b1 * m[i] + (1.0 - b1) * gm;
+                        let vi = b2 * v[i] + (1.0 - b2) * gm * gm;
+                        m[i] = mi;
+                        v[i] = vi;
+                        p[i] -= lr
+                            * ((mi / bc1) / ((vi / bc2).sqrt() + eps)
+                                + wd * p[i]);
                     }
-                    let gm = mk * g[i];
-                    let mi = b1 * m[i] + (1.0 - b1) * gm;
-                    let vi = b2 * v[i] + (1.0 - b2) * gm * gm;
-                    m[i] = mi;
-                    v[i] = vi;
-                    p[i] -= lr
-                        * ((mi / bc1) / ((vi / bc2).sqrt() + eps)
-                            + wd * p[i]);
                 }
             }
             Backend::HloSgdm { buf } => {
-                let mu = self.opt.momentum as f32;
-                let wd = self.opt.weight_decay as f32;
-                let nesterov = self.opt.nesterov;
-                for i in 0..p.len() {
-                    let mk = self.mask.values[i];
-                    if mk == 0.0 {
-                        continue;
+                let mu = opt.momentum as f32;
+                let wd = opt.weight_decay as f32;
+                let nesterov = opt.nesterov;
+                for r in mask.runs().runs() {
+                    for i in r.offset..r.end() {
+                        let gm = r.scale * g[i] + wd * p[i];
+                        let b = mu * buf[i] + gm;
+                        buf[i] = b;
+                        let upd = if nesterov { gm + mu * b } else { b };
+                        p[i] -= lr * upd;
                     }
-                    let gm = mk * g[i] + wd * p[i];
-                    let b = mu * buf[i] + gm;
-                    buf[i] = b;
-                    let upd = if nesterov { gm + mu * b } else { b };
-                    p[i] -= lr * upd;
                 }
             }
-            Backend::Native(opt) => opt.step(p, g, &self.mask, lr),
+            Backend::Native(o) => o.step_runs(p, g, mask.runs(), lr),
         }
     }
 
@@ -249,13 +269,21 @@ impl MethodEngine {
         &self.mask
     }
 
-    /// Current mask keep-ratio (diagnostics / memory accounting).
+    /// Current mask's segment-run view (O(1)).
+    pub fn runs(&self) -> &MaskRuns {
+        self.mask.runs()
+    }
+
+    /// Current mask keep-ratio (runs-derived, O(1)).
     pub fn keep_ratio(&self) -> f64 {
         self.mask.keep_ratio()
     }
 
     /// Bytes of optimizer state under the paper's residency model
-    /// (frozen coordinates hold no state).
+    /// (frozen coordinates hold no state). For the native backends this
+    /// is the *live* figure reported by the optimizer itself; for the
+    /// HLO arms it is runs-derived (the kernel bridge keeps full-length
+    /// buffers device-side).
     pub fn state_bytes(&self) -> usize {
         match &self.backend {
             Backend::HloAdamW { .. } => self.mask.active_count() * 8,
@@ -269,10 +297,14 @@ fn refresh_steps(cfg: &RunConfig) -> usize {
     cfg.mask.period.max(1)
 }
 
-fn clamp_to_total(mask: &mut Mask, total: usize) {
-    for v in &mut mask.values[total..] {
-        *v = 0.0;
+/// Freeze the padding tail `total..len` (defensive: the constructors
+/// already leave padding at zero).
+fn clamp_to_total(mask: &mut Mask, total: usize) -> Result<()> {
+    let n = mask.len();
+    if total < n {
+        mask.set_segment(total, n - total, 0.0)?;
     }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -318,7 +350,10 @@ mod tests {
             MethodEngine::new(&man, &cfg_with(Method::Full), &mut rng)
                 .unwrap();
         assert_eq!(eng.mask().active_count(), 20);
-        assert!(eng.mask().values[20..].iter().all(|&v| v == 0.0));
+        assert!(eng.mask().values()[20..].iter().all(|&v| v == 0.0));
+        // the run view is the single segment over the real params
+        assert_eq!(eng.runs().runs().len(), 1);
+        assert_eq!(eng.runs().active_count(), 20);
     }
 
     #[test]
@@ -330,8 +365,8 @@ mod tests {
                 .unwrap();
         let mut active_union = vec![false; 24];
         for _ in 0..3 {
-            eng.on_period(&mut rng);
-            for (i, &v) in eng.mask().values.iter().enumerate() {
+            eng.on_period(&mut rng).unwrap();
+            for (i, &v) in eng.mask().values().iter().enumerate() {
                 if v != 0.0 {
                     active_union[i] = true;
                 }
@@ -339,7 +374,7 @@ mod tests {
             // exactly embed + head + 1 middle layer active
             assert_eq!(eng.mask().active_count(), 12);
             // middle scale = N_L/γ = 3
-            let mid_scales: Vec<f32> = eng.mask().values[4..16]
+            let mid_scales: Vec<f32> = eng.mask().values()[4..16]
                 .iter()
                 .cloned()
                 .filter(|&v| v != 0.0)
@@ -358,8 +393,9 @@ mod tests {
             &man, &cfg_with(Method::LisaWorNoScale), &mut rng,
         )
         .unwrap();
-        eng.on_period(&mut rng);
-        assert!(eng.mask().values.iter().all(|&v| v == 0.0 || v == 1.0));
+        eng.on_period(&mut rng).unwrap();
+        assert!(eng.mask().values().iter()
+            .all(|&v| v == 0.0 || v == 1.0));
     }
 
     #[test]
@@ -372,8 +408,8 @@ mod tests {
         let mut sum = vec![0.0f32; 24];
         for _ in 0..2 {
             // one cycle = M = 2 periods
-            eng.on_period(&mut rng);
-            for (s, &v) in sum.iter_mut().zip(&eng.mask().values) {
+            eng.on_period(&mut rng).unwrap();
+            for (s, &v) in sum.iter_mut().zip(eng.mask().values()) {
                 *s += v;
             }
         }
@@ -392,10 +428,10 @@ mod tests {
                 .unwrap();
         let mut distinct = std::collections::HashSet::new();
         for _ in 0..12 {
-            eng.on_period(&mut rng);
+            eng.on_period(&mut rng).unwrap();
             distinct.insert(
                 eng.mask()
-                    .values
+                    .values()
                     .iter()
                     .map(|&v| v != 0.0)
                     .collect::<Vec<bool>>(),
@@ -413,7 +449,7 @@ mod tests {
             let mut eng =
                 MethodEngine::new(&man, &cfg_with(method), &mut rng)
                     .unwrap();
-            eng.on_period(&mut rng);
+            eng.on_period(&mut rng).unwrap();
             let mut p = vec![0.5f32; 24];
             let g = vec![0.1f32; 24];
             eng.apply_native(&mut p, &g, 0.01);
@@ -430,11 +466,38 @@ mod tests {
         let mut full =
             MethodEngine::new(&man, &cfg_with(Method::Full), &mut rng)
                 .unwrap();
-        full.on_period(&mut rng);
+        full.on_period(&mut rng).unwrap();
         let mut lisa =
             MethodEngine::new(&man, &cfg_with(Method::LisaWor), &mut rng)
                 .unwrap();
-        lisa.on_period(&mut rng);
+        lisa.on_period(&mut rng).unwrap();
         assert!(lisa.state_bytes() < full.state_bytes());
+    }
+
+    #[test]
+    fn native_mirror_skips_frozen_runs_but_matches_dense_math() {
+        // The run-walking HLO mirror must equal the dense reference on
+        // a LISA-shaped mask, and leave frozen coords bit-identical.
+        let man = toy_manifest();
+        let mut rng = Rng::seed_from_u64(7);
+        let mut eng =
+            MethodEngine::new(&man, &cfg_with(Method::LisaWor), &mut rng)
+                .unwrap();
+        eng.on_period(&mut rng).unwrap();
+        let n = 24;
+        let p0: Vec<f32> = (0..n).map(|_| rng.normal32()).collect();
+        let g: Vec<f32> = (0..n).map(|_| rng.normal32()).collect();
+        let mut p = p0.clone();
+        eng.apply_native(&mut p, &g, 1e-3);
+        let mut pd = p0.clone();
+        let mut dense =
+            crate::optim::reference::DenseAdamW::default_hp(n);
+        dense.step(&mut pd, &g, eng.mask().values(), 1e-3);
+        for i in 0..n {
+            assert_eq!(p[i].to_bits(), pd[i].to_bits(), "coord {i}");
+            if eng.mask().value(i) == 0.0 {
+                assert_eq!(p[i].to_bits(), p0[i].to_bits());
+            }
+        }
     }
 }

@@ -38,6 +38,11 @@ pub struct TrainOutcome {
     pub steps_per_sec: f64,
     /// Final flat parameter vector (checkpointing / further eval).
     pub final_params: Vec<f32>,
+    /// Residency diagnostics sampled at every period boundary:
+    /// `(step, keep_ratio, optimizer state bytes)`, both derived from
+    /// the mask's segment-run view in O(1) — a metrics tick never
+    /// rescans the parameter space.
+    pub residency_series: Vec<(usize, f64, usize)>,
 }
 
 impl TrainOutcome {
@@ -77,7 +82,9 @@ pub fn train_classifier(
     let timer = Timer::start();
     let mut epoch = 0usize;
     let mut epochs_since_period = 0usize;
-    engine.on_period(&mut rng); // initial mask
+    engine.on_period(&mut rng)?; // initial mask
+    out.residency_series.push((0, engine.keep_ratio(),
+                               engine.state_bytes()));
 
     for step in 0..cfg.steps {
         // Epoch bookkeeping: an epoch is ⌈N/B⌉ batches.
@@ -87,7 +94,9 @@ pub fn train_classifier(
             epochs_since_period += 1;
             if epochs_since_period >= cfg.mask.period {
                 epochs_since_period = 0;
-                engine.on_period(&mut rng);
+                engine.on_period(&mut rng)?;
+                out.residency_series.push((step, engine.keep_ratio(),
+                                           engine.state_bytes()));
             }
         }
         let idx = sampler.next_batch(batch, &mut rng);
@@ -159,11 +168,15 @@ pub fn train_lm(
 
     let mut out = TrainOutcome::default();
     let timer = Timer::start();
-    engine.on_period(&mut rng);
+    engine.on_period(&mut rng)?;
+    out.residency_series.push((0, engine.keep_ratio(),
+                               engine.state_bytes()));
 
     for step in 0..cfg.steps {
         if step > 0 && step % cfg.mask.period == 0 {
-            engine.on_period(&mut rng);
+            engine.on_period(&mut rng)?;
+            out.residency_series.push((step, engine.keep_ratio(),
+                                       engine.state_bytes()));
         }
         let idx = sampler.next_batch(batch, &mut rng);
         let (x, y) = corpus.pack(&idx, batch);

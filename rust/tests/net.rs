@@ -632,3 +632,116 @@ fn control_endpoints_and_error_shapes() {
     assert_eq!(stats.jobs.done, 1);
     assert_eq!(stats.refused, 0);
 }
+
+/// Satellite (PR 5): `Transfer-Encoding: chunked` request bodies on
+/// `POST /jobs` — a submitter can stream a session without knowing its
+/// total size, the connection stays framed for keep-alive reuse, and
+/// non-session endpoints reject chunked bodies with a 400 shape.
+#[test]
+fn chunked_request_bodies_stream_jobs_sessions() {
+    use omgd::jobs::net::{ChunkedReader, ChunkedWriter};
+
+    let lopts = ListenOptions::default();
+    let (addr, gateway) = start_gateway(1, lopts);
+
+    let stream = TcpStream::connect(addr).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    let mut conn = BufReader::new(stream);
+
+    // Stream a 2-job session as one chunk per NDJSON line.
+    {
+        let mut w = conn.get_ref();
+        write!(
+            w,
+            "POST /jobs HTTP/1.1\r\nHost: omgd-test\r\n\
+             Transfer-Encoding: chunked\r\nConnection: keep-alive\r\n\r\n"
+        )
+        .unwrap();
+        let mut cw = ChunkedWriter::new(&mut w);
+        for seed in 0..2u64 {
+            cw.write_all(request_line(seed).as_bytes()).unwrap();
+            cw.flush().unwrap();
+        }
+        cw.finish().unwrap();
+    }
+    let mut status_line = String::new();
+    conn.read_line(&mut status_line).unwrap();
+    assert!(status_line.starts_with("HTTP/1.1 200"), "{status_line}");
+    let mut chunked_resp = false;
+    loop {
+        let mut h = String::new();
+        conn.read_line(&mut h).unwrap();
+        let h = h.trim_end().to_ascii_lowercase();
+        if h.is_empty() {
+            break;
+        }
+        if h == "transfer-encoding: chunked" {
+            chunked_resp = true;
+        }
+    }
+    assert!(chunked_resp);
+    let mut session = String::new();
+    ChunkedReader::new(&mut conn)
+        .read_to_string(&mut session)
+        .unwrap();
+    let (acks, results) = split_stream(&session);
+    assert_eq!((acks.len(), results.len()), (2, 2), "{session}");
+
+    // The socket is still framed: another round works.
+    let (status, _, body) =
+        keep_alive_round(&mut conn, "GET", "/healthz", &[], "");
+    assert_eq!(status, 200);
+    assert!(body.contains("\"ok\":true"));
+
+    // A chunked body on a non-session endpoint: 400 error shape, body
+    // drained, connection still usable.
+    {
+        let mut w = conn.get_ref();
+        write!(
+            w,
+            "POST /work/lease HTTP/1.1\r\nHost: omgd-test\r\n\
+             Transfer-Encoding: chunked\r\nConnection: keep-alive\r\n\r\n"
+        )
+        .unwrap();
+        let mut cw = ChunkedWriter::new(&mut w);
+        cw.write_all(b"{\"worker\":\"x\"}\n").unwrap();
+        cw.finish().unwrap();
+    }
+    let mut status_line = String::new();
+    conn.read_line(&mut status_line).unwrap();
+    assert!(
+        status_line.starts_with("HTTP/1.1 400"),
+        "chunked on /work/lease must 400: {status_line}"
+    );
+    let mut len = 0usize;
+    loop {
+        let mut h = String::new();
+        conn.read_line(&mut h).unwrap();
+        let h = h.trim_end().to_ascii_lowercase();
+        if h.is_empty() {
+            break;
+        }
+        if let Some(v) = h.strip_prefix("content-length:") {
+            len = v.trim().parse().unwrap();
+        }
+    }
+    let mut body = vec![0u8; len];
+    conn.read_exact(&mut body).unwrap();
+    let text = String::from_utf8_lossy(&body);
+    assert!(
+        text.contains("only supported on POST /jobs"),
+        "{text}"
+    );
+    // …and the connection survives the rejection.
+    let (status, _, _) =
+        keep_alive_round(&mut conn, "GET", "/healthz", &[], "");
+    assert_eq!(status, 200);
+    drop(conn);
+
+    let (status, _, _) = http(addr, "POST", "/shutdown", "");
+    assert_eq!(status, 200);
+    let stats = gateway.join().unwrap();
+    assert_eq!(stats.jobs.done, 2);
+}

@@ -3,10 +3,12 @@
 //! dozens of randomized cases; failures report a replayable seed.
 
 use omgd::coordinator::{DataSampler, LisaScheduler, LisaVariant, Mask,
-                        MaskSet, OmgdCycle};
+                        MaskRuns, MaskSet, OmgdCycle};
 use omgd::linalg::{stiefel, Mat};
 use omgd::manifest::{Manifest, ParamInfo};
-use omgd::optim::{MaskedAdamW, MaskedSgdm, Optimizer};
+use omgd::optim::reference::{DenseAdamW, DenseSgdm};
+use omgd::optim::{galore, MaskedAdamW, MaskedSgd, MaskedSgdm, Optimizer,
+                  SiftOptimizer};
 use omgd::prop::{check, Gen};
 
 use omgd::util::json::Json;
@@ -80,12 +82,12 @@ fn prop_coordinate_partition_always_satisfies_eq3() {
         // disjointness
         for i in 0..total {
             let owners =
-                set.masks.iter().filter(|mk| mk.values[i] != 0.0).count();
+                set.masks.iter().filter(|mk| mk.value(i) != 0.0).count();
             assert_eq!(owners, 1, "coord {i}");
         }
         // padding untouched
         for mk in &set.masks {
-            assert!(mk.values[total..].iter().all(|&v| v == 0.0));
+            assert!(mk.values()[total..].iter().all(|&v| v == 0.0));
         }
     });
 }
@@ -96,7 +98,7 @@ fn prop_tensor_partition_eq3_and_alignment() {
         let man = random_manifest(g);
         let r = *g.pick(&[0.25, 0.5, 1.0 / 3.0]);
         let mut rng = g.rng.split(2);
-        let set = MaskSet::tensor_partition(&man, r, &mut rng);
+        let set = MaskSet::tensor_partition(&man, r, &mut rng).unwrap();
         let c = set.coverage_scalar(man.total_len).expect("eq3 violated");
         assert!((c - set.m() as f32).abs() < 1e-4);
         // tensor alignment: each tensor wholly in exactly one mask
@@ -104,11 +106,11 @@ fn prop_tensor_partition_eq3_and_alignment() {
             let owners = set
                 .masks
                 .iter()
-                .filter(|mk| mk.values[p.offset] != 0.0)
+                .filter(|mk| mk.value(p.offset) != 0.0)
                 .count();
             assert_eq!(owners, 1, "{}", p.name);
             for mk in &set.masks {
-                let seg = &mk.values[p.offset..p.offset + p.len];
+                let seg = &mk.values()[p.offset..p.offset + p.len];
                 assert!(seg.iter().all(|&v| v == seg[0]),
                         "{} split across masks", p.name);
             }
@@ -186,24 +188,26 @@ fn prop_masked_adamw_only_touches_active() {
         let n = g.usize_in(4, 256);
         let p0 = g.vec_f32(n, 1.0);
         let grad = g.vec_f32(n, 1.0);
-        let mut mask = Mask::zeros(n);
-        for v in mask.values.iter_mut() {
+        let mut dense = vec![0.0f32; n];
+        for v in dense.iter_mut() {
             if g.bool() {
                 *v = *g.pick(&[1.0f32, 2.0, 4.0]);
             }
         }
+        let mask = Mask::from_dense(dense);
         let mut p = p0.clone();
         let mut opt = MaskedAdamW::default_hp(n);
         opt.step(&mut p, &grad, &mask, 1e-2);
         for i in 0..n {
-            if mask.values[i] == 0.0 {
+            if mask.value(i) == 0.0 {
                 assert_eq!(p[i], p0[i], "frozen coord {i} moved");
-                assert_eq!(opt.m[i], 0.0);
-                assert_eq!(opt.v[i], 0.0);
+                assert!(opt.moment_at(i).is_none(),
+                        "frozen coord {i} holds state");
             } else if grad[i] != 0.0 {
                 assert_ne!(p[i], p0[i], "active coord {i} frozen");
             }
         }
+        assert_eq!(opt.resident(), mask.active_count());
     });
 }
 
@@ -219,7 +223,7 @@ fn prop_masked_sgdm_momentum_norm_bounded() {
         for _ in 0..200 {
             opt.step(&mut p, &grad, &mask, 1e-4);
         }
-        assert!(opt.buf.iter().all(|&b| b <= 10.0 + 1e-3),
+        assert!(opt.buf().iter().all(|&b| b <= 10.0 + 1e-3),
                 "momentum exceeded geometric bound");
     });
 }
@@ -245,9 +249,9 @@ fn prop_layerwise_mask_respects_always_active_set() {
         let pick = g.usize_in(0, middles.len() - 1);
         let active = vec![middles[pick].clone()];
         let scale = middles.len() as f32;
-        let mask = MaskSet::layerwise(&man, &active, scale);
+        let mask = MaskSet::layerwise(&man, &active, scale).unwrap();
         for p in &man.params {
-            let seg = &mask.values[p.offset..p.offset + p.len];
+            let seg = &mask.values()[p.offset..p.offset + p.len];
             let want = if p.layer == "embed" || p.layer == "head" {
                 1.0
             } else if p.layer == active[0] {
@@ -281,7 +285,7 @@ fn prop_cycle_masked_gradient_sums_match_scaled_full() {
             let mask = &set.masks[pair.mask];
             for i in 0..d {
                 acc[i] +=
-                    (mask.values[i] * grads[pair.sample][i]) as f64;
+                    (mask.value(i) * grads[pair.sample][i]) as f64;
             }
         }
         for i in 0..d {
@@ -291,4 +295,213 @@ fn prop_cycle_masked_gradient_sums_match_scaled_full() {
                     "coord {i}: {} vs {want}", acc[i]);
         }
     });
+}
+
+// -------------------------------------------------------------------------
+// Runs-path vs dense-path equivalence (the PR-5 refactor contract)
+// -------------------------------------------------------------------------
+
+/// Random mask over `n` coords mixing segment and scattered structure,
+/// with a keep ratio drawn from the given roster.
+fn random_mask(g: &mut Gen, n: usize) -> Mask {
+    let keep = *g.pick(&[0.05f64, 0.25, 0.5, 1.0]);
+    let mut dense = vec![0.0f32; n];
+    if g.bool() {
+        // segment-structured (LISA/tensorwise shape)
+        let seg = g.usize_in(1, (n / 4).max(1));
+        let mut off = 0usize;
+        while off < n {
+            if g.rng.f64() < keep {
+                let scale = *g.pick(&[1.0f32, 2.0, 4.0]);
+                for d in dense.iter_mut().skip(off).take(seg) {
+                    *d = scale;
+                }
+            }
+            off += seg;
+        }
+    } else {
+        // scattered coordinates (coordinate-partition shape)
+        let scale = *g.pick(&[1.0f32, 2.0, 4.0]);
+        for d in dense.iter_mut() {
+            if g.rng.f64() < keep {
+                *d = scale;
+            }
+        }
+    }
+    Mask::from_dense(dense)
+}
+
+#[test]
+fn prop_adamw_step_runs_bitwise_equals_dense_reference() {
+    check("adamw runs == dense", 40, |g| {
+        let n = g.usize_in(8, 300);
+        let mask = random_mask(g, n);
+        let p0 = g.vec_f32(n, 1.0);
+        let (mut pd, mut pr) = (p0.clone(), p0);
+        let mut dense = DenseAdamW::default_hp(n);
+        let mut compact = MaskedAdamW::default_hp(n);
+        for _ in 0..3 {
+            let grad = g.vec_f32(n, 1.0);
+            dense.step(&mut pd, &grad, mask.values(), 1e-3);
+            compact.step_runs(&mut pr, &grad, mask.runs(), 1e-3);
+        }
+        for i in 0..n {
+            assert_eq!(pd[i].to_bits(), pr[i].to_bits(), "coord {i}");
+        }
+        // residency claim: exactly the active region
+        assert_eq!(compact.state_bytes(), mask.active_count() * 8);
+    });
+}
+
+#[test]
+fn prop_sgdm_step_runs_bitwise_equals_dense_reference() {
+    check("sgdm runs == dense", 40, |g| {
+        let n = g.usize_in(8, 300);
+        let mask = random_mask(g, n);
+        let nesterov = g.bool();
+        let p0 = g.vec_f32(n, 1.0);
+        let (mut pd, mut pr) = (p0.clone(), p0);
+        let mut dense = DenseSgdm::new(n, 0.9, 1e-4, nesterov);
+        let mut compact = MaskedSgdm::new(n, 0.9, 1e-4, nesterov);
+        for _ in 0..3 {
+            let grad = g.vec_f32(n, 1.0);
+            dense.step(&mut pd, &grad, mask.values(), 0.05);
+            compact.step_runs(&mut pr, &grad, mask.runs(), 0.05);
+        }
+        for i in 0..n {
+            assert_eq!(pd[i].to_bits(), pr[i].to_bits(), "coord {i}");
+        }
+        assert_eq!(compact.state_bytes(), mask.active_count() * 4);
+    });
+}
+
+#[test]
+fn prop_sgd_step_runs_bitwise_equals_dense_step() {
+    check("sgd runs == dense", 40, |g| {
+        let n = g.usize_in(8, 300);
+        let mask = random_mask(g, n);
+        let p0 = g.vec_f32(n, 1.0);
+        let grad = g.vec_f32(n, 1.0);
+        let (mut pd, mut pr) = (p0.clone(), p0);
+        MaskedSgd.step(&mut pd, &grad, &mask, 0.1);
+        MaskedSgd.step_runs(&mut pr, &grad, mask.runs(), 0.1);
+        for i in 0..n {
+            assert_eq!(pd[i].to_bits(), pr[i].to_bits(), "coord {i}");
+        }
+    });
+}
+
+#[test]
+fn prop_golore_galore_step_runs_bitwise_equals_dense_step() {
+    // Two identically-seeded optimizers, one driven dense, one via
+    // runs: projections evolve identically, dense-fallback segments
+    // must agree bitwise under any mask.
+    check("golore/galore runs == dense", 15, |g| {
+        let rows = g.usize_in(6, 12);
+        let cols = g.usize_in(6, 12);
+        let blen = g.usize_in(2, 10);
+        let n = rows * cols + blen;
+        let params = vec![
+            ParamInfo {
+                name: "w".into(),
+                shape: vec![rows, cols],
+                layer: "block_0".into(),
+                offset: 0,
+                len: rows * cols,
+            },
+            ParamInfo {
+                name: "b".into(),
+                shape: vec![blen],
+                layer: "block_0".into(),
+                offset: rows * cols,
+                len: blen,
+            },
+        ];
+        let rank = 2;
+        let mask = random_mask(g, n);
+        let p0 = g.vec_f32(n, 0.5);
+        for ctor in [galore::golore, galore::galore] {
+            let mut od = ctor(&params, n, rank, 2, 7);
+            let mut orr = ctor(&params, n, rank, 2, 7);
+            let (mut pd, mut pr) = (p0.clone(), p0.clone());
+            for _ in 0..3 {
+                let grad = g.vec_f32(n, 1.0);
+                od.step(&mut pd, &grad, &mask, 0.01);
+                orr.step_runs(&mut pr, &grad, mask.runs(), 0.01);
+            }
+            for i in 0..n {
+                assert_eq!(pd[i].to_bits(), pr[i].to_bits(),
+                           "{} coord {i}", od.name());
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_sift_step_runs_bitwise_equals_dense_step() {
+    check("sift runs == dense", 25, |g| {
+        let n = g.usize_in(16, 200);
+        let topk = *g.pick(&[0.1f64, 0.25, 1.0]);
+        let mask = random_mask(g, n);
+        let p0 = g.vec_f32(n, 1.0);
+        let (mut pd, mut pr) = (p0.clone(), p0);
+        let mut od = SiftOptimizer::new(n, n, topk, 2);
+        let mut orr = SiftOptimizer::new(n, n, topk, 2);
+        for _ in 0..4 {
+            let grad = g.vec_f32(n, 1.0);
+            od.step(&mut pd, &grad, &mask, 0.01);
+            orr.step_runs(&mut pr, &grad, mask.runs(), 0.01);
+        }
+        for i in 0..n {
+            assert_eq!(pd[i].to_bits(), pr[i].to_bits(), "coord {i}");
+        }
+        assert_eq!(od.selected(), orr.selected());
+    });
+}
+
+#[test]
+fn prop_mask_splice_equals_dense_rebuild() {
+    // The run splice behind set_segment must agree with a fresh dense
+    // scan after any overwrite sequence — the invariant the cached
+    // active count and every runs consumer lean on.
+    check("mask splice == dense rebuild", 40, |g| {
+        let n = g.usize_in(4, 120);
+        let mut mask = Mask::zeros(n);
+        for _ in 0..g.usize_in(1, 20) {
+            let off = g.usize_in(0, n - 1);
+            let len = g.usize_in(0, n - off);
+            let scale = *g.pick(&[0.0f32, 0.0, 1.0, 2.0, 4.0]);
+            mask.set_segment(off, len, scale).unwrap();
+            let rescan = MaskRuns::from_dense(mask.values());
+            assert_eq!(mask.runs().runs(), rescan.runs());
+            assert_eq!(mask.active_count(), rescan.active_count());
+        }
+    });
+}
+
+#[test]
+fn maskset_runs_coverage_matches_section_5_2_worked_example() {
+    // The §5.2 worked example in runs form: d = 6 (embed, 4 middle
+    // layers, head), M = 4, S⁽ʲ⁾ = (1, …, 4 at middle j, …, 1)ᵀ —
+    // eq. (3) verified entirely over the segment-run views.
+    let mut masks = Vec::new();
+    for j in 0..4 {
+        let mut m = Mask::zeros(6);
+        m.set_segment(0, 1, 1.0).unwrap();
+        m.set_segment(1 + j, 1, 4.0).unwrap();
+        m.set_segment(5, 1, 1.0).unwrap();
+        // always three runs: embed@1, the selected middle@4, head@1 —
+        // adjacency never merges runs of different scale
+        assert_eq!(m.runs().runs().len(), 3, "mask {j}");
+        masks.push(m);
+    }
+    let set = MaskSet { masks };
+    let c = set.coverage_scalar(6).expect("eq. (3) holds over runs");
+    assert!((c - 4.0).abs() < 1e-6, "c={c}");
+    // each mask keeps 3 of 6 coordinates — the compact state the
+    // engine would hold is half the dense footprint
+    for m in &set.masks {
+        assert_eq!(m.active_count(), 3);
+        assert!((m.keep_ratio() - 0.5).abs() < 1e-12);
+    }
 }
