@@ -1,8 +1,10 @@
 #!/usr/bin/env bash
 # CI entry point: format, lint, and test the rust crate with bench
 # runtimes scaled down so grid smoke runs finish in CI time, then a
-# distributed smoke stage that drives serve --listen + worker +
-# grid --remote end to end over loopback.
+# microbench whose per-step trajectory is enforced across runs (>2x
+# regression fails), then a distributed smoke stage that drives
+# serve --listen + worker + grid --remote end to end over loopback and
+# cross-checks the gateway's /metrics exposition against /stats.
 #
 # Usage: ./ci.sh                      # full gate
 #        OMGD_BENCH_SCALE=1 ./ci.sh   # paper-shaped runtimes
@@ -45,6 +47,10 @@ cargo test -q
 # ratio, and writes BENCH_maskruns.json at the repo root so the runs
 # path's perf trajectory is tracked across PRs.
 # ---------------------------------------------------------------------
+num_field() { # num_field FILE KEY → numeric value of "KEY":N
+  sed -n "s/.*\"$2\":\([0-9.eE+-]*\).*/\1/p" "$1" | head -n1
+}
+
 if [[ "${OMGD_CI_SKIP_BENCH:-0}" == "1" ]]; then
   echo "== mask-runs microbench: skipped (OMGD_CI_SKIP_BENCH=1)"
 else
@@ -52,6 +58,43 @@ else
   cargo build -q --release --bin omgd
   target/release/omgd microbench --keep 0.25 \
       --out ../BENCH_maskruns.json
+
+  # Bench trajectory: file this run's point under its git revision
+  # (the row itself is stamped with rev/scale/workers/unix_secs by the
+  # binary) and compare per-step runs-path time against the most
+  # recent prior point on record. A >2x regression fails the gate —
+  # that is the enforcement teeth, not just a log line.
+  REV=$(git -C .. rev-parse --short HEAD 2>/dev/null || echo unknown)
+  PREV_FILE=""
+  best_ts=0
+  for f in ../BENCH_*.json; do
+    [[ -e "$f" ]] || continue
+    [[ "$f" == ../BENCH_maskruns.json ]] && continue
+    [[ "$f" == "../BENCH_${REV}.json" ]] && continue
+    ts=$(num_field "$f" unix_secs)
+    [[ -z "$ts" ]] && continue   # pre-metadata point: not comparable
+    if (( ts > best_ts )); then best_ts=$ts; PREV_FILE="$f"; fi
+  done
+  cp ../BENCH_maskruns.json "../BENCH_${REV}.json"
+  echo "   filed bench point BENCH_${REV}.json"
+  if [[ -n "$PREV_FILE" ]]; then
+    NEW_PS=$(awk -v s="$(num_field ../BENCH_maskruns.json runs_secs)" \
+                 -v n="$(num_field ../BENCH_maskruns.json steps)" \
+                 'BEGIN { printf "%.9g", s / n }')
+    OLD_PS=$(awk -v s="$(num_field "$PREV_FILE" runs_secs)" \
+                 -v n="$(num_field "$PREV_FILE" steps)" \
+                 'BEGIN { printf "%.9g", s / n }')
+    echo "   per-step runs path: ${NEW_PS}s now vs ${OLD_PS}s" \
+         "in $(basename "$PREV_FILE")"
+    if awk -v new="$NEW_PS" -v old="$OLD_PS" \
+        'BEGIN { exit !(old > 0 && new > 2.0 * old) }'; then
+      echo "bench trajectory FAILED: per-step runs-path time" \
+           "regressed >2x vs $(basename "$PREV_FILE")" >&2
+      exit 1
+    fi
+  else
+    echo "   no prior bench point; trajectory gate arms next run"
+  fi
 fi
 
 # ---------------------------------------------------------------------
@@ -146,9 +189,46 @@ else
     exit 1
   fi
 
-  # Drain the gateway (bash /dev/tcp: no curl dependency) and let the
-  # worker notice and exit on its own.
+  # Telemetry smoke: with both grids finished and the queue quiescent,
+  # scrape the gateway (bash /dev/tcp: no curl dependency) and check
+  # the Prometheus counters agree with the /stats JSON exactly — the
+  # two surfaces must never drift apart.
   HOST="${ADDR%:*}"; PORT="${ADDR##*:}"
+  http_get() { # http_get PATH OUTFILE (body only; headers stripped)
+    exec 4<>"/dev/tcp/$HOST/$PORT"
+    printf 'GET %s HTTP/1.1\r\nHost: ci\r\nContent-Length: 0\r\nConnection: close\r\n\r\n' "$1" >&4
+    cat <&4 | sed '1,/^\r*$/d' > "$2" || true
+    exec 4>&- || true
+  }
+  http_get /metrics "$SMOKE/metrics.body"
+  http_get /stats "$SMOKE/stats.body"
+  FAMILIES=$(grep -c '^# TYPE ' "$SMOKE/metrics.body" || true)
+  if (( FAMILIES < 12 )); then
+    echo "telemetry smoke FAILED: only $FAMILIES metric families" >&2
+    cat "$SMOKE/metrics.body" >&2
+    exit 1
+  fi
+  prom() { awk -v m="$1" '$1 == m { print $2 }' "$SMOKE/metrics.body"; }
+  stat_field() {
+    sed -n "s/.*\"$1\":\([0-9]*\).*/\1/p" "$SMOKE/stats.body" | head -n1
+  }
+  for pair in \
+      "omgd_jobs_completed_total done" \
+      "omgd_cache_hits_total cached" \
+      "omgd_leases_granted_total leased"; do
+    set -- $pair
+    M=$(prom "$1"); S=$(stat_field "$2")
+    if [[ -z "$M" || -z "$S" || "$M" != "$S" ]]; then
+      echo "telemetry smoke FAILED: /metrics $1=${M:-missing} but" \
+           "/stats $2=${S:-missing}" >&2
+      cat "$SMOKE/metrics.body" "$SMOKE/stats.body" >&2
+      exit 1
+    fi
+  done
+  echo "   telemetry smoke passed ($FAMILIES metric families;" \
+       "/metrics agrees with /stats)"
+
+  # Drain the gateway and let the worker notice and exit on its own.
   exec 3<>"/dev/tcp/$HOST/$PORT"
   printf 'POST /shutdown HTTP/1.1\r\nHost: ci\r\nContent-Length: 0\r\nConnection: close\r\n\r\n' >&3
   cat <&3 > /dev/null || true

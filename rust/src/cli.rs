@@ -124,6 +124,25 @@ impl Args {
         Ok(Some(v.to_string()))
     }
 
+    /// Validated-choice flag (`--metrics off|summary|full`): absent →
+    /// `default`, present-but-unknown → an error listing the accepted
+    /// values.
+    pub fn str_choice_or(
+        &self,
+        name: &str,
+        default: &str,
+        choices: &[&str],
+    ) -> Result<String> {
+        let v = self.str_or(name, default);
+        if !choices.contains(&v.as_str()) {
+            bail!(
+                "--{name} expects one of {}, got {v:?}",
+                choices.join("|")
+            );
+        }
+        Ok(v)
+    }
+
     /// Comma-separated list flag (`--tasks CoLA,SST-2`). Empty items are
     /// dropped, whitespace around items is trimmed.
     pub fn list_or(&self, name: &str, default: &str) -> Vec<String> {
@@ -246,6 +265,26 @@ mod tests {
             positional: vec![],
         };
         assert!(b.token_opt("client").is_err(), "whitespace rejected");
+    }
+
+    #[test]
+    fn choice_flags_validate() {
+        let a = args("serve --metrics summary");
+        assert_eq!(
+            a.str_choice_or("metrics", "full", &["off", "summary", "full"])
+                .unwrap(),
+            "summary"
+        );
+        assert_eq!(
+            a.str_choice_or("absent", "full", &["off", "summary", "full"])
+                .unwrap(),
+            "full"
+        );
+        let bad = args("serve --metrics loud");
+        let err = bad
+            .str_choice_or("metrics", "full", &["off", "summary", "full"])
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("off|summary|full"));
     }
 
     #[test]

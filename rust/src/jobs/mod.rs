@@ -50,13 +50,13 @@ pub use net::{run_gateway, GatewayStats, ListenOptions};
 pub use pool::{run_pool, JobOutcome, JobResult, JobStatus};
 pub use queue::{Job, JobQueue, PopScan, PopTimeout, TryPush};
 pub use remote::{
-    run_grid_remote, run_worker, run_worker_with, WorkerOptions,
-    WorkerStats,
+    gateway_get, run_grid_remote, run_worker, run_worker_with,
+    WorkerOptions, WorkerStats,
 };
 pub use report::GridReport;
 pub use serve::{
-    JobHub, LeaseInfo, LeaseReply, RemoteDone, RemoteStats, ServeStats,
-    SessionOptions,
+    JobHub, LeaseInfo, LeaseReply, PhaseSecs, RemoteDone, RemoteStats,
+    ServeStats, SessionOptions,
 };
 pub use spec::{ExperimentKind, JobSpec};
 pub use sync::{ArtifactStore, DEFAULT_STORE_DIR};

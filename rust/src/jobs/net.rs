@@ -25,7 +25,11 @@
 //!   queueing the connection.
 //! * `GET /healthz` — liveness, queue depth, drain state.
 //! * `GET /stats` — hub-lifetime job counters plus gateway counters
-//!   (connections, 429/503 responses, remote leases).
+//!   (connections, 429/503 responses, remote leases) and per-phase
+//!   latency summaries (queue wait / artifact sync / run / cache hit).
+//! * `GET /metrics` — fleet-wide Prometheus text exposition
+//!   ([`crate::obs`]); `GET /events?n=K` — the newest K job-lifecycle
+//!   journal events as NDJSON. Both gated by `--metrics`.
 //! * `GET /cache` — result-cache directory, entry count, byte size.
 //! * `POST /work/lease` — remote-worker pull: long-poll for one queued
 //!   job, leased with a TTL ([`super::remote`] is the client).
@@ -46,11 +50,12 @@
 use super::cache::{self, ResultCache};
 use super::pool::{JobOutcome, JobStatus};
 use super::serve::{
-    lock_recover, run_session, with_hub, JobHub, LeaseReply, RemoteDone,
-    RemoteStats, ServeStats, SessionOptions,
+    lock_recover, run_session, with_hub, JobHub, LeaseReply, PhaseSecs,
+    RemoteDone, RemoteStats, ServeStats, SessionOptions,
 };
 use super::spec::JobSpec;
 use super::{cached_runner, open_cache, sync, GridOptions};
+use crate::obs::{self, MetricsLevel};
 use crate::util::json::{escape_str as esc, Json};
 use anyhow::{bail, Context, Result};
 use std::collections::{HashMap, HashSet};
@@ -114,6 +119,11 @@ pub struct ListenOptions {
     /// While draining the bound drops to ~1s so parked connections
     /// cannot stall shutdown.
     pub keepalive_idle: Duration,
+    /// Telemetry verbosity (`--metrics off|summary|full`): `off`
+    /// disables `GET /metrics` and `GET /events` (404), `summary`
+    /// serves `/metrics` but turns the event journal off, `full` (the
+    /// default) serves both.
+    pub metrics: MetricsLevel,
 }
 
 impl Default for ListenOptions {
@@ -129,6 +139,7 @@ impl Default for ListenOptions {
             client_quota: 0,
             affinity_window: 16,
             keepalive_idle: Duration::from_secs(60),
+            metrics: MetricsLevel::Full,
         }
     }
 }
@@ -271,6 +282,12 @@ where
     let stop = AtomicBool::new(false);
     let loop_done = AtomicBool::new(false);
     let c = Counters::default();
+    // Below `full`, the journal is a no-op for the gateway's lifetime;
+    // metric counters/histograms stay live (they cost one atomic op
+    // and are cheap enough to never gate).
+    if lopts.metrics != MetricsLevel::Full {
+        obs::journal().set_capacity(0);
+    }
     let local = listener.local_addr().context("gateway local_addr")?;
     let artifacts = Mutex::new(HashMap::new());
 
@@ -341,6 +358,7 @@ where
                         c.active.load(Ordering::SeqCst) >= lopts.max_conns;
                     if full {
                         c.refused.fetch_add(1, Ordering::Relaxed);
+                        obs::HTTP_REFUSED.inc();
                         let _ = respond_json(
                             &mut &stream,
                             503,
@@ -353,6 +371,7 @@ where
                     }
                     c.active.fetch_add(1, Ordering::SeqCst);
                     c.connections.fetch_add(1, Ordering::Relaxed);
+                    obs::HTTP_CONNECTIONS.inc();
                     let ctx_ref = &ctx;
                     let handle = s.spawn(move || {
                         handle_conn(ctx_ref, stream);
@@ -429,6 +448,7 @@ fn handle_conn(ctx: &GwCtx<'_>, stream: TcpStream) {
             }
         };
         ctx.c.requests.fetch_add(1, Ordering::Relaxed);
+        obs::HTTP_REQUESTS.inc();
         let keep = route_request(ctx, &mut reader, &mut w, &head);
         let _ = w.flush();
         if !keep {
@@ -563,6 +583,9 @@ fn route_request(
                 .map(|(t, n)| format!("\"{}\":{n}", esc(t)))
                 .collect::<Vec<_>>()
                 .join(",");
+            // Per-phase latency histograms ride along as percentile
+            // summaries, splitting a job's life into queue wait →
+            // artifact sync → run (with cache replays broken out).
             let body = format!(
                 "{{\"connections\":{},\"active_connections\":{},\
                  \"requests\":{},\"throttled_429\":{},\"quota_429\":{},\
@@ -573,7 +596,9 @@ fn route_request(
                  \"rejected\":{rejected},\"done\":{done},\
                  \"failed\":{failed},\"cached\":{cached}}},\
                  \"remote\":{{\"leased\":{},\"affinity\":{},\
-                 \"in_flight\":{},\"requeued\":{},\"conflicts\":{}}}}}",
+                 \"in_flight\":{},\"requeued\":{},\"conflicts\":{}}},\
+                 \"phases\":{{\"queue_wait\":{},\"sync\":{},\"run\":{},\
+                 \"cache_hit\":{}}}}}",
                 c.connections.load(Ordering::Relaxed),
                 c.active.load(Ordering::SeqCst),
                 c.requests.load(Ordering::Relaxed),
@@ -587,8 +612,70 @@ fn route_request(
                 hub.n_leased(),
                 remote.requeued,
                 remote.conflicts,
+                obs::QUEUE_WAIT_SECONDS.summary_json(),
+                obs::SYNC_SECONDS.summary_json(),
+                obs::RUN_SECONDS.summary_json(),
+                obs::CACHE_HIT_SECONDS.summary_json(),
             );
             let _ = respond_json(w, 200, "OK", &[], keep, &body);
+            keep
+        }
+        ("GET", "/metrics") => {
+            if lopts.metrics == MetricsLevel::Off {
+                let _ = respond_json(
+                    w,
+                    404,
+                    "Not Found",
+                    &[],
+                    keep,
+                    &err_body("metrics are disabled (--metrics off)"),
+                );
+                return keep;
+            }
+            let body = obs::render_prometheus();
+            let _ = respond_text(
+                w,
+                200,
+                "OK",
+                "text/plain; version=0.0.4; charset=utf-8",
+                keep,
+                &body,
+            );
+            keep
+        }
+        ("GET", "/events") => {
+            if lopts.metrics != MetricsLevel::Full {
+                let _ = respond_json(
+                    w,
+                    404,
+                    "Not Found",
+                    &[],
+                    keep,
+                    &err_body(
+                        "the event journal is disabled \
+                         (requires --metrics full)",
+                    ),
+                );
+                return keep;
+            }
+            let n = head
+                .query
+                .as_deref()
+                .and_then(|q| query_param(q, "n"))
+                .and_then(|v| v.parse::<usize>().ok())
+                .unwrap_or(64);
+            let mut body = obs::journal().tail(n).join("\n");
+            if !body.is_empty() {
+                body.push('\n');
+            }
+            let _ = respond_text(
+                w,
+                200,
+                "OK",
+                "application/x-ndjson",
+                keep,
+                &body,
+            );
             keep
         }
         ("GET", "/cache") => {
@@ -737,6 +824,7 @@ fn route_request(
                 if let Some(client) = &head.client {
                     if hub.client_in_flight(client) >= quota {
                         c.quota_throttled.fetch_add(1, Ordering::Relaxed);
+                        obs::HTTP_THROTTLED.inc();
                         let _ = respond_json(
                             w,
                             429,
@@ -754,6 +842,7 @@ fn route_request(
             }
             if hub.is_saturated() {
                 c.throttled.fetch_add(1, Ordering::Relaxed);
+                obs::HTTP_THROTTLED.inc();
                 let _ = respond_json(
                     w,
                     429,
@@ -827,7 +916,8 @@ fn route_request(
         }
         (
             _,
-            "/healthz" | "/stats" | "/cache" | "/shutdown" | "/jobs",
+            "/healthz" | "/stats" | "/metrics" | "/events" | "/cache"
+            | "/shutdown" | "/jobs",
         ) => {
             let _ = respond_json(
                 w,
@@ -1002,6 +1092,7 @@ fn handle_lease<R: BufRead, W: Write>(
                             JobStatus::Done(out),
                             true,
                             0.0,
+                            PhaseSecs::default(),
                         );
                         continue;
                     }
@@ -1163,7 +1254,16 @@ fn handle_work_post<R: BufRead, W: Write>(
     let from_cache =
         j.get("cached").and_then(Json::as_bool).unwrap_or(false);
     let secs = j.get("secs").and_then(Json::as_f64).unwrap_or(0.0);
-    match ctx.hub.complete_remote(seq, &worker, status, from_cache, secs) {
+    // Worker-measured per-phase durations; absent on results from
+    // older workers, which fold into the end-to-end fallback.
+    let phases = PhaseSecs {
+        sync: j.get("sync_secs").and_then(Json::as_f64).unwrap_or(0.0),
+        run: j.get("run_secs").and_then(Json::as_f64).unwrap_or(0.0),
+    };
+    match ctx
+        .hub
+        .complete_remote(seq, &worker, status, from_cache, secs, phases)
+    {
         RemoteDone::Accepted { spec, afp } => {
             // The gateway's cache learns remote results too, so the
             // next identical cell replays locally without a worker.
@@ -1257,6 +1357,9 @@ fn handle_artifact_get<W: Write>(
 struct HttpHead {
     method: String,
     path: String,
+    /// Raw query string (`GET /events?n=32` → `"n=32"`), stripped from
+    /// `path` so routing stays exact-match.
+    query: Option<String>,
     content_length: usize,
     /// `Transfer-Encoding: chunked` request body. Accepted only on
     /// `POST /jobs` (a submitter can stream a session without knowing
@@ -1292,10 +1395,11 @@ fn read_head<R: BufRead>(r: &mut R) -> Result<Option<HttpHead>> {
     if !version.starts_with("HTTP/1.") {
         bail!("unsupported protocol {version:?}");
     }
-    // Query strings are accepted and ignored.
-    let path = match path.split_once('?') {
-        Some((p, _)) => p.to_string(),
-        None => path.to_string(),
+    // Query strings are split off the routed path; endpoints that take
+    // parameters (`GET /events?n=K`) read them from `query`.
+    let (path, query) = match path.split_once('?') {
+        Some((p, q)) => (p.to_string(), Some(q.to_string())),
+        None => (path.to_string(), None),
     };
     let mut content_length = 0usize;
     let mut saw_content_length = false;
@@ -1319,6 +1423,7 @@ fn read_head<R: BufRead>(r: &mut R) -> Result<Option<HttpHead>> {
             return Ok(Some(HttpHead {
                 method,
                 path,
+                query,
                 content_length,
                 chunked,
                 expect_continue,
@@ -1454,6 +1559,36 @@ fn drain_body<R: BufRead>(r: &mut R, len: usize) -> bool {
 
 fn err_body(msg: &str) -> String {
     format!("{{\"error\":\"{}\"}}", esc(msg))
+}
+
+/// Pull one `key=value` pair out of a raw query string. No percent
+/// decoding — the gateway's parameters are plain integers.
+fn query_param<'a>(query: &'a str, key: &str) -> Option<&'a str> {
+    query.split('&').find_map(|pair| {
+        let (k, v) = pair.split_once('=')?;
+        (k == key).then_some(v)
+    })
+}
+
+/// One small self-delimited response with an explicit content type —
+/// the Prometheus text exposition (`GET /metrics`) and the NDJSON
+/// event tail (`GET /events`) are not JSON objects.
+fn respond_text<W: Write>(
+    w: &mut W,
+    status: u16,
+    reason: &str,
+    content_type: &str,
+    keep: bool,
+    body: &str,
+) -> std::io::Result<()> {
+    write!(
+        w,
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\
+         \r\nContent-Length: {}\r\nConnection: {}\r\n\r\n{body}",
+        body.len(),
+        if keep { "keep-alive" } else { "close" },
+    )?;
+    w.flush()
 }
 
 /// One binary response (the `GET /artifacts/<fp>` frame).
@@ -1656,8 +1791,46 @@ mod tests {
         .unwrap()
         .unwrap();
         assert_eq!(h.path, "/stats");
+        assert_eq!(h.query.as_deref(), Some("verbose=1"));
         assert_eq!(h.content_length, 7);
         assert!(h.expect_continue);
+    }
+
+    #[test]
+    fn query_strings_split_and_parse() {
+        let h = head_of("GET /events?n=32&x=y HTTP/1.1\r\n\r\n")
+            .unwrap()
+            .unwrap();
+        assert_eq!(h.path, "/events");
+        let q = h.query.as_deref().unwrap();
+        assert_eq!(query_param(q, "n"), Some("32"));
+        assert_eq!(query_param(q, "x"), Some("y"));
+        assert_eq!(query_param(q, "missing"), None);
+        let h = head_of("GET /events HTTP/1.1\r\n\r\n").unwrap().unwrap();
+        assert!(h.query.is_none());
+        // Malformed pairs are skipped, not errors.
+        assert_eq!(query_param("novalue&n=5", "n"), Some("5"));
+    }
+
+    #[test]
+    fn respond_text_frames_with_content_type() {
+        let mut out: Vec<u8> = Vec::new();
+        respond_text(
+            &mut out,
+            200,
+            "OK",
+            "text/plain; version=0.0.4; charset=utf-8",
+            true,
+            "omgd_http_requests_total 3\n",
+        )
+        .unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(text
+            .contains("Content-Type: text/plain; version=0.0.4"));
+        assert!(text.contains("Content-Length: 27\r\n"));
+        assert!(text.contains("Connection: keep-alive\r\n"));
+        assert!(text.ends_with("\r\n\r\nomgd_http_requests_total 3\n"));
     }
 
     #[test]

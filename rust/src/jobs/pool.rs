@@ -14,6 +14,7 @@
 use super::queue::{Job, JobQueue};
 use super::spec::JobSpec;
 use crate::metrics::Timer;
+use crate::obs;
 use crate::train::TrainOutcome;
 use anyhow::Result;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -139,6 +140,8 @@ pub fn worker_loop<W>(
     W: FnMut(&JobSpec) -> Result<(JobOutcome, bool)>,
 {
     while let Some(job) = queue.pop() {
+        let queue_secs = job.enqueued.elapsed().as_secs_f64();
+        obs::QUEUE_WAIT_SECONDS.observe(queue_secs);
         let t = Timer::start();
         let run = catch_unwind(AssertUnwindSafe(|| work(&job.spec)));
         let (status, from_cache) = match run {
@@ -148,6 +151,19 @@ pub fn worker_loop<W>(
                 (JobStatus::Panicked(panic_message(payload.as_ref())), false)
             }
         };
+        let secs = t.total();
+        if from_cache {
+            obs::CACHE_HIT_SECONDS.observe(secs);
+        } else {
+            obs::RUN_SECONDS.observe(secs);
+        }
+        let mut ev = obs::Event::new("run", job.seq);
+        ev.hash = job.spec.hash_hex();
+        ev.worker = "local".to_string();
+        ev.queue_secs = queue_secs;
+        ev.run_secs = secs;
+        ev.secs = queue_secs + secs;
+        obs::journal().push(ev);
         let Job { seq, spec, .. } = job;
         // Receiver gone (caller bailed) → stop draining.
         if tx

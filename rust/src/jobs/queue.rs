@@ -11,6 +11,7 @@
 //! all pending jobs so workers exit at the next pop.
 
 use super::spec::JobSpec;
+use crate::obs;
 use anyhow::{bail, Result};
 use std::collections::BinaryHeap;
 use std::sync::{Condvar, Mutex};
@@ -23,6 +24,9 @@ pub struct Job {
     pub seq: u64,
     pub priority: i32,
     pub spec: JobSpec,
+    /// When this job entered the queue (reset on requeue) — consumers
+    /// observe `enqueued.elapsed()` as the queue-wait span.
+    pub enqueued: Instant,
 }
 
 struct Entry {
@@ -32,6 +36,7 @@ struct Entry {
     /// Times a window scan chose a deeper match over this entry while
     /// it sat at the head (see [`JobQueue::pop_scan_timeout`]).
     skips: u32,
+    enqueued: Instant,
 }
 
 impl PartialEq for Entry {
@@ -152,7 +157,15 @@ impl JobQueue {
         }
         let seq = st.next_seq;
         st.next_seq += 1;
-        st.heap.push(Entry { priority, seq, spec, skips: 0 });
+        st.heap.push(Entry {
+            priority,
+            seq,
+            spec,
+            skips: 0,
+            enqueued: Instant::now(),
+        });
+        obs::JOBS_SUBMITTED.inc();
+        obs::QUEUE_DEPTH.set(st.heap.len() as f64);
         drop(st);
         self.not_empty.notify_one();
         Ok(seq)
@@ -171,7 +184,15 @@ impl JobQueue {
         }
         let seq = st.next_seq;
         st.next_seq += 1;
-        st.heap.push(Entry { priority, seq, spec, skips: 0 });
+        st.heap.push(Entry {
+            priority,
+            seq,
+            spec,
+            skips: 0,
+            enqueued: Instant::now(),
+        });
+        obs::JOBS_SUBMITTED.inc();
+        obs::QUEUE_DEPTH.set(st.heap.len() as f64);
         drop(st);
         self.not_empty.notify_one();
         TryPush::Pushed(seq)
@@ -196,12 +217,14 @@ impl JobQueue {
                 return None;
             }
             if let Some(e) = st.heap.pop() {
+                obs::QUEUE_DEPTH.set(st.heap.len() as f64);
                 drop(st);
                 self.not_full.notify_one();
                 return Some(Job {
                     seq: e.seq,
                     priority: e.priority,
                     spec: e.spec,
+                    enqueued: e.enqueued,
                 });
             }
             if st.closed {
@@ -223,12 +246,14 @@ impl JobQueue {
                 return PopTimeout::Closed;
             }
             if let Some(e) = st.heap.pop() {
+                obs::QUEUE_DEPTH.set(st.heap.len() as f64);
                 drop(st);
                 self.not_full.notify_one();
                 return PopTimeout::Job(Job {
                     seq: e.seq,
                     priority: e.priority,
                     spec: e.spec,
+                    enqueued: e.enqueued,
                 });
             }
             if st.closed {
@@ -283,6 +308,7 @@ impl JobQueue {
             if !st.heap.is_empty() {
                 let picked =
                     Self::scan_extract(&mut st, window, &mut *pred);
+                obs::QUEUE_DEPTH.set(st.heap.len() as f64);
                 drop(st);
                 self.not_full.notify_one();
                 return picked;
@@ -313,6 +339,7 @@ impl JobQueue {
             seq: e.seq,
             priority: e.priority,
             spec: e.spec,
+            enqueued: e.enqueued,
         };
         let head = st.heap.pop().expect("scan_extract needs a non-empty heap");
         if pred(&head.spec) {
@@ -377,7 +404,11 @@ impl JobQueue {
             seq: job.seq,
             spec: job.spec,
             skips: 0,
+            // A requeued job starts a fresh wait span: queue-wait
+            // measures time since the *last* (re-)admission.
+            enqueued: Instant::now(),
         });
+        obs::QUEUE_DEPTH.set(st.heap.len() as f64);
         drop(st);
         self.not_empty.notify_one();
         Ok(())
@@ -400,6 +431,7 @@ impl JobQueue {
         st.cancelled = true;
         st.closed = true;
         st.heap.clear();
+        obs::QUEUE_DEPTH.set(0.0);
         drop(st);
         self.not_empty.notify_all();
         self.not_full.notify_all();

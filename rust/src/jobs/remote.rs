@@ -47,10 +47,12 @@
 use super::cache::{self, ResultCache};
 use super::pool::{panic_message, JobOutcome, JobResult, JobStatus};
 use super::report::GridReport;
+use super::serve::PhaseSecs;
 use super::spec::JobSpec;
 use super::sync::ArtifactStore;
 use super::SpecRunner;
 use crate::metrics::Timer;
+use crate::obs;
 use crate::util::json::{escape_str as esc, ser_f64 as ser_f, Json};
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
@@ -446,7 +448,7 @@ fn run_lease<F>(
         InFlight { ttl, next_renew: Instant::now() + ttl / 3, token },
     );
     let t = Timer::start();
-    let (status, from_cache) =
+    let (status, from_cache, phases) =
         execute_lease(opts, conn, cache, store, stats, runner, lease, &afp);
     {
         let mut map = in_flight.lock().unwrap();
@@ -466,13 +468,24 @@ fn run_lease<F>(
             stats.failed.fetch_add(1, Ordering::Relaxed);
         }
     }
-    if !post_result(opts, conn, seq, &status, from_cache, t.total()) {
+    // Agent-side journal: one "run" span per lease, mirroring what the
+    // gateway reconstructs from the wire-reported phase timings.
+    let mut ev = obs::Event::new("run", seq);
+    ev.worker = opts.worker_id.clone();
+    ev.sync_secs = phases.sync;
+    ev.run_secs = phases.run;
+    ev.secs = t.total();
+    obs::journal().push(ev);
+    if !post_result(opts, conn, seq, &status, from_cache, t.total(), phases)
+    {
         stats.conflicts.fetch_add(1, Ordering::Relaxed);
     }
 }
 
-/// The sync → cache → run core of one lease; returns the job status
-/// plus whether it came from the local cache.
+/// The sync → cache → run core of one lease; returns the job status,
+/// whether it came from the local cache, and the measured per-phase
+/// durations (artifact sync / fresh run) that [`post_result`] reports
+/// back to the gateway for fleet-wide aggregation.
 #[allow(clippy::too_many_arguments)]
 fn execute_lease<F>(
     opts: &WorkerOptions,
@@ -483,12 +496,17 @@ fn execute_lease<F>(
     runner: &mut F,
     lease: &Json,
     afp: &str,
-) -> (JobStatus, bool)
+) -> (JobStatus, bool, PhaseSecs)
 where
     F: FnMut(&JobSpec) -> Result<JobOutcome>,
 {
+    let mut phases = PhaseSecs::default();
     let Some(wire) = lease.get("spec") else {
-        return (JobStatus::Failed("lease carries no spec".into()), false);
+        return (
+            JobStatus::Failed("lease carries no spec".into()),
+            false,
+            phases,
+        );
     };
     let mut spec = match JobSpec::from_wire(wire) {
         Ok(s) => s,
@@ -496,6 +514,7 @@ where
             return (
                 JobStatus::Failed(format!("bad wire spec: {e:#}")),
                 false,
+                phases,
             )
         }
     };
@@ -511,6 +530,7 @@ where
                 spec.hash_hex()
             )),
             false,
+            phases,
         );
     }
     // Artifact sync: on a gateway fingerprint, run against the synced
@@ -520,11 +540,15 @@ where
         super::artifact_fingerprint(&spec.cfg)
     } else {
         let had_it = store.contains(afp);
+        let sync_t = Timer::start();
         let dir = store.ensure(afp, || fetch_artifacts(conn, afp));
         match dir {
             Ok(d) => {
                 if !had_it {
                     stats.synced.fetch_add(1, Ordering::Relaxed);
+                    // Only a real fetch+unpack counts as sync time; a
+                    // store hit is a hash lookup and reports zero.
+                    phases.sync = sync_t.total();
                 }
                 spec.cfg.artifacts_dir = d.to_string_lossy().into_owned();
                 afp.to_string()
@@ -535,6 +559,7 @@ where
                         "artifact sync of {afp} failed: {e:#}"
                     )),
                     false,
+                    phases,
                 )
             }
         }
@@ -546,9 +571,11 @@ where
     if force {
         cache.invalidate(&spec);
     } else if let Some(out) = cache.get(&spec, &cache_afp) {
-        return (JobStatus::Done(out), true);
+        return (JobStatus::Done(out), true, phases);
     }
+    let run_t = Timer::start();
     let run = catch_unwind(AssertUnwindSafe(|| runner(&spec)));
+    phases.run = run_t.total();
     match run {
         Ok(Ok(out)) => {
             if let Err(e) = cache.put(&spec, &cache_afp, &out) {
@@ -558,16 +585,23 @@ where
                     spec.hash_hex()
                 );
             }
-            (JobStatus::Done(out), false)
+            (JobStatus::Done(out), false, phases)
         }
-        Ok(Err(e)) => (JobStatus::Failed(format!("{e:#}")), false),
-        Err(p) => (JobStatus::Panicked(panic_message(p.as_ref())), false),
+        Ok(Err(e)) => (JobStatus::Failed(format!("{e:#}")), false, phases),
+        Err(p) => {
+            (JobStatus::Panicked(panic_message(p.as_ref())), false, phases)
+        }
     }
 }
 
 /// Report one result; retried briefly because losing a finished
 /// training run to a transient network blip is expensive. `false` when
 /// the gateway rejected the result (lease conflict) or never took it.
+/// The body carries the worker-measured per-phase durations
+/// (`sync_secs` / `run_secs`) so the gateway can fold them into its
+/// fleet-wide histograms; a gateway predating those fields ignores
+/// them.
+#[allow(clippy::too_many_arguments)]
 fn post_result(
     opts: &WorkerOptions,
     conn: &mut GatewayConn,
@@ -575,22 +609,28 @@ fn post_result(
     status: &JobStatus,
     from_cache: bool,
     secs: f64,
+    phases: PhaseSecs,
 ) -> bool {
     let body = match status {
         JobStatus::Done(out) => format!(
             "{{\"worker\":\"{}\",\"status\":\"done\",\"cached\":{},\
-             \"secs\":{},\"outcome\":{}}}",
+             \"secs\":{},\"sync_secs\":{},\"run_secs\":{},\
+             \"outcome\":{}}}",
             esc(&opts.worker_id),
             from_cache,
             ser_f(secs),
+            ser_f(phases.sync),
+            ser_f(phases.run),
             cache::ser_outcome(out),
         ),
         JobStatus::Failed(e) | JobStatus::Panicked(e) => format!(
             "{{\"worker\":\"{}\",\"status\":\"{}\",\"secs\":{},\
-             \"error\":\"{}\"}}",
+             \"sync_secs\":{},\"run_secs\":{},\"error\":\"{}\"}}",
             esc(&opts.worker_id),
             status.tag(),
             ser_f(secs),
+            ser_f(phases.sync),
+            ser_f(phases.run),
             esc(e),
         ),
     };
@@ -630,6 +670,19 @@ fn post_result(
         }
     }
     false
+}
+
+/// One-shot `GET` against a gateway, body returned as text. Backs
+/// `omgd stats --connect`, which fetches `/stats`, `/metrics`, and
+/// `/events` for a fleet snapshot without holding a connection open.
+pub fn gateway_get(
+    addr: &str,
+    path: &str,
+    timeout: Duration,
+) -> Result<(u16, String)> {
+    let mut conn = GatewayConn::new(addr);
+    let (status, bytes) = conn.request_bytes("GET", path, &[], timeout)?;
+    Ok((status, String::from_utf8_lossy(&bytes).into_owned()))
 }
 
 fn fetch_artifacts(conn: &mut GatewayConn, fp: &str) -> Result<Vec<u8>> {

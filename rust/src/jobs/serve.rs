@@ -38,6 +38,7 @@ use super::pool::{worker_loop, JobOutcome, JobResult, JobStatus};
 use super::queue::{Job, JobQueue, PopScan, PopTimeout, TryPush};
 use super::spec::JobSpec;
 use super::{cached_runner, open_cache, GridOptions};
+use crate::obs;
 use crate::util::json::Json;
 use anyhow::Result;
 use std::collections::{HashMap, HashSet};
@@ -137,6 +138,22 @@ struct LeaseEntry {
     afp: String,
     worker: String,
     expires: Instant,
+    /// Queue wait the job accrued before this lease was granted —
+    /// carried so the completion's journal span can report the full
+    /// enqueue → lease → run trace.
+    queue_secs: f64,
+}
+
+/// Worker-reported per-phase durations for one remote completion,
+/// parsed off the `/work/<seq>/result` body by the gateway and folded
+/// into the phase histograms here. Zero means "not reported" (old
+/// workers, failures before the phase ran).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PhaseSecs {
+    /// Artifact-set download + unpack time.
+    pub sync: f64,
+    /// Execution time of the runner itself (cache replays excluded).
+    pub run: f64,
 }
 
 /// Hub-lifetime remote-worker counters (the `"remote"` block of
@@ -303,6 +320,7 @@ impl JobHub {
         reply: &mpsc::Sender<JobResult>,
         client: Option<&str>,
     ) -> Result<u64> {
+        let hash = spec.hash_hex();
         loop {
             {
                 let mut routes = lock_recover(&self.routes);
@@ -316,6 +334,11 @@ impl JobHub {
                             },
                         );
                         self.accepted.fetch_add(1, Ordering::Relaxed);
+                        let mut ev = obs::Event::new("enqueue", seq);
+                        ev.hash = hash;
+                        ev.client =
+                            client.unwrap_or_default().to_string();
+                        obs::journal().push(ev);
                         return Ok(seq);
                     }
                     TryPush::Closed(_) => {
@@ -361,11 +384,14 @@ impl JobHub {
     fn dispatch(&self, r: JobResult) {
         if r.from_cache {
             self.cached.fetch_add(1, Ordering::Relaxed);
+            obs::CACHE_HITS.inc();
         }
         if r.is_ok() {
             self.done.fetch_add(1, Ordering::Relaxed);
+            obs::JOBS_COMPLETED.inc();
         } else {
             self.failed.fetch_add(1, Ordering::Relaxed);
+            obs::JOBS_FAILED.inc();
         }
         let reply = lock_recover(&self.routes).remove(&r.seq);
         if let Some(route) = reply {
@@ -443,6 +469,8 @@ impl JobHub {
                 job.spec.cfg.model.clone(),
             ))
             .unwrap_or_else(|| super::artifact_fingerprint(&job.spec.cfg));
+        let queue_secs = job.enqueued.elapsed().as_secs_f64();
+        obs::QUEUE_WAIT_SECONDS.observe(queue_secs);
         let info = LeaseInfo {
             seq: job.seq,
             priority: job.priority,
@@ -451,6 +479,11 @@ impl JobHub {
             affine,
             ttl,
         };
+        let mut ev = obs::Event::new("lease", job.seq);
+        ev.hash = job.spec.hash_hex();
+        ev.worker = worker.to_string();
+        ev.queue_secs = queue_secs;
+        obs::journal().push(ev);
         lock_recover(&self.leases).insert(
             job.seq,
             LeaseEntry {
@@ -459,9 +492,11 @@ impl JobHub {
                 afp,
                 worker: worker.to_string(),
                 expires: Instant::now() + ttl,
+                queue_secs,
             },
         );
         self.leased.fetch_add(1, Ordering::Relaxed);
+        obs::LEASES_GRANTED.inc();
         if affine {
             self.affinity.fetch_add(1, Ordering::Relaxed);
         }
@@ -495,6 +530,10 @@ impl JobHub {
     /// ([`RemoteDone::Conflict`]) — the re-dispatched copy will produce
     /// the (deterministic) result instead, so a session never sees two
     /// results for one seq.
+    ///
+    /// `phases` carries the worker-reported per-phase durations off the
+    /// result body; they feed the gateway's sync/run histograms and the
+    /// `report` journal span (zeros = unreported, not observed).
     pub fn complete_remote(
         &self,
         seq: u64,
@@ -502,6 +541,7 @@ impl JobHub {
         status: JobStatus,
         from_cache: bool,
         secs: f64,
+        phases: PhaseSecs,
     ) -> RemoteDone {
         let entry = {
             let mut leases = lock_recover(&self.leases);
@@ -515,6 +555,30 @@ impl JobHub {
         };
         match entry {
             Some(e) => {
+                if phases.sync > 0.0 {
+                    obs::SYNC_SECONDS.observe(phases.sync);
+                }
+                if from_cache {
+                    obs::CACHE_HIT_SECONDS.observe(secs);
+                } else if phases.run > 0.0 {
+                    obs::RUN_SECONDS.observe(phases.run);
+                } else if matches!(status, JobStatus::Done(_)) {
+                    // Worker predates per-phase reporting: fall back
+                    // to its end-to-end figure.
+                    obs::RUN_SECONDS.observe(secs);
+                }
+                let mut ev = obs::Event::new("report", seq);
+                ev.hash = e.spec.hash_hex();
+                ev.worker = worker.to_string();
+                ev.client = lock_recover(&self.routes)
+                    .get(&seq)
+                    .and_then(|r| r.client.clone())
+                    .unwrap_or_default();
+                ev.queue_secs = e.queue_secs;
+                ev.sync_secs = phases.sync;
+                ev.run_secs = phases.run;
+                ev.secs = secs;
+                obs::journal().push(ev);
                 self.dispatch(JobResult {
                     seq,
                     spec: e.spec.clone(),
@@ -552,11 +616,17 @@ impl JobHub {
         let mut n = 0;
         for (seq, e) in expired {
             let spec = e.spec.clone();
-            let job = Job { seq, priority: e.priority, spec: e.spec };
+            let job = Job {
+                seq,
+                priority: e.priority,
+                spec: e.spec,
+                enqueued: Instant::now(),
+            };
             match self.queue.requeue(job) {
                 Ok(()) => {
                     n += 1;
                     self.requeued.fetch_add(1, Ordering::Relaxed);
+                    obs::LEASES_EXPIRED.inc();
                 }
                 Err(err) => self.dispatch(JobResult {
                     seq,
@@ -1078,7 +1148,8 @@ this is not json\n\
                 "w2",
                 JobStatus::Failed("hijack".into()),
                 false,
-                0.0
+                0.0,
+                PhaseSecs::default()
             ),
             RemoteDone::Conflict
         ));
@@ -1090,6 +1161,7 @@ this is not json\n\
             JobStatus::Done(JobOutcome::default()),
             false,
             0.5,
+            PhaseSecs { sync: 0.1, run: 0.4 },
         );
         match done {
             RemoteDone::Accepted { spec, afp } => {
@@ -1108,7 +1180,8 @@ this is not json\n\
                 "w1",
                 JobStatus::Done(JobOutcome::default()),
                 false,
-                0.5
+                0.5,
+                PhaseSecs::default()
             ),
             RemoteDone::Conflict
         ));
@@ -1154,7 +1227,8 @@ this is not json\n\
                 "dead-worker",
                 JobStatus::Done(JobOutcome::default()),
                 false,
-                1.0
+                1.0,
+                PhaseSecs::default()
             ),
             RemoteDone::Conflict
         ));
@@ -1165,7 +1239,8 @@ this is not json\n\
                 "w2",
                 JobStatus::Done(JobOutcome::default()),
                 false,
-                1.0
+                1.0,
+                PhaseSecs::default()
             ),
             RemoteDone::Accepted { .. }
         ));
@@ -1196,6 +1271,7 @@ this is not json\n\
             }),
             true,
             0.0,
+            PhaseSecs::default(),
         );
         let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
         assert_eq!(r.seq, seq);
@@ -1382,7 +1458,8 @@ this is not json\n\
                 "w1",
                 JobStatus::Done(JobOutcome::default()),
                 false,
-                0.1
+                0.1,
+                PhaseSecs::default()
             ),
             RemoteDone::Accepted { .. }
         ));

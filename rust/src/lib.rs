@@ -42,6 +42,7 @@ pub mod linalg;
 pub mod manifest;
 pub mod memory;
 pub mod metrics;
+pub mod obs;
 pub mod optim;
 pub mod prop;
 pub mod quadratic;

@@ -35,6 +35,12 @@
 //!     --client-quota N                per-client in-flight cap
 //!     --affinity-window N             artifact-affinity scan bound
 //!     --keepalive-idle-secs N         idle keep-alive connection cap
+//!     --metrics off|summary|full      telemetry verbosity: /metrics
+//!                                     exposition and the /events
+//!                                     job-lifecycle journal
+//!   stats      --connect HOST:PORT    pretty-print a live gateway's
+//!                                     /stats + /metrics (+ --events N
+//!                                     journal tail)
 //!   worker                            remote worker agent for a
 //!                                     gateway: lease → artifact sync →
 //!                                     run → report, until drained
@@ -61,8 +67,9 @@ use omgd::data::{ClassTask, Corpus, CorpusConfig, LinRegData};
 use omgd::experiments::{finetune_spec, pretrain_config, FinetuneSetup,
                         PretrainSetup};
 use omgd::jobs::{
-    run_grid, run_grid_remote, run_worker, ExperimentKind, GcPolicy,
-    GridOptions, JobSpec, ListenOptions, ResultCache, WorkerOptions,
+    gateway_get, run_grid, run_grid_remote, run_worker, ExperimentKind,
+    GcPolicy, GridOptions, JobSpec, ListenOptions, ResultCache,
+    WorkerOptions,
 };
 use omgd::memory::{breakdown, ArchSpec, MemBreakdown, MemPolicy};
 use omgd::metrics::CsvWriter;
@@ -99,6 +106,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "memory" => cmd_memory(args),
         "grid" => cmd_grid(args),
         "serve" => cmd_serve(args),
+        "stats" => cmd_stats(args),
         "worker" => cmd_worker(args),
         "cache-gc" => cmd_cache_gc(args),
         "microbench" => cmd_microbench(args),
@@ -139,16 +147,21 @@ USAGE: omgd <subcommand> [flags]
                stdin mode: JSONL requests in, JSONL results out
                ({\"cmd\":\"shutdown\"} or EOF ends)
                HTTP mode (--listen): POST /jobs streams NDJSON results;
-               GET /healthz /stats /cache; POST /work/lease hands jobs
-               to remote `omgd worker` agents (--workers 0 = pure
-               coordinator); POST /shutdown drains
+               GET /healthz /stats /metrics /events /cache; POST
+               /work/lease hands jobs to remote `omgd worker` agents
+               (--workers 0 = pure coordinator); POST /shutdown drains
                (protocol: docs/serve-protocol.md)
     --workers 4 [--force] [--cache-dir DIR]
     [--cache-max-age-secs N] [--cache-max-bytes N]
     HTTP mode only: [--listen 127.0.0.1:8080] [--max-conns 64]
     [--max-in-flight 32] [--queue-cap N] [--lease-secs 60]
     [--poll-secs 20] [--client-quota N] [--affinity-window 16]
-    [--keepalive-idle-secs 60]
+    [--keepalive-idle-secs 60] [--metrics off|summary|full]
+  stats        pretty-print a live gateway's /stats counters, phase
+               latency percentiles, and /metrics family count; with
+               --events N, tail the job-lifecycle event journal
+               (docs/observability.md)
+    --connect HOST:PORT [--events N] [--timeout-secs 10]
   worker       remote worker agent: long-poll a gateway for leased
                jobs, sync missing artifacts by fingerprint, run on a
                local pool, report results; exits when the gateway
@@ -162,7 +175,10 @@ USAGE: omgd <subcommand> [flags]
     --max-age-secs N --max-bytes N [--dry-run] [--cache-dir DIR]
   microbench   time native masked-AdamW steps on the segment-run path
                vs the dense reference and print the ratio (no
-               artifacts needed; steps scale with OMGD_BENCH_SCALE)
+               artifacts needed; steps scale with OMGD_BENCH_SCALE);
+               the BENCH json row is stamped with git rev, bench
+               scale, worker count, and a unix timestamp so CI can
+               track the perf trajectory across revisions
     --n 65536 --keep 0.25 --steps 10000 [--out BENCH_maskruns.json]
 ";
 
@@ -725,6 +741,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     defaults.keepalive_idle.as_secs(),
                 )?,
             ),
+            metrics: args
+                .str_choice_or(
+                    "metrics",
+                    "full",
+                    &["off", "summary", "full"],
+                )?
+                .parse()?,
             ..defaults
         };
         let stats = omgd::jobs::net::serve_listen(addr, &opts, &lopts)?;
@@ -757,6 +780,121 @@ fn cmd_serve(args: &Args) -> Result<()> {
         stats.accepted, stats.rejected, stats.done, stats.failed,
         stats.cached
     );
+    Ok(())
+}
+
+/// `omgd stats`: connect to a live gateway and pretty-print its
+/// `/stats` counters, per-phase latency summaries, `/metrics` family
+/// count, and — with `--events N` — the event-journal tail.
+fn cmd_stats(args: &Args) -> Result<()> {
+    use omgd::util::json::Json;
+    use std::time::Duration;
+
+    let addr = args.require("connect", "host:port")?;
+    let timeout = Duration::from_secs(args.u64_or("timeout-secs", 10)?);
+    let (code, body) = gateway_get(&addr, "/stats", timeout)?;
+    if code != 200 {
+        bail!("gateway {addr}: /stats returned HTTP {code}");
+    }
+    let j = Json::parse(&body)
+        .map_err(|e| anyhow::anyhow!("unparseable /stats body: {e}"))?;
+    let top =
+        |k: &str| j.get(k).and_then(Json::as_f64).unwrap_or(0.0) as u64;
+    let sub = |o: &str, k: &str| {
+        j.get(o)
+            .and_then(|v| v.get(k))
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0) as u64
+    };
+    println!("gateway {addr}");
+    println!(
+        "  http    {} conns ({} active), {} requests, {} throttled, \
+         {} quota-throttled, {} refused",
+        top("connections"),
+        top("active_connections"),
+        top("requests"),
+        top("throttled_429"),
+        top("quota_429"),
+        top("refused_503"),
+    );
+    println!(
+        "  queue   {} queued (cap {})",
+        top("queue_len"),
+        top("queue_capacity"),
+    );
+    println!(
+        "  jobs    {} accepted, {} rejected, {} done, {} failed, \
+         {} from cache",
+        sub("jobs", "accepted"),
+        sub("jobs", "rejected"),
+        sub("jobs", "done"),
+        sub("jobs", "failed"),
+        sub("jobs", "cached"),
+    );
+    println!(
+        "  remote  {} leased ({} by affinity), {} in flight, \
+         {} requeued, {} conflicts",
+        sub("remote", "leased"),
+        sub("remote", "affinity"),
+        sub("remote", "in_flight"),
+        sub("remote", "requeued"),
+        sub("remote", "conflicts"),
+    );
+    if let Some(phases) = j.get("phases") {
+        for (label, key) in [
+            ("queue-wait", "queue_wait"),
+            ("sync", "sync"),
+            ("run", "run"),
+            ("cache-hit", "cache_hit"),
+        ] {
+            let Some(p) = phases.get(key) else { continue };
+            let f =
+                |k: &str| p.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+            println!(
+                "  phase   {label:10} n={:<6} mean {:>9.1}ms  \
+                 p50 {:>9.1}ms  p95 {:>9.1}ms  p99 {:>9.1}ms",
+                f("count") as u64,
+                f("mean") * 1e3,
+                f("p50") * 1e3,
+                f("p95") * 1e3,
+                f("p99") * 1e3,
+            );
+        }
+    }
+    match gateway_get(&addr, "/metrics", timeout) {
+        Ok((200, text)) => {
+            let families = text
+                .lines()
+                .filter(|l| l.starts_with("# TYPE "))
+                .count();
+            println!(
+                "  metrics {families} families exported at /metrics"
+            );
+        }
+        Ok((404, _)) => println!("  metrics disabled (--metrics off)"),
+        Ok((code, _)) => println!("  metrics HTTP {code}"),
+        Err(e) => println!("  metrics unreachable: {e:#}"),
+    }
+    if args.get("events").is_some() {
+        let n = args.usize_or("events", 64)?;
+        match gateway_get(&addr, &format!("/events?n={n}"), timeout) {
+            Ok((200, tail)) => {
+                if tail.trim().is_empty() {
+                    println!("  events  (journal empty)");
+                } else {
+                    println!("  events  (oldest first)");
+                    for line in tail.lines() {
+                        println!("    {line}");
+                    }
+                }
+            }
+            Ok((404, _)) => println!(
+                "  events  journal disabled (requires --metrics full)"
+            ),
+            Ok((code, _)) => println!("  events  HTTP {code}"),
+            Err(e) => println!("  events  unreachable: {e:#}"),
+        }
+    }
     Ok(())
 }
 
@@ -893,6 +1031,21 @@ fn cmd_microbench(args: &Args) -> Result<()> {
         compact.state_bytes(),
         2 * n * 4
     );
+    // Run metadata so the BENCH trajectory is attributable: which
+    // revision produced the point, at what smoke scale, on how wide a
+    // machine, and when. A checkout without git still benches.
+    let rev = std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .map(|o| String::from_utf8_lossy(&o.stdout).trim().to_string())
+        .filter(|s| !s.is_empty() && s.chars().all(|c| c.is_ascii_hexdigit()))
+        .unwrap_or_else(|| "unknown".to_string());
+    let unix_secs = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
     let out = args.str_or("out", "BENCH_maskruns.json");
     std::fs::write(
         &out,
@@ -901,9 +1054,13 @@ fn cmd_microbench(args: &Args) -> Result<()> {
              \"active\":{active},\"steps\":{steps},\
              \"dense_secs\":{dense_secs:.6},\
              \"runs_secs\":{runs_secs:.6},\"ratio\":{ratio:.4},\
-             \"state_bytes\":{},\"dense_state_bytes\":{}}}\n",
+             \"state_bytes\":{},\"dense_state_bytes\":{},\
+             \"rev\":\"{rev}\",\"scale\":{},\"workers\":{},\
+             \"unix_secs\":{unix_secs}}}\n",
             compact.state_bytes(),
-            2 * n * 4
+            2 * n * 4,
+            omgd::experiments::bench_scale(),
+            omgd::jobs::default_workers(),
         ),
     )?;
     println!("wrote {out}");

@@ -4,7 +4,7 @@
 //! harness and the paper-figure regenerators share one on-disk format:
 //! CSV with a header row, one row per logged step.
 
-use anyhow::{Context, Result};
+use anyhow::{ensure, Context, Result};
 use std::fs::{self, File};
 use std::io::{BufWriter, Write};
 use std::path::Path;
@@ -29,7 +29,12 @@ impl CsvWriter {
     }
 
     pub fn row(&mut self, values: &[f64]) -> Result<()> {
-        assert_eq!(values.len(), self.cols, "csv row width mismatch");
+        ensure!(
+            values.len() == self.cols,
+            "csv row width mismatch: got {} values for {} columns",
+            values.len(),
+            self.cols
+        );
         let line = values
             .iter()
             .map(|v| format_g(*v))
@@ -41,7 +46,12 @@ impl CsvWriter {
 
     /// Mixed string/number row (first column often a label).
     pub fn row_mixed(&mut self, values: &[CsvCell]) -> Result<()> {
-        assert_eq!(values.len(), self.cols, "csv row width mismatch");
+        ensure!(
+            values.len() == self.cols,
+            "csv row width mismatch: got {} values for {} columns",
+            values.len(),
+            self.cols
+        );
         let line = values
             .iter()
             .map(|v| match v {
@@ -315,12 +325,21 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "width mismatch")]
-    fn csv_row_width_checked() {
+    fn csv_row_width_is_an_error_not_a_panic() {
+        // A malformed series must surface as a Result a worker thread
+        // can report, never a panic that kills it mid-job.
         let dir = std::env::temp_dir().join("omgd_test_csv2");
         let mut w =
             CsvWriter::create(dir.join("m.csv"), &["a", "b"]).unwrap();
-        let _ = w.row(&[1.0]);
+        let err = w.row(&[1.0]).unwrap_err();
+        assert!(err.to_string().contains("width mismatch"), "{err}");
+        let err = w
+            .row_mixed(&[CsvCell::S("x".into())])
+            .unwrap_err();
+        assert!(err.to_string().contains("width mismatch"), "{err}");
+        // the writer stays usable after a rejected row
+        w.row(&[1.0, 2.0]).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -1,0 +1,886 @@
+//! Fleet-wide telemetry: a process-global metrics registry and a
+//! lock-light ring-buffer journal of job-lifecycle events.
+//!
+//! The paper's pitch is a *measurable* resource/convergence trade, so
+//! the stack that reproduces it has to be able to observe itself. This
+//! module is the dependency-free spine: every layer (gateway, queue,
+//! worker pool, remote agents, training core) increments the same
+//! static counters/gauges/histograms, and the gateway surfaces them as
+//! Prometheus text exposition (`GET /metrics`), a JSON event tail
+//! (`GET /events?n=K`), and per-phase summaries folded into `/stats`.
+//!
+//! Design constraints:
+//!
+//! * **No dependencies, no registration ceremony.** Metrics are
+//!   `static` atomics; the registry is the [`families`] table that
+//!   names them for exposition. Incrementing a counter is one relaxed
+//!   atomic op — safe in the training hot loop.
+//! * **Process-global.** The gateway, a worker agent, and a local
+//!   trainer are separate processes; each sees its own registry. The
+//!   gateway additionally aggregates *worker-reported* per-phase
+//!   timings (sync/run, carried in the `/work/<seq>/result` body) into
+//!   its own histograms, so one scrape of the gateway shows fleet-wide
+//!   latency.
+//! * **Fixed-bucket histograms.** Cumulative `le` buckets with a
+//!   static bound table; percentile readout (p50/p95/p99) returns the
+//!   upper bound of the bucket the rank lands in — an estimate that
+//!   never allocates and never locks.
+//! * **Lock-light journal.** One short [`Mutex`] around a fixed-size
+//!   ring of structured [`Event`]s (enqueue → lease → sync → run →
+//!   report). Capacity 0 disables it entirely (`--metrics summary`).
+
+use crate::metrics::format_g;
+use crate::util::json::escape_str as esc;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+// ---------------------------------------------------------------------
+// Primitives
+// ---------------------------------------------------------------------
+
+/// Monotonically increasing counter (`*_total` families).
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub const fn new() -> Self {
+        Self(AtomicU64::new(0))
+    }
+
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins f64 gauge (stored as bits in one atomic word).
+#[derive(Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub const fn new() -> Self {
+        // f64 0.0 is all-zero bits, so the const zero word is exact.
+        Self(AtomicU64::new(0))
+    }
+
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Upper bound on histogram bucket-table length (static storage).
+pub const MAX_BUCKETS: usize = 20;
+
+/// Fixed-bucket latency histogram: cumulative-on-read `le` buckets,
+/// a nanosecond-resolution sum, and rank-based percentile readout.
+pub struct Histogram {
+    bounds: &'static [f64],
+    buckets: [AtomicU64; MAX_BUCKETS],
+    /// Observations above the last finite bound (`le="+Inf"` overflow).
+    overflow: AtomicU64,
+    sum_nanos: AtomicU64,
+    count: AtomicU64,
+}
+
+/// General request/job latency bounds: 1 ms … 60 s.
+pub const LATENCY_BOUNDS: &[f64] = &[
+    0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5,
+    5.0, 10.0, 30.0, 60.0,
+];
+
+/// Hot-loop bounds for training steps and mask refreshes: 1 µs … 1 s.
+pub const FAST_BOUNDS: &[f64] = &[
+    1e-6, 2.5e-6, 5e-6, 1e-5, 2.5e-5, 5e-5, 1e-4, 2.5e-4, 5e-4, 1e-3,
+    2.5e-3, 5e-3, 1e-2, 0.05, 0.1, 0.5, 1.0,
+];
+
+impl Histogram {
+    pub const fn new(bounds: &'static [f64]) -> Self {
+        assert!(bounds.len() <= MAX_BUCKETS);
+        const Z: AtomicU64 = AtomicU64::new(0);
+        Self {
+            bounds,
+            buckets: [Z; MAX_BUCKETS],
+            overflow: Z,
+            sum_nanos: Z,
+            count: Z,
+        }
+    }
+
+    /// Record one observation, in seconds. Negative or NaN values are
+    /// clamped to zero (a clock hiccup must not poison the series).
+    pub fn observe(&self, secs: f64) {
+        let v = if secs.is_finite() && secs > 0.0 { secs } else { 0.0 };
+        match self.bounds.iter().position(|&b| v <= b) {
+            Some(i) => self.buckets[i].fetch_add(1, Ordering::Relaxed),
+            None => self.overflow.fetch_add(1, Ordering::Relaxed),
+        };
+        self.sum_nanos
+            .fetch_add((v * 1e9) as u64, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum_secs(&self) -> f64 {
+        self.sum_nanos.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    pub fn mean_secs(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum_secs() / n as f64
+        }
+    }
+
+    /// Cumulative `(upper_bound, count)` pairs, ending with the
+    /// `+Inf` bucket (whose count equals [`Self::count`]).
+    pub fn cumulative(&self) -> Vec<(f64, u64)> {
+        let mut out = Vec::with_capacity(self.bounds.len() + 1);
+        let mut cum = 0u64;
+        for (i, &b) in self.bounds.iter().enumerate() {
+            cum += self.buckets[i].load(Ordering::Relaxed);
+            out.push((b, cum));
+        }
+        cum += self.overflow.load(Ordering::Relaxed);
+        out.push((f64::INFINITY, cum));
+        out
+    }
+
+    /// Rank-based percentile estimate (`p` in [0, 100]): the upper
+    /// bound of the bucket the nearest-rank observation falls in.
+    /// Observations beyond the last finite bound report that bound
+    /// (the histogram does not retain exact maxima). Returns 0.0 for
+    /// an empty histogram.
+    pub fn percentile(&self, p: f64) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        let rank = ((p.clamp(0.0, 100.0) / 100.0) * n as f64).ceil()
+            as u64;
+        let rank = rank.max(1);
+        let mut cum = 0u64;
+        for (i, &b) in self.bounds.iter().enumerate() {
+            cum += self.buckets[i].load(Ordering::Relaxed);
+            if cum >= rank {
+                return b;
+            }
+        }
+        *self.bounds.last().unwrap_or(&0.0)
+    }
+
+    /// `{"count":N,"mean":..,"p50":..,"p95":..,"p99":..}` — the
+    /// summary block `/stats` folds in per phase.
+    pub fn summary_json(&self) -> String {
+        format!(
+            "{{\"count\":{},\"mean\":{},\"p50\":{},\"p95\":{},\
+             \"p99\":{}}}",
+            self.count(),
+            format_g(self.mean_secs()),
+            format_g(self.percentile(50.0)),
+            format_g(self.percentile(95.0)),
+            format_g(self.percentile(99.0)),
+        )
+    }
+}
+
+// ---------------------------------------------------------------------
+// The registry: static metrics + the family table that names them
+// ---------------------------------------------------------------------
+
+// Gateway (HTTP front door).
+pub static HTTP_CONNECTIONS: Counter = Counter::new();
+pub static HTTP_REQUESTS: Counter = Counter::new();
+pub static HTTP_THROTTLED: Counter = Counter::new();
+pub static HTTP_REFUSED: Counter = Counter::new();
+
+// Queue.
+pub static QUEUE_DEPTH: Gauge = Gauge::new();
+pub static JOBS_SUBMITTED: Counter = Counter::new();
+pub static QUEUE_WAIT_SECONDS: Histogram =
+    Histogram::new(LATENCY_BOUNDS);
+
+// Jobs / workers.
+pub static JOBS_COMPLETED: Counter = Counter::new();
+pub static JOBS_FAILED: Counter = Counter::new();
+pub static CACHE_HITS: Counter = Counter::new();
+pub static LEASES_GRANTED: Counter = Counter::new();
+pub static LEASES_EXPIRED: Counter = Counter::new();
+pub static SYNC_SECONDS: Histogram = Histogram::new(LATENCY_BOUNDS);
+pub static RUN_SECONDS: Histogram = Histogram::new(LATENCY_BOUNDS);
+pub static CACHE_HIT_SECONDS: Histogram =
+    Histogram::new(LATENCY_BOUNDS);
+
+// Training core.
+pub static STEP_SECONDS: Histogram = Histogram::new(FAST_BOUNDS);
+pub static MASK_REFRESH_SECONDS: Histogram =
+    Histogram::new(FAST_BOUNDS);
+pub static STATE_BYTES: Gauge = Gauge::new();
+pub static KEEP_RATIO: Gauge = Gauge::new();
+
+/// A named metric for exposition.
+pub enum Metric {
+    C(&'static Counter),
+    G(&'static Gauge),
+    H(&'static Histogram),
+}
+
+/// One exposition family: name, HELP text, and the backing metric.
+pub struct Family {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub metric: Metric,
+}
+
+/// The full registry, in exposition order. Every metric the process
+/// owns is listed here — `GET /metrics` is exactly this table.
+pub fn families() -> Vec<Family> {
+    use Metric::{C, G, H};
+    vec![
+        Family {
+            name: "omgd_http_connections_total",
+            help: "TCP connections accepted by the gateway",
+            metric: C(&HTTP_CONNECTIONS),
+        },
+        Family {
+            name: "omgd_http_requests_total",
+            help: "HTTP requests handled (all endpoints)",
+            metric: C(&HTTP_REQUESTS),
+        },
+        Family {
+            name: "omgd_http_throttled_total",
+            help: "Requests rejected 429 (queue saturation or client \
+                   quota)",
+            metric: C(&HTTP_THROTTLED),
+        },
+        Family {
+            name: "omgd_http_refused_total",
+            help: "Connections refused 503 (connection cap or drain)",
+            metric: C(&HTTP_REFUSED),
+        },
+        Family {
+            name: "omgd_queue_depth",
+            help: "Jobs currently waiting in the priority queue",
+            metric: G(&QUEUE_DEPTH),
+        },
+        Family {
+            name: "omgd_jobs_submitted_total",
+            help: "Jobs accepted into the queue",
+            metric: C(&JOBS_SUBMITTED),
+        },
+        Family {
+            name: "omgd_queue_wait_seconds",
+            help: "Enqueue-to-dispatch wait per job",
+            metric: H(&QUEUE_WAIT_SECONDS),
+        },
+        Family {
+            name: "omgd_jobs_completed_total",
+            help: "Jobs finished with status done",
+            metric: C(&JOBS_COMPLETED),
+        },
+        Family {
+            name: "omgd_jobs_failed_total",
+            help: "Jobs finished failed or panicked",
+            metric: C(&JOBS_FAILED),
+        },
+        Family {
+            name: "omgd_cache_hits_total",
+            help: "Jobs answered from a result cache",
+            metric: C(&CACHE_HITS),
+        },
+        Family {
+            name: "omgd_leases_granted_total",
+            help: "Work leases granted to remote workers",
+            metric: C(&LEASES_GRANTED),
+        },
+        Family {
+            name: "omgd_leases_expired_total",
+            help: "Leases that expired and were requeued",
+            metric: C(&LEASES_EXPIRED),
+        },
+        Family {
+            name: "omgd_artifact_sync_seconds",
+            help: "Artifact-set download+unpack time (worker-reported)",
+            metric: H(&SYNC_SECONDS),
+        },
+        Family {
+            name: "omgd_job_run_seconds",
+            help: "Job execution time, cache hits excluded",
+            metric: H(&RUN_SECONDS),
+        },
+        Family {
+            name: "omgd_cache_hit_seconds",
+            help: "End-to-end latency of cache-served jobs",
+            metric: H(&CACHE_HIT_SECONDS),
+        },
+        Family {
+            name: "omgd_train_step_seconds",
+            help: "Optimizer step duration (engine apply)",
+            metric: H(&STEP_SECONDS),
+        },
+        Family {
+            name: "omgd_mask_refresh_seconds",
+            help: "Mask refresh duration at period boundaries",
+            metric: H(&MASK_REFRESH_SECONDS),
+        },
+        Family {
+            name: "omgd_train_state_bytes",
+            help: "Live optimizer state bytes under the current mask",
+            metric: G(&STATE_BYTES),
+        },
+        Family {
+            name: "omgd_train_keep_ratio",
+            help: "Active fraction of the current mask",
+            metric: G(&KEEP_RATIO),
+        },
+    ]
+}
+
+/// Render families as Prometheus text exposition (format 0.0.4).
+pub fn render(families: &[Family]) -> String {
+    let mut out = String::new();
+    for f in families {
+        let kind = match f.metric {
+            Metric::C(_) => "counter",
+            Metric::G(_) => "gauge",
+            Metric::H(_) => "histogram",
+        };
+        out.push_str(&format!("# HELP {} {}\n", f.name, f.help));
+        out.push_str(&format!("# TYPE {} {}\n", f.name, kind));
+        match f.metric {
+            Metric::C(c) => {
+                out.push_str(&format!("{} {}\n", f.name, c.get()));
+            }
+            Metric::G(g) => {
+                out.push_str(&format!(
+                    "{} {}\n",
+                    f.name,
+                    format_g(g.get())
+                ));
+            }
+            Metric::H(h) => {
+                for (bound, cum) in h.cumulative() {
+                    let le = if bound.is_infinite() {
+                        "+Inf".to_string()
+                    } else {
+                        format_g(bound)
+                    };
+                    out.push_str(&format!(
+                        "{}_bucket{{le=\"{le}\"}} {cum}\n",
+                        f.name
+                    ));
+                }
+                out.push_str(&format!(
+                    "{}_sum {}\n",
+                    f.name,
+                    format_g(h.sum_secs())
+                ));
+                out.push_str(&format!(
+                    "{}_count {}\n",
+                    f.name,
+                    h.count()
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// The whole process registry as one scrape body.
+pub fn render_prometheus() -> String {
+    render(&families())
+}
+
+// ---------------------------------------------------------------------
+// Event journal
+// ---------------------------------------------------------------------
+
+/// Default ring capacity (`--metrics` can resize or disable it).
+pub const DEFAULT_JOURNAL_CAP: usize = 512;
+
+/// One structured job-lifecycle span. `kind` is the span name
+/// (`enqueue`, `lease`, `sync`, `run`, `report`); unknown identity
+/// fields stay empty, unknown durations stay 0.
+#[derive(Clone, Debug, Default)]
+pub struct Event {
+    pub kind: &'static str,
+    pub seq: u64,
+    /// Spec content hash (hex).
+    pub hash: String,
+    /// Fairness/client token the job was submitted under.
+    pub client: String,
+    /// Worker id that held the lease (remote) or `local`.
+    pub worker: String,
+    /// Enqueue → lease/dispatch wait.
+    pub queue_secs: f64,
+    /// Artifact sync time, as reported by the worker.
+    pub sync_secs: f64,
+    /// Execution time, cache replays excluded.
+    pub run_secs: f64,
+    /// End-to-end span total.
+    pub secs: f64,
+}
+
+impl Event {
+    pub fn new(kind: &'static str, seq: u64) -> Self {
+        Self { kind, seq, ..Self::default() }
+    }
+
+    fn render(&self, id: u64, ts_ms: u64) -> String {
+        format!(
+            "{{\"id\":{id},\"ts_ms\":{ts_ms},\"kind\":\"{}\",\
+             \"seq\":{},\"hash\":\"{}\",\"client\":\"{}\",\
+             \"worker\":\"{}\",\"queue_secs\":{},\"sync_secs\":{},\
+             \"run_secs\":{},\"secs\":{}}}",
+            esc(self.kind),
+            self.seq,
+            esc(&self.hash),
+            esc(&self.client),
+            esc(&self.worker),
+            format_g(self.queue_secs),
+            format_g(self.sync_secs),
+            format_g(self.run_secs),
+            format_g(self.secs),
+        )
+    }
+}
+
+struct JournalInner {
+    /// Ring storage: grows to `cap`, then overwrites at `write`.
+    buf: Vec<(u64, u64, Event)>,
+    write: usize,
+    next_id: u64,
+}
+
+/// Fixed-capacity ring of [`Event`]s behind one short mutex. Pushes
+/// are O(1) and never block on readers for longer than a tail copy.
+pub struct Journal {
+    inner: Mutex<JournalInner>,
+    /// Capacity is read on the push fast path without the lock so a
+    /// disabled journal (cap 0) costs one atomic load per event.
+    cap: AtomicUsize,
+    dropped: AtomicU64,
+}
+
+static JOURNAL: Journal = Journal {
+    inner: Mutex::new(JournalInner {
+        buf: Vec::new(),
+        write: 0,
+        next_id: 0,
+    }),
+    cap: AtomicUsize::new(DEFAULT_JOURNAL_CAP),
+    dropped: AtomicU64::new(0),
+};
+
+/// The process-global journal.
+pub fn journal() -> &'static Journal {
+    &JOURNAL
+}
+
+fn now_ms() -> u64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
+}
+
+impl Journal {
+    /// Resize the ring (0 disables). Existing events are retained
+    /// oldest-first up to the new capacity.
+    pub fn set_capacity(&self, cap: usize) {
+        let mut g = lock(&self.inner);
+        let kept = self.snapshot_locked(&g);
+        self.cap.store(cap, Ordering::Relaxed);
+        g.buf.clear();
+        g.write = 0;
+        let skip = kept.len().saturating_sub(cap);
+        for e in kept.into_iter().skip(skip) {
+            g.buf.push(e);
+        }
+        if cap > 0 {
+            g.write = g.buf.len() % cap;
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap.load(Ordering::Relaxed)
+    }
+
+    /// Events evicted by ring wrap since process start.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Append one event (no-op when disabled).
+    pub fn push(&self, ev: Event) {
+        let cap = self.capacity();
+        if cap == 0 {
+            return;
+        }
+        let mut g = lock(&self.inner);
+        let id = g.next_id;
+        g.next_id += 1;
+        let entry = (id, now_ms(), ev);
+        if g.buf.len() < cap {
+            g.buf.push(entry);
+            g.write = g.buf.len() % cap;
+        } else {
+            let w = g.write;
+            g.buf[w] = entry;
+            g.write = (w + 1) % cap;
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// In-order snapshot (oldest → newest) under the lock.
+    fn snapshot_locked(
+        &self,
+        g: &JournalInner,
+    ) -> Vec<(u64, u64, Event)> {
+        if g.buf.len() < self.capacity() || g.buf.is_empty() {
+            g.buf.clone()
+        } else {
+            let mut out = Vec::with_capacity(g.buf.len());
+            out.extend_from_slice(&g.buf[g.write..]);
+            out.extend_from_slice(&g.buf[..g.write]);
+            out
+        }
+    }
+
+    /// The last `n` events, oldest first, rendered as JSON lines.
+    pub fn tail(&self, n: usize) -> Vec<String> {
+        let snap = {
+            let g = lock(&self.inner);
+            self.snapshot_locked(&g)
+        };
+        let skip = snap.len().saturating_sub(n);
+        snap[skip..]
+            .iter()
+            .map(|(id, ts, ev)| ev.render(*id, *ts))
+            .collect()
+    }
+
+    /// Total events ever pushed.
+    pub fn pushed(&self) -> u64 {
+        lock(&self.inner).next_id
+    }
+}
+
+/// Journal lock, recovering from poison — telemetry must never take a
+/// worker thread down with it.
+fn lock(m: &Mutex<JournalInner>) -> std::sync::MutexGuard<'_, JournalInner> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+// ---------------------------------------------------------------------
+// Exposition verbosity
+// ---------------------------------------------------------------------
+
+/// `--metrics` knob: how much telemetry the gateway serves.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum MetricsLevel {
+    /// `/metrics` and `/events` return 404; journal disabled.
+    Off,
+    /// `/metrics` served; journal disabled, `/events` returns 404.
+    Summary,
+    /// Everything on (the default).
+    #[default]
+    Full,
+}
+
+impl MetricsLevel {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            MetricsLevel::Off => "off",
+            MetricsLevel::Summary => "summary",
+            MetricsLevel::Full => "full",
+        }
+    }
+}
+
+impl std::str::FromStr for MetricsLevel {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "off" => Ok(MetricsLevel::Off),
+            "summary" => Ok(MetricsLevel::Summary),
+            "full" => Ok(MetricsLevel::Full),
+            other => Err(anyhow::anyhow!(
+                "unknown metrics level {other:?} \
+                 (expected off|summary|full)"
+            )),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_read_back() {
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        let g = Gauge::new();
+        assert_eq!(g.get(), 0.0);
+        g.set(0.25);
+        assert_eq!(g.get(), 0.25);
+        g.set(-3.5);
+        assert_eq!(g.get(), -3.5);
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_and_end_at_count() {
+        static BOUNDS: &[f64] = &[0.1, 1.0, 10.0];
+        let h = Histogram::new(BOUNDS);
+        for v in [0.05, 0.5, 0.5, 5.0, 50.0] {
+            h.observe(v);
+        }
+        let cum = h.cumulative();
+        assert_eq!(
+            cum,
+            vec![
+                (0.1, 1),
+                (1.0, 3),
+                (10.0, 4),
+                (f64::INFINITY, 5)
+            ]
+        );
+        // monotone non-decreasing, +Inf == count
+        for w in cum.windows(2) {
+            assert!(w[1].1 >= w[0].1);
+        }
+        assert_eq!(cum.last().unwrap().1, h.count());
+        assert!((h.sum_secs() - 56.05).abs() < 1e-6);
+    }
+
+    #[test]
+    fn histogram_percentiles_are_bucket_upper_bounds() {
+        static BOUNDS: &[f64] = &[0.1, 1.0, 10.0];
+        let h = Histogram::new(BOUNDS);
+        assert_eq!(h.percentile(50.0), 0.0); // empty
+        // 10 obs: 5 in le=0.1, 4 in le=1, 1 overflow
+        for _ in 0..5 {
+            h.observe(0.05);
+        }
+        for _ in 0..4 {
+            h.observe(0.5);
+        }
+        h.observe(99.0);
+        assert_eq!(h.percentile(0.0), 0.1); // rank clamps to 1
+        assert_eq!(h.percentile(50.0), 0.1); // rank 5 → first bucket
+        assert_eq!(h.percentile(90.0), 1.0); // rank 9 → second bucket
+        // rank 10 lands in overflow → last finite bound
+        assert_eq!(h.percentile(99.0), 10.0);
+        assert_eq!(h.percentile(100.0), 10.0);
+    }
+
+    #[test]
+    fn histogram_clamps_garbage_observations() {
+        static BOUNDS: &[f64] = &[1.0];
+        let h = Histogram::new(BOUNDS);
+        h.observe(f64::NAN);
+        h.observe(-5.0);
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.cumulative()[0], (1.0, 2));
+        assert_eq!(h.sum_secs(), 0.0);
+    }
+
+    #[test]
+    fn render_golden_counter_gauge() {
+        static C: Counter = Counter::new();
+        static G: Gauge = Gauge::new();
+        C.add(7);
+        G.set(0.5);
+        let fams = vec![
+            Family {
+                name: "t_jobs_total",
+                help: "test jobs",
+                metric: Metric::C(&C),
+            },
+            Family {
+                name: "t_depth",
+                help: "test depth",
+                metric: Metric::G(&G),
+            },
+        ];
+        assert_eq!(
+            render(&fams),
+            "# HELP t_jobs_total test jobs\n\
+             # TYPE t_jobs_total counter\n\
+             t_jobs_total 7\n\
+             # HELP t_depth test depth\n\
+             # TYPE t_depth gauge\n\
+             t_depth 0.5\n"
+        );
+    }
+
+    #[test]
+    fn render_histogram_exposition_shape() {
+        static BOUNDS: &[f64] = &[0.5, 2.0];
+        static H: Histogram = Histogram::new(BOUNDS);
+        H.observe(0.1);
+        H.observe(1.0);
+        H.observe(9.0);
+        let fams = vec![Family {
+            name: "t_wait_seconds",
+            help: "test wait",
+            metric: Metric::H(&H),
+        }];
+        let text = render(&fams);
+        assert!(text.contains("# TYPE t_wait_seconds histogram\n"));
+        assert!(text
+            .contains("t_wait_seconds_bucket{le=\"0.5\"} 1\n"));
+        assert!(text.contains("t_wait_seconds_bucket{le=\"2\"} 2\n"));
+        assert!(text
+            .contains("t_wait_seconds_bucket{le=\"+Inf\"} 3\n"));
+        assert!(text.contains("t_wait_seconds_count 3\n"));
+        assert!(text.contains("t_wait_seconds_sum 10.1\n"));
+    }
+
+    #[test]
+    fn registry_has_at_least_twelve_families_spanning_layers() {
+        let fams = families();
+        assert!(fams.len() >= 12, "only {} families", fams.len());
+        let names: Vec<&str> = fams.iter().map(|f| f.name).collect();
+        // one representative per layer
+        for want in [
+            "omgd_http_requests_total",   // gateway
+            "omgd_queue_wait_seconds",    // queue
+            "omgd_jobs_completed_total",  // worker
+            "omgd_train_step_seconds",    // training
+        ] {
+            assert!(names.contains(&want), "missing {want}");
+        }
+        let text = render_prometheus();
+        assert_eq!(
+            text.matches("# TYPE ").count(),
+            fams.len(),
+            "every family gets exactly one TYPE line"
+        );
+    }
+
+    #[test]
+    fn summary_json_parses_and_counts() {
+        static BOUNDS: &[f64] = &[0.5, 2.0];
+        let h = Histogram::new(BOUNDS);
+        h.observe(0.25);
+        h.observe(1.0);
+        let j =
+            crate::util::json::Json::parse(&h.summary_json()).unwrap();
+        assert_eq!(j.at("count").as_usize(), Some(2));
+        assert_eq!(j.at("p50").as_f64(), Some(0.5));
+        assert_eq!(j.at("p99").as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn journal_ring_wraps_and_keeps_newest() {
+        // A private journal (not the global) for deterministic tests.
+        let j = Journal {
+            inner: Mutex::new(JournalInner {
+                buf: Vec::new(),
+                write: 0,
+                next_id: 0,
+            }),
+            cap: AtomicUsize::new(3),
+            dropped: AtomicU64::new(0),
+        };
+        for seq in 0..5u64 {
+            j.push(Event::new("enqueue", seq));
+        }
+        assert_eq!(j.pushed(), 5);
+        assert_eq!(j.dropped(), 2);
+        let tail = j.tail(10);
+        assert_eq!(tail.len(), 3);
+        // oldest→newest, ids dense
+        assert!(tail[0].contains("\"id\":2"));
+        assert!(tail[2].contains("\"id\":4"));
+        assert!(tail[2].contains("\"seq\":4"));
+        // a smaller tail keeps the newest
+        let last = j.tail(1);
+        assert_eq!(last.len(), 1);
+        assert!(last[0].contains("\"id\":4"));
+    }
+
+    #[test]
+    fn journal_capacity_zero_disables() {
+        let j = Journal {
+            inner: Mutex::new(JournalInner {
+                buf: Vec::new(),
+                write: 0,
+                next_id: 0,
+            }),
+            cap: AtomicUsize::new(0),
+            dropped: AtomicU64::new(0),
+        };
+        j.push(Event::new("run", 1));
+        assert_eq!(j.pushed(), 0);
+        assert!(j.tail(10).is_empty());
+        // re-enable, then shrink with retention
+        j.set_capacity(4);
+        for seq in 0..4u64 {
+            j.push(Event::new("run", seq));
+        }
+        j.set_capacity(2);
+        let tail = j.tail(10);
+        assert_eq!(tail.len(), 2);
+        assert!(tail[1].contains("\"seq\":3"));
+    }
+
+    #[test]
+    fn journal_events_render_as_json() {
+        let mut ev = Event::new("report", 7);
+        ev.hash = "abc".into();
+        ev.client = "alpha".into();
+        ev.worker = "w-1".into();
+        ev.queue_secs = 0.5;
+        ev.sync_secs = 0.25;
+        ev.run_secs = 1.5;
+        ev.secs = 2.25;
+        let line = ev.render(3, 1000);
+        let j = crate::util::json::Json::parse(&line).unwrap();
+        assert_eq!(j.at("kind").as_str(), Some("report"));
+        assert_eq!(j.at("seq").as_usize(), Some(7));
+        assert_eq!(j.at("worker").as_str(), Some("w-1"));
+        assert_eq!(j.at("queue_secs").as_f64(), Some(0.5));
+        assert_eq!(j.at("run_secs").as_f64(), Some(1.5));
+    }
+
+    #[test]
+    fn metrics_levels_parse() {
+        assert_eq!(
+            "off".parse::<MetricsLevel>().unwrap(),
+            MetricsLevel::Off
+        );
+        assert_eq!(
+            "summary".parse::<MetricsLevel>().unwrap(),
+            MetricsLevel::Summary
+        );
+        assert_eq!(
+            "full".parse::<MetricsLevel>().unwrap(),
+            MetricsLevel::Full
+        );
+        assert!("loud".parse::<MetricsLevel>().is_err());
+        assert_eq!(MetricsLevel::default(), MetricsLevel::Full);
+    }
+}

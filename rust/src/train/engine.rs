@@ -21,6 +21,8 @@ use crate::config::{Method, OptFamily, RunConfig};
 use crate::coordinator::{LisaScheduler, LisaVariant, Mask, MaskRuns,
                          MaskSet};
 use crate::manifest::Manifest;
+use crate::metrics::Timer;
+use crate::obs;
 use crate::optim::{galore, Optimizer, SiftOptimizer};
 use crate::rng::Rng;
 use crate::runtime::bundle::UpdateKind;
@@ -138,6 +140,7 @@ impl MethodEngine {
     /// support. Errors (e.g. a malformed manifest's tensor table)
     /// surface to the caller instead of panicking a worker thread.
     pub fn on_period(&mut self, rng: &mut Rng) -> Result<()> {
+        let t = Timer::start();
         self.periods += 1;
         let total = self.man.total_len;
         match &mut self.plan {
@@ -175,14 +178,18 @@ impl MethodEngine {
         if let Backend::Native(opt) = &mut self.backend {
             opt.on_mask_refresh(self.mask.runs());
         }
+        obs::MASK_REFRESH_SECONDS.observe(t.total());
+        obs::STATE_BYTES.set(self.state_bytes() as f64);
+        obs::KEEP_RATIO.set(self.keep_ratio());
         Ok(())
     }
 
     /// Apply one optimizer step (dispatches HLO kernel or native).
     pub fn apply(&mut self, bundle: &ModelBundle, p: &mut Vec<f32>,
                  g: &[f32], lr: f32) -> Result<()> {
+        let t = Timer::start();
         let Self { backend, mask, opt, .. } = self;
-        match backend {
+        let out = match backend {
             Backend::HloAdamW { m, v, t } => {
                 ensure!(bundle.update_kind == UpdateKind::AdamW,
                         "bundle update kind mismatch");
@@ -216,7 +223,9 @@ impl MethodEngine {
                 o.step_runs(p, g, mask.runs(), lr);
                 Ok(())
             }
-        }
+        };
+        obs::STEP_SECONDS.observe(t.total());
+        out
     }
 
     /// Apply a step with a *native* optimizer mirroring the HLO kernel —
@@ -224,6 +233,7 @@ impl MethodEngine {
     /// Walks the mask's segment runs: O(active) work, frozen
     /// coordinates are never read.
     pub fn apply_native(&mut self, p: &mut [f32], g: &[f32], lr: f32) {
+        let t = Timer::start();
         let Self { backend, mask, opt, .. } = self;
         match backend {
             Backend::HloAdamW { m, v, t } => {
@@ -262,6 +272,7 @@ impl MethodEngine {
             }
             Backend::Native(o) => o.step_runs(p, g, mask.runs(), lr),
         }
+        obs::STEP_SECONDS.observe(t.total());
     }
 
     /// Current mask (read-only view).

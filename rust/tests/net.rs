@@ -745,3 +745,263 @@ fn chunked_request_bodies_stream_jobs_sessions() {
     let stats = gateway.join().unwrap();
     assert_eq!(stats.jobs.done, 2);
 }
+
+/// Tentpole: `GET /metrics` serves well-formed Prometheus text — ≥12
+/// families spanning gateway, queue, worker, and training layers,
+/// every `# TYPE` paired with a `# HELP`, and cumulative histogram
+/// buckets that never decrease and end at `le="+Inf"`.
+///
+/// The metrics are process-global and this binary's tests run in
+/// parallel, so every value assertion is monotonic (`>=`), never `==`.
+#[test]
+fn metrics_exposition_is_well_formed_prometheus() {
+    let (addr, gateway) = start_gateway(1, ListenOptions::default());
+    // Run two jobs so the job/queue families are live at scrape time.
+    let body: String = (0..2).map(request_line).collect();
+    let (status, _, _) = http(addr, "POST", "/jobs", &body);
+    assert_eq!(status, 200);
+
+    let (status, headers, text) = http(addr, "GET", "/metrics", "");
+    assert_eq!(status, 200);
+    assert_eq!(
+        headers.get("content-type").map(String::as_str),
+        Some("text/plain; version=0.0.4; charset=utf-8")
+    );
+
+    let mut help = BTreeSet::new();
+    let mut types: BTreeMap<String, String> = BTreeMap::new();
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            help.insert(
+                rest.split_whitespace().next().unwrap().to_string(),
+            );
+        } else if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            types.insert(
+                it.next().unwrap().to_string(),
+                it.next().unwrap().to_string(),
+            );
+        }
+    }
+    assert!(
+        types.len() >= 12,
+        "expected ≥12 metric families, got {}",
+        types.len()
+    );
+    for (name, kind) in &types {
+        assert!(name.starts_with("omgd_"), "{name}");
+        assert!(help.contains(name), "{name} lacks a # HELP line");
+        assert!(
+            matches!(kind.as_str(), "counter" | "gauge" | "histogram"),
+            "{name}: unknown type {kind}"
+        );
+    }
+    // One family per layer, by exact name (the catalog is an API).
+    for name in [
+        "omgd_http_requests_total",
+        "omgd_jobs_submitted_total",
+        "omgd_queue_depth",
+        "omgd_queue_wait_seconds",
+        "omgd_jobs_completed_total",
+        "omgd_leases_granted_total",
+        "omgd_job_run_seconds",
+        "omgd_cache_hit_seconds",
+        "omgd_train_step_seconds",
+        "omgd_train_state_bytes",
+    ] {
+        assert!(types.contains_key(name), "missing family {name}");
+    }
+    let sample = |name: &str| -> f64 {
+        text.lines()
+            .find(|l| {
+                l.starts_with(name)
+                    && l.as_bytes().get(name.len()) == Some(&b' ')
+            })
+            .and_then(|l| l.split_whitespace().nth(1))
+            .and_then(|v| v.parse().ok())
+            .unwrap_or_else(|| panic!("no sample line for {name}"))
+    };
+    assert!(sample("omgd_http_requests_total") >= 2.0);
+    assert!(sample("omgd_jobs_submitted_total") >= 2.0);
+    assert!(sample("omgd_jobs_completed_total") >= 2.0);
+    // Histogram buckets are cumulative: non-decreasing, `+Inf` last.
+    for (name, kind) in &types {
+        if kind != "histogram" {
+            continue;
+        }
+        let prefix = format!("{name}_bucket{{le=\"");
+        let bucket_lines: Vec<&str> =
+            text.lines().filter(|l| l.starts_with(&prefix)).collect();
+        assert!(!bucket_lines.is_empty(), "{name} has no buckets");
+        let counts: Vec<u64> = bucket_lines
+            .iter()
+            .map(|l| {
+                l.split_whitespace().nth(1).unwrap().parse().unwrap()
+            })
+            .collect();
+        assert!(
+            counts.windows(2).all(|w| w[0] <= w[1]),
+            "{name} buckets must be cumulative: {counts:?}"
+        );
+        assert!(
+            bucket_lines.last().unwrap().contains("le=\"+Inf\""),
+            "{name} must close with the +Inf bucket"
+        );
+    }
+
+    let (status, _, _) = http(addr, "POST", "/shutdown", "");
+    assert_eq!(status, 200);
+    gateway.join().unwrap();
+}
+
+/// Tentpole + satellite: per-phase timings measured by a loopback
+/// worker agent come back over the wire — `/stats` phase histograms
+/// fill in and the `/events` journal carries lease → report spans
+/// with non-zero run durations — and `--metrics off|summary` gate the
+/// telemetry endpoints. One test, ordered, because the journal
+/// capacity is process-global: the gating gateways disable it, so
+/// they must run after the journal assertions.
+#[test]
+fn distributed_phase_timings_and_metrics_gating() {
+    use omgd::jobs::{run_grid_remote, run_worker_with, WorkerOptions};
+    use omgd::obs::MetricsLevel;
+
+    let lopts = ListenOptions {
+        poll_secs: 2,
+        ..ListenOptions::default()
+    };
+    // Coordinator-only gateway: every job runs on the remote agent.
+    let (addr, gateway) = start_gateway(0, lopts);
+
+    // Nonexistent artifacts dir → fingerprint "absent", no sync; the
+    // runner sleeps so worker-measured run_secs is provably non-zero.
+    let mut specs = Vec::new();
+    for seed in 0..3u64 {
+        let mut cfg = omgd::config::RunConfig::default();
+        cfg.seed = seed;
+        cfg.artifacts_dir = "/nonexistent/omgd-net-obs-test".into();
+        specs.push(JobSpec {
+            kind: omgd::jobs::ExperimentKind::Finetune {
+                task: "CoLA".into(),
+                epochs: 1,
+            },
+            cfg,
+        });
+    }
+    let tmp = std::env::temp_dir()
+        .join(format!("omgd-net-obs-{}", std::process::id()));
+    std::fs::create_dir_all(&tmp).unwrap();
+    let wopts = WorkerOptions {
+        connect: addr.to_string(),
+        workers: 1,
+        worker_id: "w-obs".into(),
+        cache_dir: Some(
+            tmp.join("cache").to_string_lossy().into_owned(),
+        ),
+        store_dir: Some(
+            tmp.join("store").to_string_lossy().into_owned(),
+        ),
+        max_failures: 50,
+        ..WorkerOptions::default()
+    };
+    let report = std::thread::scope(|scope| {
+        let agent = scope.spawn(|| {
+            run_worker_with(&wopts, |_wid| {
+                |sp: &JobSpec| {
+                    std::thread::sleep(Duration::from_millis(5));
+                    Ok(stub_outcome(sp))
+                }
+            })
+            .unwrap()
+        });
+        let report =
+            run_grid_remote(&addr.to_string(), specs, None).unwrap();
+
+        // Phase histograms: ≥3 queue-waits and runs observed, with
+        // the 5 ms runs pushing the mean above zero (globals again:
+        // monotonic assertions only).
+        let (status, _, body) = http(addr, "GET", "/stats", "");
+        assert_eq!(status, 200);
+        let j = Json::parse(&body).unwrap();
+        let run = j.at("phases").at("run");
+        assert!(run.at("count").as_usize().unwrap() >= 3, "{body}");
+        assert!(run.at("mean").as_f64().unwrap() > 0.0, "{body}");
+        let qw = j.at("phases").at("queue_wait");
+        assert!(qw.at("count").as_usize().unwrap() >= 3, "{body}");
+
+        // The journal carries this worker's lease → report spans;
+        // report spans carry the wire-reported run duration.
+        let (status, headers, events) =
+            http(addr, "GET", "/events?n=512", "");
+        assert_eq!(status, 200);
+        assert_eq!(
+            headers.get("content-type").map(String::as_str),
+            Some("application/x-ndjson")
+        );
+        let mine: Vec<Json> = events
+            .lines()
+            .map(|l| Json::parse(l).expect("journal line is JSON"))
+            .filter(|e| e.at("worker").as_str() == Some("w-obs"))
+            .collect();
+        let leases = mine
+            .iter()
+            .filter(|e| e.at("kind").as_str() == Some("lease"))
+            .count();
+        let reports: Vec<&Json> = mine
+            .iter()
+            .filter(|e| e.at("kind").as_str() == Some("report"))
+            .collect();
+        assert!(leases >= 3, "want ≥3 lease spans:\n{events}");
+        assert!(reports.len() >= 3, "want ≥3 report spans:\n{events}");
+        for r in &reports {
+            assert!(
+                r.at("run_secs").as_f64().unwrap() > 0.0,
+                "report spans carry worker-measured run time: {r:?}"
+            );
+            assert!(r.at("secs").as_f64().unwrap() > 0.0, "{r:?}");
+        }
+
+        let (status, _, _) = http(addr, "POST", "/shutdown", "");
+        assert_eq!(status, 200);
+        agent.join().unwrap();
+        report
+    });
+    assert_eq!(report.n_jobs(), 3);
+    assert_eq!(report.n_failed(), 0);
+    gateway.join().unwrap();
+    std::fs::remove_dir_all(&tmp).ok();
+
+    // `--metrics off`: both telemetry endpoints 404.
+    let (addr, gw) = start_gateway(
+        1,
+        ListenOptions {
+            metrics: MetricsLevel::Off,
+            ..ListenOptions::default()
+        },
+    );
+    let (status, _, body) = http(addr, "GET", "/metrics", "");
+    assert_eq!(status, 404, "{body}");
+    let (status, _, body) = http(addr, "GET", "/events", "");
+    assert_eq!(status, 404, "{body}");
+    http(addr, "POST", "/shutdown", "");
+    gw.join().unwrap();
+
+    // `--metrics summary`: scrape lives on, the journal does not.
+    let (addr, gw) = start_gateway(
+        1,
+        ListenOptions {
+            metrics: MetricsLevel::Summary,
+            ..ListenOptions::default()
+        },
+    );
+    let (status, _, _) = http(addr, "GET", "/metrics", "");
+    assert_eq!(status, 200);
+    let (status, _, body) = http(addr, "GET", "/events", "");
+    assert_eq!(status, 404);
+    assert!(body.contains("--metrics full"), "{body}");
+    http(addr, "POST", "/shutdown", "");
+    gw.join().unwrap();
+    // Those gateways disabled the process-global journal ring;
+    // restore it for anything that scrapes later in this binary.
+    omgd::obs::journal().set_capacity(omgd::obs::DEFAULT_JOURNAL_CAP);
+}
