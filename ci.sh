@@ -116,7 +116,9 @@ else
   SMOKE=$(mktemp -d)
   SERVE_PID=""
   WORKER_PID=""
+  GRID_PID=""
   cleanup() {
+    [[ -n "$GRID_PID" ]] && kill "$GRID_PID" 2>/dev/null || true
     [[ -n "$WORKER_PID" ]] && kill "$WORKER_PID" 2>/dev/null || true
     [[ -n "$SERVE_PID" ]] && kill "$SERVE_PID" 2>/dev/null || true
     rm -rf "$SMOKE"
@@ -225,8 +227,27 @@ else
       exit 1
     fi
   done
+  # Durability telemetry: the gateway journals under its cache dir
+  # (serve --listen always does), so the journal/checkpoint families
+  # must be exposed and the record counter must have moved.
+  for fam in omgd_journal_records_total omgd_journal_replayed_total \
+             omgd_journal_torn_total omgd_journal_compactions_total \
+             omgd_ckpt_writes_total omgd_ckpt_resumes_total \
+             omgd_ckpt_parked_total; do
+    if ! grep -q "^# TYPE $fam " "$SMOKE/metrics.body"; then
+      echo "telemetry smoke FAILED: /metrics is missing $fam" >&2
+      cat "$SMOKE/metrics.body" >&2
+      exit 1
+    fi
+  done
+  JR=$(prom omgd_journal_records_total)
+  if [[ -z "$JR" || "$JR" == "0" ]]; then
+    echo "telemetry smoke FAILED: the gateway journaled nothing" \
+         "(omgd_journal_records_total=${JR:-missing})" >&2
+    exit 1
+  fi
   echo "   telemetry smoke passed ($FAMILIES metric families;" \
-       "/metrics agrees with /stats)"
+       "/metrics agrees with /stats; $JR journal records)"
 
   # Drain the gateway and let the worker notice and exit on its own.
   exec 3<>"/dev/tcp/$HOST/$PORT"
@@ -239,6 +260,131 @@ else
   WORKER_PID=""
   echo "   distributed smoke passed (two-client merged CSV" \
        "byte-identical to local)"
+
+  # -------------------------------------------------------------------
+  # Durability smoke: the same remote path, but the coordinator is
+  # OMGD_FAULT-killed (a real abort(): no destructors, no flushes) at
+  # a mid-grid journal append, then restarted on the same cache dir.
+  # The still-running `grid --remote` client must recover on its own —
+  # journal replay re-dispatches the interrupted jobs and the client
+  # re-polls its acked seqs — and the recovered CSV must be
+  # byte-identical to the local pool's (docs/durability.md).
+  # -------------------------------------------------------------------
+  echo "== durability smoke: kill coordinator at journal.append," \
+       "restart, recover"
+  OMGD_FAULT=journal.append:4 "$BIN" serve --listen 127.0.0.1:0 \
+      --workers 0 --poll-secs 2 \
+      --cache-dir "$SMOKE/dur-cache" 2> "$SMOKE/dur-serve1.log" &
+  SERVE_PID=$!
+  ADDR=""
+  for _ in $(seq 1 100); do
+    ADDR=$(sed -n 's!.*listening on http://\([0-9.]*:[0-9]*\).*!\1!p' \
+        "$SMOKE/dur-serve1.log" | head -n1)
+    [[ -n "$ADDR" ]] && break
+    sleep 0.1
+  done
+  if [[ -z "$ADDR" ]]; then
+    echo "durability smoke FAILED: gateway never bound" >&2
+    cat "$SMOKE/dur-serve1.log" >&2
+    exit 1
+  fi
+  echo "   doomed gateway on $ADDR (dies at the 4th journal append)"
+  # --max-failures is generous: the agent must survive the coordinator
+  # outage and reattach to the restarted one.
+  "$BIN" worker --connect "$ADDR" --workers 2 --id ci-dur \
+      --max-failures 200 \
+      --cache-dir "$SMOKE/dur-worker-cache" \
+      --artifact-store "$SMOKE/dur-worker-store" \
+      2> "$SMOKE/dur-worker.log" &
+  WORKER_PID=$!
+  "$BIN" grid --remote "$ADDR" "${GRID_A[@]}" \
+      --out "$SMOKE/dur-remote.csv" > "$SMOKE/dur-remote.log" 2>&1 &
+  GRID_PID=$!
+
+  # Appends 1-2 are the grid's admissions, 3-4 the worker's leases /
+  # first completion: the abort lands mid-grid, after the client holds
+  # acked seqs. 60s budget for the crash to happen.
+  for _ in $(seq 1 600); do
+    kill -0 "$SERVE_PID" 2>/dev/null || break
+    sleep 0.1
+  done
+  if kill -0 "$SERVE_PID" 2>/dev/null; then
+    echo "durability smoke FAILED: faultpoint never fired" >&2
+    cat "$SMOKE/dur-serve1.log" >&2
+    exit 1
+  fi
+  wait "$SERVE_PID" 2>/dev/null || true
+  SERVE_PID=""
+  if ! grep -q 'faultpoint "journal.append"' "$SMOKE/dur-serve1.log"; then
+    echo "durability smoke FAILED: coordinator exited without hitting" \
+         "the faultpoint" >&2
+    cat "$SMOKE/dur-serve1.log" >&2
+    exit 1
+  fi
+  if [[ ! -s "$SMOKE/dur-cache/journal.log" ]]; then
+    echo "durability smoke FAILED: no journal survived the crash" >&2
+    exit 1
+  fi
+
+  # Restart on the SAME address and cache dir. The port can linger in
+  # TIME_WAIT for a moment after the abort — retry the bind.
+  RESTARTED=0
+  for _ in $(seq 1 40); do
+    "$BIN" serve --listen "$ADDR" --workers 0 --poll-secs 2 \
+        --cache-dir "$SMOKE/dur-cache" 2> "$SMOKE/dur-serve2.log" &
+    SERVE_PID=$!
+    sleep 0.3
+    if kill -0 "$SERVE_PID" 2>/dev/null \
+        && grep -q 'listening on' "$SMOKE/dur-serve2.log"; then
+      RESTARTED=1
+      break
+    fi
+    wait "$SERVE_PID" 2>/dev/null || true
+    SERVE_PID=""
+    sleep 0.25
+  done
+  if (( ! RESTARTED )); then
+    echo "durability smoke FAILED: could not rebind $ADDR" >&2
+    cat "$SMOKE/dur-serve2.log" >&2
+    exit 1
+  fi
+  if ! grep -q 'journal replay' "$SMOKE/dur-serve2.log"; then
+    echo "durability smoke FAILED: restart did not replay the journal" >&2
+    cat "$SMOKE/dur-serve2.log" >&2
+    exit 1
+  fi
+  echo "   restarted on $ADDR:" \
+       "$(grep 'journal replay' "$SMOKE/dur-serve2.log" | head -n1)"
+
+  # The client recovers without operator action (cells fail fast in CI
+  # — no artifacts — so the grid exits non-zero like the main smoke;
+  # the CSV is what matters).
+  wait "$GRID_PID" || true
+  GRID_PID=""
+  if [[ ! -s "$SMOKE/dur-remote.csv" ]]; then
+    echo "durability smoke FAILED: recovered grid wrote no CSV" >&2
+    tail -n 40 "$SMOKE"/dur-*.log >&2
+    exit 1
+  fi
+  # local-a.csv is the same split on the local pool (computed above).
+  if ! diff -u "$SMOKE/local-a.csv" "$SMOKE/dur-remote.csv" >&2; then
+    echo "durability smoke FAILED: recovered aggregate differs from" \
+         "the local pool's" >&2
+    tail -n 40 "$SMOKE"/dur-*.log >&2
+    exit 1
+  fi
+
+  HOST="${ADDR%:*}"; PORT="${ADDR##*:}"
+  exec 3<>"/dev/tcp/$HOST/$PORT"
+  printf 'POST /shutdown HTTP/1.1\r\nHost: ci\r\nContent-Length: 0\r\nConnection: close\r\n\r\n' >&3
+  cat <&3 > /dev/null || true
+  exec 3>&- || true
+  wait "$SERVE_PID" || true
+  SERVE_PID=""
+  wait "$WORKER_PID" || true
+  WORKER_PID=""
+  echo "   durability smoke passed (crash at journal.append:4," \
+       "replayed, recovered CSV byte-identical to local)"
 fi
 
 echo "CI gate passed."

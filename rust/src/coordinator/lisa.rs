@@ -75,6 +75,36 @@ impl LisaScheduler {
         self.middle.len() as f32 / self.gamma as f32
     }
 
+    /// The current WOR pool (indices into the middle-layer list), for
+    /// checkpointing — together with `cycles` this is the scheduler's
+    /// whole mutable state.
+    pub fn pool(&self) -> &[usize] {
+        &self.pool
+    }
+
+    /// Restore checkpointed traversal state. Errors on out-of-range or
+    /// duplicate pool indices (a corrupt checkpoint must not panic a
+    /// worker later, inside `next_period`).
+    pub fn set_state(
+        &mut self,
+        pool: Vec<usize>,
+        cycles: usize,
+    ) -> anyhow::Result<()> {
+        let mut seen = vec![false; self.middle.len()];
+        for &i in &pool {
+            anyhow::ensure!(
+                i < self.middle.len(),
+                "pool index {i} out of range ({} middle layers)",
+                self.middle.len()
+            );
+            anyhow::ensure!(!seen[i], "duplicate pool index {i}");
+            seen[i] = true;
+        }
+        self.pool = pool;
+        self.cycles = cycles;
+        Ok(())
+    }
+
     /// Draw the next period's active set (Algorithm 2 lines 4–9).
     pub fn next_period(&mut self, rng: &mut Rng) -> ActiveSet {
         let scale = if self.variant.uses_scale() {
@@ -230,6 +260,39 @@ mod tests {
         }
         // 3 periods per cycle → after 9 periods, 2 completed resets
         assert_eq!(sched.cycles, 2);
+    }
+
+    #[test]
+    fn pool_state_round_trips_bitwise() {
+        let mut rng = Rng::seed_from_u64(8);
+        let mut a =
+            LisaScheduler::new(LisaVariant::LisaWor, layers(7), 2);
+        for _ in 0..5 {
+            a.next_period(&mut rng);
+        }
+        let mut b =
+            LisaScheduler::new(LisaVariant::LisaWor, layers(7), 2);
+        b.set_state(a.pool().to_vec(), a.cycles).unwrap();
+        // identical RNG + identical pool → identical future draws
+        let mut rng_a = Rng::seed_from_u64(99);
+        let mut rng_b = Rng::seed_from_u64(99);
+        for _ in 0..10 {
+            assert_eq!(
+                a.next_period(&mut rng_a),
+                b.next_period(&mut rng_b)
+            );
+        }
+    }
+
+    #[test]
+    fn set_state_rejects_corrupt_pools() {
+        let mut s =
+            LisaScheduler::new(LisaVariant::LisaWor, layers(3), 1);
+        assert!(s.set_state(vec![0, 3], 0).is_err(), "out of range");
+        assert!(s.set_state(vec![1, 1], 0).is_err(), "duplicate");
+        assert!(s.set_state(vec![2, 0], 5).is_ok());
+        assert_eq!(s.cycles, 5);
+        assert_eq!(s.pool(), &[2, 0]);
     }
 
     #[test]

@@ -26,11 +26,24 @@
 //! entries written after a pass's reference instant are never
 //! candidates, so a worker publishing a result mid-GC cannot lose it.
 //! Knobs and sizing guidance: `docs/operations.md`.
+//!
+//! Checkpoints: the same directory also parks training checkpoints
+//! (`{spec-hash}-{step}.ckpt`, written via
+//! [`ResultCache::put_checkpoint`]) so a re-leased job can resume
+//! instead of recomputing. Checkpoint files are invisible to the
+//! entry iterator (and thus to `len`/`stats` and the size cap) and
+//! are evicted by the **age cap only** — and never while their spec
+//! hash appears in the caller-supplied protected set
+//! ([`ResultCache::gc_protected`]), which the gateway derives from
+//! live journal entries. See `docs/durability.md`.
 
 use super::pool::JobOutcome;
 use super::spec::JobSpec;
+use crate::obs;
+use crate::train::checkpoint::Checkpoint;
 use crate::util::json::Json;
 use anyhow::{Context, Result};
+use std::collections::HashSet;
 use std::fs;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -208,20 +221,47 @@ impl ResultCache {
     }
 
     /// GC with an explicit reference instant (tests inject `now`).
-    ///
-    /// Entries whose mtime is later than `now` — i.e. written while
-    /// this pass runs — are never eviction candidates: a worker
-    /// publishing a fresh result mid-GC cannot lose it (their bytes
-    /// still count against the size cap, which the pass then satisfies
-    /// by evicting older entries, or not at all).
     pub fn gc_at(
         &self,
         policy: &GcPolicy,
         now: SystemTime,
     ) -> Result<GcStats> {
-        // Sweep orphaned atomic-write temp files first (a crash between
-        // the temp write and the rename in `put` leaks them, invisible
-        // to the entry iterator). Live writes rename within
+        self.gc_at_protected(policy, now, &HashSet::new())
+    }
+
+    /// [`ResultCache::gc`] with a set of spec hashes whose parked
+    /// checkpoints must survive the pass. The gateway passes the
+    /// hashes of every job with a live (admitted, unfinished) journal
+    /// entry, so a checkpoint parked by an expired lease is still
+    /// there when the job is re-leased — however long that takes.
+    pub fn gc_protected(
+        &self,
+        policy: &GcPolicy,
+        protected: &HashSet<String>,
+    ) -> Result<GcStats> {
+        self.gc_at_protected(policy, SystemTime::now(), protected)
+    }
+
+    /// The full GC pass (every other variant delegates here).
+    ///
+    /// Entries whose mtime is later than `now` — i.e. written while
+    /// this pass runs — are never eviction candidates: a worker
+    /// publishing a fresh result mid-GC cannot lose it (their bytes
+    /// still count against the size cap, which the pass then satisfies
+    /// by evicting older entries, or not at all). The same shield
+    /// covers checkpoints, which are additionally exempt from the size
+    /// cap and — when their spec hash is in `protected` — from the age
+    /// cap too.
+    pub fn gc_at_protected(
+        &self,
+        policy: &GcPolicy,
+        now: SystemTime,
+        protected: &HashSet<String>,
+    ) -> Result<GcStats> {
+        // Sweep orphaned atomic-write temp files first (a crash
+        // between the temp write and the rename leaks them, invisible
+        // to the entry iterator): `.tmp-*` from entry `put`, `*.tmp`
+        // from `Checkpoint::save`. Live writes rename within
         // milliseconds, so an hour of grace can never race one. Runs
         // under every policy — including the no-op default — so plain
         // opens self-heal.
@@ -235,7 +275,9 @@ impl ResultCache {
                     .flatten()
                     .filter_map(|e| e.ok())
                     .filter(|e| {
-                        e.file_name().to_string_lossy().starts_with(".tmp-")
+                        let name = e.file_name();
+                        let name = name.to_string_lossy();
+                        name.starts_with(".tmp-") || name.ends_with(".tmp")
                     });
                 for e in tmps {
                     let stale = e
@@ -297,6 +339,29 @@ impl ResultCache {
                 evict.push((p, len));
             }
         }
+        // Checkpoint sweep: `.ckpt` files answer only to the age cap —
+        // the size cap never sees them (a parked resume point is worth
+        // more than cache headroom) — and a checkpoint whose spec hash
+        // is protected (live journal entry: the job will be re-leased)
+        // is immune even to the age cap.
+        if let Some(cutoff) =
+            policy.max_age_secs.and_then(|s| now.checked_sub(Duration::from_secs(s)))
+        {
+            for p in self.iter_checkpoints() {
+                let Some(hash) = ckpt_hash_of(&p) else { continue };
+                let Ok(meta) = fs::metadata(&p) else { continue };
+                let Ok(mtime) = meta.modified() else { continue };
+                stats.scanned += 1;
+                total_bytes += meta.len();
+                if mtime > now
+                    || mtime >= cutoff
+                    || protected.contains(&hash)
+                {
+                    continue;
+                }
+                evict.push((p, meta.len()));
+            }
+        }
         for (p, len) in evict {
             if !policy.dry_run && fs::remove_file(&p).is_err() && p.exists()
             {
@@ -320,6 +385,78 @@ impl ResultCache {
         Ok(n)
     }
 
+    /// On-disk path of the checkpoint for spec `hash` at `step`.
+    pub fn ckpt_path(&self, hash: &str, step: u64) -> PathBuf {
+        self.dir.join(format!("{hash}-{step}.ckpt"))
+    }
+
+    /// Park a training checkpoint for spec `hash` (atomic via
+    /// [`Checkpoint::save`]'s temp + rename). The `ckpt.write`
+    /// faultpoint fires *before* any byte lands, so a killed worker
+    /// leaves either the previous checkpoint or none — never a torn
+    /// one.
+    pub fn put_checkpoint(
+        &self,
+        hash: &str,
+        ck: &Checkpoint,
+    ) -> Result<PathBuf> {
+        obs::faultpoint("ckpt.write");
+        let path = self.ckpt_path(hash, ck.step);
+        ck.save(&path)
+            .with_context(|| format!("parking checkpoint {path:?}"))?;
+        obs::CKPT_WRITES.inc();
+        Ok(path)
+    }
+
+    /// Newest loadable checkpoint for spec `hash`, if any. Scans
+    /// highest-step-first and skips unreadable or corrupt files, so a
+    /// checkpoint torn by a crash (impossible via `put_checkpoint`,
+    /// but operators copy files around) degrades to the previous one.
+    pub fn latest_checkpoint(&self, hash: &str) -> Option<Checkpoint> {
+        let mut steps: Vec<u64> = self
+            .iter_checkpoints()
+            .filter(|p| ckpt_hash_of(p).as_deref() == Some(hash))
+            .filter_map(|p| ckpt_step_of(&p))
+            .collect();
+        steps.sort_unstable_by(|a, b| b.cmp(a));
+        for step in steps {
+            if let Ok(ck) = Checkpoint::load(self.ckpt_path(hash, step)) {
+                if ck.step == step {
+                    return Some(ck);
+                }
+            }
+        }
+        None
+    }
+
+    /// Drop every checkpoint parked for spec `hash` (the job reported
+    /// its terminal result; the resume points are dead weight).
+    /// Returns how many files were removed.
+    pub fn clear_checkpoints(&self, hash: &str) -> usize {
+        let mut n = 0;
+        for p in self
+            .iter_checkpoints()
+            .filter(|p| ckpt_hash_of(p).as_deref() == Some(hash))
+            .collect::<Vec<_>>()
+        {
+            if fs::remove_file(&p).is_ok() {
+                n += 1;
+            }
+        }
+        n
+    }
+
+    fn iter_checkpoints(&self) -> impl Iterator<Item = PathBuf> {
+        fs::read_dir(&self.dir)
+            .into_iter()
+            .flatten()
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| {
+                p.extension().map(|x| x == "ckpt").unwrap_or(false)
+            })
+    }
+
     fn iter_entries(&self) -> impl Iterator<Item = PathBuf> {
         fs::read_dir(&self.dir)
             .into_iter()
@@ -330,6 +467,22 @@ impl ResultCache {
                 p.extension().map(|x| x == "json").unwrap_or(false)
             })
     }
+}
+
+/// Spec hash of a `{hash}-{step}.ckpt` path; `None` when the filename
+/// doesn't fit the scheme. Hashes are hex (no `-`), so splitting at
+/// the last dash is unambiguous.
+fn ckpt_hash_of(p: &Path) -> Option<String> {
+    let stem = p.file_stem()?.to_str()?;
+    let (hash, step) = stem.rsplit_once('-')?;
+    step.parse::<u64>().ok()?;
+    Some(hash.to_string())
+}
+
+/// Step of a `{hash}-{step}.ckpt` path.
+fn ckpt_step_of(p: &Path) -> Option<u64> {
+    let stem = p.file_stem()?.to_str()?;
+    stem.rsplit_once('-')?.1.parse::<u64>().ok()
 }
 
 /// Serialize one entry. Floats use Rust's shortest round-trip `Display`;
@@ -707,6 +860,84 @@ mod tests {
         // Same spec, regenerated artifacts → different fingerprint →
         // miss, never a stale replay.
         assert!(c.get(&s, "afp-new").is_none());
+        std::fs::remove_dir_all(c.dir()).ok();
+    }
+
+    fn ckpt(step: u64) -> Checkpoint {
+        let mut ck = Checkpoint::new(step, 42);
+        ck.insert("params", vec![step as f32; 4]);
+        ck
+    }
+
+    #[test]
+    fn checkpoints_park_resume_and_clear() {
+        let c = tmp_cache("ckpt");
+        let h = spec(80).hash_hex();
+        c.put_checkpoint(&h, &ckpt(100)).unwrap();
+        c.put_checkpoint(&h, &ckpt(200)).unwrap();
+        let latest = c.latest_checkpoint(&h).expect("parked checkpoint");
+        assert_eq!(latest.step, 200);
+        assert_eq!(latest.get("params"), Some(&[200.0f32; 4][..]));
+        // Corrupting the newest file falls back to the previous step
+        // instead of failing the resume outright.
+        std::fs::write(c.ckpt_path(&h, 200), b"torn").unwrap();
+        assert_eq!(c.latest_checkpoint(&h).unwrap().step, 100);
+        // Foreign hashes never see each other's checkpoints.
+        assert!(c.latest_checkpoint(&spec(81).hash_hex()).is_none());
+        assert_eq!(c.clear_checkpoints(&h), 2);
+        assert!(c.latest_checkpoint(&h).is_none());
+        // Checkpoints are invisible to the *entry* surface.
+        c.put_checkpoint(&h, &ckpt(1)).unwrap();
+        assert_eq!(c.len(), 0);
+        assert_eq!(c.stats().entries, 0);
+        std::fs::remove_dir_all(c.dir()).ok();
+    }
+
+    /// Regression (durability PR): GC must never evict a parked
+    /// checkpoint whose spec hash has a live journal entry — the job
+    /// will be re-leased and must resume, however stale the file.
+    #[test]
+    fn gc_never_evicts_protected_checkpoints() {
+        let c = tmp_cache("gc-ckpt");
+        let live = spec(90).hash_hex();
+        let dead = spec(91).hash_hex();
+        c.put_checkpoint(&live, &ckpt(10)).unwrap();
+        c.put_checkpoint(&dead, &ckpt(10)).unwrap();
+        // Size cap alone never touches checkpoints at all.
+        let later = SystemTime::now() + Duration::from_secs(7200);
+        let policy =
+            GcPolicy { max_bytes: Some(0), ..GcPolicy::default() };
+        c.gc_at_protected(&policy, later, &HashSet::new()).unwrap();
+        assert!(c.latest_checkpoint(&live).is_some());
+        assert!(c.latest_checkpoint(&dead).is_some());
+        // Age cap evicts the unprotected checkpoint, keeps the
+        // journal-live one.
+        let policy =
+            GcPolicy { max_age_secs: Some(1), ..GcPolicy::default() };
+        let protected: HashSet<String> = [live.clone()].into();
+        let st = c.gc_at_protected(&policy, later, &protected).unwrap();
+        assert!(
+            c.latest_checkpoint(&live).is_some(),
+            "protected checkpoint survives the age cap"
+        );
+        assert!(c.latest_checkpoint(&dead).is_none());
+        assert_eq!(st.evicted, 1);
+        // Once the journal entry is gone (protection lifted), the age
+        // cap reclaims it like any other cold file.
+        c.gc_at(&policy, later).unwrap();
+        assert!(c.latest_checkpoint(&live).is_none());
+        std::fs::remove_dir_all(c.dir()).ok();
+    }
+
+    #[test]
+    fn gc_sweeps_orphaned_checkpoint_tmp_files() {
+        let c = tmp_cache("gc-ckpt-tmp");
+        // A crash inside Checkpoint::save leaks `{hash}-{step}.tmp`.
+        let orphan = c.dir().join("deadbeef00000000-5.tmp");
+        std::fs::write(&orphan, b"half a checkpoint").unwrap();
+        let later = SystemTime::now() + Duration::from_secs(7200);
+        c.gc_at(&GcPolicy::default(), later).unwrap();
+        assert!(!orphan.exists(), "stale checkpoint temp swept");
         std::fs::remove_dir_all(c.dir()).ok();
     }
 }

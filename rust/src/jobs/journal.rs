@@ -1,0 +1,641 @@
+//! Crash-safe job journal: the write-ahead record log behind a
+//! durable gateway.
+//!
+//! One append-only, fsynced text file (`journal.log`, under the cache
+//! dir) records every job-lifecycle transition the [`JobHub`] makes:
+//! admission, lease grant/renewal, completion, cancellation. At
+//! startup `omgd serve` replays the log — tolerating a torn final
+//! record, the only kind of damage an fsynced append can leave — to
+//! rebuild the seq counter, the pending queue, and the completed-result
+//! table, so a reconnecting `grid --remote` client can re-poll results
+//! by seq across a coordinator crash.
+//!
+//! Record grammar (one record per line, documented in
+//! `docs/durability.md`):
+//!
+//! ```text
+//! <fnv1a64-hex-16> <json>\n
+//! ```
+//!
+//! The checksum is FNV-1a over the JSON text, so replay detects a torn
+//! tail byte-exactly. The JSON object carries a `"rec"` discriminator:
+//!
+//! * `meta`   — `{"rec":"meta","next_seq":N}` (compaction header)
+//! * `admit`  — seq, priority, optional client token, full wire spec
+//! * `lease`  — seq + worker id (replayed for the seq counter only:
+//!   leases die with the process, the job re-dispatches)
+//! * `renew`  — seq + worker id (ditto)
+//! * `done`   — seq, status tag, cached flag, secs, wire spec, and the
+//!   outcome (or error), self-contained so a re-poll needs no cache
+//! * `cancel` — seq
+//!
+//! Compaction (clean shutdown and post-replay startup) rewrites the
+//! log as one `meta` header plus the still-live `admit`s and retained
+//! `done`s, via temp-file + durable rename, then truncating history.
+//!
+//! [`JobHub`]: super::serve::JobHub
+
+use super::pool::{JobResult, JobStatus};
+use super::serve::lock_recover;
+use super::spec::{fnv1a64, JobSpec};
+use crate::obs;
+use crate::util::json::{escape_str as esc, ser_f64 as ser_f, Json};
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Journal file name inside the cache directory.
+pub const JOURNAL_FILE: &str = "journal.log";
+
+/// One journal record (see the module docs for the line grammar).
+#[derive(Clone, Debug)]
+pub enum Record {
+    /// Compaction header: the seq counter to resume from.
+    Meta { next_seq: u64 },
+    /// A job entered the queue.
+    Admit {
+        seq: u64,
+        priority: i32,
+        client: Option<String>,
+        spec: JobSpec,
+    },
+    /// A remote worker was granted the lease on `seq`.
+    Lease { seq: u64, worker: String },
+    /// The lease on `seq` was renewed.
+    Renew { seq: u64, worker: String },
+    /// The job completed (any status) and was dispatched.
+    Done {
+        seq: u64,
+        status: JobStatus,
+        from_cache: bool,
+        secs: f64,
+        spec: JobSpec,
+    },
+    /// The job was cancelled before completion.
+    Cancel { seq: u64 },
+}
+
+impl Record {
+    /// The JSON payload (no checksum, no newline).
+    pub fn encode_json(&self) -> String {
+        match self {
+            Record::Meta { next_seq } => {
+                format!("{{\"rec\":\"meta\",\"next_seq\":{next_seq}}}")
+            }
+            Record::Admit { seq, priority, client, spec } => {
+                let client_part = client
+                    .as_deref()
+                    .map(|c| format!("\"client\":\"{}\",", esc(c)))
+                    .unwrap_or_default();
+                format!(
+                    "{{\"rec\":\"admit\",\"seq\":{seq},\
+                     \"pri\":{priority},{client_part}\"spec\":{}}}",
+                    spec.to_wire()
+                )
+            }
+            Record::Lease { seq, worker } => format!(
+                "{{\"rec\":\"lease\",\"seq\":{seq},\"worker\":\"{}\"}}",
+                esc(worker)
+            ),
+            Record::Renew { seq, worker } => format!(
+                "{{\"rec\":\"renew\",\"seq\":{seq},\"worker\":\"{}\"}}",
+                esc(worker)
+            ),
+            Record::Done { seq, status, from_cache, secs, spec } => {
+                let payload = match status {
+                    JobStatus::Done(o) => format!(
+                        "\"outcome\":{}",
+                        super::cache::ser_outcome(o)
+                    ),
+                    JobStatus::Failed(e) | JobStatus::Panicked(e) => {
+                        format!("\"error\":\"{}\"", esc(e))
+                    }
+                };
+                format!(
+                    "{{\"rec\":\"done\",\"seq\":{seq},\
+                     \"status\":\"{}\",\"cached\":{from_cache},\
+                     \"secs\":{},\"spec\":{},{payload}}}",
+                    status.tag(),
+                    ser_f(*secs),
+                    spec.to_wire(),
+                )
+            }
+            Record::Cancel { seq } => {
+                format!("{{\"rec\":\"cancel\",\"seq\":{seq}}}")
+            }
+        }
+    }
+
+    /// The full checksummed journal line, newline included.
+    pub fn encode_line(&self) -> String {
+        let json = self.encode_json();
+        format!("{:016x} {json}\n", fnv1a64(json.as_bytes()))
+    }
+
+    /// Decode one journal line (without trailing newline). `None` on a
+    /// short/torn line, checksum mismatch, or malformed record — the
+    /// caller treats any of those as the torn tail and stops.
+    pub fn decode_line(line: &str) -> Option<Record> {
+        let (sum, json) = line.split_once(' ')?;
+        if sum.len() != 16 {
+            return None;
+        }
+        let sum = u64::from_str_radix(sum, 16).ok()?;
+        if sum != fnv1a64(json.as_bytes()) {
+            return None;
+        }
+        Self::decode_json(&Json::parse(json).ok()?)
+    }
+
+    fn decode_json(j: &Json) -> Option<Record> {
+        let seq_of = |j: &Json| -> Option<u64> {
+            Some(j.get("seq")?.as_f64()? as u64)
+        };
+        match j.get("rec")?.as_str()? {
+            "meta" => Some(Record::Meta {
+                next_seq: j.get("next_seq")?.as_f64()? as u64,
+            }),
+            "admit" => Some(Record::Admit {
+                seq: seq_of(j)?,
+                priority: j.get("pri")?.as_f64()? as i32,
+                client: j
+                    .get("client")
+                    .and_then(Json::as_str)
+                    .map(String::from),
+                spec: JobSpec::from_wire(j.get("spec")?).ok()?,
+            }),
+            "lease" => Some(Record::Lease {
+                seq: seq_of(j)?,
+                worker: j.get("worker")?.as_str()?.to_string(),
+            }),
+            "renew" => Some(Record::Renew {
+                seq: seq_of(j)?,
+                worker: j.get("worker")?.as_str()?.to_string(),
+            }),
+            "done" => {
+                let status = match j.get("status")?.as_str()? {
+                    "done" => JobStatus::Done(
+                        super::cache::parse_outcome(j.get("outcome")?)?,
+                    ),
+                    "failed" => JobStatus::Failed(
+                        j.get("error")?.as_str()?.to_string(),
+                    ),
+                    "panicked" => JobStatus::Panicked(
+                        j.get("error")?.as_str()?.to_string(),
+                    ),
+                    _ => return None,
+                };
+                Some(Record::Done {
+                    seq: seq_of(j)?,
+                    status,
+                    from_cache: j.get("cached")?.as_bool()?,
+                    secs: match j.get("secs")? {
+                        Json::Null => f64::NAN,
+                        v => v.as_f64()?,
+                    },
+                    spec: JobSpec::from_wire(j.get("spec")?).ok()?,
+                })
+            }
+            "cancel" => Some(Record::Cancel { seq: seq_of(j)? }),
+            _ => None,
+        }
+    }
+}
+
+/// One still-pending admission out of a replay.
+#[derive(Clone, Debug)]
+pub struct PendingJob {
+    pub seq: u64,
+    pub priority: i32,
+    pub client: Option<String>,
+    pub spec: JobSpec,
+}
+
+/// Rebuilt hub state after replaying a journal.
+#[derive(Debug, Default)]
+pub struct Replay {
+    /// Seq counter to resume from: strictly above every seq the log
+    /// ever mentioned.
+    pub next_seq: u64,
+    /// Admitted jobs with no `done`/`cancel` yet, in seq order.
+    pub pending: Vec<PendingJob>,
+    /// Completed jobs retained for by-seq re-polls, in seq order.
+    pub completed: Vec<JobResult>,
+    /// Records successfully replayed.
+    pub replayed: usize,
+    /// 1 when a torn/corrupt tail record was dropped, else 0.
+    pub torn: usize,
+}
+
+/// Replay the journal at `path`. A missing file is an empty replay. A
+/// torn or corrupt record ends the replay there (everything before it
+/// is kept; it and anything after are dropped) — with fsynced appends
+/// only the final record can be torn, so this loses at most one
+/// unacknowledged transition.
+pub fn replay(path: &Path) -> Result<Replay> {
+    let mut out = Replay::default();
+    let bytes = match std::fs::read(path) {
+        Ok(b) => b,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            return Ok(out)
+        }
+        Err(e) => {
+            return Err(e).context(format!("reading journal {path:?}"))
+        }
+    };
+    // A torn tail may not be valid UTF-8; lossy decoding mangles only
+    // bytes the checksum then rejects anyway.
+    let text = String::from_utf8_lossy(&bytes);
+    let mut pending: BTreeMap<u64, PendingJob> = BTreeMap::new();
+    let mut completed: BTreeMap<u64, JobResult> = BTreeMap::new();
+    for line in text.split('\n') {
+        if line.is_empty() {
+            continue;
+        }
+        let Some(rec) = Record::decode_line(line) else {
+            out.torn = 1;
+            obs::JOURNAL_TORN.inc();
+            break;
+        };
+        out.replayed += 1;
+        obs::JOURNAL_REPLAYED.inc();
+        match rec {
+            Record::Meta { next_seq } => {
+                out.next_seq = out.next_seq.max(next_seq);
+            }
+            Record::Admit { seq, priority, client, spec } => {
+                out.next_seq = out.next_seq.max(seq + 1);
+                // Admits are fsynced outside the hub's dispatch path, so
+                // an ultra-fast (cached) job can land its `done` record
+                // first; the seq is finished either way.
+                if !completed.contains_key(&seq) {
+                    pending.insert(
+                        seq,
+                        PendingJob { seq, priority, client, spec },
+                    );
+                }
+            }
+            Record::Lease { seq, .. } | Record::Renew { seq, .. } => {
+                // Leases die with the process; the admit stays pending
+                // and re-dispatches. Only the counter survives.
+                out.next_seq = out.next_seq.max(seq + 1);
+            }
+            Record::Done { seq, status, from_cache, secs, spec } => {
+                out.next_seq = out.next_seq.max(seq + 1);
+                pending.remove(&seq);
+                // First completion wins — exactly-once dispatch means a
+                // duplicate can only be a replayed compaction artifact.
+                completed.entry(seq).or_insert(JobResult {
+                    seq,
+                    spec,
+                    status,
+                    from_cache,
+                    secs,
+                });
+            }
+            Record::Cancel { seq } => {
+                out.next_seq = out.next_seq.max(seq + 1);
+                pending.remove(&seq);
+            }
+        }
+    }
+    out.pending = pending.into_values().collect();
+    out.completed = completed.into_values().collect();
+    Ok(out)
+}
+
+/// Spec hashes of every job a replay still considers live (admitted,
+/// not done/cancelled) — the set whose parked checkpoints
+/// [`ResultCache::gc`] must not evict.
+///
+/// [`ResultCache::gc`]: super::cache::ResultCache::gc
+pub fn live_hashes(rep: &Replay) -> std::collections::HashSet<String> {
+    rep.pending.iter().map(|p| p.spec.hash_hex()).collect()
+}
+
+/// Handle to one open journal file. Appends are serialized by a mutex
+/// and fsynced before returning, so an acknowledged record survives
+/// SIGKILL.
+pub struct JobJournal {
+    path: PathBuf,
+    file: Mutex<File>,
+}
+
+impl JobJournal {
+    /// Where the journal lives for a given cache dir.
+    pub fn path_in(cache_dir: &Path) -> PathBuf {
+        cache_dir.join(JOURNAL_FILE)
+    }
+
+    /// Open (creating if needed) the journal under `cache_dir`.
+    pub fn open(cache_dir: &Path) -> Result<JobJournal> {
+        std::fs::create_dir_all(cache_dir).with_context(|| {
+            format!("creating journal dir {cache_dir:?}")
+        })?;
+        let path = Self::path_in(cache_dir);
+        let file = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .with_context(|| format!("opening journal {path:?}"))?;
+        Ok(JobJournal { path, file: Mutex::new(file) })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Append one record and fsync it. The `journal.append` faultpoint
+    /// fires *before* the write: a killed-here admission is simply
+    /// absent after restart — the client was never acked, so it
+    /// resubmits.
+    pub fn append(&self, rec: &Record) -> Result<()> {
+        obs::faultpoint("journal.append");
+        let line = rec.encode_line();
+        let mut f = lock_recover(&self.file);
+        f.write_all(line.as_bytes())
+            .with_context(|| format!("appending to {:?}", self.path))?;
+        f.sync_data()
+            .with_context(|| format!("fsyncing {:?}", self.path))?;
+        obs::JOURNAL_RECORDS.inc();
+        Ok(())
+    }
+
+    /// Rewrite the log as a snapshot of live state — one `meta` header,
+    /// the pending `admit`s, the retained `done`s — truncating all
+    /// replayed history. Runs at startup (right after replay) and on
+    /// clean shutdown. Atomic: temp file + fsync + rename; a crash
+    /// mid-compaction leaves the old log intact.
+    pub fn compact(
+        &self,
+        next_seq: u64,
+        pending: &[PendingJob],
+        completed: &[JobResult],
+    ) -> Result<()> {
+        let mut guard = lock_recover(&self.file);
+        let tmp = self.path.with_extension("log.compact");
+        {
+            let mut w = std::io::BufWriter::new(
+                File::create(&tmp).with_context(|| {
+                    format!("creating compaction temp {tmp:?}")
+                })?,
+            );
+            w.write_all(
+                Record::Meta { next_seq }.encode_line().as_bytes(),
+            )?;
+            for p in pending {
+                let rec = Record::Admit {
+                    seq: p.seq,
+                    priority: p.priority,
+                    client: p.client.clone(),
+                    spec: p.spec.clone(),
+                };
+                w.write_all(rec.encode_line().as_bytes())?;
+            }
+            for r in completed {
+                let rec = Record::Done {
+                    seq: r.seq,
+                    status: r.status.clone(),
+                    from_cache: r.from_cache,
+                    secs: r.secs,
+                    spec: r.spec.clone(),
+                };
+                w.write_all(rec.encode_line().as_bytes())?;
+            }
+            w.flush()?;
+            w.get_ref().sync_data()?;
+        }
+        std::fs::rename(&tmp, &self.path)
+            .with_context(|| format!("publishing {:?}", self.path))?;
+        *guard = OpenOptions::new()
+            .append(true)
+            .open(&self.path)
+            .with_context(|| format!("reopening {:?}", self.path))?;
+        obs::JOURNAL_COMPACTIONS.inc();
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RunConfig;
+    use crate::jobs::pool::JobOutcome;
+    use crate::jobs::spec::ExperimentKind;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "omgd-journal-test-{tag}-{}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&d).ok();
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn spec(seed: u64) -> JobSpec {
+        let mut cfg = RunConfig::default();
+        cfg.seed = seed;
+        JobSpec {
+            kind: ExperimentKind::Finetune {
+                task: "CoLA".into(),
+                epochs: 2,
+            },
+            cfg,
+        }
+    }
+
+    fn done(seq: u64, seed: u64) -> Record {
+        Record::Done {
+            seq,
+            status: JobStatus::Done(JobOutcome {
+                final_metric: seed as f64 + 0.5,
+                tail_loss: 0.25,
+                steps: 3,
+                train_secs: 1.0,
+                loss_series: vec![(0, 2.0)],
+                eval_series: vec![(1, 1.0, 50.0)],
+            }),
+            from_cache: false,
+            secs: 0.75,
+            spec: spec(seed),
+        }
+    }
+
+    fn admit(seq: u64, seed: u64, client: Option<&str>) -> Record {
+        Record::Admit {
+            seq,
+            priority: 2,
+            client: client.map(String::from),
+            spec: spec(seed),
+        }
+    }
+
+    #[test]
+    fn every_record_kind_round_trips_through_a_line() {
+        let recs = vec![
+            Record::Meta { next_seq: 42 },
+            admit(1, 7, Some("grid-a")),
+            admit(2, 8, None),
+            Record::Lease { seq: 1, worker: "w-1".into() },
+            Record::Renew { seq: 1, worker: "w-1".into() },
+            done(1, 7),
+            Record::Done {
+                seq: 2,
+                status: JobStatus::Failed("boom \"quoted\"".into()),
+                from_cache: false,
+                secs: 0.0,
+                spec: spec(8),
+            },
+            Record::Cancel { seq: 3 },
+        ];
+        for r in recs {
+            let line = r.encode_line();
+            let back = Record::decode_line(line.trim_end())
+                .unwrap_or_else(|| panic!("decode failed: {line}"));
+            assert_eq!(
+                back.encode_json(),
+                r.encode_json(),
+                "round trip changed the record"
+            );
+        }
+    }
+
+    #[test]
+    fn corrupt_lines_are_rejected() {
+        let line = done(1, 7).encode_line();
+        let line = line.trim_end();
+        assert!(Record::decode_line(line).is_some());
+        // flip one payload byte → checksum mismatch
+        let mut bad = line.to_string();
+        let i = bad.len() - 3;
+        bad.replace_range(i..i + 1, "X");
+        assert!(Record::decode_line(&bad).is_none());
+        // short/garbage lines
+        assert!(Record::decode_line("").is_none());
+        assert!(Record::decode_line("nonsense").is_none());
+        assert!(Record::decode_line("0123 {\"rec\":\"meta\"}").is_none());
+        // valid checksum over a non-record payload
+        let json = "{\"rec\":\"wat\"}";
+        let l = format!("{:016x} {json}", fnv1a64(json.as_bytes()));
+        assert!(Record::decode_line(&l).is_none());
+    }
+
+    #[test]
+    fn append_replay_rebuilds_pending_and_completed() {
+        let dir = tmp_dir("replay");
+        let j = JobJournal::open(&dir).unwrap();
+        j.append(&admit(0, 10, Some("a"))).unwrap();
+        j.append(&admit(1, 11, None)).unwrap();
+        j.append(&Record::Lease { seq: 0, worker: "w".into() })
+            .unwrap();
+        j.append(&Record::Renew { seq: 0, worker: "w".into() })
+            .unwrap();
+        j.append(&done(0, 10)).unwrap();
+        j.append(&admit(2, 12, Some("a"))).unwrap();
+        j.append(&Record::Cancel { seq: 2 }).unwrap();
+        let rep = replay(j.path()).unwrap();
+        assert_eq!(rep.next_seq, 3);
+        assert_eq!(rep.replayed, 7);
+        assert_eq!(rep.torn, 0);
+        // seq 0 done, seq 2 cancelled → only seq 1 pending
+        assert_eq!(rep.pending.len(), 1);
+        assert_eq!(rep.pending[0].seq, 1);
+        assert_eq!(rep.pending[0].priority, 2);
+        assert_eq!(rep.pending[0].spec.cfg.seed, 11);
+        assert_eq!(rep.completed.len(), 1);
+        assert_eq!(rep.completed[0].seq, 0);
+        assert!(rep.completed[0].is_ok());
+        assert_eq!(
+            live_hashes(&rep)
+                .into_iter()
+                .collect::<Vec<_>>(),
+            vec![spec(11).hash_hex()]
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_journal_is_an_empty_replay() {
+        let dir = tmp_dir("missing");
+        let rep = replay(&JobJournal::path_in(&dir)).unwrap();
+        assert_eq!(rep.next_seq, 0);
+        assert!(rep.pending.is_empty());
+        assert!(rep.completed.is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn torn_tail_is_dropped_at_every_byte_boundary() {
+        let dir = tmp_dir("torn");
+        let j = JobJournal::open(&dir).unwrap();
+        j.append(&admit(0, 20, None)).unwrap();
+        j.append(&done(0, 20)).unwrap();
+        j.append(&admit(1, 21, None)).unwrap();
+        let full = std::fs::read(j.path()).unwrap();
+        let tail_len = admit(1, 21, None).encode_line().len();
+        let keep = full.len() - tail_len;
+        // Truncate at every byte boundary inside the final record: the
+        // first two records always survive, the tail never half-applies.
+        for cut in keep..full.len() {
+            std::fs::write(j.path(), &full[..cut]).unwrap();
+            let rep = replay(j.path()).unwrap();
+            assert_eq!(rep.replayed, 2, "cut at {cut}");
+            assert_eq!(rep.torn, if cut == keep { 0 } else { 1 });
+            assert!(rep.pending.is_empty(), "cut at {cut}");
+            assert_eq!(rep.completed.len(), 1, "cut at {cut}");
+            assert_eq!(rep.next_seq, 1, "cut at {cut}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn compaction_snapshots_live_state_and_truncates() {
+        let dir = tmp_dir("compact");
+        let j = JobJournal::open(&dir).unwrap();
+        for s in 0..6u64 {
+            j.append(&admit(s, s, Some("c"))).unwrap();
+        }
+        for s in 0..4u64 {
+            j.append(&Record::Lease { seq: s, worker: "w".into() })
+                .unwrap();
+            j.append(&done(s, s)).unwrap();
+        }
+        let before = std::fs::metadata(j.path()).unwrap().len();
+        let rep = replay(j.path()).unwrap();
+        j.compact(rep.next_seq, &rep.pending, &rep.completed)
+            .unwrap();
+        let after = std::fs::metadata(j.path()).unwrap().len();
+        assert!(after < before, "compaction must shrink the log");
+        // The compacted log replays to the same state.
+        let rep2 = replay(j.path()).unwrap();
+        assert_eq!(rep2.next_seq, rep.next_seq);
+        assert_eq!(
+            rep2.pending.iter().map(|p| p.seq).collect::<Vec<_>>(),
+            vec![4, 5]
+        );
+        assert_eq!(rep2.completed.len(), 4);
+        // ...and appends still work on the reopened handle.
+        j.append(&admit(6, 6, None)).unwrap();
+        let rep3 = replay(j.path()).unwrap();
+        assert_eq!(rep3.next_seq, 7);
+        assert_eq!(rep3.pending.len(), 3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn meta_floor_survives_when_all_jobs_complete() {
+        // After compaction with no pending and no retained dones, the
+        // meta record alone must keep the seq counter monotone.
+        let dir = tmp_dir("meta");
+        let j = JobJournal::open(&dir).unwrap();
+        j.compact(17, &[], &[]).unwrap();
+        let rep = replay(j.path()).unwrap();
+        assert_eq!(rep.next_seq, 17);
+        assert!(rep.pending.is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -13,6 +13,10 @@
 //! * [`cache`] — on-disk result cache keyed by spec hash (`--force`
 //!   invalidates; age/size GC via [`cache::GcPolicy`], run at open and
 //!   as `omgd cache-gc`);
+//! * [`journal`] — crash-safe write-ahead job journal (`journal.log`
+//!   under the cache dir): fsynced admission/lease/completion records,
+//!   replayed by `omgd serve` at startup so queued work and completed
+//!   results survive a coordinator crash;
 //! * [`report`] — aggregation into [`crate::bench::TablePrinter`] /
 //!   [`crate::metrics::CsvWriter`] sinks;
 //! * [`serve`] — transport-agnostic JSONL sessions multiplexed over a
@@ -34,6 +38,7 @@
 //! binaries, which submit grids built by [`crate::experiments`].
 
 pub mod cache;
+pub mod journal;
 pub mod net;
 pub mod pool;
 pub mod queue;
@@ -46,6 +51,7 @@ pub mod sync;
 pub use cache::{
     CacheStats, GcPolicy, GcStats, ResultCache, DEFAULT_CACHE_DIR,
 };
+pub use journal::{JobJournal, PendingJob, Record, Replay};
 pub use net::{run_gateway, GatewayStats, ListenOptions};
 pub use pool::{run_pool, JobOutcome, JobResult, JobStatus};
 pub use queue::{Job, JobQueue, PopScan, PopTimeout, TryPush};
@@ -56,19 +62,20 @@ pub use remote::{
 pub use report::GridReport;
 pub use serve::{
     JobHub, LeaseInfo, LeaseReply, PhaseSecs, RemoteDone, RemoteStats,
-    ServeStats, SessionOptions,
+    ResultLookup, ServeStats, SessionOptions,
 };
 pub use spec::{ExperimentKind, JobSpec};
 pub use sync::{ArtifactStore, DEFAULT_STORE_DIR};
 
 use crate::config::{OptFamily, RunConfig};
 use crate::data::ClassTask;
+use crate::obs;
 use crate::runtime::bundle::UpdateKind;
 use crate::runtime::{artifacts_dir, ModelBundle, Runtime};
-use crate::train::{train_classifier, train_lm};
+use crate::train::{train_classifier_ckpt, train_lm_ckpt, CkptCtl};
 use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 /// Options shared by `omgd grid`, `omgd serve`, and the bench drivers.
 #[derive(Clone, Debug)]
@@ -263,6 +270,10 @@ pub(crate) fn artifact_fingerprint_at(
 pub struct SpecRunner {
     rt: Option<Runtime>,
     bundles: HashMap<String, ModelBundle>,
+    /// Checkpointing: `(cache dir, period in steps)`. Set by workers
+    /// running under `--ckpt-period`; `None` (the default) trains
+    /// straight through like before.
+    ckpt: Option<(PathBuf, usize)>,
 }
 
 impl Default for SpecRunner {
@@ -273,7 +284,46 @@ impl Default for SpecRunner {
 
 impl SpecRunner {
     pub fn new() -> Self {
-        Self { rt: None, bundles: HashMap::new() }
+        Self { rt: None, bundles: HashMap::new(), ckpt: None }
+    }
+
+    /// Enable periodic checkpointing into `cache_dir` (see
+    /// [`crate::train::CkptCtl`]); `period == 0` disables it.
+    pub fn set_ckpt(&mut self, cache_dir: &Path, period: usize) {
+        self.ckpt = (period > 0)
+            .then(|| (cache_dir.to_path_buf(), period));
+    }
+
+    /// Build the checkpoint control for one spec: resume from the
+    /// newest parked checkpoint (if any) and park new ones every
+    /// `period` steps under the spec's hash. Checkpointing is strictly
+    /// best-effort at this layer — an unopenable cache dir degrades to
+    /// a plain straight-through run.
+    fn ckpt_ctl(&self, spec: &JobSpec) -> CkptCtl<'static> {
+        let Some((dir, period)) = self.ckpt.clone() else {
+            return CkptCtl::default();
+        };
+        let dir = dir.to_string_lossy().into_owned();
+        let Ok(cache) = ResultCache::open(Some(&dir)) else {
+            return CkptCtl::default();
+        };
+        let hash = spec.hash_hex();
+        let resume = cache.latest_checkpoint(&hash);
+        if let Some(ck) = &resume {
+            obs::CKPT_RESUMES.inc();
+            eprintln!(
+                "  [ckpt ] resuming {} from step {}",
+                spec.label(),
+                ck.step
+            );
+        }
+        CkptCtl {
+            period,
+            resume,
+            sink: Some(Box::new(move |ck| {
+                cache.put_checkpoint(&hash, ck).map(|_| ())
+            })),
+        }
     }
 
     fn bundle(&mut self, cfg: &RunConfig) -> Result<&ModelBundle> {
@@ -307,9 +357,11 @@ impl SpecRunner {
         Ok(&self.bundles[&key])
     }
 
-    /// Execute one spec to completion on this worker's runtime.
+    /// Execute one spec to completion on this worker's runtime,
+    /// resuming from a parked checkpoint when one exists.
     pub fn run(&mut self, spec: &JobSpec) -> Result<JobOutcome> {
         spec.cfg.validate()?;
+        let ctl = self.ckpt_ctl(spec);
         match &spec.kind {
             ExperimentKind::Finetune { task, epochs } => {
                 let ts = crate::data::find_task(task)
@@ -320,7 +372,7 @@ impl SpecRunner {
                     bundle.man.data.d_in,
                     bundle.man.data.n_class,
                 );
-                classifier_outcome(bundle, &spec.cfg, &t, *epochs)
+                classifier_outcome(bundle, &spec.cfg, &t, *epochs, ctl)
             }
             ExperimentKind::Blobs { dataset, spread, data_seed, epochs } => {
                 let bundle = self.bundle(&spec.cfg)?;
@@ -333,13 +385,13 @@ impl SpecRunner {
                     *spread,
                     *data_seed,
                 );
-                classifier_outcome(bundle, &spec.cfg, &t, *epochs)
+                classifier_outcome(bundle, &spec.cfg, &t, *epochs, ctl)
             }
             ExperimentKind::Pretrain => {
                 let bundle = self.bundle(&spec.cfg)?;
                 let corpus =
                     crate::experiments::pretrain_corpus(bundle, spec.cfg.steps);
-                let out = train_lm(bundle, &spec.cfg, &corpus)?;
+                let out = train_lm_ckpt(bundle, &spec.cfg, &corpus, ctl)?;
                 Ok(JobOutcome::from_train(&out))
             }
         }
@@ -354,12 +406,13 @@ fn classifier_outcome(
     cfg: &RunConfig,
     task: &ClassTask,
     epochs: usize,
+    ctl: CkptCtl<'_>,
 ) -> Result<JobOutcome> {
     let steps_per_epoch = task.n_train().div_ceil(bundle.man.data.batch);
     let mut cfg = cfg.clone();
     cfg.steps = epochs.max(1) * steps_per_epoch;
     cfg.eval_every = cfg.eval_every.saturating_mul(steps_per_epoch);
-    let out = train_classifier(bundle, &cfg, task)?;
+    let out = train_classifier_ckpt(bundle, &cfg, task, ctl)?;
     Ok(JobOutcome::from_train(&out))
 }
 

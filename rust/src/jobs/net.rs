@@ -48,10 +48,11 @@
 //! bounded queue; saturated → `429` for new `POST /jobs`).
 
 use super::cache::{self, ResultCache};
+use super::journal::{self, JobJournal};
 use super::pool::{JobOutcome, JobStatus};
 use super::serve::{
     lock_recover, run_session, with_hub, JobHub, LeaseReply, PhaseSecs,
-    RemoteDone, RemoteStats, ServeStats, SessionOptions,
+    RemoteDone, RemoteStats, ResultLookup, ServeStats, SessionOptions,
 };
 use super::spec::JobSpec;
 use super::{cached_runner, open_cache, sync, GridOptions};
@@ -124,6 +125,14 @@ pub struct ListenOptions {
     /// serves `/metrics` but turns the event journal off, `full` (the
     /// default) serves both.
     pub metrics: MetricsLevel,
+    /// Directory holding the crash-safe job journal (`journal.log`).
+    /// When set, the gateway replays it at startup (rebuilding the
+    /// queue, seq counter, and client ledger), appends every job
+    /// transition durably, serves `GET /jobs/<seq>/result` re-polls,
+    /// and compacts on clean shutdown. `None` = in-memory only (the
+    /// pre-durability behavior). `serve_listen` points this at the
+    /// cache dir.
+    pub journal_dir: Option<PathBuf>,
 }
 
 impl Default for ListenOptions {
@@ -140,6 +149,7 @@ impl Default for ListenOptions {
             affinity_window: 16,
             keepalive_idle: Duration::from_secs(60),
             metrics: MetricsLevel::Full,
+            journal_dir: None,
         }
     }
 }
@@ -195,7 +205,9 @@ pub fn serve_listen(
     // A long-lived gateway re-enforces its GC caps periodically, not
     // just at open; the thread owns its own cache handle (same dir)
     // and stops when the gateway drains. Entries written during a pass
-    // are never candidates, so racing workers lose nothing.
+    // are never candidates, so racing workers lose nothing. Each pass
+    // re-reads the job journal to protect parked checkpoints of jobs
+    // with a live (admitted, unfinished) journal entry from eviction.
     let (gc_stop_tx, gc_stop_rx) = std::sync::mpsc::channel::<()>();
     let gc_thread = (!opts.gc.is_noop()).then(|| {
         let policy = opts.gc;
@@ -204,10 +216,16 @@ pub fn serve_listen(
             let Ok(cache) = ResultCache::open(dir.as_deref()) else {
                 return;
             };
+            let jpath = JobJournal::path_in(cache.dir());
             loop {
                 match gc_stop_rx.recv_timeout(GC_INTERVAL) {
                     Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
-                        if let Ok(st) = cache.gc(&policy) {
+                        let protected = journal::replay(&jpath)
+                            .map(|r| journal::live_hashes(&r))
+                            .unwrap_or_default();
+                        if let Ok(st) =
+                            cache.gc_protected(&policy, &protected)
+                        {
                             super::report_gc(&st);
                         }
                     }
@@ -216,7 +234,11 @@ pub fn serve_listen(
             }
         })
     });
-    let lopts = ListenOptions { force: opts.force, ..lopts.clone() };
+    let lopts = ListenOptions {
+        force: opts.force,
+        journal_dir: Some(cache.dir().to_path_buf()),
+        ..lopts.clone()
+    };
     let out =
         run_gateway(listener, opts.workers, &lopts, Some(&cache), |_wid| {
             cached_runner(&cache, opts.force)
@@ -298,6 +320,47 @@ where
     let ((accepted, rejected, done, failed, cached), remote) =
         with_hub(workers, queue_capacity, make_worker, |hub| {
             hub.set_client_quota(lopts.client_quota);
+            // Durable mode: replay the crash-safe journal (rebuilding
+            // queued work, the seq counter, retained results, and the
+            // client ledger), then compact the replayed history down to
+            // a fresh snapshot before taking traffic.
+            if let Some(dir) = &lopts.journal_dir {
+                match JobJournal::open(dir) {
+                    Ok(j) => match journal::replay(j.path()) {
+                        Ok(rep) => {
+                            let torn = rep.torn;
+                            hub.attach_journal(j);
+                            let (requeued, completed) = hub.recover(rep);
+                            if requeued + completed + torn > 0 {
+                                eprintln!(
+                                    "omgd serve: journal replay requeued \
+                                     {requeued} job(s), retained \
+                                     {completed} result(s){}",
+                                    if torn > 0 {
+                                        " (dropped a torn tail record)"
+                                    } else {
+                                        ""
+                                    }
+                                );
+                            }
+                            if let Err(e) = hub.compact_journal() {
+                                eprintln!(
+                                    "warning: startup journal \
+                                     compaction failed: {e:#}"
+                                );
+                            }
+                        }
+                        Err(e) => eprintln!(
+                            "warning: journal replay failed ({e:#}); \
+                             starting with an empty queue"
+                        ),
+                    },
+                    Err(e) => eprintln!(
+                        "warning: cannot open job journal in \
+                         {dir:?} ({e:#}); running without durability"
+                    ),
+                }
+            }
             let ctx = GwCtx {
                 hub,
                 c: &c,
@@ -391,6 +454,14 @@ where
                 loop_done.store(true, Ordering::SeqCst);
                 let _ = sweeper.join();
             });
+            // Clean shutdown: snapshot live state and truncate the
+            // journal's history. A crash before (or during) this leaves
+            // the append-only log, which replays to the same state.
+            if let Err(e) = hub.compact_journal() {
+                eprintln!(
+                    "warning: shutdown journal compaction failed: {e:#}"
+                );
+            }
             (hub.counters(), hub.remote_counters())
         });
 
@@ -882,6 +953,59 @@ fn route_request(
             run_session(hub, &body[..], w, &sopts);
             false
         }
+        ("GET", p) if p.starts_with("/jobs/") => {
+            match parse_result_path(p) {
+                Some(seq) => {
+                    match hub.result_for(seq) {
+                        ResultLookup::Ready(line) => {
+                            let _ = respond_json(
+                                w, 200, "OK", &[], keep, &line,
+                            );
+                        }
+                        ResultLookup::Pending => {
+                            let _ = respond_json(
+                                w,
+                                202,
+                                "Accepted",
+                                &[("Retry-After", "1")],
+                                keep,
+                                &format!(
+                                    "{{\"pending\":true,\"seq\":{seq}}}"
+                                ),
+                            );
+                        }
+                        ResultLookup::Unknown => {
+                            let _ = respond_json(
+                                w,
+                                404,
+                                "Not Found",
+                                &[],
+                                keep,
+                                &err_body(&format!(
+                                    "no journaled job with seq {seq} \
+                                     (resubmit the spec)"
+                                )),
+                            );
+                        }
+                    }
+                    keep
+                }
+                None => {
+                    let _ = respond_json(
+                        w,
+                        400,
+                        "Bad Request",
+                        &[],
+                        keep,
+                        &err_body(&format!(
+                            "malformed /jobs/ path {p:?} (expected \
+                             /jobs/<seq>/result)"
+                        )),
+                    );
+                    keep
+                }
+            }
+        }
         ("POST", "/work/lease") => {
             handle_lease(ctx, reader, w, head, keep)
         }
@@ -933,7 +1057,9 @@ fn route_request(
             keep
         }
         (_, p)
-            if p.starts_with("/work/") || p.starts_with("/artifacts/") =>
+            if p.starts_with("/work/")
+                || p.starts_with("/artifacts/")
+                || p.starts_with("/jobs/") =>
         {
             let _ = respond_json(
                 w,
@@ -960,6 +1086,14 @@ fn route_request(
             keep
         }
     }
+}
+
+/// `/jobs/<seq>/result` → `seq` (the re-poll endpoint for
+/// reconnecting `grid --remote` clients).
+fn parse_result_path(path: &str) -> Option<u64> {
+    let rest = path.strip_prefix("/jobs/")?;
+    let (seq, verb) = rest.split_once('/')?;
+    (verb == "result").then(|| seq.parse().ok()).flatten()
 }
 
 /// `/work/<seq>/renew` | `/work/<seq>/result` → `(seq, verb)`.
@@ -1993,6 +2127,17 @@ mod tests {
         assert_eq!(input, b"rest");
         let mut short: &[u8] = b"abc";
         assert!(!drain_body(&mut short, 10), "truncated body");
+    }
+
+    #[test]
+    fn result_paths_parse_strictly() {
+        assert_eq!(parse_result_path("/jobs/7/result"), Some(7));
+        assert_eq!(parse_result_path("/jobs/0/result"), Some(0));
+        assert_eq!(parse_result_path("/jobs/x/result"), None);
+        assert_eq!(parse_result_path("/jobs/7/steal"), None);
+        assert_eq!(parse_result_path("/jobs/7"), None);
+        assert_eq!(parse_result_path("/jobs/"), None);
+        assert_eq!(parse_result_path("/work/7/result"), None);
     }
 
     #[test]

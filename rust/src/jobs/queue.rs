@@ -414,6 +414,15 @@ impl JobQueue {
         Ok(())
     }
 
+    /// Raise the seq counter to at least `next_seq` — journal replay
+    /// installs the pre-crash counter here so re-admitted jobs keep
+    /// their original seqs and *new* submissions can never collide
+    /// with them. Never lowers the counter.
+    pub fn resume_from(&self, next_seq: u64) {
+        let mut st = self.state.lock().unwrap();
+        st.next_seq = st.next_seq.max(next_seq);
+    }
+
     /// Seal the producer side: further pushes fail, consumers drain the
     /// remaining jobs and then see `None`.
     pub fn close(&self) {
@@ -510,6 +519,16 @@ mod tests {
     fn capacity_is_reported_and_clamped() {
         assert_eq!(JobQueue::bounded(4).capacity(), 4);
         assert_eq!(JobQueue::bounded(0).capacity(), 1);
+    }
+
+    #[test]
+    fn resume_from_raises_but_never_lowers_the_seq_counter() {
+        let q = JobQueue::bounded(16);
+        q.resume_from(7);
+        assert_eq!(q.push(spec(0), 0).unwrap(), 7);
+        // A lower resume point is ignored: seqs stay monotone.
+        q.resume_from(3);
+        assert_eq!(q.push(spec(1), 0).unwrap(), 8);
     }
 
     #[test]

@@ -107,6 +107,12 @@ pub struct WorkerOptions {
     /// gateway's long-poll window). `0` = keep polling forever. For
     /// autoscaled fleets that scale to zero on an idle gateway.
     pub idle_exit_secs: u64,
+    /// Park a training checkpoint in the local cache dir every this
+    /// many steps (`--ckpt-period`; 0 = off). A job whose lease is
+    /// lost mid-run keeps its newest checkpoint on disk, and the next
+    /// lease of the same spec — on a worker sharing this cache dir —
+    /// resumes from it bitwise-identically (`docs/durability.md`).
+    pub ckpt_period: usize,
 }
 
 impl Default for WorkerOptions {
@@ -121,6 +127,7 @@ impl Default for WorkerOptions {
             max_failures: 5,
             max_jobs: 0,
             idle_exit_secs: 0,
+            ckpt_period: 0,
         }
     }
 }
@@ -178,8 +185,12 @@ impl StatCounters {
 /// Run a worker agent with the production [`SpecRunner`] (PJRT runtime
 /// per thread) until the gateway drains.
 pub fn run_worker(opts: &WorkerOptions) -> Result<WorkerStats> {
-    run_worker_with(opts, |_wid| {
+    let ckpt_dir = std::path::PathBuf::from(
+        opts.cache_dir.as_deref().unwrap_or(super::DEFAULT_CACHE_DIR),
+    );
+    run_worker_with(opts, move |_wid| {
         let mut runner = SpecRunner::new();
+        runner.set_ckpt(&ckpt_dir, opts.ckpt_period);
         move |spec: &JobSpec| runner.run(spec)
     })
 }
@@ -476,9 +487,31 @@ fn run_lease<F>(
     ev.run_secs = phases.run;
     ev.secs = t.total();
     obs::journal().push(ev);
-    if !post_result(opts, conn, seq, &status, from_cache, t.total(), phases)
-    {
+    let reported =
+        post_result(opts, conn, seq, &status, from_cache, t.total(), phases);
+    if !reported {
         stats.conflicts.fetch_add(1, Ordering::Relaxed);
+    }
+    // Checkpoint lifecycle (docs/durability.md): a successfully
+    // reported Done retires this spec's parked checkpoints; a dropped
+    // report (lease conflict / unreachable gateway) keeps the newest
+    // one parked so the next lease of the same spec resumes from it
+    // instead of restarting.
+    if opts.ckpt_period > 0 {
+        let hash = lease.get("hash").and_then(Json::as_str).unwrap_or("");
+        if reported && matches!(status, JobStatus::Done(_)) {
+            if !hash.is_empty() {
+                cache.clear_checkpoints(hash);
+            }
+        } else if !hash.is_empty()
+            && cache.latest_checkpoint(hash).is_some()
+        {
+            obs::CKPT_PARKED.inc();
+            eprintln!(
+                "omgd worker: checkpoint for job {seq} parked \
+                 ({hash}); its next lease resumes from it"
+            );
+        }
     }
 }
 
@@ -578,6 +611,11 @@ where
     phases.run = run_t.total();
     match run {
         Ok(Ok(out)) => {
+            // Fault-injection seam: a worker killed here has finished
+            // the run but published nothing — the gateway re-dispatches
+            // on lease expiry and the rerun resumes from the newest
+            // parked checkpoint.
+            obs::faultpoint("artifact.publish");
             if let Err(e) = cache.put(&spec, &cache_afp, &out) {
                 eprintln!(
                     "warning: cache write failed for {} ({}): {e:#}",
@@ -611,6 +649,11 @@ fn post_result(
     secs: f64,
     phases: PhaseSecs,
 ) -> bool {
+    // Fault-injection seam: a worker killed here has published its
+    // result locally but never told the gateway — the classic
+    // "crashed between checkpoint write and report" window that
+    // `tests/remote.rs` drives.
+    obs::faultpoint("lease.report");
     let body = match status {
         JobStatus::Done(out) => format!(
             "{{\"worker\":\"{}\",\"status\":\"done\",\"cached\":{},\
@@ -783,85 +826,56 @@ pub fn run_grid_remote(
     if specs.is_empty() {
         return Ok(GridReport::new(Vec::new()));
     }
-    let body: String = specs
-        .iter()
-        .map(|s| format!("{{\"spec\":{}}}\n", s.to_wire()))
-        .collect();
-    // The returned reader is already positioned at the NDJSON body.
-    let mut reader = post_jobs_with_retry(addr, body.as_bytes(), client)?;
-
-    // seq (gateway) → index (ours). Acks and rejects arrive in request
-    // order, so the n-th ack-or-reject line belongs to specs[n].
-    let mut seq_to_idx: HashMap<u64, usize> = HashMap::new();
-    let mut next_idx = 0usize;
-    let mut statuses: Vec<Option<(JobStatus, bool, f64)>> =
-        vec![None; specs.len()];
-    let mut line = String::new();
-    loop {
-        line.clear();
-        let n = reader
-            .read_line(&mut line)
-            .context("reading result stream")?;
-        if n == 0 {
-            break; // gateway closed the stream: session over
+    let n = specs.len();
+    let mut statuses: Vec<Option<(JobStatus, bool, f64)>> = vec![None; n];
+    // Gateway seq for each acked cell — the durable handle this client
+    // re-polls (`GET /jobs/<seq>/result`) after a broken stream or a
+    // gateway restart; the journal preserves seqs across crashes
+    // (docs/durability.md).
+    let mut seqs: Vec<Option<u64>> = vec![None; n];
+    const SESSION_ATTEMPTS: usize = 3;
+    for attempt in 0..SESSION_ATTEMPTS {
+        // Submit everything never acked (first round: all cells; later
+        // rounds: cells whose seq the gateway disowned with a 404).
+        let todo: Vec<usize> = (0..n)
+            .filter(|&i| statuses[i].is_none() && seqs[i].is_none())
+            .collect();
+        if !todo.is_empty() {
+            match stream_session(
+                addr, &specs, &todo, client, &mut statuses, &mut seqs,
+            ) {
+                Ok(()) => {}
+                Err(e) if attempt + 1 < SESSION_ATTEMPTS => {
+                    eprintln!(
+                        "omgd grid: session attempt {} failed ({e:#}); \
+                         reconnecting",
+                        attempt + 1
+                    );
+                    std::thread::sleep(Duration::from_secs(1));
+                }
+                Err(e) => return Err(e),
+            }
         }
-        let text = line.trim();
-        if text.is_empty() {
-            continue;
+        // Acked but unresolved (stream broke mid-results, or the
+        // gateway restarted and replayed its journal): re-poll by seq.
+        // A 404 clears the seq so the next round resubmits the spec.
+        let pending: Vec<usize> = (0..n)
+            .filter(|&i| statuses[i].is_none() && seqs[i].is_some())
+            .collect();
+        if !pending.is_empty() {
+            poll_by_seq(addr, &pending, &mut statuses, &mut seqs);
         }
-        let j = Json::parse(text).map_err(|e| {
-            anyhow!("gateway sent a non-JSON line {text:?}: {e}")
-        })?;
-        if let Some(seq) = j.get("accepted").and_then(Json::as_usize) {
-            if next_idx >= specs.len() {
-                bail!("gateway acked more jobs than were submitted");
-            }
-            let want = specs[next_idx].hash_hex();
-            let got = j.get("hash").and_then(Json::as_str).unwrap_or("");
-            if got != want {
-                bail!(
-                    "spec hash mismatch on cell {next_idx} \
-                     ({}): ours {want}, gateway {got} — version skew?",
-                    specs[next_idx].label()
-                );
-            }
-            seq_to_idx.insert(seq as u64, next_idx);
-            next_idx += 1;
-        } else if let Some(tag) = j.get("status").and_then(Json::as_str) {
-            let seq = j
-                .get("seq")
-                .and_then(Json::as_usize)
-                .ok_or_else(|| anyhow!("result line without seq"))? as u64;
-            let idx = *seq_to_idx
-                .get(&seq)
-                .ok_or_else(|| anyhow!("result for unknown seq {seq}"))?;
-            let err = || {
-                j.get("error")
-                    .and_then(Json::as_str)
-                    .unwrap_or("remote failure")
-                    .to_string()
-            };
-            let status = match tag {
-                "done" => JobStatus::Done(outcome_from_result(&j)),
-                "failed" => JobStatus::Failed(err()),
-                "panicked" => JobStatus::Panicked(err()),
-                other => bail!("unknown result status {other:?}"),
-            };
-            let cached =
-                j.get("cached").and_then(Json::as_bool).unwrap_or(false);
-            let secs =
-                j.get("secs").and_then(Json::as_f64).unwrap_or(0.0);
-            statuses[idx] = Some((status, cached, secs));
-        } else if let Some(msg) = j.get("error").and_then(Json::as_str) {
-            // Reject line: consumes the next request slot.
-            if next_idx >= specs.len() {
-                bail!("gateway rejected more lines than were submitted");
-            }
-            statuses[next_idx] =
-                Some((JobStatus::Failed(msg.to_string()), false, 0.0));
-            next_idx += 1;
-        } else {
-            bail!("unrecognized stream line {text:?}");
+        if statuses.iter().all(Option::is_some) {
+            break;
+        }
+        if attempt + 1 < SESSION_ATTEMPTS {
+            let left = statuses.iter().filter(|s| s.is_none()).count();
+            eprintln!(
+                "omgd grid: {left} cell(s) unresolved after attempt {}; \
+                 reconnecting",
+                attempt + 1
+            );
+            std::thread::sleep(Duration::from_secs(1));
         }
     }
 
@@ -883,6 +897,179 @@ pub fn run_grid_remote(
         })
         .collect();
     Ok(GridReport::new(results))
+}
+
+/// One `POST /jobs` session over the subset `todo` of `specs`, filling
+/// `statuses`/`seqs` in place. Protocol violations (hash mismatch,
+/// malformed lines) are hard errors; a transport break mid-stream
+/// returns `Ok(())` with whatever arrived — the caller re-polls the
+/// rest by seq.
+fn stream_session(
+    addr: &str,
+    specs: &[JobSpec],
+    todo: &[usize],
+    client: Option<&str>,
+    statuses: &mut [Option<(JobStatus, bool, f64)>],
+    seqs: &mut [Option<u64>],
+) -> Result<()> {
+    let body: String = todo
+        .iter()
+        .map(|&i| format!("{{\"spec\":{}}}\n", specs[i].to_wire()))
+        .collect();
+    // The returned reader is already positioned at the NDJSON body.
+    let mut reader = post_jobs_with_retry(addr, body.as_bytes(), client)?;
+
+    // seq (gateway) → index (ours). Acks and rejects arrive in request
+    // order, so the n-th ack-or-reject line belongs to todo[n].
+    let mut seq_to_idx: HashMap<u64, usize> = HashMap::new();
+    let mut next = 0usize;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        let read = match reader.read_line(&mut line) {
+            Ok(0) => return Ok(()), // gateway closed the stream
+            Ok(read) => read,
+            // Mid-stream transport loss (gateway killed, connection
+            // reset): keep the partial session; acked seqs survive in
+            // the gateway's journal and are re-polled.
+            Err(e) => {
+                eprintln!("omgd grid: result stream broke ({e})");
+                return Ok(());
+            }
+        };
+        let _ = read;
+        let text = line.trim();
+        if text.is_empty() {
+            continue;
+        }
+        let j = Json::parse(text).map_err(|e| {
+            anyhow!("gateway sent a non-JSON line {text:?}: {e}")
+        })?;
+        if let Some(seq) = j.get("accepted").and_then(Json::as_usize) {
+            if next >= todo.len() {
+                bail!("gateway acked more jobs than were submitted");
+            }
+            let idx = todo[next];
+            let want = specs[idx].hash_hex();
+            let got = j.get("hash").and_then(Json::as_str).unwrap_or("");
+            if got != want {
+                bail!(
+                    "spec hash mismatch on cell {idx} \
+                     ({}): ours {want}, gateway {got} — version skew?",
+                    specs[idx].label()
+                );
+            }
+            seqs[idx] = Some(seq as u64);
+            seq_to_idx.insert(seq as u64, idx);
+            next += 1;
+        } else if j.get("status").and_then(Json::as_str).is_some() {
+            let seq = j
+                .get("seq")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("result line without seq"))? as u64;
+            let idx = *seq_to_idx
+                .get(&seq)
+                .ok_or_else(|| anyhow!("result for unknown seq {seq}"))?;
+            statuses[idx] = Some(parse_result_json(&j)?);
+        } else if let Some(msg) = j.get("error").and_then(Json::as_str) {
+            // Reject line: consumes the next request slot.
+            if next >= todo.len() {
+                bail!("gateway rejected more lines than were submitted");
+            }
+            statuses[todo[next]] =
+                Some((JobStatus::Failed(msg.to_string()), false, 0.0));
+            next += 1;
+        } else {
+            bail!("unrecognized stream line {text:?}");
+        }
+    }
+}
+
+/// Re-poll unresolved-but-acked cells via `GET /jobs/<seq>/result`.
+/// `200` records the result, `404` forgets the seq (the caller
+/// resubmits the spec), `202` means the replayed job is still queued or
+/// running — poll until the budget runs out. Best-effort by design:
+/// transport errors burn budget instead of failing the grid.
+fn poll_by_seq(
+    addr: &str,
+    pending: &[usize],
+    statuses: &mut [Option<(JobStatus, bool, f64)>],
+    seqs: &mut [Option<u64>],
+) {
+    // Generous budget: a recovered job may still be *running* after a
+    // gateway restart and a long train step takes real time.
+    const POLL_BUDGET: usize = 600;
+    const ERR_BUDGET: usize = 30;
+    let mut conn = GatewayConn::new(addr);
+    for &i in pending {
+        let Some(seq) = seqs[i] else { continue };
+        let path = format!("/jobs/{seq}/result");
+        let mut errs = 0usize;
+        for _ in 0..POLL_BUDGET {
+            match conn.request_json(
+                "GET",
+                &path,
+                &[],
+                Duration::from_secs(10),
+            ) {
+                Ok((200, j)) => {
+                    match parse_result_json(&j) {
+                        Ok(r) => statuses[i] = Some(r),
+                        Err(_) => seqs[i] = None,
+                    }
+                    break;
+                }
+                Ok((404, _)) => {
+                    // The gateway (or its journal) no longer knows this
+                    // seq: resubmit the spec from scratch.
+                    seqs[i] = None;
+                    break;
+                }
+                Ok((202, _)) => {
+                    std::thread::sleep(Duration::from_millis(500));
+                }
+                Ok((_, _)) => {
+                    errs += 1;
+                    if errs >= ERR_BUDGET {
+                        break;
+                    }
+                    std::thread::sleep(Duration::from_millis(500));
+                }
+                Err(_) => {
+                    errs += 1;
+                    if errs >= ERR_BUDGET {
+                        break;
+                    }
+                    std::thread::sleep(Duration::from_secs(1));
+                }
+            }
+        }
+    }
+}
+
+/// Decode one result JSON (a session result line or a
+/// `GET /jobs/<seq>/result` body — same shape) into the
+/// `(status, cached, secs)` triple the grid report stores.
+fn parse_result_json(j: &Json) -> Result<(JobStatus, bool, f64)> {
+    let tag = j
+        .get("status")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("result without status"))?;
+    let err = || {
+        j.get("error")
+            .and_then(Json::as_str)
+            .unwrap_or("remote failure")
+            .to_string()
+    };
+    let status = match tag {
+        "done" => JobStatus::Done(outcome_from_result(j)),
+        "failed" => JobStatus::Failed(err()),
+        "panicked" => JobStatus::Panicked(err()),
+        other => bail!("unknown result status {other:?}"),
+    };
+    let cached = j.get("cached").and_then(Json::as_bool).unwrap_or(false);
+    let secs = j.get("secs").and_then(Json::as_f64).unwrap_or(0.0);
+    Ok((status, cached, secs))
 }
 
 /// The deterministic outcome slice carried by a result line. Loss/eval

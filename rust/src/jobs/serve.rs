@@ -34,6 +34,7 @@
 //! original seq** so the submitting session's ack stays valid across
 //! worker crashes.
 
+use super::journal::{JobJournal, PendingJob, Record as JournalRecord, Replay};
 use super::pool::{worker_loop, JobOutcome, JobResult, JobStatus};
 use super::queue::{Job, JobQueue, PopScan, PopTimeout, TryPush};
 use super::spec::JobSpec;
@@ -41,10 +42,10 @@ use super::{cached_runner, open_cache, GridOptions};
 use crate::obs;
 use crate::util::json::Json;
 use anyhow::Result;
-use std::collections::{HashMap, HashSet};
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::io::{BufRead, Write};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{mpsc, Condvar, Mutex, MutexGuard};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Condvar, Mutex, MutexGuard, OnceLock};
 use std::time::{Duration, Instant};
 
 /// Lock a shared-map mutex, recovering from poisoning. A worker or
@@ -123,6 +124,57 @@ pub struct JobHub {
     affinity: AtomicUsize,
     requeued: AtomicUsize,
     conflicts: AtomicUsize,
+    /// Durable write-ahead journal ([`Self::attach_journal`]) — `None`
+    /// for purely in-memory hubs (local pools, stdin serve, tests).
+    journal: OnceLock<JobJournal>,
+    /// Every admitted-but-not-dispatched job, keyed by seq: the
+    /// snapshot compaction persists, and the source of the spec-hash
+    /// set cache GC must keep parked checkpoints alive for.
+    live: Mutex<HashMap<u64, PendingJob>>,
+    /// Dispatched results retained for `GET /jobs/<seq>/result`
+    /// re-polls across reconnects/restarts (journal-attached hubs
+    /// only), capped at [`RETAINED_RESULTS`].
+    completed: Mutex<CompletedLog>,
+    /// Replayed jobs whose submitting session died with the previous
+    /// process (seq → client token). Their eventual dispatch finds no
+    /// route; the token's ledger slot is released from here instead.
+    orphans: Mutex<HashMap<u64, Option<String>>>,
+    /// `max(seq) + 1` over every admission this hub has seen
+    /// (including replay) — the `meta` floor compaction writes.
+    seq_floor: AtomicU64,
+}
+
+/// Cap on results retained for by-seq re-polls; oldest evict first.
+pub const RETAINED_RESULTS: usize = 4096;
+
+#[derive(Default)]
+struct CompletedLog {
+    map: HashMap<u64, JobResult>,
+    order: VecDeque<u64>,
+}
+
+impl CompletedLog {
+    fn insert(&mut self, r: JobResult) {
+        if self.map.insert(r.seq, r.clone()).is_none() {
+            self.order.push_back(r.seq);
+        }
+        while self.order.len() > RETAINED_RESULTS {
+            if let Some(old) = self.order.pop_front() {
+                self.map.remove(&old);
+            }
+        }
+    }
+}
+
+/// What [`JobHub::result_for`] knows about a seq.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ResultLookup {
+    /// The job finished; here is its protocol result line.
+    Ready(String),
+    /// Admitted (queued or leased) but not finished — poll again.
+    Pending,
+    /// Never admitted, or evicted from the retained-results window.
+    Unknown,
 }
 
 /// One submitted job's reply channel plus the client token its
@@ -230,7 +282,134 @@ impl JobHub {
             affinity: AtomicUsize::new(0),
             requeued: AtomicUsize::new(0),
             conflicts: AtomicUsize::new(0),
+            journal: OnceLock::new(),
+            live: Mutex::new(HashMap::new()),
+            completed: Mutex::new(CompletedLog::default()),
+            orphans: Mutex::new(HashMap::new()),
+            seq_floor: AtomicU64::new(0),
         }
+    }
+
+    /// Attach the durable journal. Every later admission, lease
+    /// grant/renewal, completion, and cancellation is appended (and
+    /// fsynced) before a client can observe the transition's effects.
+    /// One journal per hub; a second attach is ignored with a warning.
+    pub fn attach_journal(&self, j: JobJournal) {
+        if self.journal.set(j).is_err() {
+            eprintln!("warning: hub journal already attached; ignoring");
+        }
+    }
+
+    pub fn has_journal(&self) -> bool {
+        self.journal.get().is_some()
+    }
+
+    /// Best-effort journal append: a full disk must degrade durability,
+    /// not availability (the job still runs; it just won't survive a
+    /// crash).
+    fn journal_append(&self, rec: &JournalRecord) {
+        if let Some(j) = self.journal.get() {
+            if let Err(e) = j.append(rec) {
+                eprintln!("warning: journal append failed: {e:#}");
+            }
+        }
+    }
+
+    /// Apply a journal [`Replay`] to this (fresh) hub: raise the seq
+    /// counter, requeue every still-pending admission **with its
+    /// original seq** (as lease expiry does), rebuild the client
+    /// ledger, and repopulate the retained-results window so
+    /// reconnecting clients can re-poll by seq. Returns
+    /// `(requeued, completed)` counts.
+    pub fn recover(&self, rep: Replay) -> (usize, usize) {
+        self.queue.resume_from(rep.next_seq);
+        self.seq_floor.fetch_max(rep.next_seq, Ordering::Relaxed);
+        let mut requeued = 0usize;
+        for p in rep.pending {
+            let job = Job {
+                seq: p.seq,
+                priority: p.priority,
+                spec: p.spec.clone(),
+                enqueued: Instant::now(),
+            };
+            if let Err(e) = self.queue.requeue(job) {
+                eprintln!(
+                    "warning: replay could not requeue seq {}: {e:#}",
+                    p.seq
+                );
+                continue;
+            }
+            if let Some(c) = &p.client {
+                *lock_recover(&self.clients)
+                    .entry(c.clone())
+                    .or_insert(0) += 1;
+            }
+            lock_recover(&self.orphans).insert(p.seq, p.client.clone());
+            lock_recover(&self.live).insert(p.seq, p);
+            self.accepted.fetch_add(1, Ordering::Relaxed);
+            requeued += 1;
+        }
+        let n_done = rep.completed.len();
+        let mut log = lock_recover(&self.completed);
+        for r in rep.completed {
+            self.accepted.fetch_add(1, Ordering::Relaxed);
+            if r.from_cache {
+                self.cached.fetch_add(1, Ordering::Relaxed);
+            }
+            if r.is_ok() {
+                self.done.fetch_add(1, Ordering::Relaxed);
+            } else {
+                self.failed.fetch_add(1, Ordering::Relaxed);
+            }
+            log.insert(r);
+        }
+        (requeued, n_done)
+    }
+
+    /// Compact the attached journal down to a snapshot of live state
+    /// (pending admissions + retained completions). No-op without a
+    /// journal. Run at startup right after replay, and on clean
+    /// shutdown.
+    pub fn compact_journal(&self) -> Result<()> {
+        let Some(j) = self.journal.get() else { return Ok(()) };
+        let mut pending: Vec<PendingJob> =
+            lock_recover(&self.live).values().cloned().collect();
+        pending.sort_by_key(|p| p.seq);
+        let mut completed: Vec<JobResult> = {
+            let log = lock_recover(&self.completed);
+            log.map.values().cloned().collect()
+        };
+        completed.sort_by_key(|r| r.seq);
+        j.compact(
+            self.seq_floor.load(Ordering::Relaxed),
+            &pending,
+            &completed,
+        )
+    }
+
+    /// Look up the fate of a seq for a reconnecting client
+    /// (`GET /jobs/<seq>/result`).
+    pub fn result_for(&self, seq: u64) -> ResultLookup {
+        if let Some(r) = lock_recover(&self.completed).map.get(&seq) {
+            return ResultLookup::Ready(result_line(r));
+        }
+        if lock_recover(&self.live).contains_key(&seq)
+            || lock_recover(&self.routes).contains_key(&seq)
+            || lock_recover(&self.leases).contains_key(&seq)
+        {
+            return ResultLookup::Pending;
+        }
+        ResultLookup::Unknown
+    }
+
+    /// Spec hashes of every admitted-but-unfinished job — the set whose
+    /// parked checkpoints the cache GC must not evict
+    /// ([`super::cache::ResultCache::gc_at_protected`]).
+    pub fn live_spec_hashes(&self) -> HashSet<String> {
+        lock_recover(&self.live)
+            .values()
+            .map(|p| p.spec.hash_hex())
+            .collect()
     }
 
     /// Set the per-client in-flight quota (`0` = unlimited). The
@@ -321,7 +500,8 @@ impl JobHub {
         client: Option<&str>,
     ) -> Result<u64> {
         let hash = spec.hash_hex();
-        loop {
+        let rec_spec = spec.clone();
+        let seq = loop {
             {
                 let mut routes = lock_recover(&self.routes);
                 match self.queue.try_push(spec, priority) {
@@ -333,13 +513,25 @@ impl JobHub {
                                 client: client.map(String::from),
                             },
                         );
+                        // Registered under the routes lock (ordering:
+                        // routes → live, matching dispatch) so even a
+                        // microsecond completion finds the live entry.
+                        lock_recover(&self.live).insert(
+                            seq,
+                            PendingJob {
+                                seq,
+                                priority,
+                                client: client.map(String::from),
+                                spec: rec_spec.clone(),
+                            },
+                        );
                         self.accepted.fetch_add(1, Ordering::Relaxed);
                         let mut ev = obs::Event::new("enqueue", seq);
                         ev.hash = hash;
                         ev.client =
                             client.unwrap_or_default().to_string();
                         obs::journal().push(ev);
-                        return Ok(seq);
+                        break seq;
                     }
                     TryPush::Closed(_) => {
                         anyhow::bail!("job queue is closed")
@@ -348,7 +540,18 @@ impl JobHub {
                 }
             }
             self.queue.wait_not_full();
-        }
+        };
+        self.seq_floor.fetch_max(seq + 1, Ordering::Relaxed);
+        // Durable admission record — fsynced outside the routes lock so
+        // a slow disk never stalls result dispatch. Replay tolerates
+        // the resulting done-before-admit reordering for cached jobs.
+        self.journal_append(&JournalRecord::Admit {
+            seq,
+            priority,
+            client: client.map(String::from),
+            spec: rec_spec,
+        });
+        Ok(seq)
     }
 
     /// Count one request that never became a job (parse/validation
@@ -393,12 +596,30 @@ impl JobHub {
             self.failed.fetch_add(1, Ordering::Relaxed);
             obs::JOBS_FAILED.inc();
         }
+        // Durable completion first: once any client can observe this
+        // result, a restarted gateway must reproduce it on re-poll.
+        if self.journal.get().is_some() {
+            self.journal_append(&JournalRecord::Done {
+                seq: r.seq,
+                status: r.status.clone(),
+                from_cache: r.from_cache,
+                secs: r.secs,
+                spec: r.spec.clone(),
+            });
+            lock_recover(&self.completed).insert(r.clone());
+        }
         let reply = lock_recover(&self.routes).remove(&r.seq);
+        lock_recover(&self.live).remove(&r.seq);
+        let orphan = lock_recover(&self.orphans).remove(&r.seq);
         if let Some(route) = reply {
             if let Some(client) = &route.client {
                 self.release_client_slot(client);
             }
             let _ = route.tx.send(r);
+        } else if let Some(Some(client)) = orphan {
+            // Replayed job with no live session: its quota slot was
+            // rebuilt by recover(); drain it here.
+            self.release_client_slot(&client);
         }
     }
 
@@ -500,6 +721,10 @@ impl JobHub {
         if affine {
             self.affinity.fetch_add(1, Ordering::Relaxed);
         }
+        self.journal_append(&JournalRecord::Lease {
+            seq: info.seq,
+            worker: worker.to_string(),
+        });
         LeaseReply::Granted(info)
     }
 
@@ -518,7 +743,12 @@ impl JobHub {
                 _ => false,
             }
         };
-        if !renewed {
+        if renewed {
+            self.journal_append(&JournalRecord::Renew {
+                seq,
+                worker: worker.to_string(),
+            });
+        } else {
             self.conflicts.fetch_add(1, Ordering::Relaxed);
         }
         renewed
@@ -938,7 +1168,7 @@ fn write_line<W: Write>(out: &Mutex<W>, line: &str) -> bool {
     writeln!(o, "{line}").is_ok() && o.flush().is_ok()
 }
 
-fn result_line(r: &JobResult) -> String {
+pub(crate) fn result_line(r: &JobResult) -> String {
     let head = format!(
         "{{\"seq\":{},\"label\":\"{}\",\"hash\":\"{}\",\"status\":\"{}\",\
          \"cached\":{}",
@@ -1467,6 +1697,194 @@ this is not json\n\
         assert_eq!(r.seq, seq);
         assert_eq!(hub.client_in_flight("t"), 0);
         assert!(hub.clients_snapshot().is_empty());
+    }
+
+    fn journal_dir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "omgd-hub-journal-{tag}-{}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&d).ok();
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn journaled_hub_recovers_across_a_simulated_crash() {
+        let dir = journal_dir("recover");
+        let (s_done, s_pending);
+        {
+            // "Crashed" incarnation: journal attached, one job
+            // completes, one stays queued, then the process state is
+            // simply dropped — no compaction, no clean shutdown.
+            let hub = JobHub::new(8);
+            hub.attach_journal(JobJournal::open(&dir).unwrap());
+            let (tx, _rx) = mpsc::channel::<JobResult>();
+            s_done = hub.submit(mk_spec(1), 0, &tx, Some("grid-a")).unwrap();
+            s_pending =
+                hub.submit(mk_spec(2), 5, &tx, Some("grid-a")).unwrap();
+            let info = match hub.try_lease(
+                "w1",
+                &HashSet::new(),
+                0,
+                Duration::from_secs(60),
+                Duration::ZERO,
+            ) {
+                LeaseReply::Granted(i) => i,
+                other => panic!("expected Granted, got {other:?}"),
+            };
+            assert_eq!(info.seq, s_done);
+            assert!(matches!(
+                hub.complete_remote(
+                    s_done,
+                    "w1",
+                    JobStatus::Done(JobOutcome {
+                        final_metric: 1.5,
+                        ..JobOutcome::default()
+                    }),
+                    false,
+                    0.25,
+                    PhaseSecs::default()
+                ),
+                RemoteDone::Accepted { .. }
+            ));
+        }
+        // Restarted incarnation on the same cache dir.
+        let hub = JobHub::new(8);
+        let rep =
+            crate::jobs::journal::replay(&JobJournal::path_in(&dir))
+                .unwrap();
+        hub.attach_journal(JobJournal::open(&dir).unwrap());
+        let (requeued, completed) = hub.recover(rep);
+        assert_eq!((requeued, completed), (1, 1));
+        // Reconnecting clients re-poll by seq.
+        match hub.result_for(s_done) {
+            ResultLookup::Ready(line) => {
+                let j = Json::parse(&line).unwrap();
+                assert_eq!(j.at("seq").as_f64(), Some(s_done as f64));
+                assert_eq!(j.at("status").as_str(), Some("done"));
+                assert_eq!(j.at("final_metric").as_f64(), Some(1.5));
+            }
+            other => panic!("expected Ready, got {other:?}"),
+        }
+        assert_eq!(hub.result_for(s_pending), ResultLookup::Pending);
+        assert_eq!(hub.result_for(999), ResultLookup::Unknown);
+        // The pending job is live for GC protection and re-leasable
+        // with its original seq + priority.
+        assert!(hub
+            .live_spec_hashes()
+            .contains(&mk_spec(2).hash_hex()));
+        assert_eq!(hub.client_in_flight("grid-a"), 1);
+        let again = match hub.try_lease(
+            "w2",
+            &HashSet::new(),
+            0,
+            Duration::from_secs(60),
+            Duration::ZERO,
+        ) {
+            LeaseReply::Granted(i) => i,
+            other => panic!("expected Granted, got {other:?}"),
+        };
+        assert_eq!((again.seq, again.priority), (s_pending, 5));
+        assert_eq!(hub.result_for(s_pending), ResultLookup::Pending);
+        assert!(matches!(
+            hub.complete_remote(
+                s_pending,
+                "w2",
+                JobStatus::Done(JobOutcome::default()),
+                false,
+                0.1,
+                PhaseSecs::default()
+            ),
+            RemoteDone::Accepted { .. }
+        ));
+        // The orphan's ledger slot drained through dispatch...
+        assert_eq!(hub.client_in_flight("grid-a"), 0);
+        // ...and its result is now re-pollable too.
+        assert!(matches!(
+            hub.result_for(s_pending),
+            ResultLookup::Ready(_)
+        ));
+        // New admissions never reuse a journaled seq.
+        let (tx2, _rx2) = mpsc::channel::<JobResult>();
+        let fresh = hub.submit(mk_spec(3), 0, &tx2, None).unwrap();
+        assert!(fresh > s_pending);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn compaction_preserves_recovery_state() {
+        let dir = journal_dir("compact");
+        let hub = JobHub::new(8);
+        hub.attach_journal(JobJournal::open(&dir).unwrap());
+        let (tx, rx) = mpsc::channel::<JobResult>();
+        let s1 = hub.submit(mk_spec(1), 0, &tx, None).unwrap();
+        let s2 = hub.submit(mk_spec(2), 0, &tx, None).unwrap();
+        let info = match hub.try_lease(
+            "w1",
+            &HashSet::new(),
+            0,
+            Duration::from_secs(60),
+            Duration::ZERO,
+        ) {
+            LeaseReply::Granted(i) => i,
+            other => panic!("expected Granted, got {other:?}"),
+        };
+        assert_eq!(info.seq, s1);
+        hub.complete_remote(
+            s1,
+            "w1",
+            JobStatus::Done(JobOutcome::default()),
+            false,
+            0.1,
+            PhaseSecs::default(),
+        );
+        rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        hub.compact_journal().unwrap();
+        // The compacted journal replays to the same live state.
+        let rep =
+            crate::jobs::journal::replay(&JobJournal::path_in(&dir))
+                .unwrap();
+        assert_eq!(rep.next_seq, s2 + 1);
+        assert_eq!(
+            rep.pending.iter().map(|p| p.seq).collect::<Vec<_>>(),
+            vec![s2]
+        );
+        assert_eq!(
+            rep.completed.iter().map(|r| r.seq).collect::<Vec<_>>(),
+            vec![s1]
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn unjournaled_hub_reports_unknown_not_pending_results() {
+        // Without a journal the retained-results window is off: the
+        // lookup must not fabricate Pending for finished work.
+        let hub = JobHub::new(4);
+        let (tx, rx) = mpsc::channel::<JobResult>();
+        let seq = hub.submit(mk_spec(1), 0, &tx, None).unwrap();
+        assert_eq!(hub.result_for(seq), ResultLookup::Pending);
+        let LeaseReply::Granted(_) = hub.try_lease(
+            "w1",
+            &HashSet::new(),
+            0,
+            Duration::from_secs(60),
+            Duration::ZERO,
+        ) else {
+            panic!("lease refused")
+        };
+        hub.complete_remote(
+            seq,
+            "w1",
+            JobStatus::Done(JobOutcome::default()),
+            false,
+            0.1,
+            PhaseSecs::default(),
+        );
+        rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(hub.result_for(seq), ResultLookup::Unknown);
+        assert!(hub.live_spec_hashes().is_empty());
     }
 
     #[test]

@@ -35,6 +35,7 @@
 //! — can never leave a half-synced set that later runs.
 
 use super::spec::fnv1a64;
+use crate::obs;
 use anyhow::{bail, Context, Result};
 use std::fs;
 use std::path::{Path, PathBuf};
@@ -294,6 +295,10 @@ impl ArtifactStore {
         if let Ok(d) = fs::File::open(&tmp) {
             let _ = d.sync_all();
         }
+        // The nastiest instant: every byte fsynced but nothing
+        // published. A kill here must leave only a `.tmp-*` dir that
+        // the next sync ignores and GC sweeps (docs/durability.md).
+        obs::faultpoint("store.publish");
         match fs::rename(&tmp, &dest) {
             Ok(()) => {}
             Err(e) => {

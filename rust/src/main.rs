@@ -150,7 +150,10 @@ USAGE: omgd <subcommand> [flags]
                GET /healthz /stats /metrics /events /cache; POST
                /work/lease hands jobs to remote `omgd worker` agents
                (--workers 0 = pure coordinator); POST /shutdown drains
-               (protocol: docs/serve-protocol.md)
+               (protocol: docs/serve-protocol.md); a crash-safe job
+               journal under the cache dir is replayed on restart so
+               queued/completed jobs survive crashes
+               (docs/durability.md)
     --workers 4 [--force] [--cache-dir DIR]
     [--cache-max-age-secs N] [--cache-max-bytes N]
     HTTP mode only: [--listen 127.0.0.1:8080] [--max-conns 64]
@@ -168,9 +171,11 @@ USAGE: omgd <subcommand> [flags]
                drains (see docs/operations.md)
     --connect HOST:PORT [--workers N] [--id NAME] [--cache-dir DIR]
     [--artifact-store DIR] [--force] [--max-failures 5]
-    [--max-jobs N] [--idle-exit SECS]
+    [--max-jobs N] [--idle-exit SECS] [--ckpt-period STEPS]
   cache-gc     prune the result cache (age cap, then size cap evicting
                least-recently-used-first; cache hits refresh recency);
+               parked train checkpoints answer only to the age cap and
+               never while their job is live in the journal;
                see docs/operations.md
     --max-age-secs N --max-bytes N [--dry-run] [--cache-dir DIR]
   microbench   time native masked-AdamW steps on the segment-run path
@@ -913,6 +918,7 @@ fn cmd_worker(args: &Args) -> Result<()> {
             .usize_or("max-failures", defaults.max_failures)?,
         max_jobs: args.usize_or("max-jobs", 0)?,
         idle_exit_secs: args.u64_or("idle-exit", 0)?,
+        ckpt_period: args.usize_or("ckpt-period", 0)?,
     };
     let stats = run_worker(&opts)?;
     eprintln!(
@@ -938,7 +944,15 @@ fn cmd_cache_gc(args: &Args) -> Result<()> {
         );
     }
     let cache = ResultCache::open(args.get("cache-dir"))?;
-    let st = cache.gc(&policy)?;
+    // Parked checkpoints of jobs with a live journal entry must survive
+    // any manual GC pass too, or a crash-recovery resume would restart
+    // from step 0 (docs/durability.md).
+    let jpath =
+        omgd::jobs::JobJournal::path_in(cache.dir());
+    let protected = omgd::jobs::journal::replay(&jpath)
+        .map(|r| omgd::jobs::journal::live_hashes(&r))
+        .unwrap_or_default();
+    let st = cache.gc_protected(&policy, &protected)?;
     println!(
         "cache {}: scanned {} entries; {} {} ({} bytes); {} kept \
          ({} bytes)",

@@ -32,7 +32,7 @@
 use crate::metrics::format_g;
 use crate::util::json::escape_str as esc;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Mutex, OnceLock};
 use std::time::{SystemTime, UNIX_EPOCH};
 
 // ---------------------------------------------------------------------
@@ -235,6 +235,15 @@ pub static MASK_REFRESH_SECONDS: Histogram =
 pub static STATE_BYTES: Gauge = Gauge::new();
 pub static KEEP_RATIO: Gauge = Gauge::new();
 
+// Durability: job journal + train checkpoints.
+pub static JOURNAL_RECORDS: Counter = Counter::new();
+pub static JOURNAL_REPLAYED: Counter = Counter::new();
+pub static JOURNAL_TORN: Counter = Counter::new();
+pub static JOURNAL_COMPACTIONS: Counter = Counter::new();
+pub static CKPT_WRITES: Counter = Counter::new();
+pub static CKPT_RESUMES: Counter = Counter::new();
+pub static CKPT_PARKED: Counter = Counter::new();
+
 /// A named metric for exposition.
 pub enum Metric {
     C(&'static Counter),
@@ -349,6 +358,44 @@ pub fn families() -> Vec<Family> {
             name: "omgd_train_keep_ratio",
             help: "Active fraction of the current mask",
             metric: G(&KEEP_RATIO),
+        },
+        Family {
+            name: "omgd_journal_records_total",
+            help: "Records appended to the durable job journal",
+            metric: C(&JOURNAL_RECORDS),
+        },
+        Family {
+            name: "omgd_journal_replayed_total",
+            help: "Journal records replayed at startup",
+            metric: C(&JOURNAL_REPLAYED),
+        },
+        Family {
+            name: "omgd_journal_torn_total",
+            help: "Torn or corrupt journal tail records dropped on \
+                   replay",
+            metric: C(&JOURNAL_TORN),
+        },
+        Family {
+            name: "omgd_journal_compactions_total",
+            help: "Journal compaction passes (startup and clean \
+                   shutdown)",
+            metric: C(&JOURNAL_COMPACTIONS),
+        },
+        Family {
+            name: "omgd_ckpt_writes_total",
+            help: "Training checkpoints written",
+            metric: C(&CKPT_WRITES),
+        },
+        Family {
+            name: "omgd_ckpt_resumes_total",
+            help: "Training runs resumed from a checkpoint",
+            metric: C(&CKPT_RESUMES),
+        },
+        Family {
+            name: "omgd_ckpt_parked_total",
+            help: "Checkpoints parked on lease expiry or report \
+                   failure",
+            metric: C(&CKPT_PARKED),
         },
     ]
 }
@@ -631,6 +678,66 @@ impl std::str::FromStr for MetricsLevel {
     }
 }
 
+// ---------------------------------------------------------------------
+// Fault injection
+// ---------------------------------------------------------------------
+
+/// Parsed `OMGD_FAULT=<name>[:<nth>]` spec: kill the process at the
+/// `nth` (1-based) hit of the named [`faultpoint`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FaultSpec {
+    pub name: String,
+    pub nth: u64,
+}
+
+/// Parse a fault spec: `"journal.append"` → first hit,
+/// `"ckpt.write:3"` → third hit. Empty or malformed specs (bad count,
+/// count 0, missing name) disable injection rather than erroring — a
+/// stray env var must never take down a production process.
+pub fn parse_fault_spec(raw: &str) -> Option<FaultSpec> {
+    let raw = raw.trim();
+    if raw.is_empty() {
+        return None;
+    }
+    let (name, nth) = match raw.rsplit_once(':') {
+        Some((n, c)) => (n.trim(), c.trim().parse::<u64>().ok()?),
+        None => (raw, 1),
+    };
+    if name.is_empty() || nth == 0 {
+        return None;
+    }
+    Some(FaultSpec { name: name.to_string(), nth })
+}
+
+static FAULT: OnceLock<Option<FaultSpec>> = OnceLock::new();
+static FAULT_HITS: AtomicU64 = AtomicU64::new(0);
+
+fn fault_spec() -> &'static Option<FaultSpec> {
+    FAULT.get_or_init(|| {
+        std::env::var("OMGD_FAULT")
+            .ok()
+            .and_then(|v| parse_fault_spec(&v))
+    })
+}
+
+/// Crash-at-this-instant hook for durability tests. Named points are
+/// threaded through the nastiest write windows (journal append,
+/// checkpoint write, lease report, artifact publish); when
+/// `OMGD_FAULT=<name>[:<nth>]` matches, the nth hit aborts the process
+/// — the closest portable stand-in for SIGKILL (no destructors, no
+/// flushes). A no-op (one lazy env read, then one branch) otherwise.
+pub fn faultpoint(name: &str) {
+    let Some(spec) = fault_spec() else { return };
+    if spec.name != name {
+        return;
+    }
+    let hit = FAULT_HITS.fetch_add(1, Ordering::Relaxed) + 1;
+    if hit == spec.nth {
+        eprintln!("omgd: faultpoint {name:?} hit {hit}, aborting");
+        std::process::abort();
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -864,6 +971,50 @@ mod tests {
         assert_eq!(j.at("worker").as_str(), Some("w-1"));
         assert_eq!(j.at("queue_secs").as_f64(), Some(0.5));
         assert_eq!(j.at("run_secs").as_f64(), Some(1.5));
+    }
+
+    #[test]
+    fn fault_specs_parse() {
+        assert_eq!(
+            parse_fault_spec("journal.append"),
+            Some(FaultSpec { name: "journal.append".into(), nth: 1 })
+        );
+        assert_eq!(
+            parse_fault_spec(" ckpt.write:3 "),
+            Some(FaultSpec { name: "ckpt.write".into(), nth: 3 })
+        );
+        // malformed specs disable injection instead of erroring
+        assert_eq!(parse_fault_spec(""), None);
+        assert_eq!(parse_fault_spec("   "), None);
+        assert_eq!(parse_fault_spec(":2"), None);
+        assert_eq!(parse_fault_spec("x:0"), None);
+        assert_eq!(parse_fault_spec("x:abc"), None);
+        assert_eq!(parse_fault_spec("x:-1"), None);
+    }
+
+    #[test]
+    fn faultpoint_is_noop_without_matching_spec() {
+        // The test runner never sets OMGD_FAULT (ci.sh only exports it
+        // to child `omgd` processes), so any name must be a no-op.
+        faultpoint("test.never-armed");
+        faultpoint("test.never-armed");
+    }
+
+    #[test]
+    fn durability_counters_are_registered() {
+        let names: Vec<&str> =
+            families().iter().map(|f| f.name).collect();
+        for want in [
+            "omgd_journal_records_total",
+            "omgd_journal_replayed_total",
+            "omgd_journal_torn_total",
+            "omgd_journal_compactions_total",
+            "omgd_ckpt_writes_total",
+            "omgd_ckpt_resumes_total",
+            "omgd_ckpt_parked_total",
+        ] {
+            assert!(names.contains(&want), "missing {want}");
+        }
     }
 
     #[test]

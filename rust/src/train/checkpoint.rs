@@ -120,6 +120,35 @@ impl Checkpoint {
     }
 }
 
+/// Pack u64 values losslessly into the f32 section payload: each u64
+/// becomes two f32s carrying its low/high 32 bits verbatim. Sections
+/// are serialized via `f32::to_le_bytes`, which preserves every bit
+/// pattern (including NaNs), so the round trip is exact.
+pub fn pack_u64s(xs: &[u64]) -> Vec<f32> {
+    let mut out = Vec::with_capacity(xs.len() * 2);
+    for &x in xs {
+        out.push(f32::from_bits(x as u32));
+        out.push(f32::from_bits((x >> 32) as u32));
+    }
+    out
+}
+
+/// Inverse of [`pack_u64s`]. `None` on an odd-length section (corrupt
+/// or mis-tagged).
+pub fn unpack_u64s(fs: &[f32]) -> Option<Vec<u64>> {
+    if fs.len() % 2 != 0 {
+        return None;
+    }
+    Some(
+        fs.chunks_exact(2)
+            .map(|c| {
+                (c[0].to_bits() as u64)
+                    | ((c[1].to_bits() as u64) << 32)
+            })
+            .collect(),
+    )
+}
+
 fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
     let mut b = [0u8; 4];
     r.read_exact(&mut b)?;
@@ -188,6 +217,32 @@ mod tests {
         assert_eq!(back.rng_state, 6);
         assert!(back.sections.is_empty());
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn u64_packing_round_trips_through_a_saved_file() {
+        // The packed values include NaN-patterned f32s — the on-disk
+        // byte path must keep them bit-exact.
+        let xs = vec![
+            0u64,
+            1,
+            u64::MAX,
+            0x7fc0_0000_7fc0_0000, // both halves are f32 NaNs
+            0xdead_beef_cafe_f00d,
+        ];
+        let mut c = Checkpoint::new(9, 0);
+        c.insert("packed", pack_u64s(&xs));
+        let path = tmp("packed.ckpt");
+        c.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(
+            unpack_u64s(back.require("packed").unwrap()),
+            Some(xs)
+        );
+        std::fs::remove_file(&path).ok();
+        // odd-length sections are rejected, not mis-decoded
+        assert_eq!(unpack_u64s(&[0.0]), None);
+        assert_eq!(unpack_u64s(&[]), Some(vec![]));
     }
 
     #[test]

@@ -27,7 +27,8 @@ use crate::optim::{galore, Optimizer, SiftOptimizer};
 use crate::rng::Rng;
 use crate::runtime::bundle::UpdateKind;
 use crate::runtime::ModelBundle;
-use anyhow::{ensure, Result};
+use crate::train::checkpoint::{pack_u64s, unpack_u64s, Checkpoint};
+use anyhow::{bail, ensure, Context, Result};
 
 /// Which update path executes the step.
 enum Backend {
@@ -302,6 +303,233 @@ impl MethodEngine {
             Backend::Native(opt) => opt.state_bytes(),
         }
     }
+
+    /// Serialize the engine's whole mutable state into `ck` under
+    /// `eng_`-prefixed sections: the current mask (as run triples, not
+    /// dense — O(runs) on disk), the traversal plan's cursor (WOR
+    /// partition + permutation + position, or the LISA pool), and the
+    /// optimizer buffers. Restoring into a freshly-constructed engine
+    /// ([`MethodEngine::restore`]) and continuing is bitwise identical
+    /// to never having stopped — the resume-determinism contract of
+    /// `docs/durability.md`.
+    ///
+    /// Native-backend methods (GaLore/GoLore/SIFT) hold projection
+    /// state behind the `Optimizer` trait and refuse to snapshot; their
+    /// jobs restart from scratch on re-lease rather than resume wrong.
+    pub fn snapshot(&self, ck: &mut Checkpoint) -> Result<()> {
+        ck.insert("eng_method", pack_u64s(&[method_code(self.method)]));
+        ck.insert("eng_periods", pack_u64s(&[self.periods as u64]));
+        let (meta, scales) = mask_to_sections(&self.mask);
+        ck.insert("eng_mask.meta", meta);
+        ck.insert("eng_mask.scales", scales);
+        match &self.plan {
+            MaskPlan::Full
+            | MaskPlan::TensorIid { .. }
+            | MaskPlan::Passthrough => {}
+            MaskPlan::TensorWor { set, order, pos, .. } => {
+                ck.insert("eng_wor.pos", pack_u64s(&[*pos as u64]));
+                let ord: Vec<u64> =
+                    order.iter().map(|&i| i as u64).collect();
+                ck.insert("eng_wor.order", pack_u64s(&ord));
+                ck.insert(
+                    "eng_wor.set_len",
+                    pack_u64s(&[set.m() as u64]),
+                );
+                for (j, m) in set.masks.iter().enumerate() {
+                    let (meta, scales) = mask_to_sections(m);
+                    ck.insert(&format!("eng_wor.set.{j}.meta"), meta);
+                    ck.insert(
+                        &format!("eng_wor.set.{j}.scales"),
+                        scales,
+                    );
+                }
+            }
+            MaskPlan::Lisa { sched } => {
+                ck.insert(
+                    "eng_lisa.cycles",
+                    pack_u64s(&[sched.cycles as u64]),
+                );
+                let pool: Vec<u64> =
+                    sched.pool().iter().map(|&i| i as u64).collect();
+                ck.insert("eng_lisa.pool", pack_u64s(&pool));
+            }
+        }
+        match &self.backend {
+            Backend::HloAdamW { m, v, t } => {
+                ck.insert("eng_m", m.clone());
+                ck.insert("eng_v", v.clone());
+                ck.insert("eng_t", pack_u64s(&[*t]));
+            }
+            Backend::HloSgdm { buf } => ck.insert("eng_buf", buf.clone()),
+            Backend::Native(_) => bail!(
+                "checkpoint/resume is not supported for native-backend \
+                 methods (GaLore/GoLore/SIFT); the job restarts instead"
+            ),
+        }
+        Ok(())
+    }
+
+    /// Inverse of [`MethodEngine::snapshot`]: overwrite this (freshly
+    /// constructed, same config) engine's state from `ck`. Validates
+    /// the method tag, mask geometry, and every cursor before touching
+    /// anything the step path trusts — a corrupt or foreign checkpoint
+    /// errors out instead of resuming wrong or panicking mid-step.
+    pub fn restore(&mut self, ck: &Checkpoint) -> Result<()> {
+        let code = section_u64(ck, "eng_method")?;
+        ensure!(
+            code == method_code(self.method),
+            "checkpoint method tag {code} does not match {:?}",
+            self.method
+        );
+        self.periods = section_u64(ck, "eng_periods")? as usize;
+        let mask = mask_from_sections(
+            ck.require("eng_mask.meta")?,
+            ck.require("eng_mask.scales")?,
+        )?;
+        ensure!(
+            mask.len() == self.man.padded_len,
+            "checkpoint mask length {} vs manifest padded length {}",
+            mask.len(),
+            self.man.padded_len
+        );
+        self.mask = mask;
+        match &mut self.plan {
+            MaskPlan::Full
+            | MaskPlan::TensorIid { .. }
+            | MaskPlan::Passthrough => {}
+            MaskPlan::TensorWor { set, order, pos, .. } => {
+                let new_pos = section_u64(ck, "eng_wor.pos")? as usize;
+                let ord = unpack_u64s(ck.require("eng_wor.order")?)
+                    .context("corrupt eng_wor.order section")?;
+                let m = section_u64(ck, "eng_wor.set_len")? as usize;
+                ensure!(
+                    ord.len() == m && new_pos <= m,
+                    "WOR cursor out of range: pos {new_pos}, \
+                     order {} over {m} masks",
+                    ord.len()
+                );
+                ensure!(
+                    ord.iter().all(|&i| (i as usize) < m),
+                    "WOR order indexes past the partition"
+                );
+                let mut masks = Vec::with_capacity(m);
+                for j in 0..m {
+                    masks.push(mask_from_sections(
+                        ck.require(&format!("eng_wor.set.{j}.meta"))?,
+                        ck.require(&format!(
+                            "eng_wor.set.{j}.scales"
+                        ))?,
+                    )?);
+                }
+                *set = MaskSet { masks };
+                *order = ord.into_iter().map(|i| i as usize).collect();
+                *pos = new_pos;
+            }
+            MaskPlan::Lisa { sched } => {
+                let cycles =
+                    section_u64(ck, "eng_lisa.cycles")? as usize;
+                let pool = unpack_u64s(ck.require("eng_lisa.pool")?)
+                    .context("corrupt eng_lisa.pool section")?
+                    .into_iter()
+                    .map(|i| i as usize)
+                    .collect();
+                sched.set_state(pool, cycles)?;
+            }
+        }
+        let n = self.man.padded_len;
+        match &mut self.backend {
+            Backend::HloAdamW { m, v, t } => {
+                let nm = ck.require("eng_m")?;
+                let nv = ck.require("eng_v")?;
+                ensure!(
+                    nm.len() == n && nv.len() == n,
+                    "checkpoint optimizer buffers sized {}/{} vs {n}",
+                    nm.len(),
+                    nv.len()
+                );
+                *m = nm.to_vec();
+                *v = nv.to_vec();
+                *t = section_u64(ck, "eng_t")?;
+            }
+            Backend::HloSgdm { buf } => {
+                let nb = ck.require("eng_buf")?;
+                ensure!(
+                    nb.len() == n,
+                    "checkpoint momentum buffer sized {} vs {n}",
+                    nb.len()
+                );
+                *buf = nb.to_vec();
+            }
+            Backend::Native(_) => bail!(
+                "checkpoint/resume is not supported for native-backend \
+                 methods (GaLore/GoLore/SIFT); the job restarts instead"
+            ),
+        }
+        Ok(())
+    }
+}
+
+/// Stable per-method tag written into checkpoints and validated on
+/// restore, so a checkpoint parked by one method can never silently
+/// seed another (enum order is not a wire format).
+fn method_code(m: Method) -> u64 {
+    match m {
+        Method::Full => 1,
+        Method::IidMask => 2,
+        Method::WorMask => 3,
+        Method::Lisa => 4,
+        Method::LisaScale => 5,
+        Method::LisaWorNoScale => 6,
+        Method::LisaWor => 7,
+        Method::Galore => 8,
+        Method::Golore => 9,
+        Method::Sift => 10,
+    }
+}
+
+/// One u64 out of a packed single-value section.
+fn section_u64(ck: &Checkpoint, name: &str) -> Result<u64> {
+    let xs = unpack_u64s(ck.require(name)?)
+        .with_context(|| format!("corrupt {name} section"))?;
+    ensure!(xs.len() == 1, "{name}: expected 1 value, got {}", xs.len());
+    Ok(xs[0])
+}
+
+/// Mask → (packed `[n, offset, len, ...]`, raw `[scale, ...]`) section
+/// pair. Offsets/lengths ride the lossless u64 packing — f32 mantissas
+/// would corrupt coordinates past 2²⁴ on large models.
+fn mask_to_sections(mask: &Mask) -> (Vec<f32>, Vec<f32>) {
+    let rs = mask.runs().runs();
+    let mut meta = Vec::with_capacity(1 + rs.len() * 2);
+    meta.push(mask.len() as u64);
+    let mut scales = Vec::with_capacity(rs.len());
+    for r in rs {
+        meta.push(r.offset as u64);
+        meta.push(r.len as u64);
+        scales.push(r.scale);
+    }
+    (pack_u64s(&meta), scales)
+}
+
+/// Inverse of [`mask_to_sections`]; errors on any geometry mismatch.
+fn mask_from_sections(meta: &[f32], scales: &[f32]) -> Result<Mask> {
+    let meta =
+        unpack_u64s(meta).context("corrupt mask meta section")?;
+    ensure!(
+        meta.len() == 1 + 2 * scales.len(),
+        "mask sections disagree: {} meta values for {} runs",
+        meta.len(),
+        scales.len()
+    );
+    let mut mask = Mask::zeros(meta[0] as usize);
+    for (k, &s) in scales.iter().enumerate() {
+        mask.set_segment(
+            meta[1 + 2 * k] as usize,
+            meta[2 + 2 * k] as usize,
+            s,
+        )?;
+    }
+    Ok(mask)
 }
 
 fn refresh_steps(cfg: &RunConfig) -> usize {
@@ -483,6 +711,102 @@ mod tests {
                 .unwrap();
         lisa.on_period(&mut rng).unwrap();
         assert!(lisa.state_bytes() < full.state_bytes());
+    }
+
+    /// Deterministic synthetic gradient for the resume tests.
+    fn grad(step: usize, n: usize) -> Vec<f32> {
+        (0..n)
+            .map(|i| ((step * 31 + i * 7 + 3) as f32 * 0.01).sin())
+            .collect()
+    }
+
+    #[test]
+    fn snapshot_restore_resumes_bitwise_identically() {
+        // For every snapshottable method: run, snapshot mid-flight,
+        // keep running → p_straight. Then rebuild a fresh engine,
+        // restore, run the same tail → p_resumed. The two must match
+        // to the bit, optimizer state included (verified implicitly:
+        // any m/v/t divergence shows up in the params within a step).
+        let man = toy_manifest();
+        let n = man.padded_len;
+        for method in [Method::Full, Method::IidMask, Method::WorMask,
+                       Method::Lisa, Method::LisaWor] {
+            let cfg = cfg_with(method);
+            let mut rng = Rng::seed_from_u64(99);
+            let mut eng =
+                MethodEngine::new(&man, &cfg, &mut rng).unwrap();
+            let mut p = vec![0.5f32; n];
+            let mut step = 0usize;
+            for _ in 0..3 {
+                eng.on_period(&mut rng).unwrap();
+                for _ in 0..4 {
+                    eng.apply_native(&mut p, &grad(step, n), 1e-2);
+                    step += 1;
+                }
+            }
+            // --- snapshot point ---
+            let mut ck = Checkpoint::new(step as u64, 0);
+            eng.snapshot(&mut ck).unwrap();
+            let rng_state = rng.state();
+            let p_at_ck = p.clone();
+            let tail = |eng: &mut MethodEngine,
+                        rng: &mut Rng,
+                        p: &mut Vec<f32>,
+                        step0: usize| {
+                let mut s = step0;
+                for _ in 0..3 {
+                    eng.on_period(rng).unwrap();
+                    for _ in 0..4 {
+                        eng.apply_native(p, &grad(s, n), 1e-2);
+                        s += 1;
+                    }
+                }
+            };
+            tail(&mut eng, &mut rng, &mut p, step);
+
+            let mut rng2 = Rng::seed_from_u64(7); // foreign seed:
+            let mut eng2 = // construction draws must not matter
+                MethodEngine::new(&man, &cfg, &mut rng2).unwrap();
+            eng2.restore(&ck).unwrap();
+            let mut rng2 = Rng::from_state(rng_state);
+            let mut p2 = p_at_ck;
+            tail(&mut eng2, &mut rng2, &mut p2, step);
+
+            for i in 0..n {
+                assert_eq!(
+                    p[i].to_bits(),
+                    p2[i].to_bits(),
+                    "{method:?} diverged at coord {i}"
+                );
+            }
+            assert_eq!(eng.periods, eng2.periods, "{method:?}");
+        }
+    }
+
+    #[test]
+    fn native_methods_refuse_to_snapshot() {
+        let man = toy_manifest();
+        let mut rng = Rng::seed_from_u64(8);
+        let eng =
+            MethodEngine::new(&man, &cfg_with(Method::Galore), &mut rng)
+                .unwrap();
+        let mut ck = Checkpoint::new(0, 0);
+        assert!(eng.snapshot(&mut ck).is_err());
+    }
+
+    #[test]
+    fn restore_rejects_foreign_method_checkpoints() {
+        let man = toy_manifest();
+        let mut rng = Rng::seed_from_u64(9);
+        let full =
+            MethodEngine::new(&man, &cfg_with(Method::Full), &mut rng)
+                .unwrap();
+        let mut ck = Checkpoint::new(0, 0);
+        full.snapshot(&mut ck).unwrap();
+        let mut wor =
+            MethodEngine::new(&man, &cfg_with(Method::WorMask), &mut rng)
+                .unwrap();
+        assert!(wor.restore(&ck).is_err(), "method tag must gate");
     }
 
     #[test]

@@ -21,7 +21,31 @@ use crate::data::{ClassTask, Corpus};
 use crate::metrics::Timer;
 use crate::rng::Rng;
 use crate::runtime::ModelBundle;
-use anyhow::{ensure, Result};
+use anyhow::{ensure, Context, Result};
+use checkpoint::{pack_u64s, unpack_u64s};
+
+/// Checkpoint control threaded into the training loops.
+///
+/// With `period == 0` (the [`Default`]) the loops behave exactly as
+/// before — no state capture, no resume. Otherwise `sink` receives a
+/// full loop snapshot every `period` steps (params, optimizer state,
+/// mask traversal cursor, RNG, data cursor, and the series history so
+/// a resumed run's CSV is byte-identical), and `resume` — typically
+/// [`crate::jobs::ResultCache::latest_checkpoint`] — fast-forwards
+/// the loop to the checkpointed step before the first batch is drawn.
+///
+/// Native-backend methods (GaLore/GoLore/SIFT) cannot snapshot
+/// ([`MethodEngine::snapshot`]); the loops detect this on the first
+/// tick and silently stop checkpointing rather than failing the run.
+#[derive(Default)]
+pub struct CkptCtl<'a> {
+    /// Snapshot every this many steps; 0 disables checkpointing.
+    pub period: usize,
+    /// Resume point; `None` starts from scratch.
+    pub resume: Option<Checkpoint>,
+    /// Receives each periodic snapshot (parks it on disk).
+    pub sink: Option<Box<dyn FnMut(&Checkpoint) -> Result<()> + 'a>>,
+}
 
 /// Outcome of one training run.
 #[derive(Clone, Debug, Default)]
@@ -68,6 +92,16 @@ pub fn train_classifier(
     cfg: &RunConfig,
     task: &ClassTask,
 ) -> Result<TrainOutcome> {
+    train_classifier_ckpt(bundle, cfg, task, CkptCtl::default())
+}
+
+/// [`train_classifier`] with checkpoint/resume (see [`CkptCtl`]).
+pub fn train_classifier_ckpt(
+    bundle: &ModelBundle,
+    cfg: &RunConfig,
+    task: &ClassTask,
+    mut ctl: CkptCtl<'_>,
+) -> Result<TrainOutcome> {
     cfg.validate()?;
     ensure!(bundle.man.kind == "mlp", "classifier needs an mlp bundle");
     ensure!(task.d_in == bundle.man.data.d_in, "task d_in mismatch");
@@ -82,11 +116,24 @@ pub fn train_classifier(
     let timer = Timer::start();
     let mut epoch = 0usize;
     let mut epochs_since_period = 0usize;
-    engine.on_period(&mut rng)?; // initial mask
-    out.residency_series.push((0, engine.keep_ratio(),
-                               engine.state_bytes()));
+    let start_step = match ctl.resume.take() {
+        Some(ck) => {
+            let s = restore_loop_state(
+                &ck, &mut engine, &mut rng, &mut sampler, &mut flat,
+                &mut out,
+            )?;
+            (epoch, epochs_since_period) = restore_clf_state(&ck)?;
+            s
+        }
+        None => {
+            engine.on_period(&mut rng)?; // initial mask
+            out.residency_series.push((0, engine.keep_ratio(),
+                                       engine.state_bytes()));
+            0
+        }
+    };
 
-    for step in 0..cfg.steps {
+    for step in start_step..cfg.steps {
         // Epoch bookkeeping: an epoch is ⌈N/B⌉ batches.
         let steps_per_epoch = task.n_train().div_ceil(batch);
         if step > 0 && step % steps_per_epoch == 0 {
@@ -110,8 +157,11 @@ pub fn train_classifier(
             let (el, acc) = eval_classifier(bundle, &flat, task)?;
             out.eval_series.push((step, el, acc));
         }
+        ckpt_tick(
+            &mut ctl, step + 1, cfg.steps, &engine, &rng, &sampler,
+            &flat, &out, Some((epoch, epochs_since_period)),
+        )?;
     }
-    let _ = epoch;
     out.train_secs = timer.total();
     out.steps_per_sec = cfg.steps as f64 / out.train_secs.max(1e-9);
     let (_, acc) = eval_classifier(bundle, &flat, task)?;
@@ -155,6 +205,16 @@ pub fn train_lm(
     cfg: &RunConfig,
     corpus: &Corpus,
 ) -> Result<TrainOutcome> {
+    train_lm_ckpt(bundle, cfg, corpus, CkptCtl::default())
+}
+
+/// [`train_lm`] with checkpoint/resume (see [`CkptCtl`]).
+pub fn train_lm_ckpt(
+    bundle: &ModelBundle,
+    cfg: &RunConfig,
+    corpus: &Corpus,
+    mut ctl: CkptCtl<'_>,
+) -> Result<TrainOutcome> {
     cfg.validate()?;
     ensure!(bundle.man.kind == "gpt", "LM training needs a gpt bundle");
     ensure!(corpus.seq == bundle.man.data.seq, "corpus seq mismatch");
@@ -168,11 +228,20 @@ pub fn train_lm(
 
     let mut out = TrainOutcome::default();
     let timer = Timer::start();
-    engine.on_period(&mut rng)?;
-    out.residency_series.push((0, engine.keep_ratio(),
-                               engine.state_bytes()));
+    let start_step = match ctl.resume.take() {
+        Some(ck) => restore_loop_state(
+            &ck, &mut engine, &mut rng, &mut sampler, &mut flat,
+            &mut out,
+        )?,
+        None => {
+            engine.on_period(&mut rng)?;
+            out.residency_series.push((0, engine.keep_ratio(),
+                                       engine.state_bytes()));
+            0
+        }
+    };
 
-    for step in 0..cfg.steps {
+    for step in start_step..cfg.steps {
         if step > 0 && step % cfg.mask.period == 0 {
             engine.on_period(&mut rng)?;
             out.residency_series.push((step, engine.keep_ratio(),
@@ -189,6 +258,10 @@ pub fn train_lm(
             let el = eval_lm(bundle, &flat, corpus, n_train)?;
             out.eval_series.push((step, el, 0.0));
         }
+        ckpt_tick(
+            &mut ctl, step + 1, cfg.steps, &engine, &rng, &sampler,
+            &flat, &out, None,
+        )?;
     }
     out.train_secs = timer.total();
     out.steps_per_sec = cfg.steps as f64 / out.train_secs.max(1e-9);
@@ -212,4 +285,541 @@ pub fn eval_lm(
     }
     let (x, y) = corpus.pack(&held, batch);
     Ok(bundle.eval_step_lm(flat, &x, &y)? as f64)
+}
+
+/// Periodic checkpoint write. `done` is the number of completed steps.
+/// A final-step snapshot is skipped (the job is about to report its
+/// terminal result anyway); an engine that cannot snapshot (native
+/// backend) disables further ticks instead of failing the run. Sink
+/// errors (disk full, unwritable cache) *do* fail the run: silently
+/// running on without the durability the operator asked for would
+/// surprise them at the next crash.
+#[allow(clippy::too_many_arguments)]
+fn ckpt_tick(
+    ctl: &mut CkptCtl<'_>,
+    done: usize,
+    total_steps: usize,
+    engine: &MethodEngine,
+    rng: &Rng,
+    sampler: &DataSampler,
+    flat: &[f32],
+    out: &TrainOutcome,
+    clf: Option<(usize, usize)>,
+) -> Result<()> {
+    if ctl.period == 0 || done % ctl.period != 0 || done >= total_steps
+    {
+        return Ok(());
+    }
+    if ctl.sink.is_none() {
+        return Ok(());
+    }
+    let ck = match snapshot_loop_state(
+        done, engine, rng, sampler, flat, out, clf,
+    ) {
+        Ok(ck) => ck,
+        Err(_) => {
+            ctl.period = 0; // native backend: resume unsupported
+            return Ok(());
+        }
+    };
+    (ctl.sink.as_mut().unwrap())(&ck)
+}
+
+/// Capture the *entire* training-loop state at `done` completed steps:
+/// engine (`eng_*` sections), params, RNG, data cursor, and the series
+/// history (`trn_*`) so a resumed run replays its CSV byte-identically.
+fn snapshot_loop_state(
+    done: usize,
+    engine: &MethodEngine,
+    rng: &Rng,
+    sampler: &DataSampler,
+    flat: &[f32],
+    out: &TrainOutcome,
+    clf: Option<(usize, usize)>,
+) -> Result<Checkpoint> {
+    let rng_state = rng.state();
+    let mut ck = Checkpoint::new(done as u64, rng_state[0]);
+    engine.snapshot(&mut ck)?;
+    ck.insert("params", flat.to_vec());
+    ck.insert("trn_rng", pack_u64s(&rng_state));
+    let (tag, n, a, b, order): (u64, u64, u64, u64, &[usize]) =
+        match sampler {
+            DataSampler::Rr { n, order, pos, epochs } => {
+                (1, *n as u64, *pos as u64, *epochs as u64, order)
+            }
+            DataSampler::Iid { n, draws } => {
+                (2, *n as u64, *draws as u64, 0, &[])
+            }
+            DataSampler::Sequential { n, pos } => {
+                (3, *n as u64, *pos as u64, 0, &[])
+            }
+        };
+    ck.insert("trn_sampler", pack_u64s(&[tag, n, a, b]));
+    let ord: Vec<u64> = order.iter().map(|&i| i as u64).collect();
+    ck.insert("trn_sampler.order", pack_u64s(&ord));
+    ck.insert(
+        "trn_loss.steps",
+        pack_usizes(out.loss_series.iter().map(|&(s, _)| s)),
+    );
+    ck.insert(
+        "trn_loss.vals",
+        pack_f64_bits(out.loss_series.iter().map(|&(_, l)| l)),
+    );
+    ck.insert(
+        "trn_eval.steps",
+        pack_usizes(out.eval_series.iter().map(|&(s, ..)| s)),
+    );
+    ck.insert(
+        "trn_eval.loss",
+        pack_f64_bits(out.eval_series.iter().map(|&(_, l, _)| l)),
+    );
+    ck.insert(
+        "trn_eval.acc",
+        pack_f64_bits(out.eval_series.iter().map(|&(.., a)| a)),
+    );
+    ck.insert(
+        "trn_res.steps",
+        pack_usizes(out.residency_series.iter().map(|&(s, ..)| s)),
+    );
+    ck.insert(
+        "trn_res.keep",
+        pack_f64_bits(out.residency_series.iter().map(|&(_, k, _)| k)),
+    );
+    ck.insert(
+        "trn_res.bytes",
+        pack_usizes(out.residency_series.iter().map(|&(.., b)| b)),
+    );
+    if let Some((epoch, espp)) = clf {
+        ck.insert(
+            "trn_clf",
+            pack_u64s(&[epoch as u64, espp as u64]),
+        );
+    }
+    Ok(ck)
+}
+
+/// Inverse of [`snapshot_loop_state`] minus the classifier counters
+/// ([`restore_clf_state`]). Returns the step to resume from.
+fn restore_loop_state(
+    ck: &Checkpoint,
+    engine: &mut MethodEngine,
+    rng: &mut Rng,
+    sampler: &mut DataSampler,
+    flat: &mut Vec<f32>,
+    out: &mut TrainOutcome,
+) -> Result<usize> {
+    engine.restore(ck)?;
+    let p = ck.require("params")?;
+    ensure!(
+        p.len() == flat.len(),
+        "checkpoint params sized {} vs model {}",
+        p.len(),
+        flat.len()
+    );
+    *flat = p.to_vec();
+    let rs = unpack_u64s(ck.require("trn_rng")?)
+        .context("corrupt trn_rng section")?;
+    let rs: [u64; 4] = rs
+        .try_into()
+        .map_err(|_| anyhow::anyhow!("trn_rng: expected 4 words"))?;
+    *rng = Rng::from_state(rs);
+    let sm = unpack_u64s(ck.require("trn_sampler")?)
+        .context("corrupt trn_sampler section")?;
+    ensure!(sm.len() == 4, "trn_sampler: expected 4 values");
+    ensure!(
+        sm[1] as usize == sampler.n(),
+        "checkpoint sampler over {} samples, job has {}",
+        sm[1],
+        sampler.n()
+    );
+    let order = unpack_u64s(ck.require("trn_sampler.order")?)
+        .context("corrupt trn_sampler.order section")?;
+    *sampler = match sm[0] {
+        1 => {
+            let order: Vec<usize> =
+                order.into_iter().map(|i| i as usize).collect();
+            ensure!(
+                sm[2] as usize <= order.len()
+                    && order.iter().all(|&i| i < sm[1] as usize),
+                "RR cursor out of range"
+            );
+            DataSampler::Rr {
+                n: sm[1] as usize,
+                order,
+                pos: sm[2] as usize,
+                epochs: sm[3] as usize,
+            }
+        }
+        2 => DataSampler::Iid {
+            n: sm[1] as usize,
+            draws: sm[2] as usize,
+        },
+        3 => DataSampler::Sequential {
+            n: sm[1] as usize,
+            pos: sm[2] as usize,
+        },
+        t => anyhow::bail!("unknown sampler tag {t} in checkpoint"),
+    };
+    out.loss_series = zip2(
+        ck.require("trn_loss.steps")?,
+        ck.require("trn_loss.vals")?,
+    )?;
+    let es = unpack_usizes(ck.require("trn_eval.steps")?)?;
+    let el = unpack_f64_bits(ck.require("trn_eval.loss")?)?;
+    let ea = unpack_f64_bits(ck.require("trn_eval.acc")?)?;
+    ensure!(
+        es.len() == el.len() && es.len() == ea.len(),
+        "eval series sections disagree"
+    );
+    out.eval_series = es
+        .into_iter()
+        .zip(el)
+        .zip(ea)
+        .map(|((s, l), a)| (s, l, a))
+        .collect();
+    let rs_ = unpack_usizes(ck.require("trn_res.steps")?)?;
+    let rk = unpack_f64_bits(ck.require("trn_res.keep")?)?;
+    let rb = unpack_usizes(ck.require("trn_res.bytes")?)?;
+    ensure!(
+        rs_.len() == rk.len() && rs_.len() == rb.len(),
+        "residency series sections disagree"
+    );
+    out.residency_series = rs_
+        .into_iter()
+        .zip(rk)
+        .zip(rb)
+        .map(|((s, k), b)| (s, k, b))
+        .collect();
+    Ok(ck.step as usize)
+}
+
+/// Classifier epoch counters out of a checkpoint.
+fn restore_clf_state(ck: &Checkpoint) -> Result<(usize, usize)> {
+    let c = unpack_u64s(ck.require("trn_clf")?)
+        .context("corrupt trn_clf section")?;
+    ensure!(c.len() == 2, "trn_clf: expected 2 values");
+    Ok((c[0] as usize, c[1] as usize))
+}
+
+fn pack_usizes(xs: impl Iterator<Item = usize>) -> Vec<f32> {
+    pack_u64s(&xs.map(|x| x as u64).collect::<Vec<_>>())
+}
+
+fn unpack_usizes(fs: &[f32]) -> Result<Vec<usize>> {
+    Ok(unpack_u64s(fs)
+        .context("corrupt packed-usize section")?
+        .into_iter()
+        .map(|x| x as usize)
+        .collect())
+}
+
+/// f64s ride the packing by bit pattern — exact, NaN included.
+fn pack_f64_bits(xs: impl Iterator<Item = f64>) -> Vec<f32> {
+    pack_u64s(&xs.map(f64::to_bits).collect::<Vec<_>>())
+}
+
+fn unpack_f64_bits(fs: &[f32]) -> Result<Vec<f64>> {
+    Ok(unpack_u64s(fs)
+        .context("corrupt packed-f64 section")?
+        .into_iter()
+        .map(f64::from_bits)
+        .collect())
+}
+
+fn zip2(steps: &[f32], vals: &[f32]) -> Result<Vec<(usize, f64)>> {
+    let s = unpack_usizes(steps)?;
+    let v = unpack_f64_bits(vals)?;
+    ensure!(s.len() == v.len(), "series sections disagree");
+    Ok(s.into_iter().zip(v).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Method;
+    use crate::manifest::Manifest;
+    use crate::util::json::Json;
+    use std::path::Path;
+
+    /// 8 middle layers so keep-ratio 0.05 still rounds to a non-empty
+    /// active set under every masked method.
+    fn toy_manifest() -> Manifest {
+        let mut params = vec![format!(
+            r#"{{"name":"in_w","shape":[16],"layer":"embed",
+                 "offset":0,"len":16}}"#
+        )];
+        for i in 0..8 {
+            params.push(format!(
+                r#"{{"name":"block_{i}.w","shape":[16],
+                     "layer":"block_{i}","offset":{},"len":16}}"#,
+                16 * (i + 1)
+            ));
+        }
+        params.push(
+            r#"{"name":"out_w","shape":[16],"layer":"head",
+                "offset":144,"len":16}"#
+                .into(),
+        );
+        let text = format!(
+            r#"{{"name":"toy","kind":"mlp","block":8,
+                 "total_len":160,"padded_len":160,
+                 "params":[{}],
+                 "data":{{"batch":2}},
+                 "artifacts":{{"train":"t","eval":"e","init":"i",
+                               "update":{{"adamw":"a","sgdm":"s"}}}}}}"#,
+            params.join(",")
+        );
+        Manifest::from_json(&Json::parse(&text).unwrap(), Path::new("/tmp"))
+            .unwrap()
+    }
+
+    fn grad_at(step: usize, n: usize) -> Vec<f32> {
+        (0..n)
+            .map(|i| (((step * 31 + i * 7 + 3) as f32) * 0.01).sin())
+            .collect()
+    }
+
+    /// The `train_lm` loop skeleton against synthetic gradients (no
+    /// PJRT): mask periods, sampler draws, native update, series
+    /// bookkeeping, and [`ckpt_tick`] — everything a checkpoint must
+    /// capture, minus the HLO executions themselves.
+    #[allow(clippy::too_many_arguments)]
+    fn drive(
+        engine: &mut MethodEngine,
+        rng: &mut Rng,
+        sampler: &mut DataSampler,
+        flat: &mut Vec<f32>,
+        out: &mut TrainOutcome,
+        steps: std::ops::Range<usize>,
+        total: usize,
+        ctl: &mut CkptCtl<'_>,
+    ) {
+        for step in steps {
+            if step > 0 && step % 3 == 0 {
+                engine.on_period(rng).unwrap();
+                out.residency_series.push((
+                    step,
+                    engine.keep_ratio(),
+                    engine.state_bytes(),
+                ));
+            }
+            let idx = sampler.next_batch(2, rng);
+            let g = grad_at(step, flat.len());
+            engine.apply_native(flat, &g, 0.01);
+            // Loss folds the drawn batch in, so a drifted data cursor
+            // shows up as a diverging series.
+            let loss =
+                idx.iter().sum::<usize>() as f64 + step as f64 * 0.5;
+            out.loss_series.push((step, loss));
+            if (step + 1) % 5 == 0 {
+                out.eval_series.push((step, loss * 0.5, 42.0));
+            }
+            ckpt_tick(
+                ctl, step + 1, total, engine, rng, sampler, flat, out,
+                None,
+            )
+            .unwrap();
+        }
+    }
+
+    /// Satellite guarantee (docs/durability.md): a run killed right
+    /// after a checkpoint and resumed from it is *bitwise identical*
+    /// to the uninterrupted run — final params, optimizer state, and
+    /// every CSV series — at keep ratios 1.0, 0.25, and 0.05.
+    #[test]
+    fn resumed_run_is_bitwise_identical_across_keep_ratios() {
+        let man = toy_manifest();
+        let total = 13usize;
+        for &keep in &[1.0f64, 0.25, 0.05] {
+            for method in
+                [Method::IidMask, Method::WorMask, Method::LisaWor]
+            {
+                let mut cfg = RunConfig::default();
+                cfg.method = method;
+                cfg.mask.gamma = 1;
+                cfg.mask.keep_ratio = keep;
+                let tag = format!("{method:?} keep={keep}");
+                let init: Vec<f32> =
+                    (0..man.padded_len).map(|i| (i as f32 * 0.1).cos()).collect();
+
+                // Run A: uninterrupted, checkpointing every 4 steps.
+                let mut parked: Vec<Checkpoint> = Vec::new();
+                let mut rng = Rng::seed_from_u64(9);
+                let mut eng =
+                    MethodEngine::new(&man, &cfg, &mut rng).unwrap();
+                let mut sampler = DataSampler::rr(11);
+                let mut flat = init.clone();
+                let mut out = TrainOutcome::default();
+                eng.on_period(&mut rng).unwrap();
+                out.residency_series.push((
+                    0,
+                    eng.keep_ratio(),
+                    eng.state_bytes(),
+                ));
+                {
+                    let mut ctl = CkptCtl {
+                        period: 4,
+                        resume: None,
+                        sink: Some(Box::new(|ck: &Checkpoint| {
+                            parked.push(ck.clone());
+                            Ok(())
+                        })),
+                    };
+                    drive(
+                        &mut eng, &mut rng, &mut sampler, &mut flat,
+                        &mut out, 0..total, total, &mut ctl,
+                    );
+                }
+                assert_eq!(
+                    parked.iter().map(|c| c.step).collect::<Vec<_>>(),
+                    vec![4, 8, 12],
+                    "{tag}: checkpoint cadence"
+                );
+
+                // Run B: "killed" after the step-8 checkpoint, resumed
+                // on a *fresh* process (foreign RNG seed, fresh engine)
+                // from the parked snapshot.
+                let ck = parked[1].clone();
+                let mut rng_b = Rng::seed_from_u64(777);
+                let mut eng_b =
+                    MethodEngine::new(&man, &cfg, &mut rng_b).unwrap();
+                let mut sampler_b = DataSampler::rr(11);
+                let mut flat_b = init.clone();
+                let mut out_b = TrainOutcome::default();
+                let start = restore_loop_state(
+                    &ck, &mut eng_b, &mut rng_b, &mut sampler_b,
+                    &mut flat_b, &mut out_b,
+                )
+                .unwrap();
+                assert_eq!(start, 8, "{tag}");
+                let mut no_ckpt = CkptCtl::default();
+                drive(
+                    &mut eng_b, &mut rng_b, &mut sampler_b, &mut flat_b,
+                    &mut out_b, start..total, total, &mut no_ckpt,
+                );
+
+                // Bitwise: params, every series, and the full engine
+                // state (compared through its own snapshot sections).
+                assert_eq!(flat.len(), flat_b.len(), "{tag}");
+                for i in 0..flat.len() {
+                    assert_eq!(
+                        flat[i].to_bits(),
+                        flat_b[i].to_bits(),
+                        "{tag}: param {i}"
+                    );
+                }
+                let bits = |s: &[(usize, f64)]| -> Vec<(usize, u64)> {
+                    s.iter().map(|&(a, b)| (a, b.to_bits())).collect()
+                };
+                assert_eq!(
+                    bits(&out.loss_series),
+                    bits(&out_b.loss_series),
+                    "{tag}: loss series"
+                );
+                assert_eq!(
+                    out.eval_series.len(),
+                    out_b.eval_series.len(),
+                    "{tag}"
+                );
+                for (a, b) in
+                    out.eval_series.iter().zip(&out_b.eval_series)
+                {
+                    assert_eq!(a.0, b.0, "{tag}");
+                    assert_eq!(a.1.to_bits(), b.1.to_bits(), "{tag}");
+                    assert_eq!(a.2.to_bits(), b.2.to_bits(), "{tag}");
+                }
+                assert_eq!(
+                    out.residency_series.len(),
+                    out_b.residency_series.len(),
+                    "{tag}: residency series"
+                );
+                for (a, b) in out
+                    .residency_series
+                    .iter()
+                    .zip(&out_b.residency_series)
+                {
+                    assert_eq!(a.0, b.0, "{tag}");
+                    assert_eq!(a.1.to_bits(), b.1.to_bits(), "{tag}");
+                    assert_eq!(a.2, b.2, "{tag}");
+                }
+                let fin_a = snapshot_loop_state(
+                    total, &eng, &rng, &sampler, &flat, &out, None,
+                )
+                .unwrap();
+                let fin_b = snapshot_loop_state(
+                    total, &eng_b, &rng_b, &sampler_b, &flat_b, &out_b,
+                    None,
+                )
+                .unwrap();
+                assert_eq!(
+                    fin_a.sections, fin_b.sections,
+                    "{tag}: engine/loop state diverged"
+                );
+            }
+        }
+    }
+
+    /// `ckpt_tick` contract: period 0 never snapshots, the final step
+    /// is skipped, and a native-backend engine (cannot snapshot)
+    /// disables itself instead of failing the run.
+    #[test]
+    fn ckpt_tick_skips_final_step_and_disables_on_native_backend() {
+        let man = toy_manifest();
+        let mut cfg = RunConfig::default();
+        cfg.method = Method::IidMask;
+        cfg.mask.gamma = 1;
+        cfg.mask.keep_ratio = 0.5;
+        let mut rng = Rng::seed_from_u64(3);
+        let mut eng = MethodEngine::new(&man, &cfg, &mut rng).unwrap();
+        eng.on_period(&mut rng).unwrap();
+        let sampler = DataSampler::rr(5);
+        let flat = vec![0.0f32; man.padded_len];
+        let out = TrainOutcome::default();
+
+        let mut saved = 0usize;
+        {
+            let mut ctl = CkptCtl {
+                period: 2,
+                resume: None,
+                sink: Some(Box::new(|_ck: &Checkpoint| {
+                    saved += 1;
+                    Ok(())
+                })),
+            };
+            for done in 1..=6 {
+                ckpt_tick(
+                    &mut ctl, done, 6, &eng, &rng, &sampler, &flat,
+                    &out, None,
+                )
+                .unwrap();
+            }
+        }
+        assert_eq!(saved, 2, "done=2,4 snapshot; done=6 (final) skips");
+
+        // Native backend: first tick flips period to 0, no error.
+        let mut cfg_n = RunConfig::default();
+        cfg_n.method = Method::Sift;
+        let mut rng_n = Rng::seed_from_u64(4);
+        let mut eng_n =
+            MethodEngine::new(&man, &cfg_n, &mut rng_n).unwrap();
+        eng_n.on_period(&mut rng_n).unwrap();
+        let mut native_saves = 0usize;
+        {
+            let mut ctl = CkptCtl {
+                period: 2,
+                resume: None,
+                sink: Some(Box::new(|_ck: &Checkpoint| {
+                    native_saves += 1;
+                    Ok(())
+                })),
+            };
+            ckpt_tick(
+                &mut ctl, 2, 6, &eng_n, &rng_n, &sampler, &flat, &out,
+                None,
+            )
+            .unwrap();
+            assert_eq!(ctl.period, 0, "native backend disables ticks");
+        }
+        assert_eq!(native_saves, 0);
+    }
 }

@@ -11,6 +11,9 @@ use omgd::optim::{galore, MaskedAdamW, MaskedSgd, MaskedSgdm, Optimizer,
                   SiftOptimizer};
 use omgd::prop::{check, Gen};
 
+use omgd::config::RunConfig;
+use omgd::jobs::journal::{self, Record};
+use omgd::jobs::{ExperimentKind, JobOutcome, JobSpec, JobStatus};
 use omgd::util::json::Json;
 use std::collections::HashSet;
 use std::path::Path;
@@ -476,6 +479,185 @@ fn prop_mask_splice_equals_dense_rebuild() {
             assert_eq!(mask.runs().runs(), rescan.runs());
             assert_eq!(mask.active_count(), rescan.active_count());
         }
+    });
+}
+
+// -------------------------------------------------------------------------
+// Crash-safe job journal: replay consistency under arbitrary
+// interleavings and torn tails (docs/durability.md)
+// -------------------------------------------------------------------------
+
+fn journal_spec(seed: u64) -> JobSpec {
+    let mut cfg = RunConfig::default();
+    cfg.seed = seed;
+    JobSpec {
+        kind: ExperimentKind::Finetune { task: "CoLA".into(), epochs: 2 },
+        cfg,
+    }
+}
+
+fn journal_admit(g: &mut Gen, seq: u64) -> Record {
+    Record::Admit {
+        seq,
+        priority: g.usize_in(0, 3) as i32,
+        client: g.bool().then(|| format!("c{}", g.usize_in(0, 2))),
+        spec: journal_spec(seq),
+    }
+}
+
+fn journal_done(g: &mut Gen, seq: u64) -> Record {
+    let status = if g.bool() {
+        JobStatus::Done(JobOutcome {
+            final_metric: seq as f64 + 0.5,
+            tail_loss: 0.25,
+            steps: 3,
+            train_secs: 1.0,
+            loss_series: vec![(0, 2.0)],
+            eval_series: vec![(1, 1.0, 50.0)],
+        })
+    } else {
+        JobStatus::Failed(format!("boom {seq}"))
+    };
+    Record::Done {
+        seq,
+        status,
+        from_cache: g.bool(),
+        secs: 0.5,
+        spec: journal_spec(seq),
+    }
+}
+
+/// A random but *causally plausible* record interleaving: seqs are
+/// admitted in order, leases/renewals name live seqs, each seq finishes
+/// at most once — plus the one reordering the hub really produces
+/// (an ultra-fast job's `done` landing before its `admit`, which is
+/// fsynced outside the dispatch lock).
+fn journal_history(g: &mut Gen) -> Vec<Record> {
+    let mut recs = Vec::new();
+    let mut next_seq = 0u64;
+    let mut live: Vec<u64> = Vec::new();
+    for _ in 0..g.usize_in(1, 24) {
+        match g.usize_in(0, 6) {
+            2 if !live.is_empty() => {
+                let seq = *g.pick(&live);
+                recs.push(Record::Lease { seq, worker: "w-0".into() });
+            }
+            3 if !live.is_empty() => {
+                let seq = *g.pick(&live);
+                recs.push(Record::Renew { seq, worker: "w-0".into() });
+            }
+            4 if !live.is_empty() => {
+                let i = g.usize_in(0, live.len() - 1);
+                let seq = live.remove(i);
+                recs.push(journal_done(g, seq));
+            }
+            5 if !live.is_empty() => {
+                let i = g.usize_in(0, live.len() - 1);
+                recs.push(Record::Cancel { seq: live.remove(i) });
+            }
+            6 => {
+                // done-before-admit reordering (cached instant job)
+                let seq = next_seq;
+                next_seq += 1;
+                recs.push(journal_done(g, seq));
+                recs.push(journal_admit(g, seq));
+            }
+            _ => {
+                let seq = next_seq;
+                next_seq += 1;
+                recs.push(journal_admit(g, seq));
+                live.push(seq);
+            }
+        }
+    }
+    recs
+}
+
+#[test]
+fn prop_journal_replay_is_consistent_under_any_torn_tail() {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    static CASE: AtomicUsize = AtomicUsize::new(0);
+    check("journal replay consistency", 30, |g| {
+        let recs = journal_history(g);
+        let lines: Vec<String> =
+            recs.iter().map(Record::encode_line).collect();
+        let full: Vec<u8> = lines.concat().into_bytes();
+        let tail_len = lines.last().unwrap().len();
+        let path = std::env::temp_dir().join(format!(
+            "omgd-prop-journal-{}-{}.log",
+            std::process::id(),
+            CASE.fetch_add(1, Ordering::Relaxed),
+        ));
+        // Truncate at every byte boundary inside (and around) the final
+        // record — the only damage an fsynced append can leave.
+        for cut in (full.len() - tail_len)..=full.len() {
+            std::fs::write(&path, &full[..cut]).unwrap();
+            let rep = journal::replay(&path).unwrap();
+            let kept: &[Record] = if cut == full.len() {
+                &recs
+            } else {
+                &recs[..recs.len() - 1]
+            };
+            assert_eq!(rep.replayed, kept.len(), "cut at {cut}");
+            // Model the kept prefix directly: admitted minus finished.
+            let mut admitted = HashSet::new();
+            let mut done = HashSet::new();
+            let mut gone = HashSet::new();
+            let mut max_seq = None::<u64>;
+            for r in kept {
+                let seq = match r {
+                    Record::Meta { .. } => continue,
+                    Record::Admit { seq, .. } => {
+                        admitted.insert(*seq);
+                        *seq
+                    }
+                    Record::Done { seq, .. } => {
+                        done.insert(*seq);
+                        *seq
+                    }
+                    Record::Cancel { seq } => {
+                        gone.insert(*seq);
+                        *seq
+                    }
+                    Record::Lease { seq, .. }
+                    | Record::Renew { seq, .. } => *seq,
+                };
+                max_seq = Some(max_seq.map_or(seq, |m| m.max(seq)));
+            }
+            // Monotone seq counter: strictly above everything replayed.
+            assert_eq!(
+                rep.next_seq,
+                max_seq.map_or(0, |m| m + 1),
+                "cut at {cut}"
+            );
+            // No lost completions: every fully-recorded done survives.
+            let replayed_done: HashSet<u64> =
+                rep.completed.iter().map(|r| r.seq).collect();
+            assert_eq!(replayed_done, done, "cut at {cut}");
+            // No double dispatch: a seq is pending XOR finished, and
+            // pending is exactly admitted − done − cancelled.
+            let pending: Vec<u64> =
+                rep.pending.iter().map(|p| p.seq).collect();
+            let pending_set: HashSet<u64> =
+                pending.iter().copied().collect();
+            assert_eq!(pending_set.len(), pending.len(), "dup pending");
+            assert!(
+                pending_set.is_disjoint(&replayed_done),
+                "cut at {cut}: a seq is both pending and completed"
+            );
+            let want: HashSet<u64> = admitted
+                .iter()
+                .copied()
+                .filter(|s| !done.contains(s) && !gone.contains(s))
+                .collect();
+            assert_eq!(pending_set, want, "cut at {cut}");
+            // Replay hands jobs back in seq order.
+            assert!(
+                pending.windows(2).all(|w| w[0] < w[1]),
+                "pending out of order"
+            );
+        }
+        std::fs::remove_file(&path).ok();
     });
 }
 

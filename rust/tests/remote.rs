@@ -10,17 +10,20 @@
 //! syncs the fingerprinted artifact set before running.
 
 use omgd::jobs::{
-    run_gateway, run_grid_remote, run_pool, run_worker_with,
-    ArtifactStore, ExperimentKind, GatewayStats, GridReport, JobOutcome,
-    JobQueue, JobSpec, ListenOptions, WorkerOptions,
+    journal, run_gateway, run_grid_remote, run_pool, run_worker_with,
+    ArtifactStore, ExperimentKind, GatewayStats, GridReport, JobJournal,
+    JobOutcome, JobQueue, JobResult, JobSpec, JobStatus, ListenOptions,
+    Record, ResultCache, WorkerOptions,
 };
 use omgd::config::RunConfig;
+use omgd::train::Checkpoint;
 use omgd::util::json::Json;
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Read, Write};
-use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 fn tmp_dir(tag: &str) -> PathBuf {
@@ -628,6 +631,338 @@ fn idle_worker_exits_via_idle_exit_without_drain() {
     gateway.join().unwrap();
 }
 
+/// Parse one HTTP request on a fake-gateway socket: returns
+/// `"METHOD /path"` and the number of NDJSON body lines (chunked
+/// bodies are de-framed, Content-Length bodies read whole).
+fn read_request(c: &mut TcpStream) -> (String, usize) {
+    let mut r = BufReader::new(c.try_clone().unwrap());
+    let mut line = String::new();
+    r.read_line(&mut line).unwrap();
+    let head = line
+        .split_whitespace()
+        .take(2)
+        .collect::<Vec<_>>()
+        .join(" ");
+    let mut chunked = false;
+    let mut clen = 0usize;
+    loop {
+        let mut h = String::new();
+        r.read_line(&mut h).unwrap();
+        let t = h.trim_end().to_ascii_lowercase();
+        if t.is_empty() {
+            break;
+        }
+        if t.starts_with("transfer-encoding:") && t.contains("chunked") {
+            chunked = true;
+        }
+        if let Some(v) = t.strip_prefix("content-length:") {
+            clen = v.trim().parse().unwrap_or(0);
+        }
+    }
+    let mut body = Vec::new();
+    if chunked {
+        loop {
+            let mut sz = String::new();
+            r.read_line(&mut sz).unwrap();
+            let n = usize::from_str_radix(sz.trim(), 16).unwrap();
+            let mut buf = vec![0u8; n + 2]; // chunk + CRLF
+            r.read_exact(&mut buf).unwrap();
+            if n == 0 {
+                break;
+            }
+            body.extend_from_slice(&buf[..n]);
+        }
+    } else if clen > 0 {
+        body = vec![0u8; clen];
+        r.read_exact(&mut body).unwrap();
+    }
+    let lines = body
+        .split(|&b| b == b'\n')
+        .filter(|l| !l.is_empty())
+        .count();
+    (head, lines)
+}
+
+/// Write one `Content-Length`-framed, `Connection: close` response on
+/// a fake-gateway socket (the shape `GatewayConn` re-polls expect).
+fn respond(c: &mut TcpStream, status: u16, reason: &str, body: &str) {
+    write!(
+        c,
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\
+         \r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    c.flush().unwrap();
+}
+
+/// A result line / `GET /jobs/<seq>/result` body for `spec`, carrying
+/// the deterministic stub outcome.
+fn result_json(seq: u64, s: &JobSpec) -> String {
+    let o = stub_outcome(s);
+    format!(
+        "{{\"seq\":{seq},\"label\":\"{}\",\"hash\":\"{}\",\
+         \"status\":\"done\",\"cached\":false,\"final_metric\":{},\
+         \"tail_loss\":{},\"steps\":{},\"secs\":0.0}}",
+        s.label(),
+        s.hash_hex(),
+        o.final_metric,
+        o.tail_loss,
+        o.steps,
+    )
+}
+
+/// Durability satellite, gateway side: the coordinator "crashes"
+/// leaving a dirty journal — one job finished, one leased to a worker
+/// that died with it, one still queued, and a torn half-record from
+/// the fatal write. A restart on the same cache dir must replay it:
+/// the finished result answers `GET /jobs/<seq>/result` immediately,
+/// the unfinished jobs are re-dispatched to a fresh agent, and the
+/// aggregate a reconnecting client assembles by re-polling its seqs is
+/// byte-identical to an uninterrupted local pool. Clean shutdown then
+/// compacts the journal to exactly the live state.
+#[test]
+fn coordinator_restart_replays_dirty_journal_and_serves_repolls() {
+    let dir = tmp_dir("journal-restart");
+    let specs: Vec<JobSpec> = (30..33).map(spec).collect();
+    let baseline = csv_bytes(&local_report(specs.clone(), 1), "base-j");
+
+    // The pre-crash history, exactly as the dying gateway fsynced it.
+    {
+        let j = JobJournal::open(&dir).unwrap();
+        for (i, s) in specs.iter().enumerate() {
+            j.append(&Record::Admit {
+                seq: i as u64,
+                priority: 0,
+                client: None,
+                spec: s.clone(),
+            })
+            .unwrap();
+        }
+        j.append(&Record::Done {
+            seq: 0,
+            status: JobStatus::Done(stub_outcome(&specs[0])),
+            from_cache: false,
+            secs: 0.0,
+            spec: specs[0].clone(),
+        })
+        .unwrap();
+        j.append(&Record::Lease { seq: 1, worker: "w-dead".into() })
+            .unwrap();
+    }
+    // The crash tore the final record mid-write.
+    {
+        let mut f = std::fs::OpenOptions::new()
+            .append(true)
+            .open(JobJournal::path_in(&dir))
+            .unwrap();
+        f.write_all(b"00deadbeef00cafe {\"rec\":\"don").unwrap();
+    }
+
+    // "Restart" on the same cache dir.
+    let lopts = ListenOptions {
+        poll_secs: 2,
+        lease_secs: 1, // the dead worker's lease expires fast
+        journal_dir: Some(dir.clone()),
+        ..ListenOptions::default()
+    };
+    let (addr, gateway) = start_gateway(lopts);
+
+    // Replayed result → immediately re-pollable; replayed-but-
+    // unfinished → pending; unknown seq → 404 (resubmit); junk → 400.
+    let (status, body) = http(addr, "GET", "/jobs/0/result", "");
+    assert_eq!(status, 200, "{body}");
+    let j = Json::parse(&body).unwrap();
+    assert_eq!(j.at("status").as_str(), Some("done"));
+    assert_eq!(j.at("final_metric").as_f64(), Some(30.5));
+    let (status, body) = http(addr, "GET", "/jobs/1/result", "");
+    assert_eq!(status, 202, "{body}");
+    assert!(body.contains("\"pending\":true"), "{body}");
+    let (status, _) = http(addr, "GET", "/jobs/2/result", "");
+    assert_eq!(status, 202);
+    let (status, body) = http(addr, "GET", "/jobs/999/result", "");
+    assert_eq!(status, 404, "{body}");
+    assert!(body.contains("resubmit"), "{body}");
+    let (status, _) = http(addr, "GET", "/jobs/abc/result", "");
+    assert_eq!(status, 400);
+
+    let wstats = std::thread::scope(|s| {
+        // A fresh agent drains the two replayed jobs (seq 1's dead
+        // lease expires first, then it re-dispatches).
+        let w = s.spawn(|| {
+            run_worker_with(&worker_opts(addr, "w-r", "jrnl"), |_wid| {
+                |s: &JobSpec| -> anyhow::Result<JobOutcome> {
+                    Ok(stub_outcome(s))
+                }
+            })
+            .unwrap()
+        });
+        // The reconnecting client: re-poll every seq it was acked
+        // before the crash, exactly as `grid --remote` does.
+        let mut results = Vec::new();
+        for (i, sp) in specs.iter().enumerate() {
+            let mut got = None;
+            for _ in 0..600 {
+                let (status, body) =
+                    http(addr, "GET", &format!("/jobs/{i}/result"), "");
+                match status {
+                    200 => {
+                        got = Some(Json::parse(&body).unwrap());
+                        break;
+                    }
+                    202 => {
+                        std::thread::sleep(Duration::from_millis(50))
+                    }
+                    other => panic!("unexpected HTTP {other}: {body}"),
+                }
+            }
+            let j =
+                got.unwrap_or_else(|| panic!("seq {i} never finished"));
+            assert_eq!(
+                j.at("hash").as_str(),
+                Some(sp.hash_hex().as_str()),
+                "journal preserved the spec identity across the crash"
+            );
+            let f = |k: &str| j.at(k).as_f64().unwrap();
+            results.push(JobResult {
+                seq: i as u64,
+                spec: sp.clone(),
+                status: JobStatus::Done(JobOutcome {
+                    final_metric: f("final_metric"),
+                    tail_loss: f("tail_loss"),
+                    steps: j.at("steps").as_usize().unwrap(),
+                    train_secs: 0.0,
+                    loss_series: Vec::new(),
+                    eval_series: Vec::new(),
+                }),
+                from_cache: false,
+                secs: 0.0,
+            });
+        }
+        let report = GridReport::new(results);
+        assert_eq!(
+            csv_bytes(&report, "jrnl-remote"),
+            baseline,
+            "re-polled aggregate byte-identical to the local pool's"
+        );
+        shutdown(addr);
+        w.join().unwrap()
+    });
+    assert_eq!(wstats.done, 2, "both unfinished jobs were re-run");
+    let stats = gateway.join().unwrap();
+    // 1 replayed completion + 2 fresh ones.
+    assert_eq!(stats.jobs.done, 3);
+
+    // Clean shutdown compacted: the journal now replays to exactly
+    // the live state — no pending work, all three results retained,
+    // no torn tail, seq counter preserved.
+    let rep = journal::replay(&JobJournal::path_in(&dir)).unwrap();
+    assert_eq!(rep.torn, 0);
+    assert!(rep.pending.is_empty(), "pending: {:?}", rep.pending.len());
+    assert_eq!(rep.completed.len(), 3);
+    assert_eq!(rep.next_seq, 3);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Durability satellite, client side: a gateway stand-in acks a whole
+/// grid, streams one result, then drops the socket (the "crash"); on
+/// re-poll it serves one result late (202 → 200) and disowns the last
+/// seq (404), forcing a clean resubmission of just that spec.
+/// `run_grid_remote` must absorb all of it — no failed cells, and the
+/// aggregate byte-identical to the local pool.
+#[test]
+fn grid_client_reconnects_and_repolls_after_stream_loss() {
+    let specs: Vec<JobSpec> = (40..43).map(spec).collect();
+    let baseline = csv_bytes(&local_report(specs.clone(), 1), "base-rp");
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+
+    let fake = std::thread::spawn({
+        let specs = specs.clone();
+        move || {
+            // Conn 1: ack all three cells, stream ONE result, then cut
+            // the connection mid-stream.
+            let (mut c, _) = listener.accept().unwrap();
+            let (head, n) = read_request(&mut c);
+            assert_eq!(head, "POST /jobs");
+            assert_eq!(n, 3, "three specs submitted");
+            let mut resp = String::from(
+                "HTTP/1.1 200 OK\r\nContent-Type: \
+                 application/x-ndjson\r\nConnection: close\r\n\r\n",
+            );
+            for (i, s) in specs.iter().enumerate() {
+                resp.push_str(&format!(
+                    "{{\"accepted\":{},\"hash\":\"{}\"}}\n",
+                    100 + i,
+                    s.hash_hex()
+                ));
+            }
+            resp.push_str(&result_json(100, &specs[0]));
+            resp.push('\n');
+            c.write_all(resp.as_bytes()).unwrap();
+            c.flush().unwrap();
+            drop(c); // two cells acked but unresolved
+
+            // The client re-polls seq 101: still running, then done.
+            let (mut c, _) = listener.accept().unwrap();
+            let (head, _) = read_request(&mut c);
+            assert_eq!(head, "GET /jobs/101/result");
+            respond(
+                &mut c,
+                202,
+                "Accepted",
+                "{\"pending\":true,\"seq\":101}",
+            );
+            let (mut c, _) = listener.accept().unwrap();
+            let (head, _) = read_request(&mut c);
+            assert_eq!(head, "GET /jobs/101/result");
+            let body = result_json(101, &specs[1]);
+            respond(&mut c, 200, "OK", &body);
+
+            // Seq 102 is disowned: the client must resubmit the spec.
+            let (mut c, _) = listener.accept().unwrap();
+            let (head, _) = read_request(&mut c);
+            assert_eq!(head, "GET /jobs/102/result");
+            respond(
+                &mut c,
+                404,
+                "Not Found",
+                "{\"error\":\"no journaled job with seq 102 \
+                 (resubmit the spec)\"}",
+            );
+
+            // Conn 5: exactly the one disowned spec comes back; serve
+            // it to completion and close cleanly.
+            let (mut c, _) = listener.accept().unwrap();
+            let (head, n) = read_request(&mut c);
+            assert_eq!(head, "POST /jobs");
+            assert_eq!(n, 1, "only the disowned cell is resubmitted");
+            let resp = format!(
+                "HTTP/1.1 200 OK\r\nConnection: close\r\n\r\n\
+                 {{\"accepted\":103,\"hash\":\"{}\"}}\n{}\n",
+                specs[2].hash_hex(),
+                result_json(103, &specs[2]),
+            );
+            c.write_all(resp.as_bytes()).unwrap();
+            c.flush().unwrap();
+        }
+    });
+
+    let report =
+        run_grid_remote(&addr.to_string(), specs.clone(), None).unwrap();
+    fake.join().unwrap();
+
+    assert_eq!(report.n_jobs(), 3);
+    assert_eq!(
+        report.n_failed(),
+        0,
+        "stream loss, late result, and disowned seq all recovered"
+    );
+    let remote_csv = csv_bytes(&report, "rp-remote");
+    assert_eq!(remote_csv, baseline);
+}
+
 /// Sanity net for the aggregation math used above: metrics grouped per
 /// method over a mixed local report (keeps `mean_metric_by` honest for
 /// remote-built reports too).
@@ -640,4 +975,174 @@ fn remote_reports_aggregate_like_local_ones() {
     assert_eq!(by.len(), 1);
     // seeds 0..4 → metrics 0.5,1.5,2.5,3.5 → mean 2.0
     assert!((by.values().next().unwrap() - 2.0).abs() < 1e-12);
+}
+
+/// A tiny controllable TCP relay between a worker and the gateway.
+/// [`FlakyProxy::partition`] severs every live connection and refuses
+/// new ones — the in-process stand-in for a worker host dying
+/// mid-lease; [`FlakyProxy::restore`] lets traffic flow again.
+#[derive(Clone)]
+struct FlakyProxy {
+    addr: SocketAddr,
+    black: Arc<AtomicBool>,
+    live: Arc<Mutex<Vec<TcpStream>>>,
+}
+
+fn start_proxy(upstream: SocketAddr) -> FlakyProxy {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let proxy = FlakyProxy {
+        addr: listener.local_addr().unwrap(),
+        black: Arc::new(AtomicBool::new(false)),
+        live: Arc::new(Mutex::new(Vec::new())),
+    };
+    let p = proxy.clone();
+    std::thread::spawn(move || {
+        for conn in listener.incoming() {
+            let Ok(client) = conn else { break };
+            if p.black.load(Ordering::SeqCst) {
+                continue; // refuse (drop) while partitioned
+            }
+            let Ok(server) = TcpStream::connect(upstream) else {
+                continue;
+            };
+            {
+                let mut l = p.live.lock().unwrap();
+                l.push(client.try_clone().unwrap());
+                l.push(server.try_clone().unwrap());
+            }
+            let (mut cr, mut sw) =
+                (client.try_clone().unwrap(), server.try_clone().unwrap());
+            std::thread::spawn(move || {
+                let _ = std::io::copy(&mut cr, &mut sw);
+                let _ = sw.shutdown(Shutdown::Both);
+            });
+            let (mut sr, mut cw) = (server, client);
+            std::thread::spawn(move || {
+                let _ = std::io::copy(&mut sr, &mut cw);
+                let _ = cw.shutdown(Shutdown::Both);
+            });
+        }
+    });
+    proxy
+}
+
+impl FlakyProxy {
+    fn partition(&self) {
+        self.black.store(true, Ordering::SeqCst);
+        for c in self.live.lock().unwrap().drain(..) {
+            let _ = c.shutdown(Shutdown::Both);
+        }
+    }
+    fn restore(&self) {
+        self.black.store(false, Ordering::SeqCst);
+    }
+}
+
+/// Durability satellite, worker side: a worker killed between its
+/// checkpoint write and the lease report must leave the checkpoint
+/// PARKED, and the re-dispatched lease must resume from it.
+///
+/// In-process stand-in for the kill: the worker's network is severed
+/// right after the checkpoint write, so the report is dropped exactly
+/// as a dead host's would be (`post_result` → `reported = false`, the
+/// `lease.report` faultpoint window), the un-renewed lease expires,
+/// the gateway re-dispatches, and the healed worker's second run
+/// finds the parked checkpoint, finishes, and retires it.
+#[test]
+fn dropped_report_parks_checkpoint_for_the_next_lease() {
+    let lopts = ListenOptions {
+        poll_secs: 1,
+        lease_secs: 1,
+        ..ListenOptions::default()
+    };
+    let (addr, gateway) = start_gateway(lopts);
+    let proxy = start_proxy(addr);
+
+    let specs = vec![spec(50)];
+    let hash = specs[0].hash_hex();
+    let baseline = csv_bytes(&local_report(specs.clone(), 1), "base-ck");
+
+    // The worker talks to the gateway only through the proxy; the
+    // grid client below connects directly and never flakes.
+    let mut opts = worker_opts(proxy.addr, "w-ck", "ckpark");
+    opts.workers = 1;
+    opts.ckpt_period = 4; // arm the checkpoint lifecycle in run_lease
+    let cache_dir = opts.cache_dir.clone().unwrap();
+
+    let runs = AtomicUsize::new(0);
+    let (report, wstats) = std::thread::scope(|s| {
+        let w = s.spawn(|| {
+            run_worker_with(&opts, |_wid| {
+                |js: &JobSpec| -> anyhow::Result<JobOutcome> {
+                    let cache =
+                        ResultCache::open(Some(cache_dir.as_str()))
+                            .unwrap();
+                    let h = js.hash_hex();
+                    if runs.fetch_add(1, Ordering::SeqCst) == 0 {
+                        // "ckpt.write" happened: step 4 is durable...
+                        cache
+                            .put_checkpoint(&h, &Checkpoint::new(4, 7))
+                            .unwrap();
+                        // ...and the host dies before "lease.report":
+                        // sever the network now, heal it once the
+                        // lease has expired at the gateway.
+                        proxy.partition();
+                        let p = proxy.clone();
+                        std::thread::spawn(move || {
+                            std::thread::sleep(Duration::from_millis(
+                                2500,
+                            ));
+                            p.restore();
+                        });
+                        anyhow::bail!("host died mid-run (simulated)");
+                    }
+                    // Re-dispatched lease: the parked checkpoint is
+                    // what makes this a resume, not a restart.
+                    let ck = cache
+                        .latest_checkpoint(&h)
+                        .expect("checkpoint parked by dropped report");
+                    assert_eq!(ck.step, 4);
+                    Ok(stub_outcome(js))
+                }
+            })
+            .unwrap()
+        });
+        let report =
+            run_grid_remote(&addr.to_string(), specs.clone(), None)
+                .unwrap();
+        shutdown(addr);
+        (report, w.join().unwrap())
+    });
+
+    assert_eq!(
+        runs.load(Ordering::SeqCst),
+        2,
+        "one dropped run, one resumed re-dispatch"
+    );
+    assert_eq!(wstats.leased, 2);
+    assert_eq!(wstats.done, 1);
+    assert_eq!(wstats.failed, 1);
+    assert_eq!(
+        wstats.conflicts, 1,
+        "the severed report must be counted as dropped"
+    );
+    assert_eq!(
+        report.n_failed(),
+        0,
+        "the client only ever sees the resumed completion"
+    );
+    assert_eq!(csv_bytes(&report, "ck-remote"), baseline);
+
+    // A successfully reported Done retires the spec's parked file.
+    let cache = ResultCache::open(Some(cache_dir.as_str())).unwrap();
+    assert!(
+        cache.latest_checkpoint(&hash).is_none(),
+        "reported Done retires the parked checkpoint"
+    );
+    let stats = gateway.join().unwrap();
+    assert_eq!(stats.jobs.done, 1);
+    assert!(
+        stats.remote.requeued >= 1,
+        "lease expiry re-dispatched the job"
+    );
 }
