@@ -40,12 +40,32 @@ echo "== cargo test (OMGD_BENCH_SCALE=$OMGD_BENCH_SCALE)"
 cargo test -q
 
 # ---------------------------------------------------------------------
-# Mask-runs micro-bench: native masked-AdamW steps at keep-ratio 0.25,
-# segment-run path vs the dense reference (10⁴ steps at scale 1;
-# OMGD_BENCH_SCALE shrinks it like every other bench). The binary
-# verifies the two paths agree bitwise before timing, prints the
-# ratio, and writes BENCH_maskruns.json at the repo root so the runs
-# path's perf trajectory is tracked across PRs.
+# Mask-API surface guard: the dense vector is a lazy, explicitly
+# requested bridge now. Only coordinator/mask.rs (owns the bridge) and
+# optim/reference.rs (the dense mirrors) may touch `.values()` /
+# `.to_dense(` — anything else is a dense-path regression and fails
+# the gate.
+# ---------------------------------------------------------------------
+echo "== mask-API guard: no dense mask access outside sanctioned files"
+if LEAKS=$(grep -rnE '\.values\(\)|\.to_dense\(' src tests benches \
+        --include='*.rs' \
+    | grep -vE '^(src/coordinator/mask\.rs|src/optim/reference\.rs):'); then
+  echo "mask-API guard FAILED: dense mask access outside" \
+       "coordinator/mask.rs and optim/reference.rs:" >&2
+  echo "$LEAKS" >&2
+  exit 1
+fi
+echo "   clean (dense bridge confined to mask.rs + reference.rs)"
+
+# ---------------------------------------------------------------------
+# Mask-runs micro-bench: native masked-AdamW steps swept across
+# keep-ratios {0.05, 0.25, 1.0}, runs-descriptor path vs stepping over
+# the lazy dense bridge, plus a mask-refresh stage (splice +
+# on_mask_refresh churn). 10⁴ steps at scale 1; OMGD_BENCH_SCALE
+# shrinks it like every other bench. The binary verifies the two paths
+# agree bitwise before timing, bails if anything densified a mask
+# mid-bench, prints the ratios, and writes BENCH_maskruns.json at the
+# repo root so both trajectories are tracked across PRs.
 # ---------------------------------------------------------------------
 num_field() { # num_field FILE KEY → numeric value of "KEY":N
   sed -n "s/.*\"$2\":\([0-9.eE+-]*\).*/\1/p" "$1" | head -n1
@@ -54,7 +74,7 @@ num_field() { # num_field FILE KEY → numeric value of "KEY":N
 if [[ "${OMGD_CI_SKIP_BENCH:-0}" == "1" ]]; then
   echo "== mask-runs microbench: skipped (OMGD_CI_SKIP_BENCH=1)"
 else
-  echo "== mask-runs microbench (runs vs dense, keep-ratio 0.25)"
+  echo "== mask-runs microbench (keep sweep {0.05,0.25,1.0} + refresh)"
   cargo build -q --release --bin omgd
   target/release/omgd microbench --keep 0.25 \
       --out ../BENCH_maskruns.json
@@ -91,6 +111,30 @@ else
       echo "bench trajectory FAILED: per-step runs-path time" \
            "regressed >2x vs $(basename "$PREV_FILE")" >&2
       exit 1
+    fi
+    # Refresh stage rides the same >2x gate once both points carry it
+    # (older bench rows predate the stage and are skipped).
+    NEW_RS=$(num_field ../BENCH_maskruns.json refresh_secs)
+    NEW_RN=$(num_field ../BENCH_maskruns.json refreshes)
+    OLD_RS=$(num_field "$PREV_FILE" refresh_secs)
+    OLD_RN=$(num_field "$PREV_FILE" refreshes)
+    if [[ -n "$NEW_RS" && -n "$NEW_RN" && -n "$OLD_RS" && -n "$OLD_RN" ]]
+    then
+      NEW_PR=$(awk -v s="$NEW_RS" -v n="$NEW_RN" \
+                   'BEGIN { printf "%.9g", s / n }')
+      OLD_PR=$(awk -v s="$OLD_RS" -v n="$OLD_RN" \
+                   'BEGIN { printf "%.9g", s / n }')
+      echo "   per-refresh: ${NEW_PR}s now vs ${OLD_PR}s" \
+           "in $(basename "$PREV_FILE")"
+      if awk -v new="$NEW_PR" -v old="$OLD_PR" \
+          'BEGIN { exit !(old > 0 && new > 2.0 * old) }'; then
+        echo "bench trajectory FAILED: per-refresh time regressed" \
+             ">2x vs $(basename "$PREV_FILE")" >&2
+        exit 1
+      fi
+    else
+      echo "   prior point has no refresh stage; refresh gate arms" \
+           "next run"
     fi
   else
     echo "   no prior bench point; trajectory gate arms next run"

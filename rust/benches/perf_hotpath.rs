@@ -43,14 +43,16 @@ fn main() -> anyhow::Result<()> {
         let _ = bundle.train_step_lm(&flat, &x, &y).unwrap();
     });
 
-    // 2. fused masked-AdamW update via HLO (9 × n × 4 bytes of traffic).
+    // 2. fused masked-AdamW update via HLO (9 × n × 4 bytes of traffic),
+    //    dispatched runs-first like the engine's hot loop.
     let mut m = vec![0.0f32; n];
     let mut v = vec![0.0f32; n];
     let hp = [1e-3f32, 0.9, 0.999, 1e-8, 0.01, 0.1, 0.001, 0.0];
-    let mask = engine.mask().values().to_vec();
+    let desc = engine.runs().descriptors();
     let r2 = measure("masked_adamw_hlo", 2, 20, || {
         bundle
-            .adamw_update(&mut flat, &grad, &mask, &mut m, &mut v, &hp)
+            .adamw_update_runs(&mut flat, &grad, &desc, &mut m, &mut v,
+                               &hp)
             .unwrap();
     });
 

@@ -1,20 +1,28 @@
 //! Masks, their segment-run representation, and mask sets.
 //!
 //! A [`Mask`] selects coordinates of the flat parameter space and
-//! carries the OMGD rescale factor on the selected ones. It is stored
-//! twice, always in sync:
+//! carries the OMGD rescale factor on the selected ones. The canonical
+//! (and only always-resident) representation is [`MaskRuns`]: sorted,
+//! disjoint `(offset, len, scale)` segments over the active region
+//! ([`Mask::runs`]). Construction, refresh ([`Mask::set_segment`]) and
+//! every native consumer — optimizer steps, coverage verification,
+//! residency accounting — operate on the runs, so masked work is
+//! O(runs + active) instead of O(d).
 //!
-//! * a dense `f32` vector (the *bridge* the fused HLO kernels consume —
-//!   [`Mask::values`]), and
-//! * a canonical [`MaskRuns`] view: sorted, disjoint `(offset, len,
-//!   scale)` segments over the active region only ([`Mask::runs`]).
+//! The dense `f32` vector the fused HLO kernels consume is *not* a
+//! stored field. It is a lazily materialized `DenseBridge` cache:
+//! [`Mask::dense_bridge`] builds it on first request (one O(d)
+//! expansion), every later request is a cache hit, and
+//! [`Mask::set_segment`] invalidates it — so a period's worth of device
+//! steps shares one materialization, and masks that never cross the
+//! device boundary never pay for one.
 //!
-//! Everything native iterates the runs — optimizer steps, coverage
-//! verification, residency accounting — so masked work is O(active)
-//! instead of O(d). The runs (and the cached active count) are
-//! maintained *natively* by [`Mask::set_segment`] via a run splice; the
-//! dense↔runs bridge ([`MaskRuns::from_dense`] / [`MaskRuns::to_dense`])
-//! covers scattered-coordinate constructions and the HLO path.
+//! The dense→runs direction ([`MaskRuns::from_dense`] /
+//! [`Mask::from_dense`]) is cold-path-only: scattered-coordinate
+//! constructions (coordinate partitions, i.i.d. masks, top-k
+//! selections) and snapshot restore. Every scan increments the
+//! `omgd_mask_densify_total` counter so a hot-loop densification
+//! regression shows up in `/metrics`.
 //!
 //! A [`MaskSet`] is the per-cycle collection `{S⁽ʲ⁾}` required to
 //! satisfy eq. (3): `Σⱼ S⁽ʲ⁾ = M·1_d` over the *maskable* region (the
@@ -74,7 +82,14 @@ impl MaskRuns {
     /// are grouped by bit pattern so a NaN entry (e.g. out of a
     /// degenerate config) forms its own run instead of stalling the
     /// scan — `NaN != NaN` would otherwise never advance it.
+    ///
+    /// Cold path by contract: counted in `omgd_mask_densify_total` and
+    /// kept out of the steady-state step/refresh path (those splice
+    /// runs instead). `#[cold]` keeps the optimizer from inlining it
+    /// into hot callers.
+    #[cold]
     pub fn from_dense(values: &[f32]) -> Self {
+        crate::obs::MASK_DENSIFY.inc();
         let mut runs = Vec::new();
         let mut i = 0usize;
         while i < values.len() {
@@ -93,10 +108,20 @@ impl MaskRuns {
             runs.push(Run { offset: start, len: i - start, scale: s });
         }
         let active = runs.iter().map(|r| r.len).sum();
-        Self { n: values.len(), runs, active }
+        let out = Self { n: values.len(), runs, active };
+        debug_assert!(
+            out.runs.windows(2).all(|w| {
+                w[0].end() < w[1].offset
+                    || (w[0].end() == w[1].offset
+                        && w[0].scale.to_bits() != w[1].scale.to_bits())
+            }),
+            "from_dense produced non-canonical runs"
+        );
+        out
     }
 
-    /// Materialize the dense vector (the HLO bridge direction).
+    /// Materialize the dense vector (the HLO bridge direction — used by
+    /// the lazy [`Mask::dense_bridge`] cache and the reference mirrors).
     pub fn to_dense(&self) -> Vec<f32> {
         let mut v = vec![0.0f32; self.n];
         for r in &self.runs {
@@ -113,6 +138,13 @@ impl MaskRuns {
     /// The canonical run list.
     pub fn runs(&self) -> &[Run] {
         &self.runs
+    }
+
+    /// Plain `(offset, len, scale)` descriptor triples — the wire form
+    /// handed across the runtime boundary (`runtime` sits below this
+    /// layer and cannot name [`Run`]). O(runs), never O(d).
+    pub fn descriptors(&self) -> Vec<(usize, usize, f32)> {
+        self.runs.iter().map(|r| (r.offset, r.len, r.scale)).collect()
     }
 
     /// Number of active coordinates (cached; O(1)).
@@ -276,24 +308,38 @@ fn support_iter(runs: &[Run]) -> impl Iterator<Item = (usize, usize)> + '_ {
     })
 }
 
-/// Coordinate mask with scale values: dense bridge + canonical runs,
-/// kept in sync by construction.
-#[derive(Clone, Debug)]
+/// Coordinate mask with scale values: canonical runs plus a lazy
+/// `DenseBridge` cache for the fused HLO kernels.
+///
+/// The runs are the source of truth. The bridge is materialized by
+/// [`Mask::dense_bridge`] on first request, reused until
+/// [`Mask::set_segment`] invalidates it, and deliberately *not* carried
+/// across [`Clone`] — clones happen at refresh boundaries where the
+/// next device step re-materializes anyway, and a clone that never
+/// crosses the device boundary should stay O(runs).
+#[derive(Debug)]
 pub struct Mask {
-    values: Vec<f32>,
     runs: MaskRuns,
+    bridge: std::cell::OnceCell<Vec<f32>>,
+}
+
+impl Clone for Mask {
+    fn clone(&self) -> Self {
+        Self { runs: self.runs.clone(), bridge: std::cell::OnceCell::new() }
+    }
 }
 
 impl PartialEq for Mask {
     fn eq(&self, other: &Self) -> bool {
-        // `runs` is a canonical function of `values`.
-        self.values == other.values
+        // The runs are canonical, so run equality is mask equality; the
+        // bridge is a cache and never part of the value.
+        self.runs == other.runs
     }
 }
 
 impl Mask {
     pub fn zeros(n: usize) -> Self {
-        Self { values: vec![0.0; n], runs: MaskRuns::empty(n) }
+        Self::from_runs(MaskRuns::empty(n))
     }
 
     pub fn ones(n: usize) -> Self {
@@ -306,33 +352,47 @@ impl Mask {
                 active: n,
             }
         };
-        Self { values: vec![1.0; n], runs }
+        Self::from_runs(runs)
+    }
+
+    fn from_runs(runs: MaskRuns) -> Self {
+        Self { runs, bridge: std::cell::OnceCell::new() }
     }
 
     /// Build from a dense value vector (scattered-coordinate
     /// constructions: coordinate partitions, i.i.d. masks, top-k
-    /// selections); one O(d) scan derives the runs.
+    /// selections); one O(d) scan derives the runs. Cold path by
+    /// contract — counted in `omgd_mask_densify_total`. The input
+    /// vector seeds the bridge cache so an immediately following device
+    /// step does not re-expand it.
     pub fn from_dense(values: Vec<f32>) -> Self {
         let runs = MaskRuns::from_dense(&values);
-        Self { values, runs }
+        let bridge = std::cell::OnceCell::new();
+        let _ = bridge.set(values);
+        Self { runs, bridge }
     }
 
     pub fn len(&self) -> usize {
-        self.values.len()
+        self.runs.n()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.values.is_empty()
+        self.runs.n() == 0
     }
 
     /// Dense view — the bridge the fused HLO kernels consume.
-    pub fn values(&self) -> &[f32] {
-        &self.values
+    /// Materialized lazily on first request (one O(d) expansion of the
+    /// runs), cached until the next [`Mask::set_segment`], so a
+    /// period's worth of device steps shares a single expansion.
+    pub fn dense_bridge(&self) -> &[f32] {
+        self.bridge.get_or_init(|| self.runs.to_dense())
     }
 
-    /// Scale at one coordinate (O(1) dense read).
+    /// Scale at one coordinate (binary search over the runs; 0.0 when
+    /// frozen).
     pub fn value(&self, i: usize) -> f32 {
-        self.values[i]
+        assert!(i < self.runs.n(), "coord {i} out of mask bounds");
+        self.runs.scale_at(i)
     }
 
     /// Canonical segment-run view (O(1); maintained incrementally).
@@ -365,12 +425,13 @@ impl Mask {
             bail!("mask segment {offset}+{len} overflows");
         };
         ensure!(
-            end <= self.values.len(),
+            end <= self.runs.n(),
             "mask segment {offset}..{end} exceeds mask length {}",
-            self.values.len()
+            self.runs.n()
         );
-        self.values[offset..end].fill(scale);
         self.runs.splice(offset, len, scale);
+        // The cached dense bridge (if any) is stale now.
+        self.bridge.take();
         Ok(())
     }
 
@@ -380,18 +441,26 @@ impl Mask {
         self.set_segment(i, 1, scale)
     }
 
-    /// Apply in place to a gradient: `g ← mask ⊙ g`. Errors on a
-    /// length mismatch instead of panicking.
+    /// Apply in place to a gradient: `g ← mask ⊙ g`. Walks the runs —
+    /// frozen gaps are zeroed, active segments scaled — with no dense
+    /// mask materialization. Errors on a length mismatch instead of
+    /// panicking.
     pub fn apply(&self, grad: &mut [f32]) -> Result<()> {
         ensure!(
-            grad.len() == self.values.len(),
+            grad.len() == self.runs.n(),
             "mask/gradient length mismatch: {} vs {}",
-            self.values.len(),
+            self.runs.n(),
             grad.len()
         );
-        for (g, &m) in grad.iter_mut().zip(&self.values) {
-            *g *= m;
+        let mut pos = 0usize;
+        for r in self.runs.runs() {
+            grad[pos..r.offset].fill(0.0);
+            for g in &mut grad[r.offset..r.end()] {
+                *g *= r.scale;
+            }
+            pos = r.end();
         }
+        grad[pos..].fill(0.0);
         Ok(())
     }
 }
@@ -591,7 +660,7 @@ mod tests {
 
     /// Dense scan ground truth for the cached count.
     fn dense_active(mask: &Mask) -> usize {
-        mask.values().iter().filter(|&&v| v != 0.0).count()
+        mask.dense_bridge().iter().filter(|&&v| v != 0.0).count()
     }
 
     /// Runs must be canonical: sorted, disjoint, non-zero scale,
@@ -613,9 +682,9 @@ mod tests {
         }
         assert!(prev_end <= mask.len());
         assert_eq!(runs.active_count(), dense_active(mask));
-        assert_eq!(runs.to_dense(), mask.values());
+        assert_eq!(runs.to_dense(), mask.dense_bridge());
         assert_eq!(
-            MaskRuns::from_dense(mask.values()).runs(),
+            MaskRuns::from_dense(mask.dense_bridge()).runs(),
             runs.runs(),
             "splice-maintained runs differ from a fresh dense scan"
         );
@@ -632,7 +701,7 @@ mod tests {
             assert!((c - m as f32).abs() < 1e-5, "c={c} m={m}");
             // padding untouched
             for mask in &set.masks {
-                assert!(mask.values()[100..].iter().all(|&v| v == 0.0));
+                assert!(mask.dense_bridge()[100..].iter().all(|&v| v == 0.0));
                 assert_canonical(mask);
             }
         }
@@ -670,7 +739,7 @@ mod tests {
         for mask in &set.masks {
             assert_canonical(mask);
             for p in &man.params {
-                let seg = &mask.values()[p.offset..p.offset + p.len];
+                let seg = &mask.dense_bridge()[p.offset..p.offset + p.len];
                 let first = seg[0];
                 assert!(seg.iter().all(|&v| v == first), "{} split", p.name);
             }
@@ -696,7 +765,7 @@ mod tests {
         let mask = MaskSet::tensor_iid(&man, 0.5, &mut rng).unwrap();
         assert_canonical(&mask);
         for p in &man.params {
-            let seg = &mask.values()[p.offset..p.offset + p.len];
+            let seg = &mask.dense_bridge()[p.offset..p.offset + p.len];
             assert!(seg.iter().all(|&v| v == seg[0]));
         }
     }
@@ -705,12 +774,12 @@ mod tests {
     fn coordinate_iid_scale_unbiased() {
         let mut rng = Rng::seed_from_u64(7);
         let mask = MaskSet::coordinate_iid(4096, 4000, 0.25, &mut rng);
-        let active = mask.values()[..4000].iter()
+        let active = mask.dense_bridge()[..4000].iter()
             .filter(|&&v| v != 0.0).count();
         // ~1000 expected
         assert!((active as f64 - 1000.0).abs() < 150.0, "active {active}");
-        assert!(mask.values().iter().all(|&v| v == 0.0 || v == 4.0));
-        assert!(mask.values()[4000..].iter().all(|&v| v == 0.0));
+        assert!(mask.dense_bridge().iter().all(|&v| v == 0.0 || v == 4.0));
+        assert!(mask.dense_bridge()[4000..].iter().all(|&v| v == 0.0));
         assert_canonical(&mask);
     }
 
@@ -720,17 +789,17 @@ mod tests {
         let mask =
             MaskSet::layerwise(&man, &["block_1".into()], 3.0).unwrap();
         // embed active at 1
-        assert!(mask.values()[0..4].iter().all(|&v| v == 1.0));
+        assert!(mask.dense_bridge()[0..4].iter().all(|&v| v == 1.0));
         // block_0 frozen
-        assert!(mask.values()[4..8].iter().all(|&v| v == 0.0));
+        assert!(mask.dense_bridge()[4..8].iter().all(|&v| v == 0.0));
         // block_1 active at 3 (= N_L/γ with N_L=3, γ=1)
-        assert!(mask.values()[8..12].iter().all(|&v| v == 3.0));
+        assert!(mask.dense_bridge()[8..12].iter().all(|&v| v == 3.0));
         // block_2 frozen
-        assert!(mask.values()[12..16].iter().all(|&v| v == 0.0));
+        assert!(mask.dense_bridge()[12..16].iter().all(|&v| v == 0.0));
         // head active at 1
-        assert!(mask.values()[16..20].iter().all(|&v| v == 1.0));
+        assert!(mask.dense_bridge()[16..20].iter().all(|&v| v == 1.0));
         // padding zero
-        assert!(mask.values()[20..].iter().all(|&v| v == 0.0));
+        assert!(mask.dense_bridge()[20..].iter().all(|&v| v == 0.0));
         // runs view: embed@1, block_1@3, head@1 — three segments
         assert_canonical(&mask);
         assert_eq!(mask.runs().runs(), &[
@@ -784,7 +853,7 @@ mod tests {
         assert!(mask.set_segment(usize::MAX, 2, 1.0).is_err());
         // the failed writes left the mask untouched
         assert_eq!(mask.active_count(), 0);
-        assert!(mask.values().iter().all(|&v| v == 0.0));
+        assert!(mask.dense_bridge().iter().all(|&v| v == 0.0));
     }
 
     #[test]
@@ -805,7 +874,7 @@ mod tests {
             mask.set_segment(off, len, scale).unwrap();
             assert_eq!(
                 mask.active_count(),
-                mask.values().iter().filter(|&&v| v != 0.0).count(),
+                mask.dense_bridge().iter().filter(|&&v| v != 0.0).count(),
                 "cache diverged after set_segment({off}, {len}, {scale})"
             );
             assert_canonical(&mask);
@@ -899,6 +968,51 @@ mod tests {
         let mut bad = set.clone();
         bad.masks[0].set_segment(2, 1, 1.0).unwrap();
         assert_eq!(bad.coverage_scalar(6), None);
+    }
+
+    #[test]
+    fn dense_bridge_is_cached_and_invalidated_by_set_segment() {
+        let mut mask = Mask::zeros(16);
+        mask.set_segment(2, 6, 2.0).unwrap();
+        // Two requests without an intervening splice hit the same
+        // allocation — the bridge is materialized once.
+        let p1 = mask.dense_bridge().as_ptr();
+        let p2 = mask.dense_bridge().as_ptr();
+        assert_eq!(p1, p2);
+        assert_eq!(mask.dense_bridge(), mask.runs().to_dense());
+        // A splice invalidates the cache; the next request reflects it.
+        mask.set_segment(4, 2, 0.0).unwrap();
+        let d = mask.dense_bridge();
+        assert_eq!(&d[2..4], &[2.0, 2.0]);
+        assert_eq!(&d[4..6], &[0.0, 0.0]);
+        assert_eq!(&d[6..8], &[2.0, 2.0]);
+        assert_eq!(d, mask.runs().to_dense());
+    }
+
+    #[test]
+    fn from_dense_seeds_bridge_and_counts_one_densify() {
+        let dense = vec![0.0f32, 3.0, 3.0, 0.0, 1.0];
+        let ptr = dense.as_ptr();
+        let before = crate::obs::MASK_DENSIFY.get();
+        let mask = Mask::from_dense(dense);
+        // exactly one dense scan happened for this mask (the counter is
+        // global and monotonic, so other tests can only push it higher)
+        assert!(crate::obs::MASK_DENSIFY.get() > before);
+        // the input vector itself seeds the cache — no re-expansion
+        assert_eq!(mask.dense_bridge().as_ptr(), ptr);
+    }
+
+    #[test]
+    fn clone_drops_bridge_cache_but_preserves_equality() {
+        let mut mask = Mask::zeros(8);
+        mask.set_segment(1, 5, 2.0).unwrap();
+        let _ = mask.dense_bridge();
+        let copy = mask.clone();
+        assert_eq!(copy, mask);
+        assert_eq!(copy.dense_bridge(), mask.dense_bridge());
+        // equality is over runs, not the cache state
+        let fresh = copy.clone();
+        assert_eq!(fresh, mask);
     }
 
     #[test]

@@ -3,9 +3,12 @@
 //! * [`mask`] — mask representations and mask-*set* generation satisfying
 //!   eq. (3): `Σⱼ S⁽ʲ⁾ = M·1_d` (coordinate, tensorwise and layerwise
 //!   constructions, plus the i.i.d. baselines they are compared
-//!   against). Every mask carries a canonical segment-run view
-//!   ([`mask::MaskRuns`]) beside its dense HLO bridge, so native
-//!   consumers do O(active) work instead of O(d).
+//!   against). The canonical mask representation is the segment-run
+//!   view ([`mask::MaskRuns`]); the dense vector is a lazy,
+//!   explicitly requested cache ([`mask::Mask::dense_bridge`]), so
+//!   every consumer — native steps, residency accounting, the HLO
+//!   dispatch (via [`mask::MaskRuns::descriptors`]) — does O(active)
+//!   work instead of O(d).
 //! * [`cycle`] — Algorithm 1's traversal engine: per cycle, a fresh
 //!   random permutation of `[M] × [N]` visited exactly once, plus the
 //!   epochwise variant of Figure 1.

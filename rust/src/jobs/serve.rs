@@ -372,12 +372,14 @@ impl JobHub {
     /// shutdown.
     pub fn compact_journal(&self) -> Result<()> {
         let Some(j) = self.journal.get() else { return Ok(()) };
-        let mut pending: Vec<PendingJob> =
-            lock_recover(&self.live).values().cloned().collect();
+        let mut pending: Vec<PendingJob> = lock_recover(&self.live)
+            .iter()
+            .map(|(_, p)| p.clone())
+            .collect();
         pending.sort_by_key(|p| p.seq);
         let mut completed: Vec<JobResult> = {
             let log = lock_recover(&self.completed);
-            log.map.values().cloned().collect()
+            log.map.iter().map(|(_, r)| r.clone()).collect()
         };
         completed.sort_by_key(|r| r.seq);
         j.compact(
@@ -407,8 +409,8 @@ impl JobHub {
     /// ([`super::cache::ResultCache::gc_at_protected`]).
     pub fn live_spec_hashes(&self) -> HashSet<String> {
         lock_recover(&self.live)
-            .values()
-            .map(|p| p.spec.hash_hex())
+            .iter()
+            .map(|(_, p)| p.spec.hash_hex())
             .collect()
     }
 

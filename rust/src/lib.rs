@@ -7,9 +7,11 @@
 //! * **L3 (this crate)** — the training coordinator: Algorithm 1's
 //!   `[M]×[N]` without-replacement traversal ([`coordinator`]), the
 //!   LISA/LISA-WOR layer scheduler (Algorithm 2) — masks carried as
-//!   canonical segment runs ([`coordinator::MaskRuns`]) with a dense
-//!   bridge to the HLO kernels, so native masked steps and residency
-//!   accounting are O(active), not O(d) — run-aware native optimizers
+//!   canonical segment runs ([`coordinator::MaskRuns`]), runs-first
+//!   end to end: native masked steps, residency accounting, and the
+//!   HLO dispatch all consume `(offset, len, scale)` runs, O(active)
+//!   not O(d), while the dense vector is a lazy, explicitly requested
+//!   bridge (`Mask::dense_bridge`) — runs-first native optimizers
 //!   with active-region-only moment state ([`optim`]), the analytic
 //!   memory model ([`memory`]), the
 //!   §5.1 quadratic testbed ([`quadratic`]), data pipelines ([`data`]),

@@ -260,11 +260,12 @@ fn cmd_check(args: &Args) -> Result<()> {
         let (mut ph, mut m, mut v) =
             (p0.clone(), vec![0.0f32; n], vec![0.0f32; n]);
         let hp = [1e-3, 0.9, 0.999, 1e-8, 0.01, 0.1, 0.001, 0.0];
-        bundle.adamw_update(&mut ph, &g, mask.values(), &mut m, &mut v,
-                            &hp)?;
+        bundle.adamw_update_runs(&mut ph, &g,
+                                 &mask.runs().descriptors(), &mut m,
+                                 &mut v, &hp)?;
         let mut pn = p0.clone();
         let mut nat = MaskedAdamW::new(n, 0.9, 0.999, 1e-8, 0.01);
-        nat.step(&mut pn, &g, &mask, 1e-3);
+        nat.step(&mut pn, &g, mask.runs(), 1e-3);
         let max_dp = ph
             .iter()
             .zip(&pn)
@@ -967,10 +968,13 @@ fn cmd_cache_gc(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `omgd microbench`: native masked-AdamW steps on the segment-run
-/// path vs the dense reference, on a LISA-shaped mask (contiguous
-/// active segments). Needs no artifacts; writes a `BENCH_*.json` row
-/// so the perf trajectory of the runs path is tracked across PRs.
+/// `omgd microbench`: native masked-AdamW steps across a keep-ratio
+/// sweep {0.05, 0.25, 1.0} — the segment-run path vs the dense-bridge
+/// reference — plus a mask-refresh stage (segment splice + compact
+/// optimizer state remap), all on LISA-shaped masks (contiguous active
+/// segments). Needs no artifacts; verifies the paths agree bitwise and
+/// that nothing densified a mask, then writes a `BENCH_*.json` row so
+/// the perf trajectory of both hot paths is tracked across PRs.
 fn cmd_microbench(args: &Args) -> Result<()> {
     use omgd::coordinator::Mask;
     use omgd::optim::{reference::DenseAdamW, MaskedAdamW, Optimizer};
@@ -982,69 +986,125 @@ fn cmd_microbench(args: &Args) -> Result<()> {
     if !(keep > 0.0 && keep <= 1.0) {
         bail!("--keep must be in (0, 1]");
     }
-    // 10⁴ steps at scale 1; OMGD_BENCH_SCALE shrinks smoke runs.
+    // 10⁴ steps / 2·10³ refreshes at scale 1; OMGD_BENCH_SCALE shrinks
+    // smoke runs.
     let steps = omgd::experiments::scaled(
         args.usize_or("steps", 10_000)?,
         100,
     );
-    // LISA-shaped support: `keep` of the space active as contiguous
+    let refreshes = omgd::experiments::scaled(
+        args.usize_or("refreshes", 2_000)?,
+        50,
+    );
+    let densify0 = omgd::obs::MASK_DENSIFY.get();
+
+    // LISA-shaped support: `k` of the space active as contiguous
     // layer-sized segments spread over the vector.
     let seg = (n / 64).max(1);
-    let stride = ((seg as f64) / keep).round() as usize;
-    let mut mask = Mask::zeros(n);
-    let mut off = 0usize;
-    while off < n {
-        mask.set_segment(off, seg.min(n - off), 2.0)
-            .expect("segment in bounds");
-        off += stride.max(seg);
-    }
-    let active = mask.active_count();
+    let lisa_mask = |k: f64| -> Mask {
+        let stride = ((seg as f64) / k).round() as usize;
+        let mut mask = Mask::zeros(n);
+        let mut off = 0usize;
+        while off < n {
+            mask.set_segment(off, seg.min(n - off), 2.0)
+                .expect("segment in bounds");
+            off += stride.max(seg);
+        }
+        mask
+    };
+
     let mut rng = Rng::seed_from_u64(1);
     let g: Vec<f32> = (0..n).map(|_| rng.normal32()).collect();
     let p0: Vec<f32> = (0..n).map(|_| rng.normal32()).collect();
 
-    let mut p = p0.clone();
-    let mut dense = DenseAdamW::default_hp(n);
-    let t0 = Instant::now();
-    for _ in 0..steps {
-        dense.step(&mut p, &g, mask.values(), 1e-4);
+    let mut keeps = vec![0.05, 0.25, 1.0];
+    if !keeps.iter().any(|&k| k == keep) {
+        keeps.push(keep);
+        keeps.sort_by(f64::total_cmp);
     }
-    let dense_secs = t0.elapsed().as_secs_f64();
+    println!(
+        "microbench: n={n}, {steps} steps per arm, keep sweep {keeps:?}"
+    );
+    // Per sweep point: (keep, active, runs, dense_secs, runs_secs,
+    // compact state bytes).
+    let mut points: Vec<(f64, usize, usize, f64, f64, usize)> =
+        Vec::new();
+    for &k in &keeps {
+        let mask = lisa_mask(k);
+        let active = mask.active_count();
 
-    let mut pr = p0;
+        let mut p = p0.clone();
+        let mut dense = DenseAdamW::default_hp(n);
+        let t0 = Instant::now();
+        for _ in 0..steps {
+            dense.step(&mut p, &g, mask.dense_bridge(), 1e-4);
+        }
+        let dense_secs = t0.elapsed().as_secs_f64();
+
+        let mut pr = p0.clone();
+        let mut compact = MaskedAdamW::default_hp(n);
+        let t1 = Instant::now();
+        for _ in 0..steps {
+            compact.step(&mut pr, &g, mask.runs(), 1e-4);
+        }
+        let runs_secs = t1.elapsed().as_secs_f64();
+
+        // The two paths must agree bitwise — a fast wrong answer is
+        // not a benchmark result.
+        if p.iter().zip(&pr).any(|(a, b)| a.to_bits() != b.to_bits()) {
+            bail!(
+                "runs path diverged from the dense bridge at keep {k}"
+            );
+        }
+        println!(
+            "  keep {k:<5} dense {:8.1} ms  runs {:8.1} ms  {:4.2}x \
+             ({} runs, {active} active)",
+            dense_secs * 1e3,
+            runs_secs * 1e3,
+            dense_secs / runs_secs.max(1e-12),
+            mask.runs().runs().len(),
+        );
+        points.push((
+            k,
+            active,
+            mask.runs().runs().len(),
+            dense_secs,
+            runs_secs,
+            compact.state_bytes(),
+        ));
+    }
+
+    // Mask-refresh stage: the period-boundary work — a segment splice
+    // plus the compact optimizer's active-region state remap — which
+    // must never materialize a dense vector.
+    let mut mask = lisa_mask(keep);
     let mut compact = MaskedAdamW::default_hp(n);
-    let t1 = Instant::now();
-    for _ in 0..steps {
-        compact.step_runs(&mut pr, &g, mask.runs(), 1e-4);
+    compact.on_mask_refresh(mask.runs());
+    let win = (n - seg) / 2;
+    let t2 = Instant::now();
+    for i in 0..refreshes {
+        let scale = if i % 2 == 0 { 0.0 } else { 2.0 };
+        mask.set_segment(win, seg, scale).expect("segment in bounds");
+        compact.on_mask_refresh(mask.runs());
     }
-    let runs_secs = t1.elapsed().as_secs_f64();
+    let refresh_secs = t2.elapsed().as_secs_f64();
+    println!(
+        "  refresh {:8.1} ms for {refreshes} splice+remap cycles \
+         ({:.1} µs each)",
+        refresh_secs * 1e3,
+        refresh_secs * 1e6 / (refreshes as f64).max(1.0),
+    );
 
-    // The two paths must agree bitwise — a fast wrong answer is not a
-    // benchmark result.
-    if p.iter().zip(&pr).any(|(a, b)| a.to_bits() != b.to_bits()) {
-        bail!("runs path diverged from the dense reference");
+    // The whole bench must finish without one dense→runs rescan — the
+    // steady-state contract `omgd_mask_densify_total` exists to keep.
+    let densified = omgd::obs::MASK_DENSIFY.get() - densify0;
+    if densified != 0 {
+        bail!(
+            "microbench densified a mask ({densified} scans): the \
+             steady-state path regressed"
+        );
     }
-    let ratio = dense_secs / runs_secs.max(1e-12);
-    println!(
-        "microbench: n={n} keep={keep} ({} runs, {active} active), \
-         {steps} steps",
-        mask.runs().runs().len()
-    );
-    println!(
-        "  dense  {:8.1} ms ({:.0} steps/s)",
-        dense_secs * 1e3,
-        steps as f64 / dense_secs.max(1e-12)
-    );
-    println!(
-        "  runs   {:8.1} ms ({:.0} steps/s)",
-        runs_secs * 1e3,
-        steps as f64 / runs_secs.max(1e-12)
-    );
-    println!(
-        "  ratio  {ratio:.2}× (state resident: {} of {} bytes)",
-        compact.state_bytes(),
-        2 * n * 4
-    );
+
     // Run metadata so the BENCH trajectory is attributable: which
     // revision produced the point, at what smoke scale, on how wide a
     // machine, and when. A checkout without git still benches.
@@ -1060,6 +1120,24 @@ fn cmd_microbench(args: &Args) -> Result<()> {
         .duration_since(std::time::UNIX_EPOCH)
         .map(|d| d.as_secs())
         .unwrap_or(0);
+    // The top-level keys keep their historical meaning (the `--keep`
+    // point) so ci.sh's trajectory gate compares like with like across
+    // revisions; the sweep rides along under short, non-colliding keys.
+    let (_, active, _, dense_secs, runs_secs, state_bytes) = *points
+        .iter()
+        .find(|pt| pt.0 == keep)
+        .expect("--keep is in the sweep");
+    let ratio = dense_secs / runs_secs.max(1e-12);
+    let sweep_json = points
+        .iter()
+        .map(|&(k, a, nr, ds, rs, _)| {
+            format!(
+                "{{\"k\":{k},\"a\":{a},\"nr\":{nr},\
+                 \"dense_s\":{ds:.6},\"runs_s\":{rs:.6}}}"
+            )
+        })
+        .collect::<Vec<_>>()
+        .join(",");
     let out = args.str_or("out", "BENCH_maskruns.json");
     std::fs::write(
         &out,
@@ -1068,10 +1146,11 @@ fn cmd_microbench(args: &Args) -> Result<()> {
              \"active\":{active},\"steps\":{steps},\
              \"dense_secs\":{dense_secs:.6},\
              \"runs_secs\":{runs_secs:.6},\"ratio\":{ratio:.4},\
-             \"state_bytes\":{},\"dense_state_bytes\":{},\
+             \"state_bytes\":{state_bytes},\"dense_state_bytes\":{},\
+             \"refreshes\":{refreshes},\
+             \"refresh_secs\":{refresh_secs:.6},\
              \"rev\":\"{rev}\",\"scale\":{},\"workers\":{},\
-             \"unix_secs\":{unix_secs}}}\n",
-            compact.state_bytes(),
+             \"unix_secs\":{unix_secs},\"sweep\":[{sweep_json}]}}\n",
             2 * n * 4,
             omgd::experiments::bench_scale(),
             omgd::jobs::default_workers(),

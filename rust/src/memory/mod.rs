@@ -398,7 +398,7 @@ mod tests {
             let mut opt = MaskedAdamW::default_hp(man.padded_len);
             let g = vec![0.1f32; man.padded_len];
             let mut p = vec![0.0f32; man.padded_len];
-            opt.step(&mut p, &g, &mask, 1e-3);
+            opt.step(&mut p, &g, mask.runs(), 1e-3);
             assert_eq!(opt.state_bytes(), elems * 8, "γ={gamma}");
         }
         // Full policy: every real parameter resident.
@@ -409,7 +409,7 @@ mod tests {
         full_mask.set_segment(0, man.total_len, 1.0).unwrap();
         let g = vec![0.1f32; man.padded_len];
         let mut p = vec![0.0f32; man.padded_len];
-        opt.step(&mut p, &g, &full_mask, 1e-3);
+        opt.step(&mut p, &g, full_mask.runs(), 1e-3);
         assert_eq!(opt.state_bytes(), man.total_len * 8);
     }
 

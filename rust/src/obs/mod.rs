@@ -234,6 +234,10 @@ pub static MASK_REFRESH_SECONDS: Histogram =
     Histogram::new(FAST_BOUNDS);
 pub static STATE_BYTES: Gauge = Gauge::new();
 pub static KEEP_RATIO: Gauge = Gauge::new();
+/// Dense→runs mask scans (`MaskRuns::from_dense`). Cold path by
+/// contract: stays 0 across a steady-state train run — a nonzero rate
+/// during training is a densification regression.
+pub static MASK_DENSIFY: Counter = Counter::new();
 
 // Durability: job journal + train checkpoints.
 pub static JOURNAL_RECORDS: Counter = Counter::new();
@@ -358,6 +362,12 @@ pub fn families() -> Vec<Family> {
             name: "omgd_train_keep_ratio",
             help: "Active fraction of the current mask",
             metric: G(&KEEP_RATIO),
+        },
+        Family {
+            name: "omgd_mask_densify_total",
+            help: "Dense-to-runs mask scans (cold path; nonzero rate \
+                   during training is a densification regression)",
+            metric: C(&MASK_DENSIFY),
         },
         Family {
             name: "omgd_journal_records_total",

@@ -69,7 +69,7 @@ mod tests {
         let n0: f32 = p.iter().map(|x| x * x).sum();
         for _ in 0..200 {
             let g = p.clone();
-            opt.step(&mut p, &g, &mask, 0.05);
+            opt.step(&mut p, &g, mask.runs(), 0.05);
         }
         let n1: f32 = p.iter().map(|x| x * x).sum();
         assert!(n1 < n0, "galore failed to descend: {n1} vs {n0}");

@@ -14,10 +14,10 @@
 //! block of G (computed by power iteration), refreshed on the same
 //! schedule — the dominated-subspace scheme whose bias §1(i) discusses.
 
-use crate::coordinator::{Mask, MaskRuns};
+use crate::coordinator::MaskRuns;
 use crate::linalg::{stiefel, Mat};
 use crate::manifest::ParamInfo;
-use crate::optim::{dense_adamw_coord, Optimizer};
+use crate::optim::{dense_adamw_run, Optimizer};
 use crate::rng::Rng;
 
 /// How the projection factor is chosen.
@@ -252,29 +252,7 @@ impl GoloreOptimizer {
 }
 
 impl Optimizer for GoloreOptimizer {
-    fn step(&mut self, p: &mut [f32], g: &[f32], mask: &Mask, lr: f32) {
-        assert_eq!(p.len(), self.n);
-        let (bc1, bc2) = self.begin_step(g);
-        self.step_projected(p, g, lr, bc1, bc2);
-        // Dense fallback tensors (biases / norms) — plain masked AdamW
-        // over the dense mask vector.
-        let hp = (self.beta1, self.beta2, bc1, bc2, self.eps,
-                  self.weight_decay);
-        for &(off, len) in &self.dense.segments {
-            for i in off..off + len {
-                let mk = mask.values()[i];
-                if mk == 0.0 {
-                    continue;
-                }
-                dense_adamw_coord(
-                    &mut self.dense.m, &mut self.dense.v, p, g, i, mk,
-                    hp, lr,
-                );
-            }
-        }
-    }
-
-    fn step_runs(
+    fn step(
         &mut self,
         p: &mut [f32],
         g: &[f32],
@@ -287,7 +265,8 @@ impl Optimizer for GoloreOptimizer {
         self.step_projected(p, g, lr, bc1, bc2);
         // Dense fallback tensors: merge-walk the mask runs against the
         // (sorted) fallback segments — O(active ∩ fallback), no dense
-        // mask scan.
+        // mask scan. Each overlap interval is contiguous with a uniform
+        // scale, so the shared SoA per-run kernel handles it whole.
         let hp = (self.beta1, self.beta2, bc1, bc2, self.eps,
                   self.weight_decay);
         let rs = runs.runs();
@@ -297,10 +276,10 @@ impl Optimizer for GoloreOptimizer {
             let (off, len) = self.dense.segments[j];
             let lo = r.offset.max(off);
             let hi = r.end().min(off + len);
-            for idx in lo..hi {
-                dense_adamw_coord(
-                    &mut self.dense.m, &mut self.dense.v, p, g, idx,
-                    r.scale, hp, lr,
+            if lo < hi {
+                dense_adamw_run(
+                    &mut self.dense.m, &mut self.dense.v, p, g, lo,
+                    hi - lo, r.scale, hp, lr,
                 );
             }
             if r.end() <= off + len {
@@ -339,6 +318,7 @@ impl Optimizer for GoloreOptimizer {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::Mask;
 
     fn params_2d() -> Vec<ParamInfo> {
         vec![
@@ -394,7 +374,7 @@ mod tests {
         let norm0: f32 = p.iter().map(|x| x * x).sum();
         for _ in 0..300 {
             let g = p.clone();
-            opt.step(&mut p, &g, &mask, 0.05);
+            opt.step(&mut p, &g, mask.runs(), 0.05);
         }
         let norm1: f32 = p.iter().map(|x| x * x).sum();
         assert!(norm1 < 0.5 * norm0, "{norm1} vs {norm0}");
@@ -421,7 +401,7 @@ mod tests {
         let mut opt = GoloreOptimizer::new(
             ProjectionKind::TopSingular, &params, 320, 2, 100, 0,
         );
-        opt.step(&mut p, &g, &Mask::ones(320), 1.0);
+        opt.step(&mut p, &g, Mask::ones(320).runs(), 1.0);
         // update direction ≈ -sign pattern of g's rank-1 structure:
         // cosine between Δp and g should be large in magnitude.
         let dp: Vec<f32> = p.clone();
@@ -441,9 +421,9 @@ mod tests {
         let g = vec![0.1f32; 204];
         let mut p = vec![0.0f32; 204];
         let mask = Mask::ones(204);
-        opt.step(&mut p, &g, &mask, 0.01);
+        opt.step(&mut p, &g, mask.runs(), 0.01);
         let p1 = opt.tensors[0].p.clone();
-        opt.step(&mut p, &g, &mask, 0.01);
+        opt.step(&mut p, &g, mask.runs(), 0.01);
         let p2 = opt.tensors[0].p.clone();
         assert!(p1.sub(&p2).fro() > 1e-6, "projection did not refresh");
     }

@@ -1,14 +1,13 @@
 //! Native optimizers over the flat parameter vector.
 //!
-//! Every optimizer implements two step entry points:
-//!
-//! * [`Optimizer::step_runs`] — the hot path. It walks the mask's
-//!   segment-run view ([`MaskRuns`]) and touches **only active
-//!   coordinates**: O(active) time per step instead of O(d).
-//! * [`Optimizer::step`] — the dense-mask bridge (reads
-//!   [`Mask::values`]), kept for callers holding a dense mask and as
-//!   the independently-coded dense arm the property tests compare
-//!   against.
+//! The API is runs-first: [`Optimizer::step`] takes the mask's
+//! canonical segment-run view ([`MaskRuns`]) and touches **only active
+//! coordinates** — O(runs + active) time per step instead of O(d). No
+//! trait entry point accepts (or materializes) a dense mask vector; the
+//! only dense-slice steppers left in the crate are the ground-truth
+//! mirrors in [`reference`], which the bitwise property tests and the
+//! `omgd microbench` dense-bridge arm drive through
+//! `Mask::dense_bridge()`.
 //!
 //! [`MaskedAdamW`] and [`MaskedSgdm`] additionally store their moment
 //! state **only for the active region**: a compact index map (the
@@ -21,14 +20,14 @@
 //! analytic model in [`crate::memory`] instead of silently holding
 //! 2·d·4 bytes. The update arithmetic per active coordinate is
 //! bit-identical to the L1 Pallas kernels (same hard-freeze masking,
-//! same bias-correction convention); [`reference`] holds plain dense
-//! mirrors used as ground truth by `tests/proptests.rs` and the
-//! `omgd microbench` dense arm.
+//! same bias-correction convention).
 //!
 //! [`galore`]/[`golore`] implement the low-rank gradient-projection
 //! baselines, and [`sift`] the top-k magnitude-masking baseline. Those
 //! keep dense state (their residency story is the projection /
-//! selection, not the mask) but still iterate runs in `step_runs`.
+//! selection, not the mask) but still step through runs; their shared
+//! per-run AdamW update is the SoA [`dense_adamw_run`] helper, whose
+//! zipped-subslice inner loop the compiler autovectorizes.
 
 pub mod galore;
 pub mod golore;
@@ -39,20 +38,18 @@ pub use galore::GaloreOptimizer;
 pub use golore::{GoloreOptimizer, ProjectionKind};
 pub use sift::SiftOptimizer;
 
-use crate::coordinator::{Mask, MaskRuns};
+use crate::coordinator::MaskRuns;
 
 /// Common interface: one update step on the flat parameter vector.
-/// The mask (dense or as runs) carries both selection and scale (see
+/// The mask's segment runs carry both selection and scale (see
 /// kernels/ref.py); `lr` is supplied per step so schedules stay outside
 /// the optimizer.
 pub trait Optimizer {
-    /// Dense-mask step (bridge path; iterates all of `p`).
-    fn step(&mut self, p: &mut [f32], g: &[f32], mask: &Mask, lr: f32);
-
-    /// Run-aware step: touch only the mask's active coordinates.
-    /// Must produce parameters elementwise-identical to [`step`] with
-    /// the dense view of the same mask.
-    fn step_runs(
+    /// Run-aware step: walk the mask's segment runs and touch only the
+    /// active coordinates. Must produce parameters elementwise-identical
+    /// to the dense reference mirrors driven with the same mask's
+    /// `dense_bridge()` (the bitwise property contract).
+    fn step(
         &mut self,
         p: &mut [f32],
         g: &[f32],
@@ -181,32 +178,49 @@ impl ActiveMap {
     }
 }
 
-/// One dense-state masked-AdamW coordinate update, shared by every
+/// Dense-state masked-AdamW update over one contiguous run
+/// `[offset, offset+len)` at a uniform `scale`, shared by every
 /// optimizer that keeps full-length moments (golore's fallback
 /// segments, SIFT) so the arithmetic can never drift between them —
 /// the bitwise runs==dense property contract depends on it.
+///
+/// SoA form: each state array is sliced to the run and the inner loop
+/// walks zipped subslices of equal length, so the compiler hoists the
+/// bounds checks and autovectorizes the loop. The per-coordinate
+/// arithmetic (order of operations included) is exactly the scalar
+/// update the reference mirrors perform.
 /// `hp = (beta1, beta2, bc1, bc2, eps, weight_decay)`.
 #[allow(clippy::too_many_arguments)]
 #[inline]
-pub(crate) fn dense_adamw_coord(
+pub(crate) fn dense_adamw_run(
     m: &mut [f32],
     v: &mut [f32],
     p: &mut [f32],
     g: &[f32],
-    i: usize,
-    mk: f32,
+    offset: usize,
+    len: usize,
+    scale: f32,
     hp: (f32, f32, f32, f32, f32, f32),
     lr: f32,
 ) {
     let (b1, b2, bc1, bc2, eps, wd) = hp;
-    let gm = mk * g[i];
-    let mi = b1 * m[i] + (1.0 - b1) * gm;
-    let vi = b2 * v[i] + (1.0 - b2) * gm * gm;
-    m[i] = mi;
-    v[i] = vi;
-    let mhat = mi / bc1;
-    let vhat = vi / bc2;
-    p[i] -= lr * (mhat / (vhat.sqrt() + eps) + wd * p[i]);
+    let end = offset + len;
+    let m = &mut m[offset..end];
+    let v = &mut v[offset..end];
+    let p = &mut p[offset..end];
+    let g = &g[offset..end];
+    for (((mi, vi), pi), gi) in
+        m.iter_mut().zip(v.iter_mut()).zip(p.iter_mut()).zip(g.iter())
+    {
+        let gm = scale * *gi;
+        let mn = b1 * *mi + (1.0 - b1) * gm;
+        let vn = b2 * *vi + (1.0 - b2) * gm * gm;
+        *mi = mn;
+        *vi = vn;
+        let mhat = mn / bc1;
+        let vhat = vn / bc2;
+        *pi -= lr * (mhat / (vhat.sqrt() + eps) + wd * *pi);
+    }
 }
 
 /// Remap one compact state vector onto a new support: carried where the
@@ -290,11 +304,7 @@ impl MaskedAdamW {
 }
 
 impl Optimizer for MaskedAdamW {
-    fn step(&mut self, p: &mut [f32], g: &[f32], mask: &Mask, lr: f32) {
-        self.step_runs(p, g, mask.runs(), lr);
-    }
-
-    fn step_runs(
+    fn step(
         &mut self,
         p: &mut [f32],
         g: &[f32],
@@ -385,11 +395,7 @@ impl MaskedSgdm {
 }
 
 impl Optimizer for MaskedSgdm {
-    fn step(&mut self, p: &mut [f32], g: &[f32], mask: &Mask, lr: f32) {
-        self.step_runs(p, g, mask.runs(), lr);
-    }
-
-    fn step_runs(
+    fn step(
         &mut self,
         p: &mut [f32],
         g: &[f32],
@@ -428,21 +434,10 @@ impl Optimizer for MaskedSgdm {
 }
 
 /// Plain SGD (no state) — the Algorithm 1 reference instantiation.
-/// `step` keeps the dense loop (the property tests compare the two
-/// paths against each other).
 pub struct MaskedSgd;
 
 impl Optimizer for MaskedSgd {
-    fn step(&mut self, p: &mut [f32], g: &[f32], mask: &Mask, lr: f32) {
-        for i in 0..p.len() {
-            let mk = mask.values()[i];
-            if mk != 0.0 {
-                p[i] -= lr * mk * g[i];
-            }
-        }
-    }
-
-    fn step_runs(
+    fn step(
         &mut self,
         p: &mut [f32],
         g: &[f32],
@@ -468,6 +463,7 @@ impl Optimizer for MaskedSgd {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::Mask;
     use crate::rng::Rng;
 
     fn randv(n: usize, rng: &mut Rng) -> Vec<f32> {
@@ -482,7 +478,7 @@ mod tests {
         let g = randv(n, &mut rng);
         let mut p = p0.clone();
         let mut opt = MaskedAdamW::new(n, 0.9, 0.999, 1e-8, 0.01);
-        opt.step(&mut p, &g, &Mask::ones(n), 1e-3);
+        opt.step(&mut p, &g, Mask::ones(n).runs(), 1e-3);
         for i in 0..n {
             // step 1: mhat = g, vhat = g² → update = lr*(sign-ish + wd p)
             let want = p0[i]
@@ -500,7 +496,7 @@ mod tests {
         let g = randv(n, &mut rng);
         let mut p = p0.clone();
         let mut opt = MaskedAdamW::default_hp(n);
-        opt.step(&mut p, &g, &Mask::zeros(n), 1e-3);
+        opt.step(&mut p, &g, Mask::zeros(n).runs(), 1e-3);
         assert_eq!(p, p0);
         // no state is resident at all for an empty support
         assert_eq!(opt.resident(), 0);
@@ -516,7 +512,7 @@ mod tests {
         let mut opt = MaskedAdamW::default_hp(n);
         let mut mask = Mask::zeros(n);
         mask.set_segment(0, 4, 2.0).unwrap();
-        opt.step(&mut p, &g, &mask, 1e-3);
+        opt.step(&mut p, &g, mask.runs(), 1e-3);
         // active half has state; frozen half has NO resident slots
         for i in 0..4 {
             let (m, _) = opt.moment_at(i).expect("active coord has state");
@@ -541,8 +537,8 @@ mod tests {
         let mut opt = MaskedAdamW::default_hp(n);
         let mut a = Mask::zeros(n);
         a.set_segment(0, 8, 1.0).unwrap();
-        opt.step(&mut p, &g, &a, 1e-3);
-        opt.step(&mut p, &g, &a, 1e-3);
+        opt.step(&mut p, &g, a.runs(), 1e-3);
+        opt.step(&mut p, &g, a.runs(), 1e-3);
         let carried: Vec<(f32, f32)> =
             (4..8).map(|i| opt.moment_at(i).unwrap()).collect();
         let mut b = Mask::zeros(n);
@@ -573,10 +569,10 @@ mod tests {
         let mut p = vec![0.0f32; n];
         let g = vec![1.0f32; n];
         let mut opt = MaskedSgdm::new(n, 0.9, 0.0, false);
-        opt.step(&mut p, &g, &Mask::ones(n), 0.1);
+        opt.step(&mut p, &g, Mask::ones(n).runs(), 0.1);
         // buf = 1, p = -0.1
         assert!((p[0] + 0.1).abs() < 1e-7);
-        opt.step(&mut p, &g, &Mask::ones(n), 0.1);
+        opt.step(&mut p, &g, Mask::ones(n).runs(), 0.1);
         // buf = 1.9, p = -0.1 - 0.19 = -0.29
         assert!((p[0] + 0.29).abs() < 1e-6);
     }
@@ -589,8 +585,8 @@ mod tests {
         let mut p2 = vec![0.0f32; n];
         let mut o1 = MaskedSgdm::new(n, 0.9, 0.0, false);
         let mut o2 = MaskedSgdm::new(n, 0.9, 0.0, true);
-        o1.step(&mut p1, &g, &Mask::ones(n), 0.1);
-        o2.step(&mut p2, &g, &Mask::ones(n), 0.1);
+        o1.step(&mut p1, &g, Mask::ones(n).runs(), 0.1);
+        o2.step(&mut p2, &g, Mask::ones(n).runs(), 0.1);
         assert!((p1[0] + 0.1).abs() < 1e-7);
         assert!((p2[0] + 0.19).abs() < 1e-7); // g + mu*buf = 1.9
     }
@@ -604,7 +600,7 @@ mod tests {
         let mut opt = MaskedSgd;
         for _ in 0..100 {
             let g = p.clone();
-            opt.step(&mut p, &g, &Mask::ones(n), 0.1);
+            opt.step(&mut p, &g, Mask::ones(n).runs(), 0.1);
         }
         let norm: f32 = p.iter().map(|x| x * x).sum();
         assert!(norm < 1e-4, "norm {norm}");
@@ -623,20 +619,20 @@ mod tests {
             let g = vec![0.1f32; d];
             let mut p = vec![0.0f32; d];
             let mut a = MaskedAdamW::default_hp(d);
-            a.step(&mut p, &g, &mask, 1e-3);
+            a.step(&mut p, &g, mask.runs(), 1e-3);
             assert_eq!(a.state_bytes(), active * 8, "adamw keep={keep}");
             let mut s = MaskedSgdm::new(d, 0.9, 0.0, false);
-            s.step(&mut p, &g, &mask, 1e-3);
+            s.step(&mut p, &g, mask.runs(), 1e-3);
             assert_eq!(s.state_bytes(), active * 4, "sgdm keep={keep}");
         }
         assert_eq!(MaskedSgd.state_bytes(), 0);
     }
 
     #[test]
-    fn step_and_step_runs_are_one_path() {
-        // `step` bridges to `step_runs` through the mask's run view:
-        // two optimizers driven through the two entry points stay
-        // bitwise identical.
+    fn soa_run_helper_matches_reference_scalar_update() {
+        // `dense_adamw_run` (the SoA per-run inner loop golore/SIFT
+        // share) must stay bitwise identical to the scalar reference
+        // mirror driven with the same mask's dense bridge.
         let n = 128;
         let mut rng = Rng::seed_from_u64(5);
         let g = randv(n, &mut rng);
@@ -644,14 +640,28 @@ mod tests {
         let mut mask = Mask::zeros(n);
         mask.set_segment(3, 40, 2.0).unwrap();
         mask.set_segment(70, 21, 4.0).unwrap();
-        let (mut pa, mut pb) = (p0.clone(), p0);
-        let mut oa = MaskedAdamW::default_hp(n);
-        let mut ob = MaskedAdamW::default_hp(n);
-        for _ in 0..3 {
-            oa.step(&mut pa, &g, &mask, 1e-3);
-            ob.step_runs(&mut pb, &g, mask.runs(), 1e-3);
+        let mut pa = p0.clone();
+        let (mut m, mut v) = (vec![0.0f32; n], vec![0.0f32; n]);
+        let mut mirror = reference::DenseAdamW::default_hp(n);
+        let mut pb = p0;
+        for t in 1..=3i32 {
+            let hp = (
+                0.9f32,
+                0.999f32,
+                1.0 - 0.9f32.powi(t),
+                1.0 - 0.999f32.powi(t),
+                1e-8f32,
+                0.01f32,
+            );
+            for r in mask.runs().runs() {
+                dense_adamw_run(
+                    &mut m, &mut v, &mut pa, &g, r.offset, r.len,
+                    r.scale, hp, 1e-3,
+                );
+            }
+            mirror.step(&mut pb, &g, mask.dense_bridge(), 1e-3);
         }
-        assert_eq!(pa, pb);
+        assert!(pa.iter().zip(&pb).all(|(a, b)| a.to_bits() == b.to_bits()));
     }
 
     #[test]
@@ -665,12 +675,12 @@ mod tests {
         let mut oa = MaskedAdamW::default_hp(n);
         let mut mask = Mask::zeros(n);
         mask.set_segment(0, n, 4.0).unwrap();
-        oa.step(&mut pa, &g, &mask, 1e-3);
+        oa.step(&mut pa, &g, mask.runs(), 1e-3);
 
         let mut pb = p0.clone();
         let mut ob = MaskedAdamW::default_hp(n);
         let g4: Vec<f32> = g.iter().map(|x| 4.0 * x).collect();
-        ob.step(&mut pb, &g4, &Mask::ones(n), 1e-3);
+        ob.step(&mut pb, &g4, Mask::ones(n).runs(), 1e-3);
 
         for (a, b) in pa.iter().zip(&pb) {
             assert!((a - b).abs() < 1e-7);
@@ -685,10 +695,10 @@ mod tests {
         let mut opt = MaskedSgdm::new(n, 0.9, 0.0, false);
         let mut a = Mask::zeros(n);
         a.set_segment(0, 4, 1.0).unwrap();
-        opt.step(&mut p, &g, &a, 0.1); // buf = 1 on 0..4
+        opt.step(&mut p, &g, a.runs(), 0.1); // buf = 1 on 0..4
         let mut b = Mask::zeros(n);
         b.set_segment(2, 4, 1.0).unwrap();
-        opt.step(&mut p, &g, &b, 0.1);
+        opt.step(&mut p, &g, b.runs(), 0.1);
         // carried coords: buf = 0.9·1 + 1 = 1.9; fresh coords: buf = 1
         assert!((opt.momentum_at(2).unwrap() - 1.9).abs() < 1e-6);
         assert!((opt.momentum_at(3).unwrap() - 1.9).abs() < 1e-6);

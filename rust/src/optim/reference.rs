@@ -5,8 +5,11 @@
 //! Pallas kernels' semantics exactly (hard-freeze masking, same
 //! bias-correction convention) and keep full-length state, which is
 //! precisely what the compact optimizers must reproduce elementwise on
-//! the active region. Used by `tests/proptests.rs` (bitwise
-//! runs-vs-dense property) and as the dense arm of `omgd microbench`.
+//! the active region. This file is the **only** place outside
+//! `coordinator/mask.rs` allowed to consume a dense mask slice (fed by
+//! `Mask::dense_bridge()` — ci.sh greps for leaks elsewhere). Used by
+//! `tests/proptests.rs` (bitwise runs-vs-dense property) and as the
+//! dense-bridge arm of `omgd microbench`.
 
 /// Dense AdamW with hard-freeze masking and full-length `m`/`v`.
 pub struct DenseAdamW {
@@ -118,8 +121,8 @@ mod tests {
         let mut compact = MaskedAdamW::default_hp(n);
         for _ in 0..4 {
             let g: Vec<f32> = (0..n).map(|_| rng.normal32()).collect();
-            dense.step(&mut pd, &g, mask.values(), 1e-3);
-            compact.step_runs(&mut pc, &g, mask.runs(), 1e-3);
+            dense.step(&mut pd, &g, mask.dense_bridge(), 1e-3);
+            compact.step(&mut pc, &g, mask.runs(), 1e-3);
         }
         assert!(pd.iter().zip(&pc).all(|(a, b)| a.to_bits() == b.to_bits()));
     }
@@ -137,8 +140,8 @@ mod tests {
         let mut compact = MaskedSgdm::new(n, 0.9, 1e-4, true);
         for _ in 0..4 {
             let g: Vec<f32> = (0..n).map(|_| rng.normal32()).collect();
-            dense.step(&mut pd, &g, mask.values(), 0.05);
-            compact.step_runs(&mut pc, &g, mask.runs(), 0.05);
+            dense.step(&mut pd, &g, mask.dense_bridge(), 0.05);
+            compact.step(&mut pc, &g, mask.runs(), 0.05);
         }
         assert!(pd.iter().zip(&pc).all(|(a, b)| a.to_bits() == b.to_bits()));
     }

@@ -6,14 +6,16 @@
 //! State stays dense (full-length `m`/`v`): the selection churns by
 //! gradient magnitude every refresh and SIFT's semantics carry moments
 //! across re-selections, so compacting would change the method. The
-//! *iteration* is still run-aware: the selection is held as a
-//! [`MaskRuns`] view and [`Optimizer::step_runs`] walks the caller's
-//! runs intersected with it — O(active ∩ selected) per step.
-//! `state_bytes()` reports the paper's residency model (moments for
-//! selected coordinates only).
+//! *iteration* is run-aware: the selection is held as a [`MaskRuns`]
+//! view and [`Optimizer::step`] walks the caller's runs intersected
+//! with it — O(active ∩ selected) per step, each intersection run
+//! through the shared SoA per-run AdamW kernel. `state_bytes()`
+//! reports the paper's residency model (moments for selected
+//! coordinates only). Re-selection itself is a sanctioned cold
+//! `Mask::from_dense` (top-k is inherently scattered).
 
 use crate::coordinator::{Mask, MaskRuns};
-use crate::optim::{dense_adamw_coord, Optimizer};
+use crate::optim::{dense_adamw_run, Optimizer};
 
 pub struct SiftOptimizer {
     beta1: f32,
@@ -28,7 +30,7 @@ pub struct SiftOptimizer {
     /// Steps between re-selections.
     pub refresh: usize,
     /// Current selection (scale 1.0 on kept coords; runs view drives
-    /// the intersection in `step_runs`).
+    /// the intersection in `step`).
     sel: Mask,
     t: u64,
     /// Only the first `total` coords participate (padding excluded).
@@ -84,34 +86,17 @@ impl SiftOptimizer {
         )
     }
 
-    /// Hyper-parameter tuple for [`dense_adamw_coord`] — the one
-    /// shared dense masked-AdamW coordinate update (see optim/mod.rs),
-    /// so SIFT's arithmetic can never drift from golore's fallback or
-    /// the property-test contract.
+    /// Hyper-parameter tuple for [`dense_adamw_run`] — the one shared
+    /// dense masked-AdamW per-run update (see optim/mod.rs), so SIFT's
+    /// arithmetic can never drift from golore's fallback or the
+    /// property-test contract.
     fn hp(&self, bc1: f32, bc2: f32) -> (f32, f32, f32, f32, f32, f32) {
         (self.beta1, self.beta2, bc1, bc2, self.eps, self.weight_decay)
     }
 }
 
 impl Optimizer for SiftOptimizer {
-    fn step(&mut self, p: &mut [f32], g: &[f32], mask: &Mask, lr: f32) {
-        assert_eq!(p.len(), g.len());
-        assert_eq!(p.len(), mask.len());
-        let (bc1, bc2) = self.begin_step(g);
-        // Dense walk over the caller's mask intersected with the
-        // selection, keeping the caller's scale.
-        let hp = self.hp(bc1, bc2);
-        for i in 0..p.len() {
-            let mk = mask.values()[i];
-            if mk == 0.0 || self.sel.values()[i] == 0.0 {
-                continue;
-            }
-            dense_adamw_coord(&mut self.m, &mut self.v, p, g, i, mk,
-                              hp, lr);
-        }
-    }
-
-    fn step_runs(
+    fn step(
         &mut self,
         p: &mut [f32],
         g: &[f32],
@@ -124,10 +109,8 @@ impl Optimizer for SiftOptimizer {
         let hp = self.hp(bc1, bc2);
         let eff = runs.intersect_keep_scale(self.sel.runs());
         for r in eff.runs() {
-            for i in r.offset..r.end() {
-                dense_adamw_coord(&mut self.m, &mut self.v, p, g, i,
-                                  r.scale, hp, lr);
-            }
+            dense_adamw_run(&mut self.m, &mut self.v, p, g, r.offset,
+                            r.len, r.scale, hp, lr);
         }
     }
 
@@ -155,7 +138,7 @@ mod tests {
             g[i * 10] = 10.0 - i as f32; // 10 large coords
         }
         let mut p = vec![0.0f32; n];
-        opt.step(&mut p, &g, &Mask::ones(n), 0.1);
+        opt.step(&mut p, &g, Mask::ones(n).runs(), 0.1);
         assert_eq!(opt.selected(), 10);
         // only those ten moved
         let moved: Vec<usize> =
@@ -175,10 +158,10 @@ mod tests {
         let mut g2 = vec![0.0f32; n];
         g2[30] = 1.0;
         g2[31] = 1.0;
-        opt.step(&mut p, &g1, &Mask::ones(n), 0.1);
+        opt.step(&mut p, &g1, Mask::ones(n).runs(), 0.1);
         assert!(p[0] != 0.0);
         let p30_before = p[30];
-        opt.step(&mut p, &g2, &Mask::ones(n), 0.1);
+        opt.step(&mut p, &g2, Mask::ones(n).runs(), 0.1);
         assert!(p[30] != p30_before, "reselection failed");
     }
 
@@ -190,7 +173,7 @@ mod tests {
         let g = vec![1.0f32; n];
         let mut outer = Mask::zeros(n);
         outer.set_segment(0, 8, 1.0).unwrap();
-        opt.step(&mut p, &g, &outer, 0.1);
+        opt.step(&mut p, &g, outer.runs(), 0.1);
         assert!(p[..8].iter().all(|&x| x != 0.0));
         assert!(p[8..].iter().all(|&x| x == 0.0));
     }
@@ -202,7 +185,7 @@ mod tests {
         let mut opt = SiftOptimizer::new(n, total, 1.0, 1);
         let g = vec![1.0f32; n];
         let mut p = vec![0.0f32; n];
-        opt.step(&mut p, &g, &Mask::ones(n), 0.1);
+        opt.step(&mut p, &g, Mask::ones(n).runs(), 0.1);
         assert!(p[total..].iter().all(|&x| x == 0.0));
         assert_eq!(opt.selected(), total);
     }
@@ -214,12 +197,15 @@ mod tests {
         let mut rng = Rng::seed_from_u64(0);
         let g: Vec<f32> = (0..n).map(|_| rng.normal32()).collect();
         let mut p = vec![0.0f32; n];
-        opt.step(&mut p, &g, &Mask::ones(n), 0.01);
+        opt.step(&mut p, &g, Mask::ones(n).runs(), 0.01);
         assert_eq!(opt.state_bytes(), 100 * 8);
     }
 
     #[test]
-    fn step_runs_matches_dense_step_bitwise() {
+    fn runs_step_is_deterministic_across_instances() {
+        // Two independently constructed optimizers driven with the same
+        // inputs must stay bitwise identical — the selection and the
+        // intersection walk are both deterministic.
         let n = 200;
         let mut rng = Rng::seed_from_u64(1);
         let p0: Vec<f32> = (0..n).map(|_| rng.normal32()).collect();
@@ -231,8 +217,8 @@ mod tests {
         let mut or = SiftOptimizer::new(n, n, 0.2, 2);
         for _ in 0..5 {
             let g: Vec<f32> = (0..n).map(|_| rng.normal32()).collect();
-            od.step(&mut pd, &g, &mask, 0.01);
-            or.step_runs(&mut pr, &g, mask.runs(), 0.01);
+            od.step(&mut pd, &g, mask.runs(), 0.01);
+            or.step(&mut pr, &g, mask.runs(), 0.01);
         }
         assert!(
             pd.iter().zip(&pr).all(|(a, b)| a.to_bits() == b.to_bits())
@@ -251,13 +237,13 @@ mod tests {
         let mut g1 = vec![0.0f32; n];
         g1[0] = 1.0;
         g1[1] = 1.0;
-        opt.step(&mut p, &g1, &Mask::ones(n), 0.0); // lr 0: state only
+        opt.step(&mut p, &g1, Mask::ones(n).runs(), 0.0); // lr 0: state only
         let m0 = opt.m[0];
         assert!(m0 != 0.0);
         let mut g2 = vec![0.0f32; n];
         g2[6] = 1.0;
         g2[7] = 1.0;
-        opt.step(&mut p, &g2, &Mask::ones(n), 0.0); // coord 0 deselected
+        opt.step(&mut p, &g2, Mask::ones(n).runs(), 0.0); // coord 0 deselected
         assert_eq!(opt.m[0], m0, "dense state must survive deselection");
     }
 }

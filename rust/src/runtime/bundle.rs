@@ -4,17 +4,62 @@
 //! rust-owned device buffers → `execute_b`), which avoids both the
 //! literal-intermediate copy and the input-buffer leak of the crate's
 //! literal `execute` (see runtime/mod.rs).
+//!
+//! The fused masked-update entry points are runs-first:
+//! [`ModelBundle::adamw_update_runs`] / [`ModelBundle::sgdm_update_runs`]
+//! take the mask's `(offset, len, scale)` segment descriptors as plain
+//! triples (this layer sits below `coordinator` and must not import its
+//! types). The AOT Pallas kernels' ABI is fixed dense full-length
+//! operands (dense tiles through VMEM — there is no descriptor-indexed
+//! artifact), so the descriptors are expanded into a cached dense
+//! multiplier *once per distinct mask* (exact descriptor comparison
+//! guards reuse) and every subsequent step with the same mask is an
+//! O(runs) compare plus the kernel dispatch. The dense-slice entry
+//! points survive as the fallback behind the same signature discipline —
+//! callers holding only a dense vector (the reference mirrors' domain)
+//! can still dispatch.
 
 use super::{to_scalar_f32, to_vec_f32, Arg, Executable, Runtime};
 use crate::manifest::Manifest;
 use anyhow::{ensure, Context, Result};
 use std::path::Path;
+use std::sync::Mutex;
 
 /// Which optimizer-update artifact to load.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum UpdateKind {
     AdamW,
     Sgdm,
+}
+
+/// One mask segment descriptor: `(offset, len, scale)` over the flat
+/// padded parameter space (the wire form of `coordinator::Run`).
+pub type RunDesc = (usize, usize, f32);
+
+/// Cached dense-multiplier expansion for the runs-descriptor update
+/// entry points: the descriptor list it was built from (the exact reuse
+/// key) and the expanded vector. Steady state is an O(runs) key
+/// compare; the O(d) expansion happens only when the mask actually
+/// changed (period boundaries).
+#[derive(Default)]
+struct RunsScratch {
+    key: Vec<RunDesc>,
+    mask: Vec<f32>,
+}
+
+impl RunsScratch {
+    fn dense_multiplier(&mut self, n: usize, runs: &[RunDesc]) -> &[f32] {
+        if self.mask.len() != n || self.key != runs {
+            self.key.clear();
+            self.key.extend_from_slice(runs);
+            self.mask.clear();
+            self.mask.resize(n, 0.0);
+            for &(off, len, scale) in runs {
+                self.mask[off..off + len].fill(scale);
+            }
+        }
+        &self.mask
+    }
 }
 
 /// A loaded model: train / eval / fused-update executables + layout.
@@ -24,6 +69,7 @@ pub struct ModelBundle {
     pub eval: Executable,
     pub update: Executable,
     pub update_kind: UpdateKind,
+    runs_scratch: Mutex<RunsScratch>,
 }
 
 impl ModelBundle {
@@ -41,7 +87,14 @@ impl ModelBundle {
             UpdateKind::Sgdm => &man.update_sgdm_hlo,
         };
         let update = rt.load(&man.hlo_path(upd_file))?;
-        Ok(Self { man, train, eval, update, update_kind })
+        Ok(Self {
+            man,
+            train,
+            eval,
+            update,
+            update_kind,
+            runs_scratch: Mutex::new(RunsScratch::default()),
+        })
     }
 
     pub fn padded_len(&self) -> usize {
@@ -110,8 +163,65 @@ impl ModelBundle {
         Ok((to_scalar_f32(&out[0])?, to_scalar_f32(&out[1])?))
     }
 
+    /// Every descriptor must fit inside the flat space of length `n`.
+    fn check_descriptors(n: usize, runs: &[RunDesc]) -> Result<()> {
+        for &(off, len, scale) in runs {
+            let end = off.checked_add(len);
+            ensure!(
+                end.is_some_and(|e| e <= n) && scale != 0.0,
+                "bad mask descriptor ({off}, {len}, {scale}) over {n}"
+            );
+        }
+        Ok(())
+    }
+
+    /// Fused masked-AdamW update from `(offset, len, scale)` segment
+    /// descriptors: they are expanded into the cached dense multiplier
+    /// (only when the mask changed since the last call) and dispatched
+    /// to the same AOT kernel as [`ModelBundle::adamw_update`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn adamw_update_runs(
+        &self,
+        p: &mut Vec<f32>,
+        g: &[f32],
+        runs: &[RunDesc],
+        m: &mut Vec<f32>,
+        v: &mut Vec<f32>,
+        hp: &[f32; 8],
+    ) -> Result<()> {
+        Self::check_descriptors(p.len(), runs)?;
+        let mut scratch = self
+            .runs_scratch
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        let mask = scratch.dense_multiplier(p.len(), runs);
+        self.adamw_update(p, g, mask, m, v, hp)
+    }
+
+    /// Fused masked-SGDM update from segment descriptors (see
+    /// [`ModelBundle::adamw_update_runs`]).
+    pub fn sgdm_update_runs(
+        &self,
+        p: &mut Vec<f32>,
+        g: &[f32],
+        runs: &[RunDesc],
+        buf: &mut Vec<f32>,
+        hp: &[f32; 4],
+    ) -> Result<()> {
+        Self::check_descriptors(p.len(), runs)?;
+        let mut scratch = self
+            .runs_scratch
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        let mask = scratch.dense_multiplier(p.len(), runs);
+        self.sgdm_update(p, g, mask, buf, hp)
+    }
+
     /// Fused masked-AdamW update (the L1 Pallas kernel, AOT-compiled):
-    /// `(p, m, v) ← kernel(hp, p, g, mask, m, v)`.
+    /// `(p, m, v) ← kernel(hp, p, g, mask, m, v)`. Dense-multiplier
+    /// fallback — prefer [`ModelBundle::adamw_update_runs`]; callers
+    /// holding a [`crate::coordinator::Mask`] should feed this from
+    /// `dense_bridge()`.
     #[allow(clippy::too_many_arguments)]
     pub fn adamw_update(
         &self,
@@ -140,6 +250,8 @@ impl ModelBundle {
     }
 
     /// Fused masked-SGDM update: `(p, buf) ← kernel(hp, p, g, mask, buf)`.
+    /// Dense-multiplier fallback — prefer
+    /// [`ModelBundle::sgdm_update_runs`].
     pub fn sgdm_update(
         &self,
         p: &mut Vec<f32>,

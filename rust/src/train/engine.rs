@@ -6,16 +6,20 @@
 //! * HLO backend — the fused masked-update Pallas kernel via PJRT, used
 //!   by Full / mask / LISA methods (the paper's "plug-and-play into
 //!   mainstream optimizers" path — this IS the request-path hot loop).
-//!   The kernel consumes the mask's dense bridge and keeps full-length
-//!   `m`/`v` device-shaped buffers; its **native mirror**
+//!   Dispatch is runs-first: the mask's `(offset, len, scale)`
+//!   descriptors go to [`ModelBundle::adamw_update_runs`] /
+//!   [`sgdm_update_runs`](ModelBundle::sgdm_update_runs), which expand
+//!   them into the kernel's dense multiplier only when the mask actually
+//!   changed. No dense mask vector is materialized on the steady-state
+//!   step path (`omgd_mask_densify_total` stays 0). The kernel keeps
+//!   full-length `m`/`v` device-shaped buffers; its **native mirror**
 //!   ([`MethodEngine::apply_native`] — tests, benches, and the pure-rust
-//!   §5.1-style long runs) walks the mask's segment-run view instead,
-//!   so a native step costs O(active), never touching frozen
-//!   coordinates.
+//!   §5.1-style long runs) walks the same segment-run view, so a native
+//!   step costs O(active), never touching frozen coordinates.
 //! * native backend — GaLore/GoLore/SIFT baselines, whose projections
-//!   don't fit the fused elementwise kernel. Driven through
-//!   [`crate::optim::Optimizer::step_runs`]; period boundaries rebuild
-//!   their active-region index maps via `on_mask_refresh`.
+//!   don't fit the fused elementwise kernel. Driven through the
+//!   runs-first [`crate::optim::Optimizer::step`]; period boundaries
+//!   rebuild their active-region index maps via `on_mask_refresh`.
 
 use crate::config::{Method, OptFamily, RunConfig};
 use crate::coordinator::{LisaScheduler, LisaVariant, Mask, MaskRuns,
@@ -207,7 +211,9 @@ impl MethodEngine {
                     bc2,
                     0.0,
                 ];
-                bundle.adamw_update(p, g, mask.values(), m, v, &hp)
+                bundle.adamw_update_runs(
+                    p, g, &mask.runs().descriptors(), m, v, &hp,
+                )
             }
             Backend::HloSgdm { buf } => {
                 ensure!(bundle.update_kind == UpdateKind::Sgdm,
@@ -218,10 +224,12 @@ impl MethodEngine {
                     opt.weight_decay as f32,
                     if opt.nesterov { 1.0 } else { 0.0 },
                 ];
-                bundle.sgdm_update(p, g, mask.values(), buf, &hp)
+                bundle.sgdm_update_runs(
+                    p, g, &mask.runs().descriptors(), buf, &hp,
+                )
             }
             Backend::Native(o) => {
-                o.step_runs(p, g, mask.runs(), lr);
+                o.step(p, g, mask.runs(), lr);
                 Ok(())
             }
         };
@@ -271,7 +279,7 @@ impl MethodEngine {
                     }
                 }
             }
-            Backend::Native(o) => o.step_runs(p, g, mask.runs(), lr),
+            Backend::Native(o) => o.step(p, g, mask.runs(), lr),
         }
         obs::STEP_SECONDS.observe(t.total());
     }
@@ -589,7 +597,7 @@ mod tests {
             MethodEngine::new(&man, &cfg_with(Method::Full), &mut rng)
                 .unwrap();
         assert_eq!(eng.mask().active_count(), 20);
-        assert!(eng.mask().values()[20..].iter().all(|&v| v == 0.0));
+        assert!(eng.mask().dense_bridge()[20..].iter().all(|&v| v == 0.0));
         // the run view is the single segment over the real params
         assert_eq!(eng.runs().runs().len(), 1);
         assert_eq!(eng.runs().active_count(), 20);
@@ -605,7 +613,7 @@ mod tests {
         let mut active_union = vec![false; 24];
         for _ in 0..3 {
             eng.on_period(&mut rng).unwrap();
-            for (i, &v) in eng.mask().values().iter().enumerate() {
+            for (i, &v) in eng.mask().dense_bridge().iter().enumerate() {
                 if v != 0.0 {
                     active_union[i] = true;
                 }
@@ -613,7 +621,7 @@ mod tests {
             // exactly embed + head + 1 middle layer active
             assert_eq!(eng.mask().active_count(), 12);
             // middle scale = N_L/γ = 3
-            let mid_scales: Vec<f32> = eng.mask().values()[4..16]
+            let mid_scales: Vec<f32> = eng.mask().dense_bridge()[4..16]
                 .iter()
                 .cloned()
                 .filter(|&v| v != 0.0)
@@ -633,7 +641,7 @@ mod tests {
         )
         .unwrap();
         eng.on_period(&mut rng).unwrap();
-        assert!(eng.mask().values().iter()
+        assert!(eng.mask().dense_bridge().iter()
             .all(|&v| v == 0.0 || v == 1.0));
     }
 
@@ -648,7 +656,7 @@ mod tests {
         for _ in 0..2 {
             // one cycle = M = 2 periods
             eng.on_period(&mut rng).unwrap();
-            for (s, &v) in sum.iter_mut().zip(eng.mask().values()) {
+            for (s, &v) in sum.iter_mut().zip(eng.mask().dense_bridge()) {
                 *s += v;
             }
         }
@@ -669,11 +677,11 @@ mod tests {
         for _ in 0..12 {
             eng.on_period(&mut rng).unwrap();
             distinct.insert(
-                eng.mask()
-                    .values()
+                eng.runs()
+                    .runs()
                     .iter()
-                    .map(|&v| v != 0.0)
-                    .collect::<Vec<bool>>(),
+                    .map(|r| (r.offset, r.len))
+                    .collect::<Vec<(usize, usize)>>(),
             );
         }
         assert!(distinct.len() > 1, "iid mask never changed");
@@ -827,7 +835,7 @@ mod tests {
         let mut pd = p0.clone();
         let mut dense =
             crate::optim::reference::DenseAdamW::default_hp(n);
-        dense.step(&mut pd, &g, eng.mask().values(), 1e-3);
+        dense.step(&mut pd, &g, eng.mask().dense_bridge(), 1e-3);
         for i in 0..n {
             assert_eq!(p[i].to_bits(), pd[i].to_bits(), "coord {i}");
             if eng.mask().value(i) == 0.0 {

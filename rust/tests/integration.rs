@@ -107,9 +107,10 @@ fn hlo_adamw_update_matches_native_mirror() {
         let bc2 = 1.0 - 0.999f32.powi(step as i32);
         let hp = [1e-3, 0.9, 0.999, 1e-8, 0.01, bc1, bc2, 0.0];
         bundle
-            .adamw_update(&mut ph, &g, mask.values(), &mut mh, &mut vh, &hp)
+            .adamw_update_runs(&mut ph, &g, &mask.runs().descriptors(),
+                               &mut mh, &mut vh, &hp)
             .unwrap();
-        nat.step(&mut pn, &g, &mask, 1e-3);
+        nat.step(&mut pn, &g, mask.runs(), 1e-3);
     }
     let max_dp = ph
         .iter()
@@ -150,9 +151,10 @@ fn hlo_sgdm_update_matches_native_mirror() {
     let hp = [0.05f32, 0.9, 1e-4, 1.0];
     for _ in 0..3 {
         bundle
-            .sgdm_update(&mut ph, &g, mask.values(), &mut bh, &hp)
+            .sgdm_update_runs(&mut ph, &g, &mask.runs().descriptors(),
+                              &mut bh, &hp)
             .unwrap();
-        nat.step(&mut pn, &g, &mask, 0.05);
+        nat.step(&mut pn, &g, mask.runs(), 0.05);
     }
     let max_dp = ph
         .iter()
@@ -179,13 +181,59 @@ fn frozen_coordinates_are_bit_identical_through_hlo() {
         (p0.clone(), vec![0.0f32; n], vec![0.0f32; n]);
     let hp = [1e-2f32, 0.9, 0.999, 1e-8, 0.01, 0.1, 0.001, 0.0];
     bundle
-        .adamw_update(&mut p, &g, mask.values(), &mut m, &mut v, &hp)
+        .adamw_update(&mut p, &g, mask.dense_bridge(), &mut m, &mut v,
+                      &hp)
         .unwrap();
     // frozen half: bit-identical params, zero moments
     assert_eq!(&p[n / 2..], &p0[n / 2..]);
     assert!(m[n / 2..].iter().all(|&x| x == 0.0));
     // active half: every coordinate moved
     assert!(p[..n / 2].iter().zip(&p0[..n / 2]).all(|(a, b)| a != b));
+}
+
+#[test]
+fn hlo_runs_descriptor_path_matches_dense_fallback_bitwise() {
+    // Tentpole contract: the runs-descriptor entry expands into exactly
+    // the multiplier the dense fallback is handed, so the same kernel
+    // sees identical operands — outputs must match to the bit, across
+    // mask changes (scratch-cache invalidation included).
+    if !have("mlp-glue") {
+        return;
+    }
+    let rt = rt();
+    let bundle = load_bundle(&rt, "mlp-glue").unwrap();
+    let n = bundle.padded_len();
+    let mut rng = Rng::seed_from_u64(4);
+    let p0: Vec<f32> = (0..n).map(|_| rng.normal32() * 0.1).collect();
+    let g: Vec<f32> = (0..n).map(|_| rng.normal32()).collect();
+    let mut mask = Mask::zeros(n);
+    mask.set_segment(0, n / 2, 2.0).unwrap();
+    let (mut pr, mut mr, mut vr) =
+        (p0.clone(), vec![0.0f32; n], vec![0.0f32; n]);
+    let (mut pd, mut md, mut vd) =
+        (p0, vec![0.0f32; n], vec![0.0f32; n]);
+    for step in 1..=4u64 {
+        if step == 3 {
+            // mid-sequence mask change: the descriptor cache must
+            // re-expand, not serve the stale multiplier
+            mask.set_segment(0, n / 4, 0.0).unwrap();
+            mask.set_segment(n / 2, n / 4, 0.5).unwrap();
+        }
+        let bc1 = 1.0 - 0.9f32.powi(step as i32);
+        let bc2 = 1.0 - 0.999f32.powi(step as i32);
+        let hp = [1e-3, 0.9, 0.999, 1e-8, 0.01, bc1, bc2, 0.0];
+        bundle
+            .adamw_update_runs(&mut pr, &g, &mask.runs().descriptors(),
+                               &mut mr, &mut vr, &hp)
+            .unwrap();
+        bundle
+            .adamw_update(&mut pd, &g, mask.dense_bridge(), &mut md,
+                          &mut vd, &hp)
+            .unwrap();
+    }
+    assert!(pr.iter().zip(&pd).all(|(a, b)| a.to_bits() == b.to_bits()));
+    assert!(mr.iter().zip(&md).all(|(a, b)| a.to_bits() == b.to_bits()));
+    assert!(vr.iter().zip(&vd).all(|(a, b)| a.to_bits() == b.to_bits()));
 }
 
 // -------------------------------------------------------------------------

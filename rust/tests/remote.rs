@@ -974,7 +974,7 @@ fn remote_reports_aggregate_like_local_ones() {
         rep.mean_metric_by(|r| r.spec.cfg.method.name().to_string());
     assert_eq!(by.len(), 1);
     // seeds 0..4 → metrics 0.5,1.5,2.5,3.5 → mean 2.0
-    assert!((by.values().next().unwrap() - 2.0).abs() < 1e-12);
+    assert!((by.iter().next().unwrap().1 - 2.0).abs() < 1e-12);
 }
 
 /// A tiny controllable TCP relay between a worker and the gateway.
