@@ -10,10 +10,10 @@
 #        OMGD_BENCH_SCALE=1 ./ci.sh   # paper-shaped runtimes
 #        OMGD_CI_SKIP_SMOKE=1 ./ci.sh # skip the distributed smoke
 set -euo pipefail
-cd "$(dirname "$0")/rust"
+cd "$(dirname "$0")"
 
 # Self-describing CI logs: the toolchain is pinned by
-# ../rust-toolchain.toml, so print what actually resolved.
+# rust-toolchain.toml, so print what actually resolved.
 echo "== toolchain"
 rustc --version
 cargo --version
@@ -26,18 +26,42 @@ export OMGD_BENCH_SCALE="${OMGD_BENCH_SCALE:-0.05}"
 export OMGD_WORKERS="${OMGD_WORKERS:-1}"
 
 echo "== cargo fmt --check"
-cargo fmt --check
+cargo fmt --all --check
 
-echo "== cargo clippy -D warnings"
-cargo clippy --all-targets -- -D warnings
+echo "== cargo clippy --workspace -D warnings"
+cargo clippy --workspace --all-targets -- -D warnings
 
 # Rustdoc rot (broken intra-doc links, bad code fences) fails the
 # build: the docs/ handbook leans on `cargo doc` staying truthful.
-echo "== cargo doc --no-deps (rustdoc warnings denied)"
-RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+# Per-crate so one crate's breakage names itself in the log.
+for crate in omgd-util omgd-core omgd-jobs omgd-train omgd; do
+  echo "== cargo doc --no-deps -p $crate (rustdoc warnings denied)"
+  RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet -p "$crate"
+done
 
-echo "== cargo test (OMGD_BENCH_SCALE=$OMGD_BENCH_SCALE)"
-cargo test -q
+echo "== cargo test --workspace (OMGD_BENCH_SCALE=$OMGD_BENCH_SCALE)"
+cargo test -q --workspace
+
+# ---------------------------------------------------------------------
+# Layering guard: omgd-core is the numerics layer — it must never grow
+# a dependency on the job/network layer. Two teeth: the dependency
+# graph (cargo tree) and a source grep for network types, so neither a
+# manifest edit nor a sneaky `std::net` import slips through.
+# ---------------------------------------------------------------------
+echo "== layering guard: omgd-core stays free of jobs/network code"
+if cargo tree -p omgd-core -e normal --prefix none 2>/dev/null \
+    | grep -q '^omgd-jobs'; then
+  echo "layering guard FAILED: omgd-core depends on omgd-jobs" >&2
+  exit 1
+fi
+if LEAKS=$(grep -rnE 'omgd_jobs|std::net|TcpListener|TcpStream' \
+        rust/crates/omgd-core/src --include='*.rs'); then
+  echo "layering guard FAILED: jobs/network references inside" \
+       "omgd-core:" >&2
+  echo "$LEAKS" >&2
+  exit 1
+fi
+echo "   clean (omgd-core sees neither omgd-jobs nor the network)"
 
 # ---------------------------------------------------------------------
 # Mask-API surface guard: the dense vector is a lazy, explicitly
@@ -47,9 +71,9 @@ cargo test -q
 # the gate.
 # ---------------------------------------------------------------------
 echo "== mask-API guard: no dense mask access outside sanctioned files"
-if LEAKS=$(grep -rnE '\.values\(\)|\.to_dense\(' src tests benches \
+if LEAKS=$(grep -rnE '\.values\(\)|\.to_dense\(' rust/crates examples \
         --include='*.rs' \
-    | grep -vE '^(src/coordinator/mask\.rs|src/optim/reference\.rs):'); then
+    | grep -vE '^rust/crates/omgd-core/src/(coordinator/mask\.rs|optim/reference\.rs):'); then
   echo "mask-API guard FAILED: dense mask access outside" \
        "coordinator/mask.rs and optim/reference.rs:" >&2
   echo "$LEAKS" >&2
@@ -77,29 +101,29 @@ else
   echo "== mask-runs microbench (keep sweep {0.05,0.25,1.0} + refresh)"
   cargo build -q --release --bin omgd
   target/release/omgd microbench --keep 0.25 \
-      --out ../BENCH_maskruns.json
+      --out BENCH_maskruns.json
 
   # Bench trajectory: file this run's point under its git revision
   # (the row itself is stamped with rev/scale/workers/unix_secs by the
   # binary) and compare per-step runs-path time against the most
   # recent prior point on record. A >2x regression fails the gate —
   # that is the enforcement teeth, not just a log line.
-  REV=$(git -C .. rev-parse --short HEAD 2>/dev/null || echo unknown)
+  REV=$(git rev-parse --short HEAD 2>/dev/null || echo unknown)
   PREV_FILE=""
   best_ts=0
-  for f in ../BENCH_*.json; do
+  for f in BENCH_*.json; do
     [[ -e "$f" ]] || continue
-    [[ "$f" == ../BENCH_maskruns.json ]] && continue
-    [[ "$f" == "../BENCH_${REV}.json" ]] && continue
+    [[ "$f" == BENCH_maskruns.json ]] && continue
+    [[ "$f" == "BENCH_${REV}.json" ]] && continue
     ts=$(num_field "$f" unix_secs)
     [[ -z "$ts" ]] && continue   # pre-metadata point: not comparable
     if (( ts > best_ts )); then best_ts=$ts; PREV_FILE="$f"; fi
   done
-  cp ../BENCH_maskruns.json "../BENCH_${REV}.json"
+  cp BENCH_maskruns.json "BENCH_${REV}.json"
   echo "   filed bench point BENCH_${REV}.json"
   if [[ -n "$PREV_FILE" ]]; then
-    NEW_PS=$(awk -v s="$(num_field ../BENCH_maskruns.json runs_secs)" \
-                 -v n="$(num_field ../BENCH_maskruns.json steps)" \
+    NEW_PS=$(awk -v s="$(num_field BENCH_maskruns.json runs_secs)" \
+                 -v n="$(num_field BENCH_maskruns.json steps)" \
                  'BEGIN { printf "%.9g", s / n }')
     OLD_PS=$(awk -v s="$(num_field "$PREV_FILE" runs_secs)" \
                  -v n="$(num_field "$PREV_FILE" steps)" \
@@ -114,8 +138,8 @@ else
     fi
     # Refresh stage rides the same >2x gate once both points carry it
     # (older bench rows predate the stage and are skipped).
-    NEW_RS=$(num_field ../BENCH_maskruns.json refresh_secs)
-    NEW_RN=$(num_field ../BENCH_maskruns.json refreshes)
+    NEW_RS=$(num_field BENCH_maskruns.json refresh_secs)
+    NEW_RN=$(num_field BENCH_maskruns.json refreshes)
     OLD_RS=$(num_field "$PREV_FILE" refresh_secs)
     OLD_RN=$(num_field "$PREV_FILE" refreshes)
     if [[ -n "$NEW_RS" && -n "$NEW_RN" && -n "$OLD_RS" && -n "$OLD_RN" ]]
@@ -178,8 +202,12 @@ else
   GRID_B=(--kind finetune --tasks CoLA --methods lisa-wor
           --seeds 0,1 --epochs 1)
 
+  # The gateway runs with bearer auth so the smoke drives the token
+  # path on every hop: worker leases, grid submission, and the final
+  # authenticated /shutdown. Probe endpoints stay open (checked below).
+  AUTH=ci-secret-token
   "$BIN" serve --listen 127.0.0.1:0 --workers 0 --poll-secs 2 \
-      --client-quota 4 \
+      --client-quota 4 --auth-token "$AUTH" \
       --cache-dir "$SMOKE/gateway-cache" 2> "$SMOKE/serve.log" &
   SERVE_PID=$!
   ADDR=""
@@ -197,16 +225,34 @@ else
   echo "   gateway on $ADDR"
 
   "$BIN" worker --connect "$ADDR" --workers 2 --id ci-smoke \
+      --token "$AUTH" \
       --cache-dir "$SMOKE/worker-cache" \
       --artifact-store "$SMOKE/worker-store" 2> "$SMOKE/worker.log" &
   WORKER_PID=$!
 
+  # Auth teeth: a tokenless submission must bounce with 401 before the
+  # authenticated runs go through.
+  if "$BIN" grid --remote "$ADDR" --client ci-x "${GRID_A[@]}" \
+      > "$SMOKE/unauth.log" 2>&1; then
+    echo "auth smoke FAILED: tokenless grid submission succeeded" >&2
+    cat "$SMOKE/unauth.log" >&2
+    exit 1
+  fi
+  if ! grep -q '401' "$SMOKE/unauth.log"; then
+    echo "auth smoke FAILED: tokenless submission failed without a 401" >&2
+    cat "$SMOKE/unauth.log" >&2
+    exit 1
+  fi
+  echo "   auth smoke: tokenless submission refused with 401"
+
   # Remote runs, one per client token (cells fail without artifacts →
   # non-zero exit; the CSV aggregates are still written and are what
   # the smoke checks).
-  "$BIN" grid --remote "$ADDR" --client ci-a "${GRID_A[@]}" \
+  "$BIN" grid --remote "$ADDR" --client ci-a --token "$AUTH" \
+      "${GRID_A[@]}" \
       --out "$SMOKE/remote-a.csv" > "$SMOKE/remote-a.log" 2>&1 || true
-  "$BIN" grid --remote "$ADDR" --client ci-b "${GRID_B[@]}" \
+  "$BIN" grid --remote "$ADDR" --client ci-b --token "$AUTH" \
+      "${GRID_B[@]}" \
       --out "$SMOKE/remote-b.csv" > "$SMOKE/remote-b.log" 2>&1 || true
   # Local-pool runs of the identical splits, isolated cache.
   "$BIN" grid "${GRID_A[@]}" --workers 1 \
@@ -293,9 +339,18 @@ else
   echo "   telemetry smoke passed ($FAMILIES metric families;" \
        "/metrics agrees with /stats; $JR journal records)"
 
-  # Drain the gateway and let the worker notice and exit on its own.
+  # A tokenless shutdown must bounce too (the gateway keeps serving),
+  # then the authenticated one drains it and the worker exits on its
+  # own.
   exec 3<>"/dev/tcp/$HOST/$PORT"
   printf 'POST /shutdown HTTP/1.1\r\nHost: ci\r\nContent-Length: 0\r\nConnection: close\r\n\r\n' >&3
+  if ! head -n1 <&3 | grep -q ' 401 '; then
+    echo "auth smoke FAILED: tokenless /shutdown was not a 401" >&2
+    exit 1
+  fi
+  exec 3>&- || true
+  exec 3<>"/dev/tcp/$HOST/$PORT"
+  printf 'POST /shutdown HTTP/1.1\r\nHost: ci\r\nAuthorization: Bearer %s\r\nContent-Length: 0\r\nConnection: close\r\n\r\n' "$AUTH" >&3
   cat <&3 > /dev/null || true
   exec 3>&- || true
   wait "$SERVE_PID" || true

@@ -1,0 +1,28 @@
+//! # omgd-core — OMGD numerics
+//!
+//! The paper's algorithms with no orchestration attached: Algorithm 1's
+//! `[M]×[N]` without-replacement mask traversal ([`coordinator`]),
+//! runs-first native optimizers with active-region-only moment state
+//! ([`optim`]), dense linear algebra and Stiefel sampling ([`linalg`]),
+//! deterministic RNG ([`rng`]), the analytic memory model ([`memory`]),
+//! data pipelines ([`data`]), the PJRT runtime bridge ([`runtime`]),
+//! and the in-repo property-testing harness ([`prop`]).
+//!
+//! Layering contract (enforced by ci.sh's core-dependency guard):
+//! omgd-core depends only on `omgd-util` and must never depend on
+//! `omgd-jobs` or touch network code. Job orchestration builds on the
+//! numerics, never the reverse.
+
+pub mod coordinator;
+pub mod data;
+pub mod linalg;
+pub mod memory;
+pub mod optim;
+pub mod prop;
+pub mod rng;
+pub mod runtime;
+
+// Path-compatibility aliases: files moved here from the monolithic
+// crate keep referring to `crate::util::json`, `crate::manifest`,
+// `crate::obs`, ... — resolve those through the util layer.
+pub use omgd_util::{bench, cli, config, manifest, metrics, obs, util};

@@ -40,7 +40,7 @@
 use super::pool::JobOutcome;
 use super::spec::JobSpec;
 use crate::obs;
-use crate::train::checkpoint::Checkpoint;
+use omgd_util::checkpoint::Checkpoint;
 use crate::util::json::Json;
 use anyhow::{Context, Result};
 use std::collections::HashSet;
@@ -578,7 +578,7 @@ use crate::util::json::{escape_str as esc, ser_f64 as ser_f};
 mod tests {
     use super::*;
     use crate::config::RunConfig;
-    use crate::jobs::spec::ExperimentKind;
+    use crate::spec::ExperimentKind;
 
     fn tmp_cache(tag: &str) -> ResultCache {
         let dir = std::env::temp_dir()

@@ -36,7 +36,7 @@
 //! [`JobHub`]: super::serve::JobHub
 
 use super::pool::{JobResult, JobStatus};
-use super::serve::lock_recover;
+use omgd_util::lock_recover;
 use super::spec::{fnv1a64, JobSpec};
 use crate::obs;
 use crate::util::json::{escape_str as esc, ser_f64 as ser_f, Json};
@@ -423,8 +423,8 @@ impl JobJournal {
 mod tests {
     use super::*;
     use crate::config::RunConfig;
-    use crate::jobs::pool::JobOutcome;
-    use crate::jobs::spec::ExperimentKind;
+    use crate::pool::JobOutcome;
+    use crate::spec::ExperimentKind;
 
     fn tmp_dir(tag: &str) -> PathBuf {
         let d = std::env::temp_dir().join(format!(

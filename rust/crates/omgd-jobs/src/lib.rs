@@ -1,0 +1,359 @@
+//! Async job orchestration: grids of training runs as schedulable work.
+//!
+//! The paper's sweeps (Tables 3/5/6, Fig. 5) are embarrassingly parallel
+//! across methods × seeds × keep-ratios — every cell is one
+//! [`JobSpec`]. This subsystem turns the repo's one-run-per-process
+//! entry points into a schedulable system:
+//!
+//! * [`spec`] — [`JobSpec`] (experiment kind + `RunConfig` + seed) with
+//!   a stable content hash;
+//! * [`queue`] — bounded MPMC priority queue with cancellation;
+//! * [`pool`] — `std::thread` worker pool, one PJRT runtime per worker,
+//!   panic isolation per job;
+//! * [`cache`] — on-disk result cache keyed by spec hash (`--force`
+//!   invalidates; age/size GC via [`cache::GcPolicy`], run at open and
+//!   as `omgd cache-gc`);
+//! * [`journal`] — crash-safe write-ahead job journal (`journal.log`
+//!   under the cache dir): fsynced admission/lease/completion records,
+//!   replayed by `omgd serve` at startup so queued work and completed
+//!   results survive a coordinator crash;
+//! * [`report`] — aggregation into [`crate::bench::TablePrinter`] /
+//!   [`crate::metrics::CsvWriter`] sinks;
+//! * [`serve`] — transport-agnostic JSONL sessions multiplexed over a
+//!   shared [`serve::JobHub`] (queue + worker pool + result routing);
+//! * [`net`] — HTTP/1.1 gateway (`omgd serve --listen`): N concurrent
+//!   connections share one hub, with `429` backpressure (global queue
+//!   saturation + per-client `X-OMGD-Client` quotas), HTTP keep-alive
+//!   (chunked `POST /jobs` streams), and graceful drain;
+//! * [`remote`] — distributed execution over the gateway: the
+//!   `omgd worker --connect` pull agent (lease → sync → run → report)
+//!   and the `omgd grid --remote` submission client;
+//! * [`sync`] — content-addressed artifact sync (frame format +
+//!   worker-side [`sync::ArtifactStore`]), keyed by
+//!   [`artifact_fingerprint`].
+//!
+//! * [`lifecycle`] — the transition authority every job/lease/session
+//!   state mutation in this crate routes through: one totalized
+//!   `(state, event)` match, typed errors for every illegal move.
+//!
+//! Front-ends: `omgd grid` (local pool or `--remote` gateway),
+//! `omgd serve` (stdin or `--listen`), `omgd worker`, and
+//! `omgd cache-gc` (see `main.rs`), plus the Table 3/5/6 bench
+//! binaries, which submit grids built by the experiment drivers in
+//! `omgd-train`.
+//!
+//! Layering: this crate never sees the training engine. Execution is
+//! abstracted behind [`JobExecutor`]; `omgd-train::runner` provides
+//! the trainer-backed executor and the concrete `run_grid`/`serve`/
+//! `serve_listen`/`run_worker` entry points, which the `omgd` facade
+//! re-exports under the historical `omgd::jobs::*` paths.
+
+pub mod cache;
+pub mod journal;
+pub mod lifecycle;
+pub mod net;
+pub mod pool;
+pub mod queue;
+pub mod remote;
+pub mod report;
+pub mod serve;
+pub mod spec;
+pub mod sync;
+
+pub use cache::{
+    CacheStats, GcPolicy, GcStats, ResultCache, DEFAULT_CACHE_DIR,
+};
+pub use journal::{JobJournal, PendingJob, Record, Replay};
+pub use lifecycle::{
+    ClientLedger, GatewayPhase, JobEvent, JobState, Lifecycle, PhaseCell,
+    TransitionError, WorkerLeases,
+};
+pub use net::{run_gateway, serve_listen_with, GatewayStats, ListenOptions};
+pub use pool::{run_pool, JobOutcome, JobResult, JobStatus};
+pub use queue::{Job, JobQueue, PopScan, PopTimeout, TryPush};
+pub use remote::{
+    gateway_get, run_grid_remote, run_grid_remote_auth, run_worker_with,
+    WorkerOptions, WorkerStats,
+};
+pub use report::GridReport;
+pub use serve::{
+    JobHub, LeaseInfo, LeaseReply, PhaseSecs, RemoteDone, RemoteStats,
+    ResultLookup, ServeStats, SessionOptions,
+};
+pub use spec::{ExperimentKind, JobSpec};
+pub use sync::{ArtifactStore, DEFAULT_STORE_DIR};
+
+// Path-compatibility aliases: files moved here from the monolithic
+// crate keep their historical `crate::config`, `crate::obs`,
+// `crate::data`, ... paths and resolve them through the lower layers.
+pub use omgd_core::{data, runtime};
+pub use omgd_util::{bench, cli, config, manifest, metrics, obs, util};
+
+use crate::config::RunConfig;
+use crate::runtime::artifacts_dir;
+use anyhow::Result;
+use std::path::PathBuf;
+
+/// Options shared by `omgd grid`, `omgd serve`, and the bench drivers.
+#[derive(Clone, Debug)]
+pub struct GridOptions {
+    /// Worker threads; each owns its own PJRT runtime + bundle cache.
+    pub workers: usize,
+    /// Invalidate and recompute cached cells.
+    pub force: bool,
+    /// Cache directory override (default [`DEFAULT_CACHE_DIR`]).
+    pub cache_dir: Option<String>,
+    /// Cache GC policy, run once at cache open (default: no-op).
+    pub gc: GcPolicy,
+}
+
+impl Default for GridOptions {
+    fn default() -> Self {
+        Self {
+            workers: 1,
+            force: false,
+            cache_dir: None,
+            gc: GcPolicy::default(),
+        }
+    }
+}
+
+/// `OMGD_FORCE` env override for the bench drivers: truthy values only
+/// (`1`/`true`/`yes`), matching [`crate::cli::Args::bool`] — a merely
+/// *present* `OMGD_FORCE=0` must not blow the cache away.
+pub fn force_from_env() -> bool {
+    matches!(
+        std::env::var("OMGD_FORCE").ok().as_deref(),
+        Some("1") | Some("true") | Some("yes")
+    )
+}
+
+/// Worker-count default: `OMGD_WORKERS` env override, else available
+/// parallelism clamped to 4 (each worker compiles its own executables,
+/// so memory — not cores — is the practical ceiling).
+pub fn default_workers() -> usize {
+    if let Some(n) = std::env::var("OMGD_WORKERS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+    {
+        return n;
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .clamp(1, 4)
+}
+
+/// The execution seam between the job layer and whatever actually
+/// runs a spec. `omgd-jobs` schedules, caches, journals, leases, and
+/// routes jobs without ever seeing the training engine; the engine
+/// (`omgd-train::runner::SpecRunner`) plugs in here. Tests plug in
+/// stubs via [`FnExecutor`].
+pub trait JobExecutor {
+    /// Execute one spec to completion. Implementations may keep
+    /// per-worker state (runtimes, bundle caches) across calls.
+    fn execute(&mut self, spec: &JobSpec) -> Result<JobOutcome>;
+}
+
+/// Closure adapter for [`JobExecutor`] (a blanket `impl for F: FnMut`
+/// would forbid downstream executor types by coherence).
+pub struct FnExecutor<F>(pub F);
+
+impl<F> JobExecutor for FnExecutor<F>
+where
+    F: FnMut(&JobSpec) -> Result<JobOutcome>,
+{
+    fn execute(&mut self, spec: &JobSpec) -> Result<JobOutcome> {
+        (self.0)(spec)
+    }
+}
+
+/// Run a grid of specs to completion over `make_exec`-built executors:
+/// enqueue all cells, shard them across `opts.workers` threads, reuse
+/// cached results unless `opts.force`, and return the
+/// (submission-ordered) report. The trainer-backed wrapper is
+/// `omgd-train::runner::run_grid` (re-exported as
+/// `omgd::jobs::run_grid`).
+pub fn run_grid_with<E, M>(
+    specs: Vec<JobSpec>,
+    opts: &GridOptions,
+    make_exec: M,
+) -> Result<GridReport>
+where
+    E: JobExecutor,
+    M: Fn(usize) -> E + Sync,
+{
+    let cache = open_cache(opts)?;
+    let queue = JobQueue::bounded(specs.len().max(1));
+    for s in specs {
+        queue.push(s, 0)?;
+    }
+    queue.close();
+    // Per-cell progress to stderr as workers finish — a paper-shaped
+    // grid runs for hours, and silence is indistinguishable from a hung
+    // runtime. (Panicked cells get no line here; the report's failure
+    // summary covers them.)
+    let results = run_pool(&queue, opts.workers, |wid| {
+        let mut inner = cached_runner_with(&cache, opts.force, make_exec(wid));
+        move |spec: &JobSpec| {
+            let r = inner(spec);
+            match &r {
+                Ok((_, true)) => eprintln!("  [cache] {}", spec.label()),
+                Ok((_, false)) => eprintln!("  [done ] {}", spec.label()),
+                Err(e) => {
+                    eprintln!("  [fail ] {}: {e:#}", spec.label())
+                }
+            }
+            r
+        }
+    });
+    Ok(GridReport::new(results))
+}
+
+/// Open the result cache, run the configured GC policy once, and
+/// report evictions to stderr — the shared open path for every
+/// front-end (grid, serve, gateway).
+pub fn open_cache(opts: &GridOptions) -> Result<ResultCache> {
+    let (cache, gc) =
+        ResultCache::open_with(opts.cache_dir.as_deref(), &opts.gc)?;
+    report_gc(&gc);
+    Ok(cache)
+}
+
+/// One shared eviction report, so the at-open and periodic GC paths
+/// cannot drift apart.
+pub fn report_gc(st: &GcStats) {
+    if st.evicted > 0 {
+        eprintln!(
+            "cache gc: evicted {} entries ({} bytes)",
+            st.evicted, st.evicted_bytes
+        );
+    }
+}
+
+/// The production worker function around an arbitrary executor:
+/// consult the cache, else execute the spec, then persist the fresh
+/// outcome. Returns `(outcome, from_cache)`. The trainer-backed
+/// wrapper is `omgd-train::runner::cached_runner`.
+pub fn cached_runner_with<'a, E: JobExecutor + 'a>(
+    cache: &'a ResultCache,
+    force: bool,
+    mut exec: E,
+) -> impl FnMut(&JobSpec) -> Result<(JobOutcome, bool)> + 'a {
+    move |spec| {
+        let afp = artifact_fingerprint(&spec.cfg);
+        if force {
+            cache.invalidate(spec);
+        } else if let Some(out) = cache.get(spec, &afp) {
+            return Ok((out, true));
+        }
+        let out = exec.execute(spec)?;
+        // The cache is best-effort: a full disk or read-only cache dir
+        // must not discard an outcome that already cost a training run.
+        if let Err(e) = cache.put(spec, &afp, &out) {
+            eprintln!(
+                "warning: cache write failed for {} ({}): {e:#}",
+                spec.label(),
+                spec.hash_hex()
+            );
+        }
+        Ok((out, false))
+    }
+}
+
+/// Fingerprint of the on-disk artifact files backing `cfg.model`
+/// (`<model>.*`: manifest, HLO texts, init dump): FNV over sorted
+/// (name, size, mtime) triples. Part of the cache-entry identity, so
+/// regenerating artifacts under the same model name invalidates cached
+/// cells instead of silently replaying pre-regeneration results.
+/// mtime-based, so an identical regeneration also misses — conservative
+/// in the safe direction.
+///
+/// The fingerprint is also the content address of artifact sync
+/// ([`sync`] / `GET /artifacts/<fp>`): a remote worker caches synced
+/// artifact sets — and its results — under the *gateway's* fingerprint,
+/// so both ends key their caches identically.
+pub fn artifact_fingerprint(cfg: &RunConfig) -> String {
+    artifact_fingerprint_at(&resolve_artifacts(&cfg.artifacts_dir), &cfg.model)
+}
+
+/// [`artifact_fingerprint`] with the directory already resolved — the
+/// shape `GET /artifacts/<fp>` uses to re-verify a fingerprint against
+/// the current on-disk state before packing.
+pub(crate) fn artifact_fingerprint_at(
+    dir: &std::path::Path,
+    model: &str,
+) -> String {
+    let prefix = format!("{model}.");
+    let mut entries: Vec<String> = match std::fs::read_dir(dir) {
+        Err(_) => return "absent".to_string(),
+        Ok(rd) => rd
+            .filter_map(|e| e.ok())
+            .filter(|e| {
+                e.file_name().to_string_lossy().starts_with(&prefix)
+            })
+            .filter_map(|e| {
+                let meta = e.metadata().ok()?;
+                let mtime = meta
+                    .modified()
+                    .ok()?
+                    .duration_since(std::time::UNIX_EPOCH)
+                    .ok()?;
+                Some(format!(
+                    "{}:{}:{}.{:09}",
+                    e.file_name().to_string_lossy(),
+                    meta.len(),
+                    mtime.as_secs(),
+                    mtime.subsec_nanos()
+                ))
+            })
+            .collect(),
+    };
+    if entries.is_empty() {
+        return "absent".to_string();
+    }
+    entries.sort();
+    format!("{:016x}", spec::fnv1a64(entries.join(";").as_bytes()))
+}
+
+/// An explicitly-configured artifacts dir is honored verbatim (a typo'd
+/// path then fails loudly in the executor's existence check, naming
+/// that path). Only the unset/default value falls back to the usual
+/// env/CWD/manifest-dir resolution, so grids built from
+/// `RunConfig::default()` work under `cargo test` too.
+pub fn resolve_artifacts(configured: &str) -> PathBuf {
+    if configured.is_empty()
+        || configured == RunConfig::default().artifacts_dir
+    {
+        artifacts_dir(None)
+    } else {
+        PathBuf::from(configured)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_workers_is_positive() {
+        assert!(default_workers() >= 1);
+    }
+
+    #[test]
+    fn fn_executor_adapts_closures() {
+        let mut calls = 0usize;
+        let mut exec = FnExecutor(|_spec: &JobSpec| {
+            calls += 1;
+            anyhow::bail!("stub")
+        });
+        let spec = JobSpec {
+            kind: ExperimentKind::Pretrain,
+            cfg: RunConfig::default(),
+        };
+        assert!(exec.execute(&spec).is_err());
+        drop(exec);
+        assert_eq!(calls, 1);
+    }
+}

@@ -1,0 +1,906 @@
+//! The lifecycle transition authority: one totalized state machine
+//! for every job, lease, session-quota, and gateway-phase mutation in
+//! this crate.
+//!
+//! Before this module existed, job state was implicit in the union of
+//! five maps (`routes`, `live`, `leases`, `orphans`, `completed`)
+//! mutated from many lock sites across `serve.rs` and `net.rs`; an
+//! illegal transition was whatever the scattered code happened not to
+//! represent. Now the legal automaton is written down **once**, in
+//! [`next_state`]:
+//!
+//! ```text
+//!            Admit          Enqueue           Lease(w)
+//!   (none) ───────► Admitted ───────► Queued ─────────► Leased(w)
+//!                                       ▲                 │  │ │
+//!                                       │ (requeue)       │  │ └─ Renew(w) ↺
+//!                                       │                 │  │
+//!                              Requeued ◄───── Expire ────┘  └─ Report(w)
+//!                                  │                               │
+//!                                  │ Lease(w')                     ▼
+//!                                  └──────────► Leased(w')     Reported
+//!                                                                  │
+//!   Admitted | Queued | Requeued ── Cancel ──► Cancelled           │ Finalize
+//!   Queued | Requeued | Reported ── Finalize ──► Done ◄────────────┘
+//! ```
+//!
+//! plus the journal-replay entry points (`ReplayPending` admits a
+//! journaled job straight to `Queued`, `ReplayDone` straight to
+//! `Done`). Everything else is a typed [`TransitionError`] — the
+//! `match` in [`next_state`] is totalized over `(state, event)`, so a
+//! new state or event fails to compile until every pairing is
+//! classified.
+//!
+//! Discipline: **transition first, then mutate.** A caller applies the
+//! event to the [`Lifecycle`] table and only touches its data maps
+//! (routes, lease table, completed log) after the transition
+//! succeeded; a failed transition means skip the mutation and surface
+//! the typed error. The table's mutex is a *leaf* lock — [`Lifecycle`]
+//! never takes another lock while holding it — so sites may apply
+//! transitions while holding their own map locks without ordering
+//! hazards (renew vs. expire serialize on the hub's lease-table lock,
+//! report vs. expire likewise). See `docs/lifecycle.md` for the
+//! invariant list this module enforces.
+//!
+//! The same discipline covers the two non-job machines the gateway
+//! needs: [`GatewayPhase`] (serving → draining → stopped, lock-free
+//! via [`PhaseCell`]) and the per-client in-flight quota
+//! ([`ClientLedger`]). The worker side mirrors the lease half with
+//! [`WorkerLeases`].
+
+use omgd_util::lock_recover;
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+// ---------------------------------------------------------------------------
+// Job state machine
+// ---------------------------------------------------------------------------
+
+/// Where a job is in its life. One value per seq, owned by
+/// [`Lifecycle`]; the hub's data maps (routes, lease table, result
+/// log) are projections of this, never the source of truth.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum JobState {
+    /// Accepted by `submit` (or journal `Admit`); not yet in the queue.
+    Admitted,
+    /// In the job queue, waiting for a local worker or a remote lease.
+    Queued,
+    /// Held by the named remote worker under a TTL.
+    Leased(String),
+    /// Lease expired; back in the queue with its original seq.
+    Requeued,
+    /// A remote worker reported a result; dispatch is in flight.
+    Reported,
+    /// Withdrawn before execution. Terminal.
+    Cancelled,
+    /// Result dispatched (done, failed, or cached). Terminal.
+    Done,
+}
+
+impl JobState {
+    /// Terminal states never transition again (enforced by
+    /// [`next_state`], asserted by the transition-table test).
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, JobState::Cancelled | JobState::Done)
+    }
+}
+
+impl fmt::Display for JobState {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            JobState::Admitted => write!(f, "admitted"),
+            JobState::Queued => write!(f, "queued"),
+            JobState::Leased(w) => write!(f, "leased({w})"),
+            JobState::Requeued => write!(f, "requeued"),
+            JobState::Reported => write!(f, "reported"),
+            JobState::Cancelled => write!(f, "cancelled"),
+            JobState::Done => write!(f, "done"),
+        }
+    }
+}
+
+/// Everything that can happen to a job.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum JobEvent {
+    /// `submit` accepted the spec (journal `Admit` record).
+    Admit,
+    /// The spec landed in the job queue.
+    Enqueue,
+    /// A remote worker took a lease (journal `Lease` record).
+    Lease(String),
+    /// The leasing worker extended its TTL (journal `Renew` record).
+    Renew(String),
+    /// A worker reported a result. `None` means a local (in-process)
+    /// worker, which never held a lease.
+    Report(Option<String>),
+    /// The requeue sweep found the lease TTL elapsed.
+    Expire,
+    /// The job was withdrawn before execution (journal `Cancel`).
+    Cancel,
+    /// The result was dispatched to its submitter (journal `Done`).
+    Finalize,
+    /// Journal replay: a pending job goes straight to the queue.
+    ReplayPending,
+    /// Journal replay: a completed job goes straight to `Done`.
+    ReplayDone,
+}
+
+impl JobEvent {
+    fn name(&self) -> &'static str {
+        match self {
+            JobEvent::Admit => "admit",
+            JobEvent::Enqueue => "enqueue",
+            JobEvent::Lease(_) => "lease",
+            JobEvent::Renew(_) => "renew",
+            JobEvent::Report(_) => "report",
+            JobEvent::Expire => "expire",
+            JobEvent::Cancel => "cancel",
+            JobEvent::Finalize => "finalize",
+            JobEvent::ReplayPending => "replay-pending",
+            JobEvent::ReplayDone => "replay-done",
+        }
+    }
+}
+
+/// Why a transition was refused. Every illegal `(state, event)`
+/// pairing maps to exactly one of these — there is no silent drop.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum TransitionError {
+    /// Event for a seq the authority has never admitted.
+    UnknownJob { event: &'static str },
+    /// `Admit`/replay events for a seq that already has a state.
+    DuplicateAdmit { state: JobState },
+    /// Renew/report by a worker that does not hold the lease. The
+    /// gateway surfaces this as HTTP 409.
+    WrongWorker { held_by: String, claimed: String },
+    /// Any other pairing the automaton does not allow.
+    Invalid { state: JobState, event: &'static str },
+}
+
+impl fmt::Display for TransitionError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TransitionError::UnknownJob { event } => {
+                write!(f, "event '{event}' for a job the lifecycle never admitted")
+            }
+            TransitionError::DuplicateAdmit { state } => {
+                write!(f, "admit of a job already {state}")
+            }
+            TransitionError::WrongWorker { held_by, claimed } => {
+                write!(f, "lease held by {held_by:?}, claimed by {claimed:?}")
+            }
+            TransitionError::Invalid { state, event } => {
+                write!(f, "event '{event}' is illegal in state {state}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for TransitionError {}
+
+/// The totalized transition function. Pure: no locks, no clocks, no
+/// side effects — this is the single place the legal automaton is
+/// defined, and the only function the transition-table test needs.
+///
+/// `state` is `None` for a seq the authority has not seen. The outer
+/// match is over the event, the inner over the state; together they
+/// cover every `(state, event)` pairing explicitly, so extending
+/// either enum forces this function through the compiler.
+pub fn next_state(
+    state: Option<&JobState>,
+    event: &JobEvent,
+) -> Result<JobState, TransitionError> {
+    use JobEvent as E;
+    use JobState as S;
+    let unknown = || TransitionError::UnknownJob { event: event.name() };
+    let invalid = |s: &S| TransitionError::Invalid {
+        state: s.clone(),
+        event: event.name(),
+    };
+    match event {
+        // Birth events: legal only for an unseen seq.
+        E::Admit => match state {
+            None => Ok(S::Admitted),
+            Some(s) => Err(TransitionError::DuplicateAdmit { state: s.clone() }),
+        },
+        E::ReplayPending => match state {
+            None => Ok(S::Queued),
+            Some(s) => Err(TransitionError::DuplicateAdmit { state: s.clone() }),
+        },
+        E::ReplayDone => match state {
+            None => Ok(S::Done),
+            Some(s) => Err(TransitionError::DuplicateAdmit { state: s.clone() }),
+        },
+
+        E::Enqueue => match state {
+            Some(S::Admitted) => Ok(S::Queued),
+            Some(s) => Err(invalid(s)),
+            None => Err(unknown()),
+        },
+
+        E::Lease(w) => match state {
+            Some(S::Queued) | Some(S::Requeued) => Ok(S::Leased(w.clone())),
+            Some(s) => Err(invalid(s)),
+            None => Err(unknown()),
+        },
+
+        E::Renew(w) => match state {
+            Some(S::Leased(held)) if held == w => Ok(S::Leased(held.clone())),
+            Some(S::Leased(held)) => Err(TransitionError::WrongWorker {
+                held_by: held.clone(),
+                claimed: w.clone(),
+            }),
+            Some(s) => Err(invalid(s)),
+            None => Err(unknown()),
+        },
+
+        E::Report(claimed) => match (state, claimed) {
+            // Remote report: must name the worker holding the lease.
+            // A report that arrives after the lease expired finds the
+            // job `Requeued` (or re-`Leased`) and is refused — the
+            // typed error is what the gateway surfaces as a 409
+            // conflict, preserving exactly-once dispatch.
+            (Some(S::Leased(held)), Some(w)) if held == w => Ok(S::Reported),
+            (Some(S::Leased(held)), Some(w)) => Err(TransitionError::WrongWorker {
+                held_by: held.clone(),
+                claimed: w.clone(),
+            }),
+            (Some(S::Leased(held)), None) => Err(TransitionError::WrongWorker {
+                held_by: held.clone(),
+                claimed: String::from("<local>"),
+            }),
+            // Local report: an in-process worker popped the queue
+            // directly; no lease was ever granted.
+            (Some(S::Queued), None) | (Some(S::Requeued), None) => Ok(S::Reported),
+            (Some(s), _) => Err(invalid(s)),
+            (None, _) => Err(unknown()),
+        },
+
+        E::Expire => match state {
+            Some(S::Leased(_)) => Ok(S::Requeued),
+            Some(s) => Err(invalid(s)),
+            None => Err(unknown()),
+        },
+
+        E::Cancel => match state {
+            Some(S::Admitted) | Some(S::Queued) | Some(S::Requeued) => Ok(S::Cancelled),
+            Some(s) => Err(invalid(s)),
+            None => Err(unknown()),
+        },
+
+        E::Finalize => match state {
+            Some(S::Reported) => Ok(S::Done),
+            // A queued job can finalize directly: cache fast-path hits
+            // and requeue-failure dispatches skip the report step.
+            Some(S::Queued) | Some(S::Requeued) => Ok(S::Done),
+            Some(s) => Err(invalid(s)),
+            None => Err(unknown()),
+        },
+    }
+}
+
+/// The shared transition table: seq → [`JobState`], every mutation
+/// funneled through [`next_state`].
+///
+/// Lock ordering: sites that mutate both the lifecycle and a data map
+/// take this lock **first**, apply the transition, and only touch the
+/// data map after the transition succeeded. Concurrent writers
+/// therefore serialize on the automaton, and the loser of any race
+/// observes a typed error instead of clobbering state.
+#[derive(Debug, Default)]
+pub struct Lifecycle {
+    table: Mutex<HashMap<u64, JobState>>,
+}
+
+impl Lifecycle {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Apply `event` to `seq`. On success the table is updated and the
+    /// new state returned; on failure the table is untouched.
+    pub fn apply(&self, seq: u64, event: &JobEvent) -> Result<JobState, TransitionError> {
+        let mut table = lock_recover(&self.table);
+        let next = next_state(table.get(&seq), event)?;
+        table.insert(seq, next.clone());
+        Ok(next)
+    }
+
+    /// Apply `event` only if the seq is already known; an unknown seq
+    /// is first admitted through `first`. Used by the lease path,
+    /// where the queue is also a public surface (`hub.queue.push`)
+    /// and a job may reach the authority only at lease time.
+    pub fn apply_or_register(
+        &self,
+        seq: u64,
+        first: &[JobEvent],
+        event: &JobEvent,
+    ) -> Result<JobState, TransitionError> {
+        let mut table = lock_recover(&self.table);
+        if !table.contains_key(&seq) {
+            let mut st: Option<JobState> = None;
+            for ev in first {
+                st = Some(next_state(st.as_ref(), ev)?);
+            }
+            if let Some(st) = st {
+                table.insert(seq, st);
+            }
+        }
+        let next = next_state(table.get(&seq), event)?;
+        table.insert(seq, next.clone());
+        Ok(next)
+    }
+
+    /// Current state of `seq`, if the authority has seen it.
+    pub fn state(&self, seq: u64) -> Option<JobState> {
+        lock_recover(&self.table).get(&seq).cloned()
+    }
+
+    /// Drop a terminal seq from the table. The authority bounds its
+    /// own growth by forgetting jobs once their terminal state has
+    /// been externalized (result dispatched and, when a journal is
+    /// attached, retained in the completed log). Forgetting a
+    /// non-terminal seq is a logic error and panics in debug builds.
+    pub fn forget(&self, seq: u64) {
+        let mut table = lock_recover(&self.table);
+        if let Some(st) = table.remove(&seq) {
+            debug_assert!(st.is_terminal(), "forgetting live job {seq} in state {st}");
+        }
+    }
+
+    /// Number of tracked (non-forgotten) jobs.
+    pub fn len(&self) -> usize {
+        lock_recover(&self.table).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        lock_recover(&self.table).is_empty()
+    }
+
+    /// Seqs currently in a terminal state (test/diagnostic surface).
+    pub fn terminal_seqs(&self) -> Vec<u64> {
+        let table = lock_recover(&self.table);
+        let mut v: Vec<u64> = table
+            .iter()
+            .filter(|(_, s)| s.is_terminal())
+            .map(|(&k, _)| k)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Gateway phase machine
+// ---------------------------------------------------------------------------
+
+/// The gateway's connection-level lifecycle: accepting new work,
+/// draining (finish what's in flight, refuse new jobs), stopped.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum GatewayPhase {
+    /// Accepting connections and job submissions.
+    Serving = 0,
+    /// `/shutdown` received: existing sessions finish, new submissions
+    /// get 503, the accept loop exits once the queue and leases drain.
+    Draining = 1,
+    /// Accept loop exited; no connection threads remain.
+    Stopped = 2,
+}
+
+/// Lock-free holder for the current [`GatewayPhase`]. Replaces the old
+/// `stop: AtomicBool`, which conflated "start draining" with "fully
+/// stopped" and let any site flip it. Phases only move forward:
+/// `Serving → Draining → Stopped`; a regression attempt is refused and
+/// repeated `/shutdown`s are idempotent.
+#[derive(Debug)]
+pub struct PhaseCell(AtomicU8);
+
+impl Default for PhaseCell {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PhaseCell {
+    pub fn new() -> Self {
+        PhaseCell(AtomicU8::new(GatewayPhase::Serving as u8))
+    }
+
+    pub fn get(&self) -> GatewayPhase {
+        match self.0.load(Ordering::SeqCst) {
+            0 => GatewayPhase::Serving,
+            1 => GatewayPhase::Draining,
+            _ => GatewayPhase::Stopped,
+        }
+    }
+
+    /// True once draining has begun (draining or stopped).
+    pub fn draining(&self) -> bool {
+        self.get() != GatewayPhase::Serving
+    }
+
+    /// Request `Serving → Draining`. Returns `true` if this call made
+    /// the transition, `false` if the gateway was already past it
+    /// (idempotent repeat — not an error).
+    pub fn request_drain(&self) -> bool {
+        self.0
+            .compare_exchange(
+                GatewayPhase::Serving as u8,
+                GatewayPhase::Draining as u8,
+                Ordering::SeqCst,
+                Ordering::SeqCst,
+            )
+            .is_ok()
+    }
+
+    /// Mark the drain complete (`Draining → Stopped`). Refused (with
+    /// `false`) unless the gateway was draining: the accept loop may
+    /// not skip the draining phase.
+    pub fn mark_stopped(&self) -> bool {
+        self.0
+            .compare_exchange(
+                GatewayPhase::Draining as u8,
+                GatewayPhase::Stopped as u8,
+                Ordering::SeqCst,
+                Ordering::SeqCst,
+            )
+            .is_ok()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Client quota ledger
+// ---------------------------------------------------------------------------
+
+/// Per-client in-flight accounting for `--client-quota`: the session
+/// half of the lifecycle authority. Owns the map, the quota, and the
+/// condvar; callers can no longer reach into the raw map, so the
+/// increment/decrement discipline (acquire blocks, release notifies,
+/// zero entries are removed) lives in exactly one place.
+#[derive(Debug, Default)]
+pub struct ClientLedger {
+    in_flight: Mutex<HashMap<String, usize>>,
+    cv: Condvar,
+    quota: AtomicUsize,
+}
+
+impl ClientLedger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Set the per-client cap (0 = unlimited) and wake waiters so a
+    /// raised quota is observed immediately.
+    pub fn set_quota(&self, quota: usize) {
+        self.quota.store(quota, Ordering::SeqCst);
+        self.cv.notify_all();
+    }
+
+    pub fn quota(&self) -> usize {
+        self.quota.load(Ordering::SeqCst)
+    }
+
+    /// In-flight count for one client.
+    pub fn in_flight(&self, client: &str) -> usize {
+        lock_recover(&self.in_flight).get(client).copied().unwrap_or(0)
+    }
+
+    /// Snapshot of all clients with in-flight jobs, sorted by name.
+    pub fn snapshot(&self) -> Vec<(String, usize)> {
+        let mut v: Vec<(String, usize)> = lock_recover(&self.in_flight)
+            .iter()
+            .map(|(k, &n)| (k.clone(), n))
+            .collect();
+        v.sort();
+        v
+    }
+
+    /// True if `client` is at its quota right now (advisory — the
+    /// authoritative check is the blocking wait in [`Self::acquire`]).
+    pub fn at_quota(&self, client: &str) -> bool {
+        let quota = self.quota();
+        quota > 0 && self.in_flight(client) >= quota
+    }
+
+    /// Take one in-flight slot for `client`, blocking while the client
+    /// is at quota. `client = None` is exempt from quotas.
+    pub fn acquire(&self, client: Option<&str>) {
+        let Some(client) = client else { return };
+        let mut map = lock_recover(&self.in_flight);
+        loop {
+            let quota = self.quota();
+            let n = map.get(client).copied().unwrap_or(0);
+            if quota == 0 || n < quota {
+                *map.entry(client.to_string()).or_insert(0) += 1;
+                return;
+            }
+            map = self
+                .cv
+                .wait(map)
+                .unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// Rebuild one slot during journal replay, bypassing the quota
+    /// wait: the slot was legally acquired before the crash, and
+    /// replay must not deadlock when a client's pending backlog
+    /// exceeds a (possibly lowered) quota.
+    pub fn restore(&self, client: Option<&str>) {
+        let Some(client) = client else { return };
+        *lock_recover(&self.in_flight)
+            .entry(client.to_string())
+            .or_insert(0) += 1;
+    }
+
+    /// Test seam: run `f` while holding the ledger lock, so crate
+    /// tests can poison it the way a panicking session thread would
+    /// and assert the recovery path.
+    #[cfg(test)]
+    pub(crate) fn with_lock<R>(&self, f: impl FnOnce() -> R) -> R {
+        let _g = self.in_flight.lock().unwrap();
+        f()
+    }
+
+    /// Release one slot. Saturating; a zeroed entry is removed so the
+    /// snapshot only lists clients with live work.
+    pub fn release(&self, client: Option<&str>) {
+        let Some(client) = client else { return };
+        let mut map = lock_recover(&self.in_flight);
+        if let Some(n) = map.get_mut(client) {
+            *n = n.saturating_sub(1);
+            if *n == 0 {
+                map.remove(client);
+            }
+        }
+        drop(map);
+        self.cv.notify_all();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Worker-side lease mirror
+// ---------------------------------------------------------------------------
+
+/// One lease as seen by the worker that holds it.
+#[derive(Clone, Debug)]
+pub struct HeldLease {
+    /// TTL the gateway granted; renewals target half this interval.
+    pub ttl_secs: u64,
+    /// Next heartbeat due time.
+    pub next_renew: Instant,
+    /// Monotone token distinguishing re-leases of the same seq; a
+    /// heartbeat outcome only applies if the token still matches.
+    pub token: u64,
+}
+
+/// The worker-side mirror of the gateway's lease table: seq → lease
+/// being executed right now. The heartbeat thread and the worker
+/// threads share it; all mutation goes through these methods so the
+/// token discipline (a stale heartbeat must not clobber a re-leased
+/// seq) is enforced in one place.
+#[derive(Debug, Default)]
+pub struct WorkerLeases {
+    map: Mutex<HashMap<u64, HeldLease>>,
+    next_token: AtomicUsize,
+}
+
+impl WorkerLeases {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a newly granted lease; returns its token.
+    pub fn start(&self, seq: u64, ttl_secs: u64, next_renew: Instant) -> u64 {
+        let token = self.next_token.fetch_add(1, Ordering::SeqCst) as u64;
+        lock_recover(&self.map).insert(
+            seq,
+            HeldLease {
+                ttl_secs,
+                next_renew,
+                token,
+            },
+        );
+        token
+    }
+
+    /// The job finished (reported or abandoned): drop the mirror entry.
+    pub fn finish(&self, seq: u64) {
+        lock_recover(&self.map).remove(&seq);
+    }
+
+    /// Leases whose heartbeat is due at `now`: `(seq, ttl, token)`.
+    pub fn due(&self, now: Instant) -> Vec<(u64, u64, u64)> {
+        lock_recover(&self.map)
+            .iter()
+            .filter(|(_, l)| l.next_renew <= now)
+            .map(|(&seq, l)| (seq, l.ttl_secs, l.token))
+            .collect()
+    }
+
+    /// A renew round-tripped: push the next heartbeat out. Ignored if
+    /// the lease was dropped or re-issued (token mismatch) meanwhile.
+    pub fn renewed(&self, seq: u64, token: u64, next_renew: Instant) {
+        if let Some(l) = lock_recover(&self.map).get_mut(&seq) {
+            if l.token == token {
+                l.next_renew = next_renew;
+            }
+        }
+    }
+
+    /// The gateway answered 409 (lease gone): drop the mirror entry,
+    /// token-guarded for the same reason as [`Self::renewed`].
+    pub fn lease_gone(&self, seq: u64, token: u64) {
+        let mut map = lock_recover(&self.map);
+        if map.get(&seq).is_some_and(|l| l.token == token) {
+            map.remove(&seq);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        lock_recover(&self.map).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        lock_recover(&self.map).is_empty()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Transition-table test: every (state, event) pairing, legal and not
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn all_states() -> Vec<Option<JobState>> {
+        vec![
+            None,
+            Some(JobState::Admitted),
+            Some(JobState::Queued),
+            Some(JobState::Leased("w1".into())),
+            Some(JobState::Requeued),
+            Some(JobState::Reported),
+            Some(JobState::Cancelled),
+            Some(JobState::Done),
+        ]
+    }
+
+    fn all_events() -> Vec<JobEvent> {
+        vec![
+            JobEvent::Admit,
+            JobEvent::Enqueue,
+            JobEvent::Lease("w1".into()),
+            JobEvent::Lease("w2".into()),
+            JobEvent::Renew("w1".into()),
+            JobEvent::Renew("w2".into()),
+            JobEvent::Report(Some("w1".into())),
+            JobEvent::Report(Some("w2".into())),
+            JobEvent::Report(None),
+            JobEvent::Expire,
+            JobEvent::Cancel,
+            JobEvent::Finalize,
+            JobEvent::ReplayPending,
+            JobEvent::ReplayDone,
+        ]
+    }
+
+    /// The full legal transition table, written out by hand. Every
+    /// (state, event) pairing not listed here must yield an error —
+    /// the test below checks both directions exhaustively, so this
+    /// table IS the spec of the automaton.
+    fn legal(state: &Option<JobState>, event: &JobEvent) -> Option<JobState> {
+        use JobEvent as E;
+        use JobState as S;
+        let w1 = || "w1".to_string();
+        match (state, event) {
+            (None, E::Admit) => Some(S::Admitted),
+            (None, E::ReplayPending) => Some(S::Queued),
+            (None, E::ReplayDone) => Some(S::Done),
+            (Some(S::Admitted), E::Enqueue) => Some(S::Queued),
+            (Some(S::Admitted), E::Cancel) => Some(S::Cancelled),
+            (Some(S::Queued), E::Lease(w)) => Some(S::Leased(w.clone())),
+            (Some(S::Queued), E::Report(None)) => Some(S::Reported),
+            (Some(S::Queued), E::Cancel) => Some(S::Cancelled),
+            (Some(S::Queued), E::Finalize) => Some(S::Done),
+            (Some(S::Leased(h)), E::Renew(w)) if h == w => Some(S::Leased(w1())),
+            (Some(S::Leased(h)), E::Report(Some(w))) if h == w => Some(S::Reported),
+            (Some(S::Leased(_)), E::Expire) => Some(S::Requeued),
+            (Some(S::Requeued), E::Lease(w)) => Some(S::Leased(w.clone())),
+            (Some(S::Requeued), E::Report(None)) => Some(S::Reported),
+            (Some(S::Requeued), E::Cancel) => Some(S::Cancelled),
+            (Some(S::Requeued), E::Finalize) => Some(S::Done),
+            (Some(S::Reported), E::Finalize) => Some(S::Done),
+            _ => None,
+        }
+    }
+
+    #[test]
+    fn transition_table_is_exhaustive_and_matches_spec() {
+        let mut legal_n = 0;
+        let mut illegal_n = 0;
+        for state in all_states() {
+            for event in all_events() {
+                let got = next_state(state.as_ref(), &event);
+                match legal(&state, &event) {
+                    Some(want) => {
+                        legal_n += 1;
+                        assert_eq!(
+                            got.as_ref(),
+                            Ok(&want),
+                            "({state:?}, {event:?}) should be legal"
+                        );
+                    }
+                    None => {
+                        illegal_n += 1;
+                        assert!(
+                            got.is_err(),
+                            "({state:?}, {event:?}) should be illegal, got {got:?}"
+                        );
+                    }
+                }
+            }
+        }
+        // 8 states × 14 events, all visited; the split below is the
+        // hand-counted size of the legal table: 3 births + 2 from
+        // Admitted + 5 from Queued + 3 from Leased + 5 from Requeued
+        // + 1 from Reported = 19 legal pairings.
+        assert_eq!(legal_n + illegal_n, 8 * 14);
+        assert_eq!(legal_n, 19, "legal transition count drifted");
+    }
+
+    #[test]
+    fn illegal_transitions_carry_typed_errors() {
+        use JobEvent as E;
+        use JobState as S;
+        // Unknown seq.
+        assert_eq!(
+            next_state(None, &E::Lease("w".into())),
+            Err(TransitionError::UnknownJob { event: "lease" })
+        );
+        // Double admit.
+        assert_eq!(
+            next_state(Some(&S::Queued), &E::Admit),
+            Err(TransitionError::DuplicateAdmit { state: S::Queued })
+        );
+        // Wrong worker renew + report.
+        assert_eq!(
+            next_state(Some(&S::Leased("a".into())), &E::Renew("b".into())),
+            Err(TransitionError::WrongWorker {
+                held_by: "a".into(),
+                claimed: "b".into()
+            })
+        );
+        assert_eq!(
+            next_state(Some(&S::Leased("a".into())), &E::Report(Some("b".into()))),
+            Err(TransitionError::WrongWorker {
+                held_by: "a".into(),
+                claimed: "b".into()
+            })
+        );
+        // Terminal states refuse everything.
+        for ev in all_events() {
+            assert!(next_state(Some(&S::Done), &ev).is_err());
+            assert!(next_state(Some(&S::Cancelled), &ev).is_err());
+        }
+    }
+
+    #[test]
+    fn table_apply_and_forget() {
+        let lc = Lifecycle::new();
+        lc.apply(7, &JobEvent::Admit).unwrap();
+        lc.apply(7, &JobEvent::Enqueue).unwrap();
+        assert_eq!(lc.state(7), Some(JobState::Queued));
+        // Failed transition leaves the table untouched.
+        assert!(lc.apply(7, &JobEvent::Renew("w".into())).is_err());
+        assert_eq!(lc.state(7), Some(JobState::Queued));
+        lc.apply(7, &JobEvent::Lease("w".into())).unwrap();
+        lc.apply(7, &JobEvent::Report(Some("w".into()))).unwrap();
+        lc.apply(7, &JobEvent::Finalize).unwrap();
+        assert_eq!(lc.state(7), Some(JobState::Done));
+        assert_eq!(lc.terminal_seqs(), vec![7]);
+        lc.forget(7);
+        assert!(lc.is_empty());
+    }
+
+    #[test]
+    fn apply_or_register_admits_queue_pushed_jobs() {
+        let lc = Lifecycle::new();
+        // A job pushed straight into hub.queue (public surface) first
+        // meets the authority at lease time.
+        let st = lc
+            .apply_or_register(
+                3,
+                &[JobEvent::Admit, JobEvent::Enqueue],
+                &JobEvent::Lease("w".into()),
+            )
+            .unwrap();
+        assert_eq!(st, JobState::Leased("w".into()));
+        // Second lease of the same seq is refused, not re-registered.
+        assert!(lc
+            .apply_or_register(
+                3,
+                &[JobEvent::Admit, JobEvent::Enqueue],
+                &JobEvent::Lease("x".into()),
+            )
+            .is_err());
+    }
+
+    #[test]
+    fn phase_cell_moves_forward_only() {
+        let p = PhaseCell::new();
+        assert_eq!(p.get(), GatewayPhase::Serving);
+        assert!(!p.draining());
+        assert!(!p.mark_stopped(), "cannot skip draining");
+        assert!(p.request_drain());
+        assert!(!p.request_drain(), "second drain request is a no-op");
+        assert!(p.draining());
+        assert_eq!(p.get(), GatewayPhase::Draining);
+        assert!(p.mark_stopped());
+        assert!(!p.mark_stopped());
+        assert_eq!(p.get(), GatewayPhase::Stopped);
+        assert!(p.draining(), "stopped still reads as draining");
+    }
+
+    #[test]
+    fn client_ledger_counts_and_releases() {
+        let l = ClientLedger::new();
+        l.acquire(Some("a"));
+        l.acquire(Some("a"));
+        l.acquire(Some("b"));
+        l.acquire(None); // exempt
+        assert_eq!(l.in_flight("a"), 2);
+        assert_eq!(l.in_flight("b"), 1);
+        assert_eq!(
+            l.snapshot(),
+            vec![("a".to_string(), 2), ("b".to_string(), 1)]
+        );
+        l.release(Some("a"));
+        l.release(Some("b"));
+        l.release(Some("b")); // saturating
+        assert_eq!(l.in_flight("a"), 1);
+        assert_eq!(l.in_flight("b"), 0);
+        assert_eq!(l.snapshot(), vec![("a".to_string(), 1)]);
+    }
+
+    #[test]
+    fn client_ledger_quota_blocks_until_release() {
+        use std::sync::Arc;
+        let l = Arc::new(ClientLedger::new());
+        l.set_quota(1);
+        l.acquire(Some("c"));
+        assert!(l.at_quota("c"));
+        let l2 = l.clone();
+        let waiter = std::thread::spawn(move || {
+            l2.acquire(Some("c")); // blocks until main releases
+            l2.release(Some("c"));
+        });
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        l.release(Some("c"));
+        waiter.join().unwrap();
+        assert_eq!(l.in_flight("c"), 0);
+    }
+
+    #[test]
+    fn worker_leases_token_guard() {
+        let wl = WorkerLeases::new();
+        let now = Instant::now();
+        let t1 = wl.start(5, 60, now);
+        assert_eq!(wl.len(), 1);
+        assert_eq!(wl.due(now), vec![(5, 60, t1)]);
+        // Re-lease of the same seq invalidates the old token.
+        wl.finish(5);
+        let t2 = wl.start(5, 30, now);
+        assert_ne!(t1, t2);
+        wl.lease_gone(5, t1); // stale: ignored
+        assert_eq!(wl.len(), 1);
+        wl.renewed(5, t1, now + std::time::Duration::from_secs(9)); // stale: ignored
+        assert_eq!(wl.due(now), vec![(5, 30, t2)]);
+        wl.lease_gone(5, t2); // current: applies
+        assert!(wl.is_empty());
+    }
+}

@@ -49,16 +49,18 @@
 
 use super::cache::{self, ResultCache};
 use super::journal::{self, JobJournal};
+use super::lifecycle::PhaseCell;
 use super::pool::{JobOutcome, JobStatus};
 use super::serve::{
-    lock_recover, run_session, with_hub, JobHub, LeaseReply, PhaseSecs,
-    RemoteDone, RemoteStats, ResultLookup, ServeStats, SessionOptions,
+    run_session, with_hub, JobHub, LeaseReply, PhaseSecs, RemoteDone,
+    RemoteStats, ResultLookup, ServeStats, SessionOptions,
 };
 use super::spec::JobSpec;
-use super::{cached_runner, open_cache, sync, GridOptions};
+use super::{cached_runner_with, open_cache, sync, GridOptions, JobExecutor};
 use crate::obs::{self, MetricsLevel};
 use crate::util::json::{escape_str as esc, Json};
 use anyhow::{bail, Context, Result};
+use omgd_util::{ct_eq, lock_recover};
 use std::collections::{HashMap, HashSet};
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -133,6 +135,16 @@ pub struct ListenOptions {
     /// pre-durability behavior). `serve_listen` points this at the
     /// cache dir.
     pub journal_dir: Option<PathBuf>,
+    /// Shared bearer token (`--auth-token` / `OMGD_AUTH_TOKEN`). When
+    /// set, every state-touching endpoint — `POST /jobs`,
+    /// `GET /jobs/<seq>/result`, `/work/*`, `/artifacts/*`,
+    /// `POST /shutdown` — requires `Authorization: Bearer <token>`
+    /// (compared in constant time) and answers `401` +
+    /// `WWW-Authenticate: Bearer` otherwise. Read-only probes
+    /// (`/healthz`, `/stats`, `/metrics`, `/events`, `/cache`) stay
+    /// open so dashboards and load balancers need no secret. `None` =
+    /// no auth (the default).
+    pub auth_token: Option<String>,
 }
 
 impl Default for ListenOptions {
@@ -150,6 +162,7 @@ impl Default for ListenOptions {
             keepalive_idle: Duration::from_secs(60),
             metrics: MetricsLevel::Full,
             journal_dir: None,
+            auth_token: None,
         }
     }
 }
@@ -184,14 +197,21 @@ struct Counters {
     refused: AtomicUsize,
 }
 
-/// Bind `addr` and run the gateway with the production cache-aware
-/// runner until `POST /shutdown`. `--listen 127.0.0.1:0` binds a free
-/// port; the actual address is printed to stderr.
-pub fn serve_listen(
+/// Bind `addr` and run the gateway until `POST /shutdown`, with local
+/// workers built from `make_exec` and wrapped in the cache-aware
+/// runner. `--listen 127.0.0.1:0` binds a free port; the actual
+/// address is printed to stderr. The trainer-backed `serve_listen`
+/// (in `omgd-train`) is this with the production [`JobExecutor`].
+pub fn serve_listen_with<E, M>(
     addr: &str,
     opts: &GridOptions,
     lopts: &ListenOptions,
-) -> Result<GatewayStats> {
+    make_exec: M,
+) -> Result<GatewayStats>
+where
+    E: JobExecutor,
+    M: Fn(usize) -> E + Sync,
+{
     let cache = open_cache(opts)?;
     let listener =
         TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
@@ -240,8 +260,8 @@ pub fn serve_listen(
         ..lopts.clone()
     };
     let out =
-        run_gateway(listener, opts.workers, &lopts, Some(&cache), |_wid| {
-            cached_runner(&cache, opts.force)
+        run_gateway(listener, opts.workers, &lopts, Some(&cache), |wid| {
+            cached_runner_with(&cache, opts.force, make_exec(wid))
         });
     let _ = gc_stop_tx.send(());
     if let Some(h) = gc_thread {
@@ -256,14 +276,39 @@ pub fn serve_listen(
 struct GwCtx<'a> {
     hub: &'a JobHub,
     c: &'a Counters,
-    stop: &'a AtomicBool,
+    /// Gateway lifecycle phase (`Serving → Draining → Stopped`); the
+    /// `/shutdown` handler requests the drain, the accept loop marks
+    /// the stop, and every drain check reads it. Forward-only by
+    /// construction — see [`PhaseCell`].
+    phase: &'a PhaseCell,
     lopts: &'a ListenOptions,
     cache: Option<&'a ResultCache>,
     local: SocketAddr,
     /// Artifact index: gateway fingerprint → (artifacts dir, model),
     /// registered when a job is leased and served by
     /// `GET /artifacts/<fp>`.
-    artifacts: &'a Mutex<HashMap<String, (PathBuf, String)>>,
+    artifacts: &'a ArtifactIndex,
+}
+
+/// Fingerprint → (artifacts dir, model) registry behind
+/// `GET /artifacts/<fp>`: leases register the artifact set they
+/// referenced *before* the lease reply is written, so a worker's fetch
+/// can never race the index. Typed (instead of a bare map under a
+/// mutex) so registration and lookup are the only operations — nothing
+/// else can hold the lock across IO.
+#[derive(Default)]
+struct ArtifactIndex {
+    map: Mutex<HashMap<String, (PathBuf, String)>>,
+}
+
+impl ArtifactIndex {
+    fn register(&self, fp: String, dir: PathBuf, model: String) {
+        lock_recover(&self.map).insert(fp, (dir, model));
+    }
+
+    fn lookup(&self, fp: &str) -> Option<(PathBuf, String)> {
+        lock_recover(&self.map).get(fp).cloned()
+    }
 }
 
 /// Run the accept loop + worker pool + router on `listener` until a
@@ -301,7 +346,7 @@ where
     } else {
         lopts.queue_capacity
     };
-    let stop = AtomicBool::new(false);
+    let phase = PhaseCell::new();
     let loop_done = AtomicBool::new(false);
     let c = Counters::default();
     // Below `full`, the journal is a no-op for the gateway's lifetime;
@@ -311,7 +356,7 @@ where
         obs::journal().set_capacity(0);
     }
     let local = listener.local_addr().context("gateway local_addr")?;
-    let artifacts = Mutex::new(HashMap::new());
+    let artifacts = ArtifactIndex::default();
 
     // `with_hub` owns the worker pool + router + drain discipline; this
     // body is only the accept loop. Connection threads live in their
@@ -364,7 +409,7 @@ where
             let ctx = GwCtx {
                 hub,
                 c: &c,
-                stop: &stop,
+                phase: &phase,
                 lopts,
                 cache,
                 local,
@@ -384,7 +429,7 @@ where
                 let mut handles = Vec::new();
                 let mut draining = false;
                 loop {
-                    if !draining && stop.load(Ordering::SeqCst) {
+                    if !draining && phase.draining() {
                         // Enter drain mode: from here on the accept
                         // call must not block forever, because the exit
                         // condition below needs re-checking even when
@@ -452,6 +497,10 @@ where
                     let _ = h.join();
                 }
                 loop_done.store(true, Ordering::SeqCst);
+                // Draining → Stopped: the accept loop has exited and
+                // every connection thread is joined; nothing else can
+                // mutate the hub from the network side.
+                phase.mark_stopped();
                 let _ = sweeper.join();
             });
             // Clean shutdown: snapshot live state and truncate the
@@ -572,7 +621,7 @@ fn wait_readable(
                         | std::io::ErrorKind::TimedOut
                 ) =>
             {
-                if ctx.stop.load(Ordering::SeqCst) {
+                if ctx.phase.draining() {
                     // Draining: idle keep-alive connections step aside
                     // so the gateway can exit.
                     return restore(false);
@@ -593,7 +642,7 @@ fn route_request(
     w: &mut &TcpStream,
     head: &HttpHead,
 ) -> bool {
-    let GwCtx { hub, c, stop, lopts, cache, local, .. } = *ctx;
+    let GwCtx { hub, c, phase, lopts, cache, local, .. } = *ctx;
     // POST /jobs and the worker-protocol POSTs consume their bodies;
     // every other endpoint ignores its body — drain it (bounded) up
     // front so responding can't RST the reply away. Skipped under
@@ -604,6 +653,32 @@ fn route_request(
             || head.path == "/work/lease"
             || parse_work_path(&head.path).is_some());
     let mut keep = head.keep_alive;
+    // Auth gate: before any endpoint logic, a state-touching request
+    // must present the bearer token. The body (if any) is drained
+    // first so the 401 reaches the client instead of an RST; under
+    // Expect: 100-continue nothing was sent, so close after answering
+    // (the stream would desynchronize if the client sent it anyway).
+    if let Some(expected) = lopts.auth_token.as_deref() {
+        if path_needs_auth(&head.path)
+            && !token_matches(head.authorization.as_deref(), expected)
+        {
+            let drained = !head.expect_continue
+                && if head.chunked {
+                    drain_chunked(reader)
+                } else {
+                    drain_body(reader, head.content_length)
+                };
+            let _ = respond_json(
+                w,
+                401,
+                "Unauthorized",
+                &[("WWW-Authenticate", "Bearer")],
+                keep && drained,
+                &err_body("missing or invalid bearer token"),
+            );
+            return keep && drained;
+        }
+    }
     // Chunked request bodies are a session-endpoint feature: `POST
     // /jobs` decodes them inline; everywhere else the (small, JSON)
     // bodies must be `Content-Length`-framed. Answer 400 and drain the
@@ -639,7 +714,7 @@ fn route_request(
                  \"draining\":{}}}",
                 hub.queue.len(),
                 hub.queue.capacity(),
-                stop.load(Ordering::SeqCst),
+                phase.draining(),
             );
             let _ = respond_json(w, 200, "OK", &[], keep, &body);
             keep
@@ -775,7 +850,7 @@ fn route_request(
                 false,
                 "{\"draining\":true}",
             );
-            stop.store(true, Ordering::SeqCst);
+            phase.request_drain();
             // Wake the (blocking) accept loop so it observes the flag.
             // A wildcard bind (0.0.0.0 / ::) is not connectable
             // everywhere — aim the wake-up at loopback instead.
@@ -794,7 +869,7 @@ fn route_request(
             false
         }
         ("POST", "/jobs") => {
-            if stop.load(Ordering::SeqCst) {
+            if phase.draining() {
                 // Draining: no new sessions; the connection's body (if
                 // any) was not read, so answering is safe only after a
                 // bounded drain (chunked bodies decode-and-discard).
@@ -1238,9 +1313,10 @@ fn handle_lease<R: BufRead, W: Write>(
                     let dir = super::resolve_artifacts(
                         &info.spec.cfg.artifacts_dir,
                     );
-                    lock_recover(ctx.artifacts).insert(
+                    ctx.artifacts.register(
                         info.afp.clone(),
-                        (dir, info.spec.cfg.model.clone()),
+                        dir,
+                        info.spec.cfg.model.clone(),
                     );
                 }
                 // `force` rides along so a `--force` gateway defeats
@@ -1278,7 +1354,7 @@ fn handle_lease<R: BufRead, W: Write>(
                 return keep;
             }
             LeaseReply::Idle => {
-                let draining = ctx.stop.load(Ordering::SeqCst);
+                let draining = ctx.phase.draining();
                 if draining || Instant::now() >= deadline {
                     let _ = respond_json(
                         w,
@@ -1443,8 +1519,7 @@ fn handle_artifact_get<W: Write>(
     fp: &str,
     keep: bool,
 ) {
-    let entry = lock_recover(ctx.artifacts).get(fp).cloned();
-    let Some((dir, model)) = entry else {
+    let Some((dir, model)) = ctx.artifacts.lookup(fp) else {
         let _ = respond_json(
             w,
             404,
@@ -1506,6 +1581,30 @@ struct HttpHead {
     keep_alive: bool,
     /// `X-OMGD-Client` fairness token, if presented.
     client: Option<String>,
+    /// Raw `Authorization` header value, if presented. Parsed against
+    /// the configured bearer token by [`token_matches`].
+    authorization: Option<String>,
+}
+
+/// Which paths the bearer token (when configured) protects: everything
+/// that submits, leases, reports, fetches, or stops work. Liveness and
+/// telemetry probes stay open — see [`ListenOptions::auth_token`].
+fn path_needs_auth(path: &str) -> bool {
+    path == "/jobs"
+        || path == "/shutdown"
+        || path.starts_with("/jobs/")
+        || path.starts_with("/work/")
+        || path.starts_with("/artifacts/")
+}
+
+/// `Authorization: Bearer <token>` check. The scheme is
+/// case-insensitive per RFC 7235; the token comparison is constant
+/// time ([`ct_eq`]) so a timing oracle cannot recover it byte by byte.
+fn token_matches(authorization: Option<&str>, expected: &str) -> bool {
+    let Some(h) = authorization else { return false };
+    let Some((scheme, token)) = h.split_once(' ') else { return false };
+    scheme.eq_ignore_ascii_case("bearer")
+        && ct_eq(token.trim().as_bytes(), expected.as_bytes())
 }
 
 /// Read one request head. `Ok(None)` = clean EOF before any bytes (the
@@ -1541,6 +1640,7 @@ fn read_head<R: BufRead>(r: &mut R) -> Result<Option<HttpHead>> {
     let mut expect_continue = false;
     let mut keep_alive = false;
     let mut client = None;
+    let mut authorization = None;
     for _ in 0..MAX_HEADERS {
         let mut h = String::new();
         if head.read_line(&mut h)? == 0 {
@@ -1563,6 +1663,7 @@ fn read_head<R: BufRead>(r: &mut R) -> Result<Option<HttpHead>> {
                 expect_continue,
                 keep_alive,
                 client,
+                authorization,
             }));
         }
         let Some((name, value)) = h.split_once(':') else {
@@ -1600,6 +1701,11 @@ fn read_head<R: BufRead>(r: &mut R) -> Result<Option<HttpHead>> {
             "x-omgd-client" => {
                 if !value.is_empty() {
                     client = Some(value.to_string());
+                }
+            }
+            "authorization" => {
+                if !value.is_empty() {
+                    authorization = Some(value.to_string());
                 }
             }
             "transfer-encoding" => {
@@ -2152,6 +2258,44 @@ mod tests {
         assert_eq!(parse_work_path("/work/7/steal"), None);
         assert_eq!(parse_work_path("/work/"), None);
         assert_eq!(parse_work_path("/jobs"), None);
+    }
+
+    #[test]
+    fn auth_header_parses_and_token_matching_is_strict() {
+        let h = head_of(
+            "POST /jobs HTTP/1.1\r\nAuthorization: Bearer s3cret\r\n\r\n",
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(h.authorization.as_deref(), Some("Bearer s3cret"));
+        assert!(token_matches(h.authorization.as_deref(), "s3cret"));
+        // Scheme is case-insensitive; the token is not.
+        assert!(token_matches(Some("bearer s3cret"), "s3cret"));
+        assert!(token_matches(Some("BEARER s3cret"), "s3cret"));
+        assert!(!token_matches(Some("Bearer S3CRET"), "s3cret"));
+        assert!(!token_matches(Some("Bearer s3cre"), "s3cret"));
+        assert!(!token_matches(Some("Bearer s3crets"), "s3cret"));
+        assert!(!token_matches(Some("Basic s3cret"), "s3cret"));
+        assert!(!token_matches(Some("s3cret"), "s3cret"), "no scheme");
+        assert!(!token_matches(None, "s3cret"));
+    }
+
+    #[test]
+    fn auth_covers_state_paths_and_spares_probes() {
+        for p in [
+            "/jobs",
+            "/jobs/7/result",
+            "/work/lease",
+            "/work/7/renew",
+            "/work/7/result",
+            "/artifacts/abcd",
+            "/shutdown",
+        ] {
+            assert!(path_needs_auth(p), "{p} must require auth");
+        }
+        for p in ["/healthz", "/stats", "/metrics", "/events", "/cache"] {
+            assert!(!path_needs_auth(p), "{p} must stay open");
+        }
     }
 
     #[test]

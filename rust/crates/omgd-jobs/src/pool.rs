@@ -15,14 +15,15 @@ use super::queue::{Job, JobQueue};
 use super::spec::JobSpec;
 use crate::metrics::Timer;
 use crate::obs;
-use crate::train::TrainOutcome;
 use anyhow::Result;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
 
-/// The deterministic slice of a [`TrainOutcome`] a job reports (and the
+/// The deterministic slice of a training outcome a job reports (and the
 /// cache persists). Wall-clock fields are carried for display but are
 /// excluded from CSV aggregates, which must be run-to-run identical.
+/// Built from the engine's `TrainOutcome` via the `From` impl in
+/// `omgd-train` (this crate never sees the engine).
 #[derive(Clone, Debug, Default)]
 pub struct JobOutcome {
     /// Final test accuracy % (classifier) or final eval loss (LM).
@@ -37,19 +38,6 @@ pub struct JobOutcome {
     pub loss_series: Vec<(usize, f64)>,
     /// (step, eval loss, eval acc%) series.
     pub eval_series: Vec<(usize, f64, f64)>,
-}
-
-impl JobOutcome {
-    pub fn from_train(out: &TrainOutcome) -> Self {
-        Self {
-            final_metric: out.final_metric,
-            tail_loss: out.tail_loss(20),
-            steps: out.loss_series.len(),
-            train_secs: out.train_secs,
-            loss_series: out.loss_series.clone(),
-            eval_series: out.eval_series.clone(),
-        }
-    }
 }
 
 /// Terminal state of one job.
@@ -191,7 +179,7 @@ pub(crate) fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
 mod tests {
     use super::*;
     use crate::config::RunConfig;
-    use crate::jobs::spec::ExperimentKind;
+    use crate::spec::ExperimentKind;
 
     fn spec(seed: u64) -> JobSpec {
         let mut cfg = RunConfig::default();

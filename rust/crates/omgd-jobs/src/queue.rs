@@ -13,6 +13,7 @@
 use super::spec::JobSpec;
 use crate::obs;
 use anyhow::{bail, Result};
+use omgd_util::lock_recover;
 use std::collections::BinaryHeap;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -148,9 +149,9 @@ impl JobQueue {
     /// Submit a job; blocks while the queue is full. Returns the job's
     /// sequence number, or an error if the queue is closed/cancelled.
     pub fn push(&self, spec: JobSpec, priority: i32) -> Result<u64> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_recover(&self.state);
         while st.heap.len() >= st.capacity && !st.closed && !st.cancelled {
-            st = self.not_full.wait(st).unwrap();
+            st = self.not_full.wait(st).unwrap_or_else(|e| e.into_inner());
         }
         if st.closed || st.cancelled {
             bail!("job queue is closed");
@@ -175,7 +176,7 @@ impl JobQueue {
     /// cannot be enqueued. Lets a caller keep its own critical section
     /// short — retry with [`Self::wait_not_full`] between attempts.
     pub fn try_push(&self, spec: JobSpec, priority: i32) -> TryPush {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_recover(&self.state);
         if st.closed || st.cancelled {
             return TryPush::Closed(spec);
         }
@@ -201,9 +202,9 @@ impl JobQueue {
     /// Block until the queue has room for a push — or is closed or
     /// cancelled, after which push attempts fail fast.
     pub fn wait_not_full(&self) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_recover(&self.state);
         while st.heap.len() >= st.capacity && !st.closed && !st.cancelled {
-            st = self.not_full.wait(st).unwrap();
+            st = self.not_full.wait(st).unwrap_or_else(|e| e.into_inner());
         }
     }
 
@@ -211,7 +212,7 @@ impl JobQueue {
     /// empty and open. Returns `None` once the queue is closed and
     /// drained, or immediately after cancellation.
     pub fn pop(&self) -> Option<Job> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_recover(&self.state);
         loop {
             if st.cancelled {
                 return None;
@@ -230,7 +231,7 @@ impl JobQueue {
             if st.closed {
                 return None;
             }
-            st = self.not_empty.wait(st).unwrap();
+            st = self.not_empty.wait(st).unwrap_or_else(|e| e.into_inner());
         }
     }
 
@@ -240,7 +241,7 @@ impl JobQueue {
     /// retry" vs "no more work ever".
     pub fn pop_timeout(&self, timeout: Duration) -> PopTimeout {
         let deadline = Instant::now() + timeout;
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_recover(&self.state);
         loop {
             if st.cancelled {
                 return PopTimeout::Closed;
@@ -266,7 +267,7 @@ impl JobQueue {
             let (guard, _timed_out) = self
                 .not_empty
                 .wait_timeout(st, deadline - now)
-                .unwrap();
+                .unwrap_or_else(|e| e.into_inner());
             st = guard;
         }
     }
@@ -300,7 +301,7 @@ impl JobQueue {
         pred: &mut dyn FnMut(&JobSpec) -> bool,
     ) -> PopScan {
         let deadline = Instant::now() + timeout;
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_recover(&self.state);
         loop {
             if st.cancelled {
                 return PopScan::Closed;
@@ -323,7 +324,7 @@ impl JobQueue {
             let (guard, _timed_out) = self
                 .not_empty
                 .wait_timeout(st, deadline - now)
-                .unwrap();
+                .unwrap_or_else(|e| e.into_inner());
             st = guard;
         }
     }
@@ -395,7 +396,7 @@ impl JobQueue {
     /// draining). Only a cancelled queue refuses, since its consumers
     /// are already gone.
     pub fn requeue(&self, job: Job) -> Result<()> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_recover(&self.state);
         if st.cancelled {
             bail!("job queue is cancelled");
         }
@@ -419,14 +420,14 @@ impl JobQueue {
     /// their original seqs and *new* submissions can never collide
     /// with them. Never lowers the counter.
     pub fn resume_from(&self, next_seq: u64) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_recover(&self.state);
         st.next_seq = st.next_seq.max(next_seq);
     }
 
     /// Seal the producer side: further pushes fail, consumers drain the
     /// remaining jobs and then see `None`.
     pub fn close(&self) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_recover(&self.state);
         st.closed = true;
         drop(st);
         self.not_empty.notify_all();
@@ -436,7 +437,7 @@ impl JobQueue {
     /// Drop all pending jobs and wake everyone; pops return `None` from
     /// now on. Implies `close`.
     pub fn cancel(&self) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_recover(&self.state);
         st.cancelled = true;
         st.closed = true;
         st.heap.clear();
@@ -448,14 +449,14 @@ impl JobQueue {
 
     /// Number of pending (not yet popped) jobs.
     pub fn len(&self) -> usize {
-        self.state.lock().unwrap().heap.len()
+        lock_recover(&self.state).heap.len()
     }
 
     /// Maximum number of pending jobs (the bound given to
     /// [`Self::bounded`], clamped to ≥ 1). `len() >= capacity()` is the
     /// saturation signal the HTTP gateway turns into `429`.
     pub fn capacity(&self) -> usize {
-        self.state.lock().unwrap().capacity
+        lock_recover(&self.state).capacity
     }
 
     pub fn is_empty(&self) -> bool {
@@ -463,7 +464,7 @@ impl JobQueue {
     }
 
     pub fn is_cancelled(&self) -> bool {
-        self.state.lock().unwrap().cancelled
+        lock_recover(&self.state).cancelled
     }
 }
 
@@ -471,7 +472,7 @@ impl JobQueue {
 mod tests {
     use super::*;
     use crate::config::RunConfig;
-    use crate::jobs::spec::ExperimentKind;
+    use crate::spec::ExperimentKind;
 
     fn spec(seed: u64) -> JobSpec {
         let mut cfg = RunConfig::default();

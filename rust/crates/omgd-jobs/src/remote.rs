@@ -45,12 +45,12 @@
 //! rounds is retried once on a fresh socket.
 
 use super::cache::{self, ResultCache};
+use super::lifecycle::WorkerLeases;
 use super::pool::{panic_message, JobOutcome, JobResult, JobStatus};
 use super::report::GridReport;
 use super::serve::PhaseSecs;
 use super::spec::JobSpec;
 use super::sync::ArtifactStore;
-use super::SpecRunner;
 use crate::metrics::Timer;
 use crate::obs;
 use crate::util::json::{escape_str as esc, ser_f64 as ser_f, Json};
@@ -59,24 +59,8 @@ use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::time::{Duration, Instant};
-
-/// One agent-local lease registration: how often to renew, when the
-/// next renewal is due, and a per-run token so a stale run of a seq
-/// (its lease expired, the gateway re-leased the job back to a sibling
-/// thread of this very agent) can never unregister the live run's
-/// renewals.
-struct InFlight {
-    ttl: Duration,
-    next_renew: Instant,
-    token: u64,
-}
-
-type InFlightMap = Mutex<HashMap<u64, InFlight>>;
-
-static RUN_TOKEN: AtomicU64 = AtomicU64::new(0);
 
 /// Knobs for one `omgd worker` agent.
 #[derive(Clone, Debug)]
@@ -113,6 +97,10 @@ pub struct WorkerOptions {
     /// lease of the same spec — on a worker sharing this cache dir —
     /// resumes from it bitwise-identically (`docs/durability.md`).
     pub ckpt_period: usize,
+    /// Bearer token (`--token`) sent as `Authorization: Bearer <t>` on
+    /// every gateway request, for gateways running `--auth-token`.
+    /// `None` = no header (an open gateway).
+    pub token: Option<String>,
 }
 
 impl Default for WorkerOptions {
@@ -128,6 +116,7 @@ impl Default for WorkerOptions {
             max_jobs: 0,
             idle_exit_secs: 0,
             ckpt_period: 0,
+            token: None,
         }
     }
 }
@@ -182,21 +171,9 @@ impl StatCounters {
     }
 }
 
-/// Run a worker agent with the production [`SpecRunner`] (PJRT runtime
-/// per thread) until the gateway drains.
-pub fn run_worker(opts: &WorkerOptions) -> Result<WorkerStats> {
-    let ckpt_dir = std::path::PathBuf::from(
-        opts.cache_dir.as_deref().unwrap_or(super::DEFAULT_CACHE_DIR),
-    );
-    run_worker_with(opts, move |_wid| {
-        let mut runner = SpecRunner::new();
-        runner.set_ckpt(&ckpt_dir, opts.ckpt_period);
-        move |spec: &JobSpec| runner.run(spec)
-    })
-}
-
-/// [`run_worker`] with an injectable per-thread runner (tests use
-/// stubs, exactly like [`super::run_pool`] / [`super::run_gateway`]).
+/// Run a worker agent with an injectable per-thread runner (tests use
+/// stubs, exactly like [`super::run_pool`] / [`super::run_gateway`];
+/// the production trainer-backed `run_worker` lives in `omgd-train`).
 /// The agent wraps the runner with artifact sync, the local result
 /// cache, and panic isolation.
 pub fn run_worker_with<M, F>(
@@ -211,8 +188,8 @@ where
     let store = ArtifactStore::open(opts.store_dir.as_deref())?;
     let stats = StatCounters::default();
     // Every job this agent is currently running, for the heartbeat
-    // thread to renew.
-    let in_flight: InFlightMap = Mutex::new(HashMap::new());
+    // thread to renew — the worker-side lifecycle mirror.
+    let in_flight = WorkerLeases::new();
     let hb_stop = AtomicBool::new(false);
     // `--max-jobs` ledger, shared by every thread: a slot is claimed
     // before each lease poll and kept only when a job is granted.
@@ -297,14 +274,14 @@ fn worker_thread<F>(
     cache: &ResultCache,
     store: &ArtifactStore,
     stats: &StatCounters,
-    in_flight: &InFlightMap,
+    in_flight: &WorkerLeases,
     claimed: &AtomicUsize,
     runner: &mut F,
 ) -> Result<()>
 where
     F: FnMut(&JobSpec) -> Result<JobOutcome>,
 {
-    let mut conn = GatewayConn::new(&opts.connect);
+    let mut conn = GatewayConn::new(&opts.connect, opts.token.as_deref());
     let mut failures = 0usize;
     let mut ever_connected = false;
     let mut last_work = Instant::now();
@@ -424,7 +401,7 @@ fn run_lease<F>(
     cache: &ResultCache,
     store: &ArtifactStore,
     stats: &StatCounters,
-    in_flight: &InFlightMap,
+    in_flight: &WorkerLeases,
     runner: &mut F,
     lease: &Json,
 ) where
@@ -452,21 +429,14 @@ fn run_lease<F>(
     // lease. The token ties the registration to THIS run: if this
     // lease expires and the same seq is re-leased to a sibling thread,
     // neither this run's epilogue nor its heartbeat 409 may unregister
-    // the newer run's renewals.
-    let token = RUN_TOKEN.fetch_add(1, Ordering::Relaxed);
-    in_flight.lock().unwrap().insert(
-        seq,
-        InFlight { ttl, next_renew: Instant::now() + ttl / 3, token },
-    );
+    // the newer run's renewals — [`WorkerLeases`] enforces that.
+    let token =
+        in_flight.start(seq, ttl.as_secs(), Instant::now() + ttl / 3);
     let t = Timer::start();
     let (status, from_cache, phases) =
         execute_lease(opts, conn, cache, store, stats, runner, lease, &afp);
-    {
-        let mut map = in_flight.lock().unwrap();
-        if map.get(&seq).map(|e| e.token) == Some(token) {
-            map.remove(&seq);
-        }
-    }
+    // This run is over: drop only our own registration (token-guarded).
+    in_flight.lease_gone(seq, token);
     match &status {
         JobStatus::Done(_) if from_cache => {
             stats.cached.fetch_add(1, Ordering::Relaxed);
@@ -723,7 +693,7 @@ pub fn gateway_get(
     path: &str,
     timeout: Duration,
 ) -> Result<(u16, String)> {
-    let mut conn = GatewayConn::new(addr);
+    let mut conn = GatewayConn::new(addr, None);
     let (status, bytes) = conn.request_bytes("GET", path, &[], timeout)?;
     Ok((status, String::from_utf8_lossy(&bytes).into_owned()))
 }
@@ -751,26 +721,20 @@ fn fetch_artifacts(conn: &mut GatewayConn, fp: &str) -> Result<Vec<u8>> {
 /// stops.
 fn heartbeat_loop(
     opts: &WorkerOptions,
-    in_flight: &InFlightMap,
+    in_flight: &WorkerLeases,
     stop: &AtomicBool,
 ) {
-    let mut conn = GatewayConn::new(&opts.connect);
+    let mut conn = GatewayConn::new(&opts.connect, opts.token.as_deref());
     let body = format!("{{\"worker\":\"{}\"}}", esc(&opts.worker_id));
     while !stop.load(Ordering::SeqCst) {
         std::thread::sleep(Duration::from_millis(200));
-        let due: Vec<(u64, Duration, u64)> = {
-            let now = Instant::now();
-            let map = in_flight.lock().unwrap();
-            map.iter()
-                .filter(|(_, e)| e.next_renew <= now)
-                .map(|(&seq, e)| (seq, e.ttl, e.token))
-                .collect()
-        };
-        for (seq, ttl, token) in due {
+        for (seq, ttl_secs, token) in in_flight.due(Instant::now()) {
             // Only a definitive 409 means the lease is gone. Transport
             // errors and transient rejections (503 connection cap, …)
             // keep the renewal scheduled — dropping it on a blip would
-            // let a healthy long job's lease expire mid-run.
+            // let a healthy long job's lease expire mid-run. Either
+            // outcome is applied token-guarded: it must never touch a
+            // successor run's registration of the same seq.
             let lease_gone = matches!(
                 conn.request_json(
                     "POST",
@@ -780,20 +744,16 @@ fn heartbeat_loop(
                 ),
                 Ok((409, _))
             );
-            let mut map = in_flight.lock().unwrap();
-            // Touch the registration only if it is still the run we
-            // just renewed for (token match) — never a successor's.
-            if let Some(entry) = map.get_mut(&seq) {
-                if entry.token != token {
-                    continue;
-                }
-                if lease_gone {
-                    // Stop renewing, let the run finish — its result
-                    // will be dropped as stale.
-                    map.remove(&seq);
-                } else {
-                    entry.next_renew = Instant::now() + ttl / 3;
-                }
+            if lease_gone {
+                // Stop renewing, let the run finish — its result will
+                // be dropped as stale.
+                in_flight.lease_gone(seq, token);
+            } else {
+                in_flight.renewed(
+                    seq,
+                    token,
+                    Instant::now() + Duration::from_secs(ttl_secs) / 3,
+                );
             }
         }
     }
@@ -809,7 +769,8 @@ fn backoff(failures: usize) -> Duration {
 
 /// Submit `specs` to a gateway as one `POST /jobs` session and collect
 /// the results into a [`GridReport`] ordered like the input — the same
-/// shape [`super::run_grid`] returns, so callers print/CSV identically.
+/// shape the local grid runner returns, so callers print/CSV
+/// identically.
 ///
 /// Each request line is `{"spec":<wire>}` (full fidelity) and each
 /// ack's hash is checked against the locally-built cell, so a gateway
@@ -822,6 +783,19 @@ pub fn run_grid_remote(
     addr: &str,
     specs: Vec<JobSpec>,
     client: Option<&str>,
+) -> Result<GridReport> {
+    run_grid_remote_auth(addr, specs, client, None)
+}
+
+/// [`run_grid_remote`] against an auth-enabled gateway: `token`
+/// (`grid --remote --token`) rides every request as
+/// `Authorization: Bearer <token>` — the session submission, the
+/// by-seq re-polls after a broken stream, everything.
+pub fn run_grid_remote_auth(
+    addr: &str,
+    specs: Vec<JobSpec>,
+    client: Option<&str>,
+    token: Option<&str>,
 ) -> Result<GridReport> {
     if specs.is_empty() {
         return Ok(GridReport::new(Vec::new()));
@@ -842,7 +816,8 @@ pub fn run_grid_remote(
             .collect();
         if !todo.is_empty() {
             match stream_session(
-                addr, &specs, &todo, client, &mut statuses, &mut seqs,
+                addr, &specs, &todo, client, token, &mut statuses,
+                &mut seqs,
             ) {
                 Ok(()) => {}
                 Err(e) if attempt + 1 < SESSION_ATTEMPTS => {
@@ -863,7 +838,7 @@ pub fn run_grid_remote(
             .filter(|&i| statuses[i].is_none() && seqs[i].is_some())
             .collect();
         if !pending.is_empty() {
-            poll_by_seq(addr, &pending, &mut statuses, &mut seqs);
+            poll_by_seq(addr, token, &pending, &mut statuses, &mut seqs);
         }
         if statuses.iter().all(Option::is_some) {
             break;
@@ -909,6 +884,7 @@ fn stream_session(
     specs: &[JobSpec],
     todo: &[usize],
     client: Option<&str>,
+    token: Option<&str>,
     statuses: &mut [Option<(JobStatus, bool, f64)>],
     seqs: &mut [Option<u64>],
 ) -> Result<()> {
@@ -917,7 +893,8 @@ fn stream_session(
         .map(|&i| format!("{{\"spec\":{}}}\n", specs[i].to_wire()))
         .collect();
     // The returned reader is already positioned at the NDJSON body.
-    let mut reader = post_jobs_with_retry(addr, body.as_bytes(), client)?;
+    let mut reader =
+        post_jobs_with_retry(addr, body.as_bytes(), client, token)?;
 
     // seq (gateway) → index (ours). Acks and rejects arrive in request
     // order, so the n-th ack-or-reject line belongs to todo[n].
@@ -992,6 +969,7 @@ fn stream_session(
 /// transport errors burn budget instead of failing the grid.
 fn poll_by_seq(
     addr: &str,
+    token: Option<&str>,
     pending: &[usize],
     statuses: &mut [Option<(JobStatus, bool, f64)>],
     seqs: &mut [Option<u64>],
@@ -1000,7 +978,7 @@ fn poll_by_seq(
     // gateway restart and a long train step takes real time.
     const POLL_BUDGET: usize = 600;
     const ERR_BUDGET: usize = 30;
-    let mut conn = GatewayConn::new(addr);
+    let mut conn = GatewayConn::new(addr, token);
     for &i in pending {
         let Some(seq) = seqs[i] else { continue };
         let path = format!("/jobs/{seq}/result");
@@ -1099,11 +1077,13 @@ fn post_jobs_with_retry(
     addr: &str,
     body: &[u8],
     client: Option<&str>,
+    token: Option<&str>,
 ) -> Result<Box<dyn BufRead>> {
     const MAX_RETRIES: usize = 30;
     let client_hdr = client
         .map(|c| format!("X-OMGD-Client: {c}\r\n"))
         .unwrap_or_default();
+    let auth_hdr = bearer_header(token);
     let mut conn: Option<BufReader<TcpStream>> = None;
     let mut attempt = 0usize;
     let mut stale_retries = 0usize;
@@ -1122,7 +1102,8 @@ fn post_jobs_with_retry(
                 BufReader::new(stream)
             }
         };
-        let round = submit_jobs_round(&mut reader, body, &client_hdr);
+        let round =
+            submit_jobs_round(&mut reader, body, &client_hdr, &auth_hdr);
         let (status, headers) = match round {
             Ok(x) => x,
             // A reused connection the gateway idle-closed between
@@ -1212,6 +1193,7 @@ fn submit_jobs_round(
     reader: &mut BufReader<TcpStream>,
     body: &[u8],
     client_hdr: &str,
+    auth_hdr: &str,
 ) -> Result<(u16, HashMap<String, String>)> {
     {
         // One chunk per spec line is the wire shape; the chunk framing
@@ -1223,7 +1205,7 @@ fn submit_jobs_round(
             sw,
             "POST /jobs HTTP/1.1\r\nHost: omgd\r\nContent-Type: \
              application/x-ndjson\r\nTransfer-Encoding: chunked\r\n\
-             {client_hdr}Connection: keep-alive\r\n\r\n",
+             {client_hdr}{auth_hdr}Connection: keep-alive\r\n\r\n",
         )?;
         for line in body.split_inclusive(|&b| b == b'\n') {
             write!(sw, "{:x}\r\n", line.len())?;
@@ -1253,6 +1235,15 @@ fn connect(addr: &str) -> Result<TcpStream> {
         .with_context(|| format!("connecting to gateway {addr}"))
 }
 
+/// `Authorization: Bearer <token>\r\n` as a ready-to-splice header
+/// line, or empty when no token is configured — the same shape the
+/// `X-OMGD-Client` header uses.
+fn bearer_header(token: Option<&str>) -> String {
+    token
+        .map(|t| format!("Authorization: Bearer {t}\r\n"))
+        .unwrap_or_default()
+}
+
 /// One persistent keep-alive connection to the gateway for the
 /// worker-protocol endpoints. Every request announces
 /// `Connection: keep-alive`; as long as the gateway answers in kind
@@ -1263,12 +1254,19 @@ fn connect(addr: &str) -> Result<TcpStream> {
 /// network blip) is retried once on a fresh socket.
 struct GatewayConn {
     addr: String,
+    /// Pre-rendered `Authorization` header line ([`bearer_header`]);
+    /// empty for an open gateway.
+    auth_hdr: String,
     stream: Option<BufReader<TcpStream>>,
 }
 
 impl GatewayConn {
-    fn new(addr: &str) -> Self {
-        Self { addr: addr.to_string(), stream: None }
+    fn new(addr: &str, token: Option<&str>) -> Self {
+        Self {
+            addr: addr.to_string(),
+            auth_hdr: bearer_header(token),
+            stream: None,
+        }
     }
 
     /// One request/response round trip; the response body is read
@@ -1324,6 +1322,7 @@ impl GatewayConn {
         body: &[u8],
         timeout: Duration,
     ) -> Result<(u16, Vec<u8>)> {
+        let auth_hdr = self.auth_hdr.clone();
         let reader =
             self.stream.as_mut().expect("round_trip needs a connection");
         reader.get_ref().set_read_timeout(Some(timeout)).ok();
@@ -1334,7 +1333,7 @@ impl GatewayConn {
                 sw,
                 "{method} {path} HTTP/1.1\r\nHost: omgd\r\n\
                  Content-Type: application/json\r\nContent-Length: {}\
-                 \r\nConnection: keep-alive\r\n\r\n",
+                 \r\n{auth_hdr}Connection: keep-alive\r\n\r\n",
                 body.len()
             )?;
             sw.write_all(body)?;
@@ -1417,7 +1416,7 @@ fn read_headers<R: BufRead>(
 mod tests {
     use super::*;
     use crate::config::RunConfig;
-    use crate::jobs::spec::ExperimentKind;
+    use crate::spec::ExperimentKind;
 
     #[test]
     fn status_lines_parse() {
@@ -1451,6 +1450,15 @@ mod tests {
         assert!(o.final_metric.is_nan());
         assert_eq!(o.tail_loss, 0.5);
         assert_eq!(o.steps, 7);
+    }
+
+    #[test]
+    fn bearer_headers_render_as_splice_ready_lines() {
+        assert_eq!(bearer_header(None), "");
+        assert_eq!(
+            bearer_header(Some("s3cret")),
+            "Authorization: Bearer s3cret\r\n"
+        );
     }
 
     #[test]

@@ -207,8 +207,8 @@ impl GridReport {
 mod tests {
     use super::*;
     use crate::config::{Method, RunConfig};
-    use crate::jobs::pool::{JobOutcome, JobStatus};
-    use crate::jobs::spec::{ExperimentKind, JobSpec};
+    use crate::pool::{JobOutcome, JobStatus};
+    use crate::spec::{ExperimentKind, JobSpec};
 
     fn result(seq: u64, seed: u64, metric: f64, ok: bool) -> JobResult {
         let mut cfg = RunConfig::default();

@@ -38,26 +38,16 @@ use super::journal::{JobJournal, PendingJob, Record as JournalRecord, Replay};
 use super::pool::{worker_loop, JobOutcome, JobResult, JobStatus};
 use super::queue::{Job, JobQueue, PopScan, PopTimeout, TryPush};
 use super::spec::JobSpec;
-use super::{cached_runner, open_cache, GridOptions};
+use crate::lifecycle::{ClientLedger, JobEvent, Lifecycle};
 use crate::obs;
 use crate::util::json::Json;
 use anyhow::Result;
+use omgd_util::lock_recover;
 use std::collections::{HashMap, HashSet, VecDeque};
 use std::io::{BufRead, Write};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{mpsc, Condvar, Mutex, MutexGuard, OnceLock};
+use std::sync::{mpsc, Condvar, Mutex, OnceLock};
 use std::time::{Duration, Instant};
-
-/// Lock a shared-map mutex, recovering from poisoning. A worker or
-/// connection thread that panics while holding one of the hub's maps
-/// must not turn every later request into a 500/panic until restart:
-/// the maps' invariants are per-entry (insert/remove of self-contained
-/// values), so the inner state is still usable after a poisoned
-/// unlock. Every shared-map lock site in the serving layer goes
-/// through here.
-pub(crate) fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
-    m.lock().unwrap_or_else(|e| e.into_inner())
-}
 
 /// Counters for one serve session.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -102,6 +92,11 @@ impl Default for SessionOptions {
 /// own accept loop.
 pub struct JobHub {
     pub queue: JobQueue,
+    /// The transition authority. Every job state change below —
+    /// admission, enqueue, lease, renew, expiry, report, dispatch,
+    /// replay — is applied here **first**; the maps that follow are
+    /// projections of it, never the source of truth.
+    lifecycle: Lifecycle,
     routes: Mutex<HashMap<u64, Route>>,
     /// Jobs currently leased to remote workers, keyed by seq. An
     /// expired entry is requeued (same seq) by [`Self::requeue_expired`]
@@ -110,11 +105,7 @@ pub struct JobHub {
     /// Unfinished jobs per client token, across every session that
     /// presented the token ([`Self::acquire_client_slot`] /
     /// [`Self::dispatch`]); the fairness ledger behind `--client-quota`.
-    clients: Mutex<HashMap<String, usize>>,
-    clients_cv: Condvar,
-    /// Per-token in-flight cap (`0` = unlimited); see
-    /// [`Self::set_client_quota`].
-    client_quota: AtomicUsize,
+    clients: ClientLedger,
     accepted: AtomicUsize,
     rejected: AtomicUsize,
     done: AtomicUsize,
@@ -154,15 +145,20 @@ struct CompletedLog {
 }
 
 impl CompletedLog {
-    fn insert(&mut self, r: JobResult) {
+    /// Insert a result, returning the seqs evicted from the retained
+    /// window so the caller can drop them from the lifecycle table too.
+    fn insert(&mut self, r: JobResult) -> Vec<u64> {
         if self.map.insert(r.seq, r.clone()).is_none() {
             self.order.push_back(r.seq);
         }
+        let mut evicted = Vec::new();
         while self.order.len() > RETAINED_RESULTS {
             if let Some(old) = self.order.pop_front() {
                 self.map.remove(&old);
+                evicted.push(old);
             }
         }
+        evicted
     }
 }
 
@@ -268,11 +264,10 @@ impl JobHub {
     pub fn new(queue_capacity: usize) -> Self {
         Self {
             queue: JobQueue::bounded(queue_capacity),
+            lifecycle: Lifecycle::new(),
             routes: Mutex::new(HashMap::new()),
             leases: Mutex::new(HashMap::new()),
-            clients: Mutex::new(HashMap::new()),
-            clients_cv: Condvar::new(),
-            client_quota: AtomicUsize::new(0),
+            clients: ClientLedger::new(),
             accepted: AtomicUsize::new(0),
             rejected: AtomicUsize::new(0),
             done: AtomicUsize::new(0),
@@ -326,6 +321,13 @@ impl JobHub {
         self.seq_floor.fetch_max(rep.next_seq, Ordering::Relaxed);
         let mut requeued = 0usize;
         for p in rep.pending {
+            // Authority first: a journaled pending job is born straight
+            // into `Queued`. A duplicate seq in a corrupt journal is
+            // refused here and skipped instead of double-requeued.
+            if let Err(e) = self.lifecycle.apply(p.seq, &JobEvent::ReplayPending) {
+                eprintln!("warning: replay skipped seq {}: {e}", p.seq);
+                continue;
+            }
             let job = Job {
                 seq: p.seq,
                 priority: p.priority,
@@ -339,11 +341,9 @@ impl JobHub {
                 );
                 continue;
             }
-            if let Some(c) = &p.client {
-                *lock_recover(&self.clients)
-                    .entry(c.clone())
-                    .or_insert(0) += 1;
-            }
+            // Quota slots were legally held before the crash: rebuild
+            // without blocking on the (possibly lowered) quota.
+            self.clients.restore(p.client.as_deref());
             lock_recover(&self.orphans).insert(p.seq, p.client.clone());
             lock_recover(&self.live).insert(p.seq, p);
             self.accepted.fetch_add(1, Ordering::Relaxed);
@@ -352,6 +352,10 @@ impl JobHub {
         let n_done = rep.completed.len();
         let mut log = lock_recover(&self.completed);
         for r in rep.completed {
+            if let Err(e) = self.lifecycle.apply(r.seq, &JobEvent::ReplayDone) {
+                eprintln!("warning: replay skipped completed seq {}: {e}", r.seq);
+                continue;
+            }
             self.accepted.fetch_add(1, Ordering::Relaxed);
             if r.from_cache {
                 self.cached.fetch_add(1, Ordering::Relaxed);
@@ -361,7 +365,9 @@ impl JobHub {
             } else {
                 self.failed.fetch_add(1, Ordering::Relaxed);
             }
-            log.insert(r);
+            for old in log.insert(r) {
+                self.lifecycle.forget(old);
+            }
         }
         (requeued, n_done)
     }
@@ -414,64 +420,45 @@ impl JobHub {
             .collect()
     }
 
+    /// The job/lease transition authority — exposed read-only for
+    /// diagnostics and tests; mutations stay inside the hub methods.
+    pub fn lifecycle(&self) -> &Lifecycle {
+        &self.lifecycle
+    }
+
     /// Set the per-client in-flight quota (`0` = unlimited). The
     /// gateway installs `--client-quota` here before serving; changing
     /// it mid-flight only affects future acquisitions.
     pub fn set_client_quota(&self, quota: usize) {
-        self.client_quota.store(quota, Ordering::SeqCst);
-        self.clients_cv.notify_all();
+        self.clients.set_quota(quota);
     }
 
     /// Unfinished jobs currently accounted to `client` across every
     /// session presenting that token.
     pub fn client_in_flight(&self, client: &str) -> usize {
-        lock_recover(&self.clients).get(client).copied().unwrap_or(0)
+        self.clients.in_flight(client)
     }
 
     /// Snapshot of every client token with unfinished jobs, sorted by
     /// token (the `"clients"` block of `GET /stats`).
     pub fn clients_snapshot(&self) -> Vec<(String, usize)> {
-        let mut v: Vec<(String, usize)> = lock_recover(&self.clients)
-            .iter()
-            .map(|(k, &n)| (k.clone(), n))
-            .collect();
-        v.sort();
-        v
+        self.clients.snapshot()
     }
 
     /// Reserve one in-flight slot for `client`, blocking while the
-    /// token is at quota. Slots are released by [`Self::dispatch`] as
-    /// the token's results (from any of its sessions) drain, so a
-    /// blocked submitter always makes progress; callers on a failed
-    /// submit must return the slot via [`Self::release_client_slot`].
+    /// token is at quota ([`ClientLedger::acquire`]). Slots are
+    /// released by [`Self::dispatch`] as the token's results (from any
+    /// of its sessions) drain, so a blocked submitter always makes
+    /// progress; callers on a failed submit must return the slot via
+    /// [`Self::release_client_slot`].
     fn acquire_client_slot(&self, client: &str) {
-        let mut map = lock_recover(&self.clients);
-        loop {
-            let quota = self.client_quota.load(Ordering::SeqCst);
-            let n = map.get(client).copied().unwrap_or(0);
-            if quota == 0 || n < quota {
-                *map.entry(client.to_string()).or_insert(0) += 1;
-                return;
-            }
-            map = self
-                .clients_cv
-                .wait(map)
-                .unwrap_or_else(|e| e.into_inner());
-        }
+        self.clients.acquire(Some(client));
     }
 
     /// Return a slot acquired by [`Self::acquire_client_slot`] whose
     /// job never made it into the queue.
     fn release_client_slot(&self, client: &str) {
-        let mut map = lock_recover(&self.clients);
-        if let Some(n) = map.get_mut(client) {
-            *n = n.saturating_sub(1);
-            if *n == 0 {
-                map.remove(client);
-            }
-        }
-        drop(map);
-        self.clients_cv.notify_all();
+        self.clients.release(Some(client));
     }
 
     /// True when the pending queue is at capacity — the signal the HTTP
@@ -508,6 +495,17 @@ impl JobHub {
                 let mut routes = lock_recover(&self.routes);
                 match self.queue.try_push(spec, priority) {
                     TryPush::Pushed(seq) => {
+                        // Authority first: the seq is fresh off the
+                        // queue's counter, so Admit → Enqueue cannot
+                        // be refused; a failure here means seq reuse
+                        // and is a bug worth shouting about.
+                        for ev in [JobEvent::Admit, JobEvent::Enqueue] {
+                            if let Err(e) = self.lifecycle.apply(seq, &ev) {
+                                eprintln!(
+                                    "warning: lifecycle refused {ev:?} for fresh seq {seq}: {e}"
+                                );
+                            }
+                        }
                         routes.insert(
                             seq,
                             Route {
@@ -587,6 +585,24 @@ impl JobHub {
     /// the remote completion path, so both provide exactly-once dispatch
     /// through the same `routes.remove`.
     fn dispatch(&self, r: JobResult) {
+        // Authority first. Local results finalize out of Queued/
+        // Requeued (cache hits and pool completions never pass through
+        // a lease); remote results arrive here already `Reported` by
+        // [`Self::complete_remote`]. Jobs pushed straight into the
+        // public queue meet the authority for the first time here.
+        if let Err(e) = self.lifecycle.apply_or_register(
+            r.seq,
+            &[JobEvent::Admit, JobEvent::Enqueue],
+            &JobEvent::Finalize,
+        ) {
+            // A second result for a finalized seq would double-count
+            // and double-send; the authority makes that impossible.
+            eprintln!(
+                "warning: dropping duplicate/illegal result for seq {}: {e}",
+                r.seq
+            );
+            return;
+        }
         if r.from_cache {
             self.cached.fetch_add(1, Ordering::Relaxed);
             obs::CACHE_HITS.inc();
@@ -608,7 +624,14 @@ impl JobHub {
                 secs: r.secs,
                 spec: r.spec.clone(),
             });
-            lock_recover(&self.completed).insert(r.clone());
+            for old in lock_recover(&self.completed).insert(r.clone()) {
+                self.lifecycle.forget(old);
+            }
+        } else {
+            // No retained-results window: the terminal state has been
+            // externalized once the route fires, so the authority can
+            // forget the seq and stay O(live) in memory.
+            self.lifecycle.forget(r.seq);
         }
         let reply = lock_recover(&self.routes).remove(&r.seq);
         lock_recover(&self.live).remove(&r.seq);
@@ -684,6 +707,27 @@ impl JobHub {
                 PopScan::Closed => return LeaseReply::Closed,
             }
         };
+        // Authority first: the popped job transitions Queued/Requeued →
+        // Leased(worker). The queue is also a public surface
+        // (`hub.queue.push`), so a job may meet the authority for the
+        // first time right here — `apply_or_register` admits it on the
+        // spot. A refusal means the seq raced into a state that cannot
+        // be leased; put the job back rather than hand out a lease the
+        // authority never granted.
+        if let Err(e) = self.lifecycle.apply_or_register(
+            job.seq,
+            &[JobEvent::Admit, JobEvent::Enqueue],
+            &JobEvent::Lease(worker.to_string()),
+        ) {
+            eprintln!(
+                "warning: lifecycle refused lease of seq {} to {worker:?}: {e}",
+                job.seq
+            );
+            if let Err(err) = self.queue.requeue(job) {
+                eprintln!("warning: could not return refused job to queue: {err:#}");
+            }
+            return LeaseReply::Idle;
+        }
         // The scan already fingerprinted the granted job — reuse it
         // instead of re-statting the artifact files.
         let afp = memo
@@ -736,13 +780,28 @@ impl JobHub {
     /// eventual result to be rejected as a conflict.
     pub fn renew(&self, seq: u64, worker: &str, ttl: Duration) -> bool {
         let renewed = {
+            // Both the transition and the expiry write happen under the
+            // lease-table lock so a renew can never interleave with the
+            // expiry sweep: whichever applies its transition first
+            // wins, and the loser sees a typed refusal.
             let mut leases = lock_recover(&self.leases);
-            match leases.get_mut(&seq) {
-                Some(e) if e.worker == worker => {
-                    e.expires = Instant::now() + ttl;
-                    true
-                }
-                _ => false,
+            match self
+                .lifecycle
+                .apply(seq, &JobEvent::Renew(worker.to_string()))
+            {
+                Ok(_) => match leases.get_mut(&seq) {
+                    Some(e) => {
+                        e.expires = Instant::now() + ttl;
+                        true
+                    }
+                    None => {
+                        // Authority said Leased but the projection lost
+                        // the entry — a bug, not a runtime condition.
+                        debug_assert!(false, "lease table out of sync for seq {seq}");
+                        false
+                    }
+                },
+                Err(_) => false,
             }
         };
         if renewed {
@@ -776,13 +835,21 @@ impl JobHub {
         phases: PhaseSecs,
     ) -> RemoteDone {
         let entry = {
+            // Transition under the lease-table lock (same discipline
+            // as renew): Leased(worker) → Reported, every other state
+            // — expired-and-requeued, re-leased elsewhere, unknown —
+            // is a typed refusal that becomes the 409 conflict.
             let mut leases = lock_recover(&self.leases);
-            let owned =
-                matches!(leases.get(&seq), Some(e) if e.worker == worker);
-            if owned {
-                leases.remove(&seq)
-            } else {
-                None
+            match self
+                .lifecycle
+                .apply(seq, &JobEvent::Report(Some(worker.to_string())))
+            {
+                Ok(_) => {
+                    let e = leases.remove(&seq);
+                    debug_assert!(e.is_some(), "lease table out of sync for seq {seq}");
+                    e
+                }
+                Err(_) => None,
             }
         };
         match entry {
@@ -841,8 +908,14 @@ impl JobHub {
                 .filter(|(_, e)| e.expires <= now)
                 .map(|(&s, _)| s)
                 .collect();
+            // Transition before removal, under the lease-table lock: a
+            // refusal means a renew or report won the race since the
+            // TTL was read, and the entry must be left alone.
             seqs.into_iter()
-                .filter_map(|s| leases.remove(&s).map(|e| (s, e)))
+                .filter_map(|s| {
+                    self.lifecycle.apply(s, &JobEvent::Expire).ok()?;
+                    leases.remove(&s).map(|e| (s, e))
+                })
                 .collect()
         };
         let mut n = 0;
@@ -1129,19 +1202,6 @@ where
     })
 }
 
-/// Serve one stdin/stdout-style session with the production cache-aware
-/// runner (runs the configured cache GC policy at open).
-pub fn serve<R, W>(input: R, output: W, opts: &GridOptions) -> Result<ServeStats>
-where
-    R: BufRead,
-    W: Write + Send,
-{
-    let cache = open_cache(opts)?;
-    serve_with(input, output, opts.workers, |_wid| {
-        cached_runner(&cache, opts.force)
-    })
-}
-
 /// Serve one session with an arbitrary worker factory (tests inject
 /// stubs): a hub with the historical `(2·workers).max(8)` queue bound
 /// and an unthrottled session.
@@ -1335,7 +1395,7 @@ this is not json\n\
         // fingerprint is deterministically "absent".
         cfg.artifacts_dir = "/nonexistent/omgd-test-artifacts".into();
         JobSpec {
-            kind: crate::jobs::spec::ExperimentKind::Pretrain,
+            kind: crate::spec::ExperimentKind::Pretrain,
             cfg,
         }
     }
@@ -1537,7 +1597,7 @@ this is not json\n\
         cfg.model = model.to_string();
         cfg.artifacts_dir = dir.to_string_lossy().into_owned();
         JobSpec {
-            kind: crate::jobs::spec::ExperimentKind::Pretrain,
+            kind: crate::spec::ExperimentKind::Pretrain,
             cfg,
         }
     }
@@ -1554,7 +1614,7 @@ this is not json\n\
         std::fs::write(dir.join("mb.json"), b"{\"b\":1}").unwrap();
         let sa = art_spec(&dir, "ma", 0);
         let sb = art_spec(&dir, "mb", 1);
-        let fp_b = crate::jobs::artifact_fingerprint(&sb.cfg);
+        let fp_b = crate::artifact_fingerprint(&sb.cfg);
         assert_ne!(fp_b, "absent");
 
         let hub = JobHub::new(8);
@@ -1664,8 +1724,7 @@ this is not json\n\
             panic!("poison leases");
         }));
         let _ = catch_unwind(AssertUnwindSafe(|| {
-            let _g = hub.clients.lock().unwrap();
-            panic!("poison clients");
+            hub.clients.with_lock(|| panic!("poison clients"));
         }));
         // Every later request must still work: submit → lease → renew
         // → complete, with the client ledger draining to zero.
@@ -1754,7 +1813,7 @@ this is not json\n\
         // Restarted incarnation on the same cache dir.
         let hub = JobHub::new(8);
         let rep =
-            crate::jobs::journal::replay(&JobJournal::path_in(&dir))
+            crate::journal::replay(&JobJournal::path_in(&dir))
                 .unwrap();
         hub.attach_journal(JobJournal::open(&dir).unwrap());
         let (requeued, completed) = hub.recover(rep);
@@ -1845,7 +1904,7 @@ this is not json\n\
         hub.compact_journal().unwrap();
         // The compacted journal replays to the same live state.
         let rep =
-            crate::jobs::journal::replay(&JobJournal::path_in(&dir))
+            crate::journal::replay(&JobJournal::path_in(&dir))
                 .unwrap();
         assert_eq!(rep.next_seq, s2 + 1);
         assert_eq!(

@@ -1,7 +1,7 @@
 //! Content-addressed artifact sync between a gateway and its remote
 //! workers.
 //!
-//! A [`crate::jobs::JobSpec`] names a model; running it needs the
+//! A [`crate::JobSpec`] names a model; running it needs the
 //! model's on-disk artifact set (`<model>.json` manifest, `*.hlo.txt`
 //! kernel texts, init dumps — every file `<model>.*` in the artifacts
 //! dir). The gateway identifies one concrete artifact set by its

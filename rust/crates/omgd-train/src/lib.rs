@@ -1,0 +1,24 @@
+//! # omgd-train — training engine and experiment drivers
+//!
+//! The layer that turns omgd-core numerics into runs: the masked
+//! training engine and checkpointed loops ([`train`]), the §5.1
+//! quadratic testbed ([`quadratic`]), the paper's experiment grid
+//! builders ([`experiments`]), and [`runner`] — the concrete
+//! [`omgd_jobs::JobExecutor`] that lets the job layer execute training
+//! specs without depending on this crate.
+//!
+//! Layering contract: this is the only crate that sees both
+//! `omgd-jobs` and the training engine. The job layer calls into us
+//! exclusively through the `JobExecutor` trait object it defines.
+
+pub mod experiments;
+pub mod quadratic;
+pub mod runner;
+pub mod train;
+
+// Path-compatibility aliases: moved files keep their historical
+// `crate::coordinator`, `crate::config`, `crate::jobs::JobSpec`, ...
+// paths and resolve them through the lower layers.
+pub use omgd_core::{coordinator, data, linalg, memory, optim, prop, rng, runtime};
+pub use omgd_jobs as jobs;
+pub use omgd_util::{bench, cli, config, manifest, metrics, obs, util};

@@ -1,0 +1,328 @@
+//! The trainer-backed job executor: where `omgd-jobs` meets the
+//! training engine.
+//!
+//! The job layer schedules, caches, journals, and leases work against
+//! the [`JobExecutor`] trait it defines, never this crate. This module
+//! supplies the production implementation — [`SpecRunner`], one PJRT
+//! runtime + compiled-bundle cache per worker thread — plus the
+//! concrete front-end wrappers (`run_grid`, `serve`, `serve_listen`,
+//! `run_worker`, `cached_runner`) that `main.rs` and the bench drivers
+//! call. They are re-exported under the historical `omgd::jobs::*`
+//! paths by the facade crate.
+
+use crate::config::{OptFamily, RunConfig};
+use crate::data::ClassTask;
+use crate::obs;
+use crate::runtime::bundle::UpdateKind;
+use crate::runtime::{ModelBundle, Runtime};
+use crate::train::{
+    train_classifier_ckpt, train_lm_ckpt, CkptCtl, TrainOutcome,
+};
+use anyhow::{anyhow, bail, Result};
+use omgd_jobs::serve::serve_with;
+use omgd_jobs::{
+    cached_runner_with, open_cache, resolve_artifacts, run_grid_with,
+    run_worker_with, serve_listen_with, ExperimentKind, GatewayStats,
+    GridOptions, GridReport, JobExecutor, JobOutcome, JobSpec,
+    ListenOptions, ResultCache, ServeStats, WorkerOptions, WorkerStats,
+    DEFAULT_CACHE_DIR,
+};
+use std::collections::HashMap;
+use std::io::{BufRead, Write};
+use std::path::{Path, PathBuf};
+
+/// [`JobOutcome`] is the wire/cache-stable digest of a training run;
+/// this is the only place the job layer's outcome type and the
+/// engine's [`TrainOutcome`] meet (the orphan rule pins the impl to
+/// this crate, which is exactly the layering the workspace wants).
+impl From<&TrainOutcome> for JobOutcome {
+    fn from(out: &TrainOutcome) -> Self {
+        Self {
+            final_metric: out.final_metric,
+            tail_loss: out.tail_loss(20),
+            steps: out.loss_series.len(),
+            train_secs: out.train_secs,
+            loss_series: out.loss_series.clone(),
+            eval_series: out.eval_series.clone(),
+        }
+    }
+}
+
+/// Per-worker execution state: one PJRT runtime (created on the first
+/// non-cached job, so cache replays never touch XLA) plus compiled
+/// bundles keyed by `(model, optimizer family)`.
+pub struct SpecRunner {
+    rt: Option<Runtime>,
+    bundles: HashMap<String, ModelBundle>,
+    /// Checkpointing: `(cache dir, period in steps)`. Set by workers
+    /// running under `--ckpt-period`; `None` (the default) trains
+    /// straight through like before.
+    ckpt: Option<(PathBuf, usize)>,
+}
+
+impl Default for SpecRunner {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SpecRunner {
+    pub fn new() -> Self {
+        Self { rt: None, bundles: HashMap::new(), ckpt: None }
+    }
+
+    /// Enable periodic checkpointing into `cache_dir` (see
+    /// [`crate::train::CkptCtl`]); `period == 0` disables it.
+    pub fn set_ckpt(&mut self, cache_dir: &Path, period: usize) {
+        self.ckpt = (period > 0)
+            .then(|| (cache_dir.to_path_buf(), period));
+    }
+
+    /// Build the checkpoint control for one spec: resume from the
+    /// newest parked checkpoint (if any) and park new ones every
+    /// `period` steps under the spec's hash. Checkpointing is strictly
+    /// best-effort at this layer — an unopenable cache dir degrades to
+    /// a plain straight-through run.
+    fn ckpt_ctl(&self, spec: &JobSpec) -> CkptCtl<'static> {
+        let Some((dir, period)) = self.ckpt.clone() else {
+            return CkptCtl::default();
+        };
+        let dir = dir.to_string_lossy().into_owned();
+        let Ok(cache) = ResultCache::open(Some(&dir)) else {
+            return CkptCtl::default();
+        };
+        let hash = spec.hash_hex();
+        let resume = cache.latest_checkpoint(&hash);
+        if let Some(ck) = &resume {
+            obs::CKPT_RESUMES.inc();
+            eprintln!(
+                "  [ckpt ] resuming {} from step {}",
+                spec.label(),
+                ck.step
+            );
+        }
+        CkptCtl {
+            period,
+            resume,
+            sink: Some(Box::new(move |ck| {
+                cache.put_checkpoint(&hash, ck).map(|_| ())
+            })),
+        }
+    }
+
+    fn bundle(&mut self, cfg: &RunConfig) -> Result<&ModelBundle> {
+        let key = format!("{}:{}", cfg.model, cfg.opt.family.name());
+        if !self.bundles.contains_key(&key) {
+            let dir = resolve_artifacts(&cfg.artifacts_dir);
+            let man = dir.join(format!("{}.json", cfg.model));
+            // Cheap existence check before spinning up PJRT.
+            if !man.exists() {
+                bail!(
+                    "artifacts for {:?} missing at {} (run `make artifacts`)",
+                    cfg.model,
+                    man.display()
+                );
+            }
+            if self.rt.is_none() {
+                self.rt = Some(Runtime::cpu()?);
+            }
+            let update = match cfg.opt.family {
+                OptFamily::AdamW => UpdateKind::AdamW,
+                OptFamily::Sgdm => UpdateKind::Sgdm,
+            };
+            let bundle = ModelBundle::load(
+                self.rt.as_ref().unwrap(),
+                &dir,
+                &cfg.model,
+                update,
+            )?;
+            self.bundles.insert(key.clone(), bundle);
+        }
+        Ok(&self.bundles[&key])
+    }
+
+    /// Execute one spec to completion on this worker's runtime,
+    /// resuming from a parked checkpoint when one exists.
+    pub fn run(&mut self, spec: &JobSpec) -> Result<JobOutcome> {
+        spec.cfg.validate()?;
+        let ctl = self.ckpt_ctl(spec);
+        match &spec.kind {
+            ExperimentKind::Finetune { task, epochs } => {
+                let ts = crate::data::find_task(task)
+                    .ok_or_else(|| anyhow!("unknown task {task:?}"))?;
+                let bundle = self.bundle(&spec.cfg)?;
+                let t = ClassTask::from_spec(
+                    ts,
+                    bundle.man.data.d_in,
+                    bundle.man.data.n_class,
+                );
+                classifier_outcome(bundle, &spec.cfg, &t, *epochs, ctl)
+            }
+            ExperimentKind::Blobs { dataset, spread, data_seed, epochs } => {
+                let bundle = self.bundle(&spec.cfg)?;
+                let t = ClassTask::gaussian_blobs(
+                    dataset,
+                    bundle.man.data.d_in,
+                    bundle.man.data.n_class,
+                    omgd_jobs::spec::BLOBS_N_TRAIN,
+                    omgd_jobs::spec::BLOBS_N_TEST,
+                    *spread,
+                    *data_seed,
+                );
+                classifier_outcome(bundle, &spec.cfg, &t, *epochs, ctl)
+            }
+            ExperimentKind::Pretrain => {
+                let bundle = self.bundle(&spec.cfg)?;
+                let corpus =
+                    crate::experiments::pretrain_corpus(bundle, spec.cfg.steps);
+                let out = train_lm_ckpt(bundle, &spec.cfg, &corpus, ctl)?;
+                Ok(JobOutcome::from(&out))
+            }
+        }
+    }
+}
+
+impl JobExecutor for SpecRunner {
+    fn execute(&mut self, spec: &JobSpec) -> Result<JobOutcome> {
+        self.run(spec)
+    }
+}
+
+/// For classifier kinds the spec's `steps`/`eval_every` are in *epochs*
+/// (the bundle's batch size is unknown at spec-build time); resolve them
+/// to steps here.
+fn classifier_outcome(
+    bundle: &ModelBundle,
+    cfg: &RunConfig,
+    task: &ClassTask,
+    epochs: usize,
+    ctl: CkptCtl<'_>,
+) -> Result<JobOutcome> {
+    let steps_per_epoch = task.n_train().div_ceil(bundle.man.data.batch);
+    let mut cfg = cfg.clone();
+    cfg.steps = epochs.max(1) * steps_per_epoch;
+    cfg.eval_every = cfg.eval_every.saturating_mul(steps_per_epoch);
+    let out = train_classifier_ckpt(bundle, &cfg, task, ctl)?;
+    Ok(JobOutcome::from(&out))
+}
+
+/// The production worker function: consult the cache, else execute the
+/// spec with this worker's lazily-created runtime, then persist the
+/// fresh outcome. Returns `(outcome, from_cache)`.
+pub fn cached_runner(
+    cache: &ResultCache,
+    force: bool,
+) -> impl FnMut(&JobSpec) -> Result<(JobOutcome, bool)> + '_ {
+    cached_runner_with(cache, force, SpecRunner::new())
+}
+
+/// Run a grid of specs to completion with the production runner:
+/// enqueue all cells, shard them across `opts.workers` threads, reuse
+/// cached results unless `opts.force`, and return the
+/// (submission-ordered) report.
+pub fn run_grid(specs: Vec<JobSpec>, opts: &GridOptions) -> Result<GridReport> {
+    run_grid_with(specs, opts, |_wid| SpecRunner::new())
+}
+
+/// Serve one stdin/stdout-style session with the production cache-aware
+/// runner (runs the configured cache GC policy at open).
+pub fn serve<R, W>(input: R, output: W, opts: &GridOptions) -> Result<ServeStats>
+where
+    R: BufRead,
+    W: Write + Send,
+{
+    let cache = open_cache(opts)?;
+    serve_with(input, output, opts.workers, |_wid| {
+        cached_runner(&cache, opts.force)
+    })
+}
+
+/// Bind `addr` and run the gateway with the production cache-aware
+/// runner until `POST /shutdown`. `--listen 127.0.0.1:0` binds a free
+/// port; the actual address is printed to stderr.
+pub fn serve_listen(
+    addr: &str,
+    opts: &GridOptions,
+    lopts: &ListenOptions,
+) -> Result<GatewayStats> {
+    serve_listen_with(addr, opts, lopts, |_wid| SpecRunner::new())
+}
+
+/// Run a worker agent with the production [`SpecRunner`] (PJRT runtime
+/// per thread) until the gateway drains.
+pub fn run_worker(opts: &WorkerOptions) -> Result<WorkerStats> {
+    let ckpt_dir = PathBuf::from(
+        opts.cache_dir.as_deref().unwrap_or(DEFAULT_CACHE_DIR),
+    );
+    run_worker_with(opts, move |_wid| {
+        let mut runner = SpecRunner::new();
+        runner.set_ckpt(&ckpt_dir, opts.ckpt_period);
+        move |spec: &JobSpec| runner.run(spec)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use omgd_jobs::JobStatus;
+
+    fn missing_model_spec(seed: u64) -> JobSpec {
+        let mut cfg = RunConfig::default();
+        cfg.seed = seed;
+        // A model name no artifacts dir can contain, so the runner fails
+        // fast without touching PJRT.
+        cfg.model = "no-such-model-xyz".into();
+        JobSpec {
+            kind: ExperimentKind::Finetune { task: "CoLA".into(), epochs: 1 },
+            cfg,
+        }
+    }
+
+    fn tmp_dir(tag: &str) -> String {
+        let d = std::env::temp_dir()
+            .join(format!("omgd-grid-test-{tag}-{}", std::process::id()));
+        std::fs::remove_dir_all(&d).ok();
+        d.to_string_lossy().into_owned()
+    }
+
+    #[test]
+    fn grid_reports_missing_artifacts_as_failed_cells() {
+        let dir = tmp_dir("missing");
+        let opts = GridOptions {
+            workers: 2,
+            force: false,
+            cache_dir: Some(dir.clone()),
+            ..GridOptions::default()
+        };
+        let specs = vec![missing_model_spec(0), missing_model_spec(1)];
+        let report = run_grid(specs, &opts).unwrap();
+        assert_eq!(report.n_jobs(), 2);
+        assert_eq!(report.n_failed(), 2);
+        assert_eq!(report.n_cached(), 0);
+        match &report.results[0].status {
+            JobStatus::Failed(msg) => assert!(msg.contains("artifacts")),
+            other => panic!("expected Failed, got {other:?}"),
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn failed_cells_are_not_cached() {
+        let dir = tmp_dir("nocache");
+        let opts = GridOptions {
+            workers: 1,
+            force: false,
+            cache_dir: Some(dir.clone()),
+            ..GridOptions::default()
+        };
+        let report =
+            run_grid(vec![missing_model_spec(0)], &opts).unwrap();
+        assert_eq!(report.n_failed(), 1);
+        // Re-running must fail again (no poisoned cache entry), not hit.
+        let report2 =
+            run_grid(vec![missing_model_spec(0)], &opts).unwrap();
+        assert_eq!(report2.n_failed(), 1);
+        assert_eq!(report2.n_cached(), 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -9,10 +9,10 @@
 //! interface, so every experiment (Tables 3–6, Fig. 3–5, 7) is a loop
 //! over `Method` values with shared data and seeds.
 
-pub mod checkpoint;
+pub use omgd_util::checkpoint;
 pub mod engine;
 
-pub use checkpoint::Checkpoint;
+pub use omgd_util::checkpoint::Checkpoint;
 pub use engine::MethodEngine;
 
 use crate::config::RunConfig;
@@ -22,7 +22,7 @@ use crate::metrics::Timer;
 use crate::rng::Rng;
 use crate::runtime::ModelBundle;
 use anyhow::{ensure, Context, Result};
-use checkpoint::{pack_u64s, unpack_u64s};
+use omgd_util::checkpoint::{pack_u64s, unpack_u64s};
 
 /// Checkpoint control threaded into the training loops.
 ///

@@ -1,0 +1,25 @@
+//! # omgd-util — shared plumbing for the OMGD workspace
+//!
+//! The leaf crate of the workspace: run configuration ([`config`]),
+//! CLI argument parsing ([`cli`]), the artifact manifest ([`manifest`]),
+//! metrics/CSV emission ([`metrics`]), structured observability
+//! ([`obs`]), bench-table printing ([`bench`]), checkpoint packing
+//! ([`checkpoint`]), JSON and misc helpers ([`util`]), and the
+//! poison-tolerant locking discipline ([`lock`]) every crate above us
+//! shares.
+//!
+//! Layering contract: this crate depends only on `anyhow`. It must
+//! never grow a dependency on another omgd crate or on network code —
+//! `omgd-core`, `omgd-jobs`, and `omgd-train` all sit on top of it.
+
+pub mod bench;
+pub mod checkpoint;
+pub mod cli;
+pub mod config;
+pub mod lock;
+pub mod manifest;
+pub mod metrics;
+pub mod obs;
+pub mod util;
+
+pub use lock::{ct_eq, lock_recover};

@@ -1,0 +1,80 @@
+//! Shared locking and comparison primitives.
+//!
+//! Every shared map in the workspace is locked through
+//! [`lock_recover`] so a panicking holder (worker threads are
+//! panic-isolated by design) can never wedge the process: the poison
+//! flag is an advisory we explicitly decline, because all our guarded
+//! structures stay structurally valid across panics (inserts/removes
+//! are atomic with respect to the guard).
+//!
+//! [`ct_eq`] is the constant-time byte comparison backing bearer-token
+//! auth on the gateway; see `docs/serve-protocol.md`.
+
+use std::sync::{Mutex, MutexGuard};
+
+/// Lock `m`, recovering the guard if a previous holder panicked.
+///
+/// Used for every cross-thread map in the workspace (routes, leases,
+/// client ledger, artifact index, in-flight tables). A poisoned mutex
+/// only indicates that *some* holder panicked — our guarded values are
+/// kept consistent under the guard, so continuing is safe and keeps
+/// the gateway serving through worker panics.
+pub fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Constant-time equality over byte strings.
+///
+/// XOR-accumulates over `max(a.len(), b.len())` positions (reading a
+/// fixed `0` pad past either end) and folds the length difference into
+/// the accumulator, so neither the content nor the length of the
+/// expected secret leaks through early exit. Suitable for comparing
+/// bearer tokens; not a general cryptographic primitive.
+pub fn ct_eq(a: &[u8], b: &[u8]) -> bool {
+    let n = a.len().max(b.len());
+    let mut diff = (a.len() ^ b.len()) as u8;
+    for i in 0..n {
+        let x = a.get(i).copied().unwrap_or(0);
+        let y = b.get(i).copied().unwrap_or(0);
+        diff |= x ^ y;
+    }
+    diff == 0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    #[test]
+    fn lock_recover_survives_poison() {
+        let m = std::sync::Arc::new(Mutex::new(7usize));
+        let m2 = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        assert_eq!(*lock_recover(&m), 7);
+        *lock_recover(&m) = 8;
+        assert_eq!(*lock_recover(&m), 8);
+    }
+
+    #[test]
+    fn ct_eq_matches_slice_equality() {
+        let cases: &[(&[u8], &[u8], bool)] = &[
+            (b"", b"", true),
+            (b"a", b"a", true),
+            (b"a", b"b", false),
+            (b"secret", b"secret", true),
+            (b"secret", b"secres", false),
+            (b"secret", b"secre", false),
+            (b"", b"x", false),
+            (b"longer-token-value", b"longer-token-value", true),
+        ];
+        for (a, b, want) in cases {
+            assert_eq!(ct_eq(a, b), *want, "{a:?} vs {b:?}");
+        }
+    }
+}

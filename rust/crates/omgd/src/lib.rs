@@ -32,23 +32,24 @@
 //!
 //! Python never runs on the request path: after `make artifacts` the
 //! `omgd` binary is self-contained.
+//!
+//! Since the workspace split this crate is a facade: the numerics live
+//! in `omgd-core`, shared plumbing in `omgd-util`, job orchestration
+//! in `omgd-jobs`, and the training engine in `omgd-train`. The
+//! historical module paths (`omgd::jobs`, `omgd::train`, ...) are
+//! preserved here by re-export so downstream code is untouched.
 
-pub mod bench;
-pub mod cli;
-pub mod config;
-pub mod coordinator;
-pub mod data;
-pub mod experiments;
-pub mod jobs;
-pub mod linalg;
-pub mod manifest;
-pub mod memory;
-pub mod metrics;
-pub mod obs;
-pub mod optim;
-pub mod prop;
-pub mod quadratic;
-pub mod rng;
-pub mod runtime;
-pub mod train;
-pub mod util;
+pub use omgd_core::{coordinator, data, linalg, memory, optim, prop, rng, runtime};
+pub use omgd_train::{experiments, quadratic, train};
+pub use omgd_util::{bench, cli, config, manifest, metrics, obs, util};
+
+/// Job orchestration under its historical path, with the
+/// trainer-backed entry points (`run_grid`, `serve`, `serve_listen`,
+/// `run_worker`, `cached_runner`) grafted back in from
+/// `omgd_train::runner` — the workspace split moved their concrete
+/// implementations behind the [`omgd_jobs::JobExecutor`] seam, but the
+/// public surface stays `omgd::jobs::*`.
+pub mod jobs {
+    pub use omgd_jobs::*;
+    pub use omgd_train::runner::{cached_runner, run_grid, run_worker, serve, serve_listen};
+}

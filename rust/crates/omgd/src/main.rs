@@ -67,9 +67,9 @@ use omgd::data::{ClassTask, Corpus, CorpusConfig, LinRegData};
 use omgd::experiments::{finetune_spec, pretrain_config, FinetuneSetup,
                         PretrainSetup};
 use omgd::jobs::{
-    gateway_get, run_grid, run_grid_remote, run_worker, ExperimentKind,
-    GcPolicy, GridOptions, JobSpec, ListenOptions, ResultCache,
-    WorkerOptions,
+    gateway_get, run_grid, run_grid_remote_auth, run_worker,
+    ExperimentKind, GcPolicy, GridOptions, JobSpec, ListenOptions,
+    ResultCache, WorkerOptions,
 };
 use omgd::memory::{breakdown, ArchSpec, MemBreakdown, MemPolicy};
 use omgd::metrics::CsvWriter;
@@ -142,7 +142,7 @@ USAGE: omgd <subcommand> [flags]
     --kind finetune --tasks CoLA --methods full,lisa,lisa-wor
     --seeds 0,1,2 --keep-ratios 0.5 --epochs 4 --workers 4
     [--force] [--cache-dir DIR] [--out results/grid.csv]
-    [--remote HOST:PORT] [--client TOKEN]
+    [--remote HOST:PORT] [--client TOKEN] [--token BEARER]
   serve        long-lived job service sharing one worker pool + cache
                stdin mode: JSONL requests in, JSONL results out
                ({\"cmd\":\"shutdown\"} or EOF ends)
@@ -160,6 +160,9 @@ USAGE: omgd <subcommand> [flags]
     [--max-in-flight 32] [--queue-cap N] [--lease-secs 60]
     [--poll-secs 20] [--client-quota N] [--affinity-window 16]
     [--keepalive-idle-secs 60] [--metrics off|summary|full]
+    [--auth-token BEARER] (or OMGD_AUTH_TOKEN env): require
+    `Authorization: Bearer` on /jobs /work/* /artifacts/* /shutdown;
+    probes (/healthz /stats /metrics /events /cache) stay open
   stats        pretty-print a live gateway's /stats counters, phase
                latency percentiles, and /metrics family count; with
                --events N, tail the job-lifecycle event journal
@@ -172,6 +175,7 @@ USAGE: omgd <subcommand> [flags]
     --connect HOST:PORT [--workers N] [--id NAME] [--cache-dir DIR]
     [--artifact-store DIR] [--force] [--max-failures 5]
     [--max-jobs N] [--idle-exit SECS] [--ckpt-period STEPS]
+    [--token BEARER] (for gateways running --auth-token)
   cache-gc     prune the result cache (age cap, then size cap evicting
                least-recently-used-first; cache hits refresh recency);
                parked train checkpoints answer only to the age cap and
@@ -681,6 +685,7 @@ fn cmd_grid(args: &Args) -> Result<()> {
             );
         }
         let client = args.token_opt("client")?;
+        let token = args.token_opt("token")?;
         println!(
             "grid: {} cells ({} methods × {} seeds × {} keep-ratios) \
              → gateway {addr}{}",
@@ -693,7 +698,7 @@ fn cmd_grid(args: &Args) -> Result<()> {
                 .map(|c| format!(" as client {c:?}"))
                 .unwrap_or_default(),
         );
-        run_grid_remote(addr, specs, client.as_deref())?
+        run_grid_remote_auth(addr, specs, client.as_deref(), token.as_deref())?
     } else {
         let opts = grid_options_from_args(args)?;
         println!(
@@ -754,9 +759,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     &["off", "summary", "full"],
                 )?
                 .parse()?,
+            auth_token: serve_auth_token(args)?,
             ..defaults
         };
-        let stats = omgd::jobs::net::serve_listen(addr, &opts, &lopts)?;
+        let stats = omgd::jobs::serve_listen(addr, &opts, &lopts)?;
         eprintln!(
             "gateway drained: {} connection(s), {} request(s), \
              {} throttled (429), {} quota-throttled (429), \
@@ -779,7 +785,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     let stdin = std::io::stdin();
     let stats =
-        omgd::jobs::serve::serve(stdin.lock(), std::io::stdout(), &opts)?;
+        omgd::jobs::serve(stdin.lock(), std::io::stdout(), &opts)?;
     eprintln!(
         "serve done: {} accepted, {} rejected, {} ok, {} failed, \
          {} from cache",
@@ -787,6 +793,31 @@ fn cmd_serve(args: &Args) -> Result<()> {
         stats.cached
     );
     Ok(())
+}
+
+/// Gateway bearer token: `--auth-token` wins, else `OMGD_AUTH_TOKEN`
+/// from the environment (so the secret can stay out of `ps` output).
+/// Both validate like every other header-bound token; an empty env var
+/// counts as unset rather than as an unmatchable token.
+fn serve_auth_token(args: &Args) -> Result<Option<String>> {
+    if let Some(t) = args.token_opt("auth-token")? {
+        return Ok(Some(t));
+    }
+    match std::env::var("OMGD_AUTH_TOKEN") {
+        Ok(v) if v.is_empty() => Ok(None),
+        Ok(v) => {
+            let ok = v.len() <= 64
+                && v.chars().all(|c| c.is_ascii_graphic());
+            if !ok {
+                bail!(
+                    "OMGD_AUTH_TOKEN expects up to 64 printable \
+                     non-whitespace ASCII characters"
+                );
+            }
+            Ok(Some(v))
+        }
+        Err(_) => Ok(None),
+    }
 }
 
 /// `omgd stats`: connect to a live gateway and pretty-print its
@@ -920,6 +951,7 @@ fn cmd_worker(args: &Args) -> Result<()> {
         max_jobs: args.usize_or("max-jobs", 0)?,
         idle_exit_secs: args.u64_or("idle-exit", 0)?,
         ckpt_period: args.usize_or("ckpt-period", 0)?,
+        token: args.token_opt("token")?,
     };
     let stats = run_worker(&opts)?;
     eprintln!(

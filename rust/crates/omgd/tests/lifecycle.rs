@@ -1,0 +1,234 @@
+//! Lifecycle-authority property tests: random event interleavings
+//! against [`Lifecycle`], checked two ways.
+//!
+//! 1. **Oracle equivalence** — `Lifecycle::apply` must behave exactly
+//!    like the pure [`next_state`] function folded over a shadow map:
+//!    same accepted states, same typed refusals, and a refused event
+//!    never mutates the table.
+//! 2. **Journal equivalence** — mirroring each *accepted* transition
+//!    into the crash journal exactly the way the gateway does
+//!    (`Admit`/`Lease`/`Renew` as they happen, `Done` at finalize,
+//!    `Cancel` at cancel; queue membership and expiry are in-memory
+//!    only) and replaying it must classify every seq the same way the
+//!    live automaton does: finalized ↔ completed, cancelled ↔ gone,
+//!    anything else admitted ↔ pending (so a crash re-dispatches it).
+//!
+//! The exhaustive legal/illegal transition table itself is asserted
+//! unit-style inside `omgd-jobs::lifecycle`; these tests cover the
+//! *paths* — arbitrary orderings, duplicate deliveries, wrong-worker
+//! claims — that no table enumeration reaches.
+
+use omgd::config::RunConfig;
+use omgd::jobs::journal::{self, Record};
+use omgd::jobs::lifecycle::next_state;
+use omgd::jobs::{
+    ExperimentKind, JobEvent, JobOutcome, JobSpec, JobState, JobStatus,
+    Lifecycle,
+};
+use omgd::prop::{check, Gen};
+use std::collections::HashMap;
+
+fn spec_for(seq: u64) -> JobSpec {
+    let mut cfg = RunConfig::default();
+    cfg.seed = seq;
+    JobSpec {
+        kind: ExperimentKind::Finetune { task: "CoLA".into(), epochs: 1 },
+        cfg,
+    }
+}
+
+fn outcome_for(seq: u64) -> JobOutcome {
+    JobOutcome {
+        final_metric: seq as f64,
+        tail_loss: 0.5,
+        steps: 2,
+        train_secs: 0.1,
+        loss_series: vec![(0, 1.0)],
+        eval_series: vec![],
+    }
+}
+
+/// One random event aimed at one of a small pool of seqs. Workers are
+/// drawn from a pool of two so wrong-worker renews/reports occur
+/// naturally.
+fn random_event(g: &mut Gen) -> JobEvent {
+    match g.usize_in(0, 9) {
+        0 => JobEvent::Admit,
+        1 => JobEvent::Enqueue,
+        2 => JobEvent::Lease("w-0".into()),
+        3 => JobEvent::Lease("w-1".into()),
+        4 => JobEvent::Renew(
+            if g.bool() { "w-0".into() } else { "w-1".into() },
+        ),
+        5 => {
+            let named = g.bool();
+            let wrong = g.bool();
+            JobEvent::Report(named.then(|| {
+                if wrong { "w-1".into() } else { "w-0".into() }
+            }))
+        }
+        6 => JobEvent::Expire,
+        7 => JobEvent::Cancel,
+        8 => JobEvent::Finalize,
+        _ => {
+            if g.bool() {
+                JobEvent::ReplayPending
+            } else {
+                JobEvent::ReplayDone
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_lifecycle_apply_matches_pure_transition_oracle() {
+    check("lifecycle apply ≡ next_state oracle", 60, |g| {
+        let lc = Lifecycle::new();
+        let mut shadow: HashMap<u64, JobState> = HashMap::new();
+        for _ in 0..g.usize_in(1, 120) {
+            let seq = g.usize_in(0, 5) as u64;
+            let ev = random_event(g);
+            let expected = next_state(shadow.get(&seq), &ev);
+            let got = lc.apply(seq, &ev);
+            assert_eq!(got, expected, "seq {seq}, event {ev:?}");
+            match expected {
+                Ok(st) => {
+                    shadow.insert(seq, st);
+                }
+                Err(_) => {
+                    // A refusal must leave the table untouched.
+                    assert_eq!(
+                        lc.state(seq),
+                        shadow.get(&seq).cloned(),
+                        "refused event mutated seq {seq}"
+                    );
+                }
+            }
+        }
+        // Terminal bookkeeping agrees with the shadow map.
+        let want: Vec<u64> = {
+            let mut v: Vec<u64> = shadow
+                .iter()
+                .filter(|(_, s)| s.is_terminal())
+                .map(|(&k, _)| k)
+                .collect();
+            v.sort_unstable();
+            v
+        };
+        assert_eq!(lc.terminal_seqs(), want);
+        assert_eq!(lc.len(), shadow.len());
+    });
+}
+
+#[test]
+fn prop_accepted_transitions_replay_to_same_terminal_states() {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    static CASE: AtomicUsize = AtomicUsize::new(0);
+    check("lifecycle journal replay equivalence", 40, |g| {
+        let lc = Lifecycle::new();
+        let mut recs: Vec<Record> = Vec::new();
+        let n_seqs = g.usize_in(1, 6) as u64;
+        for _ in 0..g.usize_in(1, 140) {
+            let seq = g.usize_in(0, n_seqs as usize - 1) as u64;
+            let ev = random_event(g);
+            // Replay-only events model a *restart*; the journal the
+            // gateway writes never contains them, so keep this history
+            // to the live-gateway alphabet.
+            if matches!(ev, JobEvent::ReplayPending | JobEvent::ReplayDone) {
+                continue;
+            }
+            let Ok(_) = lc.apply(seq, &ev) else { continue };
+            // Mirror the accepted transition the way serve.rs journals
+            // it. Enqueue/Expire are deliberately unjournaled: queue
+            // membership and leases die with the process.
+            match &ev {
+                JobEvent::Admit => recs.push(Record::Admit {
+                    seq,
+                    priority: 0,
+                    client: None,
+                    spec: spec_for(seq),
+                }),
+                JobEvent::Lease(w) => recs
+                    .push(Record::Lease { seq, worker: w.clone() }),
+                JobEvent::Renew(w) => recs
+                    .push(Record::Renew { seq, worker: w.clone() }),
+                JobEvent::Finalize => recs.push(Record::Done {
+                    seq,
+                    status: JobStatus::Done(outcome_for(seq)),
+                    from_cache: false,
+                    secs: 0.1,
+                    spec: spec_for(seq),
+                }),
+                JobEvent::Cancel => recs.push(Record::Cancel { seq }),
+                JobEvent::Enqueue
+                | JobEvent::Report(_)
+                | JobEvent::Expire => {}
+                JobEvent::ReplayPending | JobEvent::ReplayDone => {
+                    unreachable!()
+                }
+            }
+        }
+        let path = std::env::temp_dir().join(format!(
+            "omgd-lifecycle-replay-{}-{}.log",
+            std::process::id(),
+            CASE.fetch_add(1, Ordering::Relaxed),
+        ));
+        let lines: Vec<String> =
+            recs.iter().map(Record::encode_line).collect();
+        std::fs::write(&path, lines.concat()).unwrap();
+        let rep = journal::replay(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+
+        let pending: Vec<u64> =
+            rep.pending.iter().map(|p| p.seq).collect();
+        let completed: Vec<u64> =
+            rep.completed.iter().map(|r| r.seq).collect();
+        for seq in 0..n_seqs {
+            match lc.state(seq) {
+                // Finalized jobs survive a crash as completed results.
+                Some(JobState::Done) => {
+                    assert!(completed.contains(&seq), "seq {seq} done");
+                    assert!(!pending.contains(&seq), "seq {seq} done");
+                }
+                // Cancelled jobs vanish entirely.
+                Some(JobState::Cancelled) => {
+                    assert!(!completed.contains(&seq), "seq {seq}");
+                    assert!(!pending.contains(&seq), "seq {seq}");
+                }
+                // Everything else the authority admitted must come
+                // back pending so a restart re-dispatches it —
+                // including Reported-but-unfinalized (its result was
+                // never durably dispatched) and expired leases.
+                Some(_) => {
+                    assert!(
+                        pending.contains(&seq),
+                        "live seq {seq} ({:?}) lost by replay",
+                        lc.state(seq)
+                    );
+                    assert!(!completed.contains(&seq), "seq {seq}");
+                }
+                // Never admitted: the journal cannot know it.
+                None => {
+                    assert!(!pending.contains(&seq), "seq {seq}");
+                    assert!(!completed.contains(&seq), "seq {seq}");
+                }
+            }
+        }
+        // Replaying the journal into a fresh authority (what serve
+        // startup does) lands every job in a legal, expected state.
+        let lc2 = Lifecycle::new();
+        for p in &rep.pending {
+            assert_eq!(
+                lc2.apply(p.seq, &JobEvent::ReplayPending),
+                Ok(JobState::Queued)
+            );
+        }
+        for r in &rep.completed {
+            assert_eq!(
+                lc2.apply(r.seq, &JobEvent::ReplayDone),
+                Ok(JobState::Done)
+            );
+        }
+        assert_eq!(lc2.len(), pending.len() + completed.len());
+    });
+}

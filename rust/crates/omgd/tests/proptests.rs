@@ -1,5 +1,5 @@
 //! Property-based tests on coordinator / optimizer invariants, using the
-//! in-repo prop framework (rust/src/prop.rs). Each property runs across
+//! in-repo prop framework (rust/crates/omgd-core/src/prop.rs). Each property runs across
 //! dozens of randomized cases; failures report a replayable seed.
 
 use omgd::coordinator::{DataSampler, LisaScheduler, LisaVariant, Mask,
