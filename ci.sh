@@ -9,6 +9,8 @@
 # Usage: ./ci.sh                      # full gate
 #        OMGD_BENCH_SCALE=1 ./ci.sh   # paper-shaped runtimes
 #        OMGD_CI_SKIP_SMOKE=1 ./ci.sh # skip the distributed smoke
+# The microbench stage always runs: every revision files a bench point,
+# so the perf trajectory has no gaps.
 set -euo pipefail
 cd "$(dirname "$0")"
 
@@ -41,6 +43,12 @@ done
 
 echo "== cargo test --workspace (OMGD_BENCH_SCALE=$OMGD_BENCH_SCALE)"
 cargo test -q --workspace
+
+# Thread-matrix pass: engines built from the environment must stay
+# bitwise-identical when they come up multi-threaded, so the training
+# suite runs a second time with a 4-wide step pool.
+echo "== cargo test -p omgd-train (OMGD_THREADS=4)"
+OMGD_THREADS=4 cargo test -q -p omgd-train
 
 # ---------------------------------------------------------------------
 # Layering guard: omgd-core is the numerics layer — it must never grow
@@ -82,26 +90,60 @@ fi
 echo "   clean (dense bridge confined to mask.rs + reference.rs)"
 
 # ---------------------------------------------------------------------
+# Scratch guard: the HLO-bridge dense-multiplier scratch is owned per
+# engine. The old `Mutex<RunsScratch>` inside ModelBundle serialized
+# every HLO step across engines sharing a bundle — it must not return.
+# ---------------------------------------------------------------------
+echo "== scratch guard: no Mutex<RunsScratch> in runtime/bundle.rs"
+if grep -nE 'Mutex<\s*RunsScratch\s*>' \
+    rust/crates/omgd-core/src/runtime/bundle.rs; then
+  echo "scratch guard FAILED: Mutex<RunsScratch> is back in" \
+       "runtime/bundle.rs — the per-step lock must stay dead" >&2
+  exit 1
+fi
+echo "   clean (RunsScratch is per-engine, lock-free)"
+
+# ---------------------------------------------------------------------
 # Mask-runs micro-bench: native masked-AdamW steps swept across
 # keep-ratios {0.05, 0.25, 1.0}, runs-descriptor path vs stepping over
 # the lazy dense bridge, plus a mask-refresh stage (splice +
-# on_mask_refresh churn). 10⁴ steps at scale 1; OMGD_BENCH_SCALE
-# shrinks it like every other bench. The binary verifies the two paths
-# agree bitwise before timing, bails if anything densified a mask
-# mid-bench, prints the ratios, and writes BENCH_maskruns.json at the
-# repo root so both trajectories are tracked across PRs.
+# on_mask_refresh churn) and a thread sweep ({1,2,4} threads × keep
+# {0.05,0.25}, every arm bitwise-verified against the serial walk
+# before its timing counts). 10⁴ steps at scale 1; OMGD_BENCH_SCALE
+# shrinks it like every other bench. The binary bails if anything
+# densified a mask mid-bench, prints the ratios, and writes
+# BENCH_maskruns.json at the repo root so the trajectories are tracked
+# across PRs. This stage always runs — no skip knob — so every
+# revision files a point.
 # ---------------------------------------------------------------------
 num_field() { # num_field FILE KEY → numeric value of "KEY":N
   sed -n "s/.*\"$2\":\([0-9.eE+-]*\).*/\1/p" "$1" | head -n1
 }
 
-if [[ "${OMGD_CI_SKIP_BENCH:-0}" == "1" ]]; then
-  echo "== mask-runs microbench: skipped (OMGD_CI_SKIP_BENCH=1)"
-else
-  echo "== mask-runs microbench (keep sweep {0.05,0.25,1.0} + refresh)"
+{
+  echo "== mask-runs microbench (keep sweep + refresh + thread sweep)"
   cargo build -q --release --bin omgd
   target/release/omgd microbench --keep 0.25 \
       --out BENCH_maskruns.json
+
+  # Thread-sweep gate: on a machine with ≥4 cores the 4-thread sharded
+  # step must be ≥2x faster than the 1-thread arm at keep 0.25 (the
+  # arms were already bitwise-verified by the binary). Narrower
+  # machines log the speedup and skip the teeth.
+  SP4=$(grep -o '{"threads":4,"k":0.25,[^}]*}' BENCH_maskruns.json \
+      | sed -n 's/.*"speedup":\([0-9.eE+-]*\).*/\1/p' | head -n1)
+  CORES=$(nproc 2>/dev/null || echo 1)
+  if [[ -n "$SP4" ]] && (( CORES >= 4 )); then
+    if awk -v s="$SP4" 'BEGIN { exit !(s < 2.0) }'; then
+      echo "bench thread-sweep FAILED: 4-thread speedup ${SP4}x < 2x" \
+           "at keep=0.25" >&2
+      exit 1
+    fi
+    echo "   thread sweep: 4-thread speedup ${SP4}x at keep=0.25 (≥2x)"
+  else
+    echo "   thread sweep: 4-thread speedup ${SP4:-n/a}x at keep=0.25" \
+         "(gate needs ≥4 cores; have $CORES)"
+  fi
 
   # Bench trajectory: file this run's point under its git revision
   # (the row itself is stamped with rev/scale/workers/unix_secs by the
@@ -163,7 +205,7 @@ else
   else
     echo "   no prior bench point; trajectory gate arms next run"
   fi
-fi
+}
 
 # ---------------------------------------------------------------------
 # Distributed smoke: boot a quota'd coordinator-only gateway, attach

@@ -147,6 +147,16 @@ impl MaskRuns {
         self.runs.iter().map(|r| (r.offset, r.len, r.scale)).collect()
     }
 
+    /// [`MaskRuns::descriptors`] into a caller-owned buffer — the
+    /// allocation-free form for per-step hot paths (the training
+    /// engine caches one buffer per mask period).
+    pub fn descriptors_into(&self, out: &mut Vec<(usize, usize, f32)>) {
+        out.clear();
+        out.extend(
+            self.runs.iter().map(|r| (r.offset, r.len, r.scale)),
+        );
+    }
+
     /// Number of active coordinates (cached; O(1)).
     pub fn active_count(&self) -> usize {
         self.active

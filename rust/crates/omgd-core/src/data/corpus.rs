@@ -90,14 +90,28 @@ impl Corpus {
     /// Pack a batch of window indices into contiguous `[B, S]` buffers.
     pub fn pack(&self, idx: &[usize], batch: usize)
                 -> (Vec<i32>, Vec<i32>) {
-        let mut xs = Vec::with_capacity(batch * self.seq);
-        let mut ys = Vec::with_capacity(batch * self.seq);
-        for b in 0..batch {
-            let (x, y) = self.window(idx[b % idx.len()]);
-            xs.extend_from_slice(&x);
-            ys.extend_from_slice(&y);
-        }
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        self.pack_into(idx, batch, &mut xs, &mut ys);
         (xs, ys)
+    }
+
+    /// [`Corpus::pack`] into caller-owned buffers — the allocation-free
+    /// form for the step loop (the trainer hoists one `(x, y)` pair per
+    /// run and reuses it every step). Reads the token windows directly,
+    /// skipping [`Corpus::window`]'s per-sample intermediates.
+    pub fn pack_into(&self, idx: &[usize], batch: usize,
+                     xs: &mut Vec<i32>, ys: &mut Vec<i32>) {
+        xs.clear();
+        ys.clear();
+        xs.reserve(batch * self.seq);
+        ys.reserve(batch * self.seq);
+        for b in 0..batch {
+            let start = idx[b % idx.len()] * (self.seq + 1);
+            let w = &self.tokens[start..start + self.seq + 1];
+            xs.extend(w[..self.seq].iter().map(|&t| t as i32));
+            ys.extend(w[1..].iter().map(|&t| t as i32));
+        }
     }
 
     /// Empirical unigram entropy in nats — the loss floor a

@@ -59,15 +59,35 @@ impl LinRegData {
 
     /// Per-sample gradient `∇f(θ; xᵢ, yᵢ) = 2 xᵢ (xᵢᵀθ − yᵢ)`.
     pub fn grad_sample(&self, theta: &[f64], i: usize) -> Vec<f64> {
+        let mut out = vec![0.0; theta.len()];
+        self.grad_sample_into(theta, i, &mut out);
+        out
+    }
+
+    /// [`LinRegData::grad_sample`] into a caller-owned buffer — the
+    /// allocation-free form for step loops (`out.len()` must be `d`).
+    pub fn grad_sample_into(&self, theta: &[f64], i: usize,
+                            out: &mut [f64]) {
         let x = &self.xs[i];
         let r = 2.0 * (dot(x, theta) - self.ys[i]);
-        x.iter().map(|&xi| r * xi).collect()
+        for (o, &xi) in out.iter_mut().zip(x) {
+            *o = r * xi;
+        }
     }
 
     /// Full gradient `∇F(θ) = Aθ − b`.
     pub fn grad_full(&self, theta: &[f64]) -> Vec<f64> {
-        let at = self.a.matvec(theta);
-        at.iter().zip(&self.b).map(|(a, b)| a - b).collect()
+        let mut out = vec![0.0; theta.len()];
+        self.grad_full_into(theta, &mut out);
+        out
+    }
+
+    /// [`LinRegData::grad_full`] into a caller-owned buffer.
+    pub fn grad_full_into(&self, theta: &[f64], out: &mut [f64]) {
+        self.a.matvec_into(theta, out);
+        for (o, &b) in out.iter_mut().zip(&self.b) {
+            *o -= b;
+        }
     }
 
     /// `F(θ) − F(θ*)` (suboptimality; always ≥ 0 up to float error).

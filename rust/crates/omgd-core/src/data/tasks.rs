@@ -151,14 +151,26 @@ impl ClassTask {
     /// does this on the final partial batch of an epoch).
     pub fn pack_train(&self, idx: &[usize], batch: usize)
                       -> (Vec<f32>, Vec<i32>) {
-        let mut x = Vec::with_capacity(batch * self.d_in);
-        let mut y = Vec::with_capacity(batch);
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        self.pack_train_into(idx, batch, &mut x, &mut y);
+        (x, y)
+    }
+
+    /// [`ClassTask::pack_train`] into caller-owned buffers — the
+    /// allocation-free form for the step loop (the trainer hoists one
+    /// `(x, y)` pair per run and reuses it every step).
+    pub fn pack_train_into(&self, idx: &[usize], batch: usize,
+                           x: &mut Vec<f32>, y: &mut Vec<i32>) {
+        x.clear();
+        y.clear();
+        x.reserve(batch * self.d_in);
+        y.reserve(batch);
         for b in 0..batch {
             let i = idx[b % idx.len()];
             x.extend_from_slice(&self.train_x[i]);
             y.push(self.train_y[i] as i32);
         }
-        (x, y)
     }
 
     pub fn pack_test(&self, start: usize, batch: usize)

@@ -1,0 +1,499 @@
+//! Data-parallel execution engine for the training core.
+//!
+//! A dependency-free, std-only persistent thread pool plus a
+//! deterministic shard partitioner over [`MaskRuns`]. The pool is
+//! spawned once per engine (`--threads N` / `OMGD_THREADS`, default =
+//! available parallelism) and drives optimizer steps, moment-state
+//! remaps at mask refresh, and the quadratic testbed's masked-gradient
+//! fill shard-parallel.
+//!
+//! ## Determinism contract
+//!
+//! Shards own *disjoint* `(offset, len)` coordinate windows — and,
+//! for compact-state optimizers, the matching disjoint slot windows of
+//! the SoA moment arrays — so parallel execution is race-free by
+//! construction. Every update in this codebase is elementwise (no
+//! cross-coordinate accumulation), so the result is **bitwise
+//! identical for every thread count**: the partition only decides who
+//! computes a coordinate, never what arithmetic reaches it. Property
+//! tests in `rust/crates/omgd/tests/proptests.rs` pin parallel ==
+//! serial bitwise for all five optimizers across thread counts.
+//!
+//! ## Pool shape
+//!
+//! [`ExecEngine::run_indexed`] erases the caller's closure to a raw
+//! pointer, enqueues one job handle per worker, and lets workers (and
+//! the calling thread — the caller always participates) claim indices
+//! with a relaxed `fetch_add`. The caller blocks until every index has
+//! completed, so the erased closure provably outlives every use; task
+//! panics are caught and re-raised on the caller.
+
+use crate::coordinator::{MaskRuns, Run};
+use omgd_util::lock_recover;
+use omgd_util::obs;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Active-coordinate count below which the engine layer prefers the
+/// serial step: dispatch costs a few µs of wakeups, so tiny masks stay
+/// inline. The optimizers themselves shard whenever asked — this
+/// threshold is policy for the hot loop, not a correctness guard.
+pub const PAR_MIN_ACTIVE: usize = 1 << 14;
+
+/// Thread count from the environment: `OMGD_THREADS` if set to a
+/// positive integer, else the machine's available parallelism.
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("OMGD_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+// ---------------------------------------------------------------------
+// Shard partitioner
+// ---------------------------------------------------------------------
+
+/// One shard of a runs walk: a slice of (possibly split) runs covering
+/// a contiguous coordinate window `[start, end)` and the matching
+/// contiguous compact-slot window `[start_slot, start_slot + active)`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Shard {
+    /// The runs this shard walks (splits of the input runs).
+    pub runs: Vec<Run>,
+    /// First coordinate owned (inclusive).
+    pub start: usize,
+    /// One past the last coordinate owned.
+    pub end: usize,
+    /// Active coordinates in every shard before this one — the offset
+    /// into prefix-indexed compact state (MaskedAdamW/Sgdm moments).
+    pub start_slot: usize,
+    /// Active coordinates owned by this shard.
+    pub active: usize,
+}
+
+/// Partition a mask's runs into at most `shards` balanced shards.
+/// See [`partition_runs`].
+pub fn partition(runs: &MaskRuns, shards: usize) -> Vec<Shard> {
+    partition_runs(runs.runs(), runs.active_count(), shards)
+}
+
+/// Partition sorted disjoint runs (with `active` total active
+/// coordinates) into at most `shards` shards, balanced to within one
+/// active coordinate. Runs are split where a shard boundary lands
+/// inside them, so each shard covers a contiguous coordinate window
+/// *and* a contiguous slot window; shard `i` precedes shard `i+1` in
+/// coordinate order (stable, deterministic in `(runs, shards)` only).
+pub fn partition_runs(rs: &[Run], active: usize, shards: usize) -> Vec<Shard> {
+    debug_assert_eq!(active, rs.iter().map(|r| r.len).sum::<usize>());
+    let shards = shards.max(1).min(active.max(1));
+    let base = active / shards;
+    let rem = active % shards;
+    let mut out = Vec::with_capacity(shards);
+    let mut it = rs.iter().copied();
+    let mut cur = it.next();
+    let mut slot = 0usize;
+    for s in 0..shards {
+        let mut want = base + usize::from(s < rem);
+        let start_slot = slot;
+        let mut sruns = Vec::new();
+        while want > 0 {
+            let r = cur.expect("active covers all runs");
+            if r.len <= want {
+                want -= r.len;
+                slot += r.len;
+                sruns.push(r);
+                cur = it.next();
+            } else {
+                sruns.push(Run { offset: r.offset, len: want, scale: r.scale });
+                slot += want;
+                cur = Some(Run {
+                    offset: r.offset + want,
+                    len: r.len - want,
+                    scale: r.scale,
+                });
+                want = 0;
+            }
+        }
+        let (start, end) = match (sruns.first(), sruns.last()) {
+            (Some(a), Some(b)) => (a.offset, b.end()),
+            _ => (0, 0),
+        };
+        out.push(Shard { runs: sruns, start, end, start_slot, active: slot - start_slot });
+    }
+    out
+}
+
+/// Load imbalance of a partition: max shard active count over the mean
+/// (1.0 = perfectly balanced). Empty partitions read as 1.0.
+pub fn shard_imbalance(shards: &[Shard]) -> f64 {
+    let total: usize = shards.iter().map(|s| s.active).sum();
+    if shards.is_empty() || total == 0 {
+        return 1.0;
+    }
+    let mean = total as f64 / shards.len() as f64;
+    let max = shards.iter().map(|s| s.active).max().unwrap_or(0) as f64;
+    max / mean
+}
+
+// ---------------------------------------------------------------------
+// Persistent pool
+// ---------------------------------------------------------------------
+
+/// One enqueued parallel region. Workers claim indices in `[0, n)`
+/// with a relaxed `fetch_add` on `next` and report completion through
+/// `done`; the submitting thread blocks on `done_cv` until
+/// `done == n`. `f` is a lifetime-erased pointer to the caller's
+/// closure — valid until the caller observes completion, and only
+/// dereferenced between a successful index claim and the matching
+/// `done` increment, both of which happen before that observation.
+struct Job {
+    f: *const (dyn Fn(usize) + Sync),
+    n: usize,
+    next: AtomicUsize,
+    done: AtomicUsize,
+    panicked: AtomicBool,
+    done_mx: Mutex<()>,
+    done_cv: Condvar,
+}
+
+// SAFETY: `f` points at a `Sync` closure that the submitting thread
+// keeps alive until every index completes (it blocks in
+// `run_indexed`); the raw pointer itself is never dereferenced after
+// the job's last `done` increment, and may dangle harmlessly in
+// queue residue afterwards (exhausted jobs return before touching it).
+unsafe impl Send for Job {}
+unsafe impl Sync for Job {}
+
+struct Shared {
+    queue: Mutex<VecDeque<Arc<Job>>>,
+    cv: Condvar,
+    shutdown: AtomicBool,
+}
+
+/// Persistent scoped thread pool: `threads - 1` workers spawned once
+/// (the caller participates in every region, so `threads == 1` means
+/// a pure serial engine with no threads at all).
+pub struct ExecEngine {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    threads: usize,
+}
+
+impl ExecEngine {
+    /// Spawn an engine with the given concurrency (clamped to ≥ 1).
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let handles = (1..threads)
+            .map(|i| {
+                let sh = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("omgd-exec-{i}"))
+                    .spawn(move || Self::worker_loop(&sh))
+                    .expect("spawn exec worker")
+            })
+            .collect();
+        Self { shared, handles, threads }
+    }
+
+    /// Engine from the environment ([`default_threads`]).
+    pub fn from_env() -> Self {
+        Self::new(default_threads())
+    }
+
+    /// Concurrency this engine runs at (including the caller).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    fn worker_loop(shared: &Shared) {
+        loop {
+            let job = {
+                let mut q = lock_recover(&shared.queue);
+                loop {
+                    if let Some(j) = q.pop_front() {
+                        break Some(j);
+                    }
+                    if shared.shutdown.load(Ordering::Relaxed) {
+                        break None;
+                    }
+                    q = shared
+                        .cv
+                        .wait(q)
+                        .unwrap_or_else(|e| e.into_inner());
+                }
+            };
+            match job {
+                Some(j) => Self::work_on(&j),
+                None => return,
+            }
+        }
+    }
+
+    /// Claim and run indices until the job is exhausted.
+    fn work_on(job: &Job) {
+        loop {
+            let i = job.next.fetch_add(1, Ordering::Relaxed);
+            if i >= job.n {
+                return;
+            }
+            // SAFETY: a successful claim (i < n) implies done < n, so
+            // the submitter is still blocked and the closure is alive.
+            let f = unsafe { &*job.f };
+            if catch_unwind(AssertUnwindSafe(|| f(i))).is_err() {
+                job.panicked.store(true, Ordering::Relaxed);
+            }
+            // AcqRel: the submitter's Acquire read of the final count
+            // synchronizes with every increment in the RMW chain, so
+            // all task writes are visible when it unblocks.
+            let d = job.done.fetch_add(1, Ordering::AcqRel) + 1;
+            if d == job.n {
+                let _g = lock_recover(&job.done_mx);
+                job.done_cv.notify_all();
+            }
+        }
+    }
+
+    /// Run `f(0), f(1), …, f(n-1)` across the pool, blocking until all
+    /// complete. Indices are claimed dynamically (no fixed chunking),
+    /// each runs exactly once, and the caller participates. Serial and
+    /// inline when `threads <= 1` or `n <= 1`. Panics (on the caller)
+    /// if any task panicked.
+    pub fn run_indexed<F: Fn(usize) + Sync>(&self, n: usize, f: F) {
+        if self.threads <= 1 || n <= 1 {
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        }
+        let f_ref: &(dyn Fn(usize) + Sync) = &f;
+        let job = Arc::new(Job {
+            f: f_ref as *const (dyn Fn(usize) + Sync),
+            n,
+            next: AtomicUsize::new(0),
+            done: AtomicUsize::new(0),
+            panicked: AtomicBool::new(false),
+            done_mx: Mutex::new(()),
+            done_cv: Condvar::new(),
+        });
+        {
+            let mut q = lock_recover(&self.shared.queue);
+            // One handle per helper: each pops once and then claims
+            // indices until exhaustion, so the queue never grows with n.
+            for _ in 0..(self.threads - 1).min(n - 1) {
+                q.push_back(job.clone());
+            }
+        }
+        self.shared.cv.notify_all();
+        Self::work_on(&job);
+        let mut g = lock_recover(&job.done_mx);
+        while job.done.load(Ordering::Acquire) < n {
+            g = job.done_cv.wait(g).unwrap_or_else(|e| e.into_inner());
+        }
+        drop(g);
+        if job.panicked.load(Ordering::Relaxed) {
+            panic!("exec: a parallel task panicked");
+        }
+    }
+
+    /// Run `f(i, &mut tasks[i])` for every task, each on some pool
+    /// thread, blocking until all complete. Per-shard wall time is
+    /// recorded into `omgd_exec_shard_seconds`. The dynamic index
+    /// claim hands each element to exactly one thread, so the `&mut`
+    /// projections never alias.
+    pub fn run_tasks<T, F>(&self, tasks: &mut [T], f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut T) + Sync,
+    {
+        let base = tasks.as_mut_ptr() as usize;
+        let n = tasks.len();
+        self.run_indexed(n, move |i| {
+            // SAFETY: each index is claimed exactly once (see
+            // run_indexed), so this is the sole &mut to element i for
+            // the duration of the call; T: Send permits the cross-
+            // thread handoff, and `base` outlives the blocking call.
+            let t = unsafe { &mut *(base as *mut T).add(i) };
+            let t0 = Instant::now();
+            f(i, t);
+            obs::EXEC_SHARD_SECONDS.observe(t0.elapsed().as_secs_f64());
+        });
+    }
+}
+
+impl Drop for ExecEngine {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Relaxed);
+        self.shared.cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Mask;
+    use std::sync::atomic::AtomicU64;
+
+    fn mask_with_segments(n: usize, segs: &[(usize, usize, f32)]) -> Mask {
+        let mut m = Mask::zeros(n);
+        for &(off, len, scale) in segs {
+            m.set_segment(off, len, scale).unwrap();
+        }
+        m
+    }
+
+    #[test]
+    fn partition_is_balanced_disjoint_and_covering() {
+        let mask = mask_with_segments(
+            100,
+            &[(0, 10, 1.0), (20, 5, 2.0), (40, 33, 1.0), (90, 7, 4.0)],
+        );
+        let runs = mask.runs();
+        let active = runs.active_count();
+        assert_eq!(active, 55);
+        for shards in [1usize, 2, 3, 4, 7, 55, 200] {
+            let parts = partition(runs, shards);
+            let want = shards.min(active);
+            assert_eq!(parts.len(), want, "shards={shards}");
+            // balanced within one active coordinate
+            let min = parts.iter().map(|s| s.active).min().unwrap();
+            let max = parts.iter().map(|s| s.active).max().unwrap();
+            assert!(max - min <= 1, "shards={shards}: {min}..{max}");
+            // slot windows tile [0, active) in order
+            let mut slot = 0usize;
+            for s in &parts {
+                assert_eq!(s.start_slot, slot);
+                assert_eq!(s.active, s.runs.iter().map(|r| r.len).sum::<usize>());
+                slot += s.active;
+            }
+            assert_eq!(slot, active);
+            // coordinate windows are disjoint and increasing, and the
+            // union of shard runs equals the active set exactly
+            let mut covered = vec![0u32; 100];
+            let mut prev_end = 0usize;
+            for s in &parts {
+                assert!(s.start >= prev_end, "shards={shards}");
+                assert!(s.end > s.start);
+                prev_end = s.end;
+                for r in &s.runs {
+                    assert!(r.offset >= s.start && r.end() <= s.end);
+                    for i in r.offset..r.end() {
+                        covered[i] += 1;
+                        assert_eq!(mask.value(i), r.scale, "coord {i}");
+                    }
+                }
+            }
+            for i in 0..100 {
+                let want = u32::from(mask.value(i) != 0.0);
+                assert_eq!(covered[i], want, "coord {i} shards={shards}");
+            }
+            // stable: same inputs, same partition
+            assert_eq!(parts, partition(runs, shards));
+        }
+    }
+
+    #[test]
+    fn partition_of_empty_mask_is_one_empty_shard() {
+        let mask = Mask::zeros(16);
+        let parts = partition(mask.runs(), 4);
+        assert_eq!(parts.len(), 1);
+        assert_eq!(parts[0].active, 0);
+        assert!(parts[0].runs.is_empty());
+        assert_eq!(shard_imbalance(&parts), 1.0);
+    }
+
+    #[test]
+    fn shard_imbalance_is_max_over_mean() {
+        let mask = mask_with_segments(40, &[(0, 30, 1.0)]);
+        let parts = partition(mask.runs(), 3);
+        // 30 split 3 ways exactly: perfectly balanced
+        assert!((shard_imbalance(&parts) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pool_runs_every_index_exactly_once_and_is_reusable() {
+        let exec = ExecEngine::new(4);
+        for round in 0..3 {
+            let n = 1000 + round;
+            let hits: Vec<AtomicU64> =
+                (0..n).map(|_| AtomicU64::new(0)).collect();
+            exec.run_indexed(n, |i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            assert!(
+                hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
+                "round {round}"
+            );
+        }
+    }
+
+    #[test]
+    fn run_tasks_gives_each_element_to_one_thread() {
+        let exec = ExecEngine::new(4);
+        let mut tasks: Vec<u64> = (0..64).collect();
+        exec.run_tasks(&mut tasks, |i, t| {
+            *t += 1000 * (i as u64 + 1);
+        });
+        for (i, t) in tasks.iter().enumerate() {
+            assert_eq!(*t, i as u64 + 1000 * (i as u64 + 1));
+        }
+    }
+
+    #[test]
+    fn serial_engine_runs_inline() {
+        let exec = ExecEngine::new(1);
+        assert_eq!(exec.threads(), 1);
+        let mut sum = 0u64;
+        // a non-Sync-unfriendly pattern that only works inline is not
+        // expressible through the Fn bound; instead check effects
+        let cell = AtomicU64::new(0);
+        exec.run_indexed(10, |i| {
+            cell.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        sum += cell.load(Ordering::Relaxed);
+        assert_eq!(sum, 45);
+    }
+
+    #[test]
+    fn task_panic_propagates_to_caller() {
+        let exec = ExecEngine::new(3);
+        let out = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            exec.run_indexed(16, |i| {
+                if i == 7 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(out.is_err(), "panic must surface on the caller");
+        // the pool survives a panicked region
+        let cell = AtomicU64::new(0);
+        exec.run_indexed(8, |_| {
+            cell.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(cell.load(Ordering::Relaxed), 8);
+    }
+
+    #[test]
+    fn default_threads_reads_env_then_parallelism() {
+        // no env manipulation here (tests run multi-threaded); just
+        // check the fallback is sane
+        assert!(default_threads() >= 1);
+    }
+}

@@ -3,7 +3,8 @@
 //! The paper's algorithms with no orchestration attached: Algorithm 1's
 //! `[M]×[N]` without-replacement mask traversal ([`coordinator`]),
 //! runs-first native optimizers with active-region-only moment state
-//! ([`optim`]), dense linear algebra and Stiefel sampling ([`linalg`]),
+//! ([`optim`]), the shard-parallel execution engine ([`exec`]),
+//! dense linear algebra and Stiefel sampling ([`linalg`]),
 //! deterministic RNG ([`rng`]), the analytic memory model ([`memory`]),
 //! data pipelines ([`data`]), the PJRT runtime bridge ([`runtime`]),
 //! and the in-repo property-testing harness ([`prop`]).
@@ -15,6 +16,7 @@
 
 pub mod coordinator;
 pub mod data;
+pub mod exec;
 pub mod linalg;
 pub mod memory;
 pub mod optim;

@@ -89,6 +89,16 @@ impl Mat {
             .collect()
     }
 
+    /// [`Mat::matvec`] into a caller-owned buffer — the allocation-free
+    /// form for step loops (`out.len()` must be `rows`).
+    pub fn matvec_into(&self, v: &[f64], out: &mut [f64]) {
+        assert_eq!(self.cols, v.len(), "matvec shape mismatch");
+        assert_eq!(self.rows, out.len(), "matvec_into output length");
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = dot(self.row(i), v);
+        }
+    }
+
     pub fn scale(&self, s: f64) -> Mat {
         let data = self.data.iter().map(|x| x * s).collect();
         Mat { rows: self.rows, cols: self.cols, data }

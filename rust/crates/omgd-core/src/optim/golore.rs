@@ -14,10 +14,11 @@
 //! block of G (computed by power iteration), refreshed on the same
 //! schedule — the dominated-subspace scheme whose bias §1(i) discusses.
 
-use crate::coordinator::MaskRuns;
+use crate::coordinator::{MaskRuns, Run};
+use crate::exec::ExecEngine;
 use crate::linalg::{stiefel, Mat};
 use crate::manifest::ParamInfo;
-use crate::optim::{dense_adamw_run, Optimizer};
+use crate::optim::{dense_adamw_run, par_adamw_segments, Optimizer};
 use crate::rng::Rng;
 
 /// How the projection factor is chosen.
@@ -152,6 +153,31 @@ impl GoloreOptimizer {
     pub fn projected_params(&self) -> usize {
         self.tensors.iter().map(|t| t.m.len()).sum()
     }
+
+    /// Overlaps of the mask runs with the (sorted) dense-fallback
+    /// segments: a merge walk in O(active ∩ fallback), each overlap
+    /// contiguous with a uniform scale. Both the serial and the
+    /// sharded step walk exactly this list, so they cannot drift.
+    fn fallback_overlaps(&self, runs: &MaskRuns) -> Vec<Run> {
+        let rs = runs.runs();
+        let mut out = Vec::new();
+        let (mut i, mut j) = (0usize, 0usize);
+        while i < rs.len() && j < self.dense.segments.len() {
+            let r = rs[i];
+            let (off, len) = self.dense.segments[j];
+            let lo = r.offset.max(off);
+            let hi = r.end().min(off + len);
+            if lo < hi {
+                out.push(Run { offset: lo, len: hi - lo, scale: r.scale });
+            }
+            if r.end() <= off + len {
+                i += 1;
+            } else {
+                j += 1;
+            }
+        }
+        out
+    }
 }
 
 /// Top-r left/right singular block of the gradient matrix via subspace
@@ -263,31 +289,38 @@ impl Optimizer for GoloreOptimizer {
         assert_eq!(runs.n(), self.n);
         let (bc1, bc2) = self.begin_step(g);
         self.step_projected(p, g, lr, bc1, bc2);
-        // Dense fallback tensors: merge-walk the mask runs against the
-        // (sorted) fallback segments — O(active ∩ fallback), no dense
-        // mask scan. Each overlap interval is contiguous with a uniform
-        // scale, so the shared SoA per-run kernel handles it whole.
+        // Dense fallback tensors: each run∩segment overlap is
+        // contiguous with a uniform scale, so the shared SoA per-run
+        // kernel handles it whole.
         let hp = (self.beta1, self.beta2, bc1, bc2, self.eps,
                   self.weight_decay);
-        let rs = runs.runs();
-        let (mut i, mut j) = (0usize, 0usize);
-        while i < rs.len() && j < self.dense.segments.len() {
-            let r = rs[i];
-            let (off, len) = self.dense.segments[j];
-            let lo = r.offset.max(off);
-            let hi = r.end().min(off + len);
-            if lo < hi {
-                dense_adamw_run(
-                    &mut self.dense.m, &mut self.dense.v, p, g, lo,
-                    hi - lo, r.scale, hp, lr,
-                );
-            }
-            if r.end() <= off + len {
-                i += 1;
-            } else {
-                j += 1;
-            }
+        for r in self.fallback_overlaps(runs) {
+            dense_adamw_run(
+                &mut self.dense.m, &mut self.dense.v, p, g, r.offset,
+                r.len, r.scale, hp, lr,
+            );
         }
+    }
+
+    fn step_sharded(
+        &mut self,
+        p: &mut [f32],
+        g: &[f32],
+        runs: &MaskRuns,
+        lr: f32,
+        exec: &ExecEngine,
+    ) {
+        assert_eq!(p.len(), self.n);
+        assert_eq!(runs.n(), self.n);
+        let (bc1, bc2) = self.begin_step(g);
+        // The projected update stays serial (dense matmuls over a few
+        // small tensors); only the dense-fallback runs walk shards.
+        self.step_projected(p, g, lr, bc1, bc2);
+        let hp = (self.beta1, self.beta2, bc1, bc2, self.eps,
+                  self.weight_decay);
+        let segs = self.fallback_overlaps(runs);
+        par_adamw_segments(exec, &segs, &mut self.dense.m,
+                           &mut self.dense.v, p, g, hp, lr);
     }
 
     fn state_bytes(&self) -> usize {

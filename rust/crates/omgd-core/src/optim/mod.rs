@@ -27,7 +27,14 @@
 //! keep dense state (their residency story is the projection /
 //! selection, not the mask) but still step through runs; their shared
 //! per-run AdamW update is the SoA [`dense_adamw_run`] helper, whose
-//! zipped-subslice inner loop the compiler autovectorizes.
+//! fixed-lane chunked inner loop the compiler autovectorizes.
+//!
+//! Every optimizer also exposes [`Optimizer::step_sharded`]: the same
+//! step driven shard-parallel over an [`ExecEngine`]. Shards own
+//! disjoint coordinate windows (and, for compact state, the matching
+//! slot windows), every update is elementwise, and the partition is a
+//! pure function of `(runs, shards)` — so the sharded step is
+//! **bitwise identical** to the serial one for every thread count.
 
 pub mod galore;
 pub mod golore;
@@ -38,7 +45,8 @@ pub use galore::GaloreOptimizer;
 pub use golore::{GoloreOptimizer, ProjectionKind};
 pub use sift::SiftOptimizer;
 
-use crate::coordinator::MaskRuns;
+use crate::coordinator::{MaskRuns, Run};
+use crate::exec::{partition, partition_runs, ExecEngine};
 
 /// Common interface: one update step on the flat parameter vector.
 /// The mask's segment runs carry both selection and scale (see
@@ -62,6 +70,36 @@ pub trait Optimizer {
     /// re-activated coordinates, free the rest). Default: no-op for
     /// optimizers without compact state.
     fn on_mask_refresh(&mut self, _runs: &MaskRuns) {}
+
+    /// Shard-parallel [`Optimizer::step`] over `exec`'s pool. Must be
+    /// **bitwise identical** to the serial step for every thread
+    /// count: the partition only decides which thread computes a
+    /// coordinate, never what arithmetic reaches it (all updates are
+    /// elementwise). The default runs the serial step; stateful
+    /// implementations override it with disjoint-window sharding.
+    fn step_sharded(
+        &mut self,
+        p: &mut [f32],
+        g: &[f32],
+        runs: &MaskRuns,
+        lr: f32,
+        exec: &ExecEngine,
+    ) {
+        let _ = exec;
+        self.step(p, g, runs, lr);
+    }
+
+    /// Shard-parallel [`Optimizer::on_mask_refresh`]: state
+    /// carry-copies may run on `exec`'s pool (the copy windows are
+    /// disjoint). Same bitwise contract as [`Optimizer::step_sharded`].
+    fn on_mask_refresh_sharded(
+        &mut self,
+        runs: &MaskRuns,
+        exec: &ExecEngine,
+    ) {
+        let _ = exec;
+        self.on_mask_refresh(runs);
+    }
 
     /// Bytes of optimizer state currently held (memory accounting).
     fn state_bytes(&self) -> usize;
@@ -178,18 +216,108 @@ impl ActiveMap {
     }
 }
 
-/// Dense-state masked-AdamW update over one contiguous run
-/// `[offset, offset+len)` at a uniform `scale`, shared by every
-/// optimizer that keeps full-length moments (golore's fallback
-/// segments, SIFT) so the arithmetic can never drift between them —
-/// the bitwise runs==dense property contract depends on it.
-///
-/// SoA form: each state array is sliced to the run and the inner loop
-/// walks zipped subslices of equal length, so the compiler hoists the
-/// bounds checks and autovectorizes the loop. The per-coordinate
-/// arithmetic (order of operations included) is exactly the scalar
-/// update the reference mirrors perform.
+/// Fixed lane width of the chunked inner bodies below: the hot loops
+/// walk `LANES`-wide blocks of equal-length subslices (bounds checks
+/// hoisted once per block, whole block eligible for vector registers)
+/// with a scalar remainder loop. Chunking never changes results —
+/// every update is elementwise, so block boundaries are invisible to
+/// the arithmetic.
+const LANES: usize = 8;
+
+/// Chunked masked-AdamW inner body over equal-length slices — the one
+/// SoA hot loop every AdamW-family path shares (compact-state
+/// [`MaskedAdamW`], golore's dense fallback, SIFT's intersection walk,
+/// the HLO-bridge mirrors), so the arithmetic can never drift between
+/// them. The per-coordinate update (order of operations included) is
+/// exactly the scalar update the reference mirrors perform.
 /// `hp = (beta1, beta2, bc1, bc2, eps, weight_decay)`.
+#[inline]
+pub(crate) fn adamw_lanes(
+    m: &mut [f32],
+    v: &mut [f32],
+    p: &mut [f32],
+    g: &[f32],
+    scale: f32,
+    hp: (f32, f32, f32, f32, f32, f32),
+    lr: f32,
+) {
+    let (b1, b2, bc1, bc2, eps, wd) = hp;
+    let n = m.len();
+    debug_assert!(v.len() == n && p.len() == n && g.len() == n);
+    let mut i = 0usize;
+    while i + LANES <= n {
+        let mb = &mut m[i..i + LANES];
+        let vb = &mut v[i..i + LANES];
+        let pb = &mut p[i..i + LANES];
+        let gb = &g[i..i + LANES];
+        for l in 0..LANES {
+            let gm = scale * gb[l];
+            let mn = b1 * mb[l] + (1.0 - b1) * gm;
+            let vn = b2 * vb[l] + (1.0 - b2) * gm * gm;
+            mb[l] = mn;
+            vb[l] = vn;
+            let mhat = mn / bc1;
+            let vhat = vn / bc2;
+            pb[l] -= lr * (mhat / (vhat.sqrt() + eps) + wd * pb[l]);
+        }
+        i += LANES;
+    }
+    for l in i..n {
+        let gm = scale * g[l];
+        let mn = b1 * m[l] + (1.0 - b1) * gm;
+        let vn = b2 * v[l] + (1.0 - b2) * gm * gm;
+        m[l] = mn;
+        v[l] = vn;
+        let mhat = mn / bc1;
+        let vhat = vn / bc2;
+        p[l] -= lr * (mhat / (vhat.sqrt() + eps) + wd * p[l]);
+    }
+}
+
+/// Chunked masked-SGDM inner body (same lane structure as
+/// [`adamw_lanes`]); `buf` is the momentum buffer slice.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+pub(crate) fn sgdm_lanes(
+    buf: &mut [f32],
+    p: &mut [f32],
+    g: &[f32],
+    scale: f32,
+    mu: f32,
+    wd: f32,
+    nesterov: bool,
+    lr: f32,
+) {
+    let n = buf.len();
+    debug_assert!(p.len() == n && g.len() == n);
+    let mut i = 0usize;
+    while i + LANES <= n {
+        let bb = &mut buf[i..i + LANES];
+        let pb = &mut p[i..i + LANES];
+        let gb = &g[i..i + LANES];
+        for l in 0..LANES {
+            let gm = scale * gb[l] + wd * pb[l];
+            let b = mu * bb[l] + gm;
+            bb[l] = b;
+            let upd = if nesterov { gm + mu * b } else { b };
+            pb[l] -= lr * upd;
+        }
+        i += LANES;
+    }
+    for l in i..n {
+        let gm = scale * g[l] + wd * p[l];
+        let b = mu * buf[l] + gm;
+        buf[l] = b;
+        let upd = if nesterov { gm + mu * b } else { b };
+        p[l] -= lr * upd;
+    }
+}
+
+/// Dense-state masked-AdamW update over one contiguous run
+/// `[offset, offset+len)` at a uniform `scale` — a slice-then-call
+/// wrapper over [`adamw_lanes`], kept for the segment walkers that
+/// index full-length state by flat coordinate (golore's fallback,
+/// SIFT). `hp = (beta1, beta2, bc1, bc2, eps, weight_decay)`.
 #[allow(clippy::too_many_arguments)]
 #[inline]
 pub(crate) fn dense_adamw_run(
@@ -203,24 +331,117 @@ pub(crate) fn dense_adamw_run(
     hp: (f32, f32, f32, f32, f32, f32),
     lr: f32,
 ) {
-    let (b1, b2, bc1, bc2, eps, wd) = hp;
     let end = offset + len;
-    let m = &mut m[offset..end];
-    let v = &mut v[offset..end];
-    let p = &mut p[offset..end];
-    let g = &g[offset..end];
-    for (((mi, vi), pi), gi) in
-        m.iter_mut().zip(v.iter_mut()).zip(p.iter_mut()).zip(g.iter())
-    {
-        let gm = scale * *gi;
-        let mn = b1 * *mi + (1.0 - b1) * gm;
-        let vn = b2 * *vi + (1.0 - b2) * gm * gm;
-        *mi = mn;
-        *vi = vn;
-        let mhat = mn / bc1;
-        let vhat = vn / bc2;
-        *pi -= lr * (mhat / (vhat.sqrt() + eps) + wd * *pi);
+    adamw_lanes(
+        &mut m[offset..end],
+        &mut v[offset..end],
+        &mut p[offset..end],
+        &g[offset..end],
+        scale,
+        hp,
+        lr,
+    );
+}
+
+/// Shard-parallel masked-AdamW over dense (coordinate-indexed) state:
+/// the segment list is partitioned into balanced shards of disjoint
+/// coordinate windows and each shard drives its own `m`/`v`/`p`
+/// windows through [`adamw_lanes`]. Falls back to the serial segment
+/// walk on a single-threaded engine; either way the per-coordinate
+/// arithmetic is identical, so results are bitwise equal for every
+/// thread count. Shared by golore's dense fallback, SIFT, and the
+/// HLO-bridge mirrors in the training engine.
+#[allow(clippy::too_many_arguments)]
+pub fn par_adamw_segments(
+    exec: &ExecEngine,
+    segs: &[Run],
+    m: &mut [f32],
+    v: &mut [f32],
+    p: &mut [f32],
+    g: &[f32],
+    hp: (f32, f32, f32, f32, f32, f32),
+    lr: f32,
+) {
+    let active: usize = segs.iter().map(|r| r.len).sum();
+    if active == 0 {
+        return;
     }
+    if exec.threads() <= 1 {
+        for r in segs {
+            dense_adamw_run(m, v, p, g, r.offset, r.len, r.scale, hp, lr);
+        }
+        return;
+    }
+    let mut shards = partition_runs(segs, active, exec.threads());
+    let bm = m.as_mut_ptr() as usize;
+    let bv = v.as_mut_ptr() as usize;
+    let bp = p.as_mut_ptr() as usize;
+    exec.run_tasks(&mut shards, |_, sh| {
+        for r in &sh.runs {
+            // SAFETY: shards own disjoint coordinate windows
+            // (partition_runs contract), so these are the only live
+            // references to those elements for the duration of the
+            // region; the caller blocks inside run_tasks, keeping the
+            // backing buffers alive.
+            let (ms, vs, ps) = unsafe {
+                (
+                    std::slice::from_raw_parts_mut(
+                        (bm as *mut f32).add(r.offset), r.len),
+                    std::slice::from_raw_parts_mut(
+                        (bv as *mut f32).add(r.offset), r.len),
+                    std::slice::from_raw_parts_mut(
+                        (bp as *mut f32).add(r.offset), r.len),
+                )
+            };
+            adamw_lanes(ms, vs, ps, &g[r.offset..r.offset + r.len],
+                        r.scale, hp, lr);
+        }
+    });
+}
+
+/// Shard-parallel masked-SGDM over dense state — see
+/// [`par_adamw_segments`]. `hp = (momentum, weight_decay, nesterov)`.
+pub fn par_sgdm_segments(
+    exec: &ExecEngine,
+    segs: &[Run],
+    buf: &mut [f32],
+    p: &mut [f32],
+    g: &[f32],
+    hp: (f32, f32, bool),
+    lr: f32,
+) {
+    let (mu, wd, nesterov) = hp;
+    let active: usize = segs.iter().map(|r| r.len).sum();
+    if active == 0 {
+        return;
+    }
+    if exec.threads() <= 1 {
+        for r in segs {
+            let end = r.offset + r.len;
+            sgdm_lanes(&mut buf[r.offset..end], &mut p[r.offset..end],
+                       &g[r.offset..end], r.scale, mu, wd, nesterov, lr);
+        }
+        return;
+    }
+    let mut shards = partition_runs(segs, active, exec.threads());
+    let bb = buf.as_mut_ptr() as usize;
+    let bp = p.as_mut_ptr() as usize;
+    exec.run_tasks(&mut shards, |_, sh| {
+        for r in &sh.runs {
+            // SAFETY: disjoint coordinate windows — see
+            // par_adamw_segments.
+            let (bs, ps) = unsafe {
+                (
+                    std::slice::from_raw_parts_mut(
+                        (bb as *mut f32).add(r.offset), r.len),
+                    std::slice::from_raw_parts_mut(
+                        (bp as *mut f32).add(r.offset), r.len),
+                )
+            };
+            sgdm_lanes(bs, ps, &g[r.offset..r.offset + r.len], r.scale,
+                       mu, wd, nesterov, lr);
+        }
+    });
 }
 
 /// Remap one compact state vector onto a new support: carried where the
@@ -233,6 +454,40 @@ fn remap_state(
     let mut fresh = vec![0.0f32; new_map.active];
     for (np, op, len) in old_map.carry_copies(new_map) {
         fresh[np..np + len].copy_from_slice(&state[op..op + len]);
+    }
+    *state = fresh;
+}
+
+/// Parallel [`remap_state`]: the carry copies target disjoint
+/// destination windows (merge-walk output in slot order), so they can
+/// run on the pool. Copies are moves of identical bytes — thread count
+/// cannot change the result.
+fn remap_state_par(
+    old_map: &ActiveMap,
+    new_map: &ActiveMap,
+    state: &mut Vec<f32>,
+    exec: &ExecEngine,
+) {
+    let copies = old_map.carry_copies(new_map);
+    let mut fresh = vec![0.0f32; new_map.active];
+    if exec.threads() <= 1 || copies.len() <= 1 {
+        for &(np, op, len) in &copies {
+            fresh[np..np + len].copy_from_slice(&state[op..op + len]);
+        }
+    } else {
+        let base = fresh.as_mut_ptr() as usize;
+        let src: &[f32] = state;
+        exec.run_indexed(copies.len(), |i| {
+            let (np, op, len) = copies[i];
+            // SAFETY: carry_copies emits disjoint destination windows
+            // in slot order, so no two indices overlap in `fresh`,
+            // which the caller keeps alive across the region.
+            let dst = unsafe {
+                std::slice::from_raw_parts_mut(
+                    (base as *mut f32).add(np), len)
+            };
+            dst.copy_from_slice(&src[op..op + len]);
+        });
     }
     *state = fresh;
 }
@@ -318,27 +573,89 @@ impl Optimizer for MaskedAdamW {
         self.t += 1;
         let bc1 = 1.0 - self.beta1.powi(self.t as i32);
         let bc2 = 1.0 - self.beta2.powi(self.t as i32);
-        let (b1, b2) = (self.beta1, self.beta2);
+        let hp = (self.beta1, self.beta2, bc1, bc2, self.eps,
+                  self.weight_decay);
         let mut slot = 0usize;
         for r in runs.runs() {
-            for i in r.offset..r.end() {
-                let gm = r.scale * g[i];
-                let m = b1 * self.m[slot] + (1.0 - b1) * gm;
-                let v = b2 * self.v[slot] + (1.0 - b2) * gm * gm;
-                self.m[slot] = m;
-                self.v[slot] = v;
-                let mhat = m / bc1;
-                let vhat = v / bc2;
-                p[i] -= lr
-                    * (mhat / (vhat.sqrt() + self.eps)
-                        + self.weight_decay * p[i]);
-                slot += 1;
-            }
+            adamw_lanes(
+                &mut self.m[slot..slot + r.len],
+                &mut self.v[slot..slot + r.len],
+                &mut p[r.offset..r.end()],
+                &g[r.offset..r.end()],
+                r.scale,
+                hp,
+                lr,
+            );
+            slot += r.len;
         }
+    }
+
+    fn step_sharded(
+        &mut self,
+        p: &mut [f32],
+        g: &[f32],
+        runs: &MaskRuns,
+        lr: f32,
+        exec: &ExecEngine,
+    ) {
+        if exec.threads() <= 1 {
+            self.step(p, g, runs, lr);
+            return;
+        }
+        assert_eq!(p.len(), g.len());
+        assert_eq!(p.len(), self.n);
+        assert_eq!(runs.n(), self.n);
+        self.ensure_support(runs);
+        self.t += 1;
+        let bc1 = 1.0 - self.beta1.powi(self.t as i32);
+        let bc2 = 1.0 - self.beta2.powi(self.t as i32);
+        let hp = (self.beta1, self.beta2, bc1, bc2, self.eps,
+                  self.weight_decay);
+        let mut shards = partition(runs, exec.threads());
+        let bm = self.m.as_mut_ptr() as usize;
+        let bv = self.v.as_mut_ptr() as usize;
+        let bp = p.as_mut_ptr() as usize;
+        exec.run_tasks(&mut shards, |_, sh| {
+            let mut slot = sh.start_slot;
+            for r in &sh.runs {
+                // SAFETY: shards own disjoint slot windows of the
+                // compact moments and disjoint coordinate windows of
+                // `p` (partition contract) — no element is reachable
+                // from two shards, and the caller blocks inside
+                // run_tasks keeping the buffers alive.
+                let (ms, vs, ps) = unsafe {
+                    (
+                        std::slice::from_raw_parts_mut(
+                            (bm as *mut f32).add(slot), r.len),
+                        std::slice::from_raw_parts_mut(
+                            (bv as *mut f32).add(slot), r.len),
+                        std::slice::from_raw_parts_mut(
+                            (bp as *mut f32).add(r.offset), r.len),
+                    )
+                };
+                adamw_lanes(ms, vs, ps, &g[r.offset..r.end()], r.scale,
+                            hp, lr);
+                slot += r.len;
+            }
+        });
     }
 
     fn on_mask_refresh(&mut self, runs: &MaskRuns) {
         self.ensure_support(runs);
+    }
+
+    fn on_mask_refresh_sharded(
+        &mut self,
+        runs: &MaskRuns,
+        exec: &ExecEngine,
+    ) {
+        if self.map.matches(runs) {
+            return;
+        }
+        let new_map = ActiveMap::from_runs(runs);
+        remap_state_par(&self.map, &new_map, &mut self.m, exec);
+        remap_state_par(&self.map, &new_map, &mut self.v, exec);
+        self.map = new_map;
     }
 
     fn state_bytes(&self) -> usize {
@@ -406,22 +723,80 @@ impl Optimizer for MaskedSgdm {
         assert_eq!(p.len(), self.n);
         assert_eq!(runs.n(), self.n);
         self.ensure_support(runs);
-        let mu = self.momentum;
+        let (mu, wd, nv) =
+            (self.momentum, self.weight_decay, self.nesterov);
         let mut slot = 0usize;
         for r in runs.runs() {
-            for i in r.offset..r.end() {
-                let gm = r.scale * g[i] + self.weight_decay * p[i];
-                let b = mu * self.buf[slot] + gm;
-                self.buf[slot] = b;
-                let upd = if self.nesterov { gm + mu * b } else { b };
-                p[i] -= lr * upd;
-                slot += 1;
-            }
+            sgdm_lanes(
+                &mut self.buf[slot..slot + r.len],
+                &mut p[r.offset..r.end()],
+                &g[r.offset..r.end()],
+                r.scale,
+                mu,
+                wd,
+                nv,
+                lr,
+            );
+            slot += r.len;
         }
+    }
+
+    fn step_sharded(
+        &mut self,
+        p: &mut [f32],
+        g: &[f32],
+        runs: &MaskRuns,
+        lr: f32,
+        exec: &ExecEngine,
+    ) {
+        if exec.threads() <= 1 {
+            self.step(p, g, runs, lr);
+            return;
+        }
+        assert_eq!(p.len(), g.len());
+        assert_eq!(p.len(), self.n);
+        assert_eq!(runs.n(), self.n);
+        self.ensure_support(runs);
+        let (mu, wd, nv) =
+            (self.momentum, self.weight_decay, self.nesterov);
+        let mut shards = partition(runs, exec.threads());
+        let bb = self.buf.as_mut_ptr() as usize;
+        let bp = p.as_mut_ptr() as usize;
+        exec.run_tasks(&mut shards, |_, sh| {
+            let mut slot = sh.start_slot;
+            for r in &sh.runs {
+                // SAFETY: disjoint slot/coordinate windows — see
+                // MaskedAdamW::step_sharded.
+                let (bs, ps) = unsafe {
+                    (
+                        std::slice::from_raw_parts_mut(
+                            (bb as *mut f32).add(slot), r.len),
+                        std::slice::from_raw_parts_mut(
+                            (bp as *mut f32).add(r.offset), r.len),
+                    )
+                };
+                sgdm_lanes(bs, ps, &g[r.offset..r.end()], r.scale, mu,
+                           wd, nv, lr);
+                slot += r.len;
+            }
+        });
     }
 
     fn on_mask_refresh(&mut self, runs: &MaskRuns) {
         self.ensure_support(runs);
+    }
+
+    fn on_mask_refresh_sharded(
+        &mut self,
+        runs: &MaskRuns,
+        exec: &ExecEngine,
+    ) {
+        if self.map.matches(runs) {
+            return;
+        }
+        let new_map = ActiveMap::from_runs(runs);
+        remap_state_par(&self.map, &new_map, &mut self.buf, exec);
+        self.map = new_map;
     }
 
     fn state_bytes(&self) -> usize {
@@ -445,10 +820,48 @@ impl Optimizer for MaskedSgd {
         lr: f32,
     ) {
         for r in runs.runs() {
-            for i in r.offset..r.end() {
-                p[i] -= lr * r.scale * g[i];
+            // (lr * scale) * g[i] matches the left-associative scalar
+            // form bit for bit; zipped equal-length subslices let the
+            // loop autovectorize.
+            let c = lr * r.scale;
+            let ps = &mut p[r.offset..r.end()];
+            let gs = &g[r.offset..r.end()];
+            for (pi, gi) in ps.iter_mut().zip(gs) {
+                *pi -= c * *gi;
             }
         }
+    }
+
+    fn step_sharded(
+        &mut self,
+        p: &mut [f32],
+        g: &[f32],
+        runs: &MaskRuns,
+        lr: f32,
+        exec: &ExecEngine,
+    ) {
+        if exec.threads() <= 1 {
+            self.step(p, g, runs, lr);
+            return;
+        }
+        let mut shards = partition(runs, exec.threads());
+        let bp = p.as_mut_ptr() as usize;
+        exec.run_tasks(&mut shards, |_, sh| {
+            for r in &sh.runs {
+                let c = lr * r.scale;
+                // SAFETY: disjoint coordinate windows (partition
+                // contract); caller blocks inside run_tasks.
+                let ps = unsafe {
+                    std::slice::from_raw_parts_mut(
+                        (bp as *mut f32).add(r.offset), r.len)
+                };
+                for (pi, gi) in
+                    ps.iter_mut().zip(&g[r.offset..r.end()])
+                {
+                    *pi -= c * *gi;
+                }
+            }
+        });
     }
 
     fn state_bytes(&self) -> usize {
@@ -725,6 +1138,109 @@ mod tests {
         // overlap: coords 4..6 (old slots 2..4 → new slots 0..2) and
         // 10..12 (old slots 4..6 → new slots 6..8)
         assert_eq!(map.carry_copies(&nmap), vec![(0, 2, 2), (6, 4, 2)]);
+    }
+
+    #[test]
+    fn sharded_step_is_bitwise_identical_to_serial() {
+        // The core determinism contract, at unit scale: adamw and sgdm
+        // compact-state steps driven through a 4-thread engine must be
+        // bitwise equal to the serial walk, including state.
+        let n = 512;
+        let mut rng = Rng::seed_from_u64(9);
+        let g = randv(n, &mut rng);
+        let p0 = randv(n, &mut rng);
+        let mut mask = Mask::zeros(n);
+        mask.set_segment(3, 100, 2.0).unwrap();
+        mask.set_segment(200, 57, 1.0).unwrap();
+        mask.set_segment(400, 90, 4.0).unwrap();
+        let exec = crate::exec::ExecEngine::new(4);
+        let (mut ps, mut pp) = (p0.clone(), p0.clone());
+        let mut os = MaskedAdamW::default_hp(n);
+        let mut op = MaskedAdamW::default_hp(n);
+        for _ in 0..3 {
+            os.step(&mut ps, &g, mask.runs(), 1e-3);
+            op.step_sharded(&mut pp, &g, mask.runs(), 1e-3, &exec);
+        }
+        assert!(ps.iter().zip(&pp).all(|(a, b)| a.to_bits() == b.to_bits()));
+        for i in 0..n {
+            assert_eq!(os.moment_at(i), op.moment_at(i), "coord {i}");
+        }
+        let (mut ps, mut pp) = (p0.clone(), p0);
+        let mut ss = MaskedSgdm::new(n, 0.9, 0.01, true);
+        let mut sp = MaskedSgdm::new(n, 0.9, 0.01, true);
+        for _ in 0..3 {
+            ss.step(&mut ps, &g, mask.runs(), 1e-2);
+            sp.step_sharded(&mut pp, &g, mask.runs(), 1e-2, &exec);
+        }
+        assert!(ps.iter().zip(&pp).all(|(a, b)| a.to_bits() == b.to_bits()));
+        assert_eq!(ss.buf(), sp.buf());
+    }
+
+    #[test]
+    fn sharded_refresh_matches_serial_remap() {
+        let n = 64;
+        let mut rng = Rng::seed_from_u64(10);
+        let g = randv(n, &mut rng);
+        let mut p1 = vec![0.0f32; n];
+        let mut p2 = vec![0.0f32; n];
+        let exec = crate::exec::ExecEngine::new(4);
+        let mut a = Mask::zeros(n);
+        a.set_segment(0, 40, 1.0).unwrap();
+        let mut b = Mask::zeros(n);
+        b.set_segment(8, 16, 1.0).unwrap();
+        b.set_segment(30, 20, 2.0).unwrap();
+        let mut serial = MaskedAdamW::default_hp(n);
+        let mut shard = MaskedAdamW::default_hp(n);
+        serial.step(&mut p1, &g, a.runs(), 1e-3);
+        shard.step_sharded(&mut p2, &g, a.runs(), 1e-3, &exec);
+        serial.on_mask_refresh(b.runs());
+        shard.on_mask_refresh_sharded(b.runs(), &exec);
+        for i in 0..n {
+            assert_eq!(serial.moment_at(i), shard.moment_at(i));
+        }
+    }
+
+    #[test]
+    fn par_segments_match_the_serial_dense_walk() {
+        // The shared dense-state helpers (golore fallback / SIFT / HLO
+        // mirrors) must be bitwise identical serial vs parallel.
+        let n = 300;
+        let mut rng = Rng::seed_from_u64(11);
+        let g = randv(n, &mut rng);
+        let p0 = randv(n, &mut rng);
+        let segs = [
+            crate::coordinator::Run { offset: 5, len: 90, scale: 2.0 },
+            crate::coordinator::Run { offset: 120, len: 33, scale: 1.0 },
+            crate::coordinator::Run { offset: 200, len: 77, scale: 4.0 },
+        ];
+        let hp = (0.9f32, 0.999, 0.1, 0.001999, 1e-8, 0.01);
+        let exec = crate::exec::ExecEngine::new(4);
+        let mut pa = p0.clone();
+        let (mut ma, mut va) = (vec![0.0f32; n], vec![0.0f32; n]);
+        for r in &segs {
+            dense_adamw_run(&mut ma, &mut va, &mut pa, &g, r.offset,
+                            r.len, r.scale, hp, 1e-3);
+        }
+        let mut pb = p0.clone();
+        let (mut mb, mut vb) = (vec![0.0f32; n], vec![0.0f32; n]);
+        par_adamw_segments(&exec, &segs, &mut mb, &mut vb, &mut pb, &g,
+                           hp, 1e-3);
+        assert!(pa.iter().zip(&pb).all(|(a, b)| a.to_bits() == b.to_bits()));
+        assert_eq!(ma, mb);
+        assert_eq!(va, vb);
+        let mut pa = p0.clone();
+        let mut bufa = vec![0.0f32; n];
+        for r in &segs {
+            let end = r.offset + r.len;
+            sgdm_lanes(&mut bufa[r.offset..end], &mut pa[r.offset..end],
+                       &g[r.offset..end], r.scale, 0.9, 0.01, true, 1e-2);
+        }
+        let mut pb = p0;
+        let mut bufb = vec![0.0f32; n];
+        par_sgdm_segments(&exec, &segs, &mut bufb, &mut pb, &g,
+                          (0.9, 0.01, true), 1e-2);
+        assert!(pa.iter().zip(&pb).all(|(a, b)| a.to_bits() == b.to_bits()));
+        assert_eq!(bufa, bufb);
     }
 
     #[test]

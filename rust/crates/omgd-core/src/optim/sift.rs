@@ -15,7 +15,8 @@
 //! `Mask::from_dense` (top-k is inherently scattered).
 
 use crate::coordinator::{Mask, MaskRuns};
-use crate::optim::{dense_adamw_run, Optimizer};
+use crate::exec::ExecEngine;
+use crate::optim::{dense_adamw_run, par_adamw_segments, Optimizer};
 
 pub struct SiftOptimizer {
     beta1: f32,
@@ -112,6 +113,23 @@ impl Optimizer for SiftOptimizer {
             dense_adamw_run(&mut self.m, &mut self.v, p, g, r.offset,
                             r.len, r.scale, hp, lr);
         }
+    }
+
+    fn step_sharded(
+        &mut self,
+        p: &mut [f32],
+        g: &[f32],
+        runs: &MaskRuns,
+        lr: f32,
+        exec: &ExecEngine,
+    ) {
+        assert_eq!(p.len(), g.len());
+        assert_eq!(runs.n(), p.len());
+        let (bc1, bc2) = self.begin_step(g);
+        let hp = self.hp(bc1, bc2);
+        let eff = runs.intersect_keep_scale(self.sel.runs());
+        par_adamw_segments(exec, eff.runs(), &mut self.m, &mut self.v,
+                           p, g, hp, lr);
     }
 
     fn state_bytes(&self) -> usize {

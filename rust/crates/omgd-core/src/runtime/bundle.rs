@@ -23,7 +23,6 @@ use super::{to_scalar_f32, to_vec_f32, Arg, Executable, Runtime};
 use crate::manifest::Manifest;
 use anyhow::{ensure, Context, Result};
 use std::path::Path;
-use std::sync::Mutex;
 
 /// Which optimizer-update artifact to load.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -41,13 +40,23 @@ pub type RunDesc = (usize, usize, f32);
 /// key) and the expanded vector. Steady state is an O(runs) key
 /// compare; the O(d) expansion happens only when the mask actually
 /// changed (period boundaries).
+///
+/// Owned **per engine** (each `MethodEngine` holds one and threads it
+/// into every update call), not globally behind a lock: the old
+/// `Mutex<RunsScratch>` inside `ModelBundle` serialized every
+/// HLO-bridge step across engines sharing a bundle. ci.sh greps this
+/// file to keep the mutex from reappearing.
 #[derive(Default)]
-struct RunsScratch {
+pub struct RunsScratch {
     key: Vec<RunDesc>,
     mask: Vec<f32>,
 }
 
 impl RunsScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
     fn dense_multiplier(&mut self, n: usize, runs: &[RunDesc]) -> &[f32] {
         if self.mask.len() != n || self.key != runs {
             self.key.clear();
@@ -69,7 +78,6 @@ pub struct ModelBundle {
     pub eval: Executable,
     pub update: Executable,
     pub update_kind: UpdateKind,
-    runs_scratch: Mutex<RunsScratch>,
 }
 
 impl ModelBundle {
@@ -87,14 +95,7 @@ impl ModelBundle {
             UpdateKind::Sgdm => &man.update_sgdm_hlo,
         };
         let update = rt.load(&man.hlo_path(upd_file))?;
-        Ok(Self {
-            man,
-            train,
-            eval,
-            update,
-            update_kind,
-            runs_scratch: Mutex::new(RunsScratch::default()),
-        })
+        Ok(Self { man, train, eval, update, update_kind })
     }
 
     pub fn padded_len(&self) -> usize {
@@ -176,9 +177,11 @@ impl ModelBundle {
     }
 
     /// Fused masked-AdamW update from `(offset, len, scale)` segment
-    /// descriptors: they are expanded into the cached dense multiplier
-    /// (only when the mask changed since the last call) and dispatched
-    /// to the same AOT kernel as [`ModelBundle::adamw_update`].
+    /// descriptors: they are expanded into the caller's [`RunsScratch`]
+    /// dense multiplier (only when the mask changed since the last
+    /// call) and dispatched to the same AOT kernel as
+    /// [`ModelBundle::adamw_update`]. The scratch is per caller — no
+    /// lock on the hot path.
     #[allow(clippy::too_many_arguments)]
     pub fn adamw_update_runs(
         &self,
@@ -188,12 +191,9 @@ impl ModelBundle {
         m: &mut Vec<f32>,
         v: &mut Vec<f32>,
         hp: &[f32; 8],
+        scratch: &mut RunsScratch,
     ) -> Result<()> {
         Self::check_descriptors(p.len(), runs)?;
-        let mut scratch = self
-            .runs_scratch
-            .lock()
-            .unwrap_or_else(|e| e.into_inner());
         let mask = scratch.dense_multiplier(p.len(), runs);
         self.adamw_update(p, g, mask, m, v, hp)
     }
@@ -207,12 +207,9 @@ impl ModelBundle {
         runs: &[RunDesc],
         buf: &mut Vec<f32>,
         hp: &[f32; 4],
+        scratch: &mut RunsScratch,
     ) -> Result<()> {
         Self::check_descriptors(p.len(), runs)?;
-        let mut scratch = self
-            .runs_scratch
-            .lock()
-            .unwrap_or_else(|e| e.into_inner());
         let mask = scratch.dense_multiplier(p.len(), runs);
         self.sgdm_update(p, g, mask, buf, hp)
     }

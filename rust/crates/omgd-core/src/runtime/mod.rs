@@ -12,7 +12,7 @@
 
 pub mod bundle;
 
-pub use bundle::ModelBundle;
+pub use bundle::{ModelBundle, RunsScratch};
 
 use anyhow::{anyhow, Context, Result};
 use std::path::Path;

@@ -101,6 +101,12 @@ pub struct WorkerOptions {
     /// every gateway request, for gateways running `--auth-token`.
     /// `None` = no header (an open gateway).
     pub token: Option<String>,
+    /// Shard-parallel step-pool width per job (`--step-threads`),
+    /// exported as `OMGD_THREADS` before any engine spawns its pool.
+    /// `0` = inherit the environment (unset = available parallelism).
+    /// Useful on a many-core box running several job threads: cap each
+    /// job's pool so `workers × step_threads` matches the machine.
+    pub step_threads: usize,
 }
 
 impl Default for WorkerOptions {
@@ -117,6 +123,7 @@ impl Default for WorkerOptions {
             idle_exit_secs: 0,
             ckpt_period: 0,
             token: None,
+            step_threads: 0,
         }
     }
 }
@@ -184,6 +191,12 @@ where
     M: Fn(usize) -> F + Sync,
     F: FnMut(&JobSpec) -> Result<JobOutcome>,
 {
+    if opts.step_threads > 0 {
+        // Before any job thread builds an engine (pools read the env
+        // once at construction), and while this process is still
+        // single-threaded enough for set_var to be unremarkable.
+        std::env::set_var("OMGD_THREADS", opts.step_threads.to_string());
+    }
     let cache = ResultCache::open(opts.cache_dir.as_deref())?;
     let store = ArtifactStore::open(opts.store_dir.as_deref())?;
     let stats = StatCounters::default();

@@ -19,6 +19,6 @@ pub mod train;
 // Path-compatibility aliases: moved files keep their historical
 // `crate::coordinator`, `crate::config`, `crate::jobs::JobSpec`, ...
 // paths and resolve them through the lower layers.
-pub use omgd_core::{coordinator, data, linalg, memory, optim, prop, rng, runtime};
+pub use omgd_core::{coordinator, data, exec, linalg, memory, optim, prop, rng, runtime};
 pub use omgd_jobs as jobs;
 pub use omgd_util::{bench, cli, config, manifest, metrics, obs, util};

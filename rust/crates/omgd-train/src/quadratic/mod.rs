@@ -12,9 +12,10 @@
 //! four panels of Figure 2 and verifies Theorems 5.3/5.4's rates
 //! (`O(t⁻²)` for RR / RR_mask_wor, `Ω(t⁻¹)` for RR_mask_iid / RR_proj).
 
-use crate::coordinator::{DataSampler, MaskSet, OmgdCycle};
+use crate::coordinator::{DataSampler, MaskRuns, MaskSet, OmgdCycle};
 use crate::data::LinRegData;
-use crate::linalg::{axpy, stiefel, Mat};
+use crate::exec::{self, ExecEngine};
+use crate::linalg::{axpy, stiefel};
 use crate::rng::Rng;
 
 /// Stochastic-gradient forms of §5.1 (+ appendix i.i.d.-sampling forms).
@@ -139,6 +140,17 @@ pub fn run(data: &LinRegData, form: GradForm, params: QuadParams,
         _ => (None, None),
     };
 
+    // Step-loop scratch, hoisted: one allocation per run, not per step
+    // (at 10⁶ steps the per-iteration `vec![0.0; d]` churn dominated
+    // the masked forms' runtime). The shared pool drives the masked
+    // fill shard-parallel when `d` is large enough to amortize it.
+    let mut gf = vec![0.0f64; d];
+    let mut gfull = vec![0.0f64; d];
+    let mut g = vec![0.0f64; d];
+    let mut src = vec![0.0f64; d];
+    let mut av = vec![0.0f64; d];
+    let pool = ExecEngine::from_env();
+
     let mut next_pt = 0usize;
     for t in 0..params.t_max {
         let et = eta(t);
@@ -166,38 +178,31 @@ pub fn run(data: &LinRegData, form: GradForm, params: QuadParams,
         };
 
         // --- gradients ---
-        let gf = data.grad_sample(&theta, i); // ∇f(θ_t; z_t)
-        let gfull = data.grad_full(&theta); // ∇F(θ_t)
-        let g: Vec<f64> = if !compress {
-            gf.clone()
+        data.grad_sample_into(&theta, i, &mut gf); // ∇f(θ_t; z_t)
+        data.grad_full_into(&theta, &mut gfull); // ∇F(θ_t)
+        if !compress {
+            g.copy_from_slice(&gf);
         } else {
             match form {
-                GradForm::Rr | GradForm::Iid => gf.clone(),
+                GradForm::Rr | GradForm::Iid => g.copy_from_slice(&gf),
                 GradForm::RrMaskWor { .. } => {
                     // Walk the mask's segment runs: only the active
-                    // coordinates are multiplied — frozen ones are
-                    // never touched, so the 10⁶-step runs cost
-                    // O(active) per masked gradient, not O(d).
+                    // coordinates are multiplied — frozen ones get a
+                    // single memset, so the 10⁶-step runs cost
+                    // O(active) per masked gradient, not O(d) work.
                     let set = mask_set.as_ref().unwrap();
                     let mask = &set.masks[mask_j.unwrap()];
-                    let mut g = vec![0.0f64; d];
-                    for r in mask.runs().runs() {
-                        for i in r.offset..r.end() {
-                            g[i] = gf[i] * r.scale as f64;
-                        }
-                    }
-                    g
+                    masked_grad_fill(&pool, mask.runs(), &gf, &mut g);
                 }
                 GradForm::RrMaskIid { r }
                 | GradForm::IidMaskIid { r } => {
                     // Remark 4.10: exactly r·d coords, scale 1/r.
                     let k = ((d as f64) * r).round() as usize;
                     let sel = rng.choose_k(d, k);
-                    let mut g = vec![0.0; d];
+                    g.fill(0.0);
                     for &c in &sel {
                         g[c] = gf[c] / r;
                     }
-                    g
                 }
                 GradForm::RrProj { r } => {
                     let k = ((d as f64) * r).round() as usize;
@@ -205,25 +210,28 @@ pub fn run(data: &LinRegData, form: GradForm, params: QuadParams,
                     // (1/r) P Pᵀ g
                     let pt_g = p.transpose().matvec(&gf);
                     let proj = p.matvec(&pt_g);
-                    proj.iter().map(|x| x / r).collect()
+                    for (o, x) in g.iter_mut().zip(&proj) {
+                        *o = x / r;
+                    }
                 }
             }
-        };
+        }
 
         // --- decomposition recursions: v ← (I − η A) v + η src ---
-        let step_lin = |v: &mut Vec<f64>, a: &Mat, et: f64| {
-            let av = a.matvec(v);
-            axpy(-et, &av, v);
-        };
-        step_lin(&mut decay, &data.a, et);
-        step_lin(&mut resh, &data.a, et);
-        let src_r: Vec<f64> =
-            gfull.iter().zip(&gf).map(|(f, s)| f - s).collect();
-        axpy_into(&mut resh, et, &src_r);
-        step_lin(&mut comp, &data.a, et);
-        let src_c: Vec<f64> =
-            gf.iter().zip(&g).map(|(s, gg)| s - gg).collect();
-        axpy_into(&mut comp, et, &src_c);
+        data.a.matvec_into(&decay, &mut av);
+        axpy(-et, &av, &mut decay);
+        data.a.matvec_into(&resh, &mut av);
+        axpy(-et, &av, &mut resh);
+        for ((s, f), gs) in src.iter_mut().zip(&gfull).zip(&gf) {
+            *s = f - gs; // ∇F − ∇f: data-reshuffle source
+        }
+        axpy_into(&mut resh, et, &src);
+        data.a.matvec_into(&comp, &mut av);
+        axpy(-et, &av, &mut comp);
+        for ((s, gs), gg) in src.iter_mut().zip(&gf).zip(&g) {
+            *s = gs - gg; // ∇f − g: compression-error source
+        }
+        axpy_into(&mut comp, et, &src);
 
         // --- parameter update ---
         axpy(-et, &g, &mut theta);
@@ -239,6 +247,42 @@ pub fn run(data: &LinRegData, form: GradForm, params: QuadParams,
         }
     }
     trace
+}
+
+/// Masked-gradient fill for `RR_mask_wor`: zero `g` (one memset), then
+/// write `gf[i] · scale` over each active run. Shard-parallel over the
+/// mask's runs when the active set is large enough to amortize the
+/// hand-off ([`exec::PAR_MIN_ACTIVE`]); shards own disjoint coordinate
+/// windows of `g`, so the result is bitwise-identical to the serial
+/// walk for every thread count.
+fn masked_grad_fill(pool: &ExecEngine, runs: &MaskRuns, gf: &[f64],
+                    g: &mut [f64]) {
+    g.fill(0.0);
+    if pool.threads() > 1 && runs.active_count() >= exec::PAR_MIN_ACTIVE {
+        let mut shards = exec::partition(runs, pool.threads());
+        let base = g.as_mut_ptr() as usize;
+        pool.run_tasks(&mut shards, |_, sh| {
+            for r in &sh.runs {
+                // SAFETY: `partition` hands each shard a disjoint
+                // contiguous coordinate window, so these mutable
+                // sub-slices never alias across tasks, and `base`
+                // outlives the `run_tasks` call.
+                let gw = unsafe {
+                    std::slice::from_raw_parts_mut(
+                        (base as *mut f64).add(r.offset), r.len)
+                };
+                for (k, o) in gw.iter_mut().enumerate() {
+                    *o = gf[r.offset + k] * r.scale as f64;
+                }
+            }
+        });
+    } else {
+        for r in runs.runs() {
+            for i in r.offset..r.end() {
+                g[i] = gf[i] * r.scale as f64;
+            }
+        }
+    }
 }
 
 /// Mean trace over `reps` independent runs (E‖·‖² estimates).
@@ -407,6 +451,24 @@ mod tests {
         let data = small_data();
         let tr = run(&data, GradForm::Rr, fast_params(), 5);
         assert!(tr.compression.iter().all(|&c| c == 0.0));
+    }
+
+    #[test]
+    fn masked_grad_fill_parallel_matches_serial() {
+        // d·r = 2¹⁴ active coords: exactly at PAR_MIN_ACTIVE, so the
+        // 4-thread engine takes the sharded path. Stale buffer contents
+        // must be cleared by the fill.
+        let d = 1 << 15;
+        let mut rng = Rng::seed_from_u64(11);
+        let set = MaskSet::coordinate_partition(d, d, 0.5, &mut rng);
+        let mask = &set.masks[0];
+        let gf: Vec<f64> = (0..d).map(|i| (i as f64).sin()).collect();
+        let mut serial = vec![0.5f64; d];
+        masked_grad_fill(&ExecEngine::new(1), mask.runs(), &gf,
+                         &mut serial);
+        let mut par = vec![1.5f64; d];
+        masked_grad_fill(&ExecEngine::new(4), mask.runs(), &gf, &mut par);
+        assert_eq!(serial, par);
     }
 
     #[test]

@@ -24,13 +24,15 @@
 use crate::config::{Method, OptFamily, RunConfig};
 use crate::coordinator::{LisaScheduler, LisaVariant, Mask, MaskRuns,
                          MaskSet};
+use crate::exec::{self, ExecEngine};
 use crate::manifest::Manifest;
 use crate::metrics::Timer;
 use crate::obs;
-use crate::optim::{galore, Optimizer, SiftOptimizer};
+use crate::optim::{galore, par_adamw_segments, par_sgdm_segments,
+                   Optimizer, SiftOptimizer};
 use crate::rng::Rng;
-use crate::runtime::bundle::UpdateKind;
-use crate::runtime::ModelBundle;
+use crate::runtime::bundle::{RunDesc, UpdateKind};
+use crate::runtime::{ModelBundle, RunsScratch};
 use crate::train::checkpoint::{pack_u64s, unpack_u64s, Checkpoint};
 use anyhow::{bail, ensure, Context, Result};
 
@@ -66,6 +68,21 @@ pub struct MethodEngine {
     plan: MaskPlan,
     backend: Backend,
     opt: crate::config::OptConfig,
+    /// Shard-parallel execution engine (`--threads` / `OMGD_THREADS`,
+    /// default = available parallelism). Owned per engine: each run
+    /// has its own pool, sized once at construction.
+    exec: ExecEngine,
+    /// Serial (one-thread) engine the step path routes tiny masks
+    /// through: below [`exec::PAR_MIN_ACTIVE`] active coordinates the
+    /// dispatch wakeups cost more than the walk. Pure policy — both
+    /// paths are bitwise identical.
+    serial: ExecEngine,
+    /// Per-engine dense-multiplier scratch for the HLO bridge
+    /// (replaces the old global `Mutex<RunsScratch>` in `ModelBundle`).
+    scratch: RunsScratch,
+    /// Cached `(offset, len, scale)` descriptors of the current mask —
+    /// rebuilt at period boundaries / restore, not per step.
+    desc: Vec<RunDesc>,
     /// Period boundaries seen (diagnostics).
     pub periods: usize,
 }
@@ -129,6 +146,9 @@ impl MethodEngine {
         // Mask starts full-over-real-params (padding frozen).
         let mut mask = Mask::zeros(n);
         mask.set_segment(0, man.total_len, 1.0)?;
+        let exec_engine = ExecEngine::from_env();
+        obs::STEP_THREADS.set(exec_engine.threads() as f64);
+        let desc = mask.runs().descriptors();
         Ok(Self {
             method: cfg.method,
             man: man.clone(),
@@ -136,8 +156,17 @@ impl MethodEngine {
             plan,
             backend,
             opt: cfg.opt.clone(),
+            exec: exec_engine,
+            serial: ExecEngine::new(1),
+            scratch: RunsScratch::new(),
+            desc,
             periods: 0,
         })
+    }
+
+    /// Concurrency the step path runs at (pool threads + caller).
+    pub fn threads(&self) -> usize {
+        self.exec.threads()
     }
 
     /// Refresh the mask at a period boundary (K epochs / K steps) and
@@ -179,10 +208,21 @@ impl MethodEngine {
         }
         // Period boundary = the one place compact optimizer state is
         // remapped (carry still-active, reset re-activated, free the
-        // rest). The step path then only walks the runs.
+        // rest). The step path then only walks the runs. Carry-copies
+        // run shard-parallel (disjoint destination windows).
         if let Backend::Native(opt) = &mut self.backend {
-            opt.on_mask_refresh(self.mask.runs());
+            opt.on_mask_refresh_sharded(self.mask.runs(), &self.exec);
         }
+        // Descriptor cache: rebuilt here once, reused by every step
+        // until the next boundary (no per-step Vec churn).
+        self.mask.runs().descriptors_into(&mut self.desc);
+        if self.exec.threads() > 1 {
+            let shards =
+                exec::partition(self.mask.runs(), self.exec.threads());
+            obs::EXEC_SHARD_IMBALANCE
+                .observe(exec::shard_imbalance(&shards));
+        }
+        obs::STEP_THREADS.set(self.exec.threads() as f64);
         obs::MASK_REFRESH_SECONDS.observe(t.total());
         obs::STATE_BYTES.set(self.state_bytes() as f64);
         obs::KEEP_RATIO.set(self.keep_ratio());
@@ -193,7 +233,8 @@ impl MethodEngine {
     pub fn apply(&mut self, bundle: &ModelBundle, p: &mut Vec<f32>,
                  g: &[f32], lr: f32) -> Result<()> {
         let t = Timer::start();
-        let Self { backend, mask, opt, .. } = self;
+        let Self { backend, mask, opt, exec, serial, scratch, desc, .. } =
+            self;
         let out = match backend {
             Backend::HloAdamW { m, v, t } => {
                 ensure!(bundle.update_kind == UpdateKind::AdamW,
@@ -211,9 +252,7 @@ impl MethodEngine {
                     bc2,
                     0.0,
                 ];
-                bundle.adamw_update_runs(
-                    p, g, &mask.runs().descriptors(), m, v, &hp,
-                )
+                bundle.adamw_update_runs(p, g, desc, m, v, &hp, scratch)
             }
             Backend::HloSgdm { buf } => {
                 ensure!(bundle.update_kind == UpdateKind::Sgdm,
@@ -224,12 +263,16 @@ impl MethodEngine {
                     opt.weight_decay as f32,
                     if opt.nesterov { 1.0 } else { 0.0 },
                 ];
-                bundle.sgdm_update_runs(
-                    p, g, &mask.runs().descriptors(), buf, &hp,
-                )
+                bundle.sgdm_update_runs(p, g, desc, buf, &hp, scratch)
             }
             Backend::Native(o) => {
-                o.step(p, g, mask.runs(), lr);
+                let runs = mask.runs();
+                let e = if runs.active_count() >= exec::PAR_MIN_ACTIVE {
+                    &*exec
+                } else {
+                    &*serial
+                };
+                o.step_sharded(p, g, runs, lr, e);
                 Ok(())
             }
         };
@@ -243,43 +286,41 @@ impl MethodEngine {
     /// coordinates are never read.
     pub fn apply_native(&mut self, p: &mut [f32], g: &[f32], lr: f32) {
         let t = Timer::start();
-        let Self { backend, mask, opt, .. } = self;
+        let Self { backend, mask, opt, exec, serial, .. } = self;
+        let runs = mask.runs();
+        let e = if runs.active_count() >= exec::PAR_MIN_ACTIVE {
+            &*exec
+        } else {
+            &*serial
+        };
         match backend {
             Backend::HloAdamW { m, v, t } => {
                 *t += 1;
                 let bc1 = 1.0 - (opt.beta1 as f32).powi(*t as i32);
                 let bc2 = 1.0 - (opt.beta2 as f32).powi(*t as i32);
-                let (b1, b2) = (opt.beta1 as f32, opt.beta2 as f32);
-                let (eps, wd) =
-                    (opt.eps as f32, opt.weight_decay as f32);
-                for r in mask.runs().runs() {
-                    for i in r.offset..r.end() {
-                        let gm = r.scale * g[i];
-                        let mi = b1 * m[i] + (1.0 - b1) * gm;
-                        let vi = b2 * v[i] + (1.0 - b2) * gm * gm;
-                        m[i] = mi;
-                        v[i] = vi;
-                        p[i] -= lr
-                            * ((mi / bc1) / ((vi / bc2).sqrt() + eps)
-                                + wd * p[i]);
-                    }
-                }
+                let hp = (
+                    opt.beta1 as f32,
+                    opt.beta2 as f32,
+                    bc1,
+                    bc2,
+                    opt.eps as f32,
+                    opt.weight_decay as f32,
+                );
+                // The mirror keeps full-length (coordinate-indexed)
+                // moments — the shared dense-segment kernel walks the
+                // runs shard-parallel with the same per-coordinate
+                // arithmetic as the HLO kernel.
+                par_adamw_segments(e, runs.runs(), m, v, p, g, hp, lr);
             }
             Backend::HloSgdm { buf } => {
-                let mu = opt.momentum as f32;
-                let wd = opt.weight_decay as f32;
-                let nesterov = opt.nesterov;
-                for r in mask.runs().runs() {
-                    for i in r.offset..r.end() {
-                        let gm = r.scale * g[i] + wd * p[i];
-                        let b = mu * buf[i] + gm;
-                        buf[i] = b;
-                        let upd = if nesterov { gm + mu * b } else { b };
-                        p[i] -= lr * upd;
-                    }
-                }
+                let hp = (
+                    opt.momentum as f32,
+                    opt.weight_decay as f32,
+                    opt.nesterov,
+                );
+                par_sgdm_segments(e, runs.runs(), buf, p, g, hp, lr);
             }
-            Backend::Native(o) => o.step(p, g, mask.runs(), lr),
+            Backend::Native(o) => o.step_sharded(p, g, runs, lr, e),
         }
         obs::STEP_SECONDS.observe(t.total());
     }
@@ -401,6 +442,7 @@ impl MethodEngine {
             self.man.padded_len
         );
         self.mask = mask;
+        self.mask.runs().descriptors_into(&mut self.desc);
         match &mut self.plan {
             MaskPlan::Full
             | MaskPlan::TensorIid { .. }

@@ -114,6 +114,9 @@ pub fn train_classifier_ckpt(
 
     let mut out = TrainOutcome::default();
     let timer = Timer::start();
+    // Batch buffers hoisted out of the step loop: one allocation per
+    // run, refilled in place every step.
+    let (mut x, mut y) = (Vec::new(), Vec::new());
     let mut epoch = 0usize;
     let mut epochs_since_period = 0usize;
     let start_step = match ctl.resume.take() {
@@ -147,7 +150,7 @@ pub fn train_classifier_ckpt(
             }
         }
         let idx = sampler.next_batch(batch, &mut rng);
-        let (x, y) = task.pack_train(&idx, batch);
+        task.pack_train_into(&idx, batch, &mut x, &mut y);
         let (loss, grad) = bundle.train_step_clf(&flat, &x, &y)?;
         let lr = cfg.schedule.lr_at(cfg.opt.lr, step) as f32;
         engine.apply(bundle, &mut flat, &grad, lr)?;
@@ -228,6 +231,9 @@ pub fn train_lm_ckpt(
 
     let mut out = TrainOutcome::default();
     let timer = Timer::start();
+    // Batch buffers hoisted out of the step loop: one allocation per
+    // run, refilled in place every step.
+    let (mut x, mut y) = (Vec::new(), Vec::new());
     let start_step = match ctl.resume.take() {
         Some(ck) => restore_loop_state(
             &ck, &mut engine, &mut rng, &mut sampler, &mut flat,
@@ -248,7 +254,7 @@ pub fn train_lm_ckpt(
                                        engine.state_bytes()));
         }
         let idx = sampler.next_batch(batch, &mut rng);
-        let (x, y) = corpus.pack(&idx, batch);
+        corpus.pack_into(&idx, batch, &mut x, &mut y);
         let (loss, grad) = bundle.train_step_lm(&flat, &x, &y)?;
         let lr = cfg.schedule.lr_at(cfg.opt.lr, step) as f32;
         engine.apply(bundle, &mut flat, &grad, lr)?;

@@ -106,6 +106,12 @@ pub const FAST_BOUNDS: &[f64] = &[
     2.5e-3, 5e-3, 1e-2, 0.05, 0.1, 0.5, 1.0,
 ];
 
+/// Dimensionless ratio bounds (≥ 1.0) for load-balance histograms:
+/// 1.0 is perfect, anything past ~2 means one shard does double duty.
+pub const RATIO_BOUNDS: &[f64] = &[
+    1.0, 1.01, 1.02, 1.05, 1.1, 1.2, 1.35, 1.5, 1.75, 2.0, 3.0, 5.0,
+];
+
 impl Histogram {
     pub const fn new(bounds: &'static [f64]) -> Self {
         assert!(bounds.len() <= MAX_BUCKETS);
@@ -239,6 +245,17 @@ pub static KEEP_RATIO: Gauge = Gauge::new();
 /// during training is a densification regression.
 pub static MASK_DENSIFY: Counter = Counter::new();
 
+// Parallel execution engine (omgd-core::exec).
+/// Threads the step engine currently runs with (caller included).
+pub static STEP_THREADS: Gauge = Gauge::new();
+/// Active-coordinate load imbalance of the current shard partition
+/// (max shard over mean; 1.0 = perfectly balanced). Observed when a
+/// mask refresh re-partitions, not per step.
+pub static EXEC_SHARD_IMBALANCE: Histogram =
+    Histogram::new(RATIO_BOUNDS);
+/// Wall time of one shard task inside a parallel region.
+pub static EXEC_SHARD_SECONDS: Histogram = Histogram::new(FAST_BOUNDS);
+
 // Durability: job journal + train checkpoints.
 pub static JOURNAL_RECORDS: Counter = Counter::new();
 pub static JOURNAL_REPLAYED: Counter = Counter::new();
@@ -368,6 +385,24 @@ pub fn families() -> Vec<Family> {
             help: "Dense-to-runs mask scans (cold path; nonzero rate \
                    during training is a densification regression)",
             metric: C(&MASK_DENSIFY),
+        },
+        Family {
+            name: "omgd_step_threads",
+            help: "Threads the parallel step engine runs with \
+                   (caller included)",
+            metric: G(&STEP_THREADS),
+        },
+        Family {
+            name: "omgd_exec_shard_imbalance",
+            help: "Shard active-count imbalance (max/mean) of the \
+                   current partition, observed at mask refresh",
+            metric: H(&EXEC_SHARD_IMBALANCE),
+        },
+        Family {
+            name: "omgd_exec_shard_seconds",
+            help: "Wall time of one shard task inside a parallel \
+                   region",
+            metric: H(&EXEC_SHARD_SECONDS),
         },
         Family {
             name: "omgd_journal_records_total",
@@ -1025,6 +1060,22 @@ mod tests {
         ] {
             assert!(names.contains(&want), "missing {want}");
         }
+    }
+
+    #[test]
+    fn exec_families_are_registered() {
+        let names: Vec<&str> =
+            families().iter().map(|f| f.name).collect();
+        for want in [
+            "omgd_step_threads",
+            "omgd_exec_shard_imbalance",
+            "omgd_exec_shard_seconds",
+        ] {
+            assert!(names.contains(&want), "missing {want}");
+        }
+        // ratio histograms observe raw ratios, not durations
+        EXEC_SHARD_IMBALANCE.observe(1.04);
+        assert!(EXEC_SHARD_IMBALANCE.count() >= 1);
     }
 
     #[test]

@@ -7,7 +7,7 @@ use omgd::bench::{measure, TablePrinter};
 use omgd::config::{Method, RunConfig};
 use omgd::experiments::*;
 use omgd::rng::Rng;
-use omgd::runtime::Runtime;
+use omgd::runtime::{Runtime, RunsScratch};
 use omgd::train::MethodEngine;
 
 fn main() -> anyhow::Result<()> {
@@ -49,10 +49,11 @@ fn main() -> anyhow::Result<()> {
     let mut v = vec![0.0f32; n];
     let hp = [1e-3f32, 0.9, 0.999, 1e-8, 0.01, 0.1, 0.001, 0.0];
     let desc = engine.runs().descriptors();
+    let mut scratch = RunsScratch::new();
     let r2 = measure("masked_adamw_hlo", 2, 20, || {
         bundle
             .adamw_update_runs(&mut flat, &grad, &desc, &mut m, &mut v,
-                               &hp)
+                               &hp, &mut scratch)
             .unwrap();
     });
 

@@ -39,7 +39,7 @@
 //! historical module paths (`omgd::jobs`, `omgd::train`, ...) are
 //! preserved here by re-export so downstream code is untouched.
 
-pub use omgd_core::{coordinator, data, linalg, memory, optim, prop, rng, runtime};
+pub use omgd_core::{coordinator, data, exec, linalg, memory, optim, prop, rng, runtime};
 pub use omgd_train::{experiments, quadratic, train};
 pub use omgd_util::{bench, cli, config, manifest, metrics, obs, util};
 

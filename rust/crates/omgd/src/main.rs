@@ -47,6 +47,7 @@
 //!     --connect HOST:PORT --workers N --id NAME
 //!     --cache-dir DIR --artifact-store DIR --force --max-failures N
 //!     --max-jobs N --idle-exit SECS   lifecycle bounds for autoscaling
+//!     --step-threads N                per-job step-pool width (0=inherit)
 //!   cache-gc                          prune the result cache by age
 //!                                     and/or total size (true LRU)
 //!     --max-age-secs N --max-bytes N [--dry-run] [--cache-dir DIR]
@@ -97,6 +98,12 @@ fn main() {
 }
 
 fn dispatch(args: &Args) -> Result<()> {
+    // Global `--threads N`: pin the shard-parallel execution pool width
+    // for this process (wins over the OMGD_THREADS env var; unset =
+    // available parallelism). Set before any engine spawns its pool.
+    if let Some(t) = args.opt_u64("threads")? {
+        std::env::set_var("OMGD_THREADS", t.to_string());
+    }
     match args.cmd.as_str() {
         "info" => cmd_info(args),
         "check" => cmd_check(args),
@@ -122,6 +129,10 @@ const USAGE: &str = "\
 omgd — Omni-Masked Gradient Descent reproduction
 
 USAGE: omgd <subcommand> [flags]
+
+  global: --threads N                shard-parallel step-pool width for
+                                     this process (OMGD_THREADS env;
+                                     unset = available parallelism)
 
   info                               platform + artifact inventory
   check        self-test every artifact: HLO update kernel vs native
@@ -175,6 +186,7 @@ USAGE: omgd <subcommand> [flags]
     --connect HOST:PORT [--workers N] [--id NAME] [--cache-dir DIR]
     [--artifact-store DIR] [--force] [--max-failures 5]
     [--max-jobs N] [--idle-exit SECS] [--ckpt-period STEPS]
+    [--step-threads N] (per-job shard-parallel pool width; 0 = inherit)
     [--token BEARER] (for gateways running --auth-token)
   cache-gc     prune the result cache (age cap, then size cap evicting
                least-recently-used-first; cache hits refresh recency);
@@ -185,10 +197,14 @@ USAGE: omgd <subcommand> [flags]
   microbench   time native masked-AdamW steps on the segment-run path
                vs the dense reference and print the ratio (no
                artifacts needed; steps scale with OMGD_BENCH_SCALE);
+               also sweeps the shard-parallel step over {1,2,4}
+               threads x keep {0.05,0.25}, each arm bitwise-verified
+               against the serial walk before its timing counts;
                the BENCH json row is stamped with git rev, bench
                scale, worker count, and a unix timestamp so CI can
                track the perf trajectory across revisions
-    --n 65536 --keep 0.25 --steps 10000 [--out BENCH_maskruns.json]
+    --n 65536 --keep 0.25 --steps 10000 [--sweep-steps 1000]
+    [--out BENCH_maskruns.json]
 ";
 
 fn cmd_info(args: &Args) -> Result<()> {
@@ -234,6 +250,7 @@ fn cmd_check(args: &Args) -> Result<()> {
     use omgd::coordinator::Mask;
     use omgd::optim::{MaskedAdamW, Optimizer};
     use omgd::rng::Rng;
+    use omgd::runtime::RunsScratch;
 
     let dir = artifacts_dir(args.get("artifacts"));
     let rt = Runtime::cpu()?;
@@ -264,9 +281,10 @@ fn cmd_check(args: &Args) -> Result<()> {
         let (mut ph, mut m, mut v) =
             (p0.clone(), vec![0.0f32; n], vec![0.0f32; n]);
         let hp = [1e-3, 0.9, 0.999, 1e-8, 0.01, 0.1, 0.001, 0.0];
+        let mut scratch = RunsScratch::new();
         bundle.adamw_update_runs(&mut ph, &g,
                                  &mask.runs().descriptors(), &mut m,
-                                 &mut v, &hp)?;
+                                 &mut v, &hp, &mut scratch)?;
         let mut pn = p0.clone();
         let mut nat = MaskedAdamW::new(n, 0.9, 0.999, 1e-8, 0.01);
         nat.step(&mut pn, &g, mask.runs(), 1e-3);
@@ -952,6 +970,7 @@ fn cmd_worker(args: &Args) -> Result<()> {
         idle_exit_secs: args.u64_or("idle-exit", 0)?,
         ckpt_period: args.usize_or("ckpt-period", 0)?,
         token: args.token_opt("token")?,
+        step_threads: args.usize_or("step-threads", 0)?,
     };
     let stats = run_worker(&opts)?;
     eprintln!(
@@ -1032,8 +1051,8 @@ fn cmd_microbench(args: &Args) -> Result<()> {
 
     // LISA-shaped support: `k` of the space active as contiguous
     // layer-sized segments spread over the vector.
-    let seg = (n / 64).max(1);
-    let lisa_mask = |k: f64| -> Mask {
+    fn lisa_mask_for(n: usize, k: f64) -> Mask {
+        let seg = (n / 64).max(1);
         let stride = ((seg as f64) / k).round() as usize;
         let mut mask = Mask::zeros(n);
         let mut off = 0usize;
@@ -1043,7 +1062,9 @@ fn cmd_microbench(args: &Args) -> Result<()> {
             off += stride.max(seg);
         }
         mask
-    };
+    }
+    let seg = (n / 64).max(1);
+    let lisa_mask = |k: f64| lisa_mask_for(n, k);
 
     let mut rng = Rng::seed_from_u64(1);
     let g: Vec<f32> = (0..n).map(|_| rng.normal32()).collect();
@@ -1127,6 +1148,76 @@ fn cmd_microbench(args: &Args) -> Result<()> {
         refresh_secs * 1e6 / (refreshes as f64).max(1.0),
     );
 
+    // Thread-sweep stage: the shard-parallel native step against the
+    // serial walk at {1, 2, 4} threads × keep {0.05, 0.25}. Every arm
+    // is bitwise-verified before its timing counts (a 3-step check up
+    // front, and the full timed trajectory compared after) — a fast
+    // wrong answer is not a benchmark result. `tn` is floored at 2¹⁸
+    // so the active set clears `exec::PAR_MIN_ACTIVE` at both keeps.
+    use omgd::exec::ExecEngine;
+    let tn = n.max(1 << 18);
+    let tsteps = omgd::experiments::scaled(
+        args.usize_or("sweep-steps", 1_000)?,
+        20,
+    );
+    println!(
+        "thread sweep: n={tn}, {tsteps} steps per arm, threads [1, 2, 4]"
+    );
+    let mut rng2 = Rng::seed_from_u64(2);
+    let gt: Vec<f32> = (0..tn).map(|_| rng2.normal32()).collect();
+    let pt0: Vec<f32> = (0..tn).map(|_| rng2.normal32()).collect();
+    // Per sweep arm: (threads, keep, active, serial_secs, par_secs).
+    let mut tsweep: Vec<(usize, f64, usize, f64, f64)> = Vec::new();
+    for &k in &[0.05f64, 0.25] {
+        let mask = lisa_mask_for(tn, k);
+        let active = mask.active_count();
+
+        let mut ps = pt0.clone();
+        let mut os = MaskedAdamW::default_hp(tn);
+        let t = Instant::now();
+        for _ in 0..tsteps {
+            os.step(&mut ps, &gt, mask.runs(), 1e-4);
+        }
+        let serial_secs = t.elapsed().as_secs_f64();
+
+        for &th in &[1usize, 2, 4] {
+            let pool = ExecEngine::new(th);
+            let (mut pa, mut pb) = (pt0.clone(), pt0.clone());
+            let mut oa = MaskedAdamW::default_hp(tn);
+            let mut ob = MaskedAdamW::default_hp(tn);
+            for _ in 0..3 {
+                oa.step(&mut pa, &gt, mask.runs(), 1e-4);
+                ob.step_sharded(&mut pb, &gt, mask.runs(), 1e-4, &pool);
+            }
+            if pa.iter().zip(&pb).any(|(a, b)| a.to_bits() != b.to_bits())
+            {
+                bail!("sharded step diverged at {th} threads, keep {k}");
+            }
+            let mut pp = pt0.clone();
+            let mut op = MaskedAdamW::default_hp(tn);
+            let t = Instant::now();
+            for _ in 0..tsteps {
+                op.step_sharded(&mut pp, &gt, mask.runs(), 1e-4, &pool);
+            }
+            let par_secs = t.elapsed().as_secs_f64();
+            if ps.iter().zip(&pp).any(|(a, b)| a.to_bits() != b.to_bits())
+            {
+                bail!(
+                    "sharded trajectory diverged at {th} threads, \
+                     keep {k}"
+                );
+            }
+            println!(
+                "  keep {k:<5} threads {th}  serial {:8.1} ms  sharded \
+                 {:8.1} ms  {:4.2}x ({active} active)",
+                serial_secs * 1e3,
+                par_secs * 1e3,
+                serial_secs / par_secs.max(1e-12),
+            );
+            tsweep.push((th, k, active, serial_secs, par_secs));
+        }
+    }
+
     // The whole bench must finish without one dense→runs rescan — the
     // steady-state contract `omgd_mask_densify_total` exists to keep.
     let densified = omgd::obs::MASK_DENSIFY.get() - densify0;
@@ -1170,6 +1261,18 @@ fn cmd_microbench(args: &Args) -> Result<()> {
         })
         .collect::<Vec<_>>()
         .join(",");
+    let tsweep_json = tsweep
+        .iter()
+        .map(|&(th, k, a, ss, ps)| {
+            format!(
+                "{{\"threads\":{th},\"k\":{k},\"a\":{a},\
+                 \"serial_s\":{ss:.6},\"par_s\":{ps:.6},\
+                 \"speedup\":{:.4}}}",
+                ss / ps.max(1e-12)
+            )
+        })
+        .collect::<Vec<_>>()
+        .join(",");
     let out = args.str_or("out", "BENCH_maskruns.json");
     std::fs::write(
         &out,
@@ -1182,7 +1285,9 @@ fn cmd_microbench(args: &Args) -> Result<()> {
              \"refreshes\":{refreshes},\
              \"refresh_secs\":{refresh_secs:.6},\
              \"rev\":\"{rev}\",\"scale\":{},\"workers\":{},\
-             \"unix_secs\":{unix_secs},\"sweep\":[{sweep_json}]}}\n",
+             \"unix_secs\":{unix_secs},\"sweep\":[{sweep_json}],\
+             \"tn\":{tn},\"tsteps\":{tsteps},\
+             \"tsweep\":[{tsweep_json}]}}\n",
             2 * n * 4,
             omgd::experiments::bench_scale(),
             omgd::jobs::default_workers(),

@@ -13,7 +13,7 @@ use omgd::experiments::{load_bundle, load_bundle_sgdm, pretrain_corpus};
 use omgd::manifest::Manifest;
 use omgd::optim::{MaskedAdamW, MaskedSgdm, Optimizer};
 use omgd::rng::Rng;
-use omgd::runtime::{artifacts_dir, Runtime};
+use omgd::runtime::{artifacts_dir, Runtime, RunsScratch};
 use omgd::train::{train_classifier, train_lm, MethodEngine};
 
 fn have(model: &str) -> bool {
@@ -101,6 +101,7 @@ fn hlo_adamw_update_matches_native_mirror() {
     // Native path.
     let mut pn = p0.clone();
     let mut nat = MaskedAdamW::new(n, 0.9, 0.999, 1e-8, 0.01);
+    let mut scratch = RunsScratch::new();
 
     for step in 1..=3u64 {
         let bc1 = 1.0 - 0.9f32.powi(step as i32);
@@ -108,7 +109,7 @@ fn hlo_adamw_update_matches_native_mirror() {
         let hp = [1e-3, 0.9, 0.999, 1e-8, 0.01, bc1, bc2, 0.0];
         bundle
             .adamw_update_runs(&mut ph, &g, &mask.runs().descriptors(),
-                               &mut mh, &mut vh, &hp)
+                               &mut mh, &mut vh, &hp, &mut scratch)
             .unwrap();
         nat.step(&mut pn, &g, mask.runs(), 1e-3);
     }
@@ -149,10 +150,11 @@ fn hlo_sgdm_update_matches_native_mirror() {
     let mut pn = p0.clone();
     let mut nat = MaskedSgdm::new(n, 0.9, 1e-4, true);
     let hp = [0.05f32, 0.9, 1e-4, 1.0];
+    let mut scratch = RunsScratch::new();
     for _ in 0..3 {
         bundle
             .sgdm_update_runs(&mut ph, &g, &mask.runs().descriptors(),
-                              &mut bh, &hp)
+                              &mut bh, &hp, &mut scratch)
             .unwrap();
         nat.step(&mut pn, &g, mask.runs(), 0.05);
     }
@@ -212,6 +214,7 @@ fn hlo_runs_descriptor_path_matches_dense_fallback_bitwise() {
         (p0.clone(), vec![0.0f32; n], vec![0.0f32; n]);
     let (mut pd, mut md, mut vd) =
         (p0, vec![0.0f32; n], vec![0.0f32; n]);
+    let mut scratch = RunsScratch::new();
     for step in 1..=4u64 {
         if step == 3 {
             // mid-sequence mask change: the descriptor cache must
@@ -224,7 +227,7 @@ fn hlo_runs_descriptor_path_matches_dense_fallback_bitwise() {
         let hp = [1e-3, 0.9, 0.999, 1e-8, 0.01, bc1, bc2, 0.0];
         bundle
             .adamw_update_runs(&mut pr, &g, &mask.runs().descriptors(),
-                               &mut mr, &mut vr, &hp)
+                               &mut mr, &mut vr, &hp, &mut scratch)
             .unwrap();
         bundle
             .adamw_update(&mut pd, &g, mask.dense_bridge(), &mut md,

@@ -4,6 +4,7 @@
 
 use omgd::coordinator::{DataSampler, LisaScheduler, LisaVariant, Mask,
                         MaskRuns, MaskSet, OmgdCycle};
+use omgd::exec::ExecEngine;
 use omgd::linalg::{stiefel, Mat};
 use omgd::manifest::{Manifest, ParamInfo};
 use omgd::optim::reference::{DenseAdamW, DenseSgdm};
@@ -505,6 +506,98 @@ fn prop_sift_runs_step_bitwise_equals_dense_adamw_over_selection() {
             assert_eq!(pa[i].to_bits(), pb[i].to_bits(), "coord {i}");
         }
         assert_eq!(sift.selected(), kk);
+    });
+}
+
+#[test]
+fn prop_step_sharded_bitwise_equals_serial_across_threads() {
+    // Tentpole determinism contract: `step_sharded` must be bitwise
+    // identical to the serial `step` for every optimizer at every
+    // thread count — the shard partition decides *who* computes a
+    // coordinate, never the arithmetic — including across a mid-run
+    // mask refresh driven through `on_mask_refresh_sharded` (the
+    // parallel state remap). Masks draw keep ratios from
+    // {0.05, 0.25, 0.5, 1.0} and both structure shapes.
+    check("step_sharded == step across threads", 16, |g| {
+        let rows = g.usize_in(6, 10);
+        let cols = g.usize_in(6, 10);
+        let blen = g.usize_in(2, 8);
+        let n = rows * cols + blen;
+        let params = vec![
+            ParamInfo {
+                name: "w".into(),
+                shape: vec![rows, cols],
+                layer: "block_0".into(),
+                offset: 0,
+                len: rows * cols,
+            },
+            ParamInfo {
+                name: "b".into(),
+                shape: vec![blen],
+                layer: "block_0".into(),
+                offset: rows * cols,
+                len: blen,
+            },
+        ];
+        let mask_a = random_mask(g, n);
+        let mask_b = random_mask(g, n);
+        let grads: Vec<Vec<f32>> =
+            (0..4).map(|_| g.vec_f32(n, 1.0)).collect();
+        let p0 = g.vec_f32(n, 1.0);
+        type Ctor<'a> = Box<dyn Fn() -> Box<dyn Optimizer> + 'a>;
+        let ctors: Vec<(&str, Ctor)> = vec![
+            ("adamw",
+             Box::new(move || Box::new(MaskedAdamW::default_hp(n)))),
+            ("sgdm",
+             Box::new(move || {
+                 Box::new(MaskedSgdm::new(n, 0.9, 1e-4, true))
+             })),
+            ("sgd", Box::new(|| Box::new(MaskedSgd))),
+            ("golore",
+             Box::new({
+                 let params = params.clone();
+                 move || Box::new(galore::golore(&params, n, 2, 2, 7))
+             })),
+            ("galore",
+             Box::new({
+                 let params = params.clone();
+                 move || Box::new(galore::galore(&params, n, 2, 2, 7))
+             })),
+            ("sift",
+             Box::new(move || {
+                 Box::new(SiftOptimizer::new(n, n, 0.25, 10))
+             })),
+        ];
+        for (name, ctor) in &ctors {
+            // Serial reference trajectory: two steps, refresh, two more.
+            let mut ps = p0.clone();
+            let mut os = ctor();
+            for gr in &grads[..2] {
+                os.step(&mut ps, gr, mask_a.runs(), 0.01);
+            }
+            os.on_mask_refresh(mask_b.runs());
+            for gr in &grads[2..] {
+                os.step(&mut ps, gr, mask_b.runs(), 0.01);
+            }
+            for &th in &[1usize, 2, 4, 8] {
+                let pool = ExecEngine::new(th);
+                let mut pp = p0.clone();
+                let mut op = ctor();
+                for gr in &grads[..2] {
+                    op.step_sharded(&mut pp, gr, mask_a.runs(), 0.01,
+                                    &pool);
+                }
+                op.on_mask_refresh_sharded(mask_b.runs(), &pool);
+                for gr in &grads[2..] {
+                    op.step_sharded(&mut pp, gr, mask_b.runs(), 0.01,
+                                    &pool);
+                }
+                for i in 0..n {
+                    assert_eq!(ps[i].to_bits(), pp[i].to_bits(),
+                               "{name} threads {th} coord {i}");
+                }
+            }
+        }
     });
 }
 
